@@ -1,0 +1,59 @@
+//! Body-bias scenario (the paper's Fig. 4 story): run a bursty 10%-
+//! utilization workload on the SP CMA under three bias policies and
+//! show where the energy goes — dynamic, leakage, and bias-transition.
+//!
+//! Run: `cargo run --release --example body_bias`
+
+use fpmax::arch::generator::{FpuConfig, FpuUnit};
+use fpmax::bb::controller::{run_energy, BbPolicy};
+use fpmax::energy::tech::Technology;
+use fpmax::report::TextTable;
+use fpmax::workloads::utilization::UtilizationProfile;
+
+fn main() -> fpmax::Result<()> {
+    let tech = Technology::fdsoi28();
+    let unit = FpuUnit::generate(&FpuConfig::sp_cma());
+    let vdd = 0.6; // near the energy-optimal point of Fig. 4
+
+    println!("Body-bias policies on SP CMA @ {vdd} V, 10% utilization\n");
+
+    let profiles = [
+        ("100% utilization", UtilizationProfile::full(1_000_000)),
+        ("10%, 10k-cycle bursts", UtilizationProfile::duty(0.1, 10_000, 1_000_000)),
+        ("10%, 500-cycle bursts", UtilizationProfile::duty(0.1, 500, 1_000_000)),
+        ("10%, bursty (random)", UtilizationProfile::bursty(0.1, 5_000, 1_000_000, 42)),
+    ];
+    let policies = [
+        ("static fwd BB (1.2V)", BbPolicy::static_nominal()),
+        ("static no BB", BbPolicy::Static { vbb: 0.0 }),
+        ("adaptive BB", BbPolicy::adaptive_nominal(1.0)),
+    ];
+
+    let mut t = TextTable::new(vec![
+        "workload", "policy", "pJ/op", "dyn pJ/op", "leak pJ/op", "transition pJ/op",
+    ]);
+    for (wname, prof) in &profiles {
+        for (pname, policy) in &policies {
+            let e = run_energy(&unit, &tech, vdd, *policy, prof).expect("operable");
+            let ops = e.ops.max(1) as f64;
+            t.row(vec![
+                wname.to_string(),
+                pname.to_string(),
+                format!("{:.1}", e.pj_per_op),
+                format!("{:.1}", e.dynamic_pj / ops),
+                format!("{:.1}", e.leakage_pj / ops),
+                format!("{:.2}", e.transition_pj / ops),
+            ]);
+        }
+    }
+    t.print();
+
+    println!(
+        "\nReading the table: at 10% utilization the statically forward-biased unit\n\
+         pays several× the full-utilization energy per op (leakage across the idle\n\
+         gaps); the adaptive controller drops the bias during long gaps and recovers\n\
+         most of it — unless bursts are so short the wells never finish settling\n\
+         (500-cycle row). This is the paper's Fig. 4 in mechanism and magnitude."
+    );
+    Ok(())
+}

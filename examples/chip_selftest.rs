@@ -1,0 +1,161 @@
+//! End-to-end driver — the repository's full-system validation run.
+//!
+//! Exercises every layer on a real workload and proves they compose:
+//!
+//! 1. **workload**: deterministic operand streams (finite + specials);
+//! 2. **chip** (Fig. 5): JTAG-load stimulus RAMs, run all four
+//!    generated FPUs at speed from the instruction sequencer, read back
+//!    over JTAG;
+//! 3. **golden model**: every chip result checked bit-for-bit against
+//!    the softfloat spec (fused semantics for FMAs, cascade for CMAs);
+//! 4. **AOT artifacts** (L1/L2): the same streams through the compiled
+//!    Pallas/JAX HLO via PJRT, cross-checked against the golden model;
+//! 5. **physics**: the activity (toggle counts) from the artifact feeds
+//!    the energy model to report the run's estimated silicon energy.
+//!
+//! Run: `make artifacts && cargo run --release --example chip_selftest`
+//! The numbers land in EXPERIMENTS.md §E6.
+
+use std::time::Instant;
+
+use fpmax::arch::generator::{FpuConfig, FpuUnit};
+use fpmax::arch::rounding::RoundMode;
+use fpmax::chip::{
+    expected_result, FpMaxChip, Instruction, Op, UnitSel, BANK_PROGRAM, BANK_RESULT, BANK_STIM_A,
+    BANK_STIM_B, BANK_STIM_C,
+};
+use fpmax::coordinator;
+use fpmax::energy::power::evaluate;
+use fpmax::energy::tech::Technology;
+use fpmax::runtime::Runtime;
+use fpmax::timing::nominal_op;
+use fpmax::workloads::throughput::{OperandMix, OperandStream};
+
+const OPS_PER_UNIT: usize = 65_536;
+const RAM_DEPTH: usize = 1024;
+
+fn main() -> fpmax::Result<()> {
+    let t_start = Instant::now();
+    let tech = Technology::fdsoi28();
+    let mut chip = FpMaxChip::new(RAM_DEPTH);
+
+    println!("=== FPMax end-to-end self-test ({OPS_PER_UNIT} ops/unit) ===\n");
+
+    // ---- Phase 1+2+3: chip at-speed runs vs golden model -------------
+    let mut grand_ops = 0u64;
+    let mut grand_cycles = 0u64;
+    for (sel, cfg) in [
+        (UnitSel::DpCma, FpuConfig::dp_cma()),
+        (UnitSel::DpFma, FpuConfig::dp_fma()),
+        (UnitSel::SpCma, FpuConfig::sp_cma()),
+        (UnitSel::SpFma, FpuConfig::sp_fma()),
+    ] {
+        let mut mismatches = 0usize;
+        let mut jtag_tck = 0u64;
+        let t0 = Instant::now();
+        // Mix finite and anything-goes operands 3:1.
+        let mut fin = OperandStream::new(cfg.precision, OperandMix::Finite, 42);
+        let mut any = OperandStream::new(cfg.precision, OperandMix::Anything, 43);
+        let mut done = 0usize;
+        while done < OPS_PER_UNIT {
+            let n = RAM_DEPTH.min(OPS_PER_UNIT - done);
+            let triples: Vec<_> = (0..n)
+                .map(|i| if i % 4 == 3 { any.next_triple() } else { fin.next_triple() })
+                .collect();
+            let a: Vec<u64> = triples.iter().map(|t| t.a).collect();
+            let b: Vec<u64> = triples.iter().map(|t| t.b).collect();
+            let c: Vec<u64> = triples.iter().map(|t| t.c).collect();
+            {
+                let mut port = chip.jtag();
+                port.load_bank(BANK_STIM_A, &a)?;
+                port.load_bank(BANK_STIM_B, &b)?;
+                port.load_bank(BANK_STIM_C, &c)?;
+                let prog = [Instruction::fmac_burst(sel, 0, n as u16).encode() as u64, 0];
+                port.load_bank(BANK_PROGRAM, &prog)?;
+                jtag_tck += port.tck_cycles;
+            }
+            let stats = chip.run()?;
+            grand_ops += stats.ops;
+            grand_cycles += stats.cycles;
+            let results = chip.jtag().read_bank(BANK_RESULT, n)?;
+            let unit = chip.unit(sel);
+            for i in 0..n {
+                let want = expected_result(unit, RoundMode::NearestEven, a[i], b[i], c[i], Op::Fmac);
+                // NaN payloads may differ; compare through decode.
+                let fmt = unit.format;
+                use fpmax::arch::fp::{decode, Class};
+                let ok = results[i] == want
+                    || (decode(fmt, results[i]).class == Class::Nan
+                        && decode(fmt, want).class == Class::Nan);
+                if !ok {
+                    mismatches += 1;
+                }
+            }
+            done += n;
+        }
+        let dt = t0.elapsed().as_secs_f64();
+        println!(
+            "{:<7}: {OPS_PER_UNIT} at-speed ops, {mismatches} mismatches, {:.2} Mops/s wall, {:.1}k JTAG TCK",
+            format!("{sel:?}"),
+            OPS_PER_UNIT as f64 / dt / 1e6,
+            jtag_tck as f64 / 1e3,
+        );
+        anyhow::ensure!(mismatches == 0, "{sel:?}: chip diverged from golden model");
+    }
+    println!("\nchip total: {grand_ops} ops in {grand_cycles} at-speed cycles");
+
+    // ---- Phase 4: AOT artifacts through PJRT --------------------------
+    let rt = Runtime::cpu("artifacts")?;
+    println!("\nPJRT platform: {}", rt.platform());
+    let mut artifact_toggles = Vec::new();
+    for (name, cfg) in [("sp_fmac", FpuConfig::sp_fma()), ("dp_fmac", FpuConfig::dp_fma())] {
+        let artifact = rt.load_fmac(name, cfg.precision)?;
+        let unit = FpuUnit::generate(&cfg);
+        let mut stream = OperandStream::new(cfg.precision, OperandMix::Finite, 0xF00D);
+        let triples = stream.batch(OPS_PER_UNIT);
+        let r = coordinator::verify_batch(&unit, &artifact, &triples, workers())?;
+        println!(
+            "{name}: {} ops  artifact-vs-golden {} mism  datapath {} mism  {:.2} Mops/s PJRT / {:.2} Mops/s rust",
+            r.ops,
+            r.artifact_mismatches.len(),
+            r.datapath_mismatches.len(),
+            r.ops as f64 / r.pjrt_secs / 1e6,
+            r.ops as f64 / r.rust_secs / 1e6,
+        );
+        anyhow::ensure!(r.clean(), "{name}: three-layer cross-check failed");
+        artifact_toggles.push((cfg, r.artifact_toggles, r.ops));
+    }
+
+    // ---- Phase 5: energy accounting from measured activity ------------
+    println!("\nestimated silicon energy for this run (activity-scaled):");
+    for (cfg, toggles, ops) in artifact_toggles {
+        let unit = FpuUnit::generate(&cfg);
+        let eff = evaluate(&unit, &tech, nominal_op(&cfg), 1.0).expect("nominal");
+        // Toggle-based activity scale: measured result-bus toggles per op
+        // vs the half-width random baseline.
+        let width = cfg.precision.format().width() as f64;
+        let activity = (toggles as f64 / ops as f64) / (width / 2.0);
+        let e_op = fpmax::energy::components::unit_cost(&unit)
+            .dyn_energy_pj(nominal_op(&cfg).vdd, activity.clamp(0.2, 1.5));
+        println!(
+            "  {}: {:.2} toggles/bit-op → activity {:.2} → {:.1} pJ/op dynamic ({:.1} µJ for the run; nominal-activity model: {:.1} pJ/op)",
+            cfg.name(),
+            toggles as f64 / ops as f64 / width,
+            activity,
+            e_op,
+            e_op * ops as f64 * 1e-6,
+            2.0 * eff.pj_per_flop,
+        );
+    }
+
+    println!(
+        "\nSELFTEST PASS in {:.1}s: workload → chip (JTAG+at-speed) → golden model →\n\
+         AOT Pallas/JAX artifact (PJRT) → energy model, all layers agree.",
+        t_start.elapsed().as_secs_f64()
+    );
+    Ok(())
+}
+
+fn workers() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
+}

@@ -1,0 +1,70 @@
+//! Design-space exploration scenario: run the FPGen sweep for a chosen
+//! precision/organization, extract the Pareto frontier, and show where
+//! the fabricated FPMax designs landed — the workflow behind Fig. 3's
+//! triangle-marked curve.
+//!
+//! Run: `cargo run --release --example dse_pareto`
+
+use fpmax::arch::fp::Precision;
+use fpmax::arch::generator::{FpuConfig, FpuKind};
+use fpmax::dse::{arch_sweep, frontier, Objective};
+use fpmax::energy::tech::{OperatingPoint, Technology};
+use fpmax::report::TextTable;
+
+fn main() -> fpmax::Result<()> {
+    let tech = Technology::fdsoi28();
+    let op = OperatingPoint::new(1.0, 0.0); // FPGen's fixed-voltage sweep
+
+    for (precision, kind, fabricated) in [
+        (Precision::Single, FpuKind::Fma, FpuConfig::sp_fma()),
+        (Precision::Double, FpuKind::Fma, FpuConfig::dp_fma()),
+        (Precision::Single, FpuKind::Cma, FpuConfig::sp_cma()),
+        (Precision::Double, FpuKind::Cma, FpuConfig::dp_cma()),
+    ] {
+        let pts = arch_sweep(precision, kind, &tech, op);
+        let front = frontier(&pts);
+        println!(
+            "\n=== {} {} space: {} designs, {} Pareto-optimal ===\n",
+            precision.name().to_uppercase(),
+            kind.name(),
+            pts.len(),
+            front.len()
+        );
+        let mut t = TextTable::new(vec![
+            "", "stages", "booth", "tree", "GFLOPS/mm²", "pJ/FLOP",
+        ]);
+        for &i in &front {
+            let p = &pts[i];
+            let is_fab = p.config.stages == fabricated.stages
+                && p.config.booth == fabricated.booth
+                && p.config.tree == fabricated.tree;
+            t.row(vec![
+                if is_fab { "★ fabricated" } else { "" }.to_string(),
+                p.config.stages.to_string(),
+                p.config.booth.name().to_string(),
+                p.config.tree.name().to_string(),
+                format!("{:.1}", p.perf()),
+                format!("{:.2}", p.energy()),
+            ]);
+        }
+        t.print();
+
+        // Where is the fabricated point relative to the frontier?
+        let fab = pts.iter().find(|p| {
+            p.config.stages == fabricated.stages
+                && p.config.booth == fabricated.booth
+                && p.config.tree == fabricated.tree
+        });
+        if let Some(fab) = fab {
+            let on_front = front.iter().any(|&i| std::ptr::eq(&pts[i], fab));
+            println!(
+                "\nfabricated {}: {:.1} GFLOPS/mm² at {:.2} pJ/FLOP ({})",
+                fabricated.name(),
+                fab.perf(),
+                fab.energy(),
+                if on_front { "ON the frontier" } else { "near the frontier" }
+            );
+        }
+    }
+    Ok(())
+}

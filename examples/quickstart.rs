@@ -1,0 +1,51 @@
+//! Quickstart: generate the four FPMax units, run a few FMACs through
+//! each bit-accurate datapath, and print the Table-I summary numbers.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use fpmax::arch::generator::{FpuConfig, FpuUnit};
+use fpmax::energy::power::evaluate;
+use fpmax::energy::tech::Technology;
+use fpmax::timing::nominal_op;
+
+fn main() -> fpmax::Result<()> {
+    let tech = Technology::fdsoi28();
+
+    println!("FPMax quickstart — the four fabricated units\n");
+    for cfg in FpuConfig::fpmax_units() {
+        // 1. Generate the unit (FPGen's job).
+        let unit = FpuUnit::generate(&cfg);
+        let s = unit.structure();
+
+        // 2. Run a computation through the bit-accurate datapath.
+        let (a, b, c) = match cfg.precision {
+            fpmax::arch::fp::Precision::Single => (
+                1.5f32.to_bits() as u64,
+                (-2.25f32).to_bits() as u64,
+                10.0f32.to_bits() as u64,
+            ),
+            fpmax::arch::fp::Precision::Double => {
+                (1.5f64.to_bits(), (-2.25f64).to_bits(), 10.0f64.to_bits())
+            }
+        };
+        let r = unit.fmac(a, b, c);
+        let shown = match cfg.precision {
+            fpmax::arch::fp::Precision::Single => f32::from_bits(r.bits as u32) as f64,
+            fpmax::arch::fp::Precision::Double => f64::from_bits(r.bits),
+        };
+
+        // 3. Evaluate the physical model at the chip's nominal point.
+        let eff = evaluate(&unit, &tech, nominal_op(&cfg), 1.0).expect("nominal point");
+
+        println!("{}:", cfg.name());
+        println!("  structure : {} stages, Booth-{}, {} tree, {} PPs, {} tree cells",
+                 cfg.stages, cfg.booth.name(), cfg.tree.name(), s.pp_count, s.tree_cells);
+        println!("  numerics  : 1.5 × −2.25 + 10 = {shown}");
+        println!("  physics   : {:.2} GHz, {:.1} mW, {:.0} GFLOPS/W, {:.0} GFLOPS/mm²",
+                 eff.freq_ghz, eff.power.total_mw(), eff.gflops_per_w, eff.gflops_per_mm2);
+        println!("  latencies : full {} cyc, →acc {} cyc, →mul {} cyc\n",
+                 unit.latency_full(), unit.latency_to_add_input(), unit.latency_to_mul_input());
+    }
+    println!("(reproduce the full evaluation: `fpmax table1|table2|fig2c|fig3|fig4`)");
+    Ok(())
+}

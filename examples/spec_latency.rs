@@ -1,0 +1,76 @@
+//! SPEC-latency scenario (the paper's Fig. 2(c) workload): simulate the
+//! SPEC-FP-like suite on all four units and a few hypothetical variants,
+//! reporting average latency penalty and benchmarked delay.
+//!
+//! Run: `cargo run --release --example spec_latency`
+
+use fpmax::arch::generator::{FpuConfig, FpuUnit};
+use fpmax::energy::tech::Technology;
+use fpmax::pipesim::{benchmarked_delay_ns, simulate, LatencyModel};
+use fpmax::report::TextTable;
+use fpmax::timing::{nominal_op, timing};
+use fpmax::workloads::specfp::Profile;
+
+fn main() -> fpmax::Result<()> {
+    let tech = Technology::fdsoi28();
+    let suite = Profile::suite();
+    let ops = 50_000;
+
+    println!("SPEC-FP-like latency study ({} profiles × {ops} ops)\n", suite.len());
+
+    let mut variants: Vec<(String, FpuConfig)> = FpuConfig::fpmax_units()
+        .iter()
+        .map(|c| (c.name(), *c))
+        .collect();
+    // The paper's comparison FMAs.
+    let mut fma5 = FpuConfig::dp_fma();
+    fma5.stages = 5;
+    variants.push(("DP FMA-5 w/ fwd".into(), fma5));
+    let mut fma5_nofwd = fma5;
+    fma5_nofwd.forwarding = false;
+    variants.push(("DP FMA-5 w/o fwd".into(), fma5_nofwd));
+
+    let mut table = TextTable::new(vec![
+        "unit", "avg penalty", "cyc/FLOP", "cycle ps", "bench delay ns",
+    ]);
+    for (name, cfg) in &variants {
+        let unit = FpuUnit::generate(cfg);
+        let lat = LatencyModel::of(&unit);
+        let mean_pen: f64 = suite
+            .iter()
+            .map(|p| simulate(&lat, &p.generate(ops, 42)).avg_penalty)
+            .sum::<f64>()
+            / suite.len() as f64;
+        let t = timing(cfg, &tech, nominal_op(cfg)).expect("nominal");
+        let sim = simulate(&lat, &suite[0].generate(ops, 42));
+        let _ = sim;
+        let delay = t.cycle_ps * (1.0 + mean_pen) / 1000.0;
+        table.row(vec![
+            name.clone(),
+            format!("{mean_pen:.3}"),
+            format!("{:.3}", 1.0 + mean_pen),
+            format!("{:.0}", t.cycle_ps),
+            format!("{delay:.2}"),
+        ]);
+        let _ = benchmarked_delay_ns(t.cycle_ps, &simulate(&lat, &suite[0].generate(1000, 1)));
+    }
+    table.print();
+
+    println!("\nPer-profile penalties (DP CMA vs DP FMA-5 w/ fwd):");
+    let cma = LatencyModel::of(&FpuUnit::generate(&FpuConfig::dp_cma()));
+    let fma = LatencyModel::of(&FpuUnit::generate(&fma5));
+    let mut t2 = TextTable::new(vec!["profile", "CMA", "FMA", "CMA advantage"]);
+    for p in &suite {
+        let trace = p.generate(ops, 42);
+        let pc = simulate(&cma, &trace).avg_penalty;
+        let pf = simulate(&fma, &trace).avg_penalty;
+        t2.row(vec![
+            p.name.to_string(),
+            format!("{pc:.3}"),
+            format!("{pf:.3}"),
+            format!("{:.0}%", (1.0 - pc / pf) * 100.0),
+        ]);
+    }
+    t2.print();
+    Ok(())
+}

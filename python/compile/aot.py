@@ -1,0 +1,69 @@
+"""AOT export: lower the L2 graphs to HLO **text** for the Rust runtime.
+
+HLO text — not a serialized ``HloModuleProto`` — is the interchange
+format: jax ≥ 0.5 emits protos with 64-bit instruction ids which the
+``xla`` crate's xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``);
+the text parser reassigns ids and round-trips cleanly. Lowering goes
+through stablehlo → XlaComputation with ``return_tuple=True``; the Rust
+side unwraps with ``to_tuple()``. (See /opt/xla-example/gen_hlo.py.)
+
+Usage::
+
+    cd python && python -m compile.aot --out-dir ../artifacts
+
+Python runs ONLY here, at build time; the produced ``*.hlo.txt`` files
+are self-contained.
+"""
+
+import argparse
+import hashlib
+import os
+import sys
+
+import jax
+
+jax.config.update("jax_enable_x64", True)  # u64 datapaths require x64
+
+from jax._src.lib import xla_client as xc  # noqa: E402
+
+from . import model  # noqa: E402
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def export_all(out_dir: str, batch: int) -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    manifest = {}
+    for name, (fn, example_args) in model.ENTRY_POINTS.items():
+        lowered = jax.jit(fn).lower(*example_args(batch))
+        text = to_hlo_text(lowered)
+        path = os.path.join(out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        digest = hashlib.sha256(text.encode()).hexdigest()[:16]
+        manifest[name] = {"path": path, "batch": batch, "sha256_16": digest, "chars": len(text)}
+        print(f"wrote {path}: {len(text)} chars, batch={batch}, sha256[:16]={digest}")
+    # A tiny manifest so the runtime can sanity-check batch sizes.
+    with open(os.path.join(out_dir, "MANIFEST.txt"), "w") as f:
+        for name, m in manifest.items():
+            f.write(f"{name} batch={m['batch']} sha256_16={m['sha256_16']}\n")
+    return manifest
+
+
+def main() -> int:
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--out-dir", default="../artifacts")
+    p.add_argument("--batch", type=int, default=model.BATCH)
+    args = p.parse_args()
+    export_all(args.out_dir, args.batch)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

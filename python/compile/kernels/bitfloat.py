@@ -1,0 +1,453 @@
+"""Vectorized bit-exact IEEE-754 FMAC cores in integer jnp ops.
+
+This is the compute hot-spot of the FPMax reproduction, written so the
+same functions serve three masters:
+
+* the **Pallas kernel** (`fmac.py`) calls :func:`sp_fmac_core` on VMEM
+  blocks — every step below is a vectorized integer op, so the kernel
+  lowers to plain element-wise HLO under ``interpret=True``;
+* the **L2 model** (`model.py`) calls :func:`dp_fmac_core` (two-limb
+  arithmetic — the 106-bit DP product does not fit a machine word) and
+  wraps both into the AOT-exported batch graphs;
+* the **pytest suite** cross-checks both against the independent
+  integer oracle in ``ref.py``.
+
+The algorithm mirrors the Rust golden model (``rust/src/arch/softfloat.rs``):
+exact product → normalize the larger addend to the top of the working
+word → align the smaller with sticky capture → add/sub with the
+sticky-decrement trick → round-to-nearest-even with subnormal and
+overflow handling. Round-to-nearest-even only: the AOT artifact is the
+chip's RNE cross-check reference (the other modes are exercised on the
+Rust side).
+
+Everything runs in uint64 (``jax_enable_x64`` required; ``aot.py`` and
+``conftest.py`` set it).
+"""
+
+import jax.numpy as jnp
+
+# ---------------------------------------------------------------- helpers
+
+_U64 = jnp.uint64
+_I64 = jnp.int64
+
+
+def u64(x):
+    return jnp.asarray(x, dtype=_U64)
+
+
+def i64(x):
+    return jnp.asarray(x, dtype=_I64)
+
+
+def clz64(x):
+    """Count leading zeros of a uint64 (64 for zero), by binary search:
+    at each step, if the top `shift` bits are clear, skip past them."""
+    x = u64(x)
+    zero = x == 0
+    n = jnp.zeros_like(x, dtype=_I64)
+    for shift in (32, 16, 8, 4, 2, 1):
+        take = (x >> u64(64 - shift)) == 0
+        n = jnp.where(take, n + shift, n)
+        x = jnp.where(take, x << u64(shift), x)
+    return jnp.where(zero, i64(64), n)
+
+
+def bitlen64(x):
+    """Number of significant bits (0 for 0)."""
+    return i64(64) - clz64(x)
+
+
+def shl64(x, n):
+    """x << n with out-of-range shifts (n < 0 or n ≥ 64) yielding 0.
+
+    XLA leaves such shifts implementation-defined, and `jnp.where`
+    evaluates both branches, so every shift amount must be clamped even
+    in lanes the caller will discard.
+    """
+    n = i64(n)
+    bad = (n >= 64) | (n < 0)
+    safe = jnp.clip(n, 0, 63)
+    return jnp.where(bad, u64(0), u64(x) << safe.astype(_U64))
+
+
+def shr64(x, n):
+    """x >> n with out-of-range shifts yielding 0."""
+    n = i64(n)
+    bad = (n >= 64) | (n < 0)
+    safe = jnp.clip(n, 0, 63)
+    return jnp.where(bad, u64(0), u64(x) >> safe.astype(_U64))
+
+
+def shr64_rs(x, n):
+    """Right shift with round/sticky capture.
+
+    Returns (kept, round_bit, sticky) for a shift of ``n ≥ 0``: the round
+    bit is the highest bit shifted out, sticky ORs the rest.
+    """
+    x = u64(x)
+    n = i64(n)
+    kept = shr64(x, n)
+    rnd = shr64(x, n - 1) & u64(1)
+    rnd = jnp.where(n <= 0, u64(0), jnp.where(n > 64, u64(0), rnd))
+    below = shl64(u64(1), n - 1) - u64(1)  # mask of bits strictly below round
+    below = jnp.where(n <= 0, u64(0), below)
+    sticky = jnp.where(n > 64, (x != 0).astype(_U64), ((x & below) != 0).astype(_U64))
+    # n == 64: kept = 0, round bit = bit 63, sticky = rest.
+    kept = jnp.where(n >= 64, u64(0), kept)
+    rnd = jnp.where(n == 64, (x >> u64(63)) & u64(1), rnd)
+    sticky64 = ((x & ((u64(1) << u64(63)) - u64(1))) != 0).astype(_U64)
+    sticky = jnp.where(n == 64, sticky64, sticky)
+    return kept, rnd, sticky
+
+# ---------------------------------------------------------------- SP core
+
+
+_SP_FRAC_MASK = 0x7FFFFF
+_SP_HIDDEN = 0x800000
+_SP_QNAN = 0x7FC00000
+_SP_EXP_MASK = 0xFF
+
+
+def _sp_decode(bits):
+    bits = u64(bits) & u64(0xFFFFFFFF)
+    sign = (bits >> u64(31)) & u64(1)
+    e = (bits >> u64(23)) & u64(_SP_EXP_MASK)
+    frac = bits & u64(_SP_FRAC_MASK)
+    is_zero = (e == 0) & (frac == 0)
+    is_sub = (e == 0) & (frac != 0)
+    is_inf = (e == _SP_EXP_MASK) & (frac == 0)
+    is_nan = (e == _SP_EXP_MASK) & (frac != 0)
+    sig = jnp.where(is_sub | is_zero, frac, frac | u64(_SP_HIDDEN))
+    # LSB exponent: value = sig · 2^exp.
+    exp = jnp.where(e == 0, i64(-149), e.astype(_I64) - 150)
+    return sign, exp, sig, is_zero, is_inf, is_nan
+
+
+def _sp_round_rne(sign, exp, sig, sticky_in):
+    """Round exact (sign, sig·2^exp + sticky residue) to SP RNE bits."""
+    npos = exp + bitlen64(sig)
+    target_q = jnp.maximum(npos - 24, i64(-149))
+    shift = target_q - exp  # ≥ 0 whenever sig is wide; may exceed 64
+    kept, rnd, st = shr64_rs(sig, shift)
+    st = st | sticky_in
+    lsb = kept & u64(1)
+    inc = (rnd == 1) & ((st == 1) | (lsb == 1))
+    kept = kept + inc.astype(_U64)
+    carry = kept == u64(1 << 24)
+    kept = jnp.where(carry, kept >> u64(1), kept)
+    q = jnp.where(carry, target_q + 1, target_q)
+    # Overflow to ±Inf.
+    msb = q + bitlen64(kept) - 1
+    overflow = (kept != 0) & (msb > 127)
+    # Encode: normal iff hidden bit present.
+    is_norm = (kept & u64(_SP_HIDDEN)) != 0
+    biased = jnp.where(is_norm, (q + 150).astype(_U64), u64(0))
+    body = (biased << u64(23)) | (kept & u64(_SP_FRAC_MASK))
+    body = jnp.where(kept == 0, u64(0), body)
+    body = jnp.where(overflow, u64(0x7F800000), body)
+    return (sign << u64(31)) | body
+
+
+def sp_fmac_core(a_bits, b_bits, c_bits):
+    """Bit-exact SP fused multiply-add: round(a·b + c), RNE.
+
+    Inputs and output are uint32 bit patterns carried in uint64 lanes.
+    """
+    sa, ea, siga, za, infa, nana = _sp_decode(a_bits)
+    sb, eb, sigb, zb, infb, nanb = _sp_decode(b_bits)
+    sc, ec, sigc, zc, infc, nanc = _sp_decode(c_bits)
+
+    # ---- finite path ------------------------------------------------
+    psign = sa ^ sb
+    pexp = ea + eb
+    psig = siga * sigb  # ≤ 2^48
+    pzero = psig == 0
+
+    # Magnitude order between product P and addend C.
+    npos_p = pexp + bitlen64(psig)
+    npos_c = ec + bitlen64(sigc)
+    # Aligned compare at e = min(pexp, ec): both fit in u64 when npos tie.
+    emin = jnp.minimum(pexp, ec)
+    p_al = shl64(psig, pexp - emin)
+    c_al = shl64(sigc, ec - emin)
+    p_bigger = jnp.where(
+        npos_p != npos_c, npos_p > npos_c, p_al > c_al
+    )
+    equal_mag = (npos_p == npos_c) & (p_al == c_al)
+
+    big_sig = jnp.where(p_bigger, psig, sigc)
+    big_exp = jnp.where(p_bigger, pexp, ec)
+    big_sign = jnp.where(p_bigger, psign, sc)
+    small_sig = jnp.where(p_bigger, sigc, psig)
+    small_exp = jnp.where(p_bigger, ec, pexp)
+    small_sign = jnp.where(p_bigger, sc, psign)
+
+    # Degenerate operand handling: if one side is zero, the sum is the
+    # other side (exact).
+    one_zero = pzero | (sigc == 0)
+    lone_sig = jnp.where(pzero, sigc, psig)
+    lone_exp = jnp.where(pzero, ec, pexp)
+    lone_sign = jnp.where(pzero, sc, psign)
+
+    # Normalize big to bit 62.
+    lsh = i64(62) - (bitlen64(big_sig) - 1)
+    nbig = shl64(big_sig, lsh)
+    nexp = big_exp - lsh
+    d = nexp - small_exp
+    # d < 0: small shifts left (fits: aligned length ≤ 63); d ≥ 0: right
+    # with sticky.
+    small_left = shl64(small_sig, -d)
+    small_right, s_rnd, s_st = shr64_rs(small_sig, d)
+    # Fold the round bit into sticky: big has one headroom bit, so a
+    # 1-bit-finer alignment is unnecessary — instead keep (d−1)-shift and
+    # one guard. Simpler: shift by d but keep round|sticky as sticky.
+    ssig = jnp.where(d < 0, small_left, small_right)
+    sticky = jnp.where(d < 0, u64(0), (s_rnd | s_st))
+
+    same_sign = big_sign == small_sign
+    sum_same = nbig + ssig
+    sub = nbig - ssig - sticky  # sticky-decrement trick
+    sum_sig = jnp.where(same_sign, sum_same, sub)
+    sum_sign = big_sign
+    sum_exp = nexp
+
+    # One-side-zero and exact-cancellation overrides.
+    sum_sig = jnp.where(one_zero, lone_sig, sum_sig)
+    sum_exp = jnp.where(one_zero, lone_exp, sum_exp)
+    sum_sign = jnp.where(one_zero, lone_sign, sum_sign)
+    sticky = jnp.where(one_zero, u64(0), sticky)
+    cancel = (~one_zero) & (~same_sign) & equal_mag
+    sum_sig = jnp.where(cancel, u64(0), sum_sig)
+    sum_sign = jnp.where(cancel, u64(0), sum_sign)  # +0 under RNE
+
+    # Both zero: IEEE sign rule (+0 unless both −0).
+    both_zero = pzero & (sigc == 0)
+    zero_sign = jnp.where(psign == sc, psign, u64(0))
+
+    rounded = _sp_round_rne(sum_sign, sum_exp, sum_sig, sticky)
+    rounded = jnp.where(both_zero, zero_sign << u64(31), rounded)
+
+    # ---- specials ----------------------------------------------------
+    inf_p = infa | infb
+    invalid = (infa & zb) | (infb & za) | (inf_p & infc & (psign != sc))
+    any_nan = nana | nanb | nanc
+    inf_result = jnp.where(inf_p, psign, sc) << u64(31) | u64(0x7F800000)
+    out = rounded
+    out = jnp.where(inf_p | infc, inf_result, out)
+    out = jnp.where(any_nan | invalid, u64(_SP_QNAN), out)
+    return out & u64(0xFFFFFFFF)
+
+# ---------------------------------------------------------------- DP core
+#
+# DP significand products reach 106 bits, so values travel as (hi, lo)
+# uint64 limb pairs. Only the handful of 128-bit primitives the FMA
+# needs are implemented.
+
+
+def _add128(hi_a, lo_a, hi_b, lo_b):
+    lo = lo_a + lo_b
+    carry = (lo < lo_a).astype(_U64)
+    return hi_a + hi_b + carry, lo
+
+
+def _sub128(hi_a, lo_a, hi_b, lo_b):
+    lo = lo_a - lo_b
+    borrow = (lo_a < lo_b).astype(_U64)
+    return hi_a - hi_b - borrow, lo
+
+
+def _shl128(hi, lo, n):
+    """(hi,lo) << n for 0 ≤ n < 128."""
+    n = i64(n)
+    ge64 = n >= 64
+    n1 = jnp.where(ge64, n - 64, n)
+    # n < 64 case:
+    hi_lt = shl64(hi, n) | jnp.where(n == 0, u64(0), shr64(lo, 64 - n))
+    lo_lt = shl64(lo, n)
+    # n ≥ 64 case:
+    hi_ge = shl64(lo, n1)
+    return jnp.where(ge64, hi_ge, hi_lt), jnp.where(ge64, u64(0), lo_lt)
+
+
+def _shr128_sticky(hi, lo, n):
+    """(hi,lo) >> n with sticky of everything shifted out (n ≥ 0)."""
+    n = i64(n)
+    ge128 = n >= 128
+    ge64 = (n >= 64) & ~ge128
+    n1 = jnp.where(ge64, n - 64, n)
+    # n < 64:
+    lo_lt = shr64(lo, n) | jnp.where(n == 0, u64(0), shl64(hi, 64 - n))
+    hi_lt = shr64(hi, n)
+    st_lt = ((lo & (shl64(u64(1), n) - u64(1))) != 0).astype(_U64)
+    # 64 ≤ n < 128:
+    lo_ge = shr64(hi, n1)
+    st_ge_low = (lo != 0).astype(_U64)
+    st_ge_hi = ((hi & (shl64(u64(1), n1) - u64(1))) != 0).astype(_U64)
+    st_ge = st_ge_low | st_ge_hi
+    lo_out = jnp.where(ge64, lo_ge, lo_lt)
+    hi_out = jnp.where(ge64, u64(0), hi_lt)
+    st = jnp.where(ge64, st_ge, st_lt)
+    # n ≥ 128:
+    any_bits = ((hi != 0) | (lo != 0)).astype(_U64)
+    lo_out = jnp.where(ge128, u64(0), lo_out)
+    hi_out = jnp.where(ge128, u64(0), hi_out)
+    st = jnp.where(ge128, any_bits, st)
+    return hi_out, lo_out, st
+
+
+def _bitlen128(hi, lo):
+    return jnp.where(hi != 0, i64(64) + bitlen64(hi), bitlen64(lo))
+
+
+def _mul_53x53(x, y):
+    """Exact 53×53-bit product as a (hi, lo) u64 pair."""
+    x = u64(x)
+    y = u64(y)
+    m26 = u64((1 << 26) - 1)
+    x_hi = x >> u64(26)  # ≤ 2^27
+    x_lo = x & m26
+    y_hi = y >> u64(26)
+    y_lo = y & m26
+    t0 = x_lo * y_lo          # ≤ 2^52, weight 0
+    t1 = x_hi * y_lo + x_lo * y_hi  # ≤ 2^54, weight 26
+    t2 = x_hi * y_hi          # ≤ 2^54, weight 52
+    lo1 = t0 + shl64(t1, 26)
+    c1 = (lo1 < t0).astype(_U64)
+    lo = lo1 + shl64(t2, 52)
+    c2 = (lo < lo1).astype(_U64)
+    hi = shr64(t1, 38) + shr64(t2, 12) + c1 + c2
+    return hi, lo
+
+
+_DP_FRAC_MASK = (1 << 52) - 1
+_DP_HIDDEN = 1 << 52
+_DP_QNAN = 0x7FF8000000000000
+_DP_EXP_MASK = 0x7FF
+
+
+def _dp_decode(bits):
+    bits = u64(bits)
+    sign = (bits >> u64(63)) & u64(1)
+    e = (bits >> u64(52)) & u64(_DP_EXP_MASK)
+    frac = bits & u64(_DP_FRAC_MASK)
+    is_zero = (e == 0) & (frac == 0)
+    is_sub = (e == 0) & (frac != 0)
+    is_inf = (e == _DP_EXP_MASK) & (frac == 0)
+    is_nan = (e == _DP_EXP_MASK) & (frac != 0)
+    sig = jnp.where(is_sub | is_zero, frac, frac | u64(_DP_HIDDEN))
+    exp = jnp.where(e == 0, i64(-1074), e.astype(_I64) - 1075)
+    return sign, exp, sig, is_zero, is_inf, is_nan
+
+
+def _dp_round_rne(sign, exp, hi, lo, sticky_in):
+    npos = exp + _bitlen128(hi, lo)
+    target_q = jnp.maximum(npos - 53, i64(-1074))
+    shift = target_q - exp
+    kept_hi, kept_lo, st_low = _shr128_sticky(hi, lo, jnp.maximum(shift - 1, 0))
+    # kept with one guard bit at the bottom (shift−1), then split off the
+    # round bit. shift may be 0 when the value is narrower than 53 bits.
+    no_shift = shift <= 0
+    rnd = jnp.where(no_shift, u64(0), kept_lo & u64(1))
+    kept = jnp.where(no_shift, shl64(lo, -shift), shr64(kept_lo, 1) | shl64(kept_hi, 63))
+    st = jnp.where(no_shift, u64(0), st_low) | sticky_in
+    lsb = kept & u64(1)
+    inc = (rnd == 1) & ((st == 1) | (lsb == 1))
+    kept = kept + inc.astype(_U64)
+    carry = kept == u64(1 << 53)
+    kept = jnp.where(carry, kept >> u64(1), kept)
+    q = jnp.where(carry, target_q + 1, target_q)
+    msb = q + bitlen64(kept) - 1
+    overflow = (kept != 0) & (msb > 1023)
+    is_norm = (kept & u64(_DP_HIDDEN)) != 0
+    biased = jnp.where(is_norm, (q + 1075).astype(_U64), u64(0))
+    body = (biased << u64(52)) | (kept & u64(_DP_FRAC_MASK))
+    body = jnp.where(kept == 0, u64(0), body)
+    body = jnp.where(overflow, u64(0x7FF0000000000000), body)
+    return (sign << u64(63)) | body
+
+
+def dp_fmac_core(a_bits, b_bits, c_bits):
+    """Bit-exact DP fused multiply-add: round(a·b + c), RNE, via 128-bit
+    limb arithmetic."""
+    sa, ea, siga, za, infa, nana = _dp_decode(a_bits)
+    sb, eb, sigb, zb, infb, nanb = _dp_decode(b_bits)
+    sc, ec, sigc, zc, infc, nanc = _dp_decode(c_bits)
+
+    psign = sa ^ sb
+    pexp = ea + eb
+    phi, plo = _mul_53x53(siga, sigb)
+    pzero = (phi == 0) & (plo == 0)
+
+    chi = u64(jnp.zeros_like(sigc))
+    clo = sigc
+
+    npos_p = pexp + _bitlen128(phi, plo)
+    npos_c = ec + bitlen64(sigc)
+    # Aligned compare at min exponent; both fit 128 bits when npos tie.
+    emin = jnp.minimum(pexp, ec)
+    pa_hi, pa_lo = _shl128(phi, plo, pexp - emin)
+    ca_hi, ca_lo = _shl128(chi, clo, ec - emin)
+    p_gt = (pa_hi > ca_hi) | ((pa_hi == ca_hi) & (pa_lo > ca_lo))
+    p_bigger = jnp.where(npos_p != npos_c, npos_p > npos_c, p_gt)
+    equal_mag = (npos_p == npos_c) & (pa_hi == ca_hi) & (pa_lo == ca_lo)
+
+    big_hi = jnp.where(p_bigger, phi, chi)
+    big_lo = jnp.where(p_bigger, plo, clo)
+    big_exp = jnp.where(p_bigger, pexp, ec)
+    big_sign = jnp.where(p_bigger, psign, sc)
+    small_hi = jnp.where(p_bigger, chi, phi)
+    small_lo = jnp.where(p_bigger, clo, plo)
+    small_exp = jnp.where(p_bigger, ec, pexp)
+    small_sign = jnp.where(p_bigger, sc, psign)
+
+    one_zero = pzero | (sigc == 0)
+    lone_hi = jnp.where(pzero, chi, phi)
+    lone_lo = jnp.where(pzero, clo, plo)
+    lone_exp = jnp.where(pzero, ec, pexp)
+    lone_sign = jnp.where(pzero, sc, psign)
+
+    # Normalize big to bit 126.
+    lsh = i64(126) - (_bitlen128(big_hi, big_lo) - 1)
+    nb_hi, nb_lo = _shl128(big_hi, big_lo, lsh)
+    nexp = big_exp - lsh
+    d = nexp - small_exp
+    sl_hi, sl_lo = _shl128(small_hi, small_lo, jnp.maximum(-d, 0))
+    sr_hi, sr_lo, s_st = _shr128_sticky(small_hi, small_lo, jnp.maximum(d, 0))
+    ssig_hi = jnp.where(d < 0, sl_hi, sr_hi)
+    ssig_lo = jnp.where(d < 0, sl_lo, sr_lo)
+    sticky = jnp.where(d < 0, u64(0), s_st)
+
+    same_sign = big_sign == small_sign
+    add_hi, add_lo = _add128(nb_hi, nb_lo, ssig_hi, ssig_lo)
+    sub_hi, sub_lo = _sub128(nb_hi, nb_lo, ssig_hi, ssig_lo)
+    sub_hi, sub_lo = _sub128(sub_hi, sub_lo, u64(jnp.zeros_like(sticky)), sticky)
+    sum_hi = jnp.where(same_sign, add_hi, sub_hi)
+    sum_lo = jnp.where(same_sign, add_lo, sub_lo)
+    sum_sign = big_sign
+    sum_exp = nexp
+
+    sum_hi = jnp.where(one_zero, lone_hi, sum_hi)
+    sum_lo = jnp.where(one_zero, lone_lo, sum_lo)
+    sum_exp = jnp.where(one_zero, lone_exp, sum_exp)
+    sum_sign = jnp.where(one_zero, lone_sign, sum_sign)
+    sticky = jnp.where(one_zero, u64(0), sticky)
+    cancel = (~one_zero) & (~same_sign) & equal_mag
+    sum_hi = jnp.where(cancel, u64(0), sum_hi)
+    sum_lo = jnp.where(cancel, u64(0), sum_lo)
+    sum_sign = jnp.where(cancel, u64(0), sum_sign)
+
+    both_zero = pzero & (sigc == 0)
+    zero_sign = jnp.where(psign == sc, psign, u64(0))
+
+    rounded = _dp_round_rne(sum_sign, sum_exp, sum_hi, sum_lo, sticky)
+    rounded = jnp.where(both_zero, zero_sign << u64(63), rounded)
+
+    inf_p = infa | infb
+    invalid = (infa & zb) | (infb & za) | (inf_p & infc & (psign != sc))
+    any_nan = nana | nanb | nanc
+    inf_result = (jnp.where(inf_p, psign, sc) << u64(63)) | u64(0x7FF0000000000000)
+    out = rounded
+    out = jnp.where(inf_p | infc, inf_result, out)
+    out = jnp.where(any_nan | invalid, u64(_DP_QNAN), out)
+    return out

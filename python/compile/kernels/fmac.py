@@ -1,0 +1,60 @@
+"""L1 — the Pallas FMAC kernel.
+
+The compute hot-spot of the reproduction: a batched, bit-exact SP FMAC
+datapath over uint32 operand arrays. One grid step processes one
+``BLOCK``-sized tile; the BlockSpec expresses the HBM↔VMEM streaming of
+operand blocks the way the FPMax chip streams operands from its on-chip
+stimulus RAMs (Fig. 5(a)).
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): the paper's unit
+is an ASIC datapath, so on a TPU-shaped target we tile the *operation
+batch*, not the bit-level structure — every datapath step is a
+vectorized integer op (VPU work), and a block's working set is
+
+    3 inputs + 1 output + ~6 u64 temps ≈ BLOCK · 72 B ≈ 72 KiB @ 1024
+
+comfortably inside VMEM. ``interpret=True`` everywhere: the CPU PJRT
+client cannot execute Mosaic custom-calls (see /opt/xla-example/README).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import bitfloat
+
+# Operations per VMEM tile.
+BLOCK = 1024
+
+
+def _fmac_kernel(a_ref, b_ref, c_ref, o_ref):
+    """One tile: load u32 operands, run the bit-exact datapath in u64
+    lanes, store u32 results."""
+    a = a_ref[...].astype(jnp.uint64)
+    b = b_ref[...].astype(jnp.uint64)
+    c = c_ref[...].astype(jnp.uint64)
+    o_ref[...] = bitfloat.sp_fmac_core(a, b, c).astype(jnp.uint32)
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def sp_fmac_pallas(a_bits, b_bits, c_bits, *, block=BLOCK):
+    """Batched SP FMAC through the Pallas kernel.
+
+    Arguments are uint32 arrays whose length must be a multiple of
+    ``block`` (the AOT entry point fixes the batch; the runtime pads).
+    """
+    n = a_bits.shape[0]
+    block = min(block, n)  # small batches become a single tile
+    assert n % block == 0, f"batch {n} not a multiple of block {block}"
+    grid = (n // block,)
+    spec = pl.BlockSpec((block,), lambda i: (i,))
+    return pl.pallas_call(
+        _fmac_kernel,
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.uint32),
+        grid=grid,
+        in_specs=[spec, spec, spec],
+        out_specs=spec,
+        interpret=True,
+    )(a_bits, b_bits, c_bits)

@@ -1,0 +1,165 @@
+"""Correctness oracles for the FMAC kernels.
+
+Two independent references:
+
+* :func:`fmac_exact` — a scalar softfloat FMA over Python's unbounded
+  integers, written from the IEEE-754 definition with none of the
+  vectorization tricks of ``bitfloat.py``. This is the ground truth the
+  kernel and the jnp cores are tested against (and it in turn is tested
+  against ``math.fma`` for DP, where the host FMA is exact).
+* :func:`sp_fmac_ref` / :func:`dp_fmac_ref` — thin pure-jnp wrappers
+  over the shared cores, used to check that the *Pallas plumbing*
+  (BlockSpec streaming, grid partitioning) does not perturb values.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+
+from . import bitfloat
+
+
+# ------------------------------------------------------------- formats
+
+class Fmt:
+    def __init__(self, exp_bits, sig_bits):
+        self.exp_bits = exp_bits
+        self.sig_bits = sig_bits  # incl. hidden bit
+        self.bias = (1 << (exp_bits - 1)) - 1
+        self.emax = self.bias
+        self.qmin = 1 - self.bias - (sig_bits - 1)
+        self.width = 1 + exp_bits + sig_bits - 1
+        self.frac_mask = (1 << (sig_bits - 1)) - 1
+        self.hidden = 1 << (sig_bits - 1)
+        self.exp_mask = (1 << exp_bits) - 1
+        self.qnan = (self.exp_mask << (sig_bits - 1)) | (1 << (sig_bits - 2))
+
+    def inf(self, sign):
+        v = self.exp_mask << (self.sig_bits - 1)
+        return v | (sign << (self.width - 1))
+
+
+SP = Fmt(8, 24)
+DP = Fmt(11, 53)
+
+
+def _decode(fmt, bits):
+    sign = (bits >> (fmt.width - 1)) & 1
+    e = (bits >> (fmt.sig_bits - 1)) & fmt.exp_mask
+    frac = bits & fmt.frac_mask
+    if e == fmt.exp_mask:
+        kind = "inf" if frac == 0 else "nan"
+        return sign, 0, 0, kind
+    if e == 0:
+        if frac == 0:
+            return sign, 0, 0, "zero"
+        return sign, fmt.qmin, frac, "finite"
+    return sign, e - fmt.bias - (fmt.sig_bits - 1), frac | fmt.hidden, "finite"
+
+
+def fmac_exact(fmt, a_bits, b_bits, c_bits):
+    """round(a·b + c) to nearest-even, computed with exact integers."""
+    sa, ea, ma, ka = _decode(fmt, a_bits)
+    sb, eb, mb, kb = _decode(fmt, b_bits)
+    sc, ec, mc, kc = _decode(fmt, c_bits)
+
+    psign = sa ^ sb
+    if ka == "nan" or kb == "nan" or kc == "nan":
+        return fmt.qnan
+    p_inf = ka == "inf" or kb == "inf"
+    if (ka == "inf" and kb == "zero") or (kb == "inf" and ka == "zero"):
+        return fmt.qnan
+    if p_inf and kc == "inf" and psign != sc:
+        return fmt.qnan
+    if p_inf:
+        return fmt.inf(psign)
+    if kc == "inf":
+        return fmt.inf(sc)
+
+    # Exact values as scaled integers: v = (-1)^s · m · 2^e.
+    pm, pe = ma * mb, ea + eb
+    if pm == 0 and mc == 0:
+        sign = psign if psign == sc else 0
+        return sign << (fmt.width - 1)
+    # Bring both to a common exponent exactly (unbounded ints).
+    if pm and mc:
+        e = min(pe, ec)
+    elif pm:
+        e = pe
+    else:
+        e = ec
+    p = (pm << (pe - e)) if pm else 0
+    c = (mc << (ec - e)) if mc else 0
+    v = (p if psign == 0 else -p) + (c if sc == 0 else -c)
+    if v == 0:
+        return 0  # +0 under RNE cancellation
+    sign = 0 if v > 0 else 1
+    mag = abs(v)
+    # Round mag·2^e to the format.
+    npos = mag.bit_length() + e
+    q = max(npos - fmt.sig_bits, fmt.qmin)
+    shift = q - e
+    if shift <= 0:
+        kept, rnd, sticky = mag << (-shift), 0, 0
+    else:
+        kept = mag >> shift
+        rnd = (mag >> (shift - 1)) & 1
+        sticky = 1 if (mag & ((1 << (shift - 1)) - 1)) else 0
+    if rnd and (sticky or (kept & 1)):
+        kept += 1
+        if kept == (1 << fmt.sig_bits):
+            kept >>= 1
+            q += 1
+    if kept == 0:
+        return sign << (fmt.width - 1)
+    if q + kept.bit_length() - 1 > fmt.emax:
+        return fmt.inf(sign)
+    if kept & fmt.hidden:
+        biased = q + fmt.bias + fmt.sig_bits - 1
+        body = (biased << (fmt.sig_bits - 1)) | (kept & fmt.frac_mask)
+    else:
+        body = kept  # subnormal (q == qmin by construction)
+    return (sign << (fmt.width - 1)) | body
+
+
+def sp_fmac_exact(a_bits, b_bits, c_bits):
+    return fmac_exact(SP, int(a_bits), int(b_bits), int(c_bits))
+
+
+def dp_fmac_exact(a_bits, b_bits, c_bits):
+    return fmac_exact(DP, int(a_bits), int(b_bits), int(c_bits))
+
+
+def sp_fmac_exact_batch(a, b, c):
+    """Vectorized (slow, exact) SP oracle over numpy uint32 arrays."""
+    return np.array(
+        [sp_fmac_exact(x, y, z) for x, y, z in zip(np.asarray(a), np.asarray(b), np.asarray(c))],
+        dtype=np.uint32,
+    )
+
+
+def dp_fmac_exact_batch(a, b, c):
+    return np.array(
+        [dp_fmac_exact(x, y, z) for x, y, z in zip(np.asarray(a), np.asarray(b), np.asarray(c))],
+        dtype=np.uint64,
+    )
+
+
+# ------------------------------------------------------- jnp wrappers
+
+def sp_fmac_ref(a_bits, b_bits, c_bits):
+    """Pure-jnp SP FMAC (no pallas): uint32 in/out."""
+    out = bitfloat.sp_fmac_core(
+        jnp.asarray(a_bits).astype(jnp.uint64),
+        jnp.asarray(b_bits).astype(jnp.uint64),
+        jnp.asarray(c_bits).astype(jnp.uint64),
+    )
+    return out.astype(jnp.uint32)
+
+
+def dp_fmac_ref(a_bits, b_bits, c_bits):
+    """Pure-jnp DP FMAC: uint64 in/out."""
+    return bitfloat.dp_fmac_core(
+        jnp.asarray(a_bits, jnp.uint64),
+        jnp.asarray(b_bits, jnp.uint64),
+        jnp.asarray(c_bits, jnp.uint64),
+    )

@@ -1,0 +1,76 @@
+"""L2 — the JAX verification graphs that get AOT-compiled for the Rust
+runtime.
+
+The FPMax "model" is not a neural network: the chip computes FMACs, so
+the compute graph the coordinator needs is a **batched bit-exact FMAC
+verifier** plus the activity statistics the energy model consumes:
+
+* :func:`sp_fmac_batch` — SP: calls the L1 Pallas kernel
+  (`kernels.fmac`), returns result bits and a toggle count (Hamming
+  weight of result-stream transitions — the dynamic-power proxy).
+* :func:`dp_fmac_batch` — DP: the two-limb jnp core (a 106-bit product
+  does not fit a machine word; Pallas brings nothing at build time for
+  pure element-wise u64-pair code).
+
+Both lower to a single fused HLO module with no Python on the run
+path; ``aot.py`` exports them as HLO text for `rust/src/runtime/`.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import bitfloat
+from .kernels.fmac import sp_fmac_pallas
+
+# The AOT batch size baked into the artifacts (the Rust runtime pads the
+# tail block).
+BATCH = 4096
+
+
+def toggle_count(bits):
+    """Total Hamming distance between consecutive results — the
+    switching-activity proxy the coordinator feeds to the energy model
+    (result-bus toggles track datapath activity to first order)."""
+    x = bits.astype(jnp.uint64)
+    trans = x[1:] ^ x[:-1]
+
+    def popcount(v):
+        m1 = jnp.uint64(0x5555555555555555)
+        m2 = jnp.uint64(0x3333333333333333)
+        m4 = jnp.uint64(0x0F0F0F0F0F0F0F0F)
+        h01 = jnp.uint64(0x0101010101010101)
+        v = v - ((v >> jnp.uint64(1)) & m1)
+        v = (v & m2) + ((v >> jnp.uint64(2)) & m2)
+        v = (v + (v >> jnp.uint64(4))) & m4
+        return (v * h01) >> jnp.uint64(56)
+
+    return popcount(trans).sum().astype(jnp.uint64)
+
+
+def sp_fmac_batch(a_bits, b_bits, c_bits):
+    """SP FMAC over a fixed batch: (results u32[N], toggles u64[])."""
+    out = sp_fmac_pallas(a_bits, b_bits, c_bits)
+    return out, toggle_count(out)
+
+
+def dp_fmac_batch(a_bits, b_bits, c_bits):
+    """DP FMAC over a fixed batch: (results u64[N], toggles u64[])."""
+    out = bitfloat.dp_fmac_core(a_bits, b_bits, c_bits)
+    return out, toggle_count(out)
+
+
+def sp_example_args(batch=BATCH):
+    spec = jax.ShapeDtypeStruct((batch,), jnp.uint32)
+    return (spec, spec, spec)
+
+
+def dp_example_args(batch=BATCH):
+    spec = jax.ShapeDtypeStruct((batch,), jnp.uint64)
+    return (spec, spec, spec)
+
+
+#: The AOT export manifest: artifact name → (function, example-args fn).
+ENTRY_POINTS = {
+    "sp_fmac": (sp_fmac_batch, sp_example_args),
+    "dp_fmac": (dp_fmac_batch, dp_example_args),
+}

@@ -1,0 +1,4 @@
+"""Shared pytest setup: the u64 datapaths require x64 mode."""
+import jax
+
+jax.config.update("jax_enable_x64", True)

@@ -1,0 +1,169 @@
+"""Kernel-vs-reference tests — the core correctness signal for L1.
+
+Layered agreement, strongest check last:
+
+1. Pallas kernel ≡ pure-jnp core (plumbing: BlockSpec, grid, dtypes);
+2. jnp cores ≡ the independent Python-integer oracle (algorithm);
+3. hypothesis sweeps over batch shapes and adversarial bit patterns.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.fmac import sp_fmac_pallas, BLOCK
+
+
+def rand_sp(rng, n):
+    return (
+        (rng.integers(0, 2, n, dtype=np.uint32) << 31)
+        | (rng.integers(0, 256, n, dtype=np.uint32) << 23)
+        | rng.integers(0, 1 << 23, n, dtype=np.uint32)
+    )
+
+
+def rand_dp(rng, n):
+    return (
+        (rng.integers(0, 2, n, dtype=np.uint64) << 63)
+        | (rng.integers(0, 2048, n, dtype=np.uint64) << 52)
+        | rng.integers(0, 1 << 52, n, dtype=np.uint64)
+    )
+
+
+# Adversarial single-operand values: zeros, subnormal extremes, powers of
+# two, all-ones significands, near-overflow, specials.
+SP_EDGE = np.array(
+    [0x00000000, 0x80000000, 0x00000001, 0x80000001, 0x007FFFFF, 0x00800000,
+     0x3F800000, 0xBF800000, 0x3F7FFFFF, 0x3F800001, 0x7F7FFFFF, 0xFF7FFFFF,
+     0x7F800000, 0xFF800000, 0x7FC00000, 0x7F800001, 0x00400000, 0x34000000,
+     0x01000000, 0xFE7FFFFF],
+    dtype=np.uint32,
+)
+
+DP_EDGE = np.array(
+    [0x0000000000000000, 0x8000000000000000, 0x0000000000000001,
+     0x000FFFFFFFFFFFFF, 0x0010000000000000, 0x3FF0000000000000,
+     0xBFF0000000000000, 0x7FEFFFFFFFFFFFFF, 0xFFEFFFFFFFFFFFFF,
+     0x7FF0000000000000, 0xFFF0000000000000, 0x7FF8000000000000,
+     0x7FF0000000000001, 0x3CA0000000000000, 0x0008000000000000],
+    dtype=np.uint64,
+)
+
+
+def assert_sp_matches_oracle(a, b, c, got):
+    want = ref.sp_fmac_exact_batch(a, b, c)
+    bad = np.where(got != want)[0]
+    assert len(bad) == 0, [
+        (hex(a[i]), hex(b[i]), hex(c[i]), hex(got[i]), hex(want[i])) for i in bad[:5]
+    ]
+
+
+class TestPallasPlumbing:
+    def test_kernel_equals_jnp_core_random(self):
+        rng = np.random.default_rng(11)
+        n = 4 * BLOCK
+        a, b, c = rand_sp(rng, n), rand_sp(rng, n), rand_sp(rng, n)
+        got = np.asarray(sp_fmac_pallas(a, b, c))
+        want = np.asarray(ref.sp_fmac_ref(a, b, c))
+        assert (got == want).all()
+
+    @pytest.mark.parametrize("blocks", [1, 2, 3, 8])
+    def test_grid_sizes(self, blocks):
+        rng = np.random.default_rng(blocks)
+        n = blocks * BLOCK
+        a, b, c = rand_sp(rng, n), rand_sp(rng, n), rand_sp(rng, n)
+        got = np.asarray(sp_fmac_pallas(a, b, c))
+        want = np.asarray(ref.sp_fmac_ref(a, b, c))
+        assert (got == want).all()
+
+    @pytest.mark.parametrize("block", [128, 256, 512])
+    def test_alternate_block_shapes(self, block):
+        rng = np.random.default_rng(block)
+        n = 2 * block
+        a, b, c = rand_sp(rng, n), rand_sp(rng, n), rand_sp(rng, n)
+        got = np.asarray(sp_fmac_pallas(a, b, c, block=block))
+        want = np.asarray(ref.sp_fmac_ref(a, b, c))
+        assert (got == want).all()
+
+    def test_non_multiple_batch_rejected(self):
+        rng = np.random.default_rng(0)
+        a = rand_sp(rng, BLOCK + 1)
+        with pytest.raises(AssertionError):
+            sp_fmac_pallas(a, a, a)
+
+
+class TestSpAgainstOracle:
+    def test_random_full_range(self):
+        rng = np.random.default_rng(21)
+        n = 4000
+        a, b, c = rand_sp(rng, n), rand_sp(rng, n), rand_sp(rng, n)
+        got = np.asarray(ref.sp_fmac_ref(a, b, c))
+        assert_sp_matches_oracle(a, b, c, got)
+
+    def test_edge_triples_exhaustive(self):
+        a, b, c = np.meshgrid(SP_EDGE, SP_EDGE, SP_EDGE, indexing="ij")
+        a, b, c = a.ravel(), b.ravel(), c.ravel()
+        got = np.asarray(ref.sp_fmac_ref(a, b, c))
+        want = ref.sp_fmac_exact_batch(a, b, c)
+        bad = np.where(got != want)[0]
+        assert len(bad) == 0, [
+            (hex(a[i]), hex(b[i]), hex(c[i]), hex(got[i]), hex(want[i])) for i in bad[:8]
+        ]
+
+    def test_cancellation_stress(self):
+        # a·b ≈ −c with |a·b + c| spanning every cancellation depth.
+        rng = np.random.default_rng(5)
+        n = 3000
+        a = rand_sp(rng, n) & np.uint32(0x7FFFFFFF) | np.uint32(0x3F800000)
+        b = a.copy()
+        # c = −(a·b rounded), perturbed by a few ulps.
+        prod = np.float32(a.view(np.float32)) * b.view(np.float32)
+        cb = prod.view(np.uint32) ^ np.uint32(0x80000000)
+        cb = cb + rng.integers(0, 4, n, dtype=np.uint32)
+        got = np.asarray(ref.sp_fmac_ref(a, b, cb))
+        assert_sp_matches_oracle(a, b, cb, got)
+
+    @settings(max_examples=300, deadline=None)
+    @given(st.integers(0, 2**32 - 1), st.integers(0, 2**32 - 1), st.integers(0, 2**32 - 1))
+    def test_hypothesis_any_bits(self, a, b, c):
+        a = np.array([a], dtype=np.uint32)
+        b = np.array([b], dtype=np.uint32)
+        c = np.array([c], dtype=np.uint32)
+        got = int(np.asarray(ref.sp_fmac_ref(a, b, c))[0])
+        want = int(ref.sp_fmac_exact(a[0], b[0], c[0]))
+        assert got == want, f"{a[0]:#x},{b[0]:#x},{c[0]:#x}: {got:#x} vs {want:#x}"
+
+
+class TestDpAgainstOracle:
+    def test_random_full_range(self):
+        rng = np.random.default_rng(31)
+        n = 2000
+        a, b, c = rand_dp(rng, n), rand_dp(rng, n), rand_dp(rng, n)
+        got = np.asarray(ref.dp_fmac_ref(a, b, c))
+        want = ref.dp_fmac_exact_batch(a, b, c)
+        bad = np.where(got != want)[0]
+        assert len(bad) == 0, [
+            (hex(a[i]), hex(b[i]), hex(c[i]), hex(got[i]), hex(want[i])) for i in bad[:5]
+        ]
+
+    def test_edge_triples_sampled(self):
+        # Full DP edge cube is 15³ = 3375 — affordable.
+        a, b, c = np.meshgrid(DP_EDGE, DP_EDGE, DP_EDGE, indexing="ij")
+        a, b, c = a.ravel(), b.ravel(), c.ravel()
+        got = np.asarray(ref.dp_fmac_ref(a, b, c))
+        want = ref.dp_fmac_exact_batch(a, b, c)
+        bad = np.where(got != want)[0]
+        assert len(bad) == 0, [
+            (hex(a[i]), hex(b[i]), hex(c[i]), hex(got[i]), hex(want[i])) for i in bad[:8]
+        ]
+
+    @settings(max_examples=200, deadline=None)
+    @given(st.integers(0, 2**64 - 1), st.integers(0, 2**64 - 1), st.integers(0, 2**64 - 1))
+    def test_hypothesis_any_bits(self, a, b, c):
+        aa = np.array([a], dtype=np.uint64)
+        bb = np.array([b], dtype=np.uint64)
+        cc = np.array([c], dtype=np.uint64)
+        got = int(np.asarray(ref.dp_fmac_ref(aa, bb, cc))[0])
+        want = int(ref.dp_fmac_exact(a, b, c))
+        assert got == want, f"{a:#x},{b:#x},{c:#x}: {got:#x} vs {want:#x}"

@@ -1,0 +1,125 @@
+"""L2 model and AOT-export tests: batch graphs, toggle statistics, and
+the HLO-text artifacts the Rust runtime loads."""
+
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot, model
+from compile.kernels import ref
+
+
+def rand_sp(rng, n):
+    return (
+        (rng.integers(0, 2, n, dtype=np.uint32) << 31)
+        | (rng.integers(0, 256, n, dtype=np.uint32) << 23)
+        | rng.integers(0, 1 << 23, n, dtype=np.uint32)
+    )
+
+
+class TestBatchGraphs:
+    def test_sp_batch_outputs(self):
+        rng = np.random.default_rng(1)
+        n = model.BATCH
+        a, b, c = rand_sp(rng, n), rand_sp(rng, n), rand_sp(rng, n)
+        out, toggles = model.sp_fmac_batch(a, b, c)
+        assert out.shape == (n,) and out.dtype == jnp.uint32
+        assert toggles.dtype == jnp.uint64
+        want = np.asarray(ref.sp_fmac_ref(a, b, c))
+        assert (np.asarray(out) == want).all()
+
+    def test_dp_batch_outputs(self):
+        rng = np.random.default_rng(2)
+        n = model.BATCH
+        a = rng.integers(0, 2**63, n, dtype=np.uint64)
+        b = rng.integers(0, 2**63, n, dtype=np.uint64)
+        c = rng.integers(0, 2**63, n, dtype=np.uint64)
+        out, toggles = model.dp_fmac_batch(a, b, c)
+        assert out.shape == (n,) and out.dtype == jnp.uint64
+        assert int(toggles) > 0
+
+    def test_toggle_count_semantics(self):
+        # Identical consecutive results → zero toggles; alternating
+        # all-ones/zeros → 32 per transition for u32 inputs.
+        same = jnp.full((16,), 0xDEADBEEF, dtype=jnp.uint32)
+        assert int(model.toggle_count(same)) == 0
+        alt = jnp.tile(jnp.array([0x0, 0xFFFFFFFF], dtype=jnp.uint32), 8)
+        assert int(model.toggle_count(alt)) == 32 * 15
+
+    def test_toggle_count_tracks_activity(self):
+        # A quiet stream (all results equal) toggles less than a random
+        # stream — the energy model relies on this ordering.
+        rng = np.random.default_rng(3)
+        n = model.BATCH
+        one = np.full(n, 0x3F800000, dtype=np.uint32)
+        zero = np.zeros(n, dtype=np.uint32)
+        _, quiet = model.sp_fmac_batch(one, one, zero)  # 1·1+0 = 1 always
+        a, b, c = rand_sp(rng, n), rand_sp(rng, n), rand_sp(rng, n)
+        _, busy = model.sp_fmac_batch(a, b, c)
+        assert int(quiet) == 0
+        assert int(busy) > 10 * n  # ≫ 10 toggles/op on random data
+
+
+class TestAotExport:
+    @pytest.fixture(scope="class")
+    def exported(self):
+        with tempfile.TemporaryDirectory() as d:
+            manifest = aot.export_all(d, batch=256)
+            texts = {}
+            for name, m in manifest.items():
+                with open(m["path"]) as f:
+                    texts[name] = f.read()
+            yield manifest, texts
+
+    def test_both_entry_points_exported(self, exported):
+        manifest, texts = exported
+        assert set(manifest) == {"sp_fmac", "dp_fmac"}
+        for name in manifest:
+            assert len(texts[name]) > 1000
+
+    def test_hlo_text_structure(self, exported):
+        _, texts = exported
+        for name, text in texts.items():
+            assert text.startswith("HloModule"), f"{name} is not HLO text"
+            assert "ENTRY" in text
+            # The batch size is baked into the shapes.
+            assert "[256]" in text, f"{name} missing batch-256 shapes"
+            # Outputs are a tuple (results, toggles).
+            assert "tuple" in text.lower()
+
+    def test_no_custom_calls_in_artifact(self, exported):
+        # interpret=True must have lowered pallas to plain HLO the CPU
+        # PJRT client can run — a Mosaic custom-call would be fatal.
+        _, texts = exported
+        for name, text in texts.items():
+            assert "custom-call" not in text, f"{name} contains a custom call"
+
+    def test_manifest_written(self, exported):
+        manifest, _ = exported
+        for m in manifest.values():
+            assert m["batch"] == 256
+            assert len(m["sha256_16"]) == 16
+
+    def test_checked_in_artifacts_match_entry_points(self):
+        # `make artifacts` output, if present, must cover every entry
+        # point with consistent batch sizes.
+        art = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+        if not os.path.isdir(art):
+            pytest.skip("artifacts/ not built")
+        for name in model.ENTRY_POINTS:
+            path = os.path.join(art, f"{name}.hlo.txt")
+            assert os.path.exists(path), f"missing {path}; run `make artifacts`"
+            with open(path) as f:
+                head = f.read(4096)
+            assert head.startswith("HloModule")
+
+
+class TestLoweringDeterminism:
+    def test_same_input_same_hlo(self):
+        lowered1 = jax.jit(model.sp_fmac_batch).lower(*model.sp_example_args(128))
+        lowered2 = jax.jit(model.sp_fmac_batch).lower(*model.sp_example_args(128))
+        assert aot.to_hlo_text(lowered1) == aot.to_hlo_text(lowered2)

@@ -1,0 +1,142 @@
+//! Ablation benches — the design choices DESIGN.md calls out, isolated:
+//!
+//! * Booth radix: 2 vs 3 (PP count, tree cells, energy, delay);
+//! * reduction tree: Wallace vs ZM vs array at fixed radix;
+//! * pipeline depth: stages vs frequency vs register energy;
+//! * internal forwarding: on vs off for each unit (latency penalty);
+//! * design-style κ: what each unit would do under the other sizing.
+//!
+//! Run: `cargo bench --bench ablation`.
+
+use fpmax::arch::booth::BoothRadix;
+use fpmax::arch::generator::{FpuConfig, FpuUnit};
+use fpmax::arch::tree::TreeKind;
+use fpmax::energy::components::unit_cost;
+use fpmax::energy::power::evaluate;
+use fpmax::energy::tech::Technology;
+use fpmax::pipesim::{simulate, LatencyModel};
+use fpmax::report::TextTable;
+use fpmax::timing::{nominal_op, timing};
+use fpmax::workloads::specfp::Profile;
+
+fn eval_row(cfg: &FpuConfig) -> (f64, f64, f64, f64) {
+    let tech = Technology::fdsoi28();
+    let unit = FpuUnit::generate(cfg);
+    let cost = unit_cost(&unit);
+    let op = nominal_op(cfg);
+    let t = timing(cfg, &tech, op).unwrap();
+    let eff = evaluate(&unit, &tech, op, 1.0).unwrap();
+    (cost.area_mm2, t.freq_ghz, eff.pj_per_flop, eff.gflops_per_mm2)
+}
+
+fn main() {
+    println!("\n=== ablation: Booth radix (SP FMA baseline) ===\n");
+    let mut t = TextTable::new(vec!["booth", "PPs", "area mm²", "f GHz", "pJ/FLOP", "GFLOPS/mm²"]);
+    for booth in [BoothRadix::Booth2, BoothRadix::Booth3] {
+        let mut cfg = FpuConfig::sp_fma();
+        cfg.booth = booth;
+        let (a, f, e, g) = eval_row(&cfg);
+        t.row(vec![
+            booth.name().to_string(),
+            cfg.multiplier().pp_count().to_string(),
+            format!("{a:.4}"),
+            format!("{f:.2}"),
+            format!("{e:.2}"),
+            format!("{g:.0}"),
+        ]);
+    }
+    t.print();
+
+    println!("\n=== ablation: reduction tree (DP FMA baseline) ===\n");
+    let mut t = TextTable::new(vec!["tree", "levels", "area mm²", "f GHz", "pJ/FLOP", "GFLOPS/mm²"]);
+    for tree in [TreeKind::Wallace, TreeKind::Zm, TreeKind::Array] {
+        let mut cfg = FpuConfig::dp_fma();
+        cfg.tree = tree;
+        let (a, f, e, g) = eval_row(&cfg);
+        t.row(vec![
+            tree.name().to_string(),
+            cfg.multiplier().tree_depth().to_string(),
+            format!("{a:.4}"),
+            format!("{f:.2}"),
+            format!("{e:.2}"),
+            format!("{g:.0}"),
+        ]);
+    }
+    t.print();
+
+    println!("\n=== ablation: pipeline depth (SP FMA) ===\n");
+    let mut t = TextTable::new(vec!["stages", "f GHz", "pJ/FLOP", "GFLOPS/mm²", "reg bits"]);
+    for stages in 3..=8 {
+        let mut cfg = FpuConfig::sp_fma();
+        cfg.stages = stages;
+        cfg.mul_pipe = (stages / 2).max(1);
+        if cfg.validate().is_err() {
+            continue;
+        }
+        let unit = FpuUnit::generate(&cfg);
+        let (_, f, e, g) = eval_row(&cfg);
+        t.row(vec![
+            stages.to_string(),
+            format!("{f:.2}"),
+            format!("{e:.2}"),
+            format!("{g:.0}"),
+            unit.structure().register_bits.to_string(),
+        ]);
+    }
+    t.print();
+
+    println!("\n=== ablation: internal forwarding (latency penalty, SPEC suite) ===\n");
+    let mut t = TextTable::new(vec!["unit", "fwd on", "fwd off", "saving"]);
+    for mk in [FpuConfig::dp_cma, FpuConfig::dp_fma, FpuConfig::sp_cma, FpuConfig::sp_fma] {
+        let on_cfg = mk();
+        let mut off_cfg = on_cfg;
+        off_cfg.forwarding = false;
+        let suite = Profile::suite();
+        let pen = |cfg: &FpuConfig| -> f64 {
+            let lat = LatencyModel::of(&FpuUnit::generate(cfg));
+            suite.iter().map(|p| simulate(&lat, &p.generate(20_000, 42)).avg_penalty).sum::<f64>()
+                / suite.len() as f64
+        };
+        let on = pen(&on_cfg);
+        let off = pen(&off_cfg);
+        t.row(vec![
+            on_cfg.name(),
+            format!("{on:.3}"),
+            format!("{off:.3}"),
+            format!("{:.0}%", (1.0 - on / off) * 100.0),
+        ]);
+    }
+    t.print();
+
+    println!("\n=== ablation: CMA-vs-FMA accumulation chain scaling ===\n");
+    let mut t = TextTable::new(vec!["chain fraction", "DP CMA pen.", "DP FMA(5) pen.", "CMA advantage"]);
+    for frac in [0.0f64, 0.2, 0.4, 0.6, 0.8, 1.0] {
+        use fpmax::pipesim::trace::{Trace, TraceOp};
+        let n = 50_000;
+        let ops: Vec<TraceOp> = (0..n)
+            .map(|i| {
+                if i > 0 && ((i % 100) as f64) < frac * 100.0 {
+                    TraceOp::accumulate(1)
+                } else {
+                    TraceOp::INDEPENDENT
+                }
+            })
+            .collect();
+        let trace = Trace::new(ops);
+        let cma = simulate(&LatencyModel::of(&FpuUnit::generate(&FpuConfig::dp_cma())), &trace);
+        let mut fma5 = FpuConfig::dp_fma();
+        fma5.stages = 5;
+        let fma = simulate(&LatencyModel::of(&FpuUnit::generate(&fma5)), &trace);
+        t.row(vec![
+            format!("{:.0}%", frac * 100.0),
+            format!("{:.3}", cma.avg_penalty),
+            format!("{:.3}", fma.avg_penalty),
+            if fma.avg_penalty > 0.0 {
+                format!("{:.1}×", fma.avg_penalty / cma.avg_penalty.max(1e-9))
+            } else {
+                "-".to_string()
+            },
+        ]);
+    }
+    t.print();
+}

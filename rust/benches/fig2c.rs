@@ -1,0 +1,33 @@
+//! Bench E1 — regenerates **Fig. 2(c)**: average latency penalty of the
+//! DP CMA (with internal before-rounding bypasses) vs a 5-cycle FMA with
+//! and without unrounded-result forwarding, over the SPEC-FP-like suite.
+//!
+//! Paper: CMA is 37% / 57% better. Run: `cargo bench --bench fig2c`.
+
+use fpmax::report::fig2c;
+use fpmax::util::bench::{header, BenchRunner};
+
+fn main() {
+    header("Fig 2(c) — average latency penalty");
+    let fast = std::env::var("FPMAX_BENCH_FAST").as_deref() == Ok("1");
+    let ops = if fast { 5_000 } else { 100_000 };
+    let f = fig2c::compute(ops, 42);
+    fig2c::print(&f);
+
+    // Seed robustness: the reductions must hold across trace seeds.
+    println!("\nseed sweep (reduction vs FMA w/ fwd, w/o fwd):");
+    for seed in [1u64, 7, 13, 99] {
+        let g = fig2c::compute(ops / 2, seed);
+        println!(
+            "  seed {seed:>3}: {:.1}% / {:.1}%",
+            g.reduction_vs_fwd * 100.0,
+            g.reduction_vs_nofwd * 100.0
+        );
+    }
+
+    let runner = BenchRunner::from_env();
+    runner.run("fig2c/suite_simulation", Some((ops * 8 * 3) as f64), || {
+        let f = fig2c::compute(ops, 42);
+        assert!(f.reduction_vs_fwd > 0.0);
+    });
+}

@@ -1,0 +1,27 @@
+//! Bench E2 — regenerates **Fig. 3**: throughput tradeoff curves for the
+//! SP and DP FMAs (architecture sweep at 1 V, V_DD scaling, V_DD +
+//! body-bias), with the paper's headline operating points.
+//!
+//! Run: `cargo bench --bench fig3`.
+
+use fpmax::arch::fp::Precision;
+use fpmax::report::fig3;
+use fpmax::util::bench::{header, BenchRunner};
+
+fn main() {
+    header("Fig 3 — throughput tradeoffs");
+    for precision in [Precision::Single, Precision::Double] {
+        let f = fig3::compute(precision);
+        fig3::print(&f);
+    }
+
+    let runner = BenchRunner::from_env();
+    runner.run("fig3/sp_full_sweep", Some(42.0 + 18.0 * 9.0), || {
+        let f = fig3::compute(Precision::Single);
+        assert!(!f.vdd_bb_curve.is_empty());
+    });
+    runner.run("fig3/dp_full_sweep", None, || {
+        let f = fig3::compute(Precision::Double);
+        assert!(!f.vdd_bb_curve.is_empty());
+    });
+}

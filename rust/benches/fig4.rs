@@ -1,0 +1,43 @@
+//! Bench E3 — regenerates **Fig. 4**: latency-unit tradeoffs (energy/op
+//! vs average benchmarked delay) at 100% utilization with/without body
+//! bias and at 10% utilization with static vs adaptive body bias.
+//!
+//! Paper: BB ≈ 13% power at full load; static BB at 10% utilization
+//! blows energy/op up ~3×; adaptive BB recovers to ~1.5×.
+//!
+//! Run: `cargo bench --bench fig4`.
+
+use fpmax::arch::fp::Precision;
+use fpmax::report::fig4;
+use fpmax::util::bench::{header, BenchRunner};
+
+fn main() {
+    header("Fig 4 — latency tradeoffs, body-bias policies");
+    for precision in [Precision::Single, Precision::Double] {
+        let f = fig4::compute(precision);
+        fig4::print(&f);
+    }
+
+    // Utilization sweep: where does adaptive BB stop paying?
+    println!("\nutilization sweep (SP CMA, V_DD 0.6, blow-up vs 100%):");
+    {
+        use fpmax::arch::generator::{FpuConfig, FpuUnit};
+        use fpmax::bb::controller::{blowup_vs_full, BbPolicy};
+        use fpmax::energy::tech::Technology;
+        use fpmax::workloads::utilization::UtilizationProfile;
+        let unit = FpuUnit::generate(&FpuConfig::sp_cma());
+        let tech = Technology::fdsoi28();
+        for util in [0.05, 0.1, 0.25, 0.5, 0.9] {
+            let prof = UtilizationProfile::duty(util, 10_000, 1_000_000);
+            let s = blowup_vs_full(&unit, &tech, 0.6, BbPolicy::static_nominal(), &prof).unwrap();
+            let a = blowup_vs_full(&unit, &tech, 0.6, BbPolicy::adaptive_nominal(1.0), &prof).unwrap();
+            println!("  util {:>4.0}%: static {s:>5.2}×  adaptive {a:>5.2}×", util * 100.0);
+        }
+    }
+
+    let runner = BenchRunner::from_env();
+    runner.run("fig4/sp_four_curves", None, || {
+        let f = fig4::compute(Precision::Single);
+        assert!(f.adaptive_blowup < f.static_blowup);
+    });
+}

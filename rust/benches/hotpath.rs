@@ -1,0 +1,115 @@
+//! Hot-path microbenchmarks — the §Perf targets of DESIGN.md:
+//!
+//! * bit-accurate FMAC datapath ops/s (per unit, single core),
+//! * golden softfloat ops/s (the spec the datapath is checked against),
+//! * pipeline-simulator cycles/s,
+//! * coordinator end-to-end verification throughput (multi-core),
+//! * PJRT artifact throughput (when artifacts are built).
+//!
+//! Run: `cargo bench --bench hotpath`.
+
+use fpmax::arch::generator::{FpuConfig, FpuUnit};
+use fpmax::arch::rounding::RoundMode;
+use fpmax::arch::softfloat;
+use fpmax::coordinator;
+use fpmax::pipesim::{simulate, LatencyModel};
+use fpmax::runtime::Runtime;
+use fpmax::util::bench::{black_box, header, BenchRunner};
+use fpmax::workloads::specfp::Profile;
+use fpmax::workloads::throughput::{OperandMix, OperandStream};
+
+fn main() {
+    let runner = BenchRunner::from_env();
+    let fast = std::env::var("FPMAX_BENCH_FAST").as_deref() == Ok("1");
+    let n: usize = if fast { 20_000 } else { 200_000 };
+
+    header("hot path — bit-accurate datapaths");
+    for cfg in FpuConfig::fpmax_units() {
+        let unit = FpuUnit::generate(&cfg);
+        let mut stream = OperandStream::new(cfg.precision, OperandMix::Finite, 42);
+        let triples = stream.batch(n);
+        runner.run(&format!("datapath/{}", cfg.name()), Some(n as f64), || {
+            let mut acc = 0u64;
+            for t in &triples {
+                acc ^= unit.fmac(t.a, t.b, t.c).bits;
+            }
+            black_box(acc);
+        });
+    }
+
+    header("hot path — golden softfloat");
+    {
+        let mut stream = OperandStream::new(
+            fpmax::arch::fp::Precision::Double,
+            OperandMix::Finite,
+            7,
+        );
+        let triples = stream.batch(n);
+        let fmt = fpmax::arch::fp::Format::DP;
+        runner.run("softfloat/dp_fma", Some(n as f64), || {
+            let mut acc = 0u64;
+            for t in &triples {
+                acc ^= softfloat::fma(fmt, RoundMode::NearestEven, t.a, t.b, t.c).bits;
+            }
+            black_box(acc);
+        });
+    }
+
+    header("hot path — pipeline simulator");
+    {
+        let unit = FpuUnit::generate(&FpuConfig::dp_cma());
+        let lat = LatencyModel::of(&unit);
+        let trace = Profile::suite()[0].generate(n, 42);
+        runner.run("pipesim/spec_trace", Some(n as f64), || {
+            let sim = simulate(&lat, &trace);
+            black_box(sim.cycles);
+        });
+    }
+
+    header("hot path — coordinator (multi-core verification)");
+    {
+        let cfg = FpuConfig::sp_fma();
+        let unit = FpuUnit::generate(&cfg);
+        let mut stream = OperandStream::new(cfg.precision, OperandMix::Finite, 9);
+        let triples = stream.batch(n);
+        let workers = std::thread::available_parallelism().map(|v| v.get()).unwrap_or(4);
+        runner.run(
+            &format!("coordinator/verify_x{workers}"),
+            Some(n as f64),
+            || {
+                let r = coordinator::verify_datapath_only(&unit, &triples, workers);
+                assert!(r.clean());
+            },
+        );
+    }
+
+    header("hot path — PJRT artifact (needs `make artifacts`)");
+    match Runtime::cpu("artifacts") {
+        Ok(rt) => {
+            for (name, precision) in [
+                ("sp_fmac", fpmax::arch::fp::Precision::Single),
+                ("dp_fmac", fpmax::arch::fp::Precision::Double),
+            ] {
+                match rt.load_fmac(name, precision) {
+                    Ok(artifact) => {
+                        let mut stream = OperandStream::new(precision, OperandMix::Finite, 3);
+                        let triples = stream.batch(artifact.batch * 4);
+                        let a: Vec<u64> = triples.iter().map(|t| t.a).collect();
+                        let b: Vec<u64> = triples.iter().map(|t| t.b).collect();
+                        let c: Vec<u64> = triples.iter().map(|t| t.c).collect();
+                        runner.run(
+                            &format!("pjrt/{name}_batch{}", artifact.batch),
+                            Some(a.len() as f64),
+                            || {
+                                let out = artifact.fmac(&a, &b, &c).expect("execute");
+                                black_box(out.toggles);
+                            },
+                        );
+                    }
+                    Err(e) => println!("skipping {name}: {e}"),
+                }
+            }
+        }
+        Err(e) => println!("PJRT unavailable: {e}"),
+    }
+}

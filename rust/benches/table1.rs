@@ -1,0 +1,35 @@
+//! Bench E4 — regenerates **Table I** (per-unit performance summary)
+//! and times the full pipeline (generator → cost models → operating-
+//! window scan → benchmarked-delay simulation).
+//!
+//! Run: `cargo bench --bench table1` (FPMAX_BENCH_FAST=1 for a smoke run).
+
+use fpmax::report::table1;
+use fpmax::util::bench::{header, BenchRunner};
+use fpmax::util::stats::rel_diff;
+
+fn main() {
+    header("Table I — performance summary");
+    let entries = table1::compute();
+    table1::print(&entries);
+
+    println!("\nper-cell relative error vs silicon:");
+    for (e, p) in entries.iter().zip(table1::PAPER) {
+        println!(
+            "  {:<7} area {:>5.1}%  freq {:>5.1}%  power {:>5.1}%  normAeff {:>5.1}%  normEeff {:>5.1}%  delay {:>5.1}%",
+            e.name,
+            100.0 * rel_diff(e.area_mm2, p.1),
+            100.0 * rel_diff(e.freq_ghz, p.2),
+            100.0 * rel_diff(e.total_mw, p.4),
+            100.0 * rel_diff(e.norm_area_eff, p.5),
+            100.0 * rel_diff(e.norm_energy_eff, p.7),
+            100.0 * rel_diff(e.norm_delay_ns, p.9),
+        );
+    }
+
+    let runner = BenchRunner::from_env();
+    runner.run("table1/full_regeneration", Some(4.0), || {
+        let e = table1::compute();
+        assert_eq!(e.len(), 4);
+    });
+}

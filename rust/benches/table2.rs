@@ -1,0 +1,27 @@
+//! Bench E5 — regenerates **Table II** (SP FMA vs published designs,
+//! scaled to 28nm by the feature-size + FO4 rule).
+//!
+//! Run: `cargo bench --bench table2`.
+
+use fpmax::report::table2;
+use fpmax::util::bench::{header, BenchRunner};
+
+fn main() {
+    header("Table II — scaled comparison");
+    let rows = table2::compute();
+    table2::print(&rows);
+
+    // The qualitative shape asserted by the paper's conclusion.
+    let fpmax = &rows[0];
+    let winners_energy = rows[1..].iter().filter(|r| r.gflops_w >= fpmax.gflops_w).count();
+    println!(
+        "\nFPMax SP FMA wins GFLOPS/W against {}/4 competitors (paper: 4/4)",
+        4 - winners_energy
+    );
+
+    let runner = BenchRunner::from_env();
+    runner.run("table2/full_regeneration", Some(5.0), || {
+        let r = table2::compute();
+        assert_eq!(r.len(), 5);
+    });
+}

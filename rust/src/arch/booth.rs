@@ -1,0 +1,263 @@
+//! Booth recoding and partial-product generation.
+//!
+//! The paper's FPUs differ in Booth radix (Table I): the DP units and the
+//! SP FMA use **Booth 3** (radix-8, digits −4…4, needs the hard ×3
+//! multiple but emits ~m/3 partial products), while the SP CMA's shorter
+//! cycle forces **Booth 2** (radix-4, digits −2…2, ~m/2 partial products,
+//! no hard multiple). Fewer partial products shrink the reduction tree —
+//! area and energy — at the cost of the ×3 pre-adder's delay; this is the
+//! exact trade FPGen sweeps.
+//!
+//! Partial products are materialized as two's-complement words masked to
+//! the multiplier's window width, so summing them with carry-save
+//! arithmetic reproduces the product *mod 2^W* exactly as the silicon
+//! array does with sign-extension encoding.
+
+
+/// Booth recoding radix.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum BoothRadix {
+    /// Radix-4 (overlapping triplets, digits −2…+2).
+    Booth2,
+    /// Radix-8 (overlapping quadruplets, digits −4…+4; requires a 3M
+    /// pre-adder).
+    Booth3,
+}
+
+impl BoothRadix {
+    /// Bits consumed per digit.
+    pub const fn bits_per_digit(self) -> u32 {
+        match self {
+            BoothRadix::Booth2 => 2,
+            BoothRadix::Booth3 => 3,
+        }
+    }
+
+    /// Number of Booth digits needed to cover an `m`-bit unsigned
+    /// multiplier (one extra high bit guarantees the final digit is
+    /// non-negative for an unsigned operand).
+    pub const fn digit_count(self, m: u32) -> u32 {
+        let b = self.bits_per_digit();
+        (m + b) / b // ceil((m+1)/b)
+    }
+
+    /// Does this radix require the hard ×3 multiple (a carry-propagate
+    /// pre-add of the multiplicand)?
+    pub const fn needs_triple(self) -> bool {
+        matches!(self, BoothRadix::Booth3)
+    }
+
+    /// Short name for reports ("2" / "3", as in the paper's Table I).
+    pub fn name(self) -> &'static str {
+        match self {
+            BoothRadix::Booth2 => "2",
+            BoothRadix::Booth3 => "3",
+        }
+    }
+}
+
+/// One recoded Booth digit.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct BoothDigit {
+    /// Digit value in −4…+4 (−2…+2 for Booth-2).
+    pub value: i8,
+    /// Weight: the digit contributes `value · 2^shift · multiplicand`.
+    pub shift: u32,
+}
+
+/// Recode an `m`-bit unsigned multiplier into Booth digits.
+///
+/// Standard overlapping-window recoding: window `i` inspects bits
+/// `[i·b − 1, i·b + b − 1]` (bit −1 reads as 0) and produces digit
+/// `window_value − 2b·(top bit)`, guaranteeing Σ digit_i · 2^(i·b) = y.
+pub fn recode(y: u64, m: u32, radix: BoothRadix) -> Vec<BoothDigit> {
+    assert!(m <= 62, "multiplier width exceeds recoder");
+    debug_assert!(m == 64 || y < (1u64 << m), "multiplier has bits above m");
+    let b = radix.bits_per_digit();
+    let n = radix.digit_count(m);
+    // y extended with a 0 at bit -1: examine (b+1)-bit windows of 2y.
+    let y2 = (y as u128) << 1;
+    let mut digits = Vec::with_capacity(n as usize);
+    for i in 0..n {
+        let lo = i * b;
+        let window = ((y2 >> lo) & ((1u128 << (b + 1)) - 1)) as u64;
+        // Window LSB carries half weight (it is the overlap bit y[lo−1]):
+        // digit = ⌊w/2⌋ + (w&1) − 2^b·msb(w), e.g. radix-4's
+        // y_{2i−1} + y_{2i} − 2·y_{2i+1}.
+        let msb = (window >> b) & 1;
+        let value = ((window >> 1) + (window & 1)) as i64 - ((1i64 << b) * msb as i64);
+        digits.push(BoothDigit { value: value as i8, shift: i * b });
+    }
+    digits
+}
+
+/// Statistics from partial-product generation, consumed by the energy
+/// model (switching events) and timing model (PP count → tree size).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct PpStats {
+    /// Total digits (= number of partial products).
+    pub digits: u32,
+    /// Digits with a nonzero value (actual mux/negate activity).
+    pub nonzero_digits: u32,
+    /// Whether the ×3 hard multiple was computed (Booth-3 only).
+    pub used_triple: bool,
+}
+
+/// Maximum partial products any supported configuration emits (DP
+/// Booth-2: 27) — sizes the allocation-free hot-path buffers.
+pub const MAX_PPS: usize = 28;
+
+/// Allocation-free partial-product generation into a caller-provided
+/// buffer (the FMAC hot path). Returns the PP count and stats.
+///
+/// Recoding is fused in (no intermediate digit vector): window `i` of
+/// `2y` yields digit `⌊w/2⌋ + (w&1) − 2^b·msb(w)`; each digit's
+/// multiple of `x` is wrapped two's-complement to the window width,
+/// exactly like the silicon's sign-extension encoding.
+#[inline(always)]
+pub fn partial_products_into(
+    x: u64,
+    y: u64,
+    m: u32,
+    radix: BoothRadix,
+    width: u32,
+    out: &mut [u128],
+) -> (usize, PpStats) {
+    debug_assert!(width <= 128 && width >= 2 * m, "window too narrow for the product");
+    debug_assert!(m == 64 || y < (1u64 << m), "multiplier has bits above m");
+    let mask: u128 = if width == 128 { u128::MAX } else { (1u128 << width) - 1 };
+    let b = radix.bits_per_digit();
+    let n = radix.digit_count(m) as usize;
+    debug_assert!(out.len() >= n);
+    let mut stats = PpStats { digits: n as u32, ..Default::default() };
+    let y2 = (y as u128) << 1;
+    let window_mask = (1u64 << (b + 1)) - 1;
+    for (i, slot) in out.iter_mut().enumerate().take(n) {
+        let lo = i as u32 * b;
+        let window = ((y2 >> lo) as u64) & window_mask;
+        let msb = (window >> b) & 1;
+        let value = ((window >> 1) + (window & 1)) as i64 - ((1i64 << b) * msb as i64);
+        if value != 0 {
+            stats.nonzero_digits += 1;
+        }
+        if value.unsigned_abs() == 3 {
+            stats.used_triple = true;
+        }
+        let mult = (value as i128) * (x as i128);
+        *slot = ((mult as u128) << lo) & mask;
+    }
+    (n, stats)
+}
+
+/// Partial products of `x · y` (both `m`-bit unsigned), as two's-complement
+/// words masked to `width` bits. Their sum mod 2^width equals `x·y`.
+/// (Vec wrapper over [`partial_products_into`] for non-hot-path callers.)
+pub fn partial_products(
+    x: u64,
+    y: u64,
+    m: u32,
+    radix: BoothRadix,
+    width: u32,
+) -> (Vec<u128>, PpStats) {
+    assert!(width <= 128 && width >= 2 * m, "window too narrow for the product");
+    let mut buf = [0u128; MAX_PPS];
+    let (n, stats) = partial_products_into(x, y, m, radix, width, &mut buf);
+    (buf[..n].to_vec(), stats)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn digits_value(digits: &[BoothDigit]) -> i128 {
+        digits.iter().map(|d| (d.value as i128) << d.shift).sum()
+    }
+
+    #[test]
+    fn recode_reconstructs_value_booth2() {
+        for y in [0u64, 1, 2, 3, 0xff, 0xdead_beef & 0xffffff, (1 << 24) - 1, 0x00ab_cdef] {
+            let d = recode(y, 24, BoothRadix::Booth2);
+            assert_eq!(digits_value(&d), y as i128, "y={y:#x}");
+            assert_eq!(d.len(), 13); // ceil(25/2)
+        }
+    }
+
+    #[test]
+    fn recode_reconstructs_value_booth3() {
+        for y in [0u64, 1, 5, (1 << 53) - 1, 0x000f_ffff_ffff_ffff, 0x0012_3456_789a_bcde & ((1 << 53) - 1)] {
+            let d = recode(y, 53, BoothRadix::Booth3);
+            assert_eq!(digits_value(&d), y as i128, "y={y:#x}");
+            assert_eq!(d.len(), 18); // ceil(54/3)
+        }
+    }
+
+    #[test]
+    fn digit_ranges() {
+        for y in 0..(1u64 << 12) {
+            for (radix, lim) in [(BoothRadix::Booth2, 2i8), (BoothRadix::Booth3, 4i8)] {
+                for d in recode(y, 12, radix) {
+                    assert!(d.value >= -lim && d.value <= lim, "digit {} out of range", d.value);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn digit_counts_match_table() {
+        // SP (m=24): Booth-2 → 13 PPs, Booth-3 → 9 PPs (the paper's SP FMA
+        // tree is roughly 30% smaller than the SP CMA's).
+        assert_eq!(BoothRadix::Booth2.digit_count(24), 13);
+        assert_eq!(BoothRadix::Booth3.digit_count(24), 9);
+        // DP (m=53): Booth-2 → 27, Booth-3 → 18.
+        assert_eq!(BoothRadix::Booth2.digit_count(53), 27);
+        assert_eq!(BoothRadix::Booth3.digit_count(53), 18);
+    }
+
+    #[test]
+    fn partial_products_sum_to_product() {
+        let m = 24;
+        let width = 2 * m + 2;
+        let mask = (1u128 << width) - 1;
+        for (x, y) in [(0u64, 0u64), (1, 1), (0xffffff, 0xffffff), (0x923456, 0x654321), (1 << 23, 3)] {
+            for radix in [BoothRadix::Booth2, BoothRadix::Booth3] {
+                let (pps, stats) = partial_products(x, y, m, radix, width);
+                let sum = pps.iter().fold(0u128, |a, &p| (a.wrapping_add(p)) & mask);
+                assert_eq!(sum, (x as u128 * y as u128) & mask, "x={x:#x} y={y:#x} {radix:?}");
+                assert_eq!(stats.digits, radix.digit_count(m));
+            }
+        }
+    }
+
+    #[test]
+    fn partial_products_dp_booth3() {
+        let m = 53;
+        let width = 2 * m + 2;
+        let mask = (1u128 << width) - 1;
+        let x = (1u64 << 53) - 1;
+        let y = 0x001a_5a5a_5a5a_5a5a & ((1 << 53) - 1);
+        let (pps, stats) = partial_products(x, y, m, BoothRadix::Booth3, width);
+        let sum = pps.iter().fold(0u128, |a, &p| (a.wrapping_add(p)) & mask);
+        assert_eq!(sum, (x as u128 * y as u128) & mask);
+        assert!(stats.used_triple || !pps.is_empty());
+    }
+
+    #[test]
+    fn zero_multiplier_all_zero_digits() {
+        let (pps, stats) = partial_products(0xabcdef, 0, 24, BoothRadix::Booth2, 50);
+        assert!(pps.iter().all(|&p| p == 0));
+        assert_eq!(stats.nonzero_digits, 0);
+    }
+
+    #[test]
+    fn triple_usage_detection() {
+        // y = 3 recodes (radix-8) to the single digit 3 → triple used.
+        let (_, stats) = partial_products(5, 3, 24, BoothRadix::Booth3, 50);
+        assert!(stats.used_triple);
+        // y = 4 recodes to digit 4 (shiftable) → no triple.
+        let (_, stats) = partial_products(5, 4, 24, BoothRadix::Booth3, 50);
+        assert!(!stats.used_triple);
+        // Booth-2 never uses a triple.
+        let (_, stats) = partial_products(5, 3, 24, BoothRadix::Booth2, 50);
+        assert!(!stats.used_triple);
+    }
+}

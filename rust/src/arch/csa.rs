@@ -1,0 +1,186 @@
+//! Carry-save arithmetic: word-level models of the 3:2 and 4:2
+//! compressors the reduction trees are built from.
+//!
+//! A 3:2 compressor (a row of full adders) maps three addends to a
+//! sum/carry pair with the same total, in one full-adder delay regardless
+//! of width — the reason multiplier trees defer carry propagation to a
+//! single final CPA. The word-level identities
+//! `sum = a⊕b⊕c`, `carry = majority(a,b,c) « 1`
+//! are exact bit-level models, so these functions *are* the hardware, just
+//! evaluated 128 lanes at a time.
+//!
+//! Each operation also accumulates [`CsaStats`]: full-adder evaluations
+//! (structure; feeds area/energy) and output toggle weight (activity;
+//! feeds dynamic power).
+
+/// Activity/structure statistics accumulated across a reduction.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct CsaStats {
+    /// Full-adder positions evaluated (one per bit of each 3:2 row).
+    pub fa_ops: u64,
+    /// Population count of produced sum+carry words — the switching-event
+    /// proxy the energy model converts to C·V² events.
+    pub toggles: u64,
+    /// Compressor rows (3:2 equivalents) on the critical path so far.
+    pub depth: u32,
+}
+
+impl CsaStats {
+    /// Merge a parallel branch: structure adds, depth takes the max.
+    pub fn join_parallel(&mut self, other: CsaStats) {
+        self.fa_ops += other.fa_ops;
+        self.toggles += other.toggles;
+        self.depth = self.depth.max(other.depth);
+    }
+
+    /// Chain a sequential stage after this one.
+    pub fn chain(&mut self, other: CsaStats) {
+        self.fa_ops += other.fa_ops;
+        self.toggles += other.toggles;
+        self.depth += other.depth;
+    }
+}
+
+/// A redundant (carry-save) value: `value = (sum + carry) mod 2^width`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CarrySave {
+    pub sum: u128,
+    pub carry: u128,
+}
+
+impl CarrySave {
+    /// A carry-save zero.
+    pub const ZERO: CarrySave = CarrySave { sum: 0, carry: 0 };
+
+    /// Resolve to a binary value with a carry-propagate add (the final
+    /// CPA of the multiplier), wrapped to `width`.
+    pub fn resolve(self, width: u32) -> u128 {
+        self.sum.wrapping_add(self.carry) & mask(width)
+    }
+}
+
+/// Bit mask of `width` low bits.
+#[inline]
+pub const fn mask(width: u32) -> u128 {
+    if width >= 128 {
+        u128::MAX
+    } else {
+        (1u128 << width) - 1
+    }
+}
+
+/// One 3:2 compressor row over `width` bits, generic over whether
+/// activity statistics are accumulated. The verification hot path
+/// (`FpuUnit::fmac`) uses `TRACK = false`, compiling the three stat
+/// updates (and both popcounts) out entirely; the energy-model path
+/// (`fmac_mode`) uses `TRACK = true`.
+#[inline(always)]
+pub fn csa32_t<const TRACK: bool>(
+    a: u128,
+    b: u128,
+    c: u128,
+    width: u32,
+    stats: &mut CsaStats,
+) -> CarrySave {
+    let m = mask(width);
+    let sum = (a ^ b ^ c) & m;
+    let carry = (((a & b) | (a & c) | (b & c)) << 1) & m;
+    if TRACK {
+        stats.fa_ops += width as u64;
+        stats.toggles += (sum.count_ones() + carry.count_ones()) as u64;
+        stats.depth += 1;
+    }
+    CarrySave { sum, carry }
+}
+
+/// One 3:2 compressor row over `width` bits (always tracking).
+#[inline(always)]
+pub fn csa32(a: u128, b: u128, c: u128, width: u32, stats: &mut CsaStats) -> CarrySave {
+    csa32_t::<true>(a, b, c, width, stats)
+}
+
+/// One 4:2 compressor row (two chained 3:2s, but counted as ~1.5 FA delays
+/// in the timing model; structurally it is two rows of cells).
+#[inline]
+pub fn csa42(
+    a: u128,
+    b: u128,
+    c: u128,
+    d: u128,
+    width: u32,
+    stats: &mut CsaStats,
+) -> CarrySave {
+    let first = csa32(a, b, c, width, stats);
+    csa32(first.sum, first.carry, d, width, stats)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn csa32_preserves_sum() {
+        let w = 64;
+        let cases = [
+            (0u128, 0u128, 0u128),
+            (1, 1, 1),
+            (0xdead_beef, 0x1234_5678, 0xffff_ffff),
+            (u64::MAX as u128, u64::MAX as u128, u64::MAX as u128),
+        ];
+        for (a, b, c) in cases {
+            let mut st = CsaStats::default();
+            let cs = csa32(a, b, c, w, &mut st);
+            assert_eq!(
+                cs.resolve(w),
+                a.wrapping_add(b).wrapping_add(c) & mask(w),
+                "a={a:#x} b={b:#x} c={c:#x}"
+            );
+            assert_eq!(st.depth, 1);
+            assert_eq!(st.fa_ops, w as u64);
+        }
+    }
+
+    #[test]
+    fn csa42_preserves_sum() {
+        let w = 100;
+        let mut st = CsaStats::default();
+        let (a, b, c, d) = (0x1111_2222_3333u128, 0x9999_aaaa_bbbbu128, 0x0f0f_0f0fu128, 0xffff_ffff_ffffu128);
+        let cs = csa42(a, b, c, d, w, &mut st);
+        assert_eq!(cs.resolve(w), (a + b + c + d) & mask(w));
+        assert_eq!(st.depth, 2); // two 3:2 rows structurally
+    }
+
+    #[test]
+    fn wrapping_at_window_width() {
+        // Sums that overflow the window must wrap exactly like hardware.
+        let w = 8;
+        let mut st = CsaStats::default();
+        let cs = csa32(0xff, 0xff, 0xff, w, &mut st);
+        assert_eq!(cs.resolve(w), (0xffu128 * 3) & 0xff);
+    }
+
+    #[test]
+    fn stats_accumulate() {
+        let mut total = CsaStats::default();
+        let mut branch_a = CsaStats::default();
+        csa32(1, 2, 3, 32, &mut branch_a);
+        csa32(4, 5, 6, 32, &mut branch_a);
+        let mut branch_b = CsaStats::default();
+        csa32(7, 8, 9, 32, &mut branch_b);
+        total.join_parallel(branch_a);
+        total.join_parallel(branch_b);
+        assert_eq!(total.depth, 2); // max of branches
+        assert_eq!(total.fa_ops, 3 * 32);
+        let mut seq = CsaStats::default();
+        seq.chain(branch_a);
+        seq.chain(branch_b);
+        assert_eq!(seq.depth, 3); // chained
+    }
+
+    #[test]
+    fn mask_extremes() {
+        assert_eq!(mask(0), 0);
+        assert_eq!(mask(1), 1);
+        assert_eq!(mask(128), u128::MAX);
+    }
+}

@@ -1,0 +1,308 @@
+//! The fused multiply-add (FMA) datapath: `round(a·b + c)` with one
+//! rounding, the architecture of the paper's two throughput units
+//! (Fig. 1(a)).
+//!
+//! Structure (per Fig. 1(a), Lang/Bruguera-style):
+//!
+//! 1. multiplier (Booth + tree) leaves `a·b` in carry-save form;
+//! 2. the addend `c` is aligned against the product into a `3m+5`-bit
+//!    window (far-out addends collapse into a sticky bit);
+//! 3. a 3:2 row merges `c` with the product's sum/carry pair;
+//! 4. the wide CPA + LZA + normalizer produce the exact magnitude;
+//! 5. one shared rounder packs the result.
+//!
+//! The multiplier is simulated gate-level (every 3:2 row evaluated); the
+//! align/add/normalize path is simulated word-level with exact sticky
+//! semantics — numerically indistinguishable from the silicon, while the
+//! per-structure costs (alignment shifter span, adder width, LZA width)
+//! are reported to the timing/energy models through [`FmaStructure`].
+
+use super::fp::{decode, Class, Decoded, Format};
+use super::multiplier::{multiply_t, MultiplierConfig};
+use super::rounding::{RoundMode, Rounded};
+use super::softfloat::{self, add_exact, Exact};
+
+/// Static structural parameters of an FMA datapath, derived from the
+/// format and multiplier config. All widths in bits.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FmaStructure {
+    /// Significand bits m.
+    pub sig_bits: u32,
+    /// Multiplier window (2m+2).
+    pub mul_window: u32,
+    /// Alignment window for the addend (3m+5): c can sit up to m+2 bits
+    /// above the product and collapses to sticky beyond 2m+3 below.
+    pub align_window: u32,
+    /// Width of the final carry-propagate adder.
+    pub adder_width: u32,
+    /// Width the leading-zero anticipator scans.
+    pub lza_width: u32,
+    /// Partial products entering the tree.
+    pub pp_count: u32,
+    /// Tree depth in 3:2 levels.
+    pub tree_levels: u32,
+}
+
+impl FmaStructure {
+    /// Derive the structure from a multiplier configuration.
+    pub fn derive(mul: &MultiplierConfig) -> FmaStructure {
+        let m = mul.sig_bits;
+        FmaStructure {
+            sig_bits: m,
+            mul_window: mul.window(),
+            align_window: 3 * m + 5,
+            adder_width: 3 * m + 5,
+            lza_width: 3 * m + 5,
+            pp_count: mul.pp_count(),
+            tree_levels: mul.tree_depth(),
+        }
+    }
+}
+
+/// Per-operation activity record: what actually toggled for this operand
+/// triple. The energy model integrates these into joules.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct FmaActivity {
+    /// Booth digits that were nonzero.
+    pub nonzero_digits: u32,
+    /// Total Booth digits.
+    pub digits: u32,
+    /// Tree full-adder evaluations.
+    pub tree_fa_ops: u64,
+    /// Tree output toggle weight (popcount proxy).
+    pub tree_toggles: u64,
+    /// Alignment shift distance actually exercised.
+    pub align_shift: u32,
+    /// Normalization (cancellation) shift distance.
+    pub norm_shift: u32,
+    /// Whether the op took the special/early-out path (no datapath
+    /// activity beyond decode).
+    pub special: bool,
+}
+
+/// One fused multiply-add through the structural datapath.
+///
+/// Returns the IEEE result (bit-identical to [`softfloat::fma`], which is
+/// asserted in debug builds) plus the activity record.
+pub fn fmac(
+    fmt: Format,
+    mul: &MultiplierConfig,
+    mode: RoundMode,
+    a_bits: u64,
+    b_bits: u64,
+    c_bits: u64,
+) -> (Rounded, FmaActivity) {
+    fmac_t::<true>(fmt, mul, mode, a_bits, b_bits, c_bits)
+}
+
+/// Fused datapath generic over activity tracking (`TRACK = false` is the
+/// verification hot path: no toggle counts, no shift-distance records).
+#[inline(always)]
+pub fn fmac_t<const TRACK: bool>(
+    fmt: Format,
+    mul: &MultiplierConfig,
+    mode: RoundMode,
+    a_bits: u64,
+    b_bits: u64,
+    c_bits: u64,
+) -> (Rounded, FmaActivity) {
+    debug_assert_eq!(fmt.sig_bits, mul.sig_bits, "format/multiplier width mismatch");
+    let a = decode(fmt, a_bits);
+    let b = decode(fmt, b_bits);
+    let c = decode(fmt, c_bits);
+
+    // Specials and zero products bypass the datapath (the chip gates the
+    // multiplier clock in these cases — `special` tells the energy model).
+    if a.non_finite() || b.non_finite() || c.non_finite() || a.is_zero() || b.is_zero() {
+        let r = softfloat::fma(fmt, mode, a_bits, b_bits, c_bits);
+        return (r, FmaActivity { special: true, ..Default::default() });
+    }
+
+    let mut act = FmaActivity::default();
+
+    // 1-2. Structural multiplier: a·b in carry-save form.
+    let mr = multiply_t::<TRACK>(mul, a.sig, b.sig);
+    if TRACK {
+        act.digits = mr.pp_stats.digits;
+        act.nonzero_digits = mr.pp_stats.nonzero_digits;
+        act.tree_fa_ops = mr.tree_stats.fa_ops;
+        act.tree_toggles = mr.tree_stats.toggles;
+    }
+
+    // 3-4. Resolve and merge the addend with exact sticky semantics.
+    let product = Exact {
+        sign: a.sign ^ b.sign,
+        exp: a.exp + b.exp,
+        sig: mr.product(mul),
+        sticky: false,
+    };
+    let addend = exact_of(&c);
+
+    // Record the alignment distance the shifter would traverse (clamped to
+    // the window, as the barrel shifter is).
+    if TRACK && c.sig != 0 && product.sig != 0 {
+        let structure = FmaStructure::derive(mul);
+        let d = addend.npos() - product.npos();
+        act.align_shift = d.unsigned_abs().min(structure.align_window);
+    }
+
+    let sum = if c.is_zero() {
+        // c = ±0: the product alone (sign rules live in add_exact when the
+        // product is also zero, but a zero product already early-outed).
+        product
+    } else {
+        add_exact(product, addend, mode)
+    };
+
+    // Normalization distance: how far the leading bit fell vs. the wider
+    // of the two inputs (cancellation depth) — drives LZA/normalizer
+    // energy.
+    if TRACK && sum.sig != 0 {
+        let in_npos = product.npos().max(addend.npos());
+        act.norm_shift = (in_npos - sum.npos()).max(0) as u32;
+    }
+
+    // 5. Single rounding.
+    let r = softfloat::round(fmt, mode, sum);
+    debug_assert_eq!(
+        r.bits,
+        softfloat::fma(fmt, mode, a_bits, b_bits, c_bits).bits,
+        "FMA datapath diverged from softfloat: a={a_bits:#x} b={b_bits:#x} c={c_bits:#x}"
+    );
+    (r, act)
+}
+
+fn exact_of(d: &Decoded) -> Exact {
+    debug_assert!(matches!(d.class, Class::Zero | Class::Subnormal | Class::Normal));
+    Exact::from_decoded(d)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::booth::BoothRadix;
+    use crate::arch::tree::TreeKind;
+
+    fn sp_cfg() -> MultiplierConfig {
+        MultiplierConfig { sig_bits: 24, booth: BoothRadix::Booth3, tree: TreeKind::Zm }
+    }
+
+    fn dp_cfg() -> MultiplierConfig {
+        MultiplierConfig { sig_bits: 53, booth: BoothRadix::Booth3, tree: TreeKind::Array }
+    }
+
+    #[test]
+    fn matches_hardware_fma_sp() {
+        let cfg = sp_cfg();
+        let vals = [0.0f32, -0.0, 1.0, -1.5, 3.14159, f32::MIN_POSITIVE, 2f32.powi(-140),
+                    f32::MAX, f32::INFINITY, f32::NAN, 1e-20, -2.5e10];
+        for &a in &vals {
+            for &b in &vals {
+                for &c in &vals {
+                    let (r, _) = fmac(
+                        Format::SP, &cfg, RoundMode::NearestEven,
+                        a.to_bits() as u64, b.to_bits() as u64, c.to_bits() as u64,
+                    );
+                    let got = f32::from_bits(r.bits as u32);
+                    let want = a.mul_add(b, c);
+                    assert!(
+                        (got.is_nan() && want.is_nan()) || got.to_bits() == want.to_bits(),
+                        "fma({a:e},{b:e},{c:e}) = {got:e} want {want:e}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn matches_hardware_fma_dp() {
+        let cfg = dp_cfg();
+        let vals = [0.0f64, 1.0, -1.0 - f64::EPSILON, 1e300, 1e-300, 2f64.powi(-1074),
+                    f64::MAX, -f64::MAX, 0.1, 7.0];
+        for &a in &vals {
+            for &b in &vals {
+                for &c in &vals {
+                    let (r, _) = fmac(
+                        Format::DP, &cfg, RoundMode::NearestEven,
+                        a.to_bits(), b.to_bits(), c.to_bits(),
+                    );
+                    let got = f64::from_bits(r.bits);
+                    let want = a.mul_add(b, c);
+                    assert!(
+                        (got.is_nan() && want.is_nan()) || got.to_bits() == want.to_bits(),
+                        "fma({a:e},{b:e},{c:e}) = {got:e} want {want:e}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn all_rounding_modes_agree_with_softfloat() {
+        let cfg = sp_cfg();
+        let triples = [(1.1f32, 2.3f32, -2.52f32), (1e-30, 1e-30, 1e10), (3.0, 1.0 / 3.0, -1.0)];
+        for mode in RoundMode::ALL {
+            for &(a, b, c) in &triples {
+                let (r, _) = fmac(Format::SP, &cfg, mode,
+                                  a.to_bits() as u64, b.to_bits() as u64, c.to_bits() as u64);
+                let want = softfloat::fma(Format::SP, mode,
+                                          a.to_bits() as u64, b.to_bits() as u64, c.to_bits() as u64);
+                assert_eq!(r.bits, want.bits, "mode {mode:?} ({a},{b},{c})");
+                assert_eq!(r.flags, want.flags);
+            }
+        }
+    }
+
+    #[test]
+    fn activity_reflects_dataflow() {
+        let cfg = sp_cfg();
+        // A special op does no datapath work.
+        let (_, act) = fmac(Format::SP, &cfg, RoundMode::NearestEven,
+                            f32::NAN.to_bits() as u64, 1, 1);
+        assert!(act.special);
+        assert_eq!(act.tree_fa_ops, 0);
+        // A zero multiplicand early-outs too (clock gating).
+        let (_, act) = fmac(Format::SP, &cfg, RoundMode::NearestEven,
+                            0, 0x3f80_0000, 0x3f80_0000);
+        assert!(act.special);
+        // Dense operands exercise the tree.
+        let (_, act) = fmac(Format::SP, &cfg, RoundMode::NearestEven,
+                            0x3fff_ffff, 0x3faa_aaaa, 0x3f80_0000);
+        assert!(!act.special);
+        assert!(act.tree_fa_ops > 0 && act.tree_toggles > 0);
+        assert_eq!(act.digits, 9);
+    }
+
+    #[test]
+    fn cancellation_records_norm_shift() {
+        let cfg = sp_cfg();
+        // 1·1 + (-(1+ε)) cancels ~23 bits.
+        let a = 1.0f32;
+        let c = -(1.0f32 + f32::EPSILON);
+        let (r, act) = fmac(Format::SP, &cfg, RoundMode::NearestEven,
+                            a.to_bits() as u64, a.to_bits() as u64, c.to_bits() as u64);
+        assert_eq!(f32::from_bits(r.bits as u32), -f32::EPSILON);
+        assert!(act.norm_shift >= 20, "norm_shift = {}", act.norm_shift);
+    }
+
+    #[test]
+    fn far_addend_records_large_align() {
+        let cfg = sp_cfg();
+        let (_, act) = fmac(Format::SP, &cfg, RoundMode::NearestEven,
+                            1.0f32.to_bits() as u64, 1.0f32.to_bits() as u64,
+                            2f32.powi(40).to_bits() as u64);
+        assert!(act.align_shift >= 30, "align_shift = {}", act.align_shift);
+    }
+
+    #[test]
+    fn structure_derivation() {
+        let s = FmaStructure::derive(&sp_cfg());
+        assert_eq!(s.align_window, 77);
+        assert_eq!(s.adder_width, 77);
+        assert_eq!(s.pp_count, 9);
+        let s = FmaStructure::derive(&dp_cfg());
+        assert_eq!(s.align_window, 164);
+        assert_eq!(s.pp_count, 18);
+        assert_eq!(s.tree_levels, 16);
+    }
+}

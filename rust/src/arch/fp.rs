@@ -1,0 +1,358 @@
+//! IEEE-754 binary interchange format codecs (SP / DP).
+//!
+//! Every datapath in this crate works on raw bit patterns (`u64`, with SP
+//! occupying the low 32 bits) so the same code drives both precisions —
+//! exactly how FPGen parameterizes its generated RTL over `(exp_bits,
+//! man_bits)`. This module owns unpacking to sign/exponent/significand
+//! triples, classification, and packing (including subnormal and
+//! overflow handling at encode time via [`crate::arch::rounding`]).
+
+
+/// Operand precision of a generated FPU.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Precision {
+    /// IEEE binary32.
+    Single,
+    /// IEEE binary64.
+    Double,
+}
+
+impl Precision {
+    /// The format descriptor for this precision.
+    pub fn format(self) -> Format {
+        match self {
+            Precision::Single => Format::SP,
+            Precision::Double => Format::DP,
+        }
+    }
+
+    /// Short lowercase name used in reports and artifact paths.
+    pub fn name(self) -> &'static str {
+        match self {
+            Precision::Single => "sp",
+            Precision::Double => "dp",
+        }
+    }
+}
+
+/// An IEEE-754 binary format described by its field widths.
+///
+/// `sig_bits` counts the significand *including* the hidden bit (24 for SP,
+/// 53 for DP), matching the width of the datapath's significand buses.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct Format {
+    /// Exponent field width in bits.
+    pub exp_bits: u32,
+    /// Significand width in bits, including the hidden bit.
+    pub sig_bits: u32,
+}
+
+impl Format {
+    /// IEEE binary32.
+    pub const SP: Format = Format { exp_bits: 8, sig_bits: 24 };
+    /// IEEE binary64.
+    pub const DP: Format = Format { exp_bits: 11, sig_bits: 53 };
+
+    /// Total storage width (1 + exp + fraction).
+    pub const fn width(&self) -> u32 {
+        1 + self.exp_bits + self.sig_bits - 1
+    }
+
+    /// Exponent bias.
+    pub const fn bias(&self) -> i32 {
+        (1 << (self.exp_bits - 1)) - 1
+    }
+
+    /// Maximum biased exponent value (all ones; Inf/NaN marker).
+    pub const fn emax_biased(&self) -> u64 {
+        (1 << self.exp_bits) - 1
+    }
+
+    /// Minimum normal (unbiased) exponent of the *value's* MSB, e.g. -126
+    /// for SP.
+    pub const fn emin(&self) -> i32 {
+        1 - self.bias()
+    }
+
+    /// Maximum normal (unbiased) exponent of the value's MSB, e.g. 127 for
+    /// SP.
+    pub const fn emax(&self) -> i32 {
+        self.bias()
+    }
+
+    /// Exponent of the least significant bit of subnormals (the minimum
+    /// quantum), e.g. -149 for SP.
+    pub const fn qmin(&self) -> i32 {
+        self.emin() - (self.sig_bits as i32 - 1)
+    }
+
+    /// Fraction-field mask.
+    pub const fn frac_mask(&self) -> u64 {
+        (1u64 << (self.sig_bits - 1)) - 1
+    }
+
+    /// Hidden-bit position value.
+    pub const fn hidden_bit(&self) -> u64 {
+        1u64 << (self.sig_bits - 1)
+    }
+
+    /// Mask of all storage bits.
+    pub const fn storage_mask(&self) -> u64 {
+        if self.width() == 64 {
+            u64::MAX
+        } else {
+            (1u64 << self.width()) - 1
+        }
+    }
+
+    /// Sign-bit position value.
+    pub const fn sign_bit(&self) -> u64 {
+        1u64 << (self.width() - 1)
+    }
+
+    /// The canonical quiet NaN (sign 0, exponent all-ones, MSB of fraction
+    /// set) — what the datapaths emit for any invalid operation.
+    pub const fn qnan(&self) -> u64 {
+        (self.emax_biased() << (self.sig_bits - 1)) | (1u64 << (self.sig_bits - 2))
+    }
+
+    /// Positive infinity bit pattern.
+    pub const fn inf(&self, sign: bool) -> u64 {
+        let mag = self.emax_biased() << (self.sig_bits - 1);
+        if sign {
+            mag | self.sign_bit()
+        } else {
+            mag
+        }
+    }
+
+    /// Largest finite magnitude (used by directed rounding on overflow).
+    pub const fn max_finite(&self, sign: bool) -> u64 {
+        let mag = ((self.emax_biased() - 1) << (self.sig_bits - 1)) | self.frac_mask();
+        if sign {
+            mag | self.sign_bit()
+        } else {
+            mag
+        }
+    }
+
+    /// Zero of the given sign.
+    pub const fn zero(&self, sign: bool) -> u64 {
+        if sign {
+            self.sign_bit()
+        } else {
+            0
+        }
+    }
+}
+
+/// Classification of a decoded operand.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Class {
+    Zero,
+    Subnormal,
+    Normal,
+    Infinity,
+    Nan,
+}
+
+/// A decoded floating-point operand.
+///
+/// For finite nonzero values, `value = (-1)^sign × sig × 2^exp` exactly,
+/// with `sig` the integer significand (hidden bit included for normals).
+/// `exp` is the exponent of the significand's **LSB**, not of the value's
+/// MSB — this is the natural fixed-point view the datapath buses use.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Decoded {
+    pub sign: bool,
+    /// Exponent of the significand LSB (value = sig · 2^exp).
+    pub exp: i32,
+    /// Integer significand; in `[2^(sig_bits-1), 2^sig_bits)` for normals,
+    /// `(0, 2^(sig_bits-1))` for subnormals, `0` for zeros.
+    pub sig: u64,
+    pub class: Class,
+}
+
+impl Decoded {
+    /// True for Inf or NaN.
+    pub fn non_finite(&self) -> bool {
+        matches!(self.class, Class::Infinity | Class::Nan)
+    }
+
+    /// True for +0 or -0.
+    pub fn is_zero(&self) -> bool {
+        self.class == Class::Zero
+    }
+}
+
+/// Decode a raw bit pattern in `fmt` into sign/exponent/significand.
+#[inline(always)]
+pub fn decode(fmt: Format, bits: u64) -> Decoded {
+    let bits = bits & fmt.storage_mask();
+    let sign = bits & fmt.sign_bit() != 0;
+    let biased = (bits >> (fmt.sig_bits - 1)) & fmt.emax_biased();
+    let frac = bits & fmt.frac_mask();
+    if biased == fmt.emax_biased() {
+        let class = if frac == 0 { Class::Infinity } else { Class::Nan };
+        return Decoded { sign, exp: 0, sig: frac, class };
+    }
+    if biased == 0 {
+        if frac == 0 {
+            return Decoded { sign, exp: 0, sig: 0, class: Class::Zero };
+        }
+        // Subnormal: hidden bit absent, exponent pinned at emin.
+        return Decoded { sign, exp: fmt.qmin(), sig: frac, class: Class::Subnormal };
+    }
+    Decoded {
+        sign,
+        exp: biased as i32 - fmt.bias() - (fmt.sig_bits as i32 - 1),
+        sig: frac | fmt.hidden_bit(),
+        class: Class::Normal,
+    }
+}
+
+/// Encode a *normalized* finite result back to bits.
+///
+/// `sig` must already sit in the canonical range for its class (this is
+/// what [`crate::arch::rounding::round_to_format`] produces); `exp` is the
+/// LSB exponent. Panics on out-of-range inputs — rounding owns range
+/// reduction, encoding must be exact.
+pub fn encode_finite(fmt: Format, sign: bool, exp: i32, sig: u64) -> u64 {
+    let s = if sign { fmt.sign_bit() } else { 0 };
+    if sig == 0 {
+        return s;
+    }
+    assert!(sig < (1u64 << fmt.sig_bits), "significand overflows format");
+    if sig & fmt.hidden_bit() == 0 {
+        // Subnormal: exponent must be pinned at qmin.
+        assert_eq!(exp, fmt.qmin(), "subnormal significand at wrong exponent");
+        return s | sig;
+    }
+    let biased = exp + fmt.bias() + (fmt.sig_bits as i32 - 1);
+    assert!(
+        biased >= 1 && (biased as u64) < fmt.emax_biased(),
+        "exponent {biased} out of range"
+    );
+    s | ((biased as u64) << (fmt.sig_bits - 1)) | (sig & fmt.frac_mask())
+}
+
+/// Number of significant bits in `x` (position of MSB + 1; 0 for 0).
+#[inline]
+pub fn bitlen64(x: u64) -> u32 {
+    64 - x.leading_zeros()
+}
+
+/// Number of significant bits in `x` (u128 variant).
+#[inline]
+pub fn bitlen128(x: u128) -> u32 {
+    128 - x.leading_zeros()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn format_constants_sp() {
+        let f = Format::SP;
+        assert_eq!(f.width(), 32);
+        assert_eq!(f.bias(), 127);
+        assert_eq!(f.emin(), -126);
+        assert_eq!(f.emax(), 127);
+        assert_eq!(f.qmin(), -149);
+        assert_eq!(f.hidden_bit(), 1 << 23);
+        assert_eq!(f.frac_mask(), (1 << 23) - 1);
+        assert_eq!(f.sign_bit(), 1 << 31);
+        assert_eq!(f.inf(false), 0x7f80_0000);
+        assert_eq!(f.inf(true), 0xff80_0000);
+        assert_eq!(f.qnan(), 0x7fc0_0000);
+        assert_eq!(f.max_finite(false), 0x7f7f_ffff);
+    }
+
+    #[test]
+    fn format_constants_dp() {
+        let f = Format::DP;
+        assert_eq!(f.width(), 64);
+        assert_eq!(f.bias(), 1023);
+        assert_eq!(f.emin(), -1022);
+        assert_eq!(f.qmin(), -1074);
+        assert_eq!(f.inf(false), 0x7ff0_0000_0000_0000);
+        assert_eq!(f.qnan(), 0x7ff8_0000_0000_0000);
+        assert_eq!(f.max_finite(true), 0xffef_ffff_ffff_ffff);
+        assert_eq!(f.storage_mask(), u64::MAX);
+    }
+
+    #[test]
+    fn decode_classes_sp() {
+        let f = Format::SP;
+        assert_eq!(decode(f, 0).class, Class::Zero);
+        assert_eq!(decode(f, f.sign_bit()).class, Class::Zero);
+        assert!(decode(f, f.sign_bit()).sign);
+        assert_eq!(decode(f, 1).class, Class::Subnormal);
+        assert_eq!(decode(f, 0x0070_0000).class, Class::Subnormal);
+        assert_eq!(decode(f, 0x3f80_0000).class, Class::Normal);
+        assert_eq!(decode(f, 0x7f80_0000).class, Class::Infinity);
+        assert_eq!(decode(f, 0x7fc0_0000).class, Class::Nan);
+        assert_eq!(decode(f, 0xff80_0001).class, Class::Nan);
+    }
+
+    #[test]
+    fn decode_value_semantics() {
+        let f = Format::SP;
+        // 1.0f32: sig = 2^23, exp = -23 → 2^23 · 2^-23 = 1.
+        let d = decode(f, 1.0f32.to_bits() as u64);
+        assert_eq!(d.sig, 1 << 23);
+        assert_eq!(d.exp, -23);
+        // 3.0f32 = 1.5 · 2 = (3·2^22) · 2^-22.
+        let d = decode(f, 3.0f32.to_bits() as u64);
+        assert_eq!(d.sig, 3 << 22);
+        assert_eq!(d.exp, -22);
+        // Smallest subnormal = 2^-149.
+        let d = decode(f, 1);
+        assert_eq!(d.sig, 1);
+        assert_eq!(d.exp, -149);
+    }
+
+    #[test]
+    fn decode_encode_roundtrip_exhaustive_exponents() {
+        // Every exponent with a few fraction patterns, both signs, both fmts.
+        for fmt in [Format::SP, Format::DP] {
+            for e in 0..fmt.emax_biased() {
+                for frac in [0u64, 1, fmt.frac_mask() / 2, fmt.frac_mask()] {
+                    for sign in [false, true] {
+                        let bits = (if sign { fmt.sign_bit() } else { 0 })
+                            | (e << (fmt.sig_bits - 1))
+                            | frac;
+                        let d = decode(fmt, bits);
+                        if d.class == Class::Zero {
+                            assert_eq!(fmt.zero(d.sign), bits);
+                            continue;
+                        }
+                        let back = encode_finite(fmt, d.sign, d.exp, d.sig);
+                        assert_eq!(back, bits, "fmt={fmt:?} e={e} frac={frac:#x}");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn decoded_value_matches_f64_semantics() {
+        // Rescale tiny values so 2^exp stays in f64's normal range (2^exp
+        // for exp < -1022 would lose bits as a subnormal).
+        for x in [1.0f64, -2.5, 6.02e23, 1e-250] {
+            let d = decode(Format::DP, x.to_bits());
+            let v = (d.sig as f64) * 2f64.powi(d.exp + 500) * if d.sign { -1.0 } else { 1.0 };
+            assert_eq!(v, x * 2f64.powi(500));
+        }
+    }
+
+    #[test]
+    fn bitlen_helpers() {
+        assert_eq!(bitlen64(0), 0);
+        assert_eq!(bitlen64(1), 1);
+        assert_eq!(bitlen64(u64::MAX), 64);
+        assert_eq!(bitlen128(1u128 << 100), 101);
+        assert_eq!(bitlen128(0), 0);
+    }
+}

@@ -1,0 +1,427 @@
+//! The FPGen-equivalent generator: an [`FpuConfig`] — the same parameter
+//! vector the paper's Table I reports per unit — is elaborated into an
+//! [`FpuUnit`] whose numerics are bit-exact and whose
+//! [`StructureReport`] feeds the timing and energy models.
+//!
+//! The four presets ([`FpuConfig::sp_fma`] etc.) are the fabricated FPMax
+//! units; the DSE sweep in [`crate::dse`] explores the surrounding
+//! parameter space exactly the way Fig. 3's triangle-marked curve was
+//! produced.
+
+
+use super::booth::BoothRadix;
+use super::cma::{self, CmaStructure};
+use super::fma::{self, FmaActivity, FmaStructure};
+use super::fp::{Format, Precision};
+use super::multiplier::MultiplierConfig;
+use super::rounding::{RoundMode, Rounded};
+use super::tree::TreeKind;
+
+/// FMAC organization: fused (one rounding) or cascade (two roundings,
+/// short accumulation path).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum FpuKind {
+    Fma,
+    Cma,
+}
+
+impl FpuKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            FpuKind::Fma => "FMA",
+            FpuKind::Cma => "CMA",
+        }
+    }
+}
+
+/// The generator's full parameter vector (one row of Table I).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct FpuConfig {
+    pub precision: Precision,
+    pub kind: FpuKind,
+    pub booth: BoothRadix,
+    pub tree: TreeKind,
+    /// Total pipeline stages (issue → writeback).
+    pub stages: u32,
+    /// Multiplier pipeline depth (stages before the add/merge).
+    pub mul_pipe: u32,
+    /// Adder pipeline depth (CMA only; the FMA merge is folded into the
+    /// post-multiplier stages).
+    pub add_pipe: u32,
+    /// Internal before-rounding forwarding (Fig. 2's bypasses).
+    pub forwarding: bool,
+}
+
+impl FpuConfig {
+    /// Table I, column "DP CMA": 5 stages, mul 2 + add 2 (+1 round),
+    /// Booth-3, Wallace.
+    pub fn dp_cma() -> FpuConfig {
+        FpuConfig {
+            precision: Precision::Double,
+            kind: FpuKind::Cma,
+            booth: BoothRadix::Booth3,
+            tree: TreeKind::Wallace,
+            stages: 5,
+            mul_pipe: 2,
+            add_pipe: 2,
+            forwarding: true,
+        }
+    }
+
+    /// Table I, column "DP FMA": 6 stages, mul 2, Booth-3, array.
+    pub fn dp_fma() -> FpuConfig {
+        FpuConfig {
+            precision: Precision::Double,
+            kind: FpuKind::Fma,
+            booth: BoothRadix::Booth3,
+            tree: TreeKind::Array,
+            stages: 6,
+            mul_pipe: 2,
+            add_pipe: 0,
+            forwarding: true,
+        }
+    }
+
+    /// Table I, column "SP CMA": 6 stages (deeper, faster clock), mul 3 +
+    /// add 2 (+1 round), Booth-2 (short cycle forbids the ×3 pre-add),
+    /// Wallace.
+    pub fn sp_cma() -> FpuConfig {
+        FpuConfig {
+            precision: Precision::Single,
+            kind: FpuKind::Cma,
+            booth: BoothRadix::Booth2,
+            tree: TreeKind::Wallace,
+            stages: 6,
+            mul_pipe: 3,
+            add_pipe: 2,
+            forwarding: true,
+        }
+    }
+
+    /// Table I, column "SP FMA": 4 stages, mul 2, Booth-3, ZM tree.
+    pub fn sp_fma() -> FpuConfig {
+        FpuConfig {
+            precision: Precision::Single,
+            kind: FpuKind::Fma,
+            booth: BoothRadix::Booth3,
+            tree: TreeKind::Zm,
+            stages: 4,
+            mul_pipe: 2,
+            add_pipe: 0,
+            forwarding: true,
+        }
+    }
+
+    /// The four fabricated units in Table I order.
+    pub fn fpmax_units() -> [FpuConfig; 4] {
+        [Self::dp_cma(), Self::dp_fma(), Self::sp_cma(), Self::sp_fma()]
+    }
+
+    /// Unit name as in Table I ("SP FMA" etc.).
+    pub fn name(&self) -> String {
+        format!("{} {}", self.precision.name().to_uppercase(), self.kind.name())
+    }
+
+    /// The multiplier slice of this configuration.
+    pub fn multiplier(&self) -> MultiplierConfig {
+        MultiplierConfig {
+            sig_bits: self.precision.format().sig_bits,
+            booth: self.booth,
+            tree: self.tree,
+        }
+    }
+
+    /// Basic well-formedness: pipe depths must fit in the stage budget.
+    pub fn validate(&self) -> crate::Result<()> {
+        let min = match self.kind {
+            // mul + merge/add + round, at least one stage each.
+            FpuKind::Fma => self.mul_pipe + 2,
+            FpuKind::Cma => self.mul_pipe + self.add_pipe + 1,
+        };
+        if self.stages < min {
+            anyhow::bail!("{}: {} stages < minimum {min} for its organization", self.name(), self.stages);
+        }
+        if self.mul_pipe == 0 || (self.kind == FpuKind::Cma && self.add_pipe == 0) {
+            anyhow::bail!("{}: zero-depth functional block", self.name());
+        }
+        Ok(())
+    }
+}
+
+/// Structural summary the timing/energy models consume — every number is
+/// derived from the config, never free-floating.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct StructureReport {
+    /// Significand width m.
+    pub sig_bits: u32,
+    /// Booth partial products.
+    pub pp_count: u32,
+    /// Whether a ×3 pre-adder exists.
+    pub has_triple_adder: bool,
+    /// Reduction-tree depth in 3:2 levels.
+    pub tree_levels: u32,
+    /// Total 3:2 cells in the tree: (n−2)·window (topology-independent).
+    pub tree_cells: u64,
+    /// Multiplier window width (2m+2).
+    pub mul_window: u32,
+    /// Significand-add datapath width (3m+5 for FMA merge, m+4 for CMA).
+    pub adder_width: u32,
+    /// LZA/normalizer scan width.
+    pub lza_width: u32,
+    /// Rounder count (FMA 1, CMA 2).
+    pub rounders: u32,
+    /// Total pipeline registers (bits), estimated per cut datapath width.
+    pub register_bits: u64,
+    /// Pipeline stages.
+    pub stages: u32,
+    /// Wiring irregularity factor of the tree.
+    pub wiring_factor: f64,
+}
+
+/// A generated FPU instance.
+#[derive(Debug, Clone)]
+pub struct FpuUnit {
+    pub config: FpuConfig,
+    pub format: Format,
+    mul_cfg: MultiplierConfig,
+    structure: StructureReport,
+}
+
+impl FpuUnit {
+    /// Elaborate a configuration — FPGen's "generate" step.
+    pub fn generate(config: &FpuConfig) -> FpuUnit {
+        let format = config.precision.format();
+        let mul_cfg = config.multiplier();
+        let m = format.sig_bits;
+        let n = mul_cfg.pp_count();
+        let window = mul_cfg.window();
+        let (adder_width, lza_width, rounders) = match config.kind {
+            FpuKind::Fma => {
+                let s = FmaStructure::derive(&mul_cfg);
+                (s.adder_width, s.lza_width, 1)
+            }
+            FpuKind::Cma => {
+                let s = CmaStructure::derive(&mul_cfg);
+                (s.adder_width, m + 4, s.rounders)
+            }
+        };
+        // Pipeline registers: each stage cut latches roughly the live
+        // datapath width at that point. Multiplier cuts hold the
+        // carry-save pair (2·window); add/normalize cuts hold the adder
+        // width; the final cut holds the packed result.
+        let mul_cut_bits = 2 * window as u64;
+        let add_cut_bits = adder_width as u64;
+        let cuts_mul = config.mul_pipe as u64;
+        let cuts_rest = (config.stages - config.mul_pipe) as u64;
+        let register_bits =
+            cuts_mul * mul_cut_bits + cuts_rest * add_cut_bits + format.width() as u64;
+        let structure = StructureReport {
+            sig_bits: m,
+            pp_count: n,
+            has_triple_adder: mul_cfg.booth.needs_triple(),
+            tree_levels: mul_cfg.tree_depth(),
+            tree_cells: (n.saturating_sub(2) as u64) * window as u64,
+            mul_window: window,
+            adder_width,
+            lza_width,
+            rounders,
+            register_bits,
+            stages: config.stages,
+            wiring_factor: config.tree.wiring_factor(),
+        };
+        FpuUnit { config: *config, format, mul_cfg, structure }
+    }
+
+    /// The structural report (static; independent of operands).
+    pub fn structure(&self) -> &StructureReport {
+        &self.structure
+    }
+
+    /// The multiplier configuration in use.
+    pub fn multiplier_config(&self) -> &MultiplierConfig {
+        &self.mul_cfg
+    }
+
+    /// Execute one FMAC (`a·b + c`) in round-to-nearest-even — the
+    /// verification hot path: activity tracking is compiled out.
+    #[inline]
+    pub fn fmac(&self, a: u64, b: u64, c: u64) -> Rounded {
+        match self.config.kind {
+            FpuKind::Fma => {
+                fma::fmac_t::<false>(self.format, &self.mul_cfg, RoundMode::NearestEven, a, b, c).0
+            }
+            FpuKind::Cma => {
+                cma::fmac_t::<false>(self.format, &self.mul_cfg, RoundMode::NearestEven, a, b, c)
+                    .0
+                    .result
+            }
+        }
+    }
+
+    /// Execute one FMAC in an explicit rounding mode, with activity.
+    pub fn fmac_mode(&self, mode: RoundMode, a: u64, b: u64, c: u64) -> (Rounded, FmaActivity) {
+        match self.config.kind {
+            FpuKind::Fma => fma::fmac(self.format, &self.mul_cfg, mode, a, b, c),
+            FpuKind::Cma => {
+                let (r, act) = cma::fmac(self.format, &self.mul_cfg, mode, a, b, c);
+                (r.result, act)
+            }
+        }
+    }
+
+    // ---- Latency taps for the pipeline simulator (in cycles) ----------
+    //
+    // Fig. 2(a,b): a producer issued at cycle 0 writes back at `stages`;
+    // consumers can enter earlier through the bypass network.
+
+    /// Full (rounded, written-back) result latency.
+    pub fn latency_full(&self) -> u32 {
+        self.config.stages
+    }
+
+    /// Earliest issue-to-issue distance when the consumer uses the result
+    /// as its **addend/accumulator** input.
+    pub fn latency_to_add_input(&self) -> u32 {
+        match (self.config.kind, self.config.forwarding) {
+            // CMA bypass: unrounded sum at stage mul+add feeds the adder
+            // input (stage mul+1) of the dependent op → distance add_pipe.
+            (FpuKind::Cma, true) => self.config.add_pipe,
+            // FMA bypass: unrounded result one stage early, consumed at
+            // issue (the merge happens after the multiply, but the operand
+            // enters the alignment at issue).
+            (FpuKind::Fma, true) => self.config.stages - 1,
+            _ => self.config.stages,
+        }
+    }
+
+    /// Earliest issue-to-issue distance when the consumer uses the result
+    /// as a **multiplier** input.
+    pub fn latency_to_mul_input(&self) -> u32 {
+        match (self.config.kind, self.config.forwarding) {
+            // CMA bypass to the multiplier input: unrounded sum at stage
+            // mul+add feeds stage 1 → distance mul+add.
+            (FpuKind::Cma, true) => self.config.mul_pipe + self.config.add_pipe,
+            (FpuKind::Fma, true) => self.config.stages - 1,
+            _ => self.config.stages,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_match_table1() {
+        let dp_cma = FpuConfig::dp_cma();
+        assert_eq!(dp_cma.stages, 5);
+        assert_eq!(dp_cma.mul_pipe, 2);
+        assert_eq!(dp_cma.add_pipe, 2);
+        assert_eq!(dp_cma.booth, BoothRadix::Booth3);
+        assert_eq!(dp_cma.tree, TreeKind::Wallace);
+        assert_eq!(dp_cma.name(), "DP CMA");
+
+        let sp_cma = FpuConfig::sp_cma();
+        assert_eq!(sp_cma.stages, 6);
+        assert_eq!(sp_cma.mul_pipe, 3);
+        assert_eq!(sp_cma.booth, BoothRadix::Booth2);
+
+        let sp_fma = FpuConfig::sp_fma();
+        assert_eq!(sp_fma.stages, 4);
+        assert_eq!(sp_fma.tree, TreeKind::Zm);
+        assert_eq!(sp_fma.name(), "SP FMA");
+
+        let dp_fma = FpuConfig::dp_fma();
+        assert_eq!(dp_fma.stages, 6);
+        assert_eq!(dp_fma.tree, TreeKind::Array);
+
+        for cfg in FpuConfig::fpmax_units() {
+            cfg.validate().unwrap();
+        }
+    }
+
+    #[test]
+    fn invalid_configs_rejected() {
+        let mut bad = FpuConfig::sp_fma();
+        bad.stages = 2; // less than mul_pipe + 2
+        assert!(bad.validate().is_err());
+        let mut bad = FpuConfig::dp_cma();
+        bad.add_pipe = 0;
+        assert!(bad.validate().is_err());
+    }
+
+    #[test]
+    fn all_units_compute_their_ieee_semantics() {
+        // FMA units: fused semantics; CMA units: cascade semantics.
+        let triples = [
+            (1.5f32, 2.0f32, 0.25f32),
+            (0.1, 10.0, -1.0),
+            (1.0 + 2f32.powi(-12), 1.0 + 2f32.powi(-12), -(1.0 + 2f32.powi(-11))),
+        ];
+        let sp_fma = FpuUnit::generate(&FpuConfig::sp_fma());
+        let sp_cma = FpuUnit::generate(&FpuConfig::sp_cma());
+        for &(a, b, c) in &triples {
+            let fused = f32::from_bits(
+                sp_fma.fmac(a.to_bits() as u64, b.to_bits() as u64, c.to_bits() as u64).bits as u32,
+            );
+            assert_eq!(fused, a.mul_add(b, c));
+            let casc = f32::from_bits(
+                sp_cma.fmac(a.to_bits() as u64, b.to_bits() as u64, c.to_bits() as u64).bits as u32,
+            );
+            assert_eq!(casc, a * b + c);
+        }
+    }
+
+    #[test]
+    fn latency_taps_match_fig2() {
+        // DP CMA (Fig. 2(a)): accumulate distance 2, multiply distance 4,
+        // full 5.
+        let u = FpuUnit::generate(&FpuConfig::dp_cma());
+        assert_eq!(u.latency_full(), 5);
+        assert_eq!(u.latency_to_add_input(), 2);
+        assert_eq!(u.latency_to_mul_input(), 4);
+        // The comparison FMAs of Fig. 2(c): 5-cycle FMA w/ fwd → 4; w/o → 5.
+        let mut fma5 = FpuConfig::dp_fma();
+        fma5.stages = 5;
+        let u = FpuUnit::generate(&fma5);
+        assert_eq!(u.latency_to_add_input(), 4);
+        assert_eq!(u.latency_to_mul_input(), 4);
+        let mut fma5_nofwd = fma5;
+        fma5_nofwd.forwarding = false;
+        let u = FpuUnit::generate(&fma5_nofwd);
+        assert_eq!(u.latency_to_add_input(), 5);
+    }
+
+    #[test]
+    fn structure_report_consistency() {
+        for cfg in FpuConfig::fpmax_units() {
+            let u = FpuUnit::generate(&cfg);
+            let s = u.structure();
+            assert_eq!(s.stages, cfg.stages);
+            assert_eq!(s.pp_count, cfg.booth.digit_count(s.sig_bits));
+            assert_eq!(s.has_triple_adder, cfg.booth.needs_triple());
+            assert!(s.register_bits > 0);
+            match cfg.kind {
+                FpuKind::Fma => {
+                    assert_eq!(s.rounders, 1);
+                    assert_eq!(s.adder_width, 3 * s.sig_bits + 5);
+                }
+                FpuKind::Cma => {
+                    assert_eq!(s.rounders, 2);
+                    assert_eq!(s.adder_width, s.sig_bits + 4);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn fma_structure_smaller_registers_sp() {
+        // The SP FMA is the smallest unit in Table I (0.0081 mm² vs 0.018
+        // for SP CMA): fewer stages and fewer PPs ⇒ fewer register bits
+        // and tree cells.
+        let fma = FpuUnit::generate(&FpuConfig::sp_fma());
+        let cma = FpuUnit::generate(&FpuConfig::sp_cma());
+        assert!(fma.structure().tree_cells < cma.structure().tree_cells);
+        assert!(fma.structure().register_bits < cma.structure().register_bits);
+    }
+}

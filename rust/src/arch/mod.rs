@@ -1,0 +1,42 @@
+//! FPU microarchitecture substrate: the FPGen-equivalent generator and
+//! everything it composes.
+//!
+//! The module mirrors the structure of a generated FMAC:
+//!
+//! ```text
+//!           a ──┐            ┌── c
+//!           b ──┤            │
+//!      ┌────────▼────────┐   │
+//!      │ booth  (PP gen) │   │
+//!      ├─────────────────┤   │
+//!      │ tree (CSA reduce)│  │      multiplier  = booth + tree + CPA
+//!      ├─────────────────┤   │
+//!      │ CPA / keep CS   │   │
+//!      └────────┬────────┘   │
+//!        FMA: 3:2 merge ◄────┘      CMA: round, then a separate adder
+//!               │
+//!        LZA + normalize
+//!               │
+//!        round + pack            (shared: rounding.rs)
+//! ```
+//!
+//! [`FpuUnit::generate`] plays the role of FPGen: it takes an
+//! [`FpuConfig`] (precision, FMA-vs-CMA, booth radix, reduction tree,
+//! pipeline depths) and returns a unit whose *numerics* are bit-exact
+//! IEEE-754 and whose *structure report* feeds the timing and energy
+//! models.
+
+pub mod booth;
+pub mod cma;
+pub mod csa;
+pub mod fma;
+pub mod fp;
+pub mod generator;
+pub mod multiplier;
+pub mod rounding;
+pub mod softfloat;
+pub mod tree;
+
+pub use fp::{decode, encode_finite, Class, Decoded, Format, Precision};
+pub use generator::{FpuConfig, FpuKind, FpuUnit, StructureReport};
+pub use rounding::{Flags, RoundMode, Rounded};

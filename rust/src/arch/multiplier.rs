@@ -1,0 +1,186 @@
+//! The significand multiplier: Booth recoder + partial-product array +
+//! reduction tree + (optional) final carry-propagate adder.
+//!
+//! This is the block FPGen varies most between the four FPMax units, and
+//! the dominant area/energy term of every FMAC. The multiplier produces
+//! its result in **carry-save form** so the FMA datapath can merge the
+//! addend before any carry propagation; the CMA's multiplier resolves
+//! through its own CPA and rounder instead.
+
+
+use super::booth::{BoothRadix, PpStats};
+use super::csa::{CarrySave, CsaStats};
+use super::tree::TreeKind;
+
+/// Static multiplier configuration (a slice of [`crate::arch::FpuConfig`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct MultiplierConfig {
+    /// Significand width in bits (24 for SP, 53 for DP).
+    pub sig_bits: u32,
+    pub booth: BoothRadix,
+    pub tree: TreeKind,
+}
+
+impl MultiplierConfig {
+    /// Number of partial products the Booth stage emits.
+    pub fn pp_count(&self) -> u32 {
+        self.booth.digit_count(self.sig_bits)
+    }
+
+    /// Window width of the PP array / tree datapath: the full product plus
+    /// two guard bits for the Booth negate carries.
+    pub fn window(&self) -> u32 {
+        2 * self.sig_bits + 2
+    }
+
+    /// Reduction-tree depth in 3:2 levels.
+    pub fn tree_depth(&self) -> u32 {
+        self.tree.depth_levels(self.pp_count())
+    }
+}
+
+/// Dynamic per-operation result: the product in carry-save form plus the
+/// activity observed while computing it.
+#[derive(Debug, Clone, Copy)]
+pub struct MulResult {
+    /// Redundant product; `resolve(window)` yields the exact product.
+    pub cs: CarrySave,
+    /// Booth-stage statistics for this operand pair.
+    pub pp_stats: PpStats,
+    /// Tree statistics for this operand pair.
+    pub tree_stats: CsaStats,
+}
+
+impl MulResult {
+    /// Resolve the carry-save product through the CPA.
+    pub fn product(&self, cfg: &MultiplierConfig) -> u128 {
+        self.cs.resolve(cfg.window())
+    }
+}
+
+/// Multiply two unsigned significands through the configured structure.
+///
+/// The result is exact: Booth recoding and carry-save reduction are
+/// lossless mod 2^window, and the window is wide enough for the full
+/// product (asserted in debug builds).
+pub fn multiply(cfg: &MultiplierConfig, x: u64, y: u64) -> MulResult {
+    multiply_t::<true>(cfg, x, y)
+}
+
+/// Multiplication generic over activity tracking: the verification hot
+/// path (`FpuUnit::fmac`) uses `TRACK = false`, which compiles out the
+/// Booth digit statistics and every CSA toggle count.
+#[inline(always)]
+pub fn multiply_t<const TRACK: bool>(cfg: &MultiplierConfig, x: u64, y: u64) -> MulResult {
+    let width = cfg.window();
+    // Size the PP buffer to the configuration (zero-initializing the full
+    // 28-slot worst case costs ~15% on the 9-PP SP hot path).
+    let (cs, pp_stats, tree_stats) = if cfg.pp_count() <= 18 {
+        multiply_inner::<TRACK, 18>(cfg, x, y, width)
+    } else {
+        multiply_inner::<TRACK, { crate::arch::booth::MAX_PPS }>(cfg, x, y, width)
+    };
+    let out = MulResult { cs, pp_stats, tree_stats };
+    debug_assert_eq!(
+        out.product(cfg),
+        x as u128 * y as u128,
+        "structural multiplier diverged from x·y: cfg={cfg:?} x={x:#x} y={y:#x}"
+    );
+    out
+}
+
+#[inline(always)]
+fn multiply_inner<const TRACK: bool, const CAP: usize>(
+    cfg: &MultiplierConfig,
+    x: u64,
+    y: u64,
+    width: u32,
+) -> (CarrySave, PpStats, CsaStats) {
+    let mut buf = [0u128; CAP];
+    let (n, pp_stats) =
+        crate::arch::booth::partial_products_into(x, y, cfg.sig_bits, cfg.booth, width, &mut buf);
+    let mut tree_stats = CsaStats::default();
+    let cs = cfg.tree.reduce_t::<TRACK>(&buf[..n], width, &mut tree_stats);
+    (cs, pp_stats, tree_stats)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn all_configs(sig_bits: u32) -> Vec<MultiplierConfig> {
+        let mut v = Vec::new();
+        for booth in [BoothRadix::Booth2, BoothRadix::Booth3] {
+            for tree in [TreeKind::Wallace, TreeKind::Array, TreeKind::Zm] {
+                v.push(MultiplierConfig { sig_bits, booth, tree });
+            }
+        }
+        v
+    }
+
+    #[test]
+    fn exact_products_sp() {
+        let vals = [0u64, 1, 2, (1 << 23), (1 << 24) - 1, 0x00c0_ffee, 0x00ab_cdef];
+        for cfg in all_configs(24) {
+            for &x in &vals {
+                for &y in &vals {
+                    let r = multiply(&cfg, x, y);
+                    assert_eq!(r.product(&cfg), x as u128 * y as u128, "{cfg:?}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn exact_products_dp() {
+        let m53 = (1u64 << 53) - 1;
+        let vals = [0u64, 1, 1 << 52, m53, 0x0015_5555_5555_5555, 0x001f_0f0f_0f0f_0f0f & m53];
+        for cfg in all_configs(53) {
+            for &x in &vals {
+                for &y in &vals {
+                    let r = multiply(&cfg, x, y);
+                    assert_eq!(r.product(&cfg), x as u128 * y as u128, "{cfg:?}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn paper_configurations_structure() {
+        // SP FMA: Booth-3 + ZM over 9 PPs.
+        let sp_fma = MultiplierConfig { sig_bits: 24, booth: BoothRadix::Booth3, tree: TreeKind::Zm };
+        assert_eq!(sp_fma.pp_count(), 9);
+        assert_eq!(sp_fma.window(), 50);
+        // SP CMA: Booth-2 + Wallace over 13 PPs, depth 5.
+        let sp_cma = MultiplierConfig { sig_bits: 24, booth: BoothRadix::Booth2, tree: TreeKind::Wallace };
+        assert_eq!(sp_cma.pp_count(), 13);
+        assert_eq!(sp_cma.tree_depth(), 5);
+        // DP CMA: Booth-3 + Wallace over 18 PPs, depth 6.
+        let dp_cma = MultiplierConfig { sig_bits: 53, booth: BoothRadix::Booth3, tree: TreeKind::Wallace };
+        assert_eq!(dp_cma.pp_count(), 18);
+        assert_eq!(dp_cma.tree_depth(), 6);
+        // DP FMA: Booth-3 + Array over 18 PPs, depth 16.
+        let dp_fma = MultiplierConfig { sig_bits: 53, booth: BoothRadix::Booth3, tree: TreeKind::Array };
+        assert_eq!(dp_fma.tree_depth(), 16);
+    }
+
+    #[test]
+    fn booth3_smaller_tree_than_booth2() {
+        // The Table-I rationale: Booth-3 cuts PP count ~33%, shrinking
+        // whichever tree follows.
+        for m in [24, 53] {
+            let b2 = BoothRadix::Booth2.digit_count(m);
+            let b3 = BoothRadix::Booth3.digit_count(m);
+            assert!(b3 * 3 <= b2 * 2 + 2, "m={m}: b2={b2} b3={b3}");
+        }
+    }
+
+    #[test]
+    fn activity_scales_with_operand_density() {
+        // All-zeros multiplier ⇒ near-zero toggles; dense operands ⇒ many.
+        let cfg = MultiplierConfig { sig_bits: 24, booth: BoothRadix::Booth2, tree: TreeKind::Wallace };
+        let quiet = multiply(&cfg, 0xffffff, 0);
+        let busy = multiply(&cfg, 0xffffff, 0xaaaaaa);
+        assert!(quiet.tree_stats.toggles < busy.tree_stats.toggles / 4);
+    }
+}

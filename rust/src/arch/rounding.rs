@@ -1,0 +1,330 @@
+//! IEEE-754 rounding: guard/round/sticky reduction of an exact
+//! intermediate result to a storage format.
+//!
+//! Both the golden softfloat model and the structural datapaths end their
+//! computation with an exact (or sticky-summarized) value
+//! `(-1)^sign · sig · 2^exp` that must be rounded once (FMA) or per
+//! sub-operation (CMA). This module is that shared rounder — the same
+//! dataflow the chip's final rounder stage implements with an
+//! increment-and-select circuit.
+
+
+use super::fp::{bitlen128, encode_finite, Format};
+
+/// IEEE-754 rounding modes (the chip implements all four; RNE is the
+/// benchmarked default).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub enum RoundMode {
+    /// roundTiesToEven.
+    #[default]
+    NearestEven,
+    /// roundTowardZero.
+    TowardZero,
+    /// roundTowardPositive.
+    TowardPositive,
+    /// roundTowardNegative.
+    TowardNegative,
+}
+
+impl RoundMode {
+    /// All four modes, for exhaustive tests.
+    pub const ALL: [RoundMode; 4] = [
+        RoundMode::NearestEven,
+        RoundMode::TowardZero,
+        RoundMode::TowardPositive,
+        RoundMode::TowardNegative,
+    ];
+
+    /// Should a result with the given LSB/guard/sticky round away from
+    /// zero? This is exactly the increment-decision logic of the rounder
+    /// stage.
+    #[inline]
+    pub fn increments(self, sign: bool, lsb: bool, round: bool, sticky: bool) -> bool {
+        match self {
+            RoundMode::NearestEven => round && (sticky || lsb),
+            RoundMode::TowardZero => false,
+            RoundMode::TowardPositive => !sign && (round || sticky),
+            RoundMode::TowardNegative => sign && (round || sticky),
+        }
+    }
+
+    /// On overflow, does this mode saturate to max-finite instead of Inf?
+    #[inline]
+    pub fn overflows_to_max_finite(self, sign: bool) -> bool {
+        match self {
+            RoundMode::NearestEven => false,
+            RoundMode::TowardZero => true,
+            RoundMode::TowardPositive => sign,
+            RoundMode::TowardNegative => !sign,
+        }
+    }
+
+    /// The sign of an exact-zero sum produced by cancellation (IEEE
+    /// 754-2019 §6.3): -0 under roundTowardNegative, +0 otherwise.
+    #[inline]
+    pub fn cancellation_zero_sign(self) -> bool {
+        matches!(self, RoundMode::TowardNegative)
+    }
+}
+
+/// Exception flags raised while rounding (a subset of IEEE status flags —
+/// the chip exposes these through its status register).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct Flags {
+    pub inexact: bool,
+    pub overflow: bool,
+    pub underflow: bool,
+    pub invalid: bool,
+}
+
+impl Flags {
+    /// Merge two flag sets (used by CMA: mul flags ∪ add flags).
+    pub fn merge(self, other: Flags) -> Flags {
+        Flags {
+            inexact: self.inexact || other.inexact,
+            overflow: self.overflow || other.overflow,
+            underflow: self.underflow || other.underflow,
+            invalid: self.invalid || other.invalid,
+        }
+    }
+}
+
+/// A rounded result: the storage bits plus the flags the operation raised.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Rounded {
+    pub bits: u64,
+    pub flags: Flags,
+}
+
+/// Round the exact value `(-1)^sign · sig · 2^exp` (with `sticky` marking
+/// discarded low-order bits strictly below `sig`'s LSB) to `fmt`.
+///
+/// This is the single place range reduction happens: normal/subnormal
+/// selection, overflow to ±Inf or ±max-finite, and underflow-to-zero all
+/// live here, mirroring the chip's normalize+round+pack stages.
+#[inline(always)]
+pub fn round_to_format(
+    fmt: Format,
+    mode: RoundMode,
+    sign: bool,
+    exp: i32,
+    sig: u128,
+    sticky: bool,
+) -> Rounded {
+    let mut flags = Flags::default();
+    if sig == 0 {
+        // A zero significand with sticky set means the true value is a tiny
+        // nonzero residue: round it as if it were below the smallest
+        // subnormal.
+        if !sticky {
+            return Rounded { bits: fmt.zero(sign), flags };
+        }
+        flags.inexact = true;
+        flags.underflow = true;
+        let up = mode.increments(sign, false, false, true);
+        let bits = if up { fmt.zero(sign) | 1 } else { fmt.zero(sign) };
+        return Rounded { bits, flags };
+    }
+
+    // Position of the value's MSB as a power of two: value ∈ [2^(npos-1), 2^npos).
+    let npos = exp + bitlen128(sig) as i32;
+
+    // The quantum (LSB weight) of the rounded result.
+    let target_q = (npos - fmt.sig_bits as i32).max(fmt.qmin());
+
+    // Shift so the significand LSB sits at target_q. A left shift is exact;
+    // sticky-in with a left shift would be ambiguous (the residue could
+    // straddle the round position), but no caller produces it: sticky is
+    // only set by wide right shifts, which leave ≥ sig_bits of significand.
+    debug_assert!(!(target_q < exp && sticky), "sticky residue with short significand");
+    let (kept, round_bit, sticky_low) = if target_q >= exp {
+        shift_right_rs(sig, target_q - exp, sticky)
+    } else {
+        (sig << (exp - target_q), false, sticky)
+    };
+
+    let inexact = round_bit || sticky_low;
+    let lsb = kept & 1 == 1;
+    let mut result_sig = kept as u64; // kept < 2^sig_bits ≤ 2^53: fits u64
+    let mut q = target_q;
+    if mode.increments(sign, lsb, round_bit, sticky_low) {
+        result_sig += 1;
+        if result_sig == (1u64 << fmt.sig_bits) {
+            // Carry out of the significand: renormalize.
+            result_sig >>= 1;
+            q += 1;
+        }
+    }
+
+    flags.inexact = inexact;
+
+    // Overflow check: MSB position of the rounded value.
+    if result_sig != 0 {
+        let msb = q + super::fp::bitlen64(result_sig) as i32 - 1;
+        if msb > fmt.emax() {
+            flags.overflow = true;
+            flags.inexact = true;
+            let bits = if mode.overflows_to_max_finite(sign) {
+                fmt.max_finite(sign)
+            } else {
+                fmt.inf(sign)
+            };
+            return Rounded { bits, flags };
+        }
+        if result_sig < fmt.hidden_bit() && inexact {
+            flags.underflow = true;
+        }
+    } else {
+        // Rounded all the way to zero.
+        flags.underflow = inexact;
+        return Rounded { bits: fmt.zero(sign), flags };
+    }
+
+    Rounded { bits: encode_finite(fmt, sign, q, result_sig), flags }
+}
+
+/// Right-shift with round/sticky capture: returns (kept, round_bit,
+/// sticky_of_lower_bits ∪ sticky_in).
+#[inline]
+pub fn shift_right_rs(sig: u128, shift: i32, sticky_in: bool) -> (u128, bool, bool) {
+    if shift <= 0 {
+        return (sig, false, sticky_in);
+    }
+    let shift = shift as u32;
+    if shift > 128 {
+        return (0, false, sticky_in || sig != 0);
+    }
+    if shift == 128 {
+        return (0, false, sticky_in || sig != 0);
+    }
+    let kept = sig >> shift;
+    let round_bit = (sig >> (shift - 1)) & 1 == 1;
+    let below_mask = if shift >= 2 { (1u128 << (shift - 1)) - 1 } else { 0 };
+    let sticky = sticky_in || (sig & below_mask) != 0;
+    (kept, round_bit, sticky)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::fp::decode;
+
+    fn round_sp(mode: RoundMode, sign: bool, exp: i32, sig: u128, sticky: bool) -> f32 {
+        f32::from_bits(round_to_format(Format::SP, mode, sign, exp, sig, sticky).bits as u32)
+    }
+
+    #[test]
+    fn exact_values_round_trip() {
+        for x in [1.0f32, 0.5, 3.25, 1e20, -7.75] {
+            let d = decode(Format::SP, x.to_bits() as u64);
+            for mode in RoundMode::ALL {
+                let r = round_sp(mode, d.sign, d.exp, d.sig as u128, false);
+                assert_eq!(r, x, "mode {mode:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn rne_ties_to_even() {
+        // 1.5 ulp above 1.0: sig = (1<<24) + 1, round bit set, no sticky →
+        // tie → round to even (down, since lsb=... ). Construct 2^-24 below:
+        // value = (2^24 + 1) · 2^-24 = 1 + 2^-24: exactly halfway between
+        // 1.0 and 1.0+2^-23 → ties to 1.0.
+        let r = round_sp(RoundMode::NearestEven, false, -24, (1u128 << 24) + 1, false);
+        assert_eq!(r, 1.0);
+        // With sticky set it is above the tie → rounds up.
+        let r = round_sp(RoundMode::NearestEven, false, -24, (1u128 << 24) + 1, true);
+        assert_eq!(r, 1.0 + f32::EPSILON);
+        // (2^24 + 3)·2^-24: halfway between 1+ε and 1+2ε → ties to even →
+        // 1+2ε.
+        let r = round_sp(RoundMode::NearestEven, false, -24, (1u128 << 24) + 3, false);
+        assert_eq!(r, 1.0 + 2.0 * f32::EPSILON);
+    }
+
+    #[test]
+    fn directed_modes_bracket_rne() {
+        // An inexact positive value: RD ≤ RNE ≤ RU and RZ == RD for
+        // positives.
+        let (exp, sig) = (-30, (1u128 << 30) + 12345);
+        let rd = round_sp(RoundMode::TowardNegative, false, exp, sig, false);
+        let rz = round_sp(RoundMode::TowardZero, false, exp, sig, false);
+        let rn = round_sp(RoundMode::NearestEven, false, exp, sig, false);
+        let ru = round_sp(RoundMode::TowardPositive, false, exp, sig, false);
+        assert!(rd <= rn && rn <= ru);
+        assert_eq!(rd, rz);
+        assert_eq!(ru, rd + rd * f32::EPSILON); // adjacent ulps
+    }
+
+    #[test]
+    fn overflow_behaviour_per_mode() {
+        // 2^128 overflows SP.
+        let sig = 1u128;
+        let exp = 128;
+        let r = round_to_format(Format::SP, RoundMode::NearestEven, false, exp, sig, false);
+        assert_eq!(r.bits as u32, f32::INFINITY.to_bits());
+        assert!(r.flags.overflow && r.flags.inexact);
+        let r = round_to_format(Format::SP, RoundMode::TowardZero, false, exp, sig, false);
+        assert_eq!(r.bits as u32, f32::MAX.to_bits());
+        let r = round_to_format(Format::SP, RoundMode::TowardPositive, true, exp, sig, false);
+        assert_eq!(r.bits as u32, (-f32::MAX).to_bits());
+        let r = round_to_format(Format::SP, RoundMode::TowardNegative, true, exp, sig, false);
+        assert_eq!(r.bits as u32, f32::NEG_INFINITY.to_bits());
+    }
+
+    #[test]
+    fn subnormal_rounding() {
+        // Half the smallest subnormal ties to even → +0 under RNE.
+        let r = round_to_format(Format::SP, RoundMode::NearestEven, false, -150, 1, false);
+        assert_eq!(r.bits, 0);
+        assert!(r.flags.underflow && r.flags.inexact);
+        // Just above half the smallest subnormal rounds to it.
+        let r = round_to_format(Format::SP, RoundMode::NearestEven, false, -150, 1, true);
+        assert_eq!(r.bits, 1);
+        // Toward-positive forces any positive residue up to the min subnormal.
+        let r = round_to_format(Format::SP, RoundMode::TowardPositive, false, -200, 7, false);
+        assert_eq!(r.bits, 1);
+        // Toward-zero flushes it.
+        let r = round_to_format(Format::SP, RoundMode::TowardZero, false, -200, 7, false);
+        assert_eq!(r.bits, 0);
+    }
+
+    #[test]
+    fn sticky_only_zero_sig() {
+        // sig == 0 but sticky: a vanished residue. RU must produce the min
+        // subnormal; RNE produces zero.
+        let r = round_to_format(Format::SP, RoundMode::TowardPositive, false, 0, 0, true);
+        assert_eq!(r.bits, 1);
+        let r = round_to_format(Format::SP, RoundMode::NearestEven, false, 0, 0, true);
+        assert_eq!(r.bits, 0);
+        assert!(r.flags.underflow);
+    }
+
+    #[test]
+    fn exact_subnormals_no_underflow_flag() {
+        // An exactly representable subnormal must not raise underflow.
+        let r = round_to_format(Format::SP, RoundMode::NearestEven, false, -149, 5, false);
+        assert_eq!(r.bits, 5);
+        assert!(!r.flags.underflow && !r.flags.inexact);
+    }
+
+    #[test]
+    fn shift_right_rs_cases() {
+        assert_eq!(shift_right_rs(0b1011, 0, false), (0b1011, false, false));
+        assert_eq!(shift_right_rs(0b1011, 1, false), (0b101, true, false));
+        assert_eq!(shift_right_rs(0b1011, 2, false), (0b10, true, true));
+        assert_eq!(shift_right_rs(0b1000, 3, false), (0b1, false, false));
+        assert_eq!(shift_right_rs(0b1000, 4, false), (0, true, false));
+        assert_eq!(shift_right_rs(1, 200, false), (0, false, true));
+        assert_eq!(shift_right_rs(0, 200, false), (0, false, false));
+        // Sticky-in propagates.
+        assert_eq!(shift_right_rs(0b100, 1, true), (0b10, false, true));
+    }
+
+    #[test]
+    fn carry_out_of_significand_renormalizes() {
+        // All-ones SP significand + round up ⇒ carry into the next binade.
+        let sig = ((1u128 << 24) - 1) << 1 | 1; // 25 bits: kept all-ones, round=1
+        let r = round_sp(RoundMode::NearestEven, false, -25, sig, false);
+        assert_eq!(r, 1.0); // (2^25-1)·2^-25 rounds to 1.0
+    }
+}

@@ -1,0 +1,481 @@
+//! Golden bit-exact IEEE-754 reference: multiply, add, and fused
+//! multiply-add over raw bit patterns, in all four rounding modes.
+//!
+//! This is the *specification* the generated datapaths are tested against
+//! (and, transitively, what the Pallas kernel and the AOT artifact are
+//! checked against through the coordinator). It computes with exact
+//! integer significand arithmetic (`u128` holds the 106-bit DP product
+//! with room for alignment guards), then defers to
+//! [`crate::arch::rounding::round_to_format`].
+//!
+//! The FMAC operation implemented is `a*b + c` — the paper's FMAC units
+//! compute exactly this, with the FMA units rounding once and the CMA
+//! units rounding after the multiply and again after the add (see
+//! [`crate::arch::cma`]).
+
+use super::fp::{bitlen128, decode, Class, Decoded, Format};
+use super::rounding::{round_to_format, Flags, RoundMode, Rounded};
+
+/// An exact unpacked finite value `(-1)^sign · sig · 2^exp` with a sticky
+/// marker for discarded low-order bits (`value + (-1)^sign·ε`,
+/// `0 ≤ ε < 2^exp`).
+#[derive(Debug, Clone, Copy)]
+pub struct Exact {
+    pub sign: bool,
+    pub exp: i32,
+    pub sig: u128,
+    pub sticky: bool,
+}
+
+impl Exact {
+    /// Lift a decoded operand (finite classes only).
+    pub fn from_decoded(d: &Decoded) -> Exact {
+        Exact { sign: d.sign, exp: d.exp, sig: d.sig as u128, sticky: false }
+    }
+
+    /// Position of the value's MSB: value ∈ [2^(npos-1), 2^npos). Zero-sig
+    /// values return i32::MIN.
+    #[inline]
+    pub fn npos(&self) -> i32 {
+        if self.sig == 0 {
+            i32::MIN
+        } else {
+            self.exp + bitlen128(self.sig) as i32
+        }
+    }
+}
+
+/// Exact product of two finite decoded operands (never overflows u128:
+/// 53+53 = 106 bits).
+pub fn mul_exact(a: &Decoded, b: &Decoded) -> Exact {
+    Exact {
+        sign: a.sign ^ b.sign,
+        exp: a.exp + b.exp,
+        sig: a.sig as u128 * b.sig as u128,
+        sticky: false,
+    }
+}
+
+/// Exact (sticky-summarized) sum of two unpacked values.
+///
+/// The result is exact except for a possible sticky residue from aligning
+/// the far-smaller operand; the residue is strictly below the result's
+/// LSB, which is all `round_to_format` needs for correct rounding in any
+/// mode. The `mode` parameter only decides the sign of an exact-zero
+/// cancellation result.
+#[inline(always)]
+pub fn add_exact(x: Exact, y: Exact, mode: RoundMode) -> Exact {
+    debug_assert!(!x.sticky && !y.sticky, "inputs to add_exact must be exact");
+    if x.sig == 0 {
+        if y.sig == 0 {
+            // ±0 + ±0: equal signs keep the sign, else mode-dependent.
+            let sign = if x.sign == y.sign { x.sign } else { mode.cancellation_zero_sign() };
+            return Exact { sign, exp: 0, sig: 0, sticky: false };
+        }
+        return y;
+    }
+    if y.sig == 0 {
+        return x;
+    }
+
+    // Identify the operand with strictly larger magnitude (ties broken
+    // after an exact aligned compare).
+    let (big, small) = match cmp_magnitude(&x, &y) {
+        std::cmp::Ordering::Greater => (x, y),
+        std::cmp::Ordering::Less => (y, x),
+        std::cmp::Ordering::Equal => {
+            if x.sign != y.sign {
+                // Exact cancellation.
+                return Exact {
+                    sign: mode.cancellation_zero_sign(),
+                    exp: 0,
+                    sig: 0,
+                    sticky: false,
+                };
+            }
+            (x, y)
+        }
+    };
+
+    // Normalize `big` to the top of u128, leaving one bit of carry
+    // headroom: MSB at bit 126.
+    let lsh = 126 - (bitlen128(big.sig) - 1);
+    let big_sig = big.sig << lsh;
+    let big_exp = big.exp - lsh as i32;
+
+    // Align `small` to big_exp.
+    let d = big_exp - small.exp;
+    let (small_sig, _round, sticky) = if d >= 0 {
+        let (kept, r, s) = super::rounding::shift_right_rs(small.sig, d, false);
+        // Fold the round bit back into sticky semantics by keeping it in
+        // the kept value when possible: we instead keep one extra guard by
+        // construction (big has headroom), so treat r as part of sticky.
+        (kept, false, r || s)
+    } else {
+        // small's LSB sits above big_exp; shift left exactly (cannot
+        // overflow: small's aligned length ≤ big's npos - big_exp = 127).
+        (small.sig << (-d) as u32, false, false)
+    };
+
+    if big.sign == small.sign {
+        Exact { sign: big.sign, exp: big_exp, sig: big_sig + small_sig, sticky }
+    } else {
+        // |big| > |small| strictly. If sticky, the true small is slightly
+        // larger than small_sig: represent big - small as
+        // (big_sig - small_sig - 1) + (1 - ε'), keeping sticky set.
+        let sig = if sticky { big_sig - small_sig - 1 } else { big_sig - small_sig };
+        Exact { sign: big.sign, exp: big_exp, sig, sticky }
+    }
+}
+
+/// Compare |x| vs |y| exactly.
+#[inline(always)]
+fn cmp_magnitude(x: &Exact, y: &Exact) -> std::cmp::Ordering {
+    let (nx, ny) = (x.npos(), y.npos());
+    if nx != ny {
+        return nx.cmp(&ny);
+    }
+    // Same MSB position: align both to the smaller exponent and compare.
+    // Aligned lengths equal npos - min_exp = bitlen of the operand that
+    // already sits at min_exp ≤ 128, so no overflow.
+    let e = x.exp.min(y.exp);
+    let xs = x.sig << (x.exp - e) as u32;
+    let ys = y.sig << (y.exp - e) as u32;
+    xs.cmp(&ys)
+}
+
+/// Round an exact value into `fmt` under `mode`.
+#[inline(always)]
+pub fn round(fmt: Format, mode: RoundMode, v: Exact) -> Rounded {
+    if v.sig == 0 && !v.sticky {
+        return Rounded { bits: fmt.zero(v.sign), flags: Flags::default() };
+    }
+    round_to_format(fmt, mode, v.sign, v.exp, v.sig, v.sticky)
+}
+
+/// Invalid-operation result: canonical qNaN with the invalid flag.
+fn invalid(fmt: Format) -> Rounded {
+    Rounded { bits: fmt.qnan(), flags: Flags { invalid: true, ..Flags::default() } }
+}
+
+/// Quiet-NaN result without the invalid flag (NaN propagation).
+fn qnan(fmt: Format) -> Rounded {
+    Rounded { bits: fmt.qnan(), flags: Flags::default() }
+}
+
+/// IEEE-754 fused multiply-add: `round(a·b + c)` with a single rounding.
+///
+/// Special-case semantics follow IEEE 754-2019 §7.2: any NaN operand
+/// propagates; `(±Inf)·(±0)` is invalid even when `c` is NaN per the
+/// standard's option exercised by x86/ARM (we return qNaN either way, so
+/// datapath comparisons are unaffected).
+pub fn fma(fmt: Format, mode: RoundMode, a_bits: u64, b_bits: u64, c_bits: u64) -> Rounded {
+    let a = decode(fmt, a_bits);
+    let b = decode(fmt, b_bits);
+    let c = decode(fmt, c_bits);
+
+    // NaN propagation / invalid detection.
+    let prod_invalid = (a.class == Class::Infinity && b.is_zero())
+        || (b.class == Class::Infinity && a.is_zero());
+    if a.class == Class::Nan || b.class == Class::Nan || c.class == Class::Nan {
+        if prod_invalid {
+            return invalid(fmt);
+        }
+        return qnan(fmt);
+    }
+    if prod_invalid {
+        return invalid(fmt);
+    }
+
+    let psign = a.sign ^ b.sign;
+    let pinf = a.class == Class::Infinity || b.class == Class::Infinity;
+    match (pinf, c.class == Class::Infinity) {
+        (true, true) => {
+            if psign != c.sign {
+                return invalid(fmt); // Inf - Inf
+            }
+            return Rounded { bits: fmt.inf(psign), flags: Flags::default() };
+        }
+        (true, false) => return Rounded { bits: fmt.inf(psign), flags: Flags::default() },
+        (false, true) => return Rounded { bits: fmt.inf(c.sign), flags: Flags::default() },
+        (false, false) => {}
+    }
+
+    // Finite path.
+    let p = mul_exact(&a, &b);
+    if p.sig == 0 && c.is_zero() {
+        // ±0 + ±0 sign rules.
+        let sign = if p.sign == c.sign { p.sign } else { mode.cancellation_zero_sign() };
+        return Rounded { bits: fmt.zero(sign), flags: Flags::default() };
+    }
+    let sum = add_exact(p, Exact::from_decoded(&c), mode);
+    round(fmt, mode, sum)
+}
+
+/// IEEE-754 multiply: `round(a·b)`.
+pub fn mul(fmt: Format, mode: RoundMode, a_bits: u64, b_bits: u64) -> Rounded {
+    let a = decode(fmt, a_bits);
+    let b = decode(fmt, b_bits);
+    if a.class == Class::Nan || b.class == Class::Nan {
+        return qnan(fmt);
+    }
+    if (a.class == Class::Infinity && b.is_zero()) || (b.class == Class::Infinity && a.is_zero())
+    {
+        return invalid(fmt);
+    }
+    let sign = a.sign ^ b.sign;
+    if a.class == Class::Infinity || b.class == Class::Infinity {
+        return Rounded { bits: fmt.inf(sign), flags: Flags::default() };
+    }
+    if a.is_zero() || b.is_zero() {
+        return Rounded { bits: fmt.zero(sign), flags: Flags::default() };
+    }
+    round(fmt, mode, mul_exact(&a, &b))
+}
+
+/// IEEE-754 add: `round(a + c)`.
+pub fn add(fmt: Format, mode: RoundMode, a_bits: u64, c_bits: u64) -> Rounded {
+    let a = decode(fmt, a_bits);
+    let c = decode(fmt, c_bits);
+    if a.class == Class::Nan || c.class == Class::Nan {
+        return qnan(fmt);
+    }
+    match (a.class == Class::Infinity, c.class == Class::Infinity) {
+        (true, true) => {
+            if a.sign != c.sign {
+                return invalid(fmt);
+            }
+            return Rounded { bits: fmt.inf(a.sign), flags: Flags::default() };
+        }
+        (true, false) => return Rounded { bits: fmt.inf(a.sign), flags: Flags::default() },
+        (false, true) => return Rounded { bits: fmt.inf(c.sign), flags: Flags::default() },
+        (false, false) => {}
+    }
+    let sum = add_exact(Exact::from_decoded(&a), Exact::from_decoded(&c), mode);
+    round(fmt, mode, sum)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fma32(a: f32, b: f32, c: f32) -> f32 {
+        f32::from_bits(
+            fma(
+                Format::SP,
+                RoundMode::NearestEven,
+                a.to_bits() as u64,
+                b.to_bits() as u64,
+                c.to_bits() as u64,
+            )
+            .bits as u32,
+        )
+    }
+
+    fn fma64(a: f64, b: f64, c: f64) -> f64 {
+        f64::from_bits(
+            fma(Format::DP, RoundMode::NearestEven, a.to_bits(), b.to_bits(), c.to_bits()).bits,
+        )
+    }
+
+    fn same32(x: f32, y: f32) -> bool {
+        (x.is_nan() && y.is_nan()) || x.to_bits() == y.to_bits()
+    }
+
+    fn same64(x: f64, y: f64) -> bool {
+        (x.is_nan() && y.is_nan()) || x.to_bits() == y.to_bits()
+    }
+
+    #[test]
+    fn fma_simple_values() {
+        assert_eq!(fma32(1.5, 2.0, 0.25), 3.25);
+        assert_eq!(fma32(-1.5, 2.0, 0.25), -2.75);
+        assert_eq!(fma64(1.5, 2.0, 0.25), 3.25);
+        assert_eq!(fma32(0.0, 5.0, 7.0), 7.0);
+    }
+
+    #[test]
+    fn fma_is_single_rounding() {
+        // Classic fused-vs-cascade discriminator: a·b lands exactly between
+        // two representable values and c nudges it; a two-rounding cascade
+        // gets it wrong. (1 + 2^-12)^2 = 1 + 2^-11 + 2^-24.
+        let a = 1.0f32 + f32::EPSILON * 2048.0; // 1 + 2^-12
+        let c = -(1.0f32 + 2.0 * f32::EPSILON * 2048.0); // -(1 + 2^-11)
+        let fused = fma32(a, a, c);
+        assert_eq!(fused, 2f32.powi(-24));
+        // Cascade result for comparison: round(a·a) = 1 + 2^-11 (the 2^-24
+        // is rounded away as a tie-to-even), so cascade gives exactly 0.
+        let r1 = mul(Format::SP, RoundMode::NearestEven, a.to_bits() as u64, a.to_bits() as u64);
+        let r2 = add(Format::SP, RoundMode::NearestEven, r1.bits, c.to_bits() as u64);
+        assert_eq!(f32::from_bits(r2.bits as u32), 0.0);
+    }
+
+    #[test]
+    fn fma_matches_hardware_exhaustive_smallset() {
+        // Deterministic structured operands: all sign/exponent-extreme
+        // combinations of a small value set.
+        let vals = [
+            0.0f32,
+            -0.0,
+            1.0,
+            -1.0,
+            1.5,
+            f32::MIN_POSITIVE,
+            -f32::MIN_POSITIVE,
+            f32::MIN_POSITIVE / 4.0, // subnormal
+            f32::MAX,
+            -f32::MAX,
+            f32::INFINITY,
+            f32::NEG_INFINITY,
+            f32::NAN,
+            f32::EPSILON,
+            2f32.powi(-149),
+            3.4028e38,
+        ];
+        for &a in &vals {
+            for &b in &vals {
+                for &c in &vals {
+                    let got = fma32(a, b, c);
+                    let want = a.mul_add(b, c);
+                    assert!(
+                        same32(got, want),
+                        "fma({a:e},{b:e},{c:e}) = {got:e}, want {want:e}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn fma_matches_hardware_dp_smallset() {
+        let vals = [
+            0.0f64,
+            -0.0,
+            1.0,
+            -1.0,
+            1.0 + f64::EPSILON,
+            f64::MIN_POSITIVE,
+            f64::MIN_POSITIVE / 8.0,
+            f64::MAX,
+            -f64::MAX,
+            f64::INFINITY,
+            f64::NEG_INFINITY,
+            f64::NAN,
+            2f64.powi(-1074),
+            -2f64.powi(-1074),
+        ];
+        for &a in &vals {
+            for &b in &vals {
+                for &c in &vals {
+                    let got = fma64(a, b, c);
+                    let want = a.mul_add(b, c);
+                    assert!(
+                        same64(got, want),
+                        "fma({a:e},{b:e},{c:e}) = {got:e}, want {want:e}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn cancellation_zero_signs() {
+        // 1·1 + (-1) = +0 under RNE, -0 under RD.
+        let r = fma(Format::SP, RoundMode::NearestEven, 0x3f80_0000, 0x3f80_0000, 0xbf80_0000);
+        assert_eq!(r.bits, 0);
+        let r = fma(Format::SP, RoundMode::TowardNegative, 0x3f80_0000, 0x3f80_0000, 0xbf80_0000);
+        assert_eq!(r.bits as u32, (-0.0f32).to_bits());
+        // (+0)·1 + (+0) keeps +0; (+0)·1 + (-0) is +0 under RNE.
+        let r = fma32(0.0, 1.0, 0.0);
+        assert_eq!(r.to_bits(), 0);
+        let r = fma32(0.0, 1.0, -0.0);
+        assert_eq!(r.to_bits(), 0);
+        // (-0)·1 + (-0) = -0.
+        let r = fma32(-0.0, 1.0, -0.0);
+        assert_eq!(r.to_bits(), (-0.0f32).to_bits());
+    }
+
+    #[test]
+    fn invalid_cases() {
+        let f = Format::SP;
+        let inf = f32::INFINITY.to_bits() as u64;
+        let zero = 0u64;
+        let one = 1.0f32.to_bits() as u64;
+        // Inf · 0
+        assert!(fma(f, RoundMode::NearestEven, inf, zero, one).flags.invalid);
+        // Inf - Inf through the addend
+        let ninf = f32::NEG_INFINITY.to_bits() as u64;
+        assert!(fma(f, RoundMode::NearestEven, inf, one, ninf).flags.invalid);
+        // Inf · 0 + NaN is still invalid (we exercise the x86 option)
+        let nan = f32::NAN.to_bits() as u64;
+        assert!(fma(f, RoundMode::NearestEven, inf, zero, nan).flags.invalid);
+        // Plain NaN propagation is not invalid.
+        assert!(!fma(f, RoundMode::NearestEven, nan, one, one).flags.invalid);
+    }
+
+    #[test]
+    fn subnormal_results() {
+        // Product of two tiny normals lands in the subnormal range.
+        let a = f32::MIN_POSITIVE; // 2^-126
+        let b = 0.5f32;
+        let got = fma32(a, b, 0.0);
+        assert_eq!(got, a.mul_add(b, 0.0));
+        assert_eq!(got, 2f32.powi(-127));
+        // Subnormal × subnormal underflows to zero (RNE). (Constructed via
+        // from_bits: powi(-140) itself underflows through its reciprocal.)
+        let s = f32::from_bits(1 << 9); // 2^-140
+        assert_eq!(fma32(s, s, 0.0), 0.0);
+        // ... but toward-positive gives min subnormal.
+        let r = fma(
+            Format::SP,
+            RoundMode::TowardPositive,
+            s.to_bits() as u64,
+            s.to_bits() as u64,
+            0,
+        );
+        assert_eq!(r.bits, 1);
+    }
+
+    #[test]
+    fn add_exact_sticky_subtraction() {
+        // x = 1.0, y = -(2^-100): result must be just under 1.0 → the
+        // largest float < 1.0 under RZ, and 1.0 under RNE.
+        let one = 1.0f32.to_bits() as u64;
+        let tiny = (2f32.powi(-100)).to_bits() as u64 | (1u64 << 31);
+        let rz = add(Format::SP, RoundMode::TowardZero, one, tiny);
+        assert_eq!(f32::from_bits(rz.bits as u32), 1.0 - f32::EPSILON / 2.0);
+        let rn = add(Format::SP, RoundMode::NearestEven, one, tiny);
+        assert_eq!(f32::from_bits(rn.bits as u32), 1.0);
+        assert!(rn.flags.inexact);
+    }
+
+    #[test]
+    fn mul_add_flags() {
+        // Overflow flag.
+        let r = mul(
+            Format::SP,
+            RoundMode::NearestEven,
+            f32::MAX.to_bits() as u64,
+            2.0f32.to_bits() as u64,
+        );
+        assert!(r.flags.overflow);
+        assert_eq!(r.bits as u32, f32::INFINITY.to_bits());
+        // Exact operations raise nothing.
+        let r = mul(Format::SP, RoundMode::NearestEven, 3.0f32.to_bits() as u64, 0.5f32.to_bits() as u64);
+        assert_eq!(r.flags, Flags::default());
+    }
+
+    #[test]
+    fn dp_extreme_alignment() {
+        // c is 2^1000 ulps away from the product: pure sticky path.
+        let a = 2f64.powi(500);
+        let b = 2f64.powi(400);
+        let c = 1.0f64;
+        assert!(same64(fma64(a, b, c), a.mul_add(b, c)));
+        let c = -1.0f64;
+        assert!(same64(fma64(a, b, c), a.mul_add(b, c)));
+        // Near-total cancellation: a·b = 2^900, c = -2^900·(1+ε).
+        let c = -(2f64.powi(900) * (1.0 + f64::EPSILON));
+        assert!(same64(fma64(a, b, c), a.mul_add(b, c)));
+    }
+}

@@ -1,0 +1,312 @@
+//! Partial-product reduction structures: Wallace tree, linear array, and
+//! the ZM (Zuras–McAllister) higher-order array.
+//!
+//! Table I of the paper assigns a different combiner to each FPU:
+//!
+//! * **Wallace** (both CMAs) — minimum logic depth, O(log n) 3:2 levels;
+//!   fastest, but irregular wiring costs area. Latency designs take it.
+//! * **Array** (DP FMA) — a linear chain of 3:2 rows; O(n) depth but
+//!   perfectly regular, dense, and low-energy per op when the clock
+//!   period is set by throughput pipelining anyway.
+//! * **ZM** (SP FMA) — Zuras & McAllister's "higher-order array"
+//!   (JSSC 1986): partial products are grouped into chains whose partial
+//!   sums feed a second-level chain, giving O(√n) depth with array-like
+//!   regularity. The paper calls it a "modified array"; it is the sweet
+//!   spot the SP FMA's 4-stage pipe needs.
+//!
+//! All three reduce a PP vector to one [`CarrySave`] pair and report the
+//! same [`CsaStats`], so the generator can swap them freely and the
+//! timing/energy models see honest structural numbers.
+
+
+use super::csa::{csa32_t, CarrySave, CsaStats};
+
+/// Reduction-tree topology.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum TreeKind {
+    /// Logarithmic-depth Wallace tree of 3:2 compressors.
+    Wallace,
+    /// Linear array: one 3:2 row per partial product.
+    Array,
+    /// Zuras–McAllister higher-order (order-2) array: √n chains of √n.
+    Zm,
+}
+
+impl TreeKind {
+    /// Name as printed in the paper's Table I.
+    pub fn name(self) -> &'static str {
+        match self {
+            TreeKind::Wallace => "Wallace",
+            TreeKind::Array => "Array",
+            TreeKind::Zm => "ZM",
+        }
+    }
+
+    /// Reduce `pps` (two's-complement words in a `width`-bit window) to a
+    /// carry-save pair whose resolved value is Σpps mod 2^width.
+    pub fn reduce(self, pps: &[u128], width: u32, stats: &mut CsaStats) -> CarrySave {
+        self.reduce_t::<true>(pps, width, stats)
+    }
+
+    /// Reduction generic over stat tracking (see [`csa32_t`]): the
+    /// verification hot path uses `TRACK = false`.
+    #[inline(always)]
+    pub fn reduce_t<const TRACK: bool>(
+        self,
+        pps: &[u128],
+        width: u32,
+        stats: &mut CsaStats,
+    ) -> CarrySave {
+        match self {
+            TreeKind::Wallace => reduce_wallace::<TRACK>(pps, width, stats),
+            TreeKind::Array => reduce_array::<TRACK>(pps, width, stats),
+            TreeKind::Zm => reduce_zm::<TRACK>(pps, width, stats),
+        }
+    }
+
+    /// Critical-path depth in 3:2-compressor levels for `n` partial
+    /// products — the number the timing model converts to FO4.
+    pub fn depth_levels(self, n: u32) -> u32 {
+        match self {
+            TreeKind::Wallace => wallace_levels(n),
+            TreeKind::Array => n.saturating_sub(2),
+            TreeKind::Zm => {
+                if n <= 2 {
+                    0
+                } else {
+                    let b = zm_block_size(n);
+                    let nblocks = n.div_ceil(b);
+                    // Per-block chain depth + second-level chain over 2
+                    // outputs per block.
+                    (b.saturating_sub(2)) + (2 * nblocks).saturating_sub(2)
+                }
+            }
+        }
+    }
+
+    /// Relative wiring-irregularity factor (dimensionless; 1.0 = perfectly
+    /// regular array). The energy/area models scale interconnect
+    /// capacitance by this — Wallace pays for its speed in wires, which is
+    /// precisely why the throughput designs avoid it (paper §FPU
+    /// Architectures).
+    pub fn wiring_factor(self) -> f64 {
+        match self {
+            TreeKind::Wallace => 1.35,
+            TreeKind::Array => 1.0,
+            TreeKind::Zm => 1.08,
+        }
+    }
+}
+
+/// Scratch capacity for allocation-free reduction: a Wallace level never
+/// grows its operand count, and no supported config exceeds
+/// [`crate::arch::booth::MAX_PPS`] partial products.
+const SCRATCH: usize = crate::arch::booth::MAX_PPS + 4;
+
+/// Wallace reduction: at each level, group the live operands into triples
+/// through 3:2 compressors (leftovers pass through) until two remain.
+/// Allocation-free: ping-pongs between two stack buffers (hot path).
+fn reduce_wallace<const TRACK: bool>(pps: &[u128], width: u32, stats: &mut CsaStats) -> CarrySave {
+    if pps.is_empty() {
+        return CarrySave::ZERO;
+    }
+    debug_assert!(pps.len() <= SCRATCH);
+    let mut buf_a = [0u128; SCRATCH];
+    let mut buf_b = [0u128; SCRATCH];
+    buf_a[..pps.len()].copy_from_slice(pps);
+    let mut n = pps.len();
+    let (mut cur, mut next) = (&mut buf_a, &mut buf_b);
+    while n > 2 {
+        let mut level = CsaStats::default();
+        let mut out = 0;
+        let mut i = 0;
+        while i + 3 <= n {
+            let mut one = CsaStats::default();
+            let cs = csa32_t::<TRACK>(cur[i], cur[i + 1], cur[i + 2], width, &mut one);
+            level.join_parallel(one);
+            next[out] = cs.sum;
+            next[out + 1] = cs.carry;
+            out += 2;
+            i += 3;
+        }
+        while i < n {
+            next[out] = cur[i];
+            out += 1;
+            i += 1;
+        }
+        stats.chain(level);
+        n = out;
+        std::mem::swap(&mut cur, &mut next);
+    }
+    match n {
+        2 => CarrySave { sum: cur[0], carry: cur[1] },
+        1 => CarrySave { sum: cur[0], carry: 0 },
+        _ => CarrySave::ZERO,
+    }
+}
+
+/// Array reduction: a linear chain — each row folds one more PP into the
+/// running carry-save pair.
+fn reduce_array<const TRACK: bool>(pps: &[u128], width: u32, stats: &mut CsaStats) -> CarrySave {
+    match pps.len() {
+        0 => CarrySave::ZERO,
+        1 => CarrySave { sum: pps[0], carry: 0 },
+        _ => {
+            let mut cs = CarrySave { sum: pps[0], carry: pps[1] };
+            for &pp in &pps[2..] {
+                cs = csa32_t::<TRACK>(cs.sum, cs.carry, pp, width, stats);
+            }
+            cs
+        }
+    }
+}
+
+/// Block size for the ZM order-2 array: ⌈√n⌉.
+fn zm_block_size(n: u32) -> u32 {
+    (n as f64).sqrt().ceil() as u32
+}
+
+/// ZM reduction: split PPs into ⌈√n⌉-sized blocks, reduce each block with
+/// a linear chain (in parallel), then chain the block outputs linearly.
+/// Allocation-free (hot path).
+fn reduce_zm<const TRACK: bool>(pps: &[u128], width: u32, stats: &mut CsaStats) -> CarrySave {
+    let n = pps.len() as u32;
+    if n <= 3 {
+        return reduce_array::<TRACK>(pps, width, stats);
+    }
+    let b = zm_block_size(n) as usize;
+    let mut block_outs = [0u128; SCRATCH];
+    let mut outs = 0;
+    let mut blocks_stats = CsaStats::default();
+    for block in pps.chunks(b) {
+        let mut one = CsaStats::default();
+        let cs = reduce_array::<TRACK>(block, width, &mut one);
+        blocks_stats.join_parallel(one);
+        block_outs[outs] = cs.sum;
+        outs += 1;
+        if cs.carry != 0 || block.len() > 1 {
+            block_outs[outs] = cs.carry;
+            outs += 1;
+        }
+    }
+    stats.chain(blocks_stats);
+    // Second-level linear combine of the block outputs.
+    reduce_array::<TRACK>(&block_outs[..outs], width, stats)
+}
+
+/// Wallace-tree level count for `n` operands (Dadda sequence).
+pub fn wallace_levels(n: u32) -> u32 {
+    let mut levels = 0;
+    let mut k = n;
+    while k > 2 {
+        // Each level maps groups of 3 to 2: k → 2⌊k/3⌋ + k mod 3.
+        k = 2 * (k / 3) + k % 3;
+        levels += 1;
+    }
+    levels
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::csa::mask;
+
+    fn check_reduce(kind: TreeKind, pps: &[u128], width: u32) {
+        let want = pps.iter().fold(0u128, |a, &p| a.wrapping_add(p)) & mask(width);
+        let mut stats = CsaStats::default();
+        let cs = kind.reduce(pps, width, &mut stats);
+        assert_eq!(cs.resolve(width), want, "{kind:?} over {} pps", pps.len());
+        if pps.len() > 2 {
+            assert!(stats.fa_ops > 0);
+        }
+    }
+
+    #[test]
+    fn all_kinds_preserve_sums() {
+        let pps: Vec<u128> = (0..13u128).map(|i| i.wrapping_mul(0x9e37_79b9_7f4a_7c15) & mask(50)).collect();
+        for kind in [TreeKind::Wallace, TreeKind::Array, TreeKind::Zm] {
+            for n in 0..pps.len() {
+                check_reduce(kind, &pps[..n], 50);
+            }
+        }
+    }
+
+    #[test]
+    fn wallace_levels_sequence() {
+        // Known Wallace/Dadda level counts.
+        assert_eq!(wallace_levels(2), 0);
+        assert_eq!(wallace_levels(3), 1);
+        assert_eq!(wallace_levels(4), 2);
+        assert_eq!(wallace_levels(6), 3);
+        assert_eq!(wallace_levels(9), 4);
+        assert_eq!(wallace_levels(13), 5);
+        assert_eq!(wallace_levels(19), 6);
+        assert_eq!(wallace_levels(27), 7); // DP Booth-2 count
+        assert_eq!(wallace_levels(18), 6); // DP Booth-3 count
+    }
+
+    #[test]
+    fn depth_ordering_wallace_fastest_array_slowest() {
+        // For the paper's PP counts, Wallace < ZM < Array in depth.
+        for n in [9u32, 13, 18, 27] {
+            let w = TreeKind::Wallace.depth_levels(n);
+            let z = TreeKind::Zm.depth_levels(n);
+            let a = TreeKind::Array.depth_levels(n);
+            assert!(w <= z && z <= a, "n={n}: wallace={w} zm={z} array={a}");
+            assert!(w < a, "n={n}");
+        }
+    }
+
+    #[test]
+    fn measured_depth_matches_model_wallace() {
+        // The depth the reducer actually accumulates must equal the
+        // model's prediction (structure honesty).
+        for n in [3usize, 6, 9, 13, 18, 27] {
+            let pps: Vec<u128> = (1..=n as u128).collect();
+            let mut stats = CsaStats::default();
+            TreeKind::Wallace.reduce(&pps, 60, &mut stats);
+            assert_eq!(stats.depth, wallace_levels(n as u32), "n={n}");
+        }
+    }
+
+    #[test]
+    fn measured_depth_matches_model_array() {
+        for n in [3usize, 9, 13, 27] {
+            let pps: Vec<u128> = (1..=n as u128).collect();
+            let mut stats = CsaStats::default();
+            TreeKind::Array.reduce(&pps, 60, &mut stats);
+            assert_eq!(stats.depth, n as u32 - 2, "n={n}");
+        }
+    }
+
+    #[test]
+    fn zm_depth_between_array_and_wallace_measured() {
+        for n in [9usize, 13, 18, 27] {
+            let pps: Vec<u128> = (1..=n as u128).map(|i| i * 0x1234_5678).collect();
+            let mut zm = CsaStats::default();
+            TreeKind::Zm.reduce(&pps, 80, &mut zm);
+            let mut ar = CsaStats::default();
+            TreeKind::Array.reduce(&pps, 80, &mut ar);
+            let mut wa = CsaStats::default();
+            TreeKind::Wallace.reduce(&pps, 80, &mut wa);
+            assert!(zm.depth <= ar.depth, "n={n}: zm {} vs array {}", zm.depth, ar.depth);
+            assert!(zm.depth >= wa.depth, "n={n}: zm {} vs wallace {}", zm.depth, wa.depth);
+        }
+    }
+
+    #[test]
+    fn wiring_factors_ordering() {
+        assert!(TreeKind::Array.wiring_factor() < TreeKind::Zm.wiring_factor());
+        assert!(TreeKind::Zm.wiring_factor() < TreeKind::Wallace.wiring_factor());
+    }
+
+    #[test]
+    fn empty_and_small_inputs() {
+        for kind in [TreeKind::Wallace, TreeKind::Array, TreeKind::Zm] {
+            let mut stats = CsaStats::default();
+            assert_eq!(kind.reduce(&[], 32, &mut stats).resolve(32), 0);
+            assert_eq!(kind.reduce(&[7], 32, &mut stats).resolve(32), 7);
+            assert_eq!(kind.reduce(&[7, 8], 32, &mut stats).resolve(32), 15);
+        }
+    }
+}

@@ -1,0 +1,243 @@
+//! Body-bias control policies — the paper's second headline result.
+//!
+//! Fig. 4's experiment: a latency unit running a low-utilization
+//! workload with the body bias **statically** set for speed (forward
+//! bias, low V_t) leaks so much during the idle gaps that energy/op
+//! rises ~3×. **Dynamically adapting** V_BB — dropping to zero/reverse
+//! bias in idle periods — recovers most of it (≈1.5×).
+//!
+//! The adaptive policy is not free: the back-gate wells are an RC load
+//! charged by a bias generator, so a transition takes ~1 µs during
+//! which the unit either waits (wake-up latency) or leaks at the old
+//! V_t. Both costs are modelled; the controller only wins when idle
+//! periods are long compared to the settle time, exactly as the paper's
+//! "lowering BB for low-utilization period" phrasing implies.
+
+use crate::arch::generator::FpuUnit;
+use crate::energy::components::unit_cost;
+use crate::energy::tech::{OperatingPoint, Technology};
+use crate::timing;
+use crate::workloads::utilization::UtilizationProfile;
+
+/// A body-bias policy.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum BbPolicy {
+    /// V_BB fixed for the whole run (the "statically set BB" curves).
+    Static { vbb: f64 },
+    /// V_BB dropped to `vbb_idle` when an idle period is detected and
+    /// restored on wake-up.
+    Adaptive {
+        vbb_active: f64,
+        vbb_idle: f64,
+        /// Bias settle time in cycles (≈1 µs × f); leakage stays at the
+        /// *higher* of the two bias levels while settling, and detection
+        /// lags idle onset by the same amount.
+        settle_cycles: u64,
+    },
+}
+
+impl BbPolicy {
+    /// The paper's nominal static policy (1.2 V forward).
+    pub fn static_nominal() -> BbPolicy {
+        BbPolicy::Static { vbb: Technology::NOMINAL_VBB }
+    }
+
+    /// The paper's adaptive policy: full forward bias when busy, zero
+    /// bias when idle, with a settle time derived from the clock.
+    pub fn adaptive_nominal(freq_ghz: f64) -> BbPolicy {
+        BbPolicy::Adaptive {
+            vbb_active: Technology::NOMINAL_VBB,
+            vbb_idle: 0.0,
+            settle_cycles: (1.0e3 * freq_ghz) as u64, // ≈1 µs
+        }
+    }
+}
+
+/// Energy accounting for one run of a profile under one policy.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct BbRunEnergy {
+    /// FMAC ops executed (one per active cycle).
+    pub ops: u64,
+    pub dynamic_pj: f64,
+    pub leakage_pj: f64,
+    /// Extra leakage burned in bias transitions.
+    pub transition_pj: f64,
+    /// Energy per op, pJ.
+    pub pj_per_op: f64,
+}
+
+/// Simulate the energy of running `profile` on `unit` at `vdd` under a
+/// bias policy. The unit issues one FMAC per active cycle (the Fig. 4
+/// latency units are kept fed during bursts) and is clock-gated when
+/// idle.
+pub fn run_energy(
+    unit: &FpuUnit,
+    tech: &Technology,
+    vdd: f64,
+    policy: BbPolicy,
+    profile: &UtilizationProfile,
+) -> Option<BbRunEnergy> {
+    let cost = unit_cost(unit);
+    let (vbb_active, vbb_idle, settle) = match policy {
+        BbPolicy::Static { vbb } => (vbb, vbb, 0),
+        BbPolicy::Adaptive { vbb_active, vbb_idle, settle_cycles } => {
+            (vbb_active, vbb_idle, settle_cycles)
+        }
+    };
+    // Timing is set by the *active* operating point; the unit never
+    // computes under idle bias.
+    let t = timing::timing(&unit.config, tech, OperatingPoint::new(vdd, vbb_active))?;
+    let cycle_s = t.cycle_ps * 1e-12;
+    let leak_active_w = tech.leakage_mw(cost.area_mm2, OperatingPoint::new(vdd, vbb_active)) * 1e-3;
+    let leak_idle_w = tech.leakage_mw(cost.area_mm2, OperatingPoint::new(vdd, vbb_idle)) * 1e-3;
+    let e_op_j = cost.dyn_energy_pj(vdd, 1.0) * 1e-12;
+
+    let mut ops = 0u64;
+    let mut dynamic = 0.0f64;
+    let mut leakage = 0.0f64;
+    let mut transition = 0.0f64;
+    for seg in &profile.segments {
+        let dur_s = seg.cycles as f64 * cycle_s;
+        if seg.active {
+            ops += seg.cycles;
+            dynamic += seg.cycles as f64 * e_op_j;
+            leakage += leak_active_w * dur_s;
+        } else if seg.cycles <= 2 * settle {
+            // Idle gap too short to re-bias: leak at the active level.
+            leakage += leak_active_w * dur_s;
+        } else {
+            // Down-transition (detect + settle) and up-transition each
+            // leak at the high-bias level for `settle` cycles.
+            let settle_s = settle as f64 * cycle_s;
+            transition += 2.0 * leak_active_w * settle_s;
+            let low_s = (seg.cycles - 2 * settle) as f64 * cycle_s;
+            leakage += leak_idle_w * low_s;
+        }
+    }
+    let total = dynamic + leakage + transition;
+    Some(BbRunEnergy {
+        ops,
+        dynamic_pj: dynamic * 1e12,
+        leakage_pj: leakage * 1e12,
+        transition_pj: transition * 1e12,
+        pj_per_op: if ops > 0 { total * 1e12 / ops as f64 } else { f64::INFINITY },
+    })
+}
+
+/// The Fig. 4 blow-up factor: energy/op of a profile relative to the
+/// 100%-utilization baseline under the same static nominal bias.
+pub fn blowup_vs_full(
+    unit: &FpuUnit,
+    tech: &Technology,
+    vdd: f64,
+    policy: BbPolicy,
+    profile: &UtilizationProfile,
+) -> Option<f64> {
+    let full = run_energy(
+        unit,
+        tech,
+        vdd,
+        BbPolicy::static_nominal(),
+        &UtilizationProfile::full(profile.active_cycles().max(1)),
+    )?;
+    let run = run_energy(unit, tech, vdd, policy, profile)?;
+    Some(run.pj_per_op / full.pj_per_op)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::generator::FpuConfig;
+
+    fn setup() -> (FpuUnit, Technology) {
+        (FpuUnit::generate(&FpuConfig::sp_cma()), Technology::fdsoi28())
+    }
+
+    fn ten_pct(cycles: u64) -> UtilizationProfile {
+        // 10% utilization in 10k-cycle bursts (≈7 µs idle gaps: long
+        // enough for the adaptive policy to re-bias).
+        UtilizationProfile::duty(0.1, 10_000, cycles)
+    }
+
+    #[test]
+    fn full_utilization_matches_power_model() {
+        let (unit, tech) = setup();
+        let r = run_energy(&unit, &tech, 0.8, BbPolicy::static_nominal(),
+                           &UtilizationProfile::full(100_000)).unwrap();
+        let eff = crate::energy::power::evaluate(
+            &unit, &tech, OperatingPoint::new(0.8, 1.2), 1.0).unwrap();
+        // pJ/op = 2 × pJ/FLOP.
+        assert!((r.pj_per_op / (2.0 * eff.pj_per_flop) - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn static_low_utilization_blows_up_2_to_3x() {
+        // Fig. 4: "using the same VDD and Vt as the 100% activity core …
+        // increases the energy/op by 3x" (at the energy-efficient
+        // operating voltage, where leakage looms largest).
+        let (unit, tech) = setup();
+        let b = blowup_vs_full(&unit, &tech, 0.6, BbPolicy::static_nominal(),
+                               &ten_pct(1_000_000)).unwrap();
+        assert!((2.0..3.8).contains(&b), "static blow-up {b:.2}×");
+    }
+
+    #[test]
+    fn adaptive_recovers_to_about_1_5x() {
+        let (unit, tech) = setup();
+        let freq = timing::timing(&unit.config, &tech, OperatingPoint::new(0.6, 1.2))
+            .unwrap()
+            .freq_ghz;
+        let b = blowup_vs_full(&unit, &tech, 0.6, BbPolicy::adaptive_nominal(freq),
+                               &ten_pct(1_000_000)).unwrap();
+        assert!((1.05..1.9).contains(&b), "adaptive blow-up {b:.2}×");
+    }
+
+    #[test]
+    fn adaptive_beats_static_at_low_utilization() {
+        let (unit, tech) = setup();
+        let freq = 1.0;
+        for vdd in [0.55, 0.7, 0.9] {
+            let s = blowup_vs_full(&unit, &tech, vdd, BbPolicy::static_nominal(),
+                                   &ten_pct(500_000)).unwrap();
+            let a = blowup_vs_full(&unit, &tech, vdd, BbPolicy::adaptive_nominal(freq),
+                                   &ten_pct(500_000)).unwrap();
+            assert!(a < s, "vdd {vdd}: adaptive {a:.2} vs static {s:.2}");
+        }
+    }
+
+    #[test]
+    fn short_gaps_defeat_adaptation() {
+        // Idle gaps shorter than 2× settle leave the adaptive policy at
+        // the static energy (no transition is attempted).
+        let (unit, tech) = setup();
+        let profile = UtilizationProfile::duty(0.1, 50, 100_000); // 450-cycle gaps
+        let adaptive = BbPolicy::Adaptive { vbb_active: 1.2, vbb_idle: 0.0, settle_cycles: 1000 };
+        let a = run_energy(&unit, &tech, 0.7, adaptive, &profile).unwrap();
+        let s = run_energy(&unit, &tech, 0.7, BbPolicy::static_nominal(), &profile).unwrap();
+        assert!((a.pj_per_op / s.pj_per_op - 1.0).abs() < 1e-9);
+        assert_eq!(a.transition_pj, 0.0);
+    }
+
+    #[test]
+    fn reverse_idle_bias_cuts_leakage_further() {
+        let (unit, tech) = setup();
+        let prof = ten_pct(1_000_000);
+        let zero = BbPolicy::Adaptive { vbb_active: 1.2, vbb_idle: 0.0, settle_cycles: 1000 };
+        let rev = BbPolicy::Adaptive { vbb_active: 1.2, vbb_idle: -1.0, settle_cycles: 1000 };
+        let ez = run_energy(&unit, &tech, 0.7, zero, &prof).unwrap();
+        let er = run_energy(&unit, &tech, 0.7, rev, &prof).unwrap();
+        assert!(er.leakage_pj < ez.leakage_pj);
+        assert!(er.pj_per_op < ez.pj_per_op);
+    }
+
+    #[test]
+    fn transition_energy_scales_with_wakeups() {
+        let (unit, tech) = setup();
+        let few = UtilizationProfile::duty(0.1, 50_000, 1_000_000);
+        let many = UtilizationProfile::duty(0.1, 5_000, 1_000_000);
+        let pol = BbPolicy::Adaptive { vbb_active: 1.2, vbb_idle: 0.0, settle_cycles: 500 };
+        let ef = run_energy(&unit, &tech, 0.7, pol, &few).unwrap();
+        let em = run_energy(&unit, &tech, 0.7, pol, &many).unwrap();
+        assert!(em.transition_pj > 2.0 * ef.transition_pj);
+    }
+}

@@ -1,0 +1,6 @@
+//! Body-bias controllers: static vs dynamically adaptive V_BB and the
+//! low-utilization energy accounting behind Fig. 4.
+
+pub mod controller;
+
+pub use controller::{blowup_vs_full, run_energy, BbPolicy, BbRunEnergy};

@@ -1,0 +1,225 @@
+//! The test-program instruction encoding (Fig. 5(b)).
+//!
+//! The paper's figure shows a compact encoding that selects the FPU, the
+//! operand sources (stimulus RAM or the forwarding network) and the
+//! rounding mode, with a loop counter driven by the sequencer. The
+//! published figure is too small to transcribe field-exactly, so this is
+//! a faithful *reconstruction* with the same information content, packed
+//! into 32 bits:
+//!
+//! ```text
+//!  31..30  unit      (00 DP CMA, 01 DP FMA, 10 SP CMA, 11 SP FMA)
+//!  29..28  op        (00 NOP, 01 FMAC, 10 MUL, 11 ADD)
+//!  27..26  rounding  (00 RNE, 01 RZ, 10 RU, 11 RD)
+//!  25..24  src_c sel (00 RAM, 01 forward result, 10 zero, 11 one)
+//!  23..22  src_b sel
+//!  21..20  src_a sel
+//!  19..10  RAM base address (ops stream sequentially from here)
+//!   9..0   repeat count − 1
+//! ```
+
+use crate::arch::rounding::RoundMode;
+
+/// Operand-source selector.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SrcSel {
+    Ram,
+    Forward,
+    Zero,
+    One,
+}
+
+/// FPU operation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Op {
+    Nop,
+    Fmac,
+    Mul,
+    Add,
+}
+
+/// Unit selector, Table-I order.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum UnitSel {
+    DpCma = 0,
+    DpFma = 1,
+    SpCma = 2,
+    SpFma = 3,
+}
+
+/// One decoded test instruction.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Instruction {
+    pub unit: UnitSel,
+    pub op: Op,
+    pub rounding: RoundMode,
+    pub src_a: SrcSel,
+    pub src_b: SrcSel,
+    pub src_c: SrcSel,
+    pub base_addr: u16,
+    pub repeat: u16,
+}
+
+fn sel_bits(s: SrcSel) -> u32 {
+    match s {
+        SrcSel::Ram => 0,
+        SrcSel::Forward => 1,
+        SrcSel::Zero => 2,
+        SrcSel::One => 3,
+    }
+}
+
+fn sel_from(b: u32) -> SrcSel {
+    match b & 3 {
+        0 => SrcSel::Ram,
+        1 => SrcSel::Forward,
+        2 => SrcSel::Zero,
+        _ => SrcSel::One,
+    }
+}
+
+impl Instruction {
+    /// A plain FMAC burst from the stimulus RAM.
+    pub fn fmac_burst(unit: UnitSel, base_addr: u16, count: u16) -> Instruction {
+        assert!(count >= 1 && count <= 1024, "repeat out of range");
+        Instruction {
+            unit,
+            op: Op::Fmac,
+            rounding: RoundMode::NearestEven,
+            src_a: SrcSel::Ram,
+            src_b: SrcSel::Ram,
+            src_c: SrcSel::Ram,
+            base_addr,
+            repeat: count - 1,
+        }
+    }
+
+    /// An accumulation burst: `c` comes from the forwarding network.
+    pub fn accumulate_burst(unit: UnitSel, base_addr: u16, count: u16) -> Instruction {
+        let mut i = Instruction::fmac_burst(unit, base_addr, count);
+        i.src_c = SrcSel::Forward;
+        i
+    }
+
+    /// Encode to the 32-bit word.
+    pub fn encode(&self) -> u32 {
+        assert!(self.base_addr < 1024 && self.repeat < 1024, "field overflow");
+        let op = match self.op {
+            Op::Nop => 0u32,
+            Op::Fmac => 1,
+            Op::Mul => 2,
+            Op::Add => 3,
+        };
+        let rnd = match self.rounding {
+            RoundMode::NearestEven => 0u32,
+            RoundMode::TowardZero => 1,
+            RoundMode::TowardPositive => 2,
+            RoundMode::TowardNegative => 3,
+        };
+        ((self.unit as u32) << 30)
+            | (op << 28)
+            | (rnd << 26)
+            | (sel_bits(self.src_c) << 24)
+            | (sel_bits(self.src_b) << 22)
+            | (sel_bits(self.src_a) << 20)
+            | ((self.base_addr as u32) << 10)
+            | (self.repeat as u32)
+    }
+
+    /// Decode from the 32-bit word.
+    pub fn decode(w: u32) -> Instruction {
+        let unit = match w >> 30 {
+            0 => UnitSel::DpCma,
+            1 => UnitSel::DpFma,
+            2 => UnitSel::SpCma,
+            _ => UnitSel::SpFma,
+        };
+        let op = match (w >> 28) & 3 {
+            0 => Op::Nop,
+            1 => Op::Fmac,
+            2 => Op::Mul,
+            _ => Op::Add,
+        };
+        let rounding = match (w >> 26) & 3 {
+            0 => RoundMode::NearestEven,
+            1 => RoundMode::TowardZero,
+            2 => RoundMode::TowardPositive,
+            _ => RoundMode::TowardNegative,
+        };
+        Instruction {
+            unit,
+            op,
+            rounding,
+            src_c: sel_from(w >> 24),
+            src_b: sel_from(w >> 22),
+            src_a: sel_from(w >> 20),
+            base_addr: ((w >> 10) & 0x3ff) as u16,
+            repeat: (w & 0x3ff) as u16,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn encode_decode_roundtrip() {
+        let cases = [
+            Instruction::fmac_burst(UnitSel::SpFma, 0, 1),
+            Instruction::fmac_burst(UnitSel::DpCma, 512, 1024),
+            Instruction::accumulate_burst(UnitSel::SpCma, 100, 64),
+            Instruction {
+                unit: UnitSel::DpFma,
+                op: Op::Mul,
+                rounding: RoundMode::TowardNegative,
+                src_a: SrcSel::One,
+                src_b: SrcSel::Zero,
+                src_c: SrcSel::Forward,
+                base_addr: 1023,
+                repeat: 1023,
+            },
+        ];
+        for ins in cases {
+            assert_eq!(Instruction::decode(ins.encode()), ins);
+        }
+    }
+
+    #[test]
+    fn roundtrip_all_field_extremes() {
+        for unit in [UnitSel::DpCma, UnitSel::DpFma, UnitSel::SpCma, UnitSel::SpFma] {
+            for op in [Op::Nop, Op::Fmac, Op::Mul, Op::Add] {
+                for rnd in RoundMode::ALL {
+                    let ins = Instruction {
+                        unit,
+                        op,
+                        rounding: rnd,
+                        src_a: SrcSel::Ram,
+                        src_b: SrcSel::Forward,
+                        src_c: SrcSel::One,
+                        base_addr: 7,
+                        repeat: 3,
+                    };
+                    assert_eq!(Instruction::decode(ins.encode()), ins);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn field_overflow_panics() {
+        let mut ins = Instruction::fmac_burst(UnitSel::SpFma, 0, 1);
+        ins.base_addr = 1024;
+        assert!(std::panic::catch_unwind(|| ins.encode()).is_err());
+    }
+
+    #[test]
+    fn burst_constructors() {
+        let i = Instruction::fmac_burst(UnitSel::SpFma, 16, 256);
+        assert_eq!(i.repeat, 255);
+        assert_eq!(i.src_c, SrcSel::Ram);
+        let a = Instruction::accumulate_burst(UnitSel::SpFma, 16, 256);
+        assert_eq!(a.src_c, SrcSel::Forward);
+        assert_eq!(a.src_a, SrcSel::Ram);
+    }
+}

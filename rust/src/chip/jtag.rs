@@ -1,0 +1,184 @@
+//! JTAG-like slow test port (Fig. 5(a): "A JTAG interface is used to
+//! load and check values in the RAMs at a lower speed").
+//!
+//! Modelled at the shift-register level: an instruction register (IR)
+//! selects a data register (DR); data moves one bit per TCK through
+//! `shift_dr`. The port is deliberately the *only* path to the RAMs
+//! besides the at-speed sequencer, exactly like silicon — the
+//! coordinator talks to the chip exclusively through this interface,
+//! and the tests count TCK cycles to verify the "lower speed" property.
+
+use super::ram::RamBank;
+
+/// IR opcodes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum JtagIr {
+    /// Read the fixed identification word.
+    IdCode,
+    /// Select (bank, address) for subsequent data shifts.
+    SetAddress,
+    /// Shift a 64-bit word into the selected RAM location.
+    WriteData,
+    /// Shift the selected RAM location out.
+    ReadData,
+    /// Bypass (1-bit pass-through).
+    Bypass,
+}
+
+/// The FPMax identification word (reconstruction: "FPMX" + version).
+pub const IDCODE: u64 = 0x4650_4d58_0001_2016;
+
+/// Address-register layout: high 8 bits bank id, low 24 bits word
+/// address.
+fn split_addr(dr: u64) -> (usize, usize) {
+    (((dr >> 24) & 0xff) as usize, (dr & 0xff_ffff) as usize)
+}
+
+/// The JTAG port wrapped around a set of RAM banks.
+pub struct JtagPort<'a> {
+    banks: Vec<&'a mut RamBank>,
+    ir: JtagIr,
+    /// Selected (bank, addr).
+    addr: (usize, usize),
+    /// TCK cycles consumed (the slow-port cost metric).
+    pub tck_cycles: u64,
+}
+
+impl<'a> JtagPort<'a> {
+    pub fn new(banks: Vec<&'a mut RamBank>) -> JtagPort<'a> {
+        JtagPort { banks, ir: JtagIr::Bypass, addr: (0, 0), tck_cycles: 0 }
+    }
+
+    /// Shift a new IR value (costs the IR length in TCK plus state
+    /// transitions — 8 cycles in this model).
+    pub fn shift_ir(&mut self, ir: JtagIr) {
+        self.ir = ir;
+        self.tck_cycles += 8;
+    }
+
+    /// Shift `bits` of data through the DR, returning the bits captured
+    /// on the way out (LSB-first, like a real scan chain).
+    pub fn shift_dr(&mut self, data_in: u64, bits: u32) -> crate::Result<u64> {
+        assert!(bits >= 1 && bits <= 64);
+        self.tck_cycles += bits as u64 + 4; // data + capture/update states
+        match self.ir {
+            JtagIr::Bypass => Ok(data_in & 1),
+            JtagIr::IdCode => Ok(IDCODE & mask(bits)),
+            JtagIr::SetAddress => {
+                self.addr = split_addr(data_in & mask(bits));
+                Ok(0)
+            }
+            JtagIr::WriteData => {
+                let (bank, addr) = self.addr;
+                let b = self
+                    .banks
+                    .get_mut(bank)
+                    .ok_or_else(|| anyhow::anyhow!("jtag: no bank {bank}"))?;
+                b.poke(addr, data_in & mask(bits))?;
+                // Auto-increment for streaming loads (standard DFT trick).
+                self.addr.1 += 1;
+                Ok(0)
+            }
+            JtagIr::ReadData => {
+                let (bank, addr) = self.addr;
+                let b = self.banks.get(bank).ok_or_else(|| anyhow::anyhow!("jtag: no bank {bank}"))?;
+                let v = b
+                    .peek(addr)
+                    .ok_or_else(|| anyhow::anyhow!("jtag: bank {bank} addr {addr} out of range"))?;
+                self.addr.1 += 1;
+                Ok(v & mask(bits))
+            }
+        }
+    }
+
+    /// Convenience: stream a slice into a bank starting at address 0.
+    pub fn load_bank(&mut self, bank: usize, data: &[u64]) -> crate::Result<()> {
+        self.shift_ir(JtagIr::SetAddress);
+        self.shift_dr((bank as u64) << 24, 32)?;
+        self.shift_ir(JtagIr::WriteData);
+        for &w in data {
+            self.shift_dr(w, 64)?;
+        }
+        Ok(())
+    }
+
+    /// Convenience: stream `n` words out of a bank starting at address 0.
+    pub fn read_bank(&mut self, bank: usize, n: usize) -> crate::Result<Vec<u64>> {
+        self.shift_ir(JtagIr::SetAddress);
+        self.shift_dr((bank as u64) << 24, 32)?;
+        self.shift_ir(JtagIr::ReadData);
+        (0..n).map(|_| self.shift_dr(0, 64)).collect()
+    }
+}
+
+fn mask(bits: u32) -> u64 {
+    if bits >= 64 {
+        u64::MAX
+    } else {
+        (1u64 << bits) - 1
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn idcode_readable() {
+        let mut bank = RamBank::new("stim", 4);
+        let mut port = JtagPort::new(vec![&mut bank]);
+        port.shift_ir(JtagIr::IdCode);
+        assert_eq!(port.shift_dr(0, 64).unwrap(), IDCODE);
+        assert_eq!(port.shift_dr(0, 16).unwrap(), IDCODE & 0xffff);
+    }
+
+    #[test]
+    fn write_then_read_roundtrip() {
+        let mut bank = RamBank::new("stim", 16);
+        {
+            let mut port = JtagPort::new(vec![&mut bank]);
+            port.load_bank(0, &[11, 22, 33]).unwrap();
+            let back = port.read_bank(0, 3).unwrap();
+            assert_eq!(back, vec![11, 22, 33]);
+        }
+        // JTAG traffic must not count as at-speed accesses.
+        assert_eq!(bank.reads + bank.writes, 0);
+    }
+
+    #[test]
+    fn tck_accounting_shows_slow_port() {
+        let mut bank = RamBank::new("stim", 1024);
+        let mut port = JtagPort::new(vec![&mut bank]);
+        let data: Vec<u64> = (0..1024).collect();
+        port.load_bank(0, &data).unwrap();
+        // 1024 words × (64+4) TCK plus setup: ≥ 68k cycles for 64 kbit —
+        // three orders slower than the at-speed port's word/cycle.
+        assert!(port.tck_cycles > 68_000, "{}", port.tck_cycles);
+    }
+
+    #[test]
+    fn bad_bank_and_overflow_errors() {
+        let mut bank = RamBank::new("stim", 2);
+        let mut port = JtagPort::new(vec![&mut bank]);
+        assert!(port.load_bank(3, &[1]).is_err());
+        assert!(port.load_bank(0, &[1, 2, 3]).is_err()); // autoincrement past end
+    }
+
+    #[test]
+    fn bypass_passes_one_bit() {
+        let mut bank = RamBank::new("stim", 2);
+        let mut port = JtagPort::new(vec![&mut bank]);
+        port.shift_ir(JtagIr::Bypass);
+        assert_eq!(port.shift_dr(0b1011, 4).unwrap(), 1);
+    }
+
+    #[test]
+    fn multiple_banks_addressable() {
+        let mut stim = RamBank::new("stim", 8);
+        let mut res = RamBank::new("res", 8);
+        let mut port = JtagPort::new(vec![&mut stim, &mut res]);
+        port.load_bank(1, &[99]).unwrap();
+        assert_eq!(port.read_bank(1, 1).unwrap(), vec![99]);
+        assert_eq!(port.read_bank(0, 1).unwrap(), vec![0]);
+    }
+}

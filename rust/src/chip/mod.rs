@@ -1,0 +1,14 @@
+//! The FPMax chip testbench of Fig. 5: stimulus/result RAM banks
+//! ([`ram`]), the JTAG-like slow port ([`jtag`]), the test-program
+//! instruction encoding ([`isa`]), and the at-speed sequencer
+//! ([`tester`]).
+
+pub mod isa;
+pub mod jtag;
+pub mod ram;
+pub mod tester;
+
+pub use isa::{Instruction, Op, SrcSel, UnitSel};
+pub use jtag::{JtagIr, JtagPort, IDCODE};
+pub use ram::RamBank;
+pub use tester::{expected_result, FpMaxChip, RunStats, BANK_PROGRAM, BANK_RESULT, BANK_STIM_A, BANK_STIM_B, BANK_STIM_C};

@@ -1,0 +1,129 @@
+//! On-chip test RAMs (Fig. 5(a)).
+//!
+//! The FPMax chip feeds each FPU from high-speed stimulus RAMs and
+//! captures results into a result RAM at full FPU speed; the JTAG port
+//! reads and writes the RAMs at its own slow clock. The model mirrors
+//! that: word-addressed banks with separate at-speed and test-port
+//! access paths, plus access counters so the testbench can report
+//! bandwidth.
+
+/// One word-addressed RAM bank.
+#[derive(Debug, Clone)]
+pub struct RamBank {
+    name: &'static str,
+    words: Vec<u64>,
+    /// At-speed accesses (FPU side).
+    pub reads: u64,
+    pub writes: u64,
+}
+
+impl RamBank {
+    pub fn new(name: &'static str, depth: usize) -> RamBank {
+        RamBank { name, words: vec![0; depth], reads: 0, writes: 0 }
+    }
+
+    pub fn depth(&self) -> usize {
+        self.words.len()
+    }
+
+    pub fn name(&self) -> &'static str {
+        self.name
+    }
+
+    /// At-speed read (FPU side).
+    pub fn read(&mut self, addr: usize) -> crate::Result<u64> {
+        let v = *self
+            .words
+            .get(addr)
+            .ok_or_else(|| anyhow::anyhow!("{}: read past depth ({addr} ≥ {})", self.name, self.words.len()))?;
+        self.reads += 1;
+        Ok(v)
+    }
+
+    /// At-speed write (FPU side).
+    pub fn write(&mut self, addr: usize, value: u64) -> crate::Result<()> {
+        let len = self.words.len();
+        let slot = self
+            .words
+            .get_mut(addr)
+            .ok_or_else(|| anyhow::anyhow!("{}: write past depth ({addr} ≥ {len})", self.name))?;
+        *slot = value;
+        self.writes += 1;
+        Ok(())
+    }
+
+    /// Test-port (JTAG-side) access: no at-speed counters.
+    pub fn peek(&self, addr: usize) -> Option<u64> {
+        self.words.get(addr).copied()
+    }
+
+    pub fn poke(&mut self, addr: usize, value: u64) -> crate::Result<()> {
+        let len = self.words.len();
+        let slot = self
+            .words
+            .get_mut(addr)
+            .ok_or_else(|| anyhow::anyhow!("{}: poke past depth ({addr} ≥ {len})", self.name))?;
+        *slot = value;
+        Ok(())
+    }
+
+    /// Bulk test-port load starting at address 0.
+    pub fn load(&mut self, data: &[u64]) -> crate::Result<()> {
+        if data.len() > self.words.len() {
+            anyhow::bail!("{}: load of {} words exceeds depth {}", self.name, data.len(), self.words.len());
+        }
+        self.words[..data.len()].copy_from_slice(data);
+        Ok(())
+    }
+
+    /// Reset contents and counters.
+    pub fn clear(&mut self) {
+        self.words.fill(0);
+        self.reads = 0;
+        self.writes = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn read_write_roundtrip() {
+        let mut r = RamBank::new("stim", 16);
+        r.write(3, 0xdead_beef).unwrap();
+        assert_eq!(r.read(3).unwrap(), 0xdead_beef);
+        assert_eq!(r.reads, 1);
+        assert_eq!(r.writes, 1);
+    }
+
+    #[test]
+    fn out_of_range_rejected() {
+        let mut r = RamBank::new("stim", 4);
+        assert!(r.read(4).is_err());
+        assert!(r.write(100, 1).is_err());
+        assert!(r.poke(4, 1).is_err());
+        assert_eq!(r.peek(4), None);
+    }
+
+    #[test]
+    fn bulk_load_and_peek() {
+        let mut r = RamBank::new("stim", 8);
+        r.load(&[1, 2, 3]).unwrap();
+        assert_eq!(r.peek(0), Some(1));
+        assert_eq!(r.peek(2), Some(3));
+        assert_eq!(r.peek(3), Some(0));
+        // Test-port traffic doesn't count as at-speed.
+        assert_eq!(r.reads + r.writes, 0);
+        assert!(r.load(&[0; 9]).is_err());
+    }
+
+    #[test]
+    fn clear_resets_everything() {
+        let mut r = RamBank::new("res", 4);
+        r.write(0, 7).unwrap();
+        r.clear();
+        assert_eq!(r.peek(0), Some(0));
+        assert_eq!(r.writes, 0);
+    }
+}

@@ -1,0 +1,324 @@
+//! The at-speed test sequencer: Fig. 5(a)'s datapath — stimulus RAMs →
+//! selected FPU → result RAM — driven by the Fig. 5(b) instruction
+//! stream.
+//!
+//! `run()` executes the loaded program exactly as the silicon sequencer
+//! would: one FMAC per cycle from the RAMs in burst mode, or one per
+//! bypass-latency when an operand comes from the forwarding network
+//! (accumulation tests), with cycle accounting per burst. All four
+//! generated FPUs live on the chip simultaneously, as fabricated.
+
+use crate::arch::fp::Precision;
+use crate::arch::generator::{FpuConfig, FpuUnit};
+use crate::arch::rounding::RoundMode;
+use crate::pipesim::sim::LatencyModel;
+use crate::pipesim::trace::DepKind;
+
+use super::isa::{Instruction, Op, SrcSel, UnitSel};
+use super::jtag::JtagPort;
+use super::ram::RamBank;
+
+/// RAM bank indices on the JTAG chain.
+pub const BANK_STIM_A: usize = 0;
+pub const BANK_STIM_B: usize = 1;
+pub const BANK_STIM_C: usize = 2;
+pub const BANK_RESULT: usize = 3;
+pub const BANK_PROGRAM: usize = 4;
+
+/// Statistics from one at-speed run.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct RunStats {
+    pub instructions: u64,
+    pub ops: u64,
+    pub cycles: u64,
+    pub results_written: u64,
+}
+
+/// The FPMax chip model.
+pub struct FpMaxChip {
+    units: [FpuUnit; 4],
+    stim_a: RamBank,
+    stim_b: RamBank,
+    stim_c: RamBank,
+    result: RamBank,
+    program: RamBank,
+}
+
+impl FpMaxChip {
+    /// Instantiate the chip with the four fabricated units and RAMs of
+    /// the given depth (words).
+    pub fn new(ram_depth: usize) -> FpMaxChip {
+        FpMaxChip {
+            units: [
+                FpuUnit::generate(&FpuConfig::dp_cma()),
+                FpuUnit::generate(&FpuConfig::dp_fma()),
+                FpuUnit::generate(&FpuConfig::sp_cma()),
+                FpuUnit::generate(&FpuConfig::sp_fma()),
+            ],
+            stim_a: RamBank::new("stim_a", ram_depth),
+            stim_b: RamBank::new("stim_b", ram_depth),
+            stim_c: RamBank::new("stim_c", ram_depth),
+            result: RamBank::new("result", ram_depth),
+            program: RamBank::new("program", 256),
+        }
+    }
+
+    /// The unit behind a selector.
+    pub fn unit(&self, sel: UnitSel) -> &FpuUnit {
+        &self.units[sel as usize]
+    }
+
+    /// Open the JTAG port over all banks (the only off-chip interface).
+    pub fn jtag(&mut self) -> JtagPort<'_> {
+        JtagPort::new(vec![
+            &mut self.stim_a,
+            &mut self.stim_b,
+            &mut self.stim_c,
+            &mut self.result,
+            &mut self.program,
+        ])
+    }
+
+    /// Execute the loaded program at speed.
+    pub fn run(&mut self) -> crate::Result<RunStats> {
+        let mut stats = RunStats::default();
+        let mut result_wptr = 0usize;
+        for pc in 0..self.program.depth() {
+            let word = self.program.peek(pc).unwrap_or(0);
+            if word == 0 {
+                break; // end of program (all-zero word = halt)
+            }
+            let ins = Instruction::decode(word as u32);
+            stats.instructions += 1;
+            if matches!(ins.op, Op::Nop) {
+                stats.cycles += (ins.repeat as u64) + 1;
+                continue;
+            }
+            let unit = &self.units[ins.unit as usize];
+            let lat = LatencyModel::of(unit);
+            let one = match unit.config.precision {
+                Precision::Single => 1.0f32.to_bits() as u64,
+                Precision::Double => 1.0f64.to_bits(),
+            };
+            let mut forward: u64 = 0;
+            // Per-op issue distance: 1 from RAM, or the bypass tap when an
+            // operand comes from the forwarding network.
+            let uses_fwd_c = ins.src_c == SrcSel::Forward;
+            let uses_fwd_ab = ins.src_a == SrcSel::Forward || ins.src_b == SrcSel::Forward;
+            let issue_dist = if uses_fwd_ab {
+                lat.tap(DepKind::Multiplier).max(1) as u64
+            } else if uses_fwd_c {
+                lat.tap(DepKind::Accumulate).max(1) as u64
+            } else {
+                1
+            };
+            for i in 0..=(ins.repeat as usize) {
+                let addr = ins.base_addr as usize + i;
+                let fetch = |ram: &mut RamBank, sel: SrcSel, fwd: u64| -> crate::Result<u64> {
+                    Ok(match sel {
+                        SrcSel::Ram => ram.read(addr)?,
+                        SrcSel::Forward => fwd,
+                        SrcSel::Zero => 0,
+                        SrcSel::One => one,
+                    })
+                };
+                let a = fetch(&mut self.stim_a, ins.src_a, forward)?;
+                let b = fetch(&mut self.stim_b, ins.src_b, forward)?;
+                let c = fetch(&mut self.stim_c, ins.src_c, forward)?;
+                let r = match ins.op {
+                    Op::Fmac => unit.fmac_mode(ins.rounding, a, b, c).0,
+                    Op::Mul => crate::arch::softfloat::mul(unit.format, ins.rounding, a, b),
+                    Op::Add => crate::arch::softfloat::add(unit.format, ins.rounding, a, c),
+                    Op::Nop => unreachable!(),
+                };
+                forward = r.bits;
+                self.result.write(result_wptr, r.bits)?;
+                result_wptr += 1;
+                stats.ops += 1;
+                stats.cycles += issue_dist;
+            }
+            // Pipeline drain between instructions.
+            stats.cycles += lat.full as u64;
+        }
+        stats.results_written = result_wptr as u64;
+        Ok(stats)
+    }
+
+    /// Reset RAMs (not the units — they are combinational).
+    pub fn reset(&mut self) {
+        self.stim_a.clear();
+        self.stim_b.clear();
+        self.stim_c.clear();
+        self.result.clear();
+        self.program.clear();
+    }
+}
+
+/// Round-mode helper shared by self-test drivers: the expected result of
+/// an instruction's op through the golden softfloat model.
+pub fn expected_result(unit: &FpuUnit, mode: RoundMode, a: u64, b: u64, c: u64, op: Op) -> u64 {
+    use crate::arch::softfloat;
+    match (op, unit.config.kind) {
+        (Op::Fmac, crate::arch::generator::FpuKind::Fma) => {
+            softfloat::fma(unit.format, mode, a, b, c).bits
+        }
+        (Op::Fmac, crate::arch::generator::FpuKind::Cma) => {
+            let p = softfloat::mul(unit.format, mode, a, b);
+            softfloat::add(unit.format, mode, p.bits, c).bits
+        }
+        (Op::Mul, _) => softfloat::mul(unit.format, mode, a, b).bits,
+        (Op::Add, _) => softfloat::add(unit.format, mode, a, c).bits,
+        (Op::Nop, _) => 0,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workloads::throughput::{OperandMix, OperandStream};
+
+    fn load_triples(chip: &mut FpMaxChip, triples: &[(u64, u64, u64)]) {
+        let a: Vec<u64> = triples.iter().map(|t| t.0).collect();
+        let b: Vec<u64> = triples.iter().map(|t| t.1).collect();
+        let c: Vec<u64> = triples.iter().map(|t| t.2).collect();
+        let mut port = chip.jtag();
+        port.load_bank(BANK_STIM_A, &a).unwrap();
+        port.load_bank(BANK_STIM_B, &b).unwrap();
+        port.load_bank(BANK_STIM_C, &c).unwrap();
+    }
+
+    #[test]
+    fn fmac_burst_correct_results() {
+        let mut chip = FpMaxChip::new(64);
+        let mut stream = OperandStream::new(Precision::Single, OperandMix::Finite, 21);
+        let triples: Vec<(u64, u64, u64)> =
+            stream.batch(32).into_iter().map(|t| (t.a, t.b, t.c)).collect();
+        load_triples(&mut chip, &triples);
+        let prog = [Instruction::fmac_burst(UnitSel::SpFma, 0, 32).encode() as u64];
+        chip.jtag().load_bank(BANK_PROGRAM, &prog).unwrap();
+        let stats = chip.run().unwrap();
+        assert_eq!(stats.ops, 32);
+        assert_eq!(stats.results_written, 32);
+        // Burst from RAM: 1 op/cycle + drain.
+        assert_eq!(stats.cycles, 32 + 4);
+        let results = chip.jtag().read_bank(BANK_RESULT, 32).unwrap();
+        for (i, &(a, b, c)) in triples.iter().enumerate() {
+            let fa = f32::from_bits(a as u32);
+            let fb = f32::from_bits(b as u32);
+            let fc = f32::from_bits(c as u32);
+            let want = fa.mul_add(fb, fc);
+            let got = f32::from_bits(results[i] as u32);
+            assert!(
+                (got.is_nan() && want.is_nan()) || got.to_bits() == want.to_bits(),
+                "op {i}: {got:e} vs {want:e}"
+            );
+        }
+    }
+
+    #[test]
+    fn accumulate_burst_uses_forwarding_and_stalls() {
+        let mut chip = FpMaxChip::new(64);
+        // a=1.0, b=x_i, c=forward: running sum of x_i (CMA semantics).
+        let one = 1.0f32.to_bits() as u64;
+        let xs: Vec<f32> = (1..=8).map(|i| i as f32).collect();
+        let triples: Vec<(u64, u64, u64)> =
+            xs.iter().map(|x| (one, x.to_bits() as u64, 0)).collect();
+        load_triples(&mut chip, &triples);
+        let prog = [Instruction::accumulate_burst(UnitSel::SpCma, 0, 8).encode() as u64];
+        chip.jtag().load_bank(BANK_PROGRAM, &prog).unwrap();
+        let stats = chip.run().unwrap();
+        // Accumulation throttles to the bypass tap (SP CMA to_add = 2).
+        let tap = chip.unit(UnitSel::SpCma).latency_to_add_input() as u64;
+        assert_eq!(stats.cycles, 8 * tap + chip.unit(UnitSel::SpCma).latency_full() as u64);
+        let results = chip.jtag().read_bank(BANK_RESULT, 8).unwrap();
+        // First op: 1·1 + 0 = 1; then 1·2+1=3, 1·3+3=6 … triangular sums.
+        let want: Vec<f32> = vec![1.0, 3.0, 6.0, 10.0, 15.0, 21.0, 28.0, 36.0];
+        for (i, w) in want.iter().enumerate() {
+            assert_eq!(f32::from_bits(results[i] as u32), *w, "op {i}");
+        }
+    }
+
+    #[test]
+    fn all_four_units_run_same_program() {
+        for (sel, sp) in [
+            (UnitSel::DpCma, false),
+            (UnitSel::DpFma, false),
+            (UnitSel::SpCma, true),
+            (UnitSel::SpFma, true),
+        ] {
+            let mut chip = FpMaxChip::new(32);
+            let prec = if sp { Precision::Single } else { Precision::Double };
+            let mut stream = OperandStream::new(prec, OperandMix::Finite, 5);
+            let triples: Vec<(u64, u64, u64)> =
+                stream.batch(16).into_iter().map(|t| (t.a, t.b, t.c)).collect();
+            load_triples(&mut chip, &triples);
+            let prog = [Instruction::fmac_burst(sel, 0, 16).encode() as u64];
+            chip.jtag().load_bank(BANK_PROGRAM, &prog).unwrap();
+            let stats = chip.run().unwrap();
+            assert_eq!(stats.ops, 16, "{sel:?}");
+            let results = chip.jtag().read_bank(BANK_RESULT, 16).unwrap();
+            for (i, &(a, b, c)) in triples.iter().enumerate() {
+                let want = expected_result(
+                    chip.unit(sel),
+                    RoundMode::NearestEven,
+                    a,
+                    b,
+                    c,
+                    Op::Fmac,
+                );
+                let fmt = chip.unit(sel).format;
+                let got = results[i];
+                let both_nan = {
+                    let d1 = crate::arch::fp::decode(fmt, got);
+                    let d2 = crate::arch::fp::decode(fmt, want);
+                    d1.class == crate::arch::fp::Class::Nan && d2.class == crate::arch::fp::Class::Nan
+                };
+                assert!(got == want || both_nan, "{sel:?} op {i}: {got:#x} vs {want:#x}");
+            }
+        }
+    }
+
+    #[test]
+    fn multi_instruction_program() {
+        let mut chip = FpMaxChip::new(64);
+        let one = 1.0f32.to_bits() as u64;
+        let two = 2.0f32.to_bits() as u64;
+        load_triples(&mut chip, &[(one, two, one); 20]);
+        let prog = [
+            Instruction::fmac_burst(UnitSel::SpFma, 0, 4).encode() as u64,
+            Instruction::fmac_burst(UnitSel::SpCma, 4, 4).encode() as u64,
+            Instruction {
+                op: Op::Nop,
+                ..Instruction::fmac_burst(UnitSel::SpFma, 0, 8)
+            }
+            .encode() as u64,
+            Instruction::fmac_burst(UnitSel::DpFma, 8, 2).encode() as u64,
+        ];
+        chip.jtag().load_bank(BANK_PROGRAM, &prog).unwrap();
+        let stats = chip.run().unwrap();
+        assert_eq!(stats.instructions, 4);
+        assert_eq!(stats.ops, 10); // 4 + 4 + 0 + 2
+        assert_eq!(stats.results_written, 10);
+        // SP results: 1·2+1 = 3.
+        let r = chip.jtag().read_bank(BANK_RESULT, 8).unwrap();
+        assert!(r[..8].iter().all(|&w| f32::from_bits(w as u32) == 3.0));
+    }
+
+    #[test]
+    fn program_halts_on_zero_word() {
+        let mut chip = FpMaxChip::new(16);
+        let prog = [0u64; 4];
+        chip.jtag().load_bank(BANK_PROGRAM, &prog).unwrap();
+        let stats = chip.run().unwrap();
+        assert_eq!(stats.instructions, 0);
+        assert_eq!(stats.ops, 0);
+    }
+
+    #[test]
+    fn ram_overflow_surfaces_as_error() {
+        let mut chip = FpMaxChip::new(8);
+        let prog = [Instruction::fmac_burst(UnitSel::SpFma, 4, 8).encode() as u64];
+        chip.jtag().load_bank(BANK_PROGRAM, &prog).unwrap();
+        assert!(chip.run().is_err()); // reads addresses 4..12 in a depth-8 RAM
+    }
+}

@@ -1,0 +1,261 @@
+//! The verification coordinator: batches operand streams through the
+//! bit-accurate Rust datapaths **and** the AOT-compiled JAX/Pallas
+//! artifact, cross-checks every result, and aggregates activity.
+//!
+//! This closes the three-layer loop of the reproduction:
+//!
+//! ```text
+//!   L1/L2 (build time)        L3 (run time, this module)
+//!   pallas kernel ──aot──►  artifact ──PJRT──► result bits ─┐
+//!                                                           ├─ compare
+//!   FpuConfig ──generate──► FpuUnit ──datapath─► result bits┘
+//! ```
+//!
+//! The Rust side is parallelized over worker threads (std::thread::scope
+//! — the offline environment has no tokio; the workload is pure CPU
+//! compute, so a scoped fork-join is the right shape anyway).
+
+use std::time::Instant;
+
+use crate::arch::fp::{decode, Class, Precision};
+use crate::arch::generator::{FpuKind, FpuUnit};
+use crate::arch::rounding::RoundMode;
+use crate::arch::softfloat;
+use crate::runtime::FmacArtifact;
+use crate::workloads::throughput::OperandTriple;
+
+/// One mismatch record (capped in the report).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Mismatch {
+    pub index: usize,
+    pub a: u64,
+    pub b: u64,
+    pub c: u64,
+    pub got: u64,
+    pub want: u64,
+}
+
+/// Outcome of one cross-checked batch.
+#[derive(Debug, Clone)]
+pub struct VerifyReport {
+    pub ops: usize,
+    /// Artifact (PJRT) vs golden softfloat fused-FMA.
+    pub artifact_mismatches: Vec<Mismatch>,
+    /// Rust datapath vs its own semantics (fused for FMA units, cascade
+    /// for CMA units).
+    pub datapath_mismatches: Vec<Mismatch>,
+    /// Toggle count reported by the artifact (activity proxy).
+    pub artifact_toggles: u64,
+    /// Wall-clock seconds: Rust datapath pass / PJRT pass.
+    pub rust_secs: f64,
+    pub pjrt_secs: f64,
+}
+
+impl VerifyReport {
+    pub fn clean(&self) -> bool {
+        self.artifact_mismatches.is_empty() && self.datapath_mismatches.is_empty()
+    }
+}
+
+/// NaN-insensitive bit comparison: any-NaN ≡ any-NaN (payloads differ
+/// legitimately between implementations).
+fn same_value(precision: Precision, x: u64, y: u64) -> bool {
+    if x == y {
+        return true;
+    }
+    let fmt = precision.format();
+    decode(fmt, x).class == Class::Nan && decode(fmt, y).class == Class::Nan
+}
+
+const MISMATCH_CAP: usize = 16;
+
+/// Run `triples` through the Rust datapath of `unit` and through the
+/// PJRT `artifact`, cross-checking both against the golden softfloat.
+pub fn verify_batch(
+    unit: &FpuUnit,
+    artifact: &FmacArtifact,
+    triples: &[OperandTriple],
+    workers: usize,
+) -> crate::Result<VerifyReport> {
+    anyhow::ensure!(
+        artifact.precision == unit.config.precision,
+        "artifact precision {:?} != unit {:?}",
+        artifact.precision,
+        unit.config.precision
+    );
+    let precision = unit.config.precision;
+    let fmt = precision.format();
+    let n = triples.len();
+    let a: Vec<u64> = triples.iter().map(|t| t.a).collect();
+    let b: Vec<u64> = triples.iter().map(|t| t.b).collect();
+    let c: Vec<u64> = triples.iter().map(|t| t.c).collect();
+
+    // --- PJRT pass -------------------------------------------------
+    let t0 = Instant::now();
+    let out = artifact.fmac(&a, &b, &c)?;
+    let pjrt_secs = t0.elapsed().as_secs_f64();
+
+    // --- Rust datapath pass (parallel fork-join) ---------------------
+    let t1 = Instant::now();
+    let workers = workers.max(1).min(n.max(1));
+    let mut datapath = vec![0u64; n];
+    let chunk = n.div_ceil(workers);
+    std::thread::scope(|s| {
+        for (i, slot) in datapath.chunks_mut(chunk).enumerate() {
+            let (a, b, c) = (&a, &b, &c);
+            s.spawn(move || {
+                let base = i * chunk;
+                for (j, out) in slot.iter_mut().enumerate() {
+                    let k = base + j;
+                    *out = unit.fmac(a[k], b[k], c[k]).bits;
+                }
+            });
+        }
+    });
+    let rust_secs = t1.elapsed().as_secs_f64();
+
+    // --- Cross-checks -------------------------------------------------
+    let mut artifact_mismatches = Vec::new();
+    let mut datapath_mismatches = Vec::new();
+    for i in 0..n {
+        // The artifact implements the fused op; golden = softfloat::fma.
+        let fused = softfloat::fma(fmt, RoundMode::NearestEven, a[i], b[i], c[i]).bits;
+        if !same_value(precision, out.bits[i], fused) && artifact_mismatches.len() < MISMATCH_CAP {
+            artifact_mismatches.push(Mismatch {
+                index: i,
+                a: a[i],
+                b: b[i],
+                c: c[i],
+                got: out.bits[i],
+                want: fused,
+            });
+        }
+        // The unit implements its own Table-I semantics.
+        let unit_want = match unit.config.kind {
+            FpuKind::Fma => fused,
+            FpuKind::Cma => {
+                let p = softfloat::mul(fmt, RoundMode::NearestEven, a[i], b[i]);
+                softfloat::add(fmt, RoundMode::NearestEven, p.bits, c[i]).bits
+            }
+        };
+        if !same_value(precision, datapath[i], unit_want)
+            && datapath_mismatches.len() < MISMATCH_CAP
+        {
+            datapath_mismatches.push(Mismatch {
+                index: i,
+                a: a[i],
+                b: b[i],
+                c: c[i],
+                got: datapath[i],
+                want: unit_want,
+            });
+        }
+    }
+
+    Ok(VerifyReport {
+        ops: n,
+        artifact_mismatches,
+        datapath_mismatches,
+        artifact_toggles: out.toggles,
+        rust_secs,
+        pjrt_secs,
+    })
+}
+
+/// Pure-Rust verification (no artifact): unit datapath vs golden
+/// softfloat. Used where PJRT is unavailable and by the test suite.
+pub fn verify_datapath_only(unit: &FpuUnit, triples: &[OperandTriple], workers: usize) -> VerifyReport {
+    let precision = unit.config.precision;
+    let fmt = precision.format();
+    let n = triples.len();
+    let t1 = Instant::now();
+    let workers = workers.max(1).min(n.max(1));
+    let chunk = n.div_ceil(workers);
+    let mut mismatches: Vec<Vec<Mismatch>> = Vec::new();
+    std::thread::scope(|s| {
+        let mut handles = Vec::new();
+        for (i, ts) in triples.chunks(chunk).enumerate() {
+            handles.push(s.spawn(move || {
+                let mut local = Vec::new();
+                for (j, t) in ts.iter().enumerate() {
+                    let got = unit.fmac(t.a, t.b, t.c).bits;
+                    let want = match unit.config.kind {
+                        FpuKind::Fma => {
+                            softfloat::fma(fmt, RoundMode::NearestEven, t.a, t.b, t.c).bits
+                        }
+                        FpuKind::Cma => {
+                            let p = softfloat::mul(fmt, RoundMode::NearestEven, t.a, t.b);
+                            softfloat::add(fmt, RoundMode::NearestEven, p.bits, t.c).bits
+                        }
+                    };
+                    if !same_value(precision, got, want) && local.len() < MISMATCH_CAP {
+                        local.push(Mismatch { index: i * chunk + j, a: t.a, b: t.b, c: t.c, got, want });
+                    }
+                }
+                local
+            }));
+        }
+        for h in handles {
+            mismatches.push(h.join().expect("worker panicked"));
+        }
+    });
+    VerifyReport {
+        ops: n,
+        artifact_mismatches: Vec::new(),
+        datapath_mismatches: mismatches.into_iter().flatten().take(MISMATCH_CAP).collect(),
+        artifact_toggles: 0,
+        rust_secs: t1.elapsed().as_secs_f64(),
+        pjrt_secs: 0.0,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::generator::FpuConfig;
+    use crate::workloads::throughput::{OperandMix, OperandStream};
+
+    #[test]
+    fn datapath_only_all_units_clean() {
+        for cfg in FpuConfig::fpmax_units() {
+            let unit = FpuUnit::generate(&cfg);
+            let mut s = OperandStream::new(cfg.precision, OperandMix::Finite, 77);
+            let triples = s.batch(4000);
+            let r = verify_datapath_only(&unit, &triples, 4);
+            assert!(r.datapath_mismatches.is_empty(), "{}: {:?}", cfg.name(), r.datapath_mismatches.first());
+            assert_eq!(r.ops, 4000);
+        }
+    }
+
+    #[test]
+    fn datapath_handles_specials_cleanly() {
+        let cfg = FpuConfig::sp_fma();
+        let unit = FpuUnit::generate(&cfg);
+        let mut s = OperandStream::new(cfg.precision, OperandMix::Anything, 13);
+        let triples = s.batch(4000);
+        let r = verify_datapath_only(&unit, &triples, 4);
+        assert!(r.datapath_mismatches.is_empty(), "{:?}", r.datapath_mismatches.first());
+    }
+
+    #[test]
+    fn worker_counts_agree() {
+        let cfg = FpuConfig::dp_cma();
+        let unit = FpuUnit::generate(&cfg);
+        let mut s = OperandStream::new(cfg.precision, OperandMix::Finite, 5);
+        let triples = s.batch(1003); // deliberately not divisible
+        for workers in [1, 2, 3, 8, 64] {
+            let r = verify_datapath_only(&unit, &triples, workers);
+            assert_eq!(r.ops, 1003);
+            assert!(r.datapath_mismatches.is_empty(), "workers={workers}");
+        }
+    }
+
+    #[test]
+    fn same_value_nan_insensitive() {
+        let qnan = 0x7fc0_0000u64;
+        let other_nan = 0x7fc0_0001u64;
+        assert!(same_value(Precision::Single, qnan, other_nan));
+        assert!(!same_value(Precision::Single, qnan, 0x7f80_0000));
+        assert!(same_value(Precision::Single, 5, 5));
+    }
+}

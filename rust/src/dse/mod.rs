@@ -1,0 +1,9 @@
+//! Design-space exploration: the FPGen sweep loop ([`sweep`]) and
+//! Pareto-frontier extraction ([`pareto`]) that together regenerate the
+//! tradeoff curves of Fig. 3 and Fig. 4.
+
+pub mod pareto;
+pub mod sweep;
+
+pub use pareto::{dominates, frontier, Objective};
+pub use sweep::{arch_space, arch_sweep, voltage_bb_sweep, voltage_sweep, DsePoint};

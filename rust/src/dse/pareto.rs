@@ -1,0 +1,134 @@
+//! Pareto-frontier extraction over (performance ↑, energy ↓) points —
+//! how FPGen picks the designs worth fabricating (Fig. 3's curves are
+//! frontiers of exactly this form).
+
+/// A point in the 2-D objective space: maximize `perf`, minimize
+/// `energy`.
+pub trait Objective {
+    fn perf(&self) -> f64;
+    fn energy(&self) -> f64;
+}
+
+impl Objective for (f64, f64) {
+    fn perf(&self) -> f64 {
+        self.0
+    }
+    fn energy(&self) -> f64 {
+        self.1
+    }
+}
+
+/// Does `a` dominate `b` (no worse in both, strictly better in one)?
+pub fn dominates<T: Objective>(a: &T, b: &T) -> bool {
+    let ge = a.perf() >= b.perf() && a.energy() <= b.energy();
+    let strict = a.perf() > b.perf() || a.energy() < b.energy();
+    ge && strict
+}
+
+/// Indices of the Pareto-optimal points, sorted by ascending performance.
+///
+/// O(n log n): sort by perf descending (energy ascending as tiebreak),
+/// sweep keeping the running energy minimum.
+pub fn frontier<T: Objective>(points: &[T]) -> Vec<usize> {
+    let mut idx: Vec<usize> = (0..points.len()).collect();
+    idx.sort_by(|&i, &j| {
+        points[j]
+            .perf()
+            .partial_cmp(&points[i].perf())
+            .unwrap()
+            .then(points[i].energy().partial_cmp(&points[j].energy()).unwrap())
+    });
+    let mut out = Vec::new();
+    let mut best_energy = f64::INFINITY;
+    let mut last_perf = f64::NAN;
+    for &i in &idx {
+        let e = points[i].energy();
+        let p = points[i].perf();
+        if e < best_energy {
+            // Equal-perf duplicates: only the lowest-energy one survives
+            // (it is first in sort order).
+            if p != last_perf || out.is_empty() {
+                out.push(i);
+            }
+            best_energy = e;
+            last_perf = p;
+        }
+    }
+    out.reverse(); // ascending perf
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn known_frontier() {
+        // (perf, energy)
+        let pts = vec![
+            (1.0, 1.0), // frontier
+            (2.0, 2.0), // frontier
+            (1.5, 3.0), // dominated by (2,2)
+            (3.0, 5.0), // frontier
+            (0.5, 0.9), // frontier (lowest energy)
+            (2.5, 5.0), // dominated by (3,5)
+        ];
+        let f = frontier(&pts);
+        assert_eq!(f, vec![4, 0, 1, 3]);
+    }
+
+    #[test]
+    fn frontier_has_no_dominated_point() {
+        let mut rng = Rng::new(5);
+        let pts: Vec<(f64, f64)> = (0..500).map(|_| (rng.f64() * 10.0, rng.f64() * 10.0)).collect();
+        let f = frontier(&pts);
+        assert!(!f.is_empty());
+        for &i in &f {
+            for (j, p) in pts.iter().enumerate() {
+                if i != j {
+                    assert!(!dominates(p, &pts[i]), "{j} dominates frontier member {i}");
+                }
+            }
+        }
+        // And every non-frontier point IS dominated by someone.
+        for (j, p) in pts.iter().enumerate() {
+            if !f.contains(&j) {
+                assert!(
+                    pts.iter().enumerate().any(|(k, q)| k != j && dominates(q, p)),
+                    "non-frontier point {j} is undominated"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn frontier_sorted_and_monotone() {
+        let mut rng = Rng::new(9);
+        let pts: Vec<(f64, f64)> = (0..200).map(|_| (rng.f64(), rng.f64())).collect();
+        let f = frontier(&pts);
+        for w in f.windows(2) {
+            assert!(pts[w[0]].perf() < pts[w[1]].perf());
+            assert!(pts[w[0]].energy() < pts[w[1]].energy(), "frontier energy must rise with perf");
+        }
+    }
+
+    #[test]
+    fn duplicates_and_degenerate_inputs() {
+        let f = frontier(&Vec::<(f64, f64)>::new());
+        assert!(f.is_empty());
+        let f = frontier(&[(1.0, 1.0)]);
+        assert_eq!(f, vec![0]);
+        // Exact duplicates: exactly one survives.
+        let f = frontier(&[(1.0, 1.0), (1.0, 1.0), (1.0, 1.0)]);
+        assert_eq!(f.len(), 1);
+    }
+
+    #[test]
+    fn dominance_relation() {
+        assert!(dominates(&(2.0, 1.0), &(1.0, 2.0)));
+        assert!(!dominates(&(1.0, 2.0), &(2.0, 1.0)));
+        assert!(!dominates(&(1.0, 1.0), &(1.0, 1.0))); // not strict
+        assert!(dominates(&(1.0, 0.5), &(1.0, 1.0)));
+    }
+}

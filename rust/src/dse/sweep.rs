@@ -1,0 +1,215 @@
+//! The FPGen design-space-exploration loop: architecture sweeps at a
+//! fixed voltage (Fig. 3's triangle-marked curve) and voltage/body-bias
+//! sweeps of a chosen design (the square-marked and BB curves).
+
+use crate::arch::booth::BoothRadix;
+use crate::arch::fp::Precision;
+use crate::arch::generator::{FpuConfig, FpuKind, FpuUnit};
+use crate::arch::tree::TreeKind;
+use crate::energy::power::{evaluate, EfficiencyPoint};
+use crate::energy::tech::{OperatingPoint, Technology};
+
+use super::pareto::Objective;
+
+/// One evaluated design point.
+#[derive(Debug, Clone)]
+pub struct DsePoint {
+    pub config: FpuConfig,
+    pub eff: EfficiencyPoint,
+}
+
+impl Objective for DsePoint {
+    /// Fig. 3's x-axis: compute density.
+    fn perf(&self) -> f64 {
+        self.eff.gflops_per_mm2
+    }
+    /// Fig. 3's y-axis: energy per FLOP.
+    fn energy(&self) -> f64 {
+        self.eff.pj_per_flop
+    }
+}
+
+/// Enumerate the architecture neighbourhood FPGen explores for one unit
+/// family: pipeline depth × Booth radix × reduction tree (with pipe
+/// splits derived from the stage budget, as the generator does).
+pub fn arch_space(precision: Precision, kind: FpuKind) -> Vec<FpuConfig> {
+    let mut out = Vec::new();
+    let stage_range = match kind {
+        FpuKind::Fma => 3..=9,
+        FpuKind::Cma => 4..=10,
+    };
+    for stages in stage_range {
+        for booth in [BoothRadix::Booth2, BoothRadix::Booth3] {
+            for tree in [TreeKind::Wallace, TreeKind::Array, TreeKind::Zm] {
+                let (mul_pipe, add_pipe) = match kind {
+                    FpuKind::Fma => ((stages / 2).max(1), 0),
+                    FpuKind::Cma => {
+                        let mul = ((stages - 1) / 2).max(1);
+                        let add = stages - 1 - mul;
+                        (mul, add)
+                    }
+                };
+                let cfg = FpuConfig { precision, kind, booth, tree, stages, mul_pipe, add_pipe, forwarding: true };
+                if cfg.validate().is_ok() {
+                    out.push(cfg);
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Evaluate every architecture in the space at one operating point
+/// (FPGen's fixed-1V sweep). Inoperable points are skipped.
+pub fn arch_sweep(
+    precision: Precision,
+    kind: FpuKind,
+    tech: &Technology,
+    op: OperatingPoint,
+) -> Vec<DsePoint> {
+    arch_space(precision, kind)
+        .into_iter()
+        .filter_map(|cfg| {
+            let unit = FpuUnit::generate(&cfg);
+            evaluate(&unit, tech, op, 1.0).map(|eff| DsePoint { config: cfg, eff })
+        })
+        .collect()
+}
+
+/// Voltage sweep of one design: evaluate at each V_DD (fixed V_BB).
+pub fn voltage_sweep(
+    cfg: &FpuConfig,
+    tech: &Technology,
+    vdds: &[f64],
+    vbb: f64,
+) -> Vec<EfficiencyPoint> {
+    let unit = FpuUnit::generate(cfg);
+    vdds.iter()
+        .filter_map(|&vdd| evaluate(&unit, tech, OperatingPoint::new(vdd, vbb), 1.0))
+        .collect()
+}
+
+/// Joint (V_DD, V_BB) sweep: evaluate the full grid and keep the Pareto
+/// frontier in (performance, energy/FLOP) — the paper's "V_DD and BB"
+/// curve. This is where body bias actually pays at full utilization:
+/// forward bias buys frequency, letting V_DD drop at matched performance
+/// so dynamic energy falls by V² while the leakage penalty stays small.
+pub fn voltage_bb_sweep(
+    cfg: &FpuConfig,
+    tech: &Technology,
+    vdds: &[f64],
+    vbbs: &[f64],
+) -> Vec<EfficiencyPoint> {
+    let unit = FpuUnit::generate(cfg);
+    let mut points: Vec<EfficiencyPoint> = Vec::new();
+    for &vdd in vdds {
+        for &vbb in vbbs {
+            let op = OperatingPoint::new(vdd, vbb);
+            if !tech.valid(op) {
+                continue;
+            }
+            if let Some(p) = evaluate(&unit, tech, op, 1.0) {
+                points.push(p);
+            }
+        }
+    }
+    let objs: Vec<(f64, f64)> = points.iter().map(|p| (p.gflops_per_mm2, p.pj_per_flop)).collect();
+    let idx = super::pareto::frontier(&objs);
+    idx.into_iter().map(|i| points[i]).collect()
+}
+
+/// The standard sweep grids used by the Fig. 3 / Fig. 4 benches.
+pub fn default_vdd_grid() -> Vec<f64> {
+    (0..=17).map(|i| 0.45 + 0.04 * i as f64).collect() // 0.45 … 1.13 V
+}
+
+pub fn default_vbb_grid() -> Vec<f64> {
+    (0..=8).map(|i| -0.8 + 0.4 * i as f64).collect() // −0.8 … 2.4 → clamped by tech
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dse::pareto::frontier;
+
+    #[test]
+    fn arch_space_includes_fabricated_points() {
+        let space = arch_space(Precision::Single, FpuKind::Fma);
+        let sp_fma = FpuConfig::sp_fma();
+        assert!(
+            space.iter().any(|c| c.stages == sp_fma.stages
+                && c.booth == sp_fma.booth
+                && c.tree == sp_fma.tree),
+            "the fabricated SP FMA must be in the explored space"
+        );
+        // 7 stage counts × 2 booth × 3 trees.
+        assert_eq!(space.len(), 42);
+        for cfg in &space {
+            cfg.validate().unwrap();
+        }
+    }
+
+    #[test]
+    fn arch_sweep_produces_spread() {
+        let tech = Technology::fdsoi28();
+        let pts = arch_sweep(Precision::Single, FpuKind::Fma, &tech, OperatingPoint::new(1.0, 0.0));
+        assert!(pts.len() > 30);
+        let e_min = pts.iter().map(|p| p.energy()).fold(f64::INFINITY, f64::min);
+        let e_max = pts.iter().map(|p| p.energy()).fold(0.0, f64::max);
+        // The design space spans a real energy range (>1.5×).
+        assert!(e_max / e_min > 1.5, "{e_min} … {e_max}");
+    }
+
+    #[test]
+    fn frontier_of_sweep_is_small_and_clean() {
+        let tech = Technology::fdsoi28();
+        let pts = arch_sweep(Precision::Single, FpuKind::Fma, &tech, OperatingPoint::new(1.0, 0.0));
+        let f = frontier(&pts);
+        assert!(!f.is_empty() && f.len() < pts.len());
+        // Frontier energies rise with performance.
+        for w in f.windows(2) {
+            assert!(pts[w[0]].eff.pj_per_flop < pts[w[1]].eff.pj_per_flop);
+        }
+    }
+
+    #[test]
+    fn voltage_sweep_monotone_frequency() {
+        let tech = Technology::fdsoi28();
+        let pts = voltage_sweep(&FpuConfig::sp_fma(), &tech, &default_vdd_grid(), 1.2);
+        assert!(pts.len() > 10);
+        for w in pts.windows(2) {
+            assert!(w[1].freq_ghz > w[0].freq_ghz, "freq must rise with vdd");
+        }
+    }
+
+    #[test]
+    fn bb_frontier_dominates_fixed_bias() {
+        // Every fixed-bias point must be matched-or-beaten by the joint
+        // frontier: some frontier point has ≥ its performance at ≤ its
+        // energy.
+        let tech = Technology::fdsoi28();
+        let vdds = default_vdd_grid();
+        let joint = voltage_bb_sweep(&FpuConfig::sp_fma(), &tech, &vdds, &default_vbb_grid());
+        let fixed = voltage_sweep(&FpuConfig::sp_fma(), &tech, &vdds, 0.0);
+        for f in &fixed {
+            let covered = joint.iter().any(|j| {
+                j.gflops_per_mm2 >= f.gflops_per_mm2 * 0.999
+                    && j.pj_per_flop <= f.pj_per_flop * 1.001
+            });
+            assert!(covered, "fixed-bias point at vdd {} undominated", f.op.vdd);
+        }
+        // The frontier is sorted by ascending performance.
+        for w in joint.windows(2) {
+            assert!(w[0].gflops_per_mm2 < w[1].gflops_per_mm2);
+        }
+    }
+
+    #[test]
+    fn dp_space_mirrors_sp() {
+        let space = arch_space(Precision::Double, FpuKind::Cma);
+        assert!(space.iter().any(|c| {
+            let dp = FpuConfig::dp_cma();
+            c.stages == dp.stages && c.booth == dp.booth && c.tree == dp.tree
+        }));
+    }
+}

@@ -1,0 +1,225 @@
+//! Structure → cost mapping: effective switched capacitance and silicon
+//! area for a generated FPU.
+//!
+//! Every cost is derived from the unit's [`StructureReport`] in
+//! "FA-cell equivalents" (one 3:2 full-adder cell = 1.0), then converted
+//! with **four calibrated coefficients** shared across all designs:
+//!
+//! * `C_LOGIC_PJ_V2` — switched capacitance per logic cell-equivalent per
+//!   op (includes average datapath activity),
+//! * `C_REG_PJ_V2` — per pipeline-register bit per cycle (clock + data),
+//! * `AREA_UM2` per style — silicon area per cell-equivalent (registers
+//!   count double); latency designs use delay-optimal (larger) sizing.
+//!
+//! The fit against Table I is reproduced in
+//! [`crate::energy::calibrate`]; residuals are ≤ ~7% on energy and
+//! ≤ ~17% on area — the scatter silicon shows around any structural
+//! model.
+
+use crate::arch::generator::{FpuConfig, FpuKind, FpuUnit, StructureReport};
+use crate::timing::DesignStyle;
+
+/// Switched capacitance per logic cell-equivalent, pJ/V² (i.e. energy at
+/// V_DD=1V), average operand activity folded in.
+pub const C_LOGIC_PJ_V2: f64 = 0.0117;
+
+/// Switched capacitance per register bit (data + local clock), pJ/V².
+pub const C_REG_PJ_V2: f64 = 0.0137;
+
+/// Area per cell-equivalent, µm², by design style (registers ×2).
+pub const AREA_UM2_LATENCY: f64 = 6.57;
+pub const AREA_UM2_THROUGHPUT: f64 = 3.89;
+
+/// Relative cell weight of common datapath structures (per bit).
+mod weight {
+    /// Booth mux row producing one PP bit.
+    pub const PP_MUX: f64 = 0.6;
+    /// Parallel-prefix CPA per bit (prefix tree amortized).
+    pub const CPA: f64 = 2.0;
+    /// Barrel shifter per bit.
+    pub const SHIFTER: f64 = 1.2;
+    /// LZA per bit.
+    pub const LZA: f64 = 1.0;
+    /// Rounder per result bit.
+    pub const ROUNDER: f64 = 1.5;
+    /// ×3 hard-multiple pre-adder per bit.
+    pub const TRIPLE: f64 = 2.0;
+    /// Exponent datapath (fixed block, cells).
+    pub const EXP_BLOCK: f64 = 60.0;
+}
+
+/// The derived per-unit cost summary.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct UnitCost {
+    /// Combinational cell-equivalents.
+    pub logic_cells: f64,
+    /// Pipeline register bits.
+    pub register_bits: f64,
+    /// Effective switched capacitance per op, pJ/V² (logic at average
+    /// activity + registers).
+    pub cap_pj_v2: f64,
+    /// Silicon area in mm².
+    pub area_mm2: f64,
+}
+
+impl UnitCost {
+    /// Dynamic energy per FMAC op at a supply voltage, in pJ, scaled by a
+    /// data-activity factor (1.0 = average operands; the coordinator can
+    /// substitute measured toggle ratios).
+    pub fn dyn_energy_pj(&self, vdd: f64, activity_scale: f64) -> f64 {
+        // Registers clock at full activity; only the logic term scales
+        // with operand activity.
+        let logic = C_LOGIC_PJ_V2 * self.logic_cells * activity_scale;
+        let regs = C_REG_PJ_V2 * self.register_bits;
+        (logic + regs) * vdd * vdd
+    }
+}
+
+/// Count the combinational cell-equivalents of a configuration.
+pub fn logic_cells(cfg: &FpuConfig, s: &StructureReport) -> f64 {
+    let m = s.sig_bits as f64;
+    let window = s.mul_window as f64;
+    let aw = s.adder_width as f64;
+    let tree = s.tree_cells as f64 * s.wiring_factor;
+    let pp = s.pp_count as f64 * window * weight::PP_MUX;
+    let triple = if s.has_triple_adder { m * weight::TRIPLE } else { 0.0 };
+    match cfg.kind {
+        FpuKind::Fma => {
+            // Carry-save product goes straight into the merge: no mul CPA.
+            let merge = aw; // one 3:2 row
+            let cpa = aw * weight::CPA;
+            let lza = aw * weight::LZA;
+            let norm = aw * weight::SHIFTER;
+            let align = aw * weight::SHIFTER;
+            let round = m * weight::ROUNDER;
+            pp + triple + tree + merge + cpa + lza + norm + align + round + weight::EXP_BLOCK
+        }
+        FpuKind::Cma => {
+            let mul_cpa = window * weight::CPA;
+            let mul_round = m * weight::ROUNDER;
+            let align = aw * weight::SHIFTER;
+            let add_cpa = aw * weight::CPA;
+            let lza = aw * weight::LZA;
+            let norm = aw * weight::SHIFTER;
+            let add_round = m * weight::ROUNDER;
+            pp + triple
+                + tree
+                + mul_cpa
+                + mul_round
+                + align
+                + add_cpa
+                + lza
+                + norm
+                + add_round
+                + weight::EXP_BLOCK
+        }
+    }
+}
+
+/// Derive the full cost summary for a generated unit.
+pub fn unit_cost(unit: &FpuUnit) -> UnitCost {
+    let s = unit.structure();
+    let cells = logic_cells(&unit.config, s);
+    let regs = s.register_bits as f64;
+    let area_coeff = match DesignStyle::of(&unit.config) {
+        DesignStyle::Latency => AREA_UM2_LATENCY,
+        DesignStyle::Throughput => AREA_UM2_THROUGHPUT,
+    };
+    UnitCost {
+        logic_cells: cells,
+        register_bits: regs,
+        cap_pj_v2: C_LOGIC_PJ_V2 * cells + C_REG_PJ_V2 * regs,
+        area_mm2: area_coeff * (cells + 2.0 * regs) * 1e-6,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::generator::FpuConfig;
+    use crate::util::stats::rel_diff;
+
+    fn cost_of(cfg: FpuConfig) -> UnitCost {
+        unit_cost(&FpuUnit::generate(&cfg))
+    }
+
+    /// Table I areas in mm².
+    const TABLE1_AREA: [(fn() -> FpuConfig, f64); 4] = [
+        (FpuConfig::dp_cma as fn() -> FpuConfig, 0.032),
+        (FpuConfig::dp_fma, 0.024),
+        (FpuConfig::sp_cma, 0.018),
+        (FpuConfig::sp_fma, 0.0081),
+    ];
+
+    #[test]
+    fn areas_match_table1() {
+        for (mk, want) in TABLE1_AREA {
+            let cfg = mk();
+            let got = cost_of(cfg).area_mm2;
+            let rel = rel_diff(got, want);
+            assert!(
+                rel < 0.25,
+                "{}: model {got:.4} mm² vs silicon {want} mm² (rel {rel:.2})",
+                cfg.name()
+            );
+        }
+    }
+
+    #[test]
+    fn area_ordering_matches_table1() {
+        // DP CMA > DP FMA > SP CMA > SP FMA.
+        let a: Vec<f64> = [FpuConfig::dp_cma(), FpuConfig::dp_fma(), FpuConfig::sp_cma(), FpuConfig::sp_fma()]
+            .iter()
+            .map(|c| cost_of(*c).area_mm2)
+            .collect();
+        assert!(a[0] > a[1] && a[1] > a[2] && a[2] > a[3], "{a:?}");
+    }
+
+    #[test]
+    fn dynamic_energy_matches_table1() {
+        // Dyn energy at nominal = (P_total − P_leak)/f from Table I.
+        let cases = [
+            (FpuConfig::dp_cma(), 0.9, (66.0 - 8.4) / 1.19),
+            (FpuConfig::dp_fma(), 0.8, (41.0 - 3.8) / 0.91),
+            (FpuConfig::sp_cma(), 0.8, (25.0 - 3.3) / 1.36),
+            (FpuConfig::sp_fma(), 0.9, (17.0 - 1.6) / 0.91),
+        ];
+        for (cfg, vdd, want_pj) in cases {
+            let got = cost_of(cfg).dyn_energy_pj(vdd, 1.0);
+            let rel = rel_diff(got, want_pj);
+            assert!(
+                rel < 0.12,
+                "{}: model {got:.1} pJ vs silicon {want_pj:.1} pJ (rel {rel:.2})",
+                cfg.name()
+            );
+        }
+    }
+
+    #[test]
+    fn energy_scales_quadratically_with_vdd() {
+        let c = cost_of(FpuConfig::sp_fma());
+        let e1 = c.dyn_energy_pj(0.5, 1.0);
+        let e2 = c.dyn_energy_pj(1.0, 1.0);
+        assert!((e2 / e1 - 4.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn activity_scales_logic_only() {
+        let c = cost_of(FpuConfig::sp_fma());
+        let quiet = c.dyn_energy_pj(0.9, 0.0);
+        let busy = c.dyn_energy_pj(0.9, 1.0);
+        // Register/clock power remains even with quiet data.
+        assert!(quiet > 0.0);
+        assert!(busy > quiet * 2.0);
+    }
+
+    #[test]
+    fn booth3_cuts_tree_cost() {
+        // The Table-I rationale for Booth-3 on the throughput units.
+        let mut b2 = FpuConfig::sp_fma();
+        b2.booth = crate::arch::booth::BoothRadix::Booth2;
+        let c2 = cost_of(b2);
+        let c3 = cost_of(FpuConfig::sp_fma());
+        assert!(c3.logic_cells < c2.logic_cells);
+    }
+}

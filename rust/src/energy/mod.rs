@@ -1,0 +1,19 @@
+//! Energy, power, and area models for the 28nm UTBB FDSOI process.
+//!
+//! [`tech`] holds the process physics (V_t vs body bias, α-power delay,
+//! subthreshold leakage); [`components`] maps a generated unit's
+//! structure to effective capacitance and silicon area; [`power`]
+//! combines them into power/efficiency at an operating point and
+//! activity; [`scaling`] implements the paper's Table-II feature-size +
+//! FO4 normalization; [`calibrate`] documents the fit of the few free
+//! constants to Table I.
+
+pub mod calibrate;
+pub mod components;
+pub mod power;
+pub mod scaling;
+pub mod tech;
+
+pub use components::UnitCost;
+pub use power::{EfficiencyPoint, PowerBreakdown};
+pub use tech::{OperatingPoint, Technology};

@@ -1,0 +1,209 @@
+//! Power and efficiency at an operating point: the quantities every
+//! figure of the paper plots.
+//!
+//! Conventions (matching the paper's): one FMAC = **2 FLOPs**;
+//! efficiency metrics are *normalized* (at the achieved frequency of the
+//! operating point) — "GFLOPS/W" = 2·f·u / P_total, "GFLOPS/mm²" =
+//! 2·f·u / area — with utilization u = 1 unless stated.
+
+use crate::arch::generator::{FpuConfig, FpuUnit};
+use crate::timing::{self, Timing};
+
+use super::components::{unit_cost, UnitCost};
+use super::tech::{OperatingPoint, Technology};
+
+/// Power split at an operating point.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PowerBreakdown {
+    pub dynamic_mw: f64,
+    pub leakage_mw: f64,
+}
+
+impl PowerBreakdown {
+    pub fn total_mw(&self) -> f64 {
+        self.dynamic_mw + self.leakage_mw
+    }
+}
+
+/// A fully evaluated operating point of one unit — a single dot on the
+/// paper's Fig. 3 / Fig. 4 axes.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct EfficiencyPoint {
+    pub op: OperatingPoint,
+    pub freq_ghz: f64,
+    pub power: PowerBreakdown,
+    /// Energy per FLOP in pJ (total power over delivered FLOPS).
+    pub pj_per_flop: f64,
+    /// 2·f·u / P — the paper's energy-efficiency axis.
+    pub gflops_per_w: f64,
+    /// 2·f·u / area — the paper's area-efficiency axis.
+    pub gflops_per_mm2: f64,
+    /// Utilization the point was evaluated at.
+    pub utilization: f64,
+}
+
+/// Evaluate a unit at an operating point and utilization.
+///
+/// `utilization` models duty cycle with clock gating: dynamic power
+/// scales with u (issue slots actually used); leakage does not — the
+/// Fig. 4 energy blow-up at 10% utilization is exactly this term.
+pub fn evaluate(
+    unit: &FpuUnit,
+    tech: &Technology,
+    op: OperatingPoint,
+    utilization: f64,
+) -> Option<EfficiencyPoint> {
+    let cost = unit_cost(unit);
+    let t = timing::timing(&unit.config, tech, op)?;
+    Some(evaluate_with(&unit.config, &cost, &t, tech, op, utilization))
+}
+
+/// Evaluation core for callers that already computed cost/timing (the
+/// DSE sweep reuses both across thousands of points).
+pub fn evaluate_with(
+    _cfg: &FpuConfig,
+    cost: &UnitCost,
+    t: &Timing,
+    tech: &Technology,
+    op: OperatingPoint,
+    utilization: f64,
+) -> EfficiencyPoint {
+    assert!((0.0..=1.0).contains(&utilization), "utilization out of range");
+    let e_op_pj = cost.dyn_energy_pj(op.vdd, 1.0);
+    // pJ · Gop/s = mW.
+    let dynamic_mw = e_op_pj * t.freq_ghz * utilization;
+    let leakage_mw = tech.leakage_mw(cost.area_mm2, op);
+    let power = PowerBreakdown { dynamic_mw, leakage_mw };
+    let gflops = 2.0 * t.freq_ghz * utilization; // FMAC = 2 FLOPs
+    let pj_per_flop = if gflops > 0.0 { power.total_mw() / gflops } else { f64::INFINITY };
+    EfficiencyPoint {
+        op,
+        freq_ghz: t.freq_ghz,
+        power,
+        pj_per_flop,
+        gflops_per_w: if power.total_mw() > 0.0 { 1000.0 * gflops / power.total_mw() } else { 0.0 },
+        gflops_per_mm2: gflops / cost.area_mm2,
+        utilization,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::generator::FpuConfig;
+    use crate::timing::nominal_op;
+    use crate::util::stats::rel_diff;
+
+    fn eval_nominal(cfg: FpuConfig) -> EfficiencyPoint {
+        let unit = FpuUnit::generate(&cfg);
+        let tech = Technology::fdsoi28();
+        evaluate(&unit, &tech, nominal_op(&cfg), 1.0).unwrap()
+    }
+
+    #[test]
+    fn table1_total_power() {
+        // Table I "Total Power" at the nominal points.
+        let cases = [
+            (FpuConfig::dp_cma(), 66.0),
+            (FpuConfig::dp_fma(), 41.0),
+            (FpuConfig::sp_cma(), 25.0),
+            (FpuConfig::sp_fma(), 17.0),
+        ];
+        for (cfg, want_mw) in cases {
+            let p = eval_nominal(cfg).power.total_mw();
+            let rel = rel_diff(p, want_mw);
+            assert!(
+                rel < 0.25,
+                "{}: model {p:.1} mW vs silicon {want_mw} mW (rel {rel:.2})",
+                cfg.name()
+            );
+        }
+    }
+
+    #[test]
+    fn table1_normalized_efficiencies() {
+        // The paper's headline normalized numbers (Table I bottom rows).
+        let cases = [
+            // (cfg, GFLOPS/mm², GFLOPS/W)
+            (FpuConfig::dp_cma(), 74.6, 36.0),
+            (FpuConfig::dp_fma(), 74.6, 43.7),
+            (FpuConfig::sp_cma(), 151.0, 110.0),
+            (FpuConfig::sp_fma(), 217.0, 106.0),
+        ];
+        for (cfg, want_mm2, want_w) in cases {
+            let p = eval_nominal(cfg);
+            assert!(
+                rel_diff(p.gflops_per_mm2, want_mm2) < 0.35,
+                "{}: {:.0} GFLOPS/mm² vs {want_mm2}",
+                cfg.name(),
+                p.gflops_per_mm2
+            );
+            assert!(
+                rel_diff(p.gflops_per_w, want_w) < 0.35,
+                "{}: {:.0} GFLOPS/W vs {want_w}",
+                cfg.name(),
+                p.gflops_per_w
+            );
+        }
+    }
+
+    #[test]
+    fn sp_fma_is_most_efficient_per_area() {
+        // The headline claim: SP FMA leads the pack on area efficiency.
+        let units = [FpuConfig::dp_cma(), FpuConfig::dp_fma(), FpuConfig::sp_cma()];
+        let sp_fma = eval_nominal(FpuConfig::sp_fma());
+        for cfg in units {
+            assert!(sp_fma.gflops_per_mm2 > eval_nominal(cfg).gflops_per_mm2);
+        }
+    }
+
+    #[test]
+    fn low_utilization_explodes_energy_per_op() {
+        // Fig. 4's 10%-utilization story at a fixed forward-biased point:
+        // energy/FLOP rises steeply because leakage doesn't scale down.
+        let unit = FpuUnit::generate(&FpuConfig::sp_cma());
+        let tech = Technology::fdsoi28();
+        let op = nominal_op(&FpuConfig::sp_cma());
+        let full = evaluate(&unit, &tech, op, 1.0).unwrap();
+        let idle = evaluate(&unit, &tech, op, 0.1).unwrap();
+        let blowup = idle.pj_per_flop / full.pj_per_flop;
+        assert!(blowup > 1.5, "expected a leakage-driven blow-up, got {blowup:.2}×");
+        // Leakage is identical; dynamic scaled by 10×.
+        assert!((idle.power.leakage_mw - full.power.leakage_mw).abs() < 1e-12);
+        assert!((full.power.dynamic_mw / idle.power.dynamic_mw - 10.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn lower_vdd_improves_energy_per_flop_until_leakage_wins() {
+        // The Fig. 3 energy-vs-performance curve must be non-monotonic:
+        // V² savings dominate at first, leakage-per-op dominates at the
+        // bottom.
+        let unit = FpuUnit::generate(&FpuConfig::sp_fma());
+        let tech = Technology::fdsoi28();
+        let mut best_v = 0.0;
+        let mut best_e = f64::INFINITY;
+        for i in 0..75 {
+            let vdd = 0.36 + i as f64 * 0.01;
+            if let Some(p) = evaluate(&unit, &tech, OperatingPoint::new(vdd, 1.2), 1.0) {
+                if p.pj_per_flop < best_e {
+                    best_e = p.pj_per_flop;
+                    best_v = vdd;
+                }
+            }
+        }
+        // The optimum sits strictly inside the sweep (leakage-per-op loses
+        // to V² only above the minimum-energy voltage).
+        assert!(best_v > 0.37 && best_v < 1.0, "energy optimum at {best_v:.2} V");
+        let nominal = evaluate(&unit, &tech, OperatingPoint::new(0.9, 1.2), 1.0).unwrap();
+        assert!(best_e < nominal.pj_per_flop);
+    }
+
+    #[test]
+    fn zero_utilization_gives_infinite_energy_per_flop() {
+        let unit = FpuUnit::generate(&FpuConfig::sp_fma());
+        let tech = Technology::fdsoi28();
+        let p = evaluate(&unit, &tech, OperatingPoint::new(0.9, 1.2), 0.0).unwrap();
+        assert!(p.pj_per_flop.is_infinite());
+        assert_eq!(p.gflops_per_w, 0.0);
+    }
+}

@@ -1,0 +1,160 @@
+//! Feature-size + FO4 technology scaling — the normalization rule behind
+//! the paper's Table II comparison.
+//!
+//! The paper compares its SP FMA against four published designs
+//! fabricated in 32–150 nm by scaling "area and power with the feature
+//! sizes and the performance according to FO4", noting this "provides
+//! numbers better than actual silicon" (optimistic classical scaling).
+//! With `s = target_feature / source_feature` (< 1 when shrinking):
+//!
+//! * gate delay (FO4) ∝ feature         → frequency × 1/s
+//! * area ∝ feature²                    → area × s²
+//! * switched capacitance ∝ feature     → power = C·V²·f unchanged
+//!
+//! Hence **GFLOPS/W scales by 1/s** and **GFLOPS/mm² by 1/s³**.
+//!
+//! The four competitor entries carry the *raw* (source-node) numbers;
+//! because the source papers are not available in this offline
+//! environment, raw values are reconstructed by inverse-scaling the
+//! published Table II entries — the forward rule below then reproduces
+//! the table exactly, and the reconstructed raw values are sanity-checked
+//! against the sources' known headline specs in the tests.
+
+/// A published FPU design at its native process node.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PublishedDesign {
+    pub name: &'static str,
+    pub reference: &'static str,
+    pub feature_nm: f64,
+    /// Area efficiency at the native node, GFLOPS/mm².
+    pub raw_gflops_mm2: f64,
+    /// Energy efficiency at the native node, GFLOPS/W.
+    pub raw_gflops_w: f64,
+}
+
+/// Scaled efficiencies at a target node.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ScaledDesign {
+    pub gflops_mm2: f64,
+    pub gflops_w: f64,
+}
+
+impl PublishedDesign {
+    /// Scale to a target feature size with the Table-II rule.
+    pub fn scale_to(&self, target_nm: f64) -> ScaledDesign {
+        let s = target_nm / self.feature_nm;
+        ScaledDesign {
+            gflops_mm2: self.raw_gflops_mm2 / (s * s * s),
+            gflops_w: self.raw_gflops_w / s,
+        }
+    }
+
+    /// The four comparison designs of Table II, with raw numbers
+    /// reconstructed at their native nodes (see module docs).
+    pub fn table2_competitors() -> Vec<PublishedDesign> {
+        vec![
+            PublishedDesign {
+                name: "Variable-precision FMA",
+                reference: "H. Kaul et al., ISSCC 2012 [4]",
+                feature_nm: 32.0,
+                // 28/32 ⇒ s=0.875: 62.5·s³ = 41.9, 52.8·s = 46.2.
+                raw_gflops_mm2: 62.5 * 0.875f64.powi(3),
+                raw_gflops_w: 52.8 * 0.875,
+            },
+            PublishedDesign {
+                name: "Resonant FMA",
+                reference: "J. Kao et al., ASSCC 2010 [5]",
+                feature_nm: 45.0,
+                raw_gflops_mm2: 142.0 * (28f64 / 45.0).powi(3),
+                raw_gflops_w: 54.9 * (28.0 / 45.0),
+            },
+            PublishedDesign {
+                name: "CELL FMA",
+                reference: "H. Oh et al., JSSC 2006 [6]",
+                feature_nm: 90.0,
+                raw_gflops_mm2: 384.0 * (28f64 / 90.0).powi(3),
+                raw_gflops_w: 66.0 * (28.0 / 90.0),
+            },
+            PublishedDesign {
+                name: "Reconfig FPU",
+                reference: "S. Jain et al., VLSI Design 2010 [7]",
+                feature_nm: 90.0,
+                raw_gflops_mm2: 0.8 * (28f64 / 90.0).powi(3),
+                raw_gflops_w: 33.7 * (28.0 / 90.0),
+            },
+        ]
+    }
+}
+
+/// The Table II target values (scaled to 28nm) for verification.
+pub const TABLE2_SCALED: [(&str, f64, f64); 4] = [
+    ("Variable-precision FMA", 62.5, 52.8),
+    ("Resonant FMA", 142.0, 54.9),
+    ("CELL FMA", 384.0, 66.0),
+    ("Reconfig FPU", 0.8, 33.7),
+];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::stats::rel_diff;
+
+    #[test]
+    fn forward_scaling_reproduces_table2() {
+        for (d, (name, want_mm2, want_w)) in
+            PublishedDesign::table2_competitors().iter().zip(TABLE2_SCALED)
+        {
+            assert_eq!(d.name, name);
+            let s = d.scale_to(28.0);
+            assert!(rel_diff(s.gflops_mm2, want_mm2) < 1e-9, "{name} area eff");
+            assert!(rel_diff(s.gflops_w, want_w) < 1e-9, "{name} energy eff");
+        }
+    }
+
+    #[test]
+    fn identity_at_native_node() {
+        for d in PublishedDesign::table2_competitors() {
+            let s = d.scale_to(d.feature_nm);
+            assert!(rel_diff(s.gflops_mm2, d.raw_gflops_mm2) < 1e-12);
+            assert!(rel_diff(s.gflops_w, d.raw_gflops_w) < 1e-12);
+        }
+    }
+
+    #[test]
+    fn shrinking_always_helps() {
+        for d in PublishedDesign::table2_competitors() {
+            let s = d.scale_to(20.0);
+            assert!(s.gflops_mm2 > d.raw_gflops_mm2);
+            assert!(s.gflops_w > d.raw_gflops_w);
+        }
+    }
+
+    #[test]
+    fn reconstructed_raw_values_plausible() {
+        // CELL SPE FPU at 90nm: ~8 GFLOPS (4 GHz × 2) in under 1 mm² and
+        // a few hundred mW → raw efficiencies of order 10 GFLOPS/mm² and
+        // 20 GFLOPS/W. Our inverse-scaled values must land there.
+        let cell = &PublishedDesign::table2_competitors()[2];
+        assert!((5.0..25.0).contains(&cell.raw_gflops_mm2), "{}", cell.raw_gflops_mm2);
+        assert!((10.0..40.0).contains(&cell.raw_gflops_w), "{}", cell.raw_gflops_w);
+        // Kaul's 32nm design reported ~50 GFLOPS/W near nominal.
+        let kaul = &PublishedDesign::table2_competitors()[0];
+        assert!((30.0..60.0).contains(&kaul.raw_gflops_w));
+    }
+
+    #[test]
+    fn fpmax_wins_energy_loses_peak_area_to_cell() {
+        // The shape of Table II: FPMax SP FMA (217, 106) beats every
+        // competitor on GFLOPS/W but CELL's scaled GFLOPS/mm² is higher.
+        let fpmax = (217.0, 106.0);
+        for (d, (_, mm2, w)) in
+            PublishedDesign::table2_competitors().iter().zip(TABLE2_SCALED)
+        {
+            let s = d.scale_to(28.0);
+            assert!(fpmax.1 > s.gflops_w, "{} should lose on energy", d.name);
+            let _ = (mm2, w);
+        }
+        let cell = PublishedDesign::table2_competitors()[2].scale_to(28.0);
+        assert!(cell.gflops_mm2 > fpmax.0, "CELL wins peak area efficiency");
+    }
+}

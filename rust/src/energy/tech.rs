@@ -1,0 +1,228 @@
+//! 28nm UTBB FDSOI technology model: threshold voltage vs body bias,
+//! α-power-law gate delay, and subthreshold leakage.
+//!
+//! UTBB FDSOI's headline feature — the one the paper's title advertises —
+//! is its wide-range **body-bias** control: the thin buried oxide lets a
+//! back-gate voltage V_BB shift V_t by ~85 mV/V over ±2 V without
+//! junction leakage, far beyond bulk CMOS's ~25 mV/V. Forward bias (the
+//! chip's 1.2 V setting) lowers V_t → faster gates at the same V_DD but
+//! exponentially more leakage; reverse bias raises V_t → slow but
+//! low-leak sleep. The paper's Fig. 4 exploits exactly this lever
+//! dynamically.
+//!
+//! Model equations (standard EDA-textbook forms, constants chosen for ST
+//! 28nm FDSOI LVT and calibrated against Table I in
+//! [`crate::energy::calibrate`]):
+//!
+//! * `V_t(V_BB) = V_t0 − k_bb·V_BB`
+//! * `t_FO4(V_DD, V_t) ∝ V_DD / (V_DD − V_t)^α`            (α-power law)
+//! * `P_leak ∝ area · V_DD · 10^((V_t0 − V_t)/S)`           (subthreshold)
+
+/// An operating point: supply and body-bias voltages.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct OperatingPoint {
+    /// Supply voltage in volts.
+    pub vdd: f64,
+    /// Forward body-bias voltage in volts (0 = no bias; negative =
+    /// reverse bias).
+    pub vbb: f64,
+}
+
+impl OperatingPoint {
+    pub fn new(vdd: f64, vbb: f64) -> OperatingPoint {
+        OperatingPoint { vdd, vbb }
+    }
+}
+
+/// Technology constants for one process corner.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Technology {
+    pub name: &'static str,
+    /// Drawn feature size in nm (for Table II scaling).
+    pub feature_nm: f64,
+    /// FO4 inverter delay in ps at (vdd_ref, V_BB = 0).
+    pub fo4_ref_ps: f64,
+    /// Reference supply for fo4_ref_ps.
+    pub vdd_ref: f64,
+    /// Zero-bias threshold voltage (LVT flavour).
+    pub vt0: f64,
+    /// α-power-law velocity-saturation exponent.
+    pub alpha: f64,
+    /// Body-bias coefficient in V/V (ΔV_t per volt of forward bias).
+    pub body_coeff: f64,
+    /// Subthreshold swing in V/decade.
+    pub subthreshold_swing: f64,
+    /// Leakage power density at (vdd_ref, V_t0), in mW/mm² — calibrated.
+    pub leak_density_mw_mm2: f64,
+    /// Valid supply range.
+    pub vdd_min: f64,
+    pub vdd_max: f64,
+    /// Body-bias range (UTBB FDSOI allows a wide window).
+    pub vbb_min: f64,
+    pub vbb_max: f64,
+}
+
+impl Technology {
+    /// ST 28nm UTBB FDSOI, LVT devices — the FPMax process.
+    /// `leak_density_mw_mm2` is the value fitted from Table I's four
+    /// leakage entries (see `energy::calibrate::tests`).
+    pub fn fdsoi28() -> Technology {
+        Technology {
+            name: "ST 28nm UTBB FDSOI LVT",
+            feature_nm: 28.0,
+            fo4_ref_ps: 15.0,
+            vdd_ref: 1.0,
+            vt0: 0.36,
+            alpha: 1.35,
+            body_coeff: 0.085,
+            subthreshold_swing: 0.085,
+            leak_density_mw_mm2: 14.7,
+            vdd_min: 0.35,
+            vdd_max: 1.3,
+            vbb_min: -2.0,
+            vbb_max: 2.0,
+        }
+    }
+
+    /// Threshold voltage at a body bias.
+    pub fn vt(&self, vbb: f64) -> f64 {
+        self.vt0 - self.body_coeff * vbb
+    }
+
+    /// FO4 delay in ps at an operating point (α-power law, normalized to
+    /// the reference point). Returns `None` if the point cannot switch
+    /// (V_DD too close to V_t for the model's validity).
+    pub fn fo4_ps(&self, op: OperatingPoint) -> Option<f64> {
+        let vt = self.vt(op.vbb);
+        let overdrive = op.vdd - vt;
+        if overdrive < 0.08 || op.vdd < self.vdd_min {
+            return None;
+        }
+        let num = op.vdd / overdrive.powf(self.alpha);
+        let den = self.vdd_ref / (self.vdd_ref - self.vt0).powf(self.alpha);
+        Some(self.fo4_ref_ps * num / den)
+    }
+
+    /// Leakage power in mW for `area_mm2` of logic at an operating point.
+    ///
+    /// Forward body bias raises leakage exponentially (10^(ΔV_t/S)); the
+    /// linear V_DD term captures the drain-bias dependence to first
+    /// order.
+    pub fn leakage_mw(&self, area_mm2: f64, op: OperatingPoint) -> f64 {
+        let dvt = self.vt0 - self.vt(op.vbb); // >0 under forward bias
+        self.leak_density_mw_mm2 * area_mm2 * (op.vdd / self.vdd_ref)
+            * 10f64.powf(dvt / self.subthreshold_swing)
+    }
+
+    /// Is an operating point inside the technology's legal window?
+    pub fn valid(&self, op: OperatingPoint) -> bool {
+        op.vdd >= self.vdd_min
+            && op.vdd <= self.vdd_max
+            && op.vbb >= self.vbb_min
+            && op.vbb <= self.vbb_max
+            && self.fo4_ps(op).is_some()
+    }
+
+    /// The chip's nominal forward body bias (Table I: 1.2 V on all four
+    /// units).
+    pub const NOMINAL_VBB: f64 = 1.2;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn t() -> Technology {
+        Technology::fdsoi28()
+    }
+
+    #[test]
+    fn vt_shifts_with_body_bias() {
+        let t = t();
+        assert!((t.vt(0.0) - 0.36).abs() < 1e-12);
+        // Paper's 1.2 V forward bias: ~100 mV threshold reduction.
+        assert!((t.vt(1.2) - 0.258).abs() < 1e-9);
+        // Reverse bias raises Vt.
+        assert!(t.vt(-1.0) > t.vt(0.0));
+    }
+
+    #[test]
+    fn fo4_reference_point() {
+        let t = t();
+        let d = t.fo4_ps(OperatingPoint::new(1.0, 0.0)).unwrap();
+        assert!((d - t.fo4_ref_ps).abs() < 1e-9);
+    }
+
+    #[test]
+    fn fo4_monotonic_in_vdd_and_bias() {
+        let t = t();
+        let mut prev = f64::INFINITY;
+        for vdd in [0.5, 0.6, 0.7, 0.8, 0.9, 1.0, 1.1] {
+            let d = t.fo4_ps(OperatingPoint::new(vdd, 0.0)).unwrap();
+            assert!(d < prev, "fo4 must fall as vdd rises");
+            prev = d;
+        }
+        // Forward body bias speeds gates up at fixed vdd.
+        let slow = t.fo4_ps(OperatingPoint::new(0.7, 0.0)).unwrap();
+        let fast = t.fo4_ps(OperatingPoint::new(0.7, 1.2)).unwrap();
+        assert!(fast < slow);
+    }
+
+    #[test]
+    fn fo4_rejects_subthreshold_operation() {
+        let t = t();
+        assert!(t.fo4_ps(OperatingPoint::new(0.40, -2.0)).is_none());
+        assert!(t.fo4_ps(OperatingPoint::new(0.30, 0.0)).is_none());
+    }
+
+    #[test]
+    fn leakage_exponential_in_bias() {
+        let t = t();
+        let base = t.leakage_mw(0.01, OperatingPoint::new(0.9, 0.0));
+        let fwd = t.leakage_mw(0.01, OperatingPoint::new(0.9, 1.2));
+        // 1.2 V forward bias → ΔVt = 102 mV → 10^1.2 ≈ 15.8×.
+        assert!((fwd / base - 10f64.powf(0.102 / 0.085)).abs() < 1e-6);
+        // Reverse bias cuts leakage by the same law.
+        let rev = t.leakage_mw(0.01, OperatingPoint::new(0.9, -1.2));
+        assert!(rev < base / 10.0);
+    }
+
+    #[test]
+    fn leakage_scales_with_area_and_vdd() {
+        let t = t();
+        let p1 = t.leakage_mw(0.01, OperatingPoint::new(0.8, 0.6));
+        let p2 = t.leakage_mw(0.02, OperatingPoint::new(0.8, 0.6));
+        assert!((p2 / p1 - 2.0).abs() < 1e-12);
+        let hi = t.leakage_mw(0.01, OperatingPoint::new(1.0, 0.6));
+        assert!((hi / p1 - 1.0 / 0.8).abs() < 1e-9);
+    }
+
+    #[test]
+    fn table1_leakage_magnitudes() {
+        // With the calibrated density, the four Table-I leakage numbers
+        // must come out within ~35% each (they scatter ±25% around any
+        // single density — silicon variation the model cannot see).
+        let t = t();
+        let cases = [
+            // (area mm², vdd, leak mW from Table I)
+            (0.032, 0.9, 8.4), // DP CMA
+            (0.024, 0.8, 3.8), // DP FMA
+            (0.018, 0.8, 3.3), // SP CMA
+            (0.0081, 0.9, 1.6), // SP FMA
+        ];
+        for (area, vdd, want) in cases {
+            let got = t.leakage_mw(area, OperatingPoint::new(vdd, 1.2));
+            let rel = (got - want).abs() / want;
+            assert!(rel < 0.35, "area={area}: got {got:.2} mW want {want} mW (rel {rel:.2})");
+        }
+    }
+
+    #[test]
+    fn validity_window() {
+        let t = t();
+        assert!(t.valid(OperatingPoint::new(0.9, 1.2)));
+        assert!(!t.valid(OperatingPoint::new(1.5, 0.0)));
+        assert!(!t.valid(OperatingPoint::new(0.9, 3.0)));
+        assert!(!t.valid(OperatingPoint::new(0.2, 0.0)));
+    }
+}

@@ -1,0 +1,70 @@
+//! # fpmax — a reproduction of the FPMax FPU test chip as a software system
+//!
+//! FPMax (Pu, Galal, Yang, Shacham, Horowitz; 2016) is a 28nm UTBB FDSOI
+//! test chip carrying four floating-point multiply-accumulate (FMAC) units
+//! emitted by the FPGen hardware generator: latency-optimized cascade
+//! multiply-add (CMA) units and throughput-optimized fused multiply-add
+//! (FMA) units, in single and double precision.
+//!
+//! This crate rebuilds the entire system in simulation:
+//!
+//! * [`arch`] — the FPU microarchitecture substrate: IEEE-754 codecs, a
+//!   golden softfloat FMA, Booth-2/3 partial-product generation, carry-save
+//!   compressor trees (Wallace / array / ZM), and the bit-accurate FMA and
+//!   CMA datapaths, all generated from an [`arch::FpuConfig`] the way FPGen
+//!   generates RTL.
+//! * [`timing`] — FO4-based delay model: per-component logic depth, the
+//!   α-power-law FO4(V_DD, V_t), and pipeline stage partitioning.
+//! * [`energy`] — 28nm UTBB FDSOI technology model: per-component effective
+//!   capacitance and area, dynamic + leakage power, body-bias → V_t shift,
+//!   and the feature-size/FO4 scaling rule used for the paper's Table II.
+//! * [`pipesim`] — a cycle-accurate pipeline simulator with the internal
+//!   (before-rounding) bypass network, used to measure the average latency
+//!   penalty of Fig. 2(c) and Fig. 4.
+//! * [`workloads`] — SPEC-FP-like dependence-trace generation, throughput
+//!   streams, and utilization (duty-cycle) profiles.
+//! * [`dse`] — the FPGen design-space-exploration loop: architecture and
+//!   voltage sweeps and Pareto-frontier extraction (Fig. 3 / Fig. 4).
+//! * [`bb`] — body-bias controllers: static vs dynamically adaptive V_BB
+//!   (the 3× → 1.5× low-utilization energy recovery of Fig. 4).
+//! * [`chip`] — the FPMax chip testbench of Fig. 5: on-chip RAM banks, a
+//!   JTAG-like slow port, the instruction encoding, and the at-speed test
+//!   sequencer.
+//! * [`runtime`] — PJRT runtime: loads the AOT-compiled JAX/Pallas HLO
+//!   artifacts (`artifacts/*.hlo.txt`) and executes them from Rust; Python
+//!   never runs on the request path.
+//! * [`coordinator`] — the asynchronous verification coordinator that
+//!   batches operands through both the Rust datapath and the PJRT artifact
+//!   and cross-checks them.
+//! * [`report`] — emitters that regenerate every table and figure of the
+//!   paper's evaluation.
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! use fpmax::arch::{FpuConfig, FpuKind, Precision, FpuUnit};
+//!
+//! // The paper's SP FMA: 4 stages, Booth-3, ZM reduction tree.
+//! let cfg = FpuConfig::sp_fma();
+//! let unit = FpuUnit::generate(&cfg);
+//! let r = unit.fmac(1.5f32.to_bits() as u64,
+//!                   2.0f32.to_bits() as u64,
+//!                   0.25f32.to_bits() as u64);
+//! assert_eq!(f32::from_bits(r.bits as u32), 1.5 * 2.0 + 0.25);
+//! ```
+
+pub mod arch;
+pub mod bb;
+pub mod chip;
+pub mod coordinator;
+pub mod dse;
+pub mod energy;
+pub mod pipesim;
+pub mod report;
+pub mod runtime;
+pub mod timing;
+pub mod util;
+pub mod workloads;
+
+/// Crate-wide result type.
+pub type Result<T> = anyhow::Result<T>;

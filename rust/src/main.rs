@@ -1,0 +1,240 @@
+//! `fpmax` — the L3 coordinator CLI.
+//!
+//! One subcommand per reproduced experiment plus the chip self-test:
+//!
+//! ```text
+//! fpmax table1                      # Table I summary (model vs silicon)
+//! fpmax table2                      # Table II scaled comparison
+//! fpmax fig2c  [--ops 20000]        # latency-penalty comparison
+//! fpmax fig3   [--precision sp|dp]  # throughput tradeoff curves
+//! fpmax fig4   [--precision sp|dp]  # latency tradeoff curves
+//! fpmax calib                       # calibration residuals vs Table I
+//! fpmax sweep  [--precision sp|dp] [--kind fma|cma]
+//! fpmax verify [--unit sp_fma] [--ops 100000]   # datapath vs softfloat
+//! fpmax selftest [--ops 65536] [--artifacts DIR] # chip + PJRT cross-check
+//! ```
+
+use fpmax::arch::fp::Precision;
+use fpmax::arch::generator::{FpuConfig, FpuKind, FpuUnit};
+use fpmax::chip::{
+    FpMaxChip, Instruction, UnitSel, BANK_PROGRAM, BANK_RESULT, BANK_STIM_A, BANK_STIM_B,
+    BANK_STIM_C,
+};
+use fpmax::coordinator;
+use fpmax::dse;
+use fpmax::energy::tech::{OperatingPoint, Technology};
+use fpmax::report;
+use fpmax::runtime::Runtime;
+use fpmax::util::cli::Args;
+use fpmax::workloads::throughput::{OperandMix, OperandStream};
+
+fn precision_arg(args: &Args) -> fpmax::Result<Precision> {
+    match args.get("precision").unwrap_or("sp") {
+        "sp" => Ok(Precision::Single),
+        "dp" => Ok(Precision::Double),
+        other => anyhow::bail!("--precision must be sp or dp, got {other}"),
+    }
+}
+
+fn unit_arg(args: &Args) -> fpmax::Result<FpuConfig> {
+    Ok(match args.get("unit").unwrap_or("sp_fma") {
+        "sp_fma" => FpuConfig::sp_fma(),
+        "sp_cma" => FpuConfig::sp_cma(),
+        "dp_fma" => FpuConfig::dp_fma(),
+        "dp_cma" => FpuConfig::dp_cma(),
+        other => anyhow::bail!("--unit must be one of sp_fma|sp_cma|dp_fma|dp_cma, got {other}"),
+    })
+}
+
+fn main() -> fpmax::Result<()> {
+    let args = Args::from_env()?;
+    match args.subcommand.as_deref() {
+        Some("table1") => {
+            report::table1::print(&report::table1::compute());
+        }
+        Some("table2") => {
+            report::table2::print(&report::table2::compute());
+        }
+        Some("fig2c") => {
+            let ops = args.get_parse("ops", 20_000usize)?;
+            let seed = args.get_parse("seed", 42u64)?;
+            report::fig2c::print(&report::fig2c::compute(ops, seed));
+        }
+        Some("fig3") => {
+            report::fig3::print(&report::fig3::compute(precision_arg(&args)?));
+        }
+        Some("fig4") => {
+            report::fig4::print(&report::fig4::compute(precision_arg(&args)?));
+        }
+        Some("calib") => {
+            let r = fpmax::energy::calibrate::calibration_report();
+            println!("implied κ_latency    = {:.3}", r.kappa_latency);
+            println!("implied κ_throughput = {:.3}", r.kappa_throughput);
+            println!("implied leak density = {:.2} mW/mm²", r.leak_density);
+            println!("\nper-unit model/silicon ratios:");
+            println!("{:<8} {:>6} {:>6} {:>6} {:>6}", "unit", "freq", "dynE", "area", "leak");
+            for (name, f, e, a, l) in &r.residuals {
+                println!("{name:<8} {f:>6.3} {e:>6.3} {a:>6.3} {l:>6.3}");
+            }
+        }
+        Some("sweep") => {
+            let precision = precision_arg(&args)?;
+            let kind = match args.get("kind").unwrap_or("fma") {
+                "fma" => FpuKind::Fma,
+                "cma" => FpuKind::Cma,
+                other => anyhow::bail!("--kind must be fma or cma, got {other}"),
+            };
+            let tech = Technology::fdsoi28();
+            let pts = dse::arch_sweep(precision, kind, &tech, OperatingPoint::new(1.0, 0.0));
+            let front = dse::frontier(&pts);
+            println!("{} designs evaluated, {} on the Pareto frontier:", pts.len(), front.len());
+            for &i in &front {
+                let p = &pts[i];
+                println!(
+                    "  stages={} booth={} tree={:<7} {:>7.1} GFLOPS/mm²  {:>6.2} pJ/FLOP",
+                    p.config.stages,
+                    p.config.booth.name(),
+                    p.config.tree.name(),
+                    p.eff.gflops_per_mm2,
+                    p.eff.pj_per_flop,
+                );
+            }
+        }
+        Some("verify") => {
+            let cfg = unit_arg(&args)?;
+            let ops = args.get_parse("ops", 100_000usize)?;
+            let seed = args.get_parse("seed", 42u64)?;
+            let workers = args.get_parse("workers", num_threads())?;
+            let unit = FpuUnit::generate(&cfg);
+            let mut stream = OperandStream::new(cfg.precision, OperandMix::Anything, seed);
+            let triples = stream.batch(ops);
+            let r = coordinator::verify_datapath_only(&unit, &triples, workers);
+            println!(
+                "{}: {} ops, {} mismatches, {:.2} Mops/s ({} workers)",
+                cfg.name(),
+                r.ops,
+                r.datapath_mismatches.len(),
+                r.ops as f64 / r.rust_secs / 1e6,
+                workers
+            );
+            anyhow::ensure!(r.clean(), "datapath mismatches: {:?}", r.datapath_mismatches);
+        }
+        Some("selftest") => {
+            selftest(&args)?;
+        }
+        other => {
+            if let Some(cmd) = other {
+                eprintln!("unknown subcommand {cmd:?}\n");
+            }
+            eprintln!(
+                "usage: fpmax <table1|table2|fig2c|fig3|fig4|calib|sweep|verify|selftest> [options]"
+            );
+            std::process::exit(2);
+        }
+    }
+    args.reject_unknown()?;
+    Ok(())
+}
+
+/// End-to-end chip self-test: JTAG-load stimulus, run all four FPUs at
+/// speed, read back, check against golden softfloat, and cross-check the
+/// SP/DP FMA streams against the AOT artifacts through PJRT.
+fn selftest(args: &Args) -> fpmax::Result<()> {
+    let ops = args.get_parse("ops", 65_536usize)?;
+    let seed = args.get_parse("seed", 42u64)?;
+    let artifacts = args.get("artifacts").unwrap_or("artifacts").to_string();
+    let ram_depth = 1024usize;
+
+    println!("=== FPMax chip self-test: {ops} ops/unit ===");
+    let mut chip = FpMaxChip::new(ram_depth);
+    let mut total_ops = 0u64;
+    let mut total_cycles = 0u64;
+    let mut mismatches = 0usize;
+
+    for (sel, cfg) in [
+        (UnitSel::DpCma, FpuConfig::dp_cma()),
+        (UnitSel::DpFma, FpuConfig::dp_fma()),
+        (UnitSel::SpCma, FpuConfig::sp_cma()),
+        (UnitSel::SpFma, FpuConfig::sp_fma()),
+    ] {
+        let mut stream = OperandStream::new(cfg.precision, OperandMix::Finite, seed);
+        let mut done = 0usize;
+        while done < ops {
+            let n = ram_depth.min(ops - done);
+            let triples = stream.batch(n);
+            let a: Vec<u64> = triples.iter().map(|t| t.a).collect();
+            let b: Vec<u64> = triples.iter().map(|t| t.b).collect();
+            let c: Vec<u64> = triples.iter().map(|t| t.c).collect();
+            {
+                let mut port = chip.jtag();
+                port.load_bank(BANK_STIM_A, &a)?;
+                port.load_bank(BANK_STIM_B, &b)?;
+                port.load_bank(BANK_STIM_C, &c)?;
+                // One burst instruction per RAM fill (max repeat 1024).
+                let prog = [Instruction::fmac_burst(sel, 0, n as u16).encode() as u64, 0];
+                port.load_bank(BANK_PROGRAM, &prog)?;
+            }
+            let stats = chip.run()?;
+            total_ops += stats.ops;
+            total_cycles += stats.cycles;
+            let results = chip.jtag().read_bank(BANK_RESULT, n)?;
+            let unit = chip.unit(sel);
+            for i in 0..n {
+                let want = fpmax::chip::expected_result(
+                    unit,
+                    fpmax::arch::rounding::RoundMode::NearestEven,
+                    a[i],
+                    b[i],
+                    c[i],
+                    fpmax::chip::Op::Fmac,
+                );
+                if results[i] != want {
+                    mismatches += 1;
+                }
+            }
+            done += n;
+        }
+        println!("{:<8} {ops} ops at speed: OK", format!("{sel:?}"));
+    }
+    println!("chip total: {total_ops} ops in {total_cycles} at-speed cycles, {mismatches} mismatches");
+    anyhow::ensure!(mismatches == 0, "{mismatches} chip-vs-golden mismatches");
+
+    // PJRT cross-check of the fused FMA streams against the artifacts.
+    match Runtime::cpu(&artifacts) {
+        Ok(rt) => {
+            println!("\nPJRT platform: {}", rt.platform());
+            for (name, cfg) in [("sp_fmac", FpuConfig::sp_fma()), ("dp_fmac", FpuConfig::dp_fma())]
+            {
+                let artifact = rt.load_fmac(name, cfg.precision)?;
+                let unit = FpuUnit::generate(&cfg);
+                let mut stream =
+                    OperandStream::new(cfg.precision, OperandMix::Finite, seed ^ 0x5a5a);
+                let triples = stream.batch(ops.min(4 * artifact.batch));
+                let r = coordinator::verify_batch(&unit, &artifact, &triples, num_threads())?;
+                println!(
+                    "{name}: {} ops  artifact-vs-golden {}  datapath-vs-golden {}  toggles {}  (pjrt {:.1} ms, rust {:.1} ms)",
+                    r.ops,
+                    r.artifact_mismatches.len(),
+                    r.datapath_mismatches.len(),
+                    r.artifact_toggles,
+                    r.pjrt_secs * 1e3,
+                    r.rust_secs * 1e3,
+                );
+                anyhow::ensure!(
+                    r.clean(),
+                    "cross-check failed: {:?}",
+                    r.artifact_mismatches.first()
+                );
+            }
+            println!("\nSELFTEST PASS: chip, golden model, and AOT artifacts agree bit-for-bit");
+        }
+        Err(e) => {
+            println!("\nPJRT unavailable ({e}); chip-vs-golden portion passed");
+        }
+    }
+    Ok(())
+}
+
+fn num_threads() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
+}

@@ -1,0 +1,9 @@
+//! Cycle-accurate FPU pipeline simulation: dependence traces ([`trace`])
+//! and the bypass-aware issue simulator ([`sim`]) that measures the
+//! paper's average-latency-penalty metric.
+
+pub mod sim;
+pub mod trace;
+
+pub use sim::{benchmarked_delay_ns, simulate, LatencyModel, SimResult};
+pub use trace::{DepKind, Trace, TraceOp};

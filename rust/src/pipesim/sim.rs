@@ -1,0 +1,230 @@
+//! Cycle-accurate in-order pipeline simulation with the internal bypass
+//! network — the machinery behind Fig. 2(c) and the x-axis of Fig. 4.
+//!
+//! The simulated machine issues one FMAC per cycle in program order
+//! (the FPU's local view; the surrounding core's reordering is already
+//! reflected in the trace's dependence distances). An op stalls at issue
+//! until its producer's result reaches the input port it needs:
+//!
+//! * full (rounded, written-back) result: `latency_full` cycles after
+//!   the producer issued;
+//! * bypassed unrounded result into the adder: `latency_to_add_input`;
+//! * bypassed into the multiplier: `latency_to_mul_input`.
+//!
+//! The paper's **average latency penalty** is the mean number of cycles
+//! a dependent op waits beyond the 1-per-cycle issue rate; its
+//! **average cycles per FLOP** is `1 + penalty` (§FPU Architectures).
+
+use crate::arch::generator::FpuUnit;
+
+use super::trace::{DepKind, Trace};
+
+/// The three bypass-tap latencies of a unit (in cycles).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct LatencyModel {
+    pub full: u32,
+    pub to_add: u32,
+    pub to_mul: u32,
+}
+
+impl LatencyModel {
+    /// Extract from a generated unit.
+    pub fn of(unit: &FpuUnit) -> LatencyModel {
+        LatencyModel {
+            full: unit.latency_full(),
+            to_add: unit.latency_to_add_input(),
+            to_mul: unit.latency_to_mul_input(),
+        }
+    }
+
+    /// Issue-to-issue distance required for a dependence kind.
+    #[inline]
+    pub fn tap(&self, kind: DepKind) -> u32 {
+        match kind {
+            DepKind::Accumulate => self.to_add,
+            DepKind::Multiplier => self.to_mul,
+        }
+    }
+}
+
+/// Result of simulating one trace on one latency model.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SimResult {
+    /// Ops simulated.
+    pub ops: usize,
+    /// Total cycles from first issue to last writeback.
+    pub cycles: u64,
+    /// Σ issue stalls / ops — the paper's average latency penalty.
+    pub avg_penalty: f64,
+    /// 1 + avg_penalty — average cycles per FLOP.
+    pub avg_cycles_per_op: f64,
+    /// Histogram of per-op stall lengths (index = stall cycles, capped).
+    pub stall_histogram: Vec<u64>,
+}
+
+/// Maximum stall bucket tracked in the histogram.
+const MAX_STALL_BUCKET: usize = 16;
+
+/// Simulate a trace. Dependences must be valid (`trace.validate()`).
+pub fn simulate(lat: &LatencyModel, trace: &Trace) -> SimResult {
+    let n = trace.ops.len();
+    let mut issue = vec![0u64; n];
+    let mut stalls_total = 0u64;
+    let mut hist = vec![0u64; MAX_STALL_BUCKET + 1];
+    let mut last_issue: Option<u64> = None;
+    for (i, op) in trace.ops.iter().enumerate() {
+        // Earliest slot from the issue port (1 per cycle).
+        let port_ready = last_issue.map(|t| t + 1).unwrap_or(0);
+        // Earliest slot from the producer, if any.
+        let data_ready = match op.dep {
+            None => 0,
+            Some((d, kind)) => {
+                let producer = issue[i - d as usize];
+                producer + lat.tap(kind) as u64
+            }
+        };
+        let t = port_ready.max(data_ready);
+        let stall = t - port_ready;
+        stalls_total += stall;
+        hist[(stall as usize).min(MAX_STALL_BUCKET)] += 1;
+        issue[i] = t;
+        last_issue = Some(t);
+    }
+    let cycles = match last_issue {
+        Some(t) => t + lat.full as u64,
+        None => 0,
+    };
+    let avg_penalty = if n > 0 { stalls_total as f64 / n as f64 } else { 0.0 };
+    SimResult {
+        ops: n,
+        cycles,
+        avg_penalty,
+        avg_cycles_per_op: 1.0 + avg_penalty,
+        stall_histogram: hist,
+    }
+}
+
+/// Average *benchmarked delay* in ns (Fig. 4's x-axis): cycle time ×
+/// average cycles per FLOP.
+pub fn benchmarked_delay_ns(cycle_ps: f64, sim: &SimResult) -> f64 {
+    cycle_ps * sim.avg_cycles_per_op / 1000.0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::generator::FpuConfig;
+    use crate::pipesim::trace::TraceOp;
+
+    fn dp_cma_lat() -> LatencyModel {
+        LatencyModel::of(&FpuUnit::generate(&FpuConfig::dp_cma()))
+    }
+
+    fn fma5(forwarding: bool) -> LatencyModel {
+        let mut cfg = FpuConfig::dp_fma();
+        cfg.stages = 5;
+        cfg.forwarding = forwarding;
+        LatencyModel::of(&FpuUnit::generate(&cfg))
+    }
+
+    #[test]
+    fn independent_stream_no_penalty() {
+        let sim = simulate(&dp_cma_lat(), &Trace::independent(1000));
+        assert_eq!(sim.avg_penalty, 0.0);
+        assert_eq!(sim.avg_cycles_per_op, 1.0);
+        // 1000 issues + pipeline drain.
+        assert_eq!(sim.cycles, 999 + 5);
+    }
+
+    #[test]
+    fn accumulation_chain_penalty_matches_tap() {
+        // Back-to-back accumulation: each dependent op stalls tap−1.
+        let lat = dp_cma_lat();
+        assert_eq!(lat.to_add, 2);
+        let n = 1000;
+        let sim = simulate(&lat, &Trace::accumulation_chain(n));
+        // 999 of 1000 ops stall (to_add − 1) = 1 cycle.
+        let want = 999.0 / 1000.0;
+        assert!((sim.avg_penalty - want).abs() < 1e-12, "{}", sim.avg_penalty);
+    }
+
+    #[test]
+    fn multiply_chain_penalty() {
+        let lat = dp_cma_lat(); // to_mul = 4
+        let sim = simulate(&lat, &Trace::multiply_chain(1000));
+        let want = 3.0 * 999.0 / 1000.0;
+        assert!((sim.avg_penalty - want).abs() < 1e-12);
+    }
+
+    #[test]
+    fn fma_without_forwarding_slower() {
+        let with = simulate(&fma5(true), &Trace::accumulation_chain(500));
+        let without = simulate(&fma5(false), &Trace::accumulation_chain(500));
+        assert!(without.avg_penalty > with.avg_penalty);
+        // FMA5 w/ fwd: stall 3; w/o: stall 4.
+        assert!((with.avg_penalty - 3.0 * 499.0 / 500.0).abs() < 1e-12);
+        assert!((without.avg_penalty - 4.0 * 499.0 / 500.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn cma_beats_fma_on_accumulation() {
+        // The Fig. 2(c) mechanism in its purest form.
+        let cma = simulate(&dp_cma_lat(), &Trace::accumulation_chain(500));
+        let fma = simulate(&fma5(true), &Trace::accumulation_chain(500));
+        assert!(cma.avg_penalty < 0.4 * fma.avg_penalty);
+    }
+
+    #[test]
+    fn distance_covers_latency() {
+        // Dependences farther than the tap latency cost nothing.
+        let lat = dp_cma_lat();
+        let ops: Vec<TraceOp> = (0..100)
+            .map(|i| if i < 4 { TraceOp::INDEPENDENT } else { TraceOp::multiplier(4) })
+            .collect();
+        let sim = simulate(&lat, &Trace::new(ops));
+        assert_eq!(sim.avg_penalty, 0.0);
+    }
+
+    #[test]
+    fn penalty_monotonic_in_dependence_density() {
+        let lat = dp_cma_lat();
+        let mut prev = -1.0;
+        for frac in [0.0, 0.25, 0.5, 0.75, 1.0] {
+            let n = 400;
+            let ops: Vec<TraceOp> = (0..n)
+                .map(|i| {
+                    if i > 0 && (i as f64 / n as f64) < frac {
+                        TraceOp::accumulate(1)
+                    } else {
+                        TraceOp::INDEPENDENT
+                    }
+                })
+                .collect();
+            let sim = simulate(&lat, &Trace::new(ops));
+            assert!(sim.avg_penalty >= prev, "frac {frac}");
+            prev = sim.avg_penalty;
+        }
+    }
+
+    #[test]
+    fn histogram_accounts_every_op() {
+        let sim = simulate(&dp_cma_lat(), &Trace::accumulation_chain(100));
+        assert_eq!(sim.stall_histogram.iter().sum::<u64>(), 100);
+        assert_eq!(sim.stall_histogram[0], 1); // first op
+        assert_eq!(sim.stall_histogram[1], 99);
+    }
+
+    #[test]
+    fn benchmarked_delay_scales_with_cycle_time() {
+        let sim = simulate(&dp_cma_lat(), &Trace::accumulation_chain(100));
+        let d = benchmarked_delay_ns(840.0, &sim);
+        assert!((d - 0.840 * sim.avg_cycles_per_op).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_trace_zero_cycles() {
+        let sim = simulate(&dp_cma_lat(), &Trace::default());
+        assert_eq!(sim.cycles, 0);
+        assert_eq!(sim.ops, 0);
+    }
+}

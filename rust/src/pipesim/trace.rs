@@ -1,0 +1,138 @@
+//! FP instruction traces: the dependence structure of a workload.
+//!
+//! The latency experiments (Fig. 2(c), Fig. 4) depend only on *where*
+//! each FMAC's result flows — into the next op's accumulator input, its
+//! multiplier input, or nowhere — and at what program-order distance.
+//! A [`Trace`] captures exactly that; operand *values* live in the chip
+//! workloads ([`crate::workloads`]), not here.
+
+/// Which consumer input a producer's result feeds.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum DepKind {
+    /// Result feeds the addend/accumulator input (`c` of `a·b+c`) — the
+    /// short path through a CMA's bypass network.
+    Accumulate,
+    /// Result feeds a multiplier input (`a` or `b`).
+    Multiplier,
+}
+
+/// One FMAC in program order.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TraceOp {
+    /// Distance to the producer in program order (1 = immediately
+    /// preceding op); `None` for independent ops.
+    pub dep: Option<(u32, DepKind)>,
+}
+
+impl TraceOp {
+    pub const INDEPENDENT: TraceOp = TraceOp { dep: None };
+
+    pub fn accumulate(distance: u32) -> TraceOp {
+        TraceOp { dep: Some((distance, DepKind::Accumulate)) }
+    }
+
+    pub fn multiplier(distance: u32) -> TraceOp {
+        TraceOp { dep: Some((distance, DepKind::Multiplier)) }
+    }
+}
+
+/// A dependence trace.
+#[derive(Debug, Clone, Default)]
+pub struct Trace {
+    pub ops: Vec<TraceOp>,
+}
+
+impl Trace {
+    pub fn new(ops: Vec<TraceOp>) -> Trace {
+        Trace { ops }
+    }
+
+    pub fn len(&self) -> usize {
+        self.ops.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.ops.is_empty()
+    }
+
+    /// Fraction of ops with a dependence of the given kind.
+    pub fn dep_fraction(&self, kind: DepKind) -> f64 {
+        if self.ops.is_empty() {
+            return 0.0;
+        }
+        let n = self.ops.iter().filter(|o| matches!(o.dep, Some((_, k)) if k == kind)).count();
+        n as f64 / self.ops.len() as f64
+    }
+
+    /// Validate that no op depends on something before the trace start.
+    pub fn validate(&self) -> crate::Result<()> {
+        for (i, op) in self.ops.iter().enumerate() {
+            if let Some((d, _)) = op.dep {
+                if d == 0 {
+                    anyhow::bail!("op {i}: zero dependence distance");
+                }
+                if d as usize > i {
+                    anyhow::bail!("op {i}: dependence distance {d} reaches before trace start");
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// A pure accumulation chain of `n` ops (dot-product inner loop).
+    pub fn accumulation_chain(n: usize) -> Trace {
+        let ops = (0..n)
+            .map(|i| if i == 0 { TraceOp::INDEPENDENT } else { TraceOp::accumulate(1) })
+            .collect();
+        Trace { ops }
+    }
+
+    /// A pure multiply-dependence chain (polynomial evaluation, Horner).
+    pub fn multiply_chain(n: usize) -> Trace {
+        let ops = (0..n)
+            .map(|i| if i == 0 { TraceOp::INDEPENDENT } else { TraceOp::multiplier(1) })
+            .collect();
+        Trace { ops }
+    }
+
+    /// `n` fully independent ops (the GPU-style throughput workload).
+    pub fn independent(n: usize) -> Trace {
+        Trace { ops: vec![TraceOp::INDEPENDENT; n] }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builders_shapes() {
+        let t = Trace::accumulation_chain(10);
+        assert_eq!(t.len(), 10);
+        assert!((t.dep_fraction(DepKind::Accumulate) - 0.9).abs() < 1e-12);
+        assert_eq!(t.dep_fraction(DepKind::Multiplier), 0.0);
+        let t = Trace::multiply_chain(4);
+        assert!((t.dep_fraction(DepKind::Multiplier) - 0.75).abs() < 1e-12);
+        let t = Trace::independent(5);
+        assert_eq!(t.dep_fraction(DepKind::Accumulate), 0.0);
+    }
+
+    #[test]
+    fn validation_catches_bad_distances() {
+        assert!(Trace::accumulation_chain(100).validate().is_ok());
+        let bad = Trace::new(vec![TraceOp::accumulate(1)]);
+        assert!(bad.validate().is_err()); // first op cannot depend
+        let bad = Trace::new(vec![TraceOp::INDEPENDENT, TraceOp { dep: Some((0, DepKind::Accumulate)) }]);
+        assert!(bad.validate().is_err());
+        let ok = Trace::new(vec![TraceOp::INDEPENDENT, TraceOp::multiplier(1)]);
+        assert!(ok.validate().is_ok());
+    }
+
+    #[test]
+    fn empty_trace() {
+        let t = Trace::default();
+        assert!(t.is_empty());
+        assert_eq!(t.dep_fraction(DepKind::Accumulate), 0.0);
+        assert!(t.validate().is_ok());
+    }
+}

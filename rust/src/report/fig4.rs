@@ -1,0 +1,250 @@
+//! Fig. 4 — latency tradeoffs for the SP and DP CMAs: energy/op vs
+//! average benchmarked delay, at 100% utilization with and without body
+//! bias, and at 10% utilization with statically-set vs dynamically
+//! adaptive body bias.
+//!
+//! Paper claims reproduced: BB cuts power ~13% when heavily used; a
+//! statically forward-biased unit at 10% utilization pays ~3× energy/op
+//! (leakage-dominated), recovered to ~1.5× by adaptive BB.
+
+use crate::arch::fp::Precision;
+use crate::arch::generator::{FpuConfig, FpuUnit};
+use crate::bb::controller::{run_energy, BbPolicy};
+use crate::dse::sweep::default_vdd_grid;
+use crate::energy::tech::{OperatingPoint, Technology};
+use crate::pipesim::{simulate, LatencyModel};
+use crate::timing::timing;
+use crate::workloads::specfp::Profile;
+use crate::workloads::utilization::UtilizationProfile;
+
+use super::TextTable;
+
+/// One point on a Fig. 4 curve.
+#[derive(Debug, Clone, Copy)]
+pub struct Fig4Point {
+    pub vdd: f64,
+    pub vbb: f64,
+    /// Average benchmarked delay in ns (cycle × avg cycles/FLOP).
+    pub delay_ns: f64,
+    /// Energy per op in pJ (at the curve's utilization/policy).
+    pub pj_per_op: f64,
+}
+
+/// The four curves for one precision.
+#[derive(Debug, Clone)]
+pub struct Fig4 {
+    pub precision: Precision,
+    pub full_nobb: Vec<Fig4Point>,
+    pub full_bb: Vec<Fig4Point>,
+    pub low_static: Vec<Fig4Point>,
+    pub low_adaptive: Vec<Fig4Point>,
+    /// Power saving of BB at 100% utilization, at the matched-delay point
+    /// (paper: ~13%).
+    pub bb_power_saving: f64,
+    /// Energy blow-up at 10% utilization, static BB, at the min-energy
+    /// point of the 100% curve (paper: ~3×).
+    pub static_blowup: f64,
+    /// Same with adaptive BB (paper: ~1.5×).
+    pub adaptive_blowup: f64,
+}
+
+/// Average cycles per op of this unit over the SPEC-FP-like suite.
+fn cycles_per_op(unit: &FpuUnit) -> f64 {
+    let lat = LatencyModel::of(unit);
+    let suite = Profile::suite();
+    suite
+        .iter()
+        .map(|p| simulate(&lat, &p.generate(20_000, 42)).avg_cycles_per_op)
+        .sum::<f64>()
+        / suite.len() as f64
+}
+
+/// Evaluate one curve: for each V_DD, energy/op under the policy and
+/// utilization profile, delay from the 100%-utilization timing.
+fn curve(
+    unit: &FpuUnit,
+    tech: &Technology,
+    cpo: f64,
+    vbb_for_timing: f64,
+    policy_of: impl Fn(f64) -> BbPolicy,
+    profile_of: impl Fn() -> UtilizationProfile,
+) -> Vec<Fig4Point> {
+    let mut out = Vec::new();
+    for &vdd in &default_vdd_grid() {
+        let op = OperatingPoint::new(vdd, vbb_for_timing);
+        let Some(t) = timing(&unit.config, tech, op) else { continue };
+        let policy = policy_of(t.freq_ghz);
+        let Some(e) = run_energy(unit, tech, vdd, policy, &profile_of()) else { continue };
+        out.push(Fig4Point {
+            vdd,
+            vbb: vbb_for_timing,
+            delay_ns: t.cycle_ps * cpo / 1000.0,
+            pj_per_op: e.pj_per_op,
+        });
+    }
+    out
+}
+
+/// Compute the figure for one precision.
+pub fn compute(precision: Precision) -> Fig4 {
+    let tech = Technology::fdsoi28();
+    let cfg = match precision {
+        Precision::Single => FpuConfig::sp_cma(),
+        Precision::Double => FpuConfig::dp_cma(),
+    };
+    let unit = FpuUnit::generate(&cfg);
+    let cpo = cycles_per_op(&unit);
+    let total = 1_000_000;
+    let burst = 10_000;
+
+    let full = |_f: f64| BbPolicy::Static { vbb: 0.0 };
+    let full_nobb = curve(&unit, &tech, cpo, 0.0, full, || UtilizationProfile::full(total));
+    let full_bb = curve(
+        &unit, &tech, cpo, Technology::NOMINAL_VBB,
+        |_f| BbPolicy::static_nominal(),
+        || UtilizationProfile::full(total),
+    );
+    let low_static = curve(
+        &unit, &tech, cpo, Technology::NOMINAL_VBB,
+        |_f| BbPolicy::static_nominal(),
+        || UtilizationProfile::duty(0.1, burst, total),
+    );
+    let low_adaptive = curve(
+        &unit, &tech, cpo, Technology::NOMINAL_VBB,
+        BbPolicy::adaptive_nominal,
+        || UtilizationProfile::duty(0.1, burst, total),
+    );
+
+    // BB saving at 100%: compare energy at matched delay. The BB curve
+    // reaches any given delay at a lower V_DD; interpolate the no-BB
+    // curve at the BB curve's delays.
+    let bb_power_saving = matched_delay_gain(&full_nobb, &full_bb);
+
+    // Blow-ups at the min-energy point of the full-utilization BB curve.
+    let idx_min = full_bb
+        .iter()
+        .enumerate()
+        .min_by(|a, b| a.1.pj_per_op.partial_cmp(&b.1.pj_per_op).unwrap())
+        .map(|(i, _)| i)
+        .unwrap();
+    let base = full_bb[idx_min].pj_per_op;
+    let static_blowup = low_static[idx_min.min(low_static.len() - 1)].pj_per_op / base;
+    let adaptive_blowup = low_adaptive[idx_min.min(low_adaptive.len() - 1)].pj_per_op / base;
+
+    Fig4 {
+        precision,
+        full_nobb,
+        full_bb,
+        low_static,
+        low_adaptive,
+        bb_power_saving,
+        static_blowup,
+        adaptive_blowup,
+    }
+}
+
+/// Mean fractional energy reduction of curve B vs A at matched delay.
+fn matched_delay_gain(a: &[Fig4Point], b: &[Fig4Point]) -> f64 {
+    let interp = |curve: &[Fig4Point], x: f64| -> Option<f64> {
+        for w in curve.windows(2) {
+            // delay decreases with vdd: windows descend.
+            let (x0, x1) = (w[0].delay_ns, w[1].delay_ns);
+            let (lo, hi) = if x0 < x1 { (x0, x1) } else { (x1, x0) };
+            if (lo..=hi).contains(&x) {
+                let t = if hi > lo { (x - x0) / (x1 - x0) } else { 0.0 };
+                return Some(w[0].pj_per_op * (1.0 - t) + w[1].pj_per_op * t);
+            }
+        }
+        None
+    };
+    let mut gains = Vec::new();
+    for p in b {
+        if let Some(e_a) = interp(a, p.delay_ns) {
+            gains.push(1.0 - p.pj_per_op / e_a);
+        }
+    }
+    if gains.is_empty() {
+        0.0
+    } else {
+        gains.iter().sum::<f64>() / gains.len() as f64
+    }
+}
+
+/// Print the four curves and headline factors.
+pub fn print(f: &Fig4) {
+    let which = match f.precision {
+        Precision::Single => "SP",
+        Precision::Double => "DP",
+    };
+    println!("\nFIG 4 — {which} CMA latency tradeoffs (energy/op vs benchmarked delay)\n");
+    let mut t = TextTable::new(vec!["curve", "V_DD", "delay ns", "pJ/op"]);
+    let mut dump = |name: &str, c: &[Fig4Point]| {
+        for p in c {
+            t.row(vec![
+                name.to_string(),
+                format!("{:.2}", p.vdd),
+                format!("{:.2}", p.delay_ns),
+                format!("{:.1}", p.pj_per_op),
+            ]);
+        }
+    };
+    dump("100% no-BB", &f.full_nobb);
+    dump("100% BB", &f.full_bb);
+    dump("10% static BB", &f.low_static);
+    dump("10% adaptive BB", &f.low_adaptive);
+    t.print();
+    println!("\nBB power saving at 100% utilization: {:.0}% (paper: ~13%)", f.bb_power_saving * 100.0);
+    println!("10% util, static BB energy blow-up : {:.1}× (paper: ~3×)", f.static_blowup);
+    println!("10% util, adaptive BB blow-up      : {:.1}× (paper: ~1.5×)", f.adaptive_blowup);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sp_headline_factors() {
+        // Paper: ~3× static, ~1.5× adaptive. Our leakage model (fitted to
+        // the four Table-I points with forward bias) runs somewhat hotter
+        // at the min-energy voltage, so the static band is wide; the
+        // *qualitative* claim — static blows up severalfold, adaptive
+        // recovers most of it — is asserted strictly.
+        let f = compute(Precision::Single);
+        assert!((0.05..0.30).contains(&f.bb_power_saving), "bb saving {:.2}", f.bb_power_saving);
+        assert!((2.0..5.5).contains(&f.static_blowup), "static {:.2}", f.static_blowup);
+        assert!((1.05..2.2).contains(&f.adaptive_blowup), "adaptive {:.2}", f.adaptive_blowup);
+        assert!(
+            f.adaptive_blowup < 0.6 * f.static_blowup,
+            "adaptive must recover most of the static blow-up"
+        );
+    }
+
+    #[test]
+    fn dp_headline_factors() {
+        let f = compute(Precision::Double);
+        assert!((1.8..5.5).contains(&f.static_blowup), "static {:.2}", f.static_blowup);
+        assert!(f.adaptive_blowup < f.static_blowup);
+    }
+
+    #[test]
+    fn adaptive_curve_between_full_and_static() {
+        let f = compute(Precision::Single);
+        for ((s, a), b) in f.low_static.iter().zip(&f.low_adaptive).zip(&f.full_bb) {
+            assert!(a.pj_per_op <= s.pj_per_op + 1e-9);
+            assert!(a.pj_per_op >= b.pj_per_op - 1e-9);
+        }
+    }
+
+    #[test]
+    fn delay_monotone_in_vdd() {
+        let f = compute(Precision::Single);
+        for w in f.full_bb.windows(2) {
+            assert!(w[1].delay_ns < w[0].delay_ns, "delay must fall as vdd rises");
+        }
+    }
+
+    #[test]
+    fn print_smoke() {
+        print(&compute(Precision::Single));
+    }
+}

@@ -1,0 +1,215 @@
+//! Table I — the per-unit performance summary.
+//!
+//! For each fabricated unit the model reports the same rows the paper
+//! does: structural parameters straight from the generator, plus the
+//! physical quantities (area, frequency, leakage, total power) at the
+//! nominal operating point, the **normalized** efficiencies there, the
+//! **max** efficiencies over the legal (V_DD, V_BB) window, and the
+//! min/norm benchmarked delay over the SPEC-FP-like suite.
+
+use crate::arch::generator::{FpuConfig, FpuUnit};
+use crate::dse::sweep::{default_vbb_grid, default_vdd_grid};
+use crate::energy::components::unit_cost;
+use crate::energy::power::{evaluate, EfficiencyPoint};
+use crate::energy::tech::{OperatingPoint, Technology};
+use crate::pipesim::{simulate, LatencyModel};
+use crate::timing::{nominal_op, timing};
+use crate::workloads::specfp::Profile;
+
+use super::TextTable;
+
+/// One reproduced Table-I column.
+#[derive(Debug, Clone)]
+pub struct Table1Entry {
+    pub name: String,
+    pub config: FpuConfig,
+    pub area_mm2: f64,
+    pub vdd: f64,
+    pub vbb: f64,
+    pub freq_ghz: f64,
+    pub leak_mw: f64,
+    pub total_mw: f64,
+    pub norm_area_eff: f64,
+    pub norm_energy_eff: f64,
+    pub max_area_eff: f64,
+    pub max_energy_eff: f64,
+    pub norm_delay_ns: f64,
+    pub min_delay_ns: f64,
+}
+
+/// The paper's published values for the same cells (name, area, freq,
+/// leak, total, norm/max area eff, norm/max energy eff, norm/min delay).
+pub const PAPER: [(&str, f64, f64, f64, f64, f64, f64, f64, f64, f64, f64); 4] = [
+    ("DP CMA", 0.032, 1.19, 8.4, 66.0, 74.6, 87.5, 36.0, 128.0, 1.39, 1.18),
+    ("DP FMA", 0.024, 0.91, 3.8, 41.0, 74.6, 111.0, 43.7, 117.0, 2.79, 1.88),
+    ("SP CMA", 0.018, 1.36, 3.3, 25.0, 151.0, 165.0, 110.0, 314.0, 1.42, 1.30),
+    ("SP FMA", 0.0081, 0.91, 1.6, 17.0, 217.0, 278.0, 106.0, 289.0, 1.77, 1.39),
+];
+
+/// Average cycles per FLOP over the SPEC-FP-like suite (arithmetic mean
+/// across profiles, as the paper averages its benchmarks).
+pub fn avg_cycles_per_op(unit: &FpuUnit, ops_per_profile: usize, seed: u64) -> f64 {
+    let lat = LatencyModel::of(unit);
+    let suite = Profile::suite();
+    let total: f64 = suite
+        .iter()
+        .map(|p| simulate(&lat, &p.generate(ops_per_profile, seed)).avg_cycles_per_op)
+        .sum();
+    total / suite.len() as f64
+}
+
+/// Best (max-energy-eff, max-area-eff, min-delay) over the legal
+/// operating window.
+fn scan_extremes(
+    unit: &FpuUnit,
+    tech: &Technology,
+    cycles_per_op: f64,
+) -> (f64, f64, f64) {
+    let mut best_eeff = 0.0f64;
+    let mut best_aeff = 0.0f64;
+    let mut best_delay = f64::INFINITY;
+    for &vdd in &default_vdd_grid() {
+        for &vbb in &default_vbb_grid() {
+            let op = OperatingPoint::new(vdd, vbb);
+            if !tech.valid(op) {
+                continue;
+            }
+            if let Some(p) = evaluate(unit, tech, op, 1.0) {
+                best_eeff = best_eeff.max(p.gflops_per_w);
+                best_aeff = best_aeff.max(p.gflops_per_mm2);
+                let t = timing(&unit.config, tech, op).unwrap();
+                best_delay = best_delay.min(t.cycle_ps * cycles_per_op / 1000.0);
+            }
+        }
+    }
+    (best_eeff, best_aeff, best_delay)
+}
+
+/// Compute all four Table-I columns.
+pub fn compute() -> Vec<Table1Entry> {
+    let tech = Technology::fdsoi28();
+    FpuConfig::fpmax_units()
+        .iter()
+        .map(|cfg| {
+            let unit = FpuUnit::generate(cfg);
+            let op = nominal_op(cfg);
+            let eff: EfficiencyPoint = evaluate(&unit, &tech, op, 1.0).expect("nominal operable");
+            let cost = unit_cost(&unit);
+            let cycles_per_op = avg_cycles_per_op(&unit, 20_000, 42);
+            let (max_eeff, max_aeff, min_delay) = scan_extremes(&unit, &tech, cycles_per_op);
+            let t = timing(cfg, &tech, op).unwrap();
+            Table1Entry {
+                name: cfg.name(),
+                config: *cfg,
+                area_mm2: cost.area_mm2,
+                vdd: op.vdd,
+                vbb: op.vbb,
+                freq_ghz: eff.freq_ghz,
+                leak_mw: eff.power.leakage_mw,
+                total_mw: eff.power.total_mw(),
+                norm_area_eff: eff.gflops_per_mm2,
+                norm_energy_eff: eff.gflops_per_w,
+                max_area_eff: max_aeff,
+                max_energy_eff: max_eeff,
+                norm_delay_ns: t.cycle_ps * cycles_per_op / 1000.0,
+                min_delay_ns: min_delay,
+            }
+        })
+        .collect()
+}
+
+/// Print the reproduced table next to the paper's values.
+pub fn print(entries: &[Table1Entry]) {
+    println!("\nTABLE I — performance summary (model vs silicon)\n");
+    let mut t = TextTable::new(vec![
+        "FPU", "Area mm² (paper)", "Stages", "Booth", "Tree", "V_DD", "V_BB",
+        "f GHz (paper)", "Leak mW (paper)", "Total mW (paper)",
+    ]);
+    for (e, p) in entries.iter().zip(PAPER) {
+        t.row(vec![
+            e.name.clone(),
+            format!("{:.4} ({})", e.area_mm2, p.1),
+            e.config.stages.to_string(),
+            e.config.booth.name().to_string(),
+            e.config.tree.name().to_string(),
+            format!("{:.1}V", e.vdd),
+            format!("{:.1}V", e.vbb),
+            format!("{:.2} ({})", e.freq_ghz, p.2),
+            format!("{:.1} ({})", e.leak_mw, p.3),
+            format!("{:.1} ({})", e.total_mw, p.4),
+        ]);
+    }
+    t.print();
+    let mut t = TextTable::new(vec![
+        "FPU",
+        "Norm GFLOPS/mm² (paper)",
+        "Max GFLOPS/mm² (paper)",
+        "Norm GFLOPS/W (paper)",
+        "Max GFLOPS/W (paper)",
+        "Norm delay ns (paper)",
+        "Min delay ns (paper)",
+    ]);
+    for (e, p) in entries.iter().zip(PAPER) {
+        t.row(vec![
+            e.name.clone(),
+            format!("{:.0} ({})", e.norm_area_eff, p.5),
+            format!("{:.0} ({})", e.max_area_eff, p.6),
+            format!("{:.0} ({})", e.norm_energy_eff, p.7),
+            format!("{:.0} ({})", e.max_energy_eff, p.8),
+            format!("{:.2} ({})", e.norm_delay_ns, p.9),
+            format!("{:.2} ({})", e.min_delay_ns, p.10),
+        ]);
+    }
+    println!();
+    t.print();
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::stats::rel_diff;
+
+    #[test]
+    fn entries_track_paper_within_tolerance() {
+        let entries = compute();
+        assert_eq!(entries.len(), 4);
+        for (e, p) in entries.iter().zip(PAPER) {
+            assert_eq!(e.name, p.0);
+            assert!(rel_diff(e.area_mm2, p.1) < 0.25, "{} area {:.4} vs {}", e.name, e.area_mm2, p.1);
+            assert!(rel_diff(e.freq_ghz, p.2) < 0.15, "{} freq {:.2} vs {}", e.name, e.freq_ghz, p.2);
+            assert!(rel_diff(e.total_mw, p.4) < 0.25, "{} power {:.1} vs {}", e.name, e.total_mw, p.4);
+            assert!(
+                rel_diff(e.norm_area_eff, p.5) < 0.35,
+                "{} norm area eff {:.0} vs {}", e.name, e.norm_area_eff, p.5
+            );
+            assert!(
+                rel_diff(e.norm_energy_eff, p.7) < 0.35,
+                "{} norm energy eff {:.0} vs {}", e.name, e.norm_energy_eff, p.7
+            );
+        }
+    }
+
+    #[test]
+    fn max_dominates_norm() {
+        for e in compute() {
+            assert!(e.max_area_eff >= e.norm_area_eff, "{}", e.name);
+            assert!(e.max_energy_eff >= e.norm_energy_eff, "{}", e.name);
+            assert!(e.min_delay_ns <= e.norm_delay_ns, "{}", e.name);
+        }
+    }
+
+    #[test]
+    fn latency_units_have_lower_benchmarked_delay() {
+        // The point of the CMAs: DP CMA beats DP FMA, SP CMA beats SP FMA
+        // on benchmarked delay (Table I bottom row ordering).
+        let e = compute();
+        let delay = |n: &str| e.iter().find(|x| x.name == n).unwrap().norm_delay_ns;
+        assert!(delay("DP CMA") < delay("DP FMA"));
+        assert!(delay("SP CMA") < delay("SP FMA"));
+    }
+
+    #[test]
+    fn print_smoke() {
+        print(&compute());
+    }
+}

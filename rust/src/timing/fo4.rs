@@ -1,0 +1,186 @@
+//! Per-component logic depth in FO4 — the technology-independent delay
+//! currency FPGen's own models use ([1], [2]).
+//!
+//! Each structural block of a generated FMAC is assigned a depth in FO4
+//! inverter delays from its size parameters. The constants are standard
+//! datapath figures (parallel-prefix adders ≈ 2·log₂w, a 3:2 row ≈ 4
+//! FO4 including local wiring, mux-tree shifters ≈ 1.4 FO4 per level);
+//! a per-design-style sizing factor κ (see
+//! [`crate::timing::pipeline::DesignStyle`]) absorbs cell sizing and
+//! global wiring, and is the single calibrated timing parameter.
+
+use crate::arch::booth::BoothRadix;
+use crate::arch::generator::{FpuConfig, FpuKind};
+use crate::arch::tree::TreeKind;
+
+/// Depth of one 3:2 compressor level including wiring, by topology: a
+/// Wallace tree's cross-column wires add ~50% to the cell delay, while
+/// array and ZM rows talk only to their neighbours (this is why an
+/// n-row array is nowhere near n/log(n) times slower than Wallace in
+/// silicon, and why the throughput units can afford it).
+pub fn csa_level_fo4(tree: TreeKind) -> f64 {
+    match tree {
+        TreeKind::Wallace => 4.2,
+        TreeKind::Array => 2.8,
+        TreeKind::Zm => 3.2,
+    }
+}
+
+/// Depth of the addend-merge 3:2 row in an FMA (Wallace-class wiring).
+pub const CSA_LEVEL_FO4: f64 = 4.2;
+
+/// Register overhead per pipeline stage (setup + clk-to-Q + margin).
+pub const REG_OVERHEAD_FO4: f64 = 3.0;
+
+/// Parallel-prefix carry-propagate adder of width `w`.
+pub fn cpa_fo4(w: u32) -> f64 {
+    2.0 * (w.max(2) as f64).log2() + 2.0
+}
+
+/// Barrel shifter over `w` positions (mux tree).
+pub fn shifter_fo4(w: u32) -> f64 {
+    1.4 * (w.max(2) as f64).log2().ceil() + 1.0
+}
+
+/// Leading-zero anticipator over `w` bits.
+pub fn lza_fo4(w: u32) -> f64 {
+    1.5 * (w.max(2) as f64).log2() + 2.0
+}
+
+/// Rounder (increment + select) over `w` result bits.
+pub fn rounder_fo4(w: u32) -> f64 {
+    0.8 * (w.max(2) as f64).log2() + 3.0
+}
+
+/// Booth recode + partial-product mux depth. Booth-3 must also generate
+/// the ×3 hard multiple through a short CPA; that pre-add runs mostly in
+/// parallel with recoding, so its exposed depth is ~70% of the CPA.
+pub fn booth_fo4(radix: BoothRadix, sig_bits: u32) -> f64 {
+    match radix {
+        BoothRadix::Booth2 => 4.0,
+        BoothRadix::Booth3 => (5.0f64).max(0.7 * cpa_fo4(sig_bits + 2)),
+    }
+}
+
+/// Logic-depth breakdown of one FPU configuration, in FO4 (before the
+/// design-style sizing factor).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct DepthBreakdown {
+    /// Multiplier: Booth + tree (+ CPA + rounder for CMA).
+    pub multiply: f64,
+    /// Add/merge path: align, wide add, LZA, normalize, round.
+    pub add: f64,
+}
+
+impl DepthBreakdown {
+    /// Total critical-path depth.
+    pub fn total(&self) -> f64 {
+        self.multiply + self.add
+    }
+}
+
+/// Critical-path depth of a configuration.
+///
+/// FMA: Booth → tree → (3:2 merge with the pre-aligned addend — the
+/// alignment itself overlaps the multiply) → wide CPA → normalize →
+/// round. LZA overlaps the CPA; only ~30% of it is exposed.
+///
+/// CMA: a complete rounded multiplier followed by a complete FP adder —
+/// longer in total, but each half is shallow, which is what lets the
+/// CMA pipeline to a faster clock and expose the short accumulate path.
+pub fn depth(cfg: &FpuConfig) -> DepthBreakdown {
+    let m = cfg.precision.format().sig_bits;
+    let mul_cfg = cfg.multiplier();
+    let tree = mul_cfg.tree_depth() as f64 * csa_level_fo4(cfg.tree);
+    let booth = booth_fo4(cfg.booth, m);
+    match cfg.kind {
+        FpuKind::Fma => {
+            let w = 3 * m + 5;
+            let multiply = booth + tree;
+            let add = CSA_LEVEL_FO4            // 3:2 merge of addend
+                + cpa_fo4(w)                   // wide completion add
+                + 0.3 * lza_fo4(w)             // LZA mostly hidden under CPA
+                + shifter_fo4(w)               // normalizer
+                + rounder_fo4(m);              // single rounder
+            DepthBreakdown { multiply, add }
+        }
+        FpuKind::Cma => {
+            let multiply = booth
+                + tree
+                + cpa_fo4(mul_cfg.window())    // multiplier's own CPA
+                + rounder_fo4(m);              // first rounder
+            let aw = m + 4;
+            let add = 3.0                      // exponent compare
+                + shifter_fo4(aw)              // align
+                + cpa_fo4(aw)                  // significand add
+                + 0.3 * lza_fo4(aw)
+                + shifter_fo4(aw)              // normalize
+                + rounder_fo4(m);              // second rounder
+            DepthBreakdown { multiply, add }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::generator::FpuConfig;
+
+    #[test]
+    fn component_models_monotone_in_width() {
+        assert!(cpa_fo4(108) > cpa_fo4(50));
+        assert!(shifter_fo4(164) > shifter_fo4(77));
+        assert!(lza_fo4(164) > lza_fo4(77));
+        assert!(rounder_fo4(53) > rounder_fo4(24));
+    }
+
+    #[test]
+    fn booth3_pays_triple_generation() {
+        assert!(booth_fo4(BoothRadix::Booth3, 53) > booth_fo4(BoothRadix::Booth2, 53));
+        // ... and the cost grows with width (the ×3 CPA is wider).
+        assert!(booth_fo4(BoothRadix::Booth3, 53) > booth_fo4(BoothRadix::Booth3, 24));
+    }
+
+    #[test]
+    fn cma_total_longer_but_accumulate_path_shorter() {
+        // Fig. 1's trade: CMA total latency > FMA total latency, but a
+        // dependent *accumulation* only traverses the CMA's add half —
+        // far less than the FMA's full path.
+        let sp_fma = depth(&FpuConfig::sp_fma());
+        let mut cma_like = FpuConfig::sp_cma();
+        // Compare like-for-like (same booth/tree as the FMA).
+        cma_like.booth = FpuConfig::sp_fma().booth;
+        cma_like.tree = FpuConfig::sp_fma().tree;
+        let sp_cma = depth(&cma_like);
+        assert!(sp_cma.total() > sp_fma.total(), "cascade has longer total path");
+        assert!(sp_cma.add < 0.7 * sp_fma.total(), "cascade accumulation path is shorter");
+    }
+
+    #[test]
+    fn dp_deeper_than_sp() {
+        for (dp, sp) in [
+            (FpuConfig::dp_fma(), FpuConfig::sp_fma()),
+            (FpuConfig::dp_cma(), FpuConfig::sp_cma()),
+        ] {
+            assert!(depth(&dp).total() > depth(&sp).total());
+        }
+    }
+
+    #[test]
+    fn paper_units_depth_sanity() {
+        // All four units must land in the plausible FMAC-depth window
+        // (50–150 FO4 of raw logic).
+        for cfg in FpuConfig::fpmax_units() {
+            let d = depth(&cfg).total();
+            assert!((50.0..150.0).contains(&d), "{}: {d:.1} FO4", cfg.name());
+        }
+    }
+
+    #[test]
+    fn wallace_shortens_multiplier_path() {
+        let mut wallace = FpuConfig::dp_fma();
+        wallace.tree = crate::arch::tree::TreeKind::Wallace;
+        let array = FpuConfig::dp_fma();
+        assert!(depth(&wallace).multiply < depth(&array).multiply);
+    }
+}

@@ -1,0 +1,9 @@
+//! Timing models: per-component FO4 logic depth ([`fo4`]) and pipeline
+//! partitioning / achievable frequency at an operating point
+//! ([`pipeline`]).
+
+pub mod fo4;
+pub mod pipeline;
+
+pub use fo4::{depth, DepthBreakdown};
+pub use pipeline::{nominal_op, stage_depth_fo4, timing, DesignStyle, Timing};

@@ -1,0 +1,176 @@
+//! Pipeline partitioning and achievable clock frequency.
+//!
+//! The generator cuts a unit's critical path into `stages` pieces; the
+//! cycle time is the deepest piece plus register overhead, times the
+//! technology's FO4 at the operating point, times a **design-style
+//! sizing factor κ**:
+//!
+//! * latency-optimized designs (the CMAs) are sized aggressively — large
+//!   drive, more parallel prefix, logical effort near the theoretical
+//!   optimum → small κ;
+//! * throughput-optimized designs (the FMAs) sit at a low-EDP sizing
+//!   point — smaller gates, relaxed margins → larger κ, cheaper energy.
+//!
+//! κ per style is the only fitted timing constant (see
+//! [`crate::energy::calibrate`]); everything else is structural.
+
+use crate::arch::generator::{FpuConfig, FpuKind};
+use crate::energy::tech::{OperatingPoint, Technology};
+
+use super::fo4::{depth, REG_OVERHEAD_FO4};
+
+/// Sizing style, derived from what the unit was optimized for.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DesignStyle {
+    /// Delay-optimal sizing (latency units).
+    Latency,
+    /// Energy-optimal sizing (throughput units).
+    Throughput,
+}
+
+impl DesignStyle {
+    /// Style of a configuration: CMAs are the latency designs, FMAs the
+    /// throughput designs (paper §FPU Architectures).
+    pub fn of(cfg: &FpuConfig) -> DesignStyle {
+        match cfg.kind {
+            FpuKind::Cma => DesignStyle::Latency,
+            FpuKind::Fma => DesignStyle::Throughput,
+        }
+    }
+
+    /// Sizing factor κ (dimensionless multiplier on logic depth).
+    /// Calibrated against Table I's four (V_DD, V_BB, f) points — see
+    /// `energy::calibrate` (geomean of the per-style implied values).
+    pub fn kappa(self) -> f64 {
+        match self {
+            DesignStyle::Latency => 2.74,
+            DesignStyle::Throughput => 4.03,
+        }
+    }
+}
+
+/// Timing summary of a pipelined unit at a given operating point.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Timing {
+    /// Cycle time in ps.
+    pub cycle_ps: f64,
+    /// Clock frequency in GHz.
+    pub freq_ghz: f64,
+    /// Per-stage logic depth (FO4, before κ).
+    pub stage_fo4: f64,
+    /// Total path depth (FO4, before κ).
+    pub total_fo4: f64,
+}
+
+/// Per-stage logic depth for a configuration (balanced partition of the
+/// critical path plus register overhead).
+pub fn stage_depth_fo4(cfg: &FpuConfig) -> f64 {
+    depth(cfg).total() / cfg.stages as f64 + REG_OVERHEAD_FO4
+}
+
+/// Achievable timing at an operating point; `None` if the point is not
+/// operable in this technology.
+pub fn timing(cfg: &FpuConfig, tech: &Technology, op: OperatingPoint) -> Option<Timing> {
+    let fo4_ps = tech.fo4_ps(op)?;
+    let stage = stage_depth_fo4(cfg);
+    let cycle_ps = stage * DesignStyle::of(cfg).kappa() * fo4_ps;
+    Some(Timing {
+        cycle_ps,
+        freq_ghz: 1000.0 / cycle_ps,
+        stage_fo4: stage,
+        total_fo4: depth(cfg).total(),
+    })
+}
+
+/// The chip's nominal operating points per unit (Table I rows "Supply
+/// Voltage" / "Body-bias").
+pub fn nominal_op(cfg: &FpuConfig) -> OperatingPoint {
+    use crate::arch::fp::Precision;
+    let vdd = match (cfg.precision, cfg.kind) {
+        (Precision::Double, FpuKind::Cma) => 0.9,
+        (Precision::Double, FpuKind::Fma) => 0.8,
+        (Precision::Single, FpuKind::Cma) => 0.8,
+        (Precision::Single, FpuKind::Fma) => 0.9,
+    };
+    OperatingPoint::new(vdd, Technology::NOMINAL_VBB)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::stats::rel_diff;
+
+    /// Table I frequencies at the nominal operating points.
+    const TABLE1_FREQ_GHZ: [(fn() -> FpuConfig, f64); 4] = [
+        (FpuConfig::dp_cma as fn() -> FpuConfig, 1.19),
+        (FpuConfig::dp_fma, 0.91),
+        (FpuConfig::sp_cma, 1.36),
+        (FpuConfig::sp_fma, 0.91),
+    ];
+
+    #[test]
+    fn nominal_frequencies_match_table1() {
+        let tech = Technology::fdsoi28();
+        for (mk, want) in TABLE1_FREQ_GHZ {
+            let cfg = mk();
+            let t = timing(&cfg, &tech, nominal_op(&cfg)).unwrap();
+            let rel = rel_diff(t.freq_ghz, want);
+            assert!(
+                rel < 0.15,
+                "{}: model {:.2} GHz vs silicon {want} GHz (rel {rel:.2})",
+                cfg.name(),
+                t.freq_ghz
+            );
+        }
+    }
+
+    #[test]
+    fn frequency_ordering_matches_silicon() {
+        // SP CMA > DP CMA > {FMAs}: the latency designs clock faster.
+        let tech = Technology::fdsoi28();
+        let f = |cfg: FpuConfig| timing(&cfg, &tech, nominal_op(&cfg)).unwrap().freq_ghz;
+        assert!(f(FpuConfig::sp_cma()) > f(FpuConfig::dp_cma()));
+        assert!(f(FpuConfig::dp_cma()) > f(FpuConfig::dp_fma()));
+        assert!(f(FpuConfig::dp_cma()) > f(FpuConfig::sp_fma()));
+    }
+
+    #[test]
+    fn body_bias_buys_frequency() {
+        // Fig. 3/4's lever: at fixed V_DD, forward bias shortens the cycle.
+        let tech = Technology::fdsoi28();
+        let cfg = FpuConfig::sp_fma();
+        let slow = timing(&cfg, &tech, OperatingPoint::new(0.8, 0.0)).unwrap();
+        let fast = timing(&cfg, &tech, OperatingPoint::new(0.8, 1.2)).unwrap();
+        assert!(fast.freq_ghz > slow.freq_ghz * 1.05);
+    }
+
+    #[test]
+    fn vdd_scaling_spans_useful_range() {
+        // The Fig. 3 V_DD sweep: frequency must scale by ≥3× from 0.45 V
+        // to 1.1 V.
+        let tech = Technology::fdsoi28();
+        let cfg = FpuConfig::sp_fma();
+        let lo = timing(&cfg, &tech, OperatingPoint::new(0.45, 1.2)).unwrap();
+        let hi = timing(&cfg, &tech, OperatingPoint::new(1.1, 1.2)).unwrap();
+        assert!(hi.freq_ghz / lo.freq_ghz > 3.0);
+    }
+
+    #[test]
+    fn inoperable_points_rejected() {
+        let tech = Technology::fdsoi28();
+        assert!(timing(&FpuConfig::sp_fma(), &tech, OperatingPoint::new(0.3, 0.0)).is_none());
+    }
+
+    #[test]
+    fn more_stages_faster_clock() {
+        let tech = Technology::fdsoi28();
+        let mut shallow = FpuConfig::sp_fma();
+        let mut deep = shallow;
+        shallow.stages = 4;
+        deep.stages = 8;
+        let op = OperatingPoint::new(0.9, 1.2);
+        let f_shallow = timing(&shallow, &tech, op).unwrap().freq_ghz;
+        let f_deep = timing(&deep, &tech, op).unwrap().freq_ghz;
+        assert!(f_deep > f_shallow * 1.3);
+    }
+}

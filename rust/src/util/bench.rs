@@ -1,0 +1,152 @@
+//! Minimal benchmark harness (criterion is unavailable offline).
+//!
+//! [`BenchRunner`] provides warmup, repeated timed samples, and a stable
+//! report format shared by every `cargo bench` target. Timing uses
+//! `std::time::Instant`; a `black_box` re-export prevents the optimizer
+//! from deleting measured work.
+
+use std::time::Instant;
+
+use super::stats::{summarize, Summary};
+
+/// Re-export of the optimizer barrier.
+pub use std::hint::black_box;
+
+/// A simple time-per-iteration benchmark runner.
+pub struct BenchRunner {
+    /// Samples per benchmark.
+    pub samples: usize,
+    /// Warmup iterations before sampling.
+    pub warmup_iters: usize,
+    /// Iterations per sample (amortizes timer overhead).
+    pub iters_per_sample: usize,
+}
+
+impl Default for BenchRunner {
+    fn default() -> Self {
+        BenchRunner { samples: 20, warmup_iters: 3, iters_per_sample: 1 }
+    }
+}
+
+/// One benchmark's result.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    /// Seconds per iteration.
+    pub per_iter: Summary,
+    /// Optional throughput denominator (items per iteration).
+    pub items_per_iter: Option<f64>,
+}
+
+impl BenchResult {
+    /// items/second at the median, if a throughput denominator was set.
+    pub fn throughput(&self) -> Option<f64> {
+        self.items_per_iter.map(|n| n / self.per_iter.p50)
+    }
+}
+
+impl BenchRunner {
+    /// Quick-run configuration honouring `FPMAX_BENCH_FAST=1` (used by the
+    /// test suite to smoke the bench targets).
+    pub fn from_env() -> BenchRunner {
+        if std::env::var("FPMAX_BENCH_FAST").as_deref() == Ok("1") {
+            BenchRunner { samples: 3, warmup_iters: 1, iters_per_sample: 1 }
+        } else {
+            BenchRunner::default()
+        }
+    }
+
+    /// Time `f`, which performs one logical iteration of `items` items.
+    pub fn bench<F: FnMut()>(&self, name: &str, items: Option<f64>, mut f: F) -> BenchResult {
+        for _ in 0..self.warmup_iters {
+            f();
+        }
+        let mut samples = Vec::with_capacity(self.samples);
+        for _ in 0..self.samples {
+            let t0 = Instant::now();
+            for _ in 0..self.iters_per_sample {
+                f();
+            }
+            samples.push(t0.elapsed().as_secs_f64() / self.iters_per_sample as f64);
+        }
+        BenchResult {
+            name: name.to_string(),
+            per_iter: summarize(&samples),
+            items_per_iter: items,
+        }
+    }
+
+    /// Bench and print a one-line report.
+    pub fn run<F: FnMut()>(&self, name: &str, items: Option<f64>, f: F) -> BenchResult {
+        let r = self.bench(name, items, f);
+        print_result(&r);
+        r
+    }
+}
+
+/// Print a result line in the shared format.
+pub fn print_result(r: &BenchResult) {
+    let tp = match r.throughput() {
+        Some(t) if t >= 1e9 => format!("  {:8.2} Gitem/s", t / 1e9),
+        Some(t) if t >= 1e6 => format!("  {:8.2} Mitem/s", t / 1e6),
+        Some(t) if t >= 1e3 => format!("  {:8.2} kitem/s", t / 1e3),
+        Some(t) => format!("  {t:8.2} item/s"),
+        None => String::new(),
+    };
+    println!(
+        "bench {:<44} {:>12} median  {:>12} p95{}",
+        r.name,
+        humanize(r.per_iter.p50),
+        humanize(r.per_iter.p95),
+        tp
+    );
+}
+
+/// Human-readable seconds.
+pub fn humanize(secs: f64) -> String {
+    if secs < 1e-6 {
+        format!("{:.1} ns", secs * 1e9)
+    } else if secs < 1e-3 {
+        format!("{:.2} µs", secs * 1e6)
+    } else if secs < 1.0 {
+        format!("{:.2} ms", secs * 1e3)
+    } else {
+        format!("{secs:.3} s")
+    }
+}
+
+/// Emit the standard bench header so every target's output is uniform.
+pub fn header(title: &str) {
+    println!("\n=== {title} ===");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_work() {
+        let r = BenchRunner { samples: 5, warmup_iters: 1, iters_per_sample: 2 }.bench(
+            "spin",
+            Some(1000.0),
+            || {
+                let mut acc = 0u64;
+                for i in 0..1000u64 {
+                    acc = acc.wrapping_add(black_box(i));
+                }
+                black_box(acc);
+            },
+        );
+        assert_eq!(r.per_iter.n, 5);
+        assert!(r.per_iter.p50 > 0.0);
+        assert!(r.throughput().unwrap() > 0.0);
+    }
+
+    #[test]
+    fn humanize_ranges() {
+        assert!(humanize(3e-9).contains("ns"));
+        assert!(humanize(3e-6).contains("µs"));
+        assert!(humanize(3e-3).contains("ms"));
+        assert!(humanize(3.0).contains("s"));
+    }
+}

@@ -1,0 +1,127 @@
+//! Tiny command-line parser (clap is unavailable offline).
+//!
+//! Supports `binary SUBCOMMAND [--flag] [--key value]` — all the `fpmax`
+//! CLI needs. Unknown flags are errors so typos fail loudly.
+
+use std::collections::BTreeMap;
+
+/// Parsed command line: one subcommand plus `--key value` / `--flag`
+/// options.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    options: BTreeMap<String, String>,
+    /// Options that were consumed by a lookup (for unknown-option checks).
+    seen: std::cell::RefCell<std::collections::BTreeSet<String>>,
+}
+
+impl Args {
+    /// Parse from an iterator of argument strings (without argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> crate::Result<Args> {
+        let mut args = Args::default();
+        let mut it = argv.into_iter().peekable();
+        if let Some(first) = it.peek() {
+            if !first.starts_with("--") {
+                args.subcommand = it.next();
+            }
+        }
+        while let Some(a) = it.next() {
+            let Some(key) = a.strip_prefix("--") else {
+                anyhow::bail!("unexpected positional argument: {a}");
+            };
+            // `--key=value`, `--key value`, or bare `--flag`.
+            if let Some((k, v)) = key.split_once('=') {
+                args.options.insert(k.to_string(), v.to_string());
+            } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                let v = it.next().unwrap();
+                args.options.insert(key.to_string(), v);
+            } else {
+                args.options.insert(key.to_string(), "true".to_string());
+            }
+        }
+        Ok(args)
+    }
+
+    /// Parse the process's own arguments.
+    pub fn from_env() -> crate::Result<Args> {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    /// String option.
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.seen.borrow_mut().insert(key.to_string());
+        self.options.get(key).map(|s| s.as_str())
+    }
+
+    /// Boolean flag (present, `=true`, or `=1`).
+    pub fn flag(&self, key: &str) -> bool {
+        matches!(self.get(key), Some("true") | Some("1"))
+    }
+
+    /// Typed option with default.
+    pub fn get_parse<T: std::str::FromStr>(&self, key: &str, default: T) -> crate::Result<T> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(s) => s
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--{key}: cannot parse {s:?} as {}", std::any::type_name::<T>())),
+        }
+    }
+
+    /// Error on any option that was never consumed — catches typos.
+    pub fn reject_unknown(&self) -> crate::Result<()> {
+        let seen = self.seen.borrow();
+        let unknown: Vec<&String> = self.options.keys().filter(|k| !seen.contains(*k)).collect();
+        if unknown.is_empty() {
+            Ok(())
+        } else {
+            anyhow::bail!("unknown option(s): {unknown:?}")
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &[&str]) -> Args {
+        Args::parse(s.iter().map(|s| s.to_string())).unwrap()
+    }
+
+    #[test]
+    fn subcommand_and_options() {
+        let a = parse(&["fig3", "--unit", "sp_fma", "--points=25", "--verbose"]);
+        assert_eq!(a.subcommand.as_deref(), Some("fig3"));
+        assert_eq!(a.get("unit"), Some("sp_fma"));
+        assert_eq!(a.get_parse("points", 0u32).unwrap(), 25);
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("quiet"));
+        assert!(a.reject_unknown().is_ok());
+    }
+
+    #[test]
+    fn unknown_options_detected() {
+        let a = parse(&["table1", "--oops", "3"]);
+        assert_eq!(a.subcommand.as_deref(), Some("table1"));
+        assert!(a.reject_unknown().is_err());
+        let _ = a.get("oops");
+        assert!(a.reject_unknown().is_ok());
+    }
+
+    #[test]
+    fn default_values() {
+        let a = parse(&["sweep"]);
+        assert_eq!(a.get_parse("seed", 42u64).unwrap(), 42);
+    }
+
+    #[test]
+    fn bad_parse_is_error() {
+        let a = parse(&["x", "--n", "abc"]);
+        assert!(a.get_parse("n", 0u32).is_err());
+    }
+
+    #[test]
+    fn positional_after_subcommand_rejected() {
+        assert!(Args::parse(["a".to_string(), "b".to_string()]).is_err());
+    }
+}

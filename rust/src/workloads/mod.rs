@@ -1,0 +1,11 @@
+//! Workload generation: SPEC-FP-like dependence traces ([`specfp`]),
+//! independent throughput streams with operand values ([`throughput`]),
+//! and duty-cycle schedules ([`utilization`]).
+
+pub mod specfp;
+pub mod throughput;
+pub mod utilization;
+
+pub use specfp::Profile;
+pub use throughput::{OperandMix, OperandStream, OperandTriple};
+pub use utilization::{Segment, UtilizationProfile};

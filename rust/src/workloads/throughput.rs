@@ -1,0 +1,127 @@
+//! Throughput workloads: independent operand streams with values.
+//!
+//! The throughput units (Fig. 3) are evaluated on GPU-style abundant
+//! parallelism — no inter-op dependences, every cycle issues. These
+//! generators produce the *operand values* too, because the throughput
+//! experiments also feed the chip testbench ([`crate::chip`]) and the
+//! AOT-artifact cross-check ([`crate::coordinator`]).
+
+use crate::arch::fp::Precision;
+use crate::util::Rng;
+
+/// One FMAC operand triple (raw bits; SP uses the low 32 bits).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct OperandTriple {
+    pub a: u64,
+    pub b: u64,
+    pub c: u64,
+}
+
+/// Operand distribution flavours.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum OperandMix {
+    /// Finite values with exponent spread (the standard test diet).
+    Finite,
+    /// Everything, including NaN/Inf (robustness runs).
+    Anything,
+    /// Values near 1.0 (dense-kernel-like activity; exercises the
+    /// accumulation cancellation paths rarely).
+    Balanced,
+}
+
+/// Deterministic operand-stream generator.
+#[derive(Debug, Clone)]
+pub struct OperandStream {
+    precision: Precision,
+    mix: OperandMix,
+    rng: Rng,
+}
+
+impl OperandStream {
+    pub fn new(precision: Precision, mix: OperandMix, seed: u64) -> OperandStream {
+        OperandStream { precision, mix, rng: Rng::new(seed) }
+    }
+
+    /// Next operand triple.
+    pub fn next_triple(&mut self) -> OperandTriple {
+        OperandTriple { a: self.next_operand(), b: self.next_operand(), c: self.next_operand() }
+    }
+
+    /// Generate a batch of `n` triples.
+    pub fn batch(&mut self, n: usize) -> Vec<OperandTriple> {
+        (0..n).map(|_| self.next_triple()).collect()
+    }
+
+    fn next_operand(&mut self) -> u64 {
+        match (self.precision, self.mix) {
+            (Precision::Single, OperandMix::Finite) => self.rng.f32_operand() as u64,
+            (Precision::Single, OperandMix::Anything) => self.rng.f32_any() as u64,
+            (Precision::Single, OperandMix::Balanced) => {
+                let v = (self.rng.f64() * 4.0 - 2.0) as f32;
+                v.to_bits() as u64
+            }
+            (Precision::Double, OperandMix::Finite) => self.rng.f64_operand(),
+            (Precision::Double, OperandMix::Anything) => self.rng.f64_any(),
+            (Precision::Double, OperandMix::Balanced) => {
+                (self.rng.f64() * 4.0 - 2.0).to_bits()
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn batch_deterministic() {
+        let a = OperandStream::new(Precision::Single, OperandMix::Finite, 1).batch(100);
+        let b = OperandStream::new(Precision::Single, OperandMix::Finite, 1).batch(100);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn finite_mix_is_finite() {
+        let mut s = OperandStream::new(Precision::Single, OperandMix::Finite, 2);
+        for _ in 0..5_000 {
+            let t = s.next_triple();
+            assert!(f32::from_bits(t.a as u32).is_finite());
+            assert!(f32::from_bits(t.b as u32).is_finite());
+            assert!(f32::from_bits(t.c as u32).is_finite());
+        }
+        let mut s = OperandStream::new(Precision::Double, OperandMix::Finite, 2);
+        for _ in 0..5_000 {
+            assert!(f64::from_bits(s.next_triple().a).is_finite());
+        }
+    }
+
+    #[test]
+    fn anything_mix_hits_specials() {
+        let mut s = OperandStream::new(Precision::Single, OperandMix::Anything, 3);
+        let mut nan = 0;
+        for _ in 0..50_000 {
+            if f32::from_bits(s.next_triple().a as u32).is_nan() {
+                nan += 1;
+            }
+        }
+        assert!(nan > 50, "NaNs undersampled: {nan}");
+    }
+
+    #[test]
+    fn balanced_mix_in_range() {
+        let mut s = OperandStream::new(Precision::Double, OperandMix::Balanced, 4);
+        for _ in 0..1_000 {
+            let v = f64::from_bits(s.next_triple().b);
+            assert!((-2.0..2.0).contains(&v));
+        }
+    }
+
+    #[test]
+    fn sp_operands_fit_32_bits() {
+        let mut s = OperandStream::new(Precision::Single, OperandMix::Finite, 5);
+        for _ in 0..1_000 {
+            let t = s.next_triple();
+            assert!(t.a <= u32::MAX as u64 && t.b <= u32::MAX as u64 && t.c <= u32::MAX as u64);
+        }
+    }
+}

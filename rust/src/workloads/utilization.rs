@@ -1,0 +1,165 @@
+//! Utilization (duty-cycle) profiles — the workload dimension of Fig. 4.
+//!
+//! "Many applications use FP, but do not use it extensively" (§Chip
+//! Implementation): the FPU sees bursts of work separated by long idle
+//! gaps. A [`UtilizationProfile`] is a deterministic active/idle
+//! schedule; the body-bias controller ([`crate::bb`]) consumes it to
+//! decide when the adaptive policy pays off.
+
+use crate::util::Rng;
+
+/// One segment of the schedule.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Segment {
+    pub active: bool,
+    pub cycles: u64,
+}
+
+/// A deterministic active/idle schedule.
+#[derive(Debug, Clone, PartialEq)]
+pub struct UtilizationProfile {
+    pub name: String,
+    pub segments: Vec<Segment>,
+}
+
+impl UtilizationProfile {
+    /// Fully active (the 100%-utilization curves of Fig. 4).
+    pub fn full(cycles: u64) -> UtilizationProfile {
+        UtilizationProfile {
+            name: "100%".into(),
+            segments: vec![Segment { active: true, cycles }],
+        }
+    }
+
+    /// Periodic duty cycle: bursts of `burst` active cycles at the given
+    /// utilization (the 10%-utilization curves of Fig. 4 use
+    /// `duty(0.1, …)`).
+    pub fn duty(utilization: f64, burst: u64, total: u64) -> UtilizationProfile {
+        assert!(utilization > 0.0 && utilization <= 1.0);
+        let period = (burst as f64 / utilization).round() as u64;
+        let idle = period - burst;
+        let mut segments = Vec::new();
+        let mut done = 0;
+        while done < total {
+            let b = burst.min(total - done);
+            segments.push(Segment { active: true, cycles: b });
+            done += b;
+            if done >= total {
+                break;
+            }
+            let i = idle.min(total - done);
+            if i > 0 {
+                segments.push(Segment { active: false, cycles: i });
+                done += i;
+            }
+        }
+        UtilizationProfile { name: format!("{:.0}% duty", utilization * 100.0), segments }
+    }
+
+    /// Randomized bursty schedule with geometric burst/idle lengths
+    /// around a target utilization.
+    pub fn bursty(utilization: f64, mean_burst: u64, total: u64, seed: u64) -> UtilizationProfile {
+        assert!(utilization > 0.0 && utilization < 1.0);
+        let mean_idle = (mean_burst as f64 * (1.0 - utilization) / utilization).max(1.0);
+        let mut rng = Rng::new(seed);
+        let mut segments = Vec::new();
+        let mut done = 0u64;
+        let mut active = true;
+        while done < total {
+            let mean = if active { mean_burst as f64 } else { mean_idle };
+            // Geometric with the given mean (≥1).
+            let mut len = 1u64;
+            while rng.chance(1.0 - 1.0 / mean) && len < 100_000 {
+                len += 1;
+            }
+            let len = len.min(total - done);
+            segments.push(Segment { active, cycles: len });
+            done += len;
+            active = !active;
+        }
+        UtilizationProfile { name: format!("bursty {:.0}%", utilization * 100.0), segments }
+    }
+
+    /// Total cycles covered.
+    pub fn total_cycles(&self) -> u64 {
+        self.segments.iter().map(|s| s.cycles).sum()
+    }
+
+    /// Active cycles.
+    pub fn active_cycles(&self) -> u64 {
+        self.segments.iter().filter(|s| s.active).map(|s| s.cycles).sum()
+    }
+
+    /// Achieved utilization.
+    pub fn utilization(&self) -> f64 {
+        let t = self.total_cycles();
+        if t == 0 {
+            0.0
+        } else {
+            self.active_cycles() as f64 / t as f64
+        }
+    }
+
+    /// Number of idle→active transitions (the adaptive BB controller
+    /// pays a wake-up cost per transition).
+    pub fn wakeups(&self) -> u64 {
+        let mut n = 0;
+        let mut prev_active = true;
+        for s in &self.segments {
+            if s.active && !prev_active {
+                n += 1;
+            }
+            prev_active = s.active;
+        }
+        n
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn full_profile() {
+        let p = UtilizationProfile::full(1000);
+        assert_eq!(p.total_cycles(), 1000);
+        assert_eq!(p.utilization(), 1.0);
+        assert_eq!(p.wakeups(), 0);
+    }
+
+    #[test]
+    fn duty_cycle_hits_target() {
+        for u in [0.1, 0.25, 0.5] {
+            let p = UtilizationProfile::duty(u, 100, 1_000_000);
+            assert!((p.utilization() - u).abs() < 0.01, "target {u}: {}", p.utilization());
+            assert_eq!(p.total_cycles(), 1_000_000);
+            assert!(p.wakeups() > 0);
+        }
+    }
+
+    #[test]
+    fn bursty_hits_target_approximately() {
+        let p = UtilizationProfile::bursty(0.1, 200, 2_000_000, 11);
+        assert!((p.utilization() - 0.1).abs() < 0.03, "{}", p.utilization());
+        assert_eq!(p.total_cycles(), 2_000_000);
+        // Deterministic.
+        let q = UtilizationProfile::bursty(0.1, 200, 2_000_000, 11);
+        assert_eq!(p, q);
+    }
+
+    #[test]
+    fn wakeup_counting() {
+        let p = UtilizationProfile {
+            name: "t".into(),
+            segments: vec![
+                Segment { active: true, cycles: 10 },
+                Segment { active: false, cycles: 10 },
+                Segment { active: true, cycles: 10 },
+                Segment { active: false, cycles: 5 },
+                Segment { active: true, cycles: 1 },
+            ],
+        };
+        assert_eq!(p.wakeups(), 2);
+        assert_eq!(p.active_cycles(), 21);
+    }
+}

@@ -1,0 +1,155 @@
+//! Integration tests across modules: chip ⇄ golden model ⇄ pipesim ⇄
+//! energy model, plus the PJRT runtime against the AOT artifacts when
+//! they are built (`make artifacts`).
+
+use fpmax::arch::fp::Precision;
+use fpmax::arch::generator::{FpuConfig, FpuUnit};
+use fpmax::arch::rounding::RoundMode;
+use fpmax::chip::{
+    expected_result, FpMaxChip, Instruction, Op, UnitSel, BANK_PROGRAM, BANK_RESULT, BANK_STIM_A,
+    BANK_STIM_B, BANK_STIM_C,
+};
+use fpmax::coordinator;
+use fpmax::runtime::Runtime;
+use fpmax::workloads::throughput::{OperandMix, OperandStream};
+
+fn artifacts_dir() -> Option<std::path::PathBuf> {
+    let p = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if p.join("sp_fmac.hlo.txt").exists() {
+        Some(p)
+    } else {
+        None
+    }
+}
+
+#[test]
+fn chip_program_through_all_units_matches_golden() {
+    let mut chip = FpMaxChip::new(256);
+    for (sel, cfg) in [
+        (UnitSel::DpCma, FpuConfig::dp_cma()),
+        (UnitSel::DpFma, FpuConfig::dp_fma()),
+        (UnitSel::SpCma, FpuConfig::sp_cma()),
+        (UnitSel::SpFma, FpuConfig::sp_fma()),
+    ] {
+        let mut stream = OperandStream::new(cfg.precision, OperandMix::Anything, 0xBEEF);
+        let triples = stream.batch(256);
+        let a: Vec<u64> = triples.iter().map(|t| t.a).collect();
+        let b: Vec<u64> = triples.iter().map(|t| t.b).collect();
+        let c: Vec<u64> = triples.iter().map(|t| t.c).collect();
+        {
+            let mut port = chip.jtag();
+            port.load_bank(BANK_STIM_A, &a).unwrap();
+            port.load_bank(BANK_STIM_B, &b).unwrap();
+            port.load_bank(BANK_STIM_C, &c).unwrap();
+            let prog = [Instruction::fmac_burst(sel, 0, 256).encode() as u64, 0];
+            port.load_bank(BANK_PROGRAM, &prog).unwrap();
+        }
+        chip.run().unwrap();
+        let results = chip.jtag().read_bank(BANK_RESULT, 256).unwrap();
+        let unit = chip.unit(sel);
+        for i in 0..256 {
+            let want = expected_result(unit, RoundMode::NearestEven, a[i], b[i], c[i], Op::Fmac);
+            use fpmax::arch::fp::{decode, Class};
+            let ok = results[i] == want
+                || (decode(unit.format, results[i]).class == Class::Nan
+                    && decode(unit.format, want).class == Class::Nan);
+            assert!(ok, "{sel:?} op {i}: {:#x} vs {:#x}", results[i], want);
+        }
+    }
+}
+
+#[test]
+fn chip_accumulation_program_obeys_bypass_timing() {
+    // The accumulate burst must take to_add cycles per op, and the chip's
+    // final value must equal a sequential cascade accumulation.
+    let mut chip = FpMaxChip::new(64);
+    let one = 1.0f64.to_bits();
+    let xs: Vec<f64> = (1..=32).map(|i| i as f64 * 0.5).collect();
+    let a = vec![one; 32];
+    let b: Vec<u64> = xs.iter().map(|x| x.to_bits()).collect();
+    let c = vec![0u64; 32];
+    {
+        let mut port = chip.jtag();
+        port.load_bank(BANK_STIM_A, &a).unwrap();
+        port.load_bank(BANK_STIM_B, &b).unwrap();
+        port.load_bank(BANK_STIM_C, &c).unwrap();
+        let prog = [Instruction::accumulate_burst(UnitSel::DpCma, 0, 32).encode() as u64, 0];
+        port.load_bank(BANK_PROGRAM, &prog).unwrap();
+    }
+    let stats = chip.run().unwrap();
+    let unit = chip.unit(UnitSel::DpCma);
+    assert_eq!(
+        stats.cycles,
+        32 * unit.latency_to_add_input() as u64 + unit.latency_full() as u64
+    );
+    let results = chip.jtag().read_bank(BANK_RESULT, 32).unwrap();
+    let mut acc = 0.0f64;
+    for (i, x) in xs.iter().enumerate() {
+        acc = 1.0 * x + acc; // cascade: two IEEE ops, matches f64 arith
+        assert_eq!(f64::from_bits(results[i]), acc, "step {i}");
+    }
+}
+
+#[test]
+fn coordinator_verifies_every_unit_on_adversarial_operands() {
+    for cfg in FpuConfig::fpmax_units() {
+        let unit = FpuUnit::generate(&cfg);
+        let mut s = OperandStream::new(cfg.precision, OperandMix::Anything, 1234);
+        let r = coordinator::verify_datapath_only(&unit, &s.batch(20_000), 8);
+        assert!(r.clean(), "{}: {:?}", cfg.name(), r.datapath_mismatches.first());
+    }
+}
+
+#[test]
+fn pjrt_artifacts_match_golden_model() {
+    let Some(dir) = artifacts_dir() else {
+        eprintln!("skipping: artifacts/ not built (run `make artifacts`)");
+        return;
+    };
+    let rt = Runtime::cpu(&dir).expect("PJRT CPU client");
+    for (name, cfg) in [("sp_fmac", FpuConfig::sp_fma()), ("dp_fmac", FpuConfig::dp_fma())] {
+        let artifact = rt.load_fmac(name, cfg.precision).expect("load");
+        assert!(artifact.batch > 0);
+        let unit = FpuUnit::generate(&cfg);
+        let mut s = OperandStream::new(cfg.precision, OperandMix::Finite, 99);
+        let triples = s.batch(artifact.batch + 17); // exercise tail padding
+        let r = coordinator::verify_batch(&unit, &artifact, &triples, 4).expect("verify");
+        assert!(r.clean(), "{name}: {:?}", r.artifact_mismatches.first());
+        assert!(r.artifact_toggles > 0);
+    }
+}
+
+#[test]
+fn pjrt_artifact_handles_special_values() {
+    let Some(dir) = artifacts_dir() else {
+        eprintln!("skipping: artifacts/ not built");
+        return;
+    };
+    let rt = Runtime::cpu(&dir).expect("client");
+    let artifact = rt.load_fmac("sp_fmac", Precision::Single).expect("load");
+    let unit = FpuUnit::generate(&FpuConfig::sp_fma());
+    let mut s = OperandStream::new(Precision::Single, OperandMix::Anything, 7);
+    let r = coordinator::verify_batch(&unit, &artifact, &s.batch(8192), 4).expect("verify");
+    assert!(r.clean(), "{:?}", r.artifact_mismatches.first());
+}
+
+#[test]
+fn jtag_is_the_slow_port() {
+    // Fig. 5's premise: at-speed cycles per op ≈ 1, JTAG cycles per op ≫.
+    let mut chip = FpMaxChip::new(128);
+    let mut s = OperandStream::new(Precision::Single, OperandMix::Finite, 3);
+    let triples = s.batch(128);
+    let a: Vec<u64> = triples.iter().map(|t| t.a).collect();
+    let tck = {
+        let mut port = chip.jtag();
+        port.load_bank(BANK_STIM_A, &a).unwrap();
+        port.load_bank(BANK_STIM_B, &a).unwrap();
+        port.load_bank(BANK_STIM_C, &a).unwrap();
+        let prog = [Instruction::fmac_burst(UnitSel::SpFma, 0, 128).encode() as u64, 0];
+        port.load_bank(BANK_PROGRAM, &prog).unwrap();
+        port.tck_cycles
+    };
+    let stats = chip.run().unwrap();
+    assert!(stats.cycles < 128 + 8, "at-speed: ~1 cycle/op");
+    assert!(tck > 50 * stats.cycles, "JTAG must be orders slower: {tck} vs {}", stats.cycles);
+}

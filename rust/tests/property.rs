@@ -1,0 +1,361 @@
+//! Property-based tests (in-tree driver: `util::check_cases` — proptest
+//! is unavailable offline). Each property runs thousands of generated
+//! cases and reports the seed + case index on failure for exact replay.
+
+use fpmax::arch::fp::{decode, Class, Format, Precision};
+use fpmax::arch::generator::{FpuConfig, FpuUnit};
+use fpmax::arch::multiplier::{multiply, MultiplierConfig};
+use fpmax::arch::rounding::RoundMode;
+use fpmax::arch::softfloat;
+use fpmax::arch::booth::BoothRadix;
+use fpmax::arch::tree::TreeKind;
+use fpmax::pipesim::{simulate, LatencyModel, Trace, TraceOp};
+use fpmax::util::{check_cases, Rng};
+
+fn same32(x: u32, y: u32) -> bool {
+    x == y || (f32::from_bits(x).is_nan() && f32::from_bits(y).is_nan())
+}
+
+fn same64(x: u64, y: u64) -> bool {
+    x == y || (f64::from_bits(x).is_nan() && f64::from_bits(y).is_nan())
+}
+
+#[test]
+fn prop_softfloat_fma_equals_hardware_sp() {
+    check_cases(0x51f0_0001, 200_000, |r: &mut Rng| (r.f32_any(), r.f32_any(), r.f32_any()), |&(a, b, c)| {
+        let got = softfloat::fma(
+            Format::SP, RoundMode::NearestEven, a as u64, b as u64, c as u64,
+        ).bits as u32;
+        let want = f32::from_bits(a).mul_add(f32::from_bits(b), f32::from_bits(c)).to_bits();
+        if same32(got, want) {
+            Ok(())
+        } else {
+            Err(format!("{got:#x} vs {want:#x}"))
+        }
+    });
+}
+
+#[test]
+fn prop_softfloat_fma_equals_hardware_dp() {
+    check_cases(0xd1f0_0002, 200_000, |r: &mut Rng| (r.f64_any(), r.f64_any(), r.f64_any()), |&(a, b, c)| {
+        let got = softfloat::fma(Format::DP, RoundMode::NearestEven, a, b, c).bits;
+        let want = f64::from_bits(a).mul_add(f64::from_bits(b), f64::from_bits(c)).to_bits();
+        if same64(got, want) {
+            Ok(())
+        } else {
+            Err(format!("{got:#x} vs {want:#x}"))
+        }
+    });
+}
+
+#[test]
+fn prop_directed_modes_bracket_rne() {
+    // RD ≤ RNE ≤ RU as reals, and RZ has minimal magnitude — on finite
+    // results.
+    check_cases(3, 50_000, |r: &mut Rng| (r.f32_operand(), r.f32_operand(), r.f32_operand()), |&(a, b, c)| {
+        let run = |m| f32::from_bits(
+            softfloat::fma(Format::SP, m, a as u64, b as u64, c as u64).bits as u32,
+        );
+        let (rn, rz, ru, rd) = (
+            run(RoundMode::NearestEven),
+            run(RoundMode::TowardZero),
+            run(RoundMode::TowardPositive),
+            run(RoundMode::TowardNegative),
+        );
+        if [rn, rz, ru, rd].iter().any(|v| v.is_nan()) {
+            return Ok(());
+        }
+        if rd <= rn && rn <= ru && rz.abs() <= rn.abs().max(rd.abs().min(ru.abs())) && rd <= rz && rz <= ru {
+            Ok(())
+        } else {
+            Err(format!("rd={rd:e} rz={rz:e} rn={rn:e} ru={ru:e}"))
+        }
+    });
+}
+
+#[test]
+fn prop_structural_multiplier_exact_all_configs() {
+    let configs: Vec<MultiplierConfig> = [BoothRadix::Booth2, BoothRadix::Booth3]
+        .iter()
+        .flat_map(|&booth| {
+            [TreeKind::Wallace, TreeKind::Array, TreeKind::Zm]
+                .iter()
+                .flat_map(move |&tree| {
+                    [24u32, 53].iter().map(move |&m| MultiplierConfig { sig_bits: m, booth, tree })
+                })
+                .collect::<Vec<_>>()
+        })
+        .collect();
+    check_cases(7, 20_000, |r: &mut Rng| {
+        let i = r.below(configs.len() as u64) as usize;
+        let m = configs[i].sig_bits;
+        let mask = (1u64 << m) - 1;
+        (i, r.next_u64() & mask, r.next_u64() & mask)
+    }, |&(i, x, y)| {
+        let cfg = &configs[i];
+        let r = multiply(cfg, x, y);
+        if r.product(cfg) == x as u128 * y as u128 {
+            Ok(())
+        } else {
+            Err(format!("cfg {cfg:?}"))
+        }
+    });
+}
+
+#[test]
+fn prop_fma_units_fused_semantics() {
+    let sp = FpuUnit::generate(&FpuConfig::sp_fma());
+    let dp = FpuUnit::generate(&FpuConfig::dp_fma());
+    check_cases(11, 50_000, |r: &mut Rng| (r.f32_any(), r.f64_any()), |&(s_bits, d_bits)| {
+        // Re-derive three operands from the two seeds deterministically.
+        let (a, b, c) = (s_bits, s_bits.rotate_left(13), s_bits.rotate_right(7));
+        let got = sp.fmac(a as u64, b as u64, c as u64).bits as u32;
+        let want = f32::from_bits(a).mul_add(f32::from_bits(b), f32::from_bits(c)).to_bits();
+        if !same32(got, want) {
+            return Err(format!("sp {got:#x} vs {want:#x}"));
+        }
+        let (a, b, c) = (d_bits, d_bits.rotate_left(31), d_bits.rotate_right(17));
+        let got = dp.fmac(a, b, c).bits;
+        let want = f64::from_bits(a).mul_add(f64::from_bits(b), f64::from_bits(c)).to_bits();
+        if !same64(got, want) {
+            return Err(format!("dp {got:#x} vs {want:#x}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_cma_units_cascade_semantics() {
+    let sp = FpuUnit::generate(&FpuConfig::sp_cma());
+    let dp = FpuUnit::generate(&FpuConfig::dp_cma());
+    check_cases(13, 50_000, |r: &mut Rng| (r.f32_any(), r.f64_any()), |&(s_bits, d_bits)| {
+        let (a, b, c) = (s_bits, s_bits.wrapping_mul(3), s_bits.wrapping_add(0x9e37));
+        let got = sp.fmac(a as u64, b as u64, c as u64).bits as u32;
+        let want = (f32::from_bits(a) * f32::from_bits(b) + f32::from_bits(c)).to_bits();
+        if !same32(got, want) {
+            return Err(format!("sp cascade {got:#x} vs {want:#x}"));
+        }
+        let (a, b, c) = (d_bits, d_bits.wrapping_mul(3), d_bits.wrapping_add(0x9e37_79b9));
+        let got = dp.fmac(a, b, c).bits;
+        let want = (f64::from_bits(a) * f64::from_bits(b) + f64::from_bits(c)).to_bits();
+        if !same64(got, want) {
+            return Err(format!("dp cascade {got:#x} vs {want:#x}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_pipesim_issue_order_and_data_readiness() {
+    // Invariants on random valid traces: (1) penalty ≥ 0 and bounded by
+    // the worst tap; (2) cycles ≥ ops + drain − 1; (3) forwarding can
+    // only help.
+    let unit = FpuUnit::generate(&FpuConfig::dp_cma());
+    let mut nofwd_cfg = FpuConfig::dp_cma();
+    nofwd_cfg.forwarding = false;
+    let nofwd = FpuUnit::generate(&nofwd_cfg);
+    let (lat, lat_nofwd) = (LatencyModel::of(&unit), LatencyModel::of(&nofwd));
+    check_cases(17, 2_000, |r: &mut Rng| {
+        let n = 20 + r.below(200) as usize;
+        let ops: Vec<TraceOp> = (0..n)
+            .map(|i| {
+                if i == 0 || r.chance(0.4) {
+                    TraceOp::INDEPENDENT
+                } else {
+                    let d = 1 + r.below(i.min(6) as u64) as u32;
+                    if r.chance(0.6) {
+                        TraceOp::accumulate(d)
+                    } else {
+                        TraceOp::multiplier(d)
+                    }
+                }
+            })
+            .collect();
+        Trace::new(ops)
+    }, |trace| {
+        trace.validate().map_err(|e| e.to_string())?;
+        let sim = simulate(&lat, trace);
+        let max_tap = lat.to_mul.max(lat.to_add) as f64;
+        if sim.avg_penalty < 0.0 || sim.avg_penalty > max_tap {
+            return Err(format!("penalty {} out of range", sim.avg_penalty));
+        }
+        if sim.cycles < trace.len() as u64 + lat.full as u64 - 1 {
+            return Err(format!("cycles {} below floor", sim.cycles));
+        }
+        let sim2 = simulate(&lat_nofwd, trace);
+        if sim2.avg_penalty + 1e-12 < sim.avg_penalty {
+            return Err("forwarding hurt".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_decode_encode_roundtrip() {
+    check_cases(19, 100_000, |r: &mut Rng| (r.f32_any(), r.f64_any()), |&(s, d)| {
+        for (fmt, bits) in [(Format::SP, s as u64), (Format::DP, d)] {
+            let dec = decode(fmt, bits);
+            match dec.class {
+                Class::Zero => {
+                    if fmt.zero(dec.sign) != bits & fmt.storage_mask() {
+                        return Err(format!("zero roundtrip {bits:#x}"));
+                    }
+                }
+                Class::Subnormal | Class::Normal => {
+                    let back = fpmax::arch::fp::encode_finite(fmt, dec.sign, dec.exp, dec.sig);
+                    if back != bits & fmt.storage_mask() {
+                        return Err(format!("{bits:#x} → {back:#x}"));
+                    }
+                }
+                _ => {}
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_fmac_activity_consistency() {
+    // Activity records must be internally consistent: nonzero digits ≤
+    // digits, special ops do no tree work.
+    let unit = FpuUnit::generate(&FpuConfig::sp_fma());
+    check_cases(23, 30_000, |r: &mut Rng| (r.f32_any(), r.f32_any(), r.f32_any()), |&(a, b, c)| {
+        let (_, act) = unit.fmac_mode(RoundMode::NearestEven, a as u64, b as u64, c as u64);
+        if act.nonzero_digits > act.digits {
+            return Err("digit count inconsistency".into());
+        }
+        if act.special && act.tree_fa_ops != 0 {
+            return Err("special op did datapath work".into());
+        }
+        if !act.special && act.digits == 0 {
+            return Err("finite op with no booth digits".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_chip_routing_and_batching() {
+    // Chip-level invariants under random programs: every executed FMAC
+    // lands in the result RAM in order, and cycle counts are the sum of
+    // per-burst issue distances plus drains.
+    use fpmax::chip::{FpMaxChip, Instruction, UnitSel, BANK_PROGRAM, BANK_RESULT, BANK_STIM_A, BANK_STIM_B, BANK_STIM_C};
+    check_cases(29, 200, |r: &mut Rng| {
+        let bursts: Vec<(u8, u16, u16)> = (0..(1 + r.below(4)))
+            .map(|_| {
+                (
+                    r.below(4) as u8,
+                    r.below(32) as u16,
+                    (1 + r.below(32)) as u16,
+                )
+            })
+            .collect();
+        (r.next_u64(), bursts)
+    }, |(seed, bursts)| {
+        let mut chip = FpMaxChip::new(128);
+        let mut rng = Rng::new(*seed);
+        let data: Vec<u64> = (0..128).map(|_| rng.f32_operand() as u64).collect();
+        {
+            let mut port = chip.jtag();
+            port.load_bank(BANK_STIM_A, &data).map_err(|e| e.to_string())?;
+            port.load_bank(BANK_STIM_B, &data).map_err(|e| e.to_string())?;
+            port.load_bank(BANK_STIM_C, &data).map_err(|e| e.to_string())?;
+            let prog: Vec<u64> = bursts
+                .iter()
+                .map(|&(u, base, count)| {
+                    let unit = match u {
+                        0 => UnitSel::DpCma,
+                        1 => UnitSel::DpFma,
+                        2 => UnitSel::SpCma,
+                        _ => UnitSel::SpFma,
+                    };
+                    Instruction::fmac_burst(unit, base.min(96), count.min(32)).encode() as u64
+                })
+                .chain(std::iter::once(0))
+                .collect();
+            port.load_bank(BANK_PROGRAM, &prog).map_err(|e| e.to_string())?;
+        }
+        let stats = chip.run().map_err(|e| e.to_string())?;
+        let want_ops: u64 = bursts.iter().map(|&(_, _, c)| c.min(32) as u64).sum();
+        if stats.ops != want_ops {
+            return Err(format!("ops {} vs {}", stats.ops, want_ops));
+        }
+        if stats.results_written != want_ops {
+            return Err("results not dense in result RAM".into());
+        }
+        if stats.cycles < want_ops {
+            return Err("cycle count below issue floor".into());
+        }
+        // Result RAM contents are readable and in order.
+        let back = chip.jtag().read_bank(BANK_RESULT, want_ops as usize).map_err(|e| e.to_string())?;
+        if back.len() != want_ops as usize {
+            return Err("readback length".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_energy_model_monotonicity() {
+    use fpmax::energy::power::evaluate;
+    use fpmax::energy::tech::{OperatingPoint, Technology};
+    let tech = Technology::fdsoi28();
+    let units: Vec<FpuUnit> = FpuConfig::fpmax_units().iter().map(FpuUnit::generate).collect();
+    check_cases(31, 5_000, |r: &mut Rng| {
+        (
+            r.below(4) as usize,
+            0.5 + r.f64() * 0.5,        // vdd in [0.5, 1.0)
+            -0.5 + r.f64() * 1.5,       // vbb in [-0.5, 1.0)
+            0.05 + r.f64() * 0.9,       // utilization
+        )
+    }, |&(i, vdd, vbb, util)| {
+        let unit = &units[i];
+        let op = OperatingPoint::new(vdd, vbb);
+        let Some(p) = evaluate(unit, &tech, op, util) else { return Ok(()) };
+        // Raising vdd at fixed bias must raise frequency and dynamic power.
+        if let Some(q) = evaluate(unit, &tech, OperatingPoint::new(vdd + 0.05, vbb), util) {
+            if q.freq_ghz <= p.freq_ghz {
+                return Err(format!("freq not monotone at {vdd:.2}"));
+            }
+            if q.power.dynamic_mw <= p.power.dynamic_mw {
+                return Err("dynamic power not monotone in vdd".into());
+            }
+        }
+        // Forward bias raises leakage.
+        if let Some(q) = evaluate(unit, &tech, OperatingPoint::new(vdd, vbb + 0.2), util) {
+            if q.power.leakage_mw <= p.power.leakage_mw {
+                return Err("leakage not monotone in vbb".into());
+            }
+        }
+        // Utilization scales dynamic power proportionally.
+        if let Some(q) = evaluate(unit, &tech, op, util / 2.0) {
+            let ratio = p.power.dynamic_mw / q.power.dynamic_mw;
+            if (ratio - 2.0).abs() > 1e-6 {
+                return Err(format!("dyn power not ∝ util: {ratio}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_pareto_frontier_sound() {
+    use fpmax::dse::pareto::{dominates, frontier};
+    check_cases(37, 2_000, |r: &mut Rng| {
+        let n = 2 + r.below(60) as usize;
+        (0..n).map(|_| (r.f64() * 10.0, r.f64() * 10.0)).collect::<Vec<(f64, f64)>>()
+    }, |pts| {
+        let f = frontier(pts);
+        if f.is_empty() {
+            return Err("empty frontier".into());
+        }
+        for &i in &f {
+            for (j, p) in pts.iter().enumerate() {
+                if i != j && dominates(p, &pts[i]) {
+                    return Err(format!("frontier member {i} dominated by {j}"));
+                }
+            }
+        }
+        Ok(())
+    });
+}
