@@ -4,11 +4,15 @@
 //! * reduction tree: Wallace vs ZM vs array at fixed radix;
 //! * pipeline depth: stages vs frequency vs register energy;
 //! * internal forwarding: on vs off for each unit (latency penalty);
-//! * design-style κ: what each unit would do under the other sizing.
+//! * design-style κ: what each unit would do under the other sizing;
+//! * execution engine: scalar vs batch execution at both fidelity tiers.
 //!
 //! Run: `cargo bench --bench ablation`.
 
+use std::time::Instant;
+
 use fpmax::arch::booth::BoothRadix;
+use fpmax::arch::engine::{BatchExecutor, Datapath, Fidelity, UnitDatapath};
 use fpmax::arch::generator::{FpuConfig, FpuUnit};
 use fpmax::arch::tree::TreeKind;
 use fpmax::energy::components::unit_cost;
@@ -107,6 +111,53 @@ fn main() {
         ]);
     }
     t.print();
+
+    println!("\n=== ablation: execution engine (scalar vs batch vs fidelity) ===\n");
+    {
+        use fpmax::workloads::throughput::{OperandMix, OperandStream};
+        let fast = std::env::var("FPMAX_BENCH_FAST").as_deref() == Ok("1");
+        let n = if fast { 5_000 } else { 50_000 };
+        let exec = BatchExecutor::auto();
+        let mut t = TextTable::new(vec![
+            "unit",
+            "scalar gate Mops/s",
+            "batch gate",
+            "batch word",
+            "speedup",
+        ]);
+        for cfg in FpuConfig::fpmax_units() {
+            let unit = FpuUnit::generate(&cfg);
+            let word = UnitDatapath::new(&unit, Fidelity::WordLevel);
+            let triples =
+                OperandStream::new(cfg.precision, OperandMix::Finite, 42).batch(n);
+            let time = |f: &mut dyn FnMut()| -> f64 {
+                let t0 = Instant::now();
+                f();
+                n as f64 / t0.elapsed().as_secs_f64()
+            };
+            let scalar_gate = time(&mut || {
+                let mut acc = 0u64;
+                for tr in &triples {
+                    acc ^= unit.fmac_one(tr.a, tr.b, tr.c);
+                }
+                std::hint::black_box(acc);
+            });
+            let batch_gate = time(&mut || {
+                std::hint::black_box(exec.run(&unit, &triples));
+            });
+            let batch_word = time(&mut || {
+                std::hint::black_box(exec.run(&word, &triples));
+            });
+            t.row(vec![
+                cfg.name(),
+                format!("{:.2}", scalar_gate / 1e6),
+                format!("{:.2}", batch_gate / 1e6),
+                format!("{:.2}", batch_word / 1e6),
+                format!("{:.1}×", batch_word / scalar_gate),
+            ]);
+        }
+        t.print();
+    }
 
     println!("\n=== ablation: CMA-vs-FMA accumulation chain scaling ===\n");
     let mut t = TextTable::new(vec!["chain fraction", "DP CMA pen.", "DP FMA(5) pen.", "CMA advantage"]);

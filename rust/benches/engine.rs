@@ -1,0 +1,163 @@
+//! Bench E6 — the unified execution engine: scalar vs batch vs fidelity
+//! tiers on a 1M-triple stream, for all four Table I presets.
+//!
+//! This is the perf baseline behind the engine acceptance criterion
+//! (`BatchExecutor` + `Fidelity::WordLevel` ≥ 5× the seed scalar
+//! gate-level loop, with sampled gate-level cross-checks clean). Results
+//! are written to `BENCH_engine.json` at the repository root (override
+//! with `FPMAX_BENCH_OUT=path`), so future PRs have a perf trajectory.
+//!
+//! Run: `cargo bench --bench engine` (FPMAX_BENCH_FAST=1 for a smoke run).
+
+use fpmax::arch::engine::{BatchExecutor, Datapath, Fidelity, UnitDatapath};
+use fpmax::arch::generator::{FpuConfig, FpuUnit};
+use fpmax::util::bench::{black_box, header, BenchRunner};
+use fpmax::workloads::throughput::{OperandMix, OperandStream};
+
+struct UnitRow {
+    name: String,
+    scalar_gate: f64,
+    batch_gate: f64,
+    scalar_word: f64,
+    batch_word: f64,
+    crosscheck_sampled: usize,
+    crosscheck_mismatches: usize,
+}
+
+impl UnitRow {
+    fn speedup(&self) -> f64 {
+        self.batch_word / self.scalar_gate
+    }
+}
+
+fn main() {
+    let fast = std::env::var("FPMAX_BENCH_FAST").as_deref() == Ok("1");
+    let n: usize = if fast { 50_000 } else { 1_000_000 };
+    // Gate-level passes over 1M ops are expensive; a few samples give a
+    // stable median without an hour-long run.
+    let runner = BenchRunner { samples: if fast { 2 } else { 3 }, warmup_iters: 1, iters_per_sample: 1 };
+    let exec = BatchExecutor::auto();
+
+    header(&format!(
+        "execution engine — {n} ops/unit, {} workers",
+        exec.workers()
+    ));
+
+    let mut rows = Vec::new();
+    for cfg in FpuConfig::fpmax_units() {
+        let unit = FpuUnit::generate(&cfg);
+        let word = UnitDatapath::new(&unit, Fidelity::WordLevel);
+        let triples = OperandStream::new(cfg.precision, OperandMix::Finite, 42).batch(n);
+
+        // The seed baseline: one scalar gate-level op at a time.
+        let scalar_gate = runner
+            .run(&format!("engine/{}/scalar_gate", cfg.name()), Some(n as f64), || {
+                let mut acc = 0u64;
+                for t in &triples {
+                    acc ^= unit.fmac(t.a, t.b, t.c).bits;
+                }
+                black_box(acc);
+            })
+            .throughput()
+            .unwrap();
+
+        let batch_gate = runner
+            .run(&format!("engine/{}/batch_gate", cfg.name()), Some(n as f64), || {
+                black_box(exec.run(&unit, &triples));
+            })
+            .throughput()
+            .unwrap();
+
+        let scalar_word = runner
+            .run(&format!("engine/{}/scalar_word", cfg.name()), Some(n as f64), || {
+                let mut acc = 0u64;
+                for t in &triples {
+                    acc ^= word.fmac_one(t.a, t.b, t.c);
+                }
+                black_box(acc);
+            })
+            .throughput()
+            .unwrap();
+
+        let batch_word = runner
+            .run(&format!("engine/{}/batch_word", cfg.name()), Some(n as f64), || {
+                black_box(exec.run(&word, &triples));
+            })
+            .throughput()
+            .unwrap();
+
+        // One checked pass (not timed separately: the sampling cost is the
+        // point being recorded).
+        let (_, check) = exec.run_checked(&unit, &triples, 997);
+        assert!(
+            check.clean(),
+            "{}: word-level diverged from gate-level at {:?}",
+            cfg.name(),
+            check.mismatches
+        );
+
+        rows.push(UnitRow {
+            name: cfg.name(),
+            scalar_gate,
+            batch_gate,
+            scalar_word,
+            batch_word,
+            crosscheck_sampled: check.sampled,
+            crosscheck_mismatches: check.mismatches.len(),
+        });
+    }
+
+    println!();
+    for r in &rows {
+        println!(
+            "{:<7}  scalar-gate {:>8.2} Mops/s  batch-gate {:>8.2}  scalar-word {:>8.2}  batch-word {:>8.2}  → {:.1}× (crosscheck {}/{} clean)",
+            r.name,
+            r.scalar_gate / 1e6,
+            r.batch_gate / 1e6,
+            r.scalar_word / 1e6,
+            r.batch_word / 1e6,
+            r.speedup(),
+            r.crosscheck_sampled - r.crosscheck_mismatches,
+            r.crosscheck_sampled,
+        );
+    }
+
+    let out_path = std::env::var("FPMAX_BENCH_OUT")
+        .unwrap_or_else(|_| format!("{}/../BENCH_engine.json", env!("CARGO_MANIFEST_DIR")));
+    let json = render_json(n, exec.workers(), &rows);
+    match std::fs::write(&out_path, &json) {
+        Ok(()) => println!("\nwrote {out_path}"),
+        Err(e) => println!("\ncould not write {out_path}: {e}"),
+    }
+}
+
+/// Hand-rolled JSON (no serde offline): stable key order, one unit per
+/// entry.
+fn render_json(ops: usize, workers: usize, rows: &[UnitRow]) -> String {
+    let mut s = String::new();
+    s.push_str("{\n");
+    s.push_str("  \"bench\": \"engine\",\n");
+    s.push_str("  \"measured\": true,\n");
+    s.push_str(&format!("  \"ops_per_unit\": {ops},\n"));
+    s.push_str(&format!("  \"workers\": {workers},\n"));
+    s.push_str("  \"units\": {\n");
+    for (i, r) in rows.iter().enumerate() {
+        s.push_str(&format!("    \"{}\": {{\n", r.name));
+        s.push_str(&format!("      \"scalar_gate_ops_per_s\": {:.0},\n", r.scalar_gate));
+        s.push_str(&format!("      \"batch_gate_ops_per_s\": {:.0},\n", r.batch_gate));
+        s.push_str(&format!("      \"scalar_word_ops_per_s\": {:.0},\n", r.scalar_word));
+        s.push_str(&format!("      \"batch_word_ops_per_s\": {:.0},\n", r.batch_word));
+        s.push_str(&format!(
+            "      \"speedup_batch_word_vs_scalar_gate\": {:.2},\n",
+            r.speedup()
+        ));
+        s.push_str(&format!("      \"crosscheck_sampled\": {},\n", r.crosscheck_sampled));
+        s.push_str(&format!(
+            "      \"crosscheck_mismatches\": {}\n",
+            r.crosscheck_mismatches
+        ));
+        s.push_str(if i + 1 == rows.len() { "    }\n" } else { "    },\n" });
+    }
+    s.push_str("  }\n}\n");
+    s
+}

@@ -8,6 +8,7 @@
 //!
 //! Run: `cargo bench --bench hotpath`.
 
+use fpmax::arch::engine::{BatchExecutor, Datapath, Fidelity, UnitDatapath};
 use fpmax::arch::generator::{FpuConfig, FpuUnit};
 use fpmax::arch::rounding::RoundMode;
 use fpmax::arch::softfloat;
@@ -34,6 +35,34 @@ fn main() {
                 acc ^= unit.fmac(t.a, t.b, t.c).bits;
             }
             black_box(acc);
+        });
+    }
+
+    header("hot path — execution engine (scalar vs batch vs fidelity)");
+    {
+        let cfg = FpuConfig::sp_fma();
+        let unit = FpuUnit::generate(&cfg);
+        let word = UnitDatapath::new(&unit, Fidelity::WordLevel);
+        let mut stream = OperandStream::new(cfg.precision, OperandMix::Finite, 4);
+        let triples = stream.batch(n);
+        let exec = BatchExecutor::auto();
+        runner.run("engine/sp_fma/scalar_gate", Some(n as f64), || {
+            let mut acc = 0u64;
+            for t in &triples {
+                acc ^= unit.fmac_one(t.a, t.b, t.c);
+            }
+            black_box(acc);
+        });
+        runner.run("engine/sp_fma/batch_gate", Some(n as f64), || {
+            black_box(exec.run(&unit, &triples));
+        });
+        runner.run("engine/sp_fma/batch_word", Some(n as f64), || {
+            black_box(exec.run(&word, &triples));
+        });
+        runner.run("engine/sp_fma/batch_word_checked", Some(n as f64), || {
+            let (out, check) = exec.run_checked(&unit, &triples, 997);
+            assert!(check.clean());
+            black_box(out);
         });
     }
 

@@ -1,0 +1,791 @@
+//! The batched execution engine: **one execution interface** for every
+//! consumer of an FMAC datapath (coordinator, DSE sweeps, chip
+//! sequencer, workload drivers, benches), with selectable fidelity.
+//!
+//! The FPMax paper separates what a unit *computes* (bit-exact IEEE
+//! semantics per Table I) from how fast the silicon *delivers* it; FPnew
+//! and Snitch make the same split in hardware — a parameterized FPU
+//! behind a streaming front-end that keeps it fed. This module is that
+//! split in software:
+//!
+//! * [`Datapath`] — the execution trait. `fmac_one` is the scalar op;
+//!   `fmac_batch` has a streaming default so no implementation hand-rolls
+//!   batching (the executor chunks batches across workers and drives it
+//!   per chunk); `*_tracked` variants accumulate per-op activity into an
+//!   [`ActivityAccumulator`].
+//! * [`Fidelity`] — **GateLevel** evaluates the structural multiplier
+//!   (every Booth mux and 3:2 row, yielding toggle counts for the energy
+//!   model); **WordLevel** skips the gate simulation of the multiplier
+//!   tree and computes through the exact softfloat path. Both tiers are
+//!   **bit-identical** — the gate-level datapath is checked against the
+//!   word-level spec in debug builds, and [`BatchExecutor::run_checked`]
+//!   cross-checks sampled results at run time.
+//! * [`BatchExecutor`] — thread-parallel fork-join over operand slices
+//!   (`std::thread::scope`; the offline environment has no tokio, and the
+//!   workload is pure CPU compute).
+//!
+//! Implementations provided: [`FpuUnit`] (the generated gate-level
+//! datapath), [`WordUnit`] (the word-level tier of a unit),
+//! [`UnitDatapath`] (a unit bound to a fidelity at run time), and
+//! [`GoldenFma`] (the fused softfloat spec, regardless of unit kind).
+
+use super::fma::FmaActivity;
+use super::fp::{decode, Class, Format};
+use super::generator::{FpuConfig, FpuKind, FpuUnit, StructureReport};
+use super::multiplier::MultiplierConfig;
+use super::rounding::{Flags, RoundMode, Rounded};
+use super::softfloat;
+use crate::workloads::throughput::OperandTriple;
+
+/// Execution fidelity tier of a datapath implementation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub enum Fidelity {
+    /// Structural simulation: Booth recoding, every 3:2 compressor row,
+    /// toggle counting. Slow; feeds the energy model real activity.
+    #[default]
+    GateLevel,
+    /// Exact integer-significand arithmetic, no per-row gate evaluation.
+    /// Bit-identical results, ~an order of magnitude faster.
+    WordLevel,
+}
+
+impl Fidelity {
+    pub fn name(self) -> &'static str {
+        match self {
+            Fidelity::GateLevel => "gate",
+            Fidelity::WordLevel => "word",
+        }
+    }
+}
+
+/// The per-unit Table-I semantics at word level: fused units round once,
+/// cascade units round after the multiply and again after the add. This
+/// is the single spec function the coordinator, the chip tester, and the
+/// word-level tier all share.
+#[inline]
+pub fn reference_fmac(
+    kind: FpuKind,
+    fmt: Format,
+    mode: RoundMode,
+    a: u64,
+    b: u64,
+    c: u64,
+) -> Rounded {
+    match kind {
+        FpuKind::Fma => softfloat::fma(fmt, mode, a, b, c),
+        FpuKind::Cma => {
+            let p = softfloat::mul(fmt, mode, a, b);
+            let s = softfloat::add(fmt, mode, p.bits, c);
+            Rounded { bits: s.bits, flags: Flags::merge(p.flags, s.flags) }
+        }
+    }
+}
+
+/// Unified activity accumulator: the sum of per-op [`FmaActivity`]
+/// records over a batch, mergeable across worker threads. This replaces
+/// the ad-hoc per-module toggle counters that used to feed the energy
+/// model — [`crate::energy::power::evaluate_measured`] consumes one
+/// directly.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ActivityAccumulator {
+    /// Ops recorded.
+    pub ops: u64,
+    /// Ops that took the special/early-out path (clock-gated datapath).
+    pub special_ops: u64,
+    /// Total Booth digits across ops.
+    pub digits: u64,
+    /// Nonzero Booth digits (mux/negate activity).
+    pub nonzero_digits: u64,
+    /// Tree full-adder evaluations (gate-level only).
+    pub tree_fa_ops: u64,
+    /// Tree output toggle weight (gate-level only).
+    pub tree_toggles: u64,
+    /// Summed alignment-shifter distances.
+    pub align_shift: u64,
+    /// Summed normalization distances.
+    pub norm_shift: u64,
+}
+
+impl ActivityAccumulator {
+    /// Fold one op's activity record in.
+    #[inline]
+    pub fn record(&mut self, act: &FmaActivity) {
+        self.ops += 1;
+        if act.special {
+            self.special_ops += 1;
+        }
+        self.digits += act.digits as u64;
+        self.nonzero_digits += act.nonzero_digits as u64;
+        self.tree_fa_ops += act.tree_fa_ops;
+        self.tree_toggles += act.tree_toggles;
+        self.align_shift += act.align_shift as u64;
+        self.norm_shift += act.norm_shift as u64;
+    }
+
+    /// Merge another accumulator (fork-join reduction).
+    pub fn merge(&mut self, other: &ActivityAccumulator) {
+        self.ops += other.ops;
+        self.special_ops += other.special_ops;
+        self.digits += other.digits;
+        self.nonzero_digits += other.nonzero_digits;
+        self.tree_fa_ops += other.tree_fa_ops;
+        self.tree_toggles += other.tree_toggles;
+        self.align_shift += other.align_shift;
+        self.norm_shift += other.norm_shift;
+    }
+
+    /// Fraction of ops that exercised the full datapath (specials gate
+    /// the multiplier clock).
+    pub fn active_fraction(&self) -> f64 {
+        if self.ops == 0 {
+            return 1.0;
+        }
+        1.0 - self.special_ops as f64 / self.ops as f64
+    }
+
+    /// Data-activity scale factor for [`crate::energy::UnitCost::dyn_energy_pj`]
+    /// (1.0 = the calibrated average-operand activity).
+    ///
+    /// Gate-level runs scale by measured tree toggles per op against the
+    /// half-the-tree-cells random baseline. Word-level runs carry no
+    /// toggle counts but do record Booth digit statistics (the recoder is
+    /// word-level computable), so they scale by the nonzero-digit ratio
+    /// against the random-operand expectation of the radix — 3/4 for
+    /// Booth-2, 7/8 for Booth-3 — times the active-op fraction. Only an
+    /// empty accumulator is neutral.
+    pub fn activity_scale(&self, s: &StructureReport) -> f64 {
+        if self.ops == 0 {
+            return 1.0;
+        }
+        if self.tree_fa_ops > 0 {
+            let per_op = self.tree_toggles as f64 / self.ops as f64;
+            let baseline = (s.tree_cells as f64 / 2.0).max(1.0);
+            (per_op / baseline).clamp(0.05, 2.0)
+        } else if self.digits > 0 {
+            let ratio = self.nonzero_digits as f64 / self.digits as f64;
+            let baseline = if s.has_triple_adder { 7.0 / 8.0 } else { 3.0 / 4.0 };
+            (self.active_fraction() * ratio / baseline).clamp(0.05, 2.0)
+        } else {
+            self.active_fraction().clamp(0.05, 1.0)
+        }
+    }
+}
+
+/// One execution interface over every FMAC datapath implementation.
+///
+/// Results are raw bit patterns in the datapath's [`Format`] (SP in the
+/// low 32 bits). All implementations of the same unit configuration are
+/// bit-identical across fidelity tiers; rounding is round-to-nearest-even
+/// (the benchmarked default — mode-explicit execution stays on
+/// [`FpuUnit::fmac_mode`]).
+pub trait Datapath: Sync {
+    /// Operand/result format.
+    fn format(&self) -> Format;
+
+    /// FMAC organization this datapath implements (fused or cascade).
+    fn kind(&self) -> FpuKind;
+
+    /// Fidelity tier of this implementation.
+    fn fidelity(&self) -> Fidelity;
+
+    /// Structural report, when this datapath models a generated unit.
+    fn structure(&self) -> Option<&StructureReport> {
+        None
+    }
+
+    /// Display label for benches and reports.
+    fn label(&self) -> String {
+        format!("{}/{}", self.kind().name(), self.fidelity().name())
+    }
+
+    /// One FMAC (`a·b + c` in Table-I semantics); returns result bits.
+    fn fmac_one(&self, a: u64, b: u64, c: u64) -> u64;
+
+    /// One FMAC with activity accumulation.
+    fn fmac_one_tracked(&self, a: u64, b: u64, c: u64, acc: &mut ActivityAccumulator) -> u64 {
+        acc.ops += 1;
+        self.fmac_one(a, b, c)
+    }
+
+    /// Execute a batch into `out`. The default streams the scalar op over
+    /// the slice pair; the *parallel* chunking lives in
+    /// [`BatchExecutor`], which splits the batch across workers and calls
+    /// this per chunk.
+    fn fmac_batch(&self, triples: &[OperandTriple], out: &mut [u64]) {
+        assert_eq!(triples.len(), out.len(), "batch length mismatch");
+        for (t, o) in triples.iter().zip(out.iter_mut()) {
+            *o = self.fmac_one(t.a, t.b, t.c);
+        }
+    }
+
+    /// Execute a batch with activity accumulation.
+    fn fmac_batch_tracked(
+        &self,
+        triples: &[OperandTriple],
+        out: &mut [u64],
+        acc: &mut ActivityAccumulator,
+    ) {
+        assert_eq!(triples.len(), out.len(), "batch length mismatch");
+        for (t, o) in triples.iter().zip(out.iter_mut()) {
+            *o = self.fmac_one_tracked(t.a, t.b, t.c, acc);
+        }
+    }
+}
+
+/// The generated unit itself is the gate-level tier.
+impl Datapath for FpuUnit {
+    fn format(&self) -> Format {
+        self.format
+    }
+
+    fn kind(&self) -> FpuKind {
+        self.config.kind
+    }
+
+    fn fidelity(&self) -> Fidelity {
+        Fidelity::GateLevel
+    }
+
+    fn structure(&self) -> Option<&StructureReport> {
+        Some(FpuUnit::structure(self))
+    }
+
+    fn label(&self) -> String {
+        format!("{}/{}", self.config.name(), Fidelity::GateLevel.name())
+    }
+
+    #[inline]
+    fn fmac_one(&self, a: u64, b: u64, c: u64) -> u64 {
+        self.fmac(a, b, c).bits
+    }
+
+    #[inline]
+    fn fmac_one_tracked(&self, a: u64, b: u64, c: u64, acc: &mut ActivityAccumulator) -> u64 {
+        let (r, act) = self.fmac_mode(RoundMode::NearestEven, a, b, c);
+        acc.record(&act);
+        r.bits
+    }
+}
+
+/// The word-level tier of a generated unit: same Table-I semantics and
+/// structure report, no per-row gate simulation. Bit-identical to the
+/// gate-level tier by construction (the gate-level datapath asserts
+/// equality against this very spec in debug builds); `run_checked`
+/// re-verifies that on sampled operands in release.
+#[derive(Debug, Clone)]
+pub struct WordUnit {
+    format: Format,
+    kind: FpuKind,
+    mul: MultiplierConfig,
+    structure: StructureReport,
+    name: String,
+}
+
+impl WordUnit {
+    /// The word-level view of an elaborated unit.
+    pub fn of(unit: &FpuUnit) -> WordUnit {
+        WordUnit {
+            format: unit.format,
+            kind: unit.config.kind,
+            mul: *unit.multiplier_config(),
+            structure: *unit.structure(),
+            name: unit.config.name(),
+        }
+    }
+
+    /// Elaborate a configuration straight into the word-level tier.
+    pub fn generate(cfg: &FpuConfig) -> WordUnit {
+        WordUnit::of(&FpuUnit::generate(cfg))
+    }
+}
+
+/// Booth digit statistics of a multiplier operand, computed directly
+/// from the recoding windows — no partial products materialized, no
+/// tree. Mirrors `booth::partial_products_into`'s recode exactly, so a
+/// word-level tracked run reports the same digit counts the gate-level
+/// tier does.
+fn booth_digit_stats(y: u64, mul: &MultiplierConfig) -> (u32, u32) {
+    let b = mul.booth.bits_per_digit();
+    let n = mul.booth.digit_count(mul.sig_bits);
+    let y2 = (y as u128) << 1;
+    let mut nonzero = 0;
+    for i in 0..n {
+        let window = ((y2 >> (i * b)) & ((1u128 << (b + 1)) - 1)) as u64;
+        let msb = (window >> b) & 1;
+        let value = ((window >> 1) + (window & 1)) as i64 - ((1i64 << b) * msb as i64);
+        if value != 0 {
+            nonzero += 1;
+        }
+    }
+    (n, nonzero)
+}
+
+impl Datapath for WordUnit {
+    fn format(&self) -> Format {
+        self.format
+    }
+
+    fn kind(&self) -> FpuKind {
+        self.kind
+    }
+
+    fn fidelity(&self) -> Fidelity {
+        Fidelity::WordLevel
+    }
+
+    fn structure(&self) -> Option<&StructureReport> {
+        Some(&self.structure)
+    }
+
+    fn label(&self) -> String {
+        format!("{}/{}", self.name, Fidelity::WordLevel.name())
+    }
+
+    #[inline]
+    fn fmac_one(&self, a: u64, b: u64, c: u64) -> u64 {
+        reference_fmac(self.kind, self.format, RoundMode::NearestEven, a, b, c).bits
+    }
+
+    #[inline]
+    fn fmac_one_tracked(&self, a: u64, b: u64, c: u64, acc: &mut ActivityAccumulator) -> u64 {
+        // Word level carries no toggle counts, but the special/early-out
+        // accounting (clock gating) and the Booth digit statistics are
+        // both word-level observable — those are what the energy model's
+        // word-level activity scale is built from.
+        let da = decode(self.format, a);
+        let db = decode(self.format, b);
+        let special = match self.kind {
+            FpuKind::Fma => {
+                let dc = decode(self.format, c);
+                da.non_finite()
+                    || db.non_finite()
+                    || dc.non_finite()
+                    || da.is_zero()
+                    || db.is_zero()
+            }
+            FpuKind::Cma => {
+                !(matches!(da.class, Class::Normal | Class::Subnormal)
+                    && matches!(db.class, Class::Normal | Class::Subnormal))
+            }
+        };
+        acc.ops += 1;
+        if special {
+            acc.special_ops += 1;
+        } else {
+            // Same operand the gate-level multiplier recodes (y = b.sig).
+            let (digits, nonzero) = booth_digit_stats(db.sig, &self.mul);
+            acc.digits += digits as u64;
+            acc.nonzero_digits += nonzero as u64;
+        }
+        self.fmac_one(a, b, c)
+    }
+}
+
+/// A generated unit bound to a fidelity tier chosen at run time — the
+/// handle consumers pass to the executor when the tier is a parameter
+/// (DSE sweeps run word-level, verification runs gate-level).
+#[derive(Debug, Clone)]
+pub enum UnitDatapath {
+    Gate(FpuUnit),
+    Word(WordUnit),
+}
+
+impl UnitDatapath {
+    /// Bind an elaborated unit to a tier.
+    pub fn new(unit: &FpuUnit, fidelity: Fidelity) -> UnitDatapath {
+        match fidelity {
+            Fidelity::GateLevel => UnitDatapath::Gate(unit.clone()),
+            Fidelity::WordLevel => UnitDatapath::Word(WordUnit::of(unit)),
+        }
+    }
+
+    /// Elaborate a configuration at a tier.
+    pub fn generate(cfg: &FpuConfig, fidelity: Fidelity) -> UnitDatapath {
+        UnitDatapath::new(&FpuUnit::generate(cfg), fidelity)
+    }
+}
+
+impl Datapath for UnitDatapath {
+    fn format(&self) -> Format {
+        match self {
+            UnitDatapath::Gate(u) => u.format,
+            UnitDatapath::Word(w) => Datapath::format(w),
+        }
+    }
+
+    fn kind(&self) -> FpuKind {
+        match self {
+            UnitDatapath::Gate(u) => u.config.kind,
+            UnitDatapath::Word(w) => Datapath::kind(w),
+        }
+    }
+
+    fn fidelity(&self) -> Fidelity {
+        match self {
+            UnitDatapath::Gate(_) => Fidelity::GateLevel,
+            UnitDatapath::Word(_) => Fidelity::WordLevel,
+        }
+    }
+
+    fn structure(&self) -> Option<&StructureReport> {
+        match self {
+            UnitDatapath::Gate(u) => Some(FpuUnit::structure(u)),
+            UnitDatapath::Word(w) => Datapath::structure(w),
+        }
+    }
+
+    fn label(&self) -> String {
+        match self {
+            UnitDatapath::Gate(u) => Datapath::label(u),
+            UnitDatapath::Word(w) => Datapath::label(w),
+        }
+    }
+
+    #[inline]
+    fn fmac_one(&self, a: u64, b: u64, c: u64) -> u64 {
+        match self {
+            UnitDatapath::Gate(u) => u.fmac(a, b, c).bits,
+            UnitDatapath::Word(w) => w.fmac_one(a, b, c),
+        }
+    }
+
+    #[inline]
+    fn fmac_one_tracked(&self, a: u64, b: u64, c: u64, acc: &mut ActivityAccumulator) -> u64 {
+        match self {
+            UnitDatapath::Gate(u) => u.fmac_one_tracked(a, b, c, acc),
+            UnitDatapath::Word(w) => w.fmac_one_tracked(a, b, c, acc),
+        }
+    }
+}
+
+/// The golden softfloat spec as an engine datapath: always **fused**
+/// semantics, whatever unit it is compared against. This is what the
+/// coordinator checks the PJRT artifact with.
+#[derive(Debug, Clone, Copy)]
+pub struct GoldenFma {
+    pub format: Format,
+}
+
+impl Datapath for GoldenFma {
+    fn format(&self) -> Format {
+        self.format
+    }
+
+    fn kind(&self) -> FpuKind {
+        FpuKind::Fma
+    }
+
+    fn fidelity(&self) -> Fidelity {
+        Fidelity::WordLevel
+    }
+
+    fn label(&self) -> String {
+        "golden/fused".to_string()
+    }
+
+    #[inline]
+    fn fmac_one(&self, a: u64, b: u64, c: u64) -> u64 {
+        softfloat::fma(self.format, RoundMode::NearestEven, a, b, c).bits
+    }
+}
+
+/// Report of a sampled gate-level cross-check of a word-level run.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct CrossCheck {
+    /// How many operands were re-executed at gate level.
+    pub sampled: usize,
+    /// Indices (into the batch) that disagreed, capped at 16.
+    pub mismatches: Vec<usize>,
+}
+
+impl CrossCheck {
+    pub fn clean(&self) -> bool {
+        self.mismatches.is_empty()
+    }
+}
+
+const CROSSCHECK_CAP: usize = 16;
+
+/// Thread-parallel batch executor: splits an operand slice into per-worker
+/// chunks and drives any [`Datapath`] through a scoped fork-join.
+#[derive(Debug, Clone, Copy)]
+pub struct BatchExecutor {
+    workers: usize,
+}
+
+impl Default for BatchExecutor {
+    fn default() -> Self {
+        BatchExecutor::auto()
+    }
+}
+
+impl BatchExecutor {
+    /// Fixed worker count (clamped to ≥ 1).
+    pub fn new(workers: usize) -> BatchExecutor {
+        BatchExecutor { workers: workers.max(1) }
+    }
+
+    /// One worker per available hardware thread.
+    pub fn auto() -> BatchExecutor {
+        let n = std::thread::available_parallelism().map(|v| v.get()).unwrap_or(4);
+        BatchExecutor::new(n)
+    }
+
+    /// Single-threaded executor (scalar-equivalent ordering, no spawns).
+    pub fn serial() -> BatchExecutor {
+        BatchExecutor::new(1)
+    }
+
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    /// Execute a batch, returning result bits in operand order.
+    pub fn run<D: Datapath + ?Sized>(&self, dp: &D, triples: &[OperandTriple]) -> Vec<u64> {
+        let mut out = vec![0u64; triples.len()];
+        self.run_into(dp, triples, &mut out);
+        out
+    }
+
+    /// Execute a batch into a caller-provided buffer.
+    pub fn run_into<D: Datapath + ?Sized>(
+        &self,
+        dp: &D,
+        triples: &[OperandTriple],
+        out: &mut [u64],
+    ) {
+        assert_eq!(triples.len(), out.len(), "batch length mismatch");
+        let n = triples.len();
+        if n == 0 {
+            return;
+        }
+        let workers = self.workers.min(n);
+        if workers <= 1 {
+            dp.fmac_batch(triples, out);
+            return;
+        }
+        let chunk = n.div_ceil(workers);
+        std::thread::scope(|s| {
+            for (ts, os) in triples.chunks(chunk).zip(out.chunks_mut(chunk)) {
+                s.spawn(move || dp.fmac_batch(ts, os));
+            }
+        });
+    }
+
+    /// Execute a batch while accumulating activity (merged across
+    /// workers; the merge is order-independent because the accumulator is
+    /// a plain sum).
+    pub fn run_tracked<D: Datapath + ?Sized>(
+        &self,
+        dp: &D,
+        triples: &[OperandTriple],
+    ) -> (Vec<u64>, ActivityAccumulator) {
+        let n = triples.len();
+        let mut out = vec![0u64; n];
+        let mut total = ActivityAccumulator::default();
+        if n == 0 {
+            return (out, total);
+        }
+        let workers = self.workers.min(n);
+        if workers <= 1 {
+            dp.fmac_batch_tracked(triples, &mut out, &mut total);
+            return (out, total);
+        }
+        let chunk = n.div_ceil(workers);
+        std::thread::scope(|s| {
+            let mut handles = Vec::new();
+            for (ts, os) in triples.chunks(chunk).zip(out.chunks_mut(chunk)) {
+                handles.push(s.spawn(move || {
+                    let mut acc = ActivityAccumulator::default();
+                    dp.fmac_batch_tracked(ts, os, &mut acc);
+                    acc
+                }));
+            }
+            for h in handles {
+                total.merge(&h.join().expect("engine worker panicked"));
+            }
+        });
+        (out, total)
+    }
+
+    /// Word-level execution of a unit with a sampled gate-level
+    /// cross-check: every `sample_every`-th operand is re-executed through
+    /// the structural datapath and compared bit-for-bit. This is the
+    /// release-build guard on the word-level tier's bit-identity claim.
+    /// The gate-level sample runs through the executor too, so the check
+    /// does not serialize the call at small strides.
+    pub fn run_checked(
+        &self,
+        unit: &FpuUnit,
+        triples: &[OperandTriple],
+        sample_every: usize,
+    ) -> (Vec<u64>, CrossCheck) {
+        let word = WordUnit::of(unit);
+        let out = self.run(&word, triples);
+        let step = sample_every.max(1);
+        let indices: Vec<usize> = (0..triples.len()).step_by(step).collect();
+        let sampled: Vec<OperandTriple> = indices.iter().map(|&i| triples[i]).collect();
+        let gate = self.run(unit, &sampled);
+        let mut check = CrossCheck { sampled: indices.len(), mismatches: Vec::new() };
+        for (k, &i) in indices.iter().enumerate() {
+            if gate[k] != out[i] && check.mismatches.len() < CROSSCHECK_CAP {
+                check.mismatches.push(i);
+            }
+        }
+        (out, check)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workloads::throughput::{OperandMix, OperandStream};
+
+    fn sample(cfg: &FpuConfig, mix: OperandMix, n: usize, seed: u64) -> Vec<OperandTriple> {
+        OperandStream::new(cfg.precision, mix, seed).batch(n)
+    }
+
+    #[test]
+    fn tiers_bit_identical_all_presets() {
+        for cfg in FpuConfig::fpmax_units() {
+            let unit = FpuUnit::generate(&cfg);
+            let word = WordUnit::of(&unit);
+            for t in sample(&cfg, OperandMix::Anything, 3_000, 0xE16).iter() {
+                assert_eq!(
+                    unit.fmac_one(t.a, t.b, t.c),
+                    word.fmac_one(t.a, t.b, t.c),
+                    "{}: a={:#x} b={:#x} c={:#x}",
+                    cfg.name(),
+                    t.a,
+                    t.b,
+                    t.c
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn executor_matches_scalar_loop_any_worker_count() {
+        let cfg = FpuConfig::sp_fma();
+        let unit = FpuUnit::generate(&cfg);
+        let triples = sample(&cfg, OperandMix::Finite, 2_531, 7); // not a worker multiple
+        let scalar: Vec<u64> =
+            triples.iter().map(|t| unit.fmac_one(t.a, t.b, t.c)).collect();
+        for workers in [1, 2, 3, 5, 16, 64] {
+            let got = BatchExecutor::new(workers).run(&unit, &triples);
+            assert_eq!(got, scalar, "workers={workers}");
+        }
+    }
+
+    #[test]
+    fn tracked_run_merges_activity_like_serial() {
+        let cfg = FpuConfig::dp_cma();
+        let unit = FpuUnit::generate(&cfg);
+        let mut triples = sample(&cfg, OperandMix::Anything, 2_000, 11);
+        // One guaranteed special so the clock-gating counter is exercised
+        // regardless of what the random stream drew.
+        triples.push(OperandTriple { a: f64::NAN.to_bits(), b: 0, c: 0 });
+        let (bits1, acc1) = BatchExecutor::serial().run_tracked(&unit, &triples);
+        let (bits8, acc8) = BatchExecutor::new(8).run_tracked(&unit, &triples);
+        assert_eq!(bits1, bits8);
+        assert_eq!(acc1, acc8, "activity sums must be worker-count invariant");
+        assert_eq!(acc1.ops, 2_001);
+        assert!(acc1.tree_toggles > 0);
+        assert!(acc1.special_ops > 0, "the NaN op must take the special path");
+    }
+
+    #[test]
+    fn word_level_tracks_special_fraction() {
+        let cfg = FpuConfig::sp_fma();
+        let unit = FpuUnit::generate(&cfg);
+        let triples = sample(&cfg, OperandMix::Anything, 4_000, 23);
+        let (_, gate) = BatchExecutor::serial().run_tracked(&unit, &triples);
+        let word = WordUnit::of(&unit);
+        let (_, wacc) = BatchExecutor::serial().run_tracked(&word, &triples);
+        // Word level sees exactly the same clock-gating decisions and the
+        // same Booth recoding — digit statistics must agree exactly.
+        assert_eq!(gate.special_ops, wacc.special_ops);
+        assert_eq!(gate.ops, wacc.ops);
+        assert_eq!(gate.digits, wacc.digits);
+        assert_eq!(gate.nonzero_digits, wacc.nonzero_digits);
+        // ... but word level carries no gate toggles.
+        assert_eq!(wacc.tree_toggles, 0);
+        assert_eq!(wacc.tree_fa_ops, 0);
+    }
+
+    #[test]
+    fn run_checked_clean_on_all_presets() {
+        for cfg in FpuConfig::fpmax_units() {
+            let unit = FpuUnit::generate(&cfg);
+            let triples = sample(&cfg, OperandMix::Anything, 5_000, 0xC0FFEE);
+            let (out, check) = BatchExecutor::new(4).run_checked(&unit, &triples, 37);
+            assert!(check.clean(), "{}: {:?}", cfg.name(), check.mismatches);
+            assert_eq!(check.sampled, triples.len().div_ceil(37));
+            assert_eq!(out.len(), triples.len());
+        }
+    }
+
+    #[test]
+    fn golden_fma_is_fused_spec() {
+        let g = GoldenFma { format: Format::SP };
+        let a = 1.0f32 + 2f32.powi(-12);
+        let c = -(1.0f32 + 2f32.powi(-11));
+        let r = g.fmac_one(a.to_bits() as u64, a.to_bits() as u64, c.to_bits() as u64);
+        assert_eq!(f32::from_bits(r as u32), 2f32.powi(-24)); // cascade would give 0
+    }
+
+    #[test]
+    fn activity_scale_tracks_operand_density() {
+        let cfg = FpuConfig::sp_fma();
+        let unit = FpuUnit::generate(&cfg);
+        let s = *unit.structure();
+        let dense = OperandTriple {
+            a: 0x3fff_ffff,
+            b: 0x3faa_aaaa,
+            c: 0x3f80_0000,
+        };
+        let quiet = OperandTriple { a: 0x3f80_0000, b: 0x0040_0000, c: 0 };
+        let mut acc_dense = ActivityAccumulator::default();
+        let mut acc_quiet = ActivityAccumulator::default();
+        for _ in 0..64 {
+            unit.fmac_one_tracked(dense.a, dense.b, dense.c, &mut acc_dense);
+            unit.fmac_one_tracked(quiet.a, quiet.b, quiet.c, &mut acc_quiet);
+        }
+        assert!(acc_dense.activity_scale(&s) > acc_quiet.activity_scale(&s));
+        // Empty accumulator is neutral.
+        assert_eq!(ActivityAccumulator::default().activity_scale(&s), 1.0);
+    }
+
+    #[test]
+    fn unit_datapath_binds_fidelity() {
+        let cfg = FpuConfig::dp_fma();
+        let unit = FpuUnit::generate(&cfg);
+        let gate = UnitDatapath::new(&unit, Fidelity::GateLevel);
+        let word = UnitDatapath::new(&unit, Fidelity::WordLevel);
+        assert_eq!(gate.fidelity(), Fidelity::GateLevel);
+        assert_eq!(word.fidelity(), Fidelity::WordLevel);
+        assert!(gate.label().contains("gate") && word.label().contains("word"));
+        assert_eq!(
+            Datapath::structure(&gate).unwrap(),
+            Datapath::structure(&word).unwrap()
+        );
+        let t = OperandTriple {
+            a: 1.5f64.to_bits(),
+            b: 2.0f64.to_bits(),
+            c: 0.25f64.to_bits(),
+        };
+        assert_eq!(gate.fmac_one(t.a, t.b, t.c), word.fmac_one(t.a, t.b, t.c));
+    }
+
+    #[test]
+    fn default_batch_covers_every_slot() {
+        let cfg = FpuConfig::sp_cma();
+        let word = WordUnit::generate(&cfg);
+        let triples = sample(&cfg, OperandMix::Finite, 1_357, 3);
+        let mut out = vec![u64::MAX; triples.len()];
+        word.fmac_batch(&triples, &mut out);
+        for (i, (t, &o)) in triples.iter().zip(out.iter()).enumerate() {
+            assert_eq!(o, word.fmac_one(t.a, t.b, t.c), "slot {i}");
+        }
+    }
+}

@@ -25,10 +25,16 @@
 //! pipeline depths) and returns a unit whose *numerics* are bit-exact
 //! IEEE-754 and whose *structure report* feeds the timing and energy
 //! models.
+//!
+//! High-volume execution goes through [`engine`]: one [`Datapath`] trait
+//! over the generated units (gate-level) and their word-level tier, with
+//! a thread-parallel [`BatchExecutor`] and a unified
+//! [`ActivityAccumulator`] feeding the energy model.
 
 pub mod booth;
 pub mod cma;
 pub mod csa;
+pub mod engine;
 pub mod fma;
 pub mod fp;
 pub mod generator;
@@ -37,6 +43,13 @@ pub mod rounding;
 pub mod softfloat;
 pub mod tree;
 
+pub use engine::{
+    ActivityAccumulator, BatchExecutor, CrossCheck, Datapath, Fidelity, GoldenFma, UnitDatapath,
+    WordUnit,
+};
 pub use fp::{decode, encode_finite, Class, Decoded, Format, Precision};
 pub use generator::{FpuConfig, FpuKind, FpuUnit, StructureReport};
 pub use rounding::{Flags, RoundMode, Rounded};
+
+#[cfg(test)]
+mod tests;

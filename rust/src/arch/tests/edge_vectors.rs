@@ -1,0 +1,223 @@
+//! FMA edge-case vectors ported from cranelift's `fma.clif` run-tests
+//! (retrieved via the wasmtime / PKU-ASAL band0 file sets): exact-zero
+//! sign rules, infinity arithmetic, NaN propagation, subnormal inputs and
+//! outputs, and the six x86_64-pc-windows-gnu regression triples from
+//! bytecodealliance/wasmtime#4512.
+//!
+//! Each vector runs through **all four Table I presets at both engine
+//! fidelity tiers**. The clif file states its expectations for *fused*
+//! f32 semantics, so those constants are asserted bit-exactly on the SP
+//! FMA preset; the CMA presets are asserted against the two-rounding
+//! cascade reference, and the DP presets against the exactly-widened f64
+//! references — on the regression vectors, which were chosen to stress
+//! single rounding, fused and cascade genuinely disagree, and that
+//! disagreement is part of what is being checked.
+
+use crate::arch::engine::{Datapath, Fidelity, UnitDatapath};
+use crate::arch::generator::{FpuConfig, FpuKind};
+use crate::arch::Precision;
+
+/// Build an f32 bit pattern from an integer hex significand and a power
+/// of two: `(-1)^neg · mant · 2^exp`. Rust has no hex-float literals, so
+/// `0x1.3b88e6p14` is written `hx(false, 0x13b88e6, 14 - 24)` (six
+/// fraction digits shift the point by 24 bits). The helper asserts the
+/// value is exactly representable, so a transcription slip cannot pass
+/// silently.
+fn hx(neg: bool, mant: u64, exp: i32) -> u32 {
+    let v = mant as f64 * 2f64.powi(exp);
+    let f = v as f32;
+    assert_eq!(f as f64, v, "constant {mant:#x}·2^{exp} is not an exact f32");
+    let f = if neg { -f } else { f };
+    f.to_bits()
+}
+
+/// One ported run-test: operands and the clif-stated fused-f32 result.
+struct ClifVector {
+    a: u32,
+    b: u32,
+    c: u32,
+    fused: u32,
+}
+
+fn v(a: u32, b: u32, c: u32, fused: u32) -> ClifVector {
+    ClifVector { a, b, c, fused }
+}
+
+#[rustfmt::skip]
+fn clif_vectors() -> Vec<ClifVector> {
+    let inf = f32::INFINITY.to_bits();
+    let ninf = f32::NEG_INFINITY.to_bits();
+    let pz = 0u32;
+    let nz = (-0.0f32).to_bits();
+    vec![
+        // Plain values.
+        // %fma_f32(0x9.0, 0x9.0, 0x9.0) == 0x1.680000p6
+        v(hx(false, 0x9, 0), hx(false, 0x9, 0), hx(false, 0x9, 0), hx(false, 0x168, -2)),
+        // %fma_f32(0x83.0, 0x2.68091p6, 0x9.88721p1) == 0x1.3b88e6p14
+        v(hx(false, 0x83, 0), hx(false, 0x268091, 6 - 20), hx(false, 0x988721, 1 - 20),
+          hx(false, 0x13b88e6, 14 - 24)),
+        // Zero sign rules.
+        v(pz, pz, pz, pz),
+        v(pz, pz, nz, pz),
+        v(pz, nz, pz, pz),
+        v(nz, pz, pz, pz),
+        // Infinity arithmetic.
+        v(ninf, ninf, pz, inf),
+        v(inf, ninf, pz, ninf),
+        v(ninf, inf, pz, ninf),
+        v(inf, ninf, ninf, ninf),
+        v(ninf, inf, ninf, ninf),
+        // F32 epsilon / max / min-positive.
+        // eps·eps + eps == 0x1.000002p-23
+        v(hx(false, 1, -23), hx(false, 1, -23), hx(false, 1, -23), hx(false, 0x1000002, -23 - 24)),
+        v(pz, pz, hx(false, 1, -23), hx(false, 1, -23)),
+        // max·max + max overflows to +Inf.
+        v(f32::MAX.to_bits(), f32::MAX.to_bits(), f32::MAX.to_bits(), inf),
+        v(pz, pz, f32::MAX.to_bits(), f32::MAX.to_bits()),
+        v(hx(false, 1, -126), hx(false, 1, -126), hx(false, 1, -126), hx(false, 1, -126)),
+        v(pz, pz, hx(false, 1, -126), hx(false, 1, -126)),
+        // F32 subnormals. 0x0.800000p-126 = 2^-127; 0x0.000002p-126 = 2^-149.
+        v(hx(false, 1, -127), hx(false, 1, -127), hx(false, 1, -127), hx(false, 1, -127)),
+        v(hx(false, 1, -127), hx(false, 1, -127), pz, pz),
+        v(pz, pz, hx(false, 1, -127), hx(false, 1, -127)),
+        v(hx(false, 1, -149), hx(false, 1, -149), hx(false, 1, -149), hx(false, 1, -149)),
+        v(hx(false, 1, -149), hx(false, 1, -149), pz, pz),
+        v(pz, pz, hx(false, 1, -149), hx(false, 1, -149)),
+        // x86_64-pc-windows-gnu regression vectors (wasmtime #4512).
+        v(hx(false, 1, 100), hx(false, 1, 100), ninf, ninf),
+        v(hx(false, 0x1fffffe, -1), hx(false, 0x1000004, 28 - 24), hx(false, 0x1fc, 5 - 8),
+          hx(false, 0x1000002, 52 - 24)),
+        v(hx(false, 0x184ae3, 125 - 20), hx(false, 0x16, -141 - 4), hx(false, 1, -149),
+          hx(false, 0x10b37c2, -15 - 24)),
+        v(hx(false, 0x100001, 50 - 20), hx(false, 0x11, 50 - 4), hx(false, 1, -149),
+          hx(false, 0x1100012, 100 - 24)),
+        v(hx(false, 0x1000002, 50 - 24), hx(false, 0x18, 50 - 4), hx(true, 1, -149),
+          hx(false, 0x1800002, 100 - 24)),
+        v(hx(false, 0x183bd78, 4 - 24), hx(true, 0x1c, 118 - 4), hx(true, 0x1344108, -2 - 24),
+          hx(true, 0x15345ca, 123 - 24)),
+    ]
+}
+
+/// The `%fma_is_nan_f32` vectors: any result is acceptable as long as it
+/// is a NaN.
+fn clif_nan_vectors() -> Vec<(u32, u32, u32)> {
+    let inf = f32::INFINITY.to_bits();
+    let ninf = f32::NEG_INFINITY.to_bits();
+    let nan = f32::NAN.to_bits();
+    let nnan = (-f32::NAN).to_bits();
+    vec![
+        (inf, ninf, inf),
+        (ninf, inf, inf),
+        (ninf, ninf, ninf),
+        (nan, 0, 0),
+        (0, nan, 0),
+        (0, 0, nan),
+        (nnan, 0, 0),
+        (0, nnan, 0),
+        (0, 0, nnan),
+    ]
+}
+
+/// Every preset at every fidelity tier.
+fn all_datapaths() -> Vec<(FpuConfig, UnitDatapath)> {
+    let mut out = Vec::new();
+    for cfg in FpuConfig::fpmax_units() {
+        for fidelity in [Fidelity::GateLevel, Fidelity::WordLevel] {
+            out.push((cfg, UnitDatapath::generate(&cfg, fidelity)));
+        }
+    }
+    out
+}
+
+/// Host-computed reference for one preset on (widened) clif operands.
+fn preset_reference(cfg: &FpuConfig, a: u32, b: u32, c: u32) -> u64 {
+    let (fa, fb, fc) = (f32::from_bits(a), f32::from_bits(b), f32::from_bits(c));
+    match (cfg.precision, cfg.kind) {
+        (Precision::Single, FpuKind::Fma) => fa.mul_add(fb, fc).to_bits() as u64,
+        (Precision::Single, FpuKind::Cma) => (fa * fb + fc).to_bits() as u64,
+        // Widening f32 → f64 is exact, so the DP references are the same
+        // mathematical operands.
+        (Precision::Double, FpuKind::Fma) => {
+            (fa as f64).mul_add(fb as f64, fc as f64).to_bits()
+        }
+        (Precision::Double, FpuKind::Cma) => ((fa as f64) * (fb as f64) + (fc as f64)).to_bits(),
+    }
+}
+
+/// Lift f32 operand bits into the operand encoding a preset consumes.
+fn widen(cfg: &FpuConfig, bits: u32) -> u64 {
+    match cfg.precision {
+        Precision::Single => bits as u64,
+        Precision::Double => (f32::from_bits(bits) as f64).to_bits(),
+    }
+}
+
+#[test]
+fn clif_fused_expectations_hold_on_sp_fma_both_tiers() {
+    let cfg = FpuConfig::sp_fma();
+    for fidelity in [Fidelity::GateLevel, Fidelity::WordLevel] {
+        let dp = UnitDatapath::generate(&cfg, fidelity);
+        for (i, t) in clif_vectors().iter().enumerate() {
+            let got = dp.fmac_one(t.a as u64, t.b as u64, t.c as u64) as u32;
+            assert_eq!(
+                got, t.fused,
+                "vector {i} ({fidelity:?}): fma({:#x},{:#x},{:#x}) = {got:#x}, clif says {:#x}",
+                t.a, t.b, t.c, t.fused
+            );
+        }
+    }
+}
+
+#[test]
+fn clif_vectors_all_presets_both_tiers_match_references() {
+    for (cfg, dp) in all_datapaths() {
+        for (i, t) in clif_vectors().iter().enumerate() {
+            let (a, b, c) = (widen(&cfg, t.a), widen(&cfg, t.b), widen(&cfg, t.c));
+            let got = dp.fmac_one(a, b, c);
+            let want = preset_reference(&cfg, t.a, t.b, t.c);
+            assert_eq!(
+                got,
+                want,
+                "vector {i} on {} at {:?}",
+                cfg.name(),
+                dp.fidelity()
+            );
+        }
+    }
+}
+
+#[test]
+fn clif_regression_vectors_discriminate_fused_from_cascade() {
+    // The #4512 triple below was constructed so that a double rounding
+    // gives a different answer — confirm our CMA presets actually take
+    // the cascade result, not the fused one.
+    let a = hx(false, 0x1fffffe, -1);
+    let b = hx(false, 0x1000004, 28 - 24);
+    let c = hx(false, 0x1fc, 5 - 8);
+    let fused = f32::from_bits(a).mul_add(f32::from_bits(b), f32::from_bits(c));
+    let cascade = f32::from_bits(a) * f32::from_bits(b) + f32::from_bits(c);
+    assert_ne!(fused.to_bits(), cascade.to_bits(), "vector no longer discriminates");
+    let sp_cma = UnitDatapath::generate(&FpuConfig::sp_cma(), Fidelity::GateLevel);
+    assert_eq!(
+        sp_cma.fmac_one(a as u64, b as u64, c as u64) as u32,
+        cascade.to_bits()
+    );
+}
+
+#[test]
+fn clif_nan_vectors_produce_nan_on_every_preset_and_tier() {
+    for (cfg, dp) in all_datapaths() {
+        let fmt = cfg.precision.format();
+        for (i, &(a, b, c)) in clif_nan_vectors().iter().enumerate() {
+            let got = dp.fmac_one(widen(&cfg, a), widen(&cfg, b), widen(&cfg, c));
+            let class = crate::arch::decode(fmt, got).class;
+            assert_eq!(
+                class,
+                crate::arch::Class::Nan,
+                "NaN vector {i} on {} at {:?}: got {got:#x}",
+                cfg.name(),
+                dp.fidelity()
+            );
+        }
+    }
+}

@@ -1,0 +1,9 @@
+//! Architecture-level cross-implementation test suites (compiled only
+//! under `cfg(test)` via the declaration in `arch/mod.rs`).
+//!
+//! * [`edge_vectors`] — the cranelift `fma.clif` run-test vectors
+//!   (±0, ±Inf, NaN propagation, subnormals, and the six x86_64
+//!   regression cases), executed through all four Table I presets at
+//!   both engine fidelity tiers.
+
+mod edge_vectors;

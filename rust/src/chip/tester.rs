@@ -8,11 +8,13 @@
 //! (accumulation tests), with cycle accounting per burst. All four
 //! generated FPUs live on the chip simultaneously, as fabricated.
 
+use crate::arch::engine::{reference_fmac, Datapath};
 use crate::arch::fp::Precision;
 use crate::arch::generator::{FpuConfig, FpuUnit};
 use crate::arch::rounding::RoundMode;
 use crate::pipesim::sim::LatencyModel;
 use crate::pipesim::trace::DepKind;
+use crate::workloads::throughput::OperandTriple;
 
 use super::isa::{Instruction, Op, SrcSel, UnitSel};
 use super::jtag::JtagPort;
@@ -112,6 +114,55 @@ impl FpMaxChip {
             } else {
                 1
             };
+
+            // Independent FMAC bursts (every operand from RAM or a
+            // constant, default rounding) have no sequential dependence:
+            // the sequencer gathers the whole burst and issues it through
+            // the unified execution engine in one go, exactly as the
+            // silicon streams one op per cycle. Forwarding bursts and
+            // explicit-rounding programs stay on the scalar path below.
+            let independent_burst = matches!(ins.op, Op::Fmac)
+                && !uses_fwd_ab
+                && !uses_fwd_c
+                && ins.rounding == RoundMode::NearestEven;
+            if independent_burst {
+                let count = ins.repeat as usize + 1;
+                let base = ins.base_addr as usize;
+                let mut triples = Vec::with_capacity(count);
+                for i in 0..count {
+                    let addr = base + i;
+                    let a = match ins.src_a {
+                        SrcSel::Ram => self.stim_a.read(addr)?,
+                        SrcSel::Zero => 0,
+                        SrcSel::One => one,
+                        SrcSel::Forward => unreachable!("excluded above"),
+                    };
+                    let b = match ins.src_b {
+                        SrcSel::Ram => self.stim_b.read(addr)?,
+                        SrcSel::Zero => 0,
+                        SrcSel::One => one,
+                        SrcSel::Forward => unreachable!("excluded above"),
+                    };
+                    let c = match ins.src_c {
+                        SrcSel::Ram => self.stim_c.read(addr)?,
+                        SrcSel::Zero => 0,
+                        SrcSel::One => one,
+                        SrcSel::Forward => unreachable!("excluded above"),
+                    };
+                    triples.push(OperandTriple { a, b, c });
+                }
+                let mut bits = vec![0u64; count];
+                unit.fmac_batch(&triples, &mut bits);
+                for &r in &bits {
+                    self.result.write(result_wptr, r)?;
+                    result_wptr += 1;
+                }
+                stats.ops += count as u64;
+                stats.cycles += issue_dist * count as u64;
+                stats.cycles += lat.full as u64;
+                continue;
+            }
+
             for i in 0..=(ins.repeat as usize) {
                 let addr = ins.base_addr as usize + i;
                 let fetch = |ram: &mut RamBank, sel: SrcSel, fwd: u64| -> crate::Result<u64> {
@@ -155,20 +206,17 @@ impl FpMaxChip {
 }
 
 /// Round-mode helper shared by self-test drivers: the expected result of
-/// an instruction's op through the golden softfloat model.
+/// an instruction's op through the golden softfloat model. FMAC
+/// expectations come from the engine's shared word-level spec
+/// ([`reference_fmac`]), so chip, coordinator, and word-level tier can
+/// never drift apart.
 pub fn expected_result(unit: &FpuUnit, mode: RoundMode, a: u64, b: u64, c: u64, op: Op) -> u64 {
     use crate::arch::softfloat;
-    match (op, unit.config.kind) {
-        (Op::Fmac, crate::arch::generator::FpuKind::Fma) => {
-            softfloat::fma(unit.format, mode, a, b, c).bits
-        }
-        (Op::Fmac, crate::arch::generator::FpuKind::Cma) => {
-            let p = softfloat::mul(unit.format, mode, a, b);
-            softfloat::add(unit.format, mode, p.bits, c).bits
-        }
-        (Op::Mul, _) => softfloat::mul(unit.format, mode, a, b).bits,
-        (Op::Add, _) => softfloat::add(unit.format, mode, a, c).bits,
-        (Op::Nop, _) => 0,
+    match op {
+        Op::Fmac => reference_fmac(unit.config.kind, unit.format, mode, a, b, c).bits,
+        Op::Mul => softfloat::mul(unit.format, mode, a, b).bits,
+        Op::Add => softfloat::add(unit.format, mode, a, c).bits,
+        Op::Nop => 0,
     }
 }
 

@@ -8,21 +8,23 @@
 //!   L1/L2 (build time)        L3 (run time, this module)
 //!   pallas kernel ──aot──►  artifact ──PJRT──► result bits ─┐
 //!                                                           ├─ compare
-//!   FpuConfig ──generate──► FpuUnit ──datapath─► result bits┘
+//!   FpuConfig ──generate──► FpuUnit ──engine──► result bits┘
 //! ```
 //!
-//! The Rust side is parallelized over worker threads (std::thread::scope
-//! — the offline environment has no tokio; the workload is pure CPU
-//! compute, so a scoped fork-join is the right shape anyway).
+//! All Rust-side execution goes through the unified
+//! [`crate::arch::engine::BatchExecutor`] — the coordinator no longer
+//! carries a private worker loop. The gate-level datapath is the device
+//! under test; its spec is the word-level tier of the same unit
+//! (Table-I semantics), and the PJRT artifact is checked against the
+//! fused golden softfloat ([`GoldenFma`]).
 
 use std::time::Instant;
 
+use crate::arch::engine::{BatchExecutor, Fidelity, GoldenFma, UnitDatapath};
 use crate::arch::fp::{decode, Class, Precision};
 use crate::arch::generator::{FpuKind, FpuUnit};
-use crate::arch::rounding::RoundMode;
-use crate::arch::softfloat;
 use crate::runtime::FmacArtifact;
-use crate::workloads::throughput::OperandTriple;
+use crate::workloads::throughput::{OperandBatch, OperandTriple};
 
 /// One mismatch record (capped in the report).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -69,6 +71,25 @@ fn same_value(precision: Precision, x: u64, y: u64) -> bool {
 
 const MISMATCH_CAP: usize = 16;
 
+/// Scan two result streams for disagreements, capped.
+fn collect_mismatches(
+    precision: Precision,
+    triples: &[OperandTriple],
+    got: &[u64],
+    want: &[u64],
+) -> Vec<Mismatch> {
+    let mut out = Vec::new();
+    for (i, t) in triples.iter().enumerate() {
+        if !same_value(precision, got[i], want[i]) {
+            out.push(Mismatch { index: i, a: t.a, b: t.b, c: t.c, got: got[i], want: want[i] });
+            if out.len() >= MISMATCH_CAP {
+                break;
+            }
+        }
+    }
+    out
+}
+
 /// Run `triples` through the Rust datapath of `unit` and through the
 /// PJRT `artifact`, cross-checking both against the golden softfloat.
 pub fn verify_batch(
@@ -84,127 +105,57 @@ pub fn verify_batch(
         unit.config.precision
     );
     let precision = unit.config.precision;
-    let fmt = precision.format();
-    let n = triples.len();
-    let a: Vec<u64> = triples.iter().map(|t| t.a).collect();
-    let b: Vec<u64> = triples.iter().map(|t| t.b).collect();
-    let c: Vec<u64> = triples.iter().map(|t| t.c).collect();
+    let soa = OperandBatch::from_triples(triples);
 
     // --- PJRT pass -------------------------------------------------
     let t0 = Instant::now();
-    let out = artifact.fmac(&a, &b, &c)?;
+    let out = artifact.fmac(&soa.a, &soa.b, &soa.c)?;
     let pjrt_secs = t0.elapsed().as_secs_f64();
 
-    // --- Rust datapath pass (parallel fork-join) ---------------------
+    // --- Rust passes through the engine -------------------------------
+    let exec = BatchExecutor::new(workers);
     let t1 = Instant::now();
-    let workers = workers.max(1).min(n.max(1));
-    let mut datapath = vec![0u64; n];
-    let chunk = n.div_ceil(workers);
-    std::thread::scope(|s| {
-        for (i, slot) in datapath.chunks_mut(chunk).enumerate() {
-            let (a, b, c) = (&a, &b, &c);
-            s.spawn(move || {
-                let base = i * chunk;
-                for (j, out) in slot.iter_mut().enumerate() {
-                    let k = base + j;
-                    *out = unit.fmac(a[k], b[k], c[k]).bits;
-                }
-            });
-        }
-    });
+    let datapath = exec.run(unit, triples);
     let rust_secs = t1.elapsed().as_secs_f64();
-
-    // --- Cross-checks -------------------------------------------------
-    let mut artifact_mismatches = Vec::new();
-    let mut datapath_mismatches = Vec::new();
-    for i in 0..n {
-        // The artifact implements the fused op; golden = softfloat::fma.
-        let fused = softfloat::fma(fmt, RoundMode::NearestEven, a[i], b[i], c[i]).bits;
-        if !same_value(precision, out.bits[i], fused) && artifact_mismatches.len() < MISMATCH_CAP {
-            artifact_mismatches.push(Mismatch {
-                index: i,
-                a: a[i],
-                b: b[i],
-                c: c[i],
-                got: out.bits[i],
-                want: fused,
-            });
-        }
-        // The unit implements its own Table-I semantics.
-        let unit_want = match unit.config.kind {
-            FpuKind::Fma => fused,
-            FpuKind::Cma => {
-                let p = softfloat::mul(fmt, RoundMode::NearestEven, a[i], b[i]);
-                softfloat::add(fmt, RoundMode::NearestEven, p.bits, c[i]).bits
-            }
-        };
-        if !same_value(precision, datapath[i], unit_want)
-            && datapath_mismatches.len() < MISMATCH_CAP
-        {
-            datapath_mismatches.push(Mismatch {
-                index: i,
-                a: a[i],
-                b: b[i],
-                c: c[i],
-                got: datapath[i],
-                want: unit_want,
-            });
-        }
-    }
+    let fused = exec.run(&GoldenFma { format: precision.format() }, triples);
+    // CMA units are specified by the cascade; FMA units by the fused
+    // golden results already in hand.
+    let cascade = match unit.config.kind {
+        FpuKind::Fma => None,
+        FpuKind::Cma => Some(exec.run(&UnitDatapath::new(unit, Fidelity::WordLevel), triples)),
+    };
+    let unit_want: &[u64] = cascade.as_deref().unwrap_or(&fused);
 
     Ok(VerifyReport {
-        ops: n,
-        artifact_mismatches,
-        datapath_mismatches,
+        ops: triples.len(),
+        artifact_mismatches: collect_mismatches(precision, triples, &out.bits, &fused),
+        datapath_mismatches: collect_mismatches(precision, triples, &datapath, unit_want),
         artifact_toggles: out.toggles,
         rust_secs,
         pjrt_secs,
     })
 }
 
-/// Pure-Rust verification (no artifact): unit datapath vs golden
-/// softfloat. Used where PJRT is unavailable and by the test suite.
-pub fn verify_datapath_only(unit: &FpuUnit, triples: &[OperandTriple], workers: usize) -> VerifyReport {
+/// Pure-Rust verification (no artifact): the gate-level datapath against
+/// its word-level spec, both driven by the shared executor. Used where
+/// PJRT is unavailable and by the test suite.
+pub fn verify_datapath_only(
+    unit: &FpuUnit,
+    triples: &[OperandTriple],
+    workers: usize,
+) -> VerifyReport {
     let precision = unit.config.precision;
-    let fmt = precision.format();
-    let n = triples.len();
+    let exec = BatchExecutor::new(workers);
     let t1 = Instant::now();
-    let workers = workers.max(1).min(n.max(1));
-    let chunk = n.div_ceil(workers);
-    let mut mismatches: Vec<Vec<Mismatch>> = Vec::new();
-    std::thread::scope(|s| {
-        let mut handles = Vec::new();
-        for (i, ts) in triples.chunks(chunk).enumerate() {
-            handles.push(s.spawn(move || {
-                let mut local = Vec::new();
-                for (j, t) in ts.iter().enumerate() {
-                    let got = unit.fmac(t.a, t.b, t.c).bits;
-                    let want = match unit.config.kind {
-                        FpuKind::Fma => {
-                            softfloat::fma(fmt, RoundMode::NearestEven, t.a, t.b, t.c).bits
-                        }
-                        FpuKind::Cma => {
-                            let p = softfloat::mul(fmt, RoundMode::NearestEven, t.a, t.b);
-                            softfloat::add(fmt, RoundMode::NearestEven, p.bits, t.c).bits
-                        }
-                    };
-                    if !same_value(precision, got, want) && local.len() < MISMATCH_CAP {
-                        local.push(Mismatch { index: i * chunk + j, a: t.a, b: t.b, c: t.c, got, want });
-                    }
-                }
-                local
-            }));
-        }
-        for h in handles {
-            mismatches.push(h.join().expect("worker panicked"));
-        }
-    });
+    let got = exec.run(unit, triples);
+    let rust_secs = t1.elapsed().as_secs_f64();
+    let want = exec.run(&UnitDatapath::new(unit, Fidelity::WordLevel), triples);
     VerifyReport {
-        ops: n,
+        ops: triples.len(),
         artifact_mismatches: Vec::new(),
-        datapath_mismatches: mismatches.into_iter().flatten().take(MISMATCH_CAP).collect(),
+        datapath_mismatches: collect_mismatches(precision, triples, &got, &want),
         artifact_toggles: 0,
-        rust_secs: t1.elapsed().as_secs_f64(),
+        rust_secs,
         pjrt_secs: 0.0,
     }
 }
@@ -257,5 +208,24 @@ mod tests {
         assert!(same_value(Precision::Single, qnan, other_nan));
         assert!(!same_value(Precision::Single, qnan, 0x7f80_0000));
         assert!(same_value(Precision::Single, 5, 5));
+    }
+
+    #[test]
+    fn mismatches_are_reported_and_capped() {
+        // Compare a stream against deliberately corrupted expectations.
+        let cfg = FpuConfig::sp_fma();
+        let unit = FpuUnit::generate(&cfg);
+        let mut s = OperandStream::new(cfg.precision, OperandMix::Finite, 9);
+        let triples = s.batch(100);
+        let exec = BatchExecutor::serial();
+        let got = exec.run(&unit, &triples);
+        let mut want = got.clone();
+        for w in want.iter_mut() {
+            *w ^= 1; // flip the LSB of every expectation
+        }
+        let m = collect_mismatches(cfg.precision, &triples, &got, &want);
+        assert_eq!(m.len(), MISMATCH_CAP);
+        assert_eq!(m[0].index, 0);
+        assert_eq!(m[0].got ^ 1, m[0].want);
     }
 }

@@ -6,4 +6,6 @@ pub mod pareto;
 pub mod sweep;
 
 pub use pareto::{dominates, frontier, Objective};
-pub use sweep::{arch_space, arch_sweep, voltage_bb_sweep, voltage_sweep, DsePoint};
+pub use sweep::{
+    arch_space, arch_sweep, arch_sweep_measured, voltage_bb_sweep, voltage_sweep, DsePoint,
+};

@@ -3,11 +3,13 @@
 //! sweeps of a chosen design (the square-marked and BB curves).
 
 use crate::arch::booth::BoothRadix;
+use crate::arch::engine::{BatchExecutor, Fidelity, UnitDatapath};
 use crate::arch::fp::Precision;
 use crate::arch::generator::{FpuConfig, FpuKind, FpuUnit};
 use crate::arch::tree::TreeKind;
-use crate::energy::power::{evaluate, EfficiencyPoint};
+use crate::energy::power::{evaluate, evaluate_measured, EfficiencyPoint};
 use crate::energy::tech::{OperatingPoint, Technology};
+use crate::workloads::throughput::{OperandMix, OperandStream, OperandTriple};
 
 use super::pareto::Objective;
 
@@ -72,6 +74,41 @@ pub fn arch_sweep(
         .filter_map(|cfg| {
             let unit = FpuUnit::generate(&cfg);
             evaluate(&unit, tech, op, 1.0).map(|eff| DsePoint { config: cfg, eff })
+        })
+        .collect()
+}
+
+/// Data-driven architecture sweep: every candidate executes a shared
+/// operand sample through the unified engine before being scored, so the
+/// energy axis uses *measured* datapath activity instead of the fixed
+/// average-activity assumption.
+///
+/// The sample runs **word-level** by default (`fidelity`): results stay
+/// bit-identical while the per-3:2-row gate simulation — the only
+/// expensive part of scoring ~42 designs × thousands of operands — is
+/// skipped, which is what makes activity-aware Fig. 3 / Fig. 4
+/// regeneration tractable. Pass [`Fidelity::GateLevel`] to score from
+/// true toggle counts instead (an order of magnitude slower).
+pub fn arch_sweep_measured(
+    precision: Precision,
+    kind: FpuKind,
+    tech: &Technology,
+    op: OperatingPoint,
+    sample_ops: usize,
+    fidelity: Fidelity,
+    seed: u64,
+) -> Vec<DsePoint> {
+    let triples: Vec<OperandTriple> =
+        OperandStream::new(precision, OperandMix::Finite, seed).batch(sample_ops);
+    let exec = BatchExecutor::auto();
+    arch_space(precision, kind)
+        .into_iter()
+        .filter_map(|cfg| {
+            let unit = FpuUnit::generate(&cfg);
+            let dp = UnitDatapath::new(&unit, fidelity);
+            let (_, activity) = exec.run_tracked(&dp, &triples);
+            evaluate_measured(&unit, tech, op, 1.0, &activity)
+                .map(|eff| DsePoint { config: cfg, eff })
         })
         .collect()
 }
@@ -201,6 +238,31 @@ mod tests {
         // The frontier is sorted by ascending performance.
         for w in joint.windows(2) {
             assert!(w[0].gflops_per_mm2 < w[1].gflops_per_mm2);
+        }
+    }
+
+    #[test]
+    fn measured_sweep_covers_space_and_tracks_static_sweep() {
+        let tech = Technology::fdsoi28();
+        let op = OperatingPoint::new(1.0, 0.0);
+        let pts = arch_sweep(Precision::Single, FpuKind::Fma, &tech, op);
+        let measured = arch_sweep_measured(
+            Precision::Single,
+            FpuKind::Fma,
+            &tech,
+            op,
+            500,
+            Fidelity::WordLevel,
+            42,
+        );
+        // Same candidate set, same frequencies; only the energy axis may
+        // shift (by the bounded activity scale).
+        assert_eq!(measured.len(), pts.len());
+        for (m, p) in measured.iter().zip(&pts) {
+            assert_eq!(m.config, p.config);
+            assert!((m.eff.freq_ghz - p.eff.freq_ghz).abs() < 1e-12);
+            let ratio = m.eff.pj_per_flop / p.eff.pj_per_flop;
+            assert!((0.3..=2.5).contains(&ratio), "{:?}: ratio {ratio}", m.config);
         }
     }
 

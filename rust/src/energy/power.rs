@@ -6,6 +6,7 @@
 //! operating point) — "GFLOPS/W" = 2·f·u / P_total, "GFLOPS/mm²" =
 //! 2·f·u / area — with utilization u = 1 unless stated.
 
+use crate::arch::engine::ActivityAccumulator;
 use crate::arch::generator::{FpuConfig, FpuUnit};
 use crate::timing::{self, Timing};
 
@@ -58,6 +59,24 @@ pub fn evaluate(
     Some(evaluate_with(&unit.config, &cost, &t, tech, op, utilization))
 }
 
+/// Evaluate a unit with a **measured** activity scale from the unified
+/// execution engine's [`ActivityAccumulator`] — this is how batches that
+/// actually ran (coordinator verifications, DSE operand samples, chip
+/// programs) feed their observed datapath activity back into the energy
+/// model, replacing the old fixed average-activity assumption.
+pub fn evaluate_measured(
+    unit: &FpuUnit,
+    tech: &Technology,
+    op: OperatingPoint,
+    utilization: f64,
+    activity: &ActivityAccumulator,
+) -> Option<EfficiencyPoint> {
+    let cost = unit_cost(unit);
+    let t = timing::timing(&unit.config, tech, op)?;
+    let scale = activity.activity_scale(unit.structure());
+    Some(evaluate_with_activity(&cost, &t, tech, op, utilization, scale))
+}
+
 /// Evaluation core for callers that already computed cost/timing (the
 /// DSE sweep reuses both across thousands of points).
 pub fn evaluate_with(
@@ -68,8 +87,22 @@ pub fn evaluate_with(
     op: OperatingPoint,
     utilization: f64,
 ) -> EfficiencyPoint {
+    evaluate_with_activity(cost, t, tech, op, utilization, 1.0)
+}
+
+/// Evaluation core with an explicit data-activity scale (1.0 = the
+/// calibrated average-operand activity; see
+/// [`ActivityAccumulator::activity_scale`]).
+pub fn evaluate_with_activity(
+    cost: &UnitCost,
+    t: &Timing,
+    tech: &Technology,
+    op: OperatingPoint,
+    utilization: f64,
+    activity_scale: f64,
+) -> EfficiencyPoint {
     assert!((0.0..=1.0).contains(&utilization), "utilization out of range");
-    let e_op_pj = cost.dyn_energy_pj(op.vdd, 1.0);
+    let e_op_pj = cost.dyn_energy_pj(op.vdd, activity_scale);
     // pJ · Gop/s = mW.
     let dynamic_mw = e_op_pj * t.freq_ghz * utilization;
     let leakage_mw = tech.leakage_mw(cost.area_mm2, op);
@@ -196,6 +229,36 @@ mod tests {
         assert!(best_v > 0.37 && best_v < 1.0, "energy optimum at {best_v:.2} V");
         let nominal = evaluate(&unit, &tech, OperatingPoint::new(0.9, 1.2), 1.0).unwrap();
         assert!(best_e < nominal.pj_per_flop);
+    }
+
+    #[test]
+    fn measured_activity_feeds_energy() {
+        use crate::arch::engine::BatchExecutor;
+        use crate::workloads::throughput::{OperandMix, OperandStream};
+        let cfg = FpuConfig::sp_fma();
+        let unit = FpuUnit::generate(&cfg);
+        let tech = Technology::fdsoi28();
+        let op = nominal_op(&cfg);
+        let triples =
+            OperandStream::new(cfg.precision, OperandMix::Finite, 42).batch(2_000);
+        let (_, acc) = BatchExecutor::new(4).run_tracked(&unit, &triples);
+        assert_eq!(acc.ops, 2_000);
+        let measured = evaluate_measured(&unit, &tech, op, 1.0, &acc).unwrap();
+        let modeled = evaluate(&unit, &tech, op, 1.0).unwrap();
+        // Leakage is activity-independent; dynamic power moves with the
+        // measured toggle scale (register clocking stays fixed, so the
+        // ratio is bounded by the pure-logic scale).
+        assert!((measured.power.leakage_mw - modeled.power.leakage_mw).abs() < 1e-12);
+        let scale = acc.activity_scale(unit.structure());
+        assert!(scale > 0.0 && scale <= 2.0, "scale {scale}");
+        let expect_lower = scale < 1.0;
+        assert_eq!(
+            measured.power.dynamic_mw < modeled.power.dynamic_mw,
+            expect_lower,
+            "dynamic {} vs modeled {} at scale {scale}",
+            measured.power.dynamic_mw,
+            modeled.power.dynamic_mw
+        );
     }
 
     #[test]

@@ -13,6 +13,15 @@
 //!   compressor trees (Wallace / array / ZM), and the bit-accurate FMA and
 //!   CMA datapaths, all generated from an [`arch::FpuConfig`] the way FPGen
 //!   generates RTL.
+//! * [`arch::engine`] — the unified batched execution layer on top of the
+//!   datapaths: the [`arch::engine::Datapath`] trait (scalar + chunked
+//!   batch execution, activity accumulation), two **fidelity tiers**
+//!   ([`arch::engine::Fidelity::GateLevel`] simulates every 3:2 row and
+//!   counts toggles; [`arch::engine::Fidelity::WordLevel`] skips the gate
+//!   simulation but stays bit-identical, guarded by sampled cross-checks),
+//!   and the thread-parallel [`arch::engine::BatchExecutor`] that the
+//!   coordinator, the DSE sweeps, the chip sequencer, and the benches all
+//!   issue through.
 //! * [`timing`] — FO4-based delay model: per-component logic depth, the
 //!   α-power-law FO4(V_DD, V_t), and pipeline stage partitioning.
 //! * [`energy`] — 28nm UTBB FDSOI technology model: per-component effective
@@ -51,6 +60,23 @@
 //!                   2.0f32.to_bits() as u64,
 //!                   0.25f32.to_bits() as u64);
 //! assert_eq!(f32::from_bits(r.bits as u32), 1.5 * 2.0 + 0.25);
+//! ```
+//!
+//! Batched execution through the engine (what every high-volume consumer
+//! does):
+//!
+//! ```no_run
+//! use fpmax::arch::{BatchExecutor, FpuConfig, FpuUnit};
+//! use fpmax::workloads::throughput::{OperandMix, OperandStream};
+//!
+//! let unit = FpuUnit::generate(&FpuConfig::sp_fma());
+//! let triples = OperandStream::new(
+//!     fpmax::arch::Precision::Single, OperandMix::Finite, 42).batch(1_000_000);
+//! // Word-level tier with a sampled gate-level cross-check: fast AND
+//! // provably bit-identical.
+//! let (bits, check) = BatchExecutor::auto().run_checked(&unit, &triples, 997);
+//! assert!(check.clean());
+//! assert_eq!(bits.len(), 1_000_000);
 //! ```
 
 pub mod arch;

@@ -10,9 +10,12 @@
 //! fpmax fig4   [--precision sp|dp]  # latency tradeoff curves
 //! fpmax calib                       # calibration residuals vs Table I
 //! fpmax sweep  [--precision sp|dp] [--kind fma|cma]
-//! fpmax verify [--unit sp_fma] [--ops 100000]   # datapath vs softfloat
+//! fpmax verify [--unit sp_fma] [--ops 100000] [--fidelity gate|word]
 //! fpmax selftest [--ops 65536] [--artifacts DIR] # chip + PJRT cross-check
 //! ```
+//!
+//! `verify --fidelity word` runs the batched word-level tier with a
+//! sampled gate-level cross-check — the fast path the DSE sweeps use.
 
 use fpmax::arch::fp::Precision;
 use fpmax::arch::generator::{FpuConfig, FpuKind, FpuUnit};
@@ -105,19 +108,49 @@ fn main() -> fpmax::Result<()> {
             let ops = args.get_parse("ops", 100_000usize)?;
             let seed = args.get_parse("seed", 42u64)?;
             let workers = args.get_parse("workers", num_threads())?;
+            let fidelity = match args.get("fidelity").unwrap_or("gate") {
+                "gate" => fpmax::arch::engine::Fidelity::GateLevel,
+                "word" => fpmax::arch::engine::Fidelity::WordLevel,
+                other => anyhow::bail!("--fidelity must be gate or word, got {other}"),
+            };
             let unit = FpuUnit::generate(&cfg);
             let mut stream = OperandStream::new(cfg.precision, OperandMix::Anything, seed);
             let triples = stream.batch(ops);
-            let r = coordinator::verify_datapath_only(&unit, &triples, workers);
-            println!(
-                "{}: {} ops, {} mismatches, {:.2} Mops/s ({} workers)",
-                cfg.name(),
-                r.ops,
-                r.datapath_mismatches.len(),
-                r.ops as f64 / r.rust_secs / 1e6,
-                workers
-            );
-            anyhow::ensure!(r.clean(), "datapath mismatches: {:?}", r.datapath_mismatches);
+            match fidelity {
+                fpmax::arch::engine::Fidelity::GateLevel => {
+                    let r = coordinator::verify_datapath_only(&unit, &triples, workers);
+                    println!(
+                        "{}: {} ops gate-level, {} mismatches, {:.2} Mops/s ({} workers)",
+                        cfg.name(),
+                        r.ops,
+                        r.datapath_mismatches.len(),
+                        r.ops as f64 / r.rust_secs / 1e6,
+                        workers
+                    );
+                    anyhow::ensure!(r.clean(), "datapath mismatches: {:?}", r.datapath_mismatches);
+                }
+                fpmax::arch::engine::Fidelity::WordLevel => {
+                    // Fast tier with sampled gate-level cross-check.
+                    let exec = fpmax::arch::engine::BatchExecutor::new(workers);
+                    let t0 = std::time::Instant::now();
+                    let (_, check) = exec.run_checked(&unit, &triples, 64);
+                    let secs = t0.elapsed().as_secs_f64();
+                    println!(
+                        "{}: {} ops word-level, {} gate-checked, {} mismatches, {:.2} Mops/s ({} workers)",
+                        cfg.name(),
+                        triples.len(),
+                        check.sampled,
+                        check.mismatches.len(),
+                        triples.len() as f64 / secs / 1e6,
+                        workers
+                    );
+                    anyhow::ensure!(
+                        check.clean(),
+                        "word-level diverged from gate-level at indices {:?}",
+                        check.mismatches
+                    );
+                }
+            }
         }
         Some("selftest") => {
             selftest(&args)?;

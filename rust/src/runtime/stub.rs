@@ -1,0 +1,59 @@
+//! Offline stand-in for the PJRT runtime (default build, no `pjrt`
+//! feature).
+//!
+//! API-identical to [`super::pjrt`], but [`Runtime::cpu`] always fails
+//! with a descriptive error. Callers that probe for PJRT availability
+//! (the chip self-test, the hotpath bench, the integration tests) take
+//! their documented skip path; code that merely needs the
+//! [`FmacArtifact`] type — the coordinator's cross-check plumbing —
+//! compiles unchanged.
+
+use std::path::Path;
+
+use crate::arch::fp::Precision;
+
+use super::FmacOutput;
+
+/// Placeholder for the PJRT client. No constructor succeeds, so the
+/// instance methods below are statically unreachable.
+pub struct Runtime {
+    #[allow(dead_code)]
+    sealed: std::convert::Infallible,
+}
+
+/// Placeholder artifact with the same public surface as the PJRT-backed
+/// one. The stub exposes no way to obtain one.
+pub struct FmacArtifact {
+    #[allow(dead_code)]
+    sealed: std::convert::Infallible,
+    /// Batch size baked into the artifact's shapes.
+    pub batch: usize,
+    pub precision: Precision,
+    pub name: String,
+}
+
+impl Runtime {
+    /// Always fails: the crate was built without the `pjrt` feature.
+    pub fn cpu(_artifact_dir: impl AsRef<Path>) -> crate::Result<Runtime> {
+        anyhow::bail!(
+            "PJRT support not compiled in (build with `--features pjrt` and the xla crate)"
+        )
+    }
+
+    /// Platform string (diagnostics).
+    pub fn platform(&self) -> String {
+        unreachable!("stub Runtime cannot be constructed")
+    }
+
+    /// Load and compile `<name>.hlo.txt` for the given precision.
+    pub fn load_fmac(&self, _name: &str, _precision: Precision) -> crate::Result<FmacArtifact> {
+        unreachable!("stub Runtime cannot be constructed")
+    }
+}
+
+impl FmacArtifact {
+    /// Execute the artifact over an arbitrary-length operand stream.
+    pub fn fmac(&self, _a: &[u64], _b: &[u64], _c: &[u64]) -> crate::Result<FmacOutput> {
+        unreachable!("stub FmacArtifact cannot be constructed")
+    }
+}

@@ -7,5 +7,5 @@ pub mod throughput;
 pub mod utilization;
 
 pub use specfp::Profile;
-pub use throughput::{OperandMix, OperandStream, OperandTriple};
+pub use throughput::{OperandBatch, OperandMix, OperandStream, OperandTriple};
 pub use utilization::{Segment, UtilizationProfile};

@@ -17,6 +17,50 @@ pub struct OperandTriple {
     pub c: u64,
 }
 
+/// A structure-of-arrays operand batch — the layout the PJRT artifact
+/// consumes directly and the natural unit of work for the batched
+/// execution engine ([`crate::arch::engine`]). Streams emit these so
+/// consumers stop re-splitting scalar triples into parallel arrays.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct OperandBatch {
+    pub a: Vec<u64>,
+    pub b: Vec<u64>,
+    pub c: Vec<u64>,
+}
+
+impl OperandBatch {
+    pub fn with_capacity(n: usize) -> OperandBatch {
+        OperandBatch {
+            a: Vec::with_capacity(n),
+            b: Vec::with_capacity(n),
+            c: Vec::with_capacity(n),
+        }
+    }
+
+    /// Convert from array-of-structs form.
+    pub fn from_triples(triples: &[OperandTriple]) -> OperandBatch {
+        let mut out = OperandBatch::with_capacity(triples.len());
+        for t in triples {
+            out.push(*t);
+        }
+        out
+    }
+
+    pub fn push(&mut self, t: OperandTriple) {
+        self.a.push(t.a);
+        self.b.push(t.b);
+        self.c.push(t.c);
+    }
+
+    pub fn len(&self) -> usize {
+        self.a.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.a.is_empty()
+    }
+}
+
 /// Operand distribution flavours.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum OperandMix {
@@ -52,6 +96,17 @@ impl OperandStream {
         (0..n).map(|_| self.next_triple()).collect()
     }
 
+    /// Generate a structure-of-arrays batch of `n` triples (same draw
+    /// order as [`OperandStream::batch`], so the two forms are
+    /// interchangeable at equal seeds).
+    pub fn batch_soa(&mut self, n: usize) -> OperandBatch {
+        let mut out = OperandBatch::with_capacity(n);
+        for _ in 0..n {
+            out.push(self.next_triple());
+        }
+        out
+    }
+
     fn next_operand(&mut self) -> u64 {
         match (self.precision, self.mix) {
             (Precision::Single, OperandMix::Finite) => self.rng.f32_operand() as u64,
@@ -78,6 +133,16 @@ mod tests {
         let a = OperandStream::new(Precision::Single, OperandMix::Finite, 1).batch(100);
         let b = OperandStream::new(Precision::Single, OperandMix::Finite, 1).batch(100);
         assert_eq!(a, b);
+    }
+
+    #[test]
+    fn soa_batch_matches_aos_batch() {
+        let aos = OperandStream::new(Precision::Double, OperandMix::Finite, 6).batch(257);
+        let soa = OperandStream::new(Precision::Double, OperandMix::Finite, 6).batch_soa(257);
+        assert_eq!(soa.len(), 257);
+        assert!(!soa.is_empty());
+        assert_eq!(OperandBatch::from_triples(&aos), soa);
+        assert_eq!((soa.a[100], soa.b[100], soa.c[100]), (aos[100].a, aos[100].b, aos[100].c));
     }
 
     #[test]

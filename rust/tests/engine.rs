@@ -1,0 +1,110 @@
+//! Properties of the unified batched execution engine: batch execution
+//! is bit-identical to scalar execution, fidelity tiers agree, sampled
+//! gate-level cross-checks stay clean, and activity accumulation is
+//! worker-count invariant. All randomness is seeded (in-tree driver:
+//! `util::check_cases`; proptest is unavailable offline).
+
+use fpmax::arch::engine::{BatchExecutor, Datapath, Fidelity, UnitDatapath};
+use fpmax::arch::generator::{FpuConfig, FpuUnit};
+use fpmax::util::{check_cases, Rng};
+use fpmax::workloads::throughput::{OperandMix, OperandStream, OperandTriple};
+
+/// The seeded random streams the properties run on.
+fn stream(cfg: &FpuConfig, mix: OperandMix, n: usize, seed: u64) -> Vec<OperandTriple> {
+    OperandStream::new(cfg.precision, mix, seed).batch(n)
+}
+
+#[test]
+fn prop_fmac_batch_equals_n_scalar_ops_all_presets() {
+    // The issue's core property: for random streams on all four presets,
+    // `fmac_batch` must be bit-identical to N× `fmac_one` — at both
+    // fidelity tiers, at several batch shapes that exercise the chunking.
+    for cfg in FpuConfig::fpmax_units() {
+        for fidelity in [Fidelity::GateLevel, Fidelity::WordLevel] {
+            let dp = UnitDatapath::generate(&cfg, fidelity);
+            for (seed, n) in [(0xBA7C4 ^ cfg.stages as u64, 4_097usize), (99, 1_000), (7, 33)] {
+                let triples = stream(&cfg, OperandMix::Anything, n, seed);
+                let scalar: Vec<u64> =
+                    triples.iter().map(|t| dp.fmac_one(t.a, t.b, t.c)).collect();
+                let mut batch = vec![0u64; n];
+                dp.fmac_batch(&triples, &mut batch);
+                assert_eq!(
+                    batch,
+                    scalar,
+                    "{} {fidelity:?} seed={seed} n={n}",
+                    cfg.name()
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_executor_invariant_over_worker_counts() {
+    // Parallel execution must not change a single bit, whatever the
+    // worker count or remainder shape.
+    let cfg = FpuConfig::dp_fma();
+    let unit = FpuUnit::generate(&cfg);
+    check_cases(0x5EED, 12, |r: &mut Rng| {
+        (1 + r.below(64) as usize, 1 + r.below(3_000) as usize, r.next_u64())
+    }, |&(workers, n, seed)| {
+        let triples = stream(&cfg, OperandMix::Anything, n, seed);
+        let want: Vec<u64> = triples.iter().map(|t| unit.fmac_one(t.a, t.b, t.c)).collect();
+        let got = BatchExecutor::new(workers).run(&unit, &triples);
+        if got == want {
+            Ok(())
+        } else {
+            Err(format!("divergence at workers={workers} n={n}"))
+        }
+    });
+}
+
+#[test]
+fn prop_word_level_sampled_crosscheck_clean_all_presets() {
+    // The acceptance property behind Fidelity::WordLevel: sampled
+    // gate-level cross-checks report zero mismatches on every preset.
+    for cfg in FpuConfig::fpmax_units() {
+        let unit = FpuUnit::generate(&cfg);
+        let triples = stream(&cfg, OperandMix::Anything, 30_000, 0xF1DE11 ^ cfg.mul_pipe as u64);
+        let (out, check) = BatchExecutor::auto().run_checked(&unit, &triples, 101);
+        assert!(
+            check.clean(),
+            "{}: gate/word mismatch at {:?}",
+            cfg.name(),
+            check.mismatches
+        );
+        assert_eq!(check.sampled, triples.len().div_ceil(101));
+        // And the word-level results really are the unit's semantics.
+        let want = BatchExecutor::auto().run(&unit, &triples);
+        assert_eq!(out, want, "{}", cfg.name());
+    }
+}
+
+#[test]
+fn tracked_and_untracked_runs_agree() {
+    let cfg = FpuConfig::sp_cma();
+    let unit = FpuUnit::generate(&cfg);
+    let triples = stream(&cfg, OperandMix::Finite, 5_000, 3);
+    let exec = BatchExecutor::new(6);
+    let plain = exec.run(&unit, &triples);
+    let (tracked, acc) = exec.run_tracked(&unit, &triples);
+    assert_eq!(plain, tracked);
+    assert_eq!(acc.ops, 5_000);
+    assert!(acc.tree_fa_ops > 0);
+}
+
+#[test]
+fn executor_edge_shapes() {
+    let cfg = FpuConfig::sp_fma();
+    let unit = FpuUnit::generate(&cfg);
+    let exec = BatchExecutor::new(8);
+    // Empty batch.
+    assert!(exec.run(&unit, &[]).is_empty());
+    let (out, acc) = exec.run_tracked(&unit, &[]);
+    assert!(out.is_empty());
+    assert_eq!(acc.ops, 0);
+    // Single op, more workers than work.
+    let t = stream(&cfg, OperandMix::Finite, 1, 1);
+    let got = exec.run(&unit, &t);
+    assert_eq!(got[0], unit.fmac_one(t[0].a, t[0].b, t[0].c));
+}
