@@ -123,13 +123,16 @@ fn main() {
             "scalar gate Mops/s",
             "batch gate",
             "batch word",
+            "batch simd",
             "speedup",
         ]);
         for cfg in FpuConfig::fpmax_units() {
             let unit = FpuUnit::generate(&cfg);
             let word = UnitDatapath::new(&unit, Fidelity::WordLevel);
+            let simd = UnitDatapath::new(&unit, Fidelity::WordSimd);
             let triples =
                 OperandStream::new(cfg.precision, OperandMix::Finite, 42).batch(n);
+            let mut out = vec![0u64; n];
             let time = |f: &mut dyn FnMut()| -> f64 {
                 let t0 = Instant::now();
                 f();
@@ -142,18 +145,32 @@ fn main() {
                 }
                 std::hint::black_box(acc);
             });
+            // One untimed warmup per tier absorbs the executor's one-shot
+            // serial calibration pass, keeping it out of the measurement;
+            // recalibrate between tiers (per-op cost differs ~10×).
+            exec.run_into(&unit, &triples, &mut out);
             let batch_gate = time(&mut || {
-                std::hint::black_box(exec.run(&unit, &triples));
+                exec.run_into(&unit, &triples, &mut out);
+                std::hint::black_box(out[0]);
             });
+            exec.recalibrate();
+            exec.run_into(&word, &triples, &mut out);
             let batch_word = time(&mut || {
-                std::hint::black_box(exec.run(&word, &triples));
+                exec.run_into(&word, &triples, &mut out);
+                std::hint::black_box(out[0]);
             });
+            let batch_simd = time(&mut || {
+                exec.run_into(&simd, &triples, &mut out);
+                std::hint::black_box(out[0]);
+            });
+            exec.recalibrate(); // next unit recalibrates from scratch
             t.row(vec![
                 cfg.name(),
                 format!("{:.2}", scalar_gate / 1e6),
                 format!("{:.2}", batch_gate / 1e6),
                 format!("{:.2}", batch_word / 1e6),
-                format!("{:.1}×", batch_word / scalar_gate),
+                format!("{:.2}", batch_simd / 1e6),
+                format!("{:.1}×", batch_simd / scalar_gate),
             ]);
         }
         t.print();

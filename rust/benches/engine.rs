@@ -1,11 +1,20 @@
 //! Bench E6 — the unified execution engine: scalar vs batch vs fidelity
 //! tiers on a 1M-triple stream, for all four Table I presets.
 //!
-//! This is the perf baseline behind the engine acceptance criterion
-//! (`BatchExecutor` + `Fidelity::WordLevel` ≥ 5× the seed scalar
-//! gate-level loop, with sampled gate-level cross-checks clean). Results
-//! are written to `BENCH_engine.json` at the repository root (override
-//! with `FPMAX_BENCH_OUT=path`), so future PRs have a perf trajectory.
+//! This is the perf baseline behind the engine acceptance criteria:
+//!
+//! * `BatchExecutor` + `Fidelity::WordLevel` ≥ 5× the seed scalar
+//!   gate-level loop (PR 1), and
+//! * `Fidelity::WordSimd` (the lane-batched SoA kernels) ≥ 2× the scalar
+//!   word-level loop on the FMAC burst workload (PR 2) — measured
+//!   single-threaded so the lane-kernel speedup is isolated from thread
+//!   parallelism — with **zero** sampled gate-level cross-check
+//!   mismatches on both word tiers.
+//!
+//! Results are written to `BENCH_engine.json` at the repository root
+//! (override with `FPMAX_BENCH_OUT=path`), so future PRs have a perf
+//! trajectory. All runs reuse one preallocated output buffer through the
+//! `run_into` path — what steady-state serving does.
 //!
 //! Run: `cargo bench --bench engine` (FPMAX_BENCH_FAST=1 for a smoke run).
 
@@ -20,13 +29,25 @@ struct UnitRow {
     batch_gate: f64,
     scalar_word: f64,
     batch_word: f64,
+    simd_word_serial: f64,
+    batch_word_simd: f64,
     crosscheck_sampled: usize,
     crosscheck_mismatches: usize,
+    simd_crosscheck_sampled: usize,
+    simd_crosscheck_mismatches: usize,
 }
 
 impl UnitRow {
+    /// Whole-engine speedup: parallel word tier vs the seed scalar
+    /// gate-level loop.
     fn speedup(&self) -> f64 {
         self.batch_word / self.scalar_gate
+    }
+
+    /// Lane-kernel speedup in isolation: single-thread SIMD word tier vs
+    /// the single-thread scalar word loop (the PR 2 acceptance number).
+    fn simd_speedup(&self) -> f64 {
+        self.simd_word_serial / self.scalar_word
     }
 }
 
@@ -37,6 +58,7 @@ fn main() {
     // stable median without an hour-long run.
     let runner = BenchRunner { samples: if fast { 2 } else { 3 }, warmup_iters: 1, iters_per_sample: 1 };
     let exec = BatchExecutor::auto();
+    let serial = BatchExecutor::serial();
 
     header(&format!(
         "execution engine — {n} ops/unit, {} workers",
@@ -47,7 +69,9 @@ fn main() {
     for cfg in FpuConfig::fpmax_units() {
         let unit = FpuUnit::generate(&cfg);
         let word = UnitDatapath::new(&unit, Fidelity::WordLevel);
+        let simd = UnitDatapath::new(&unit, Fidelity::WordSimd);
         let triples = OperandStream::new(cfg.precision, OperandMix::Finite, 42).batch(n);
+        let mut out = vec![0u64; n];
 
         // The seed baseline: one scalar gate-level op at a time.
         let scalar_gate = runner
@@ -61,9 +85,14 @@ fn main() {
             .throughput()
             .unwrap();
 
+        // Per-op cost differs ~10× between tiers: drop the persisted
+        // chunk calibration before each tier so every measurement runs
+        // with a chunk size tuned to its own datapath.
+        exec.recalibrate();
         let batch_gate = runner
             .run(&format!("engine/{}/batch_gate", cfg.name()), Some(n as f64), || {
-                black_box(exec.run(&unit, &triples));
+                exec.run_into(&unit, &triples, &mut out);
+                black_box(out[0]);
             })
             .throughput()
             .unwrap();
@@ -79,21 +108,52 @@ fn main() {
             .throughput()
             .unwrap();
 
+        exec.recalibrate();
         let batch_word = runner
             .run(&format!("engine/{}/batch_word", cfg.name()), Some(n as f64), || {
-                black_box(exec.run(&word, &triples));
+                exec.run_into(&word, &triples, &mut out);
+                black_box(out[0]);
             })
             .throughput()
             .unwrap();
 
-        // One checked pass (not timed separately: the sampling cost is the
-        // point being recorded).
+        // Scalar-word vs SIMD-word, side by side on the same thread: the
+        // committed lane-kernel speedup.
+        let simd_word_serial = runner
+            .run(&format!("engine/{}/simd_word_serial", cfg.name()), Some(n as f64), || {
+                serial.run_into(&simd, &triples, &mut out);
+                black_box(out[0]);
+            })
+            .throughput()
+            .unwrap();
+
+        exec.recalibrate();
+        let batch_word_simd = runner
+            .run(&format!("engine/{}/batch_word_simd", cfg.name()), Some(n as f64), || {
+                exec.run_into(&simd, &triples, &mut out);
+                black_box(out[0]);
+            })
+            .throughput()
+            .unwrap();
+        exec.recalibrate();
+
+        // One checked pass per word tier (not timed separately: the
+        // sampling cost is the point being recorded). A single mismatch
+        // is a hard failure — this is what the CI bench-smoke step
+        // enforces.
         let (_, check) = exec.run_checked(&unit, &triples, 997);
         assert!(
             check.clean(),
             "{}: word-level diverged from gate-level at {:?}",
             cfg.name(),
             check.mismatches
+        );
+        let (_, simd_check) = exec.run_checked_tier(&unit, Fidelity::WordSimd, &triples, 997);
+        assert!(
+            simd_check.clean(),
+            "{}: word-simd diverged from gate-level at {:?}",
+            cfg.name(),
+            simd_check.mismatches
         );
 
         rows.push(UnitRow {
@@ -102,23 +162,32 @@ fn main() {
             batch_gate,
             scalar_word,
             batch_word,
+            simd_word_serial,
+            batch_word_simd,
             crosscheck_sampled: check.sampled,
             crosscheck_mismatches: check.mismatches.len(),
+            simd_crosscheck_sampled: simd_check.sampled,
+            simd_crosscheck_mismatches: simd_check.mismatches.len(),
         });
     }
 
     println!();
     for r in &rows {
         println!(
-            "{:<7}  scalar-gate {:>8.2} Mops/s  batch-gate {:>8.2}  scalar-word {:>8.2}  batch-word {:>8.2}  → {:.1}× (crosscheck {}/{} clean)",
+            "{:<7}  scalar-gate {:>8.2} Mops/s  batch-gate {:>8.2}  scalar-word {:>8.2}  simd-word {:>8.2} ({:.2}× lane)  batch-word {:>8.2}  batch-simd {:>8.2}  → {:.1}× (crosschecks {}/{} and {}/{} clean)",
             r.name,
             r.scalar_gate / 1e6,
             r.batch_gate / 1e6,
             r.scalar_word / 1e6,
+            r.simd_word_serial / 1e6,
+            r.simd_speedup(),
             r.batch_word / 1e6,
+            r.batch_word_simd / 1e6,
             r.speedup(),
             r.crosscheck_sampled - r.crosscheck_mismatches,
             r.crosscheck_sampled,
+            r.simd_crosscheck_sampled - r.simd_crosscheck_mismatches,
+            r.simd_crosscheck_sampled,
         );
     }
 
@@ -148,13 +217,33 @@ fn render_json(ops: usize, workers: usize, rows: &[UnitRow]) -> String {
         s.push_str(&format!("      \"scalar_word_ops_per_s\": {:.0},\n", r.scalar_word));
         s.push_str(&format!("      \"batch_word_ops_per_s\": {:.0},\n", r.batch_word));
         s.push_str(&format!(
+            "      \"simd_word_serial_ops_per_s\": {:.0},\n",
+            r.simd_word_serial
+        ));
+        s.push_str(&format!(
+            "      \"batch_word_simd_ops_per_s\": {:.0},\n",
+            r.batch_word_simd
+        ));
+        s.push_str(&format!(
             "      \"speedup_batch_word_vs_scalar_gate\": {:.2},\n",
             r.speedup()
         ));
+        s.push_str(&format!(
+            "      \"speedup_simd_word_vs_scalar_word\": {:.2},\n",
+            r.simd_speedup()
+        ));
         s.push_str(&format!("      \"crosscheck_sampled\": {},\n", r.crosscheck_sampled));
         s.push_str(&format!(
-            "      \"crosscheck_mismatches\": {}\n",
+            "      \"crosscheck_mismatches\": {},\n",
             r.crosscheck_mismatches
+        ));
+        s.push_str(&format!(
+            "      \"simd_crosscheck_sampled\": {},\n",
+            r.simd_crosscheck_sampled
+        ));
+        s.push_str(&format!(
+            "      \"simd_crosscheck_mismatches\": {}\n",
+            r.simd_crosscheck_mismatches
         ));
         s.push_str(if i + 1 == rows.len() { "    }\n" } else { "    },\n" });
     }

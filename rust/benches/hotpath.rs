@@ -43,9 +43,11 @@ fn main() {
         let cfg = FpuConfig::sp_fma();
         let unit = FpuUnit::generate(&cfg);
         let word = UnitDatapath::new(&unit, Fidelity::WordLevel);
+        let simd = UnitDatapath::new(&unit, Fidelity::WordSimd);
         let mut stream = OperandStream::new(cfg.precision, OperandMix::Finite, 4);
         let triples = stream.batch(n);
         let exec = BatchExecutor::auto();
+        let mut out = vec![0u64; n];
         runner.run("engine/sp_fma/scalar_gate", Some(n as f64), || {
             let mut acc = 0u64;
             for t in &triples {
@@ -54,15 +56,31 @@ fn main() {
             black_box(acc);
         });
         runner.run("engine/sp_fma/batch_gate", Some(n as f64), || {
-            black_box(exec.run(&unit, &triples));
+            exec.run_into(&unit, &triples, &mut out);
+            black_box(out[0]);
         });
+        // Recalibrate between tiers: the chunk hint tuned for one
+        // datapath's per-op cost is ~10× off for the next.
+        exec.recalibrate();
         runner.run("engine/sp_fma/batch_word", Some(n as f64), || {
-            black_box(exec.run(&word, &triples));
+            exec.run_into(&word, &triples, &mut out);
+            black_box(out[0]);
         });
+        exec.recalibrate();
+        runner.run("engine/sp_fma/batch_word_simd", Some(n as f64), || {
+            exec.run_into(&simd, &triples, &mut out);
+            black_box(out[0]);
+        });
+        exec.recalibrate();
         runner.run("engine/sp_fma/batch_word_checked", Some(n as f64), || {
-            let (out, check) = exec.run_checked(&unit, &triples, 997);
+            let check = exec.run_checked_into(&unit, Fidelity::WordLevel, &triples, 997, &mut out);
             assert!(check.clean());
-            black_box(out);
+            black_box(out[0]);
+        });
+        runner.run("engine/sp_fma/batch_simd_checked", Some(n as f64), || {
+            let check = exec.run_checked_into(&unit, Fidelity::WordSimd, &triples, 997, &mut out);
+            assert!(check.clean());
+            black_box(out[0]);
         });
     }
 

@@ -13,21 +13,33 @@
 //!   batching (the executor chunks batches across workers and drives it
 //!   per chunk); `*_tracked` variants accumulate per-op activity into an
 //!   [`ActivityAccumulator`].
-//! * [`Fidelity`] — **GateLevel** evaluates the structural multiplier
-//!   (every Booth mux and 3:2 row, yielding toggle counts for the energy
-//!   model); **WordLevel** skips the gate simulation of the multiplier
-//!   tree and computes through the exact softfloat path. Both tiers are
-//!   **bit-identical** — the gate-level datapath is checked against the
-//!   word-level spec in debug builds, and [`BatchExecutor::run_checked`]
-//!   cross-checks sampled results at run time.
-//! * [`BatchExecutor`] — thread-parallel fork-join over operand slices
+//! * [`Fidelity`] — the three execution tiers. All are **bit-identical**
+//!   on every operand; they differ only in what they *simulate* and
+//!   therefore how fast they run:
+//!
+//!   | tier | computes | skips | guarantee | use it for |
+//!   |------|----------|-------|-----------|------------|
+//!   | `GateLevel` | every Booth mux and 3:2 row, toggle counts | nothing | is the DUT | verification, measured-activity energy |
+//!   | `WordLevel` | exact integer-significand softfloat, scalar | per-row gate simulation | bit-identical; debug-asserted vs gate, sampled gate cross-checks at run time | DSE sweeps, fast verify |
+//!   | `WordSimd` | the same spec restructured into branch-light SoA lane kernels ([`softfloat::lanes`]) | gate simulation **and** the scalar decode/class branches | bit-identical; same sampled gate-level cross-check machinery as `WordLevel` | throughput-bound batch serving |
+//!
+//! * [`BatchExecutor`] — thread-parallel execution over operand slices
 //!   (`std::thread::scope`; the offline environment has no tokio, and the
-//!   workload is pure CPU compute).
+//!   workload is pure CPU compute). The hot path is **allocation-free**:
+//!   `*_into` variants write caller-provided buffers, workers pull
+//!   load-aware chunks off an atomic cursor (chunk size autotuned by a
+//!   one-shot calibration pass persisted in the executor), and the
+//!   sampled cross-check walks indices directly instead of materializing
+//!   index/operand vectors.
 //!
 //! Implementations provided: [`FpuUnit`] (the generated gate-level
-//! datapath), [`WordUnit`] (the word-level tier of a unit),
-//! [`UnitDatapath`] (a unit bound to a fidelity at run time), and
-//! [`GoldenFma`] (the fused softfloat spec, regardless of unit kind).
+//! datapath), [`WordUnit`] (the scalar word-level tier of a unit),
+//! [`WordSimdUnit`] (the lane-batched word-level tier), [`UnitDatapath`]
+//! (a unit bound to a fidelity at run time), and [`GoldenFma`] (the fused
+//! softfloat spec, regardless of unit kind).
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
 
 use super::fma::FmaActivity;
 use super::fp::{decode, Class, Format};
@@ -47,6 +59,11 @@ pub enum Fidelity {
     /// Exact integer-significand arithmetic, no per-row gate evaluation.
     /// Bit-identical results, ~an order of magnitude faster.
     WordLevel,
+    /// Lane-batched word level: the same exact arithmetic restructured
+    /// into branch-light SoA lane kernels
+    /// ([`softfloat::lanes`]), special-case lanes peeled to the scalar
+    /// slow path. Bit-identical to both other tiers.
+    WordSimd,
 }
 
 impl Fidelity {
@@ -54,6 +71,7 @@ impl Fidelity {
         match self {
             Fidelity::GateLevel => "gate",
             Fidelity::WordLevel => "word",
+            Fidelity::WordSimd => "word-simd",
         }
     }
 }
@@ -381,6 +399,145 @@ impl Datapath for WordUnit {
     }
 }
 
+/// The lane-batched word-level tier of a generated unit: scalar calls
+/// compute through the same word-level spec as [`WordUnit`]; batch calls
+/// stream full lane blocks through the branch-light SoA kernels in
+/// [`softfloat::lanes`], peeling special-case lanes to the scalar slow
+/// path, with the sub-lane-width remainder handled scalar. Bit-identical
+/// to both other tiers (debug-asserted per lane inside the kernels,
+/// sampled gate-level cross-checks at run time).
+#[derive(Debug, Clone)]
+pub struct WordSimdUnit {
+    inner: WordUnit,
+}
+
+impl WordSimdUnit {
+    /// The lane-batched word-level view of an elaborated unit.
+    pub fn of(unit: &FpuUnit) -> WordSimdUnit {
+        WordSimdUnit { inner: WordUnit::of(unit) }
+    }
+
+    /// Elaborate a configuration straight into the lane-batched tier.
+    pub fn generate(cfg: &FpuConfig) -> WordSimdUnit {
+        WordSimdUnit::of(&FpuUnit::generate(cfg))
+    }
+}
+
+impl Datapath for WordSimdUnit {
+    fn format(&self) -> Format {
+        self.inner.format
+    }
+
+    fn kind(&self) -> FpuKind {
+        self.inner.kind
+    }
+
+    fn fidelity(&self) -> Fidelity {
+        Fidelity::WordSimd
+    }
+
+    fn structure(&self) -> Option<&StructureReport> {
+        Some(&self.inner.structure)
+    }
+
+    fn label(&self) -> String {
+        format!("{}/{}", self.inner.name, Fidelity::WordSimd.name())
+    }
+
+    #[inline]
+    fn fmac_one(&self, a: u64, b: u64, c: u64) -> u64 {
+        self.inner.fmac_one(a, b, c)
+    }
+
+    #[inline]
+    fn fmac_one_tracked(&self, a: u64, b: u64, c: u64, acc: &mut ActivityAccumulator) -> u64 {
+        // Activity is a word-level observable; the lane restructuring
+        // changes execution speed, not what the silicon would toggle.
+        self.inner.fmac_one_tracked(a, b, c, acc)
+    }
+
+    fn fmac_batch(&self, triples: &[OperandTriple], out: &mut [u64]) {
+        assert_eq!(triples.len(), out.len(), "batch length mismatch");
+        use crate::arch::softfloat::lanes::{cma_block_rne, fma_block_rne, LANES};
+        let fmt = self.inner.format;
+        let mut a = [0u64; LANES];
+        let mut b = [0u64; LANES];
+        let mut c = [0u64; LANES];
+        let mut o = [0u64; LANES];
+        let n = triples.len();
+        let mut i = 0;
+        while i + LANES <= n {
+            for j in 0..LANES {
+                let t = &triples[i + j];
+                a[j] = t.a;
+                b[j] = t.b;
+                c[j] = t.c;
+            }
+            match self.inner.kind {
+                FpuKind::Fma => fma_block_rne(fmt, &a, &b, &c, &mut o),
+                FpuKind::Cma => cma_block_rne(fmt, &a, &b, &c, &mut o),
+            }
+            out[i..i + LANES].copy_from_slice(&o);
+            i += LANES;
+        }
+        // Sub-lane remainder: scalar spec.
+        for j in i..n {
+            let t = &triples[j];
+            out[j] = self.inner.fmac_one(t.a, t.b, t.c);
+        }
+    }
+}
+
+/// Batched word-level multiply (`round(a·b)` per triple) for the chip
+/// sequencer's `Mul` bursts: RNE streams through the SoA lane kernel,
+/// explicit-rounding modes through the scalar spec.
+pub fn mul_batch(fmt: Format, mode: RoundMode, triples: &[OperandTriple], out: &mut [u64]) {
+    assert_eq!(triples.len(), out.len(), "batch length mismatch");
+    use crate::arch::softfloat::lanes::{mul_block_rne, LANES};
+    let n = triples.len();
+    let mut i = 0;
+    if mode == RoundMode::NearestEven {
+        let (mut a, mut b, mut o) = ([0u64; LANES], [0u64; LANES], [0u64; LANES]);
+        while i + LANES <= n {
+            for j in 0..LANES {
+                a[j] = triples[i + j].a;
+                b[j] = triples[i + j].b;
+            }
+            mul_block_rne(fmt, &a, &b, &mut o);
+            out[i..i + LANES].copy_from_slice(&o);
+            i += LANES;
+        }
+    }
+    for j in i..n {
+        out[j] = softfloat::mul(fmt, mode, triples[j].a, triples[j].b).bits;
+    }
+}
+
+/// Batched word-level add (`round(a + c)` per triple) for the chip
+/// sequencer's `Add` bursts: RNE through the lane kernel, explicit
+/// modes scalar.
+pub fn add_batch(fmt: Format, mode: RoundMode, triples: &[OperandTriple], out: &mut [u64]) {
+    assert_eq!(triples.len(), out.len(), "batch length mismatch");
+    use crate::arch::softfloat::lanes::{add_block_rne, LANES};
+    let n = triples.len();
+    let mut i = 0;
+    if mode == RoundMode::NearestEven {
+        let (mut a, mut c, mut o) = ([0u64; LANES], [0u64; LANES], [0u64; LANES]);
+        while i + LANES <= n {
+            for j in 0..LANES {
+                a[j] = triples[i + j].a;
+                c[j] = triples[i + j].c;
+            }
+            add_block_rne(fmt, &a, &c, &mut o);
+            out[i..i + LANES].copy_from_slice(&o);
+            i += LANES;
+        }
+    }
+    for j in i..n {
+        out[j] = softfloat::add(fmt, mode, triples[j].a, triples[j].c).bits;
+    }
+}
+
 /// A generated unit bound to a fidelity tier chosen at run time — the
 /// handle consumers pass to the executor when the tier is a parameter
 /// (DSE sweeps run word-level, verification runs gate-level).
@@ -388,6 +545,7 @@ impl Datapath for WordUnit {
 pub enum UnitDatapath {
     Gate(FpuUnit),
     Word(WordUnit),
+    Simd(WordSimdUnit),
 }
 
 impl UnitDatapath {
@@ -396,6 +554,7 @@ impl UnitDatapath {
         match fidelity {
             Fidelity::GateLevel => UnitDatapath::Gate(unit.clone()),
             Fidelity::WordLevel => UnitDatapath::Word(WordUnit::of(unit)),
+            Fidelity::WordSimd => UnitDatapath::Simd(WordSimdUnit::of(unit)),
         }
     }
 
@@ -410,6 +569,7 @@ impl Datapath for UnitDatapath {
         match self {
             UnitDatapath::Gate(u) => u.format,
             UnitDatapath::Word(w) => Datapath::format(w),
+            UnitDatapath::Simd(s) => Datapath::format(s),
         }
     }
 
@@ -417,6 +577,7 @@ impl Datapath for UnitDatapath {
         match self {
             UnitDatapath::Gate(u) => u.config.kind,
             UnitDatapath::Word(w) => Datapath::kind(w),
+            UnitDatapath::Simd(s) => Datapath::kind(s),
         }
     }
 
@@ -424,6 +585,7 @@ impl Datapath for UnitDatapath {
         match self {
             UnitDatapath::Gate(_) => Fidelity::GateLevel,
             UnitDatapath::Word(_) => Fidelity::WordLevel,
+            UnitDatapath::Simd(_) => Fidelity::WordSimd,
         }
     }
 
@@ -431,6 +593,7 @@ impl Datapath for UnitDatapath {
         match self {
             UnitDatapath::Gate(u) => Some(FpuUnit::structure(u)),
             UnitDatapath::Word(w) => Datapath::structure(w),
+            UnitDatapath::Simd(s) => Datapath::structure(s),
         }
     }
 
@@ -438,6 +601,7 @@ impl Datapath for UnitDatapath {
         match self {
             UnitDatapath::Gate(u) => Datapath::label(u),
             UnitDatapath::Word(w) => Datapath::label(w),
+            UnitDatapath::Simd(s) => Datapath::label(s),
         }
     }
 
@@ -446,6 +610,7 @@ impl Datapath for UnitDatapath {
         match self {
             UnitDatapath::Gate(u) => u.fmac(a, b, c).bits,
             UnitDatapath::Word(w) => w.fmac_one(a, b, c),
+            UnitDatapath::Simd(s) => s.fmac_one(a, b, c),
         }
     }
 
@@ -454,6 +619,17 @@ impl Datapath for UnitDatapath {
         match self {
             UnitDatapath::Gate(u) => u.fmac_one_tracked(a, b, c, acc),
             UnitDatapath::Word(w) => w.fmac_one_tracked(a, b, c, acc),
+            UnitDatapath::Simd(s) => s.fmac_one_tracked(a, b, c, acc),
+        }
+    }
+
+    fn fmac_batch(&self, triples: &[OperandTriple], out: &mut [u64]) {
+        // Delegate so the Simd variant's lane driver is reached (the
+        // trait default would stream the scalar op).
+        match self {
+            UnitDatapath::Gate(u) => u.fmac_batch(triples, out),
+            UnitDatapath::Word(w) => w.fmac_batch(triples, out),
+            UnitDatapath::Simd(s) => s.fmac_batch(triples, out),
         }
     }
 }
@@ -506,11 +682,46 @@ impl CrossCheck {
 
 const CROSSCHECK_CAP: usize = 16;
 
-/// Thread-parallel batch executor: splits an operand slice into per-worker
-/// chunks and drives any [`Datapath`] through a scoped fork-join.
-#[derive(Debug, Clone, Copy)]
+/// Below this batch size the scoped-spawn overhead dominates any
+/// parallel win: run on the calling thread.
+const SERIAL_CUTOFF: usize = 512;
+/// Ops executed serially by the one-shot chunk calibration pass.
+const CALIBRATION_OPS: usize = 2_048;
+/// Target wall-clock per pulled chunk: long enough to amortize the
+/// atomic cursor, short enough that a straggler chunk cannot idle the
+/// other workers for long (specials-heavy regions run slower than
+/// finite-dense ones, so static `n / workers` splits load-imbalance).
+const TARGET_CHUNK_SECS: f64 = 2e-3;
+const MIN_CHUNK: usize = 256;
+const MAX_CHUNK: usize = 1 << 16;
+
+/// A raw pointer that may cross thread boundaries. Workers derive
+/// disjoint sub-slices from it (ranges handed out by an atomic cursor),
+/// so no two threads ever alias a byte.
+#[derive(Clone, Copy)]
+struct SendPtr<T>(*mut T);
+unsafe impl<T> Send for SendPtr<T> {}
+unsafe impl<T> Sync for SendPtr<T> {}
+
+/// Thread-parallel batch executor: drives any [`Datapath`] over an
+/// operand slice with workers pulling load-aware chunks off a shared
+/// atomic cursor.
+///
+/// The hot path allocates nothing: callers can hand in reusable output
+/// buffers via the `*_into` variants (the `Vec`-returning wrappers exist
+/// for convenience), chunk descriptors are never materialized, and the
+/// sampled gate-level cross-check walks indices directly. Chunk size is
+/// autotuned by a one-shot calibration pass — the first ~2k ops of the
+/// first batch run serially under a timer, and the derived
+/// ops-per-chunk value persists in the executor (see
+/// [`BatchExecutor::recalibrate`]).
+#[derive(Debug)]
 pub struct BatchExecutor {
     workers: usize,
+    /// Calibrated ops per pulled chunk; 0 = not yet calibrated. Interior
+    /// mutability so calibration can persist through `&self` (executors
+    /// are shared immutably across call sites and worker threads).
+    chunk_hint: AtomicUsize,
 }
 
 impl Default for BatchExecutor {
@@ -519,10 +730,19 @@ impl Default for BatchExecutor {
     }
 }
 
+impl Clone for BatchExecutor {
+    fn clone(&self) -> Self {
+        BatchExecutor {
+            workers: self.workers,
+            chunk_hint: AtomicUsize::new(self.chunk_hint.load(Ordering::Relaxed)),
+        }
+    }
+}
+
 impl BatchExecutor {
     /// Fixed worker count (clamped to ≥ 1).
     pub fn new(workers: usize) -> BatchExecutor {
-        BatchExecutor { workers: workers.max(1) }
+        BatchExecutor { workers: workers.max(1), chunk_hint: AtomicUsize::new(0) }
     }
 
     /// One worker per available hardware thread.
@@ -540,6 +760,122 @@ impl BatchExecutor {
         self.workers
     }
 
+    /// The calibrated ops-per-chunk value (0 until the first parallel
+    /// run calibrates it).
+    pub fn chunk_hint(&self) -> usize {
+        self.chunk_hint.load(Ordering::Relaxed)
+    }
+
+    /// Drop the persisted chunk calibration — the next run re-times. Use
+    /// when switching this executor to a datapath with a very different
+    /// per-op cost (gate-level is ~an order of magnitude slower than
+    /// word-level; a stale hint only costs load-balance granularity,
+    /// never correctness).
+    pub fn recalibrate(&self) {
+        self.chunk_hint.store(0, Ordering::Relaxed);
+    }
+
+    /// Chunk size for an `n`-op parallel run: the calibrated hint,
+    /// bounded so there is at least one chunk per worker.
+    fn chunk_for(&self, n: usize) -> usize {
+        let hint = self.chunk_hint.load(Ordering::Relaxed);
+        let fallback = n.div_ceil(self.workers);
+        if hint == 0 {
+            fallback
+        } else {
+            hint.min(fallback.max(MIN_CHUNK)).clamp(1, n.max(1))
+        }
+    }
+
+    /// One-shot calibration: time a short serial prefix of the batch
+    /// (its results land in `out[..prefix]`, so no work is wasted) and
+    /// persist the chunk size that makes one chunk ≈ the target
+    /// wall-clock. Returns the prefix length already executed.
+    fn calibrate<D: Datapath + ?Sized>(
+        &self,
+        dp: &D,
+        triples: &[OperandTriple],
+        out: &mut [u64],
+        acc: Option<&mut ActivityAccumulator>,
+    ) -> usize {
+        if self.chunk_hint.load(Ordering::Relaxed) != 0 {
+            return 0;
+        }
+        let prefix = CALIBRATION_OPS.min(triples.len());
+        let t0 = std::time::Instant::now();
+        match acc {
+            Some(acc) => dp.fmac_batch_tracked(&triples[..prefix], &mut out[..prefix], acc),
+            None => dp.fmac_batch(&triples[..prefix], &mut out[..prefix]),
+        }
+        let per_op = (t0.elapsed().as_secs_f64() / prefix as f64).max(1e-9);
+        let chunk = ((TARGET_CHUNK_SECS / per_op) as usize).clamp(MIN_CHUNK, MAX_CHUNK);
+        self.chunk_hint.store(chunk, Ordering::Relaxed);
+        prefix
+    }
+
+    /// Parallel region: workers pull `chunk`-sized ranges off an atomic
+    /// cursor until the slice is drained. Each range is claimed by
+    /// exactly one `fetch_add` winner, so the raw-pointer sub-slices are
+    /// disjoint.
+    fn run_chunked<D: Datapath + ?Sized>(
+        &self,
+        dp: &D,
+        triples: &[OperandTriple],
+        out: &mut [u64],
+        acc: Option<&mut ActivityAccumulator>,
+    ) {
+        let n = triples.len();
+        if n == 0 {
+            return;
+        }
+        let chunk = self.chunk_for(n).max(1);
+        let workers = self.workers.min(n.div_ceil(chunk));
+        if workers <= 1 {
+            match acc {
+                Some(acc) => dp.fmac_batch_tracked(triples, out, acc),
+                None => dp.fmac_batch(triples, out),
+            }
+            return;
+        }
+        let track = acc.is_some();
+        let cursor = AtomicUsize::new(0);
+        let merged = Mutex::new(ActivityAccumulator::default());
+        let out_ptr = SendPtr(out.as_mut_ptr());
+        std::thread::scope(|s| {
+            for _ in 0..workers {
+                let cursor = &cursor;
+                let merged = &merged;
+                s.spawn(move || {
+                    let mut local = ActivityAccumulator::default();
+                    loop {
+                        let lo = cursor.fetch_add(chunk, Ordering::Relaxed);
+                        if lo >= n {
+                            break;
+                        }
+                        let hi = (lo + chunk).min(n);
+                        // SAFETY: [lo, hi) came from a unique fetch_add
+                        // claim, so this sub-slice aliases no other
+                        // worker's; `out` outlives the scope.
+                        let os = unsafe {
+                            std::slice::from_raw_parts_mut(out_ptr.0.add(lo), hi - lo)
+                        };
+                        if track {
+                            dp.fmac_batch_tracked(&triples[lo..hi], os, &mut local);
+                        } else {
+                            dp.fmac_batch(&triples[lo..hi], os);
+                        }
+                    }
+                    if track && local != ActivityAccumulator::default() {
+                        merged.lock().expect("engine worker panicked").merge(&local);
+                    }
+                });
+            }
+        });
+        if let Some(acc) = acc {
+            acc.merge(&merged.into_inner().expect("engine worker panicked"));
+        }
+    }
+
     /// Execute a batch, returning result bits in operand order.
     pub fn run<D: Datapath + ?Sized>(&self, dp: &D, triples: &[OperandTriple]) -> Vec<u64> {
         let mut out = vec![0u64; triples.len()];
@@ -547,7 +883,10 @@ impl BatchExecutor {
         out
     }
 
-    /// Execute a batch into a caller-provided buffer.
+    /// Execute a batch into a caller-provided buffer — the
+    /// allocation-free hot path (serial runs allocate nothing; parallel
+    /// runs allocate only the O(workers) scoped-thread bookkeeping,
+    /// independent of batch size).
     pub fn run_into<D: Datapath + ?Sized>(
         &self,
         dp: &D,
@@ -559,17 +898,12 @@ impl BatchExecutor {
         if n == 0 {
             return;
         }
-        let workers = self.workers.min(n);
-        if workers <= 1 {
+        if self.workers <= 1 || n <= SERIAL_CUTOFF {
             dp.fmac_batch(triples, out);
             return;
         }
-        let chunk = n.div_ceil(workers);
-        std::thread::scope(|s| {
-            for (ts, os) in triples.chunks(chunk).zip(out.chunks_mut(chunk)) {
-                s.spawn(move || dp.fmac_batch(ts, os));
-            }
-        });
+        let done = self.calibrate(dp, triples, out, None);
+        self.run_chunked(dp, &triples[done..], &mut out[done..], None);
     }
 
     /// Execute a batch while accumulating activity (merged across
@@ -580,59 +914,142 @@ impl BatchExecutor {
         dp: &D,
         triples: &[OperandTriple],
     ) -> (Vec<u64>, ActivityAccumulator) {
-        let n = triples.len();
-        let mut out = vec![0u64; n];
+        let mut out = vec![0u64; triples.len()];
+        let acc = self.run_tracked_into(dp, triples, &mut out);
+        (out, acc)
+    }
+
+    /// Tracked execution into a caller-provided buffer; returns the
+    /// merged activity.
+    pub fn run_tracked_into<D: Datapath + ?Sized>(
+        &self,
+        dp: &D,
+        triples: &[OperandTriple],
+        out: &mut [u64],
+    ) -> ActivityAccumulator {
+        assert_eq!(triples.len(), out.len(), "batch length mismatch");
         let mut total = ActivityAccumulator::default();
+        let n = triples.len();
         if n == 0 {
-            return (out, total);
+            return total;
         }
-        let workers = self.workers.min(n);
-        if workers <= 1 {
-            dp.fmac_batch_tracked(triples, &mut out, &mut total);
-            return (out, total);
+        if self.workers <= 1 || n <= SERIAL_CUTOFF {
+            dp.fmac_batch_tracked(triples, out, &mut total);
+            return total;
         }
-        let chunk = n.div_ceil(workers);
-        std::thread::scope(|s| {
-            let mut handles = Vec::new();
-            for (ts, os) in triples.chunks(chunk).zip(out.chunks_mut(chunk)) {
-                handles.push(s.spawn(move || {
-                    let mut acc = ActivityAccumulator::default();
-                    dp.fmac_batch_tracked(ts, os, &mut acc);
-                    acc
-                }));
-            }
-            for h in handles {
-                total.merge(&h.join().expect("engine worker panicked"));
-            }
-        });
-        (out, total)
+        let done = self.calibrate(dp, triples, out, Some(&mut total));
+        self.run_chunked(dp, &triples[done..], &mut out[done..], Some(&mut total));
+        total
     }
 
     /// Word-level execution of a unit with a sampled gate-level
-    /// cross-check: every `sample_every`-th operand is re-executed through
-    /// the structural datapath and compared bit-for-bit. This is the
-    /// release-build guard on the word-level tier's bit-identity claim.
-    /// The gate-level sample runs through the executor too, so the check
-    /// does not serialize the call at small strides.
+    /// cross-check (see [`BatchExecutor::run_checked_into`]).
     pub fn run_checked(
         &self,
         unit: &FpuUnit,
         triples: &[OperandTriple],
         sample_every: usize,
     ) -> (Vec<u64>, CrossCheck) {
-        let word = WordUnit::of(unit);
-        let out = self.run(&word, triples);
-        let step = sample_every.max(1);
-        let indices: Vec<usize> = (0..triples.len()).step_by(step).collect();
-        let sampled: Vec<OperandTriple> = indices.iter().map(|&i| triples[i]).collect();
-        let gate = self.run(unit, &sampled);
-        let mut check = CrossCheck { sampled: indices.len(), mismatches: Vec::new() };
-        for (k, &i) in indices.iter().enumerate() {
-            if gate[k] != out[i] && check.mismatches.len() < CROSSCHECK_CAP {
-                check.mismatches.push(i);
+        self.run_checked_tier(unit, Fidelity::WordLevel, triples, sample_every)
+    }
+
+    /// Tier-selectable checked execution returning a fresh buffer.
+    pub fn run_checked_tier(
+        &self,
+        unit: &FpuUnit,
+        tier: Fidelity,
+        triples: &[OperandTriple],
+        sample_every: usize,
+    ) -> (Vec<u64>, CrossCheck) {
+        let mut out = vec![0u64; triples.len()];
+        let check = self.run_checked_into(unit, tier, triples, sample_every, &mut out);
+        (out, check)
+    }
+
+    /// Execute a unit's word tier (`WordLevel` or `WordSimd`) into a
+    /// caller-provided buffer with a sampled gate-level cross-check:
+    /// every `sample_every`-th operand is re-executed through the
+    /// structural datapath and compared bit-for-bit. This is the
+    /// release-build guard on the word tiers' bit-identity claim.
+    ///
+    /// The sampling pass materializes nothing — sample indices are
+    /// walked directly, partitioned round-robin across workers (the
+    /// gate-level re-execution is the expensive part, so it parallelizes
+    /// through the same scoped threads). `GateLevel` runs plain (the
+    /// gate tier is the reference; `sampled` reports 0).
+    pub fn run_checked_into(
+        &self,
+        unit: &FpuUnit,
+        tier: Fidelity,
+        triples: &[OperandTriple],
+        sample_every: usize,
+        out: &mut [u64],
+    ) -> CrossCheck {
+        match tier {
+            Fidelity::GateLevel => {
+                self.run_into(unit, triples, out);
+                return CrossCheck::default();
+            }
+            Fidelity::WordLevel => {
+                let word = WordUnit::of(unit);
+                self.run_into(&word, triples, out);
+            }
+            Fidelity::WordSimd => {
+                let simd = WordSimdUnit::of(unit);
+                self.run_into(&simd, triples, out);
             }
         }
-        (out, check)
+        let n = triples.len();
+        if n == 0 {
+            return CrossCheck::default();
+        }
+        let step = sample_every.max(1);
+        let sampled = n.div_ceil(step);
+        let workers = self.workers.min(sampled);
+        let mut mismatches = if workers <= 1 || sampled <= 64 {
+            let mut mm = Vec::new();
+            let mut i = 0;
+            while i < n {
+                let t = &triples[i];
+                if unit.fmac_one(t.a, t.b, t.c) != out[i] && mm.len() < CROSSCHECK_CAP {
+                    mm.push(i);
+                }
+                i += step;
+            }
+            mm
+        } else {
+            let shared = Mutex::new(Vec::new());
+            let out_ro: &[u64] = out;
+            std::thread::scope(|s| {
+                for w in 0..workers {
+                    let shared = &shared;
+                    s.spawn(move || {
+                        let mut local = Vec::new();
+                        let mut k = w;
+                        while k < sampled {
+                            let i = k * step;
+                            let t = &triples[i];
+                            if unit.fmac_one(t.a, t.b, t.c) != out_ro[i]
+                                && local.len() < CROSSCHECK_CAP
+                            {
+                                local.push(i);
+                            }
+                            k += workers;
+                        }
+                        if !local.is_empty() {
+                            shared
+                                .lock()
+                                .expect("cross-check worker panicked")
+                                .extend_from_slice(&local);
+                        }
+                    });
+                }
+            });
+            shared.into_inner().expect("cross-check worker panicked")
+        };
+        mismatches.sort_unstable();
+        mismatches.truncate(CROSSCHECK_CAP);
+        CrossCheck { sampled, mismatches }
     }
 }
 
@@ -775,6 +1192,115 @@ mod tests {
             c: 0.25f64.to_bits(),
         };
         assert_eq!(gate.fmac_one(t.a, t.b, t.c), word.fmac_one(t.a, t.b, t.c));
+    }
+
+    #[test]
+    fn word_simd_batch_bit_identical_all_presets() {
+        // Lane kernels + remainder path vs the gate-level scalar op, on
+        // operand mixes that hit every special class. 1_003 is not a
+        // lane-width multiple, so the scalar tail runs too.
+        for cfg in FpuConfig::fpmax_units() {
+            let unit = FpuUnit::generate(&cfg);
+            let simd = WordSimdUnit::of(&unit);
+            for (mix, seed) in [(OperandMix::Anything, 0x51D0u64), (OperandMix::SpecialHeavy, 7)] {
+                let triples = OperandStream::new(cfg.precision, mix, seed).batch(1_003);
+                let mut out = vec![0u64; triples.len()];
+                simd.fmac_batch(&triples, &mut out);
+                for (i, t) in triples.iter().enumerate() {
+                    assert_eq!(
+                        out[i],
+                        unit.fmac_one(t.a, t.b, t.c),
+                        "{} {mix:?} slot {i}: a={:#x} b={:#x} c={:#x}",
+                        cfg.name(),
+                        t.a,
+                        t.b,
+                        t.c
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn run_checked_simd_tier_clean_on_all_presets() {
+        for cfg in FpuConfig::fpmax_units() {
+            let unit = FpuUnit::generate(&cfg);
+            let triples = sample(&cfg, OperandMix::Anything, 5_000, 0xD00D);
+            let exec = BatchExecutor::new(4);
+            let (out, check) = exec.run_checked_tier(&unit, Fidelity::WordSimd, &triples, 41);
+            assert!(check.clean(), "{}: {:?}", cfg.name(), check.mismatches);
+            assert_eq!(check.sampled, triples.len().div_ceil(41));
+            let want = BatchExecutor::serial().run(&unit, &triples);
+            assert_eq!(out, want, "{}", cfg.name());
+        }
+    }
+
+    #[test]
+    fn run_checked_stride_one_and_gate_tier() {
+        // Stride 1 checks every operand (sampled == n); the gate tier
+        // reports no sampling because it *is* the reference.
+        let cfg = FpuConfig::sp_fma();
+        let unit = FpuUnit::generate(&cfg);
+        let triples = sample(&cfg, OperandMix::Finite, 300, 5);
+        let exec = BatchExecutor::serial();
+        let mut out = vec![0u64; triples.len()];
+        let check = exec.run_checked_into(&unit, Fidelity::WordLevel, &triples, 1, &mut out);
+        assert!(check.clean());
+        assert_eq!(check.sampled, 300);
+        // GateLevel tier: no sampling (the gate tier is the reference).
+        let check = exec.run_checked_into(&unit, Fidelity::GateLevel, &triples, 7, &mut out);
+        assert_eq!(check.sampled, 0);
+        assert!(check.clean());
+    }
+
+    #[test]
+    fn executor_buffer_reuse_and_calibration_persist() {
+        let cfg = FpuConfig::sp_fma();
+        let unit = FpuUnit::generate(&cfg);
+        let word = WordUnit::of(&unit);
+        let triples = sample(&cfg, OperandMix::Finite, 9_001, 13);
+        let exec = BatchExecutor::new(8);
+        assert_eq!(exec.chunk_hint(), 0);
+        let mut out1 = vec![u64::MAX; triples.len()];
+        exec.run_into(&word, &triples, &mut out1);
+        let hint = exec.chunk_hint();
+        assert!(hint >= 1, "first parallel run must calibrate");
+        // Re-running into the same buffer gives identical bits and keeps
+        // the calibration.
+        let mut out2 = vec![0u64; triples.len()];
+        exec.run_into(&word, &triples, &mut out2);
+        assert_eq!(out1, out2);
+        assert_eq!(exec.chunk_hint(), hint);
+        // A cloned executor carries the calibration; recalibrate drops it.
+        let cloned = exec.clone();
+        assert_eq!(cloned.chunk_hint(), hint);
+        exec.recalibrate();
+        assert_eq!(exec.chunk_hint(), 0);
+        // Tracked runs agree with untracked whatever the chunking.
+        let acc = exec.run_tracked_into(&word, &triples, &mut out2);
+        assert_eq!(out1, out2);
+        assert_eq!(acc.ops, triples.len() as u64);
+    }
+
+    #[test]
+    fn mul_add_batches_match_scalar_all_modes() {
+        use crate::arch::softfloat;
+        for cfg in [FpuConfig::sp_fma(), FpuConfig::dp_fma()] {
+            let fmt = cfg.precision.format();
+            // 107 ops: exercises lane blocks + remainder.
+            let triples = sample(&cfg, OperandMix::Anything, 107, 0xAB);
+            let mut out = vec![0u64; triples.len()];
+            for mode in RoundMode::ALL {
+                mul_batch(fmt, mode, &triples, &mut out);
+                for (i, t) in triples.iter().enumerate() {
+                    assert_eq!(out[i], softfloat::mul(fmt, mode, t.a, t.b).bits, "mul {mode:?} {i}");
+                }
+                add_batch(fmt, mode, &triples, &mut out);
+                for (i, t) in triples.iter().enumerate() {
+                    assert_eq!(out[i], softfloat::add(fmt, mode, t.a, t.c).bits, "add {mode:?} {i}");
+                }
+            }
+        }
     }
 
     #[test]

@@ -45,7 +45,7 @@ pub mod tree;
 
 pub use engine::{
     ActivityAccumulator, BatchExecutor, CrossCheck, Datapath, Fidelity, GoldenFma, UnitDatapath,
-    WordUnit,
+    WordSimdUnit, WordUnit,
 };
 pub use fp::{decode, encode_finite, Class, Decoded, Format, Precision};
 pub use generator::{FpuConfig, FpuKind, FpuUnit, StructureReport};

@@ -255,6 +255,290 @@ pub fn add(fmt: Format, mode: RoundMode, a_bits: u64, c_bits: u64) -> Rounded {
     round(fmt, mode, sum)
 }
 
+/// Round an exact value to `fmt` under round-to-nearest-even, producing
+/// **bits only** — no exception flags. This is the rounder the lane
+/// kernels ([`lanes`]) end in: the flag bookkeeping of
+/// [`round_to_format`] is the only thing removed, the dataflow is a
+/// line-for-line specialization (RNE never saturates on overflow, and a
+/// sticky-only residue rounds to zero). Bit-identity with the generic
+/// path is debug-asserted at every lane-kernel call site and re-verified
+/// at run time by the engine's sampled gate-level cross-checks.
+#[inline(always)]
+fn round_rne_bits(fmt: Format, v: Exact) -> u64 {
+    if v.sig == 0 {
+        // Exact zero, or a sticky-only residue below the smallest
+        // subnormal: RNE never rounds a bare sticky up.
+        return fmt.zero(v.sign);
+    }
+    let npos = v.exp + bitlen128(v.sig) as i32;
+    let target_q = (npos - fmt.sig_bits as i32).max(fmt.qmin());
+    let (kept, round_bit, sticky_low) = if target_q >= v.exp {
+        super::rounding::shift_right_rs(v.sig, target_q - v.exp, v.sticky)
+    } else {
+        (v.sig << (v.exp - target_q) as u32, false, v.sticky)
+    };
+    let lsb = kept & 1 == 1;
+    let mut result_sig = kept as u64;
+    let mut q = target_q;
+    if round_bit && (sticky_low || lsb) {
+        result_sig += 1;
+        if result_sig == (1u64 << fmt.sig_bits) {
+            result_sig >>= 1;
+            q += 1;
+        }
+    }
+    if result_sig == 0 {
+        return fmt.zero(v.sign);
+    }
+    let msb = q + super::fp::bitlen64(result_sig) as i32 - 1;
+    if msb > fmt.emax() {
+        return fmt.inf(v.sign); // RNE overflows to ±Inf, never max-finite
+    }
+    let s = if v.sign { fmt.sign_bit() } else { 0 };
+    if result_sig & fmt.hidden_bit() == 0 {
+        // Subnormal: the quantum is pinned at qmin by the target_q clamp.
+        debug_assert_eq!(q, fmt.qmin());
+        return s | result_sig;
+    }
+    let biased = (q + fmt.bias() + fmt.sig_bits as i32 - 1) as u64;
+    s | (biased << (fmt.sig_bits - 1)) | (result_sig & fmt.frac_mask())
+}
+
+/// RNE-rounded bits of an exact sum `x + y` (both inputs exact). Shared
+/// tail of the FMA and CMA lane kernels.
+#[inline(always)]
+fn exact_sum_rne_bits(fmt: Format, x: Exact, y: Exact) -> u64 {
+    round_rne_bits(fmt, add_exact(x, y, RoundMode::NearestEven))
+}
+
+/// Lane-batched word-level kernels: the scalar pipeline above
+/// (decode → `mul_exact` → `add_exact` → round) restructured into
+/// branch-light stages over fixed-width lane blocks, structure-of-arrays
+/// style — the software analogue of FPnew's multi-format SIMD lanes.
+///
+/// Layout per block of [`LANES`] operations:
+///
+/// * **decode** runs as a straight loop filling separate sign/exponent/
+///   significand arrays (no `Class` enum, no per-operand branches — the
+///   normal/subnormal split is a mask-select), while collecting a bitmask
+///   of lanes holding Inf/NaN operands;
+/// * **multiply** is a pure SoA loop (`u128` products never overflow);
+/// * **add + round** runs per lane through the RNE-specialized, flag-free
+///   tail ([`round_rne_bits`]), which shares `add_exact` and
+///   `shift_right_rs` with the generic spec;
+/// * lanes flagged special are **peeled** to the scalar spec ([`fma`],
+///   [`mul`], [`add`]), so NaN propagation and Inf arithmetic never leak
+///   into the fast path.
+///
+/// Every lane result is debug-asserted against the scalar spec, so any
+/// divergence fails loudly under `cargo test`; release builds are
+/// guarded by the engine's sampled gate-level cross-checks.
+pub mod lanes {
+    use super::*;
+
+    /// Operations per lane block. Eight lanes keep the SoA arrays inside
+    /// two cache lines for SP while giving the compiler enough
+    /// independent work to vectorize the decode/multiply loops.
+    pub const LANES: usize = 8;
+
+    /// SoA view of one decoded operand column.
+    struct DecodedLanes {
+        sign: [bool; LANES],
+        exp: [i32; LANES],
+        sig: [u64; LANES],
+    }
+
+    impl DecodedLanes {
+        fn zeroed() -> DecodedLanes {
+            DecodedLanes { sign: [false; LANES], exp: [0; LANES], sig: [0; LANES] }
+        }
+    }
+
+    /// Branch-light SoA decode of one operand column. Returns the lane
+    /// bitmask of non-finite (Inf/NaN) operands — those lanes hold
+    /// unusable sign/exp/sig values and must be peeled by the caller.
+    #[inline(always)]
+    fn decode_lanes(fmt: Format, bits: &[u64; LANES], out: &mut DecodedLanes) -> u32 {
+        let ebias = fmt.bias() + fmt.sig_bits as i32 - 1;
+        let mut special = 0u32;
+        for i in 0..LANES {
+            let w = bits[i] & fmt.storage_mask();
+            let biased = (w >> (fmt.sig_bits - 1)) & fmt.emax_biased();
+            let frac = w & fmt.frac_mask();
+            // Normal lanes get the hidden bit OR-ed in; subnormal/zero
+            // lanes keep the raw fraction at the qmin exponent. Both are
+            // mask selects, not branches.
+            let is_norm = (biased != 0) as u64;
+            special |= ((biased == fmt.emax_biased()) as u32) << i;
+            out.sign[i] = w & fmt.sign_bit() != 0;
+            out.sig[i] = frac | (is_norm << (fmt.sig_bits - 1));
+            out.exp[i] = biased.max(1) as i32 - ebias;
+        }
+        special
+    }
+
+    /// One lane block of fused FMAs (`round(a·b + c)`, RNE). Lanes with
+    /// any Inf/NaN operand peel to the scalar [`fma`] spec.
+    pub fn fma_block_rne(
+        fmt: Format,
+        a: &[u64; LANES],
+        b: &[u64; LANES],
+        c: &[u64; LANES],
+        out: &mut [u64; LANES],
+    ) {
+        let mut da = DecodedLanes::zeroed();
+        let mut db = DecodedLanes::zeroed();
+        let mut dc = DecodedLanes::zeroed();
+        let mut special = decode_lanes(fmt, a, &mut da);
+        special |= decode_lanes(fmt, b, &mut db);
+        special |= decode_lanes(fmt, c, &mut dc);
+
+        // Multiply stage: pure SoA loops, exact in u128 (53+53 bits max).
+        let mut psign = [false; LANES];
+        let mut pexp = [0i32; LANES];
+        let mut psig = [0u128; LANES];
+        for i in 0..LANES {
+            psign[i] = da.sign[i] ^ db.sign[i];
+            pexp[i] = da.exp[i] + db.exp[i];
+            psig[i] = da.sig[i] as u128 * db.sig[i] as u128;
+        }
+
+        // Add + round tail per lane; special lanes take the scalar spec.
+        for i in 0..LANES {
+            out[i] = if special & (1 << i) != 0 {
+                fma(fmt, RoundMode::NearestEven, a[i], b[i], c[i]).bits
+            } else {
+                exact_sum_rne_bits(
+                    fmt,
+                    Exact { sign: psign[i], exp: pexp[i], sig: psig[i], sticky: false },
+                    Exact {
+                        sign: dc.sign[i],
+                        exp: dc.exp[i],
+                        sig: dc.sig[i] as u128,
+                        sticky: false,
+                    },
+                )
+            };
+            debug_assert_eq!(
+                out[i],
+                fma(fmt, RoundMode::NearestEven, a[i], b[i], c[i]).bits,
+                "lane {i} diverged from the scalar fused spec: a={:#x} b={:#x} c={:#x}",
+                a[i],
+                b[i],
+                c[i]
+            );
+        }
+    }
+
+    /// One lane block of cascade FMACs: `round(a·b)` then
+    /// `round(p + c)`, both RNE — the CMA units' two-rounding Table-I
+    /// semantics. Lanes with Inf/NaN operands, or whose rounded product
+    /// overflows to Inf, peel to the scalar [`mul`]+[`add`] composition.
+    pub fn cma_block_rne(
+        fmt: Format,
+        a: &[u64; LANES],
+        b: &[u64; LANES],
+        c: &[u64; LANES],
+        out: &mut [u64; LANES],
+    ) {
+        let mut da = DecodedLanes::zeroed();
+        let mut db = DecodedLanes::zeroed();
+        let mut dc = DecodedLanes::zeroed();
+        let mut special = decode_lanes(fmt, a, &mut da);
+        special |= decode_lanes(fmt, b, &mut db);
+        special |= decode_lanes(fmt, c, &mut dc);
+
+        for i in 0..LANES {
+            out[i] = if special & (1 << i) != 0 {
+                let p = mul(fmt, RoundMode::NearestEven, a[i], b[i]);
+                add(fmt, RoundMode::NearestEven, p.bits, c[i]).bits
+            } else {
+                let psign = da.sign[i] ^ db.sign[i];
+                let psig = da.sig[i] as u128 * db.sig[i] as u128;
+                let pbits = round_rne_bits(
+                    fmt,
+                    Exact { sign: psign, exp: da.exp[i] + db.exp[i], sig: psig, sticky: false },
+                );
+                let dp = decode(fmt, pbits);
+                if dp.class == Class::Infinity {
+                    // Rounded product overflowed: the second rounding must
+                    // run Inf arithmetic — scalar spec.
+                    add(fmt, RoundMode::NearestEven, pbits, c[i]).bits
+                } else {
+                    exact_sum_rne_bits(
+                        fmt,
+                        Exact { sign: dp.sign, exp: dp.exp, sig: dp.sig as u128, sticky: false },
+                        Exact {
+                            sign: dc.sign[i],
+                            exp: dc.exp[i],
+                            sig: dc.sig[i] as u128,
+                            sticky: false,
+                        },
+                    )
+                }
+            };
+            debug_assert_eq!(
+                out[i],
+                {
+                    let p = mul(fmt, RoundMode::NearestEven, a[i], b[i]);
+                    add(fmt, RoundMode::NearestEven, p.bits, c[i]).bits
+                },
+                "lane {i} diverged from the scalar cascade spec: a={:#x} b={:#x} c={:#x}",
+                a[i],
+                b[i],
+                c[i]
+            );
+        }
+    }
+
+    /// One lane block of multiplies (`round(a·b)`, RNE) — the chip
+    /// sequencer's `Mul` burst path.
+    pub fn mul_block_rne(fmt: Format, a: &[u64; LANES], b: &[u64; LANES], out: &mut [u64; LANES]) {
+        let mut da = DecodedLanes::zeroed();
+        let mut db = DecodedLanes::zeroed();
+        let mut special = decode_lanes(fmt, a, &mut da);
+        special |= decode_lanes(fmt, b, &mut db);
+        for i in 0..LANES {
+            out[i] = if special & (1 << i) != 0 {
+                mul(fmt, RoundMode::NearestEven, a[i], b[i]).bits
+            } else {
+                let psig = da.sig[i] as u128 * db.sig[i] as u128;
+                round_rne_bits(
+                    fmt,
+                    Exact {
+                        sign: da.sign[i] ^ db.sign[i],
+                        exp: da.exp[i] + db.exp[i],
+                        sig: psig,
+                        sticky: false,
+                    },
+                )
+            };
+            debug_assert_eq!(out[i], mul(fmt, RoundMode::NearestEven, a[i], b[i]).bits);
+        }
+    }
+
+    /// One lane block of adds (`round(a + c)`, RNE) — the chip
+    /// sequencer's `Add` burst path.
+    pub fn add_block_rne(fmt: Format, a: &[u64; LANES], c: &[u64; LANES], out: &mut [u64; LANES]) {
+        let mut da = DecodedLanes::zeroed();
+        let mut dc = DecodedLanes::zeroed();
+        let mut special = decode_lanes(fmt, a, &mut da);
+        special |= decode_lanes(fmt, c, &mut dc);
+        for i in 0..LANES {
+            out[i] = if special & (1 << i) != 0 {
+                add(fmt, RoundMode::NearestEven, a[i], c[i]).bits
+            } else {
+                exact_sum_rne_bits(
+                    fmt,
+                    Exact { sign: da.sign[i], exp: da.exp[i], sig: da.sig[i] as u128, sticky: false },
+                    Exact { sign: dc.sign[i], exp: dc.exp[i], sig: dc.sig[i] as u128, sticky: false },
+                )
+            };
+            debug_assert_eq!(out[i], add(fmt, RoundMode::NearestEven, a[i], c[i]).bits);
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -463,6 +747,74 @@ mod tests {
         // Exact operations raise nothing.
         let r = mul(Format::SP, RoundMode::NearestEven, 3.0f32.to_bits() as u64, 0.5f32.to_bits() as u64);
         assert_eq!(r.flags, Flags::default());
+    }
+
+    #[test]
+    fn lane_blocks_match_scalar_spec_randomized() {
+        use crate::util::Rng;
+        // Raw uniform bit patterns: every class (zero, subnormal, normal,
+        // Inf, NaN) appears, so both the fast path and the peel are hit.
+        for fmt in [Format::SP, Format::DP] {
+            let mut rng = Rng::new(0x1a_e5 ^ fmt.exp_bits as u64);
+            for _ in 0..500 {
+                let mut a = [0u64; lanes::LANES];
+                let mut b = [0u64; lanes::LANES];
+                let mut c = [0u64; lanes::LANES];
+                for i in 0..lanes::LANES {
+                    a[i] = rng.next_u64() & fmt.storage_mask();
+                    b[i] = rng.next_u64() & fmt.storage_mask();
+                    c[i] = rng.next_u64() & fmt.storage_mask();
+                }
+                let mut out = [0u64; lanes::LANES];
+                lanes::fma_block_rne(fmt, &a, &b, &c, &mut out);
+                for i in 0..lanes::LANES {
+                    let want = fma(fmt, RoundMode::NearestEven, a[i], b[i], c[i]).bits;
+                    assert_eq!(out[i], want, "fma lane {i}: {:#x},{:#x},{:#x}", a[i], b[i], c[i]);
+                }
+                lanes::cma_block_rne(fmt, &a, &b, &c, &mut out);
+                for i in 0..lanes::LANES {
+                    let p = mul(fmt, RoundMode::NearestEven, a[i], b[i]);
+                    let want = add(fmt, RoundMode::NearestEven, p.bits, c[i]).bits;
+                    assert_eq!(out[i], want, "cma lane {i}: {:#x},{:#x},{:#x}", a[i], b[i], c[i]);
+                }
+                lanes::mul_block_rne(fmt, &a, &b, &mut out);
+                for i in 0..lanes::LANES {
+                    let want = mul(fmt, RoundMode::NearestEven, a[i], b[i]).bits;
+                    assert_eq!(out[i], want, "mul lane {i}");
+                }
+                lanes::add_block_rne(fmt, &a, &c, &mut out);
+                for i in 0..lanes::LANES {
+                    let want = add(fmt, RoundMode::NearestEven, a[i], c[i]).bits;
+                    assert_eq!(out[i], want, "add lane {i}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn lane_blocks_handle_directed_special_mixes() {
+        // Hand-placed specials in every lane position: Inf·0, NaN
+        // propagation, overflow, subnormal products, exact cancellation.
+        let fmt = Format::SP;
+        let inf = f32::INFINITY.to_bits() as u64;
+        let nan = f32::NAN.to_bits() as u64;
+        let max = f32::MAX.to_bits() as u64;
+        let sub = 1u64; // min subnormal
+        let one = 1.0f32.to_bits() as u64;
+        let none = (-1.0f32).to_bits() as u64;
+        let a = [inf, nan, max, sub, one, 0, inf, one];
+        let b = [0, one, max, sub, one, inf, inf, none];
+        let c = [one, nan, max, sub, none, nan, inf, one];
+        let mut out = [0u64; lanes::LANES];
+        lanes::fma_block_rne(fmt, &a, &b, &c, &mut out);
+        for i in 0..lanes::LANES {
+            assert_eq!(out[i], fma(fmt, RoundMode::NearestEven, a[i], b[i], c[i]).bits, "lane {i}");
+        }
+        lanes::cma_block_rne(fmt, &a, &b, &c, &mut out);
+        for i in 0..lanes::LANES {
+            let p = mul(fmt, RoundMode::NearestEven, a[i], b[i]);
+            assert_eq!(out[i], add(fmt, RoundMode::NearestEven, p.bits, c[i]).bits, "lane {i}");
+        }
     }
 
     #[test]

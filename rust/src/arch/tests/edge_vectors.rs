@@ -122,7 +122,7 @@ fn clif_nan_vectors() -> Vec<(u32, u32, u32)> {
 fn all_datapaths() -> Vec<(FpuConfig, UnitDatapath)> {
     let mut out = Vec::new();
     for cfg in FpuConfig::fpmax_units() {
-        for fidelity in [Fidelity::GateLevel, Fidelity::WordLevel] {
+        for fidelity in [Fidelity::GateLevel, Fidelity::WordLevel, Fidelity::WordSimd] {
             out.push((cfg, UnitDatapath::generate(&cfg, fidelity)));
         }
     }
@@ -155,7 +155,7 @@ fn widen(cfg: &FpuConfig, bits: u32) -> u64 {
 #[test]
 fn clif_fused_expectations_hold_on_sp_fma_both_tiers() {
     let cfg = FpuConfig::sp_fma();
-    for fidelity in [Fidelity::GateLevel, Fidelity::WordLevel] {
+    for fidelity in [Fidelity::GateLevel, Fidelity::WordLevel, Fidelity::WordSimd] {
         let dp = UnitDatapath::generate(&cfg, fidelity);
         for (i, t) in clif_vectors().iter().enumerate() {
             let got = dp.fmac_one(t.a as u64, t.b as u64, t.c as u64) as u32;
@@ -202,6 +202,58 @@ fn clif_regression_vectors_discriminate_fused_from_cascade() {
         sp_cma.fmac_one(a as u64, b as u64, c as u64) as u32,
         cascade.to_bits()
     );
+}
+
+#[test]
+fn clif_vectors_through_the_simd_lane_batch() {
+    // The scalar `fmac_one` of the SIMD tier is the word-level spec; the
+    // lane kernels only run on the *batch* path. Push the whole ported
+    // vector set through `fmac_batch` (28 vectors: three full lane blocks
+    // plus a scalar remainder, with specials peeling in-block) on every
+    // preset.
+    use crate::workloads::throughput::OperandTriple;
+    for cfg in FpuConfig::fpmax_units() {
+        let dp = UnitDatapath::generate(&cfg, Fidelity::WordSimd);
+        let vectors = clif_vectors();
+        let triples: Vec<OperandTriple> = vectors
+            .iter()
+            .map(|t| OperandTriple {
+                a: widen(&cfg, t.a),
+                b: widen(&cfg, t.b),
+                c: widen(&cfg, t.c),
+            })
+            .collect();
+        let mut out = vec![0u64; triples.len()];
+        dp.fmac_batch(&triples, &mut out);
+        for (i, t) in vectors.iter().enumerate() {
+            assert_eq!(
+                out[i],
+                preset_reference(&cfg, t.a, t.b, t.c),
+                "vector {i} on {} via the lane batch",
+                cfg.name()
+            );
+        }
+        // NaN vectors: any NaN is acceptable, also via the batch path.
+        let fmt = cfg.precision.format();
+        let nan_triples: Vec<OperandTriple> = clif_nan_vectors()
+            .iter()
+            .map(|&(a, b, c)| OperandTriple {
+                a: widen(&cfg, a),
+                b: widen(&cfg, b),
+                c: widen(&cfg, c),
+            })
+            .collect();
+        let mut out = vec![0u64; nan_triples.len()];
+        dp.fmac_batch(&nan_triples, &mut out);
+        for (i, &bits) in out.iter().enumerate() {
+            assert_eq!(
+                crate::arch::decode(fmt, bits).class,
+                crate::arch::Class::Nan,
+                "NaN vector {i} on {} via the lane batch: got {bits:#x}",
+                cfg.name()
+            );
+        }
+    }
 }
 
 #[test]

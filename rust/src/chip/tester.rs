@@ -8,7 +8,7 @@
 //! (accumulation tests), with cycle accounting per burst. All four
 //! generated FPUs live on the chip simultaneously, as fabricated.
 
-use crate::arch::engine::{reference_fmac, Datapath};
+use crate::arch::engine::{add_batch, mul_batch, reference_fmac, Datapath};
 use crate::arch::fp::Precision;
 use crate::arch::generator::{FpuConfig, FpuUnit};
 use crate::arch::rounding::RoundMode;
@@ -44,6 +44,10 @@ pub struct FpMaxChip {
     stim_c: RamBank,
     result: RamBank,
     program: RamBank,
+    /// Pooled burst-gather scratch, reused across instructions and runs
+    /// so steady-state sequencing allocates nothing.
+    burst_triples: Vec<OperandTriple>,
+    burst_bits: Vec<u64>,
 }
 
 impl FpMaxChip {
@@ -62,6 +66,8 @@ impl FpMaxChip {
             stim_c: RamBank::new("stim_c", ram_depth),
             result: RamBank::new("result", ram_depth),
             program: RamBank::new("program", 256),
+            burst_triples: Vec::with_capacity(ram_depth),
+            burst_bits: vec![0; ram_depth],
         }
     }
 
@@ -115,20 +121,27 @@ impl FpMaxChip {
                 1
             };
 
-            // Independent FMAC bursts (every operand from RAM or a
-            // constant, default rounding) have no sequential dependence:
-            // the sequencer gathers the whole burst and issues it through
-            // the unified execution engine in one go, exactly as the
-            // silicon streams one op per cycle. Forwarding bursts and
-            // explicit-rounding programs stay on the scalar path below.
-            let independent_burst = matches!(ins.op, Op::Fmac)
-                && !uses_fwd_ab
+            // Independent bursts (every operand from RAM or a constant)
+            // have no sequential dependence: the sequencer gathers the
+            // whole burst into pooled scratch and issues it through the
+            // batched execution layer in one go, exactly as the silicon
+            // streams one op per cycle. FMAC bursts batch at the unit's
+            // default rounding; Mul/Add bursts batch at *any* rounding
+            // mode (the explicit-rounding test programs), RNE through the
+            // SoA lane kernels and directed modes through the scalar
+            // spec. Forwarding bursts and explicit-rounding FMACs stay on
+            // the scalar path below.
+            let independent_burst = !uses_fwd_ab
                 && !uses_fwd_c
-                && ins.rounding == RoundMode::NearestEven;
+                && match ins.op {
+                    Op::Fmac => ins.rounding == RoundMode::NearestEven,
+                    Op::Mul | Op::Add => true,
+                    Op::Nop => false,
+                };
             if independent_burst {
                 let count = ins.repeat as usize + 1;
                 let base = ins.base_addr as usize;
-                let mut triples = Vec::with_capacity(count);
+                self.burst_triples.clear();
                 for i in 0..count {
                     let addr = base + i;
                     let a = match ins.src_a {
@@ -149,11 +162,23 @@ impl FpMaxChip {
                         SrcSel::One => one,
                         SrcSel::Forward => unreachable!("excluded above"),
                     };
-                    triples.push(OperandTriple { a, b, c });
+                    self.burst_triples.push(OperandTriple { a, b, c });
                 }
-                let mut bits = vec![0u64; count];
-                unit.fmac_batch(&triples, &mut bits);
-                for &r in &bits {
+                if self.burst_bits.len() < count {
+                    self.burst_bits.resize(count, 0);
+                }
+                let bits = &mut self.burst_bits[..count];
+                match ins.op {
+                    Op::Fmac => unit.fmac_batch(&self.burst_triples, bits),
+                    Op::Mul => {
+                        mul_batch(unit.format, ins.rounding, &self.burst_triples, bits)
+                    }
+                    Op::Add => {
+                        add_batch(unit.format, ins.rounding, &self.burst_triples, bits)
+                    }
+                    Op::Nop => unreachable!("excluded above"),
+                }
+                for &r in &self.burst_bits[..count] {
                     self.result.write(result_wptr, r)?;
                     result_wptr += 1;
                 }
@@ -322,6 +347,49 @@ mod tests {
                     d1.class == crate::arch::fp::Class::Nan && d2.class == crate::arch::fp::Class::Nan
                 };
                 assert!(got == want || both_nan, "{sel:?} op {i}: {got:#x} vs {want:#x}");
+            }
+        }
+    }
+
+    #[test]
+    fn mul_add_bursts_batch_with_explicit_rounding() {
+        // Explicit-rounding Mul/Add programs now go through the batched
+        // burst path (RNE via the lane kernels, directed modes scalar);
+        // every mode must match the golden expectation bit-for-bit.
+        for mode in RoundMode::ALL {
+            for (op, sel, prec) in [
+                (Op::Mul, UnitSel::SpFma, Precision::Single),
+                (Op::Add, UnitSel::DpCma, Precision::Double),
+            ] {
+                let mut chip = FpMaxChip::new(64);
+                let mut stream = OperandStream::new(prec, OperandMix::Anything, 31);
+                let triples: Vec<(u64, u64, u64)> =
+                    stream.batch(20).into_iter().map(|t| (t.a, t.b, t.c)).collect();
+                load_triples(&mut chip, &triples);
+                let ins = Instruction {
+                    unit: sel,
+                    op,
+                    rounding: mode,
+                    src_a: SrcSel::Ram,
+                    src_b: SrcSel::Ram,
+                    src_c: SrcSel::Ram,
+                    base_addr: 0,
+                    repeat: 19,
+                };
+                chip.jtag().load_bank(BANK_PROGRAM, &[ins.encode() as u64]).unwrap();
+                let stats = chip.run().unwrap();
+                assert_eq!(stats.ops, 20, "{op:?} {mode:?}");
+                // Burst timing: one op per cycle plus the pipeline drain.
+                let lat = chip.unit(sel).latency_full() as u64;
+                assert_eq!(stats.cycles, 20 + lat, "{op:?} {mode:?}");
+                let results = chip.jtag().read_bank(BANK_RESULT, 20).unwrap();
+                for (i, &(a, b, c)) in triples.iter().enumerate() {
+                    let want = expected_result(chip.unit(sel), mode, a, b, c, op);
+                    assert_eq!(
+                        results[i], want,
+                        "{op:?} {mode:?} op {i}: a={a:#x} b={b:#x} c={c:#x}"
+                    );
+                }
             }
         }
     }

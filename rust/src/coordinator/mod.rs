@@ -113,23 +113,32 @@ pub fn verify_batch(
     let pjrt_secs = t0.elapsed().as_secs_f64();
 
     // --- Rust passes through the engine -------------------------------
+    // Two reusable buffers cover all three passes: the fused golden
+    // results are compared against the artifact first, then (for CMA
+    // units) the same buffer is overwritten with the cascade reference —
+    // the engine's `run_into` path allocates nothing further.
     let exec = BatchExecutor::new(workers);
+    let n = triples.len();
+    let mut datapath = vec![0u64; n];
+    let mut reference = vec![0u64; n];
     let t1 = Instant::now();
-    let datapath = exec.run(unit, triples);
+    exec.run_into(unit, triples, &mut datapath);
     let rust_secs = t1.elapsed().as_secs_f64();
-    let fused = exec.run(&GoldenFma { format: precision.format() }, triples);
+    // The chunk hint is now tuned for the ~10× slower gate-level pass;
+    // retime it for the word-tier reference passes below.
+    exec.recalibrate();
+    exec.run_into(&GoldenFma { format: precision.format() }, triples, &mut reference);
+    let artifact_mismatches = collect_mismatches(precision, triples, &out.bits, &reference);
     // CMA units are specified by the cascade; FMA units by the fused
     // golden results already in hand.
-    let cascade = match unit.config.kind {
-        FpuKind::Fma => None,
-        FpuKind::Cma => Some(exec.run(&UnitDatapath::new(unit, Fidelity::WordLevel), triples)),
-    };
-    let unit_want: &[u64] = cascade.as_deref().unwrap_or(&fused);
+    if unit.config.kind == FpuKind::Cma {
+        exec.run_into(&UnitDatapath::new(unit, Fidelity::WordSimd), triples, &mut reference);
+    }
 
     Ok(VerifyReport {
-        ops: triples.len(),
-        artifact_mismatches: collect_mismatches(precision, triples, &out.bits, &fused),
-        datapath_mismatches: collect_mismatches(precision, triples, &datapath, unit_want),
+        ops: n,
+        artifact_mismatches,
+        datapath_mismatches: collect_mismatches(precision, triples, &datapath, &reference),
         artifact_toggles: out.toggles,
         rust_secs,
         pjrt_secs,
@@ -146,12 +155,19 @@ pub fn verify_datapath_only(
 ) -> VerifyReport {
     let precision = unit.config.precision;
     let exec = BatchExecutor::new(workers);
+    let n = triples.len();
+    let mut got = vec![0u64; n];
+    let mut want = vec![0u64; n];
     let t1 = Instant::now();
-    let got = exec.run(unit, triples);
+    exec.run_into(unit, triples, &mut got);
     let rust_secs = t1.elapsed().as_secs_f64();
-    let want = exec.run(&UnitDatapath::new(unit, Fidelity::WordLevel), triples);
+    // The word spec runs through the lane-batched tier: same bits, and
+    // the verification loop stops paying the scalar decode tax. Retune
+    // the chunk hint first — it was calibrated on the gate-level pass.
+    exec.recalibrate();
+    exec.run_into(&UnitDatapath::new(unit, Fidelity::WordSimd), triples, &mut want);
     VerifyReport {
-        ops: triples.len(),
+        ops: n,
         artifact_mismatches: Vec::new(),
         datapath_mismatches: collect_mismatches(precision, triples, &got, &want),
         artifact_toggles: 0,

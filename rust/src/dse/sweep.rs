@@ -89,6 +89,9 @@ pub fn arch_sweep(
 /// skipped, which is what makes activity-aware Fig. 3 / Fig. 4
 /// regeneration tractable. Pass [`Fidelity::GateLevel`] to score from
 /// true toggle counts instead (an order of magnitude slower).
+/// [`Fidelity::WordSimd`] scores identically to word level — tracked
+/// runs observe the same word-level activity — so either word tier is a
+/// valid choice here.
 pub fn arch_sweep_measured(
     precision: Precision,
     kind: FpuKind,
@@ -101,12 +104,15 @@ pub fn arch_sweep_measured(
     let triples: Vec<OperandTriple> =
         OperandStream::new(precision, OperandMix::Finite, seed).batch(sample_ops);
     let exec = BatchExecutor::auto();
+    // One result buffer serves every candidate: ~42 designs × thousands
+    // of operands stay allocation-free through `run_tracked_into`.
+    let mut bits = vec![0u64; triples.len()];
     arch_space(precision, kind)
         .into_iter()
         .filter_map(|cfg| {
             let unit = FpuUnit::generate(&cfg);
             let dp = UnitDatapath::new(&unit, fidelity);
-            let (_, activity) = exec.run_tracked(&dp, &triples);
+            let activity = exec.run_tracked_into(&dp, &triples, &mut bits);
             evaluate_measured(&unit, tech, op, 1.0, &activity)
                 .map(|eff| DsePoint { config: cfg, eff })
         })
@@ -263,6 +269,38 @@ mod tests {
             assert!((m.eff.freq_ghz - p.eff.freq_ghz).abs() < 1e-12);
             let ratio = m.eff.pj_per_flop / p.eff.pj_per_flop;
             assert!((0.3..=2.5).contains(&ratio), "{:?}: ratio {ratio}", m.config);
+        }
+    }
+
+    #[test]
+    fn measured_sweep_word_simd_matches_word_level() {
+        // The lane-batched tier must not shift a single DSE score: same
+        // bits, same word-level activity observables, same energy axis.
+        let tech = Technology::fdsoi28();
+        let op = OperatingPoint::new(1.0, 0.0);
+        let word = arch_sweep_measured(
+            Precision::Single,
+            FpuKind::Cma,
+            &tech,
+            op,
+            400,
+            Fidelity::WordLevel,
+            9,
+        );
+        let simd = arch_sweep_measured(
+            Precision::Single,
+            FpuKind::Cma,
+            &tech,
+            op,
+            400,
+            Fidelity::WordSimd,
+            9,
+        );
+        assert_eq!(word.len(), simd.len());
+        for (w, s) in word.iter().zip(&simd) {
+            assert_eq!(w.config, s.config);
+            assert_eq!(w.eff.pj_per_flop, s.eff.pj_per_flop, "{:?}", w.config);
+            assert_eq!(w.eff.gflops_per_mm2, s.eff.gflops_per_mm2);
         }
     }
 

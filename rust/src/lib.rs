@@ -15,13 +15,15 @@
 //!   generates RTL.
 //! * [`arch::engine`] — the unified batched execution layer on top of the
 //!   datapaths: the [`arch::engine::Datapath`] trait (scalar + chunked
-//!   batch execution, activity accumulation), two **fidelity tiers**
+//!   batch execution, activity accumulation), three **fidelity tiers**
 //!   ([`arch::engine::Fidelity::GateLevel`] simulates every 3:2 row and
 //!   counts toggles; [`arch::engine::Fidelity::WordLevel`] skips the gate
-//!   simulation but stays bit-identical, guarded by sampled cross-checks),
-//!   and the thread-parallel [`arch::engine::BatchExecutor`] that the
-//!   coordinator, the DSE sweeps, the chip sequencer, and the benches all
-//!   issue through.
+//!   simulation but stays bit-identical, guarded by sampled cross-checks;
+//!   [`arch::engine::Fidelity::WordSimd`] restructures the same spec into
+//!   branch-light SoA lane kernels for batch throughput), and the
+//!   thread-parallel, allocation-free [`arch::engine::BatchExecutor`]
+//!   that the coordinator, the DSE sweeps, the chip sequencer, and the
+//!   benches all issue through.
 //! * [`timing`] — FO4-based delay model: per-component logic depth, the
 //!   α-power-law FO4(V_DD, V_t), and pipeline stage partitioning.
 //! * [`energy`] — 28nm UTBB FDSOI technology model: per-component effective

@@ -10,12 +10,14 @@
 //! fpmax fig4   [--precision sp|dp]  # latency tradeoff curves
 //! fpmax calib                       # calibration residuals vs Table I
 //! fpmax sweep  [--precision sp|dp] [--kind fma|cma]
-//! fpmax verify [--unit sp_fma] [--ops 100000] [--fidelity gate|word]
+//! fpmax verify [--unit sp_fma] [--ops 100000] [--fidelity gate|word|word-simd]
 //! fpmax selftest [--ops 65536] [--artifacts DIR] # chip + PJRT cross-check
 //! ```
 //!
 //! `verify --fidelity word` runs the batched word-level tier with a
-//! sampled gate-level cross-check — the fast path the DSE sweeps use.
+//! sampled gate-level cross-check — the fast path the DSE sweeps use;
+//! `--fidelity word-simd` runs the lane-batched SoA kernels under the
+//! same cross-check machinery.
 
 use fpmax::arch::fp::Precision;
 use fpmax::arch::generator::{FpuConfig, FpuKind, FpuUnit};
@@ -111,7 +113,8 @@ fn main() -> fpmax::Result<()> {
             let fidelity = match args.get("fidelity").unwrap_or("gate") {
                 "gate" => fpmax::arch::engine::Fidelity::GateLevel,
                 "word" => fpmax::arch::engine::Fidelity::WordLevel,
-                other => anyhow::bail!("--fidelity must be gate or word, got {other}"),
+                "word-simd" | "simd" => fpmax::arch::engine::Fidelity::WordSimd,
+                other => anyhow::bail!("--fidelity must be gate, word or word-simd, got {other}"),
             };
             let unit = FpuUnit::generate(&cfg);
             let mut stream = OperandStream::new(cfg.precision, OperandMix::Anything, seed);
@@ -129,16 +132,18 @@ fn main() -> fpmax::Result<()> {
                     );
                     anyhow::ensure!(r.clean(), "datapath mismatches: {:?}", r.datapath_mismatches);
                 }
-                fpmax::arch::engine::Fidelity::WordLevel => {
-                    // Fast tier with sampled gate-level cross-check.
+                tier => {
+                    // Fast word tier (scalar or lane-batched SIMD) with a
+                    // sampled gate-level cross-check.
                     let exec = fpmax::arch::engine::BatchExecutor::new(workers);
                     let t0 = std::time::Instant::now();
-                    let (_, check) = exec.run_checked(&unit, &triples, 64);
+                    let (_, check) = exec.run_checked_tier(&unit, tier, &triples, 64);
                     let secs = t0.elapsed().as_secs_f64();
                     println!(
-                        "{}: {} ops word-level, {} gate-checked, {} mismatches, {:.2} Mops/s ({} workers)",
+                        "{}: {} ops {}-level, {} gate-checked, {} mismatches, {:.2} Mops/s ({} workers)",
                         cfg.name(),
                         triples.len(),
+                        tier.name(),
                         check.sampled,
                         check.mismatches.len(),
                         triples.len() as f64 / secs / 1e6,
@@ -146,7 +151,8 @@ fn main() -> fpmax::Result<()> {
                     );
                     anyhow::ensure!(
                         check.clean(),
-                        "word-level diverged from gate-level at indices {:?}",
+                        "{} tier diverged from gate level at indices {:?}",
+                        tier.name(),
                         check.mismatches
                     );
                 }

@@ -71,6 +71,11 @@ pub enum OperandMix {
     /// Values near 1.0 (dense-kernel-like activity; exercises the
     /// accumulation cancellation paths rarely).
     Balanced,
+    /// Roughly half the operands are drawn from the special palette
+    /// (±zero, subnormal, ±Inf, NaN) — the adversarial diet for the
+    /// lane-kernel peel path and the clock-gating accounting, far denser
+    /// in specials than uniform-bit sampling.
+    SpecialHeavy,
 }
 
 /// Deterministic operand-stream generator.
@@ -94,6 +99,15 @@ impl OperandStream {
     /// Generate a batch of `n` triples.
     pub fn batch(&mut self, n: usize) -> Vec<OperandTriple> {
         (0..n).map(|_| self.next_triple()).collect()
+    }
+
+    /// Refill a caller-provided buffer in place — the allocation-free
+    /// companion of [`OperandStream::batch`] for steady-state serving
+    /// loops (same draw order at equal seeds).
+    pub fn fill(&mut self, out: &mut [OperandTriple]) {
+        for slot in out.iter_mut() {
+            *slot = self.next_triple();
+        }
     }
 
     /// Generate a structure-of-arrays batch of `n` triples (same draw
@@ -120,6 +134,32 @@ impl OperandStream {
             (Precision::Double, OperandMix::Balanced) => {
                 (self.rng.f64() * 4.0 - 2.0).to_bits()
             }
+            (_, OperandMix::SpecialHeavy) => self.special_heavy_operand(),
+        }
+    }
+
+    /// One SpecialHeavy draw: each special class gets a 1-in-8 slice, the
+    /// remaining half of the distribution is the standard finite diet.
+    fn special_heavy_operand(&mut self) -> u64 {
+        let fmt = self.precision.format();
+        let sign = self.rng.chance(0.5);
+        match self.rng.below(8) {
+            0 => fmt.zero(sign),
+            1 => {
+                // Nonzero subnormal: biased exponent 0, random fraction.
+                let frac = (self.rng.next_u64() & fmt.frac_mask()) | 1;
+                fmt.zero(sign) | frac
+            }
+            2 => fmt.inf(sign),
+            3 => {
+                // NaN with a random (nonzero) payload, either sign.
+                let payload = (self.rng.next_u64() & fmt.frac_mask()) | (fmt.hidden_bit() >> 1);
+                fmt.inf(sign) | payload
+            }
+            _ => match self.precision {
+                Precision::Single => self.rng.f32_operand() as u64,
+                Precision::Double => self.rng.f64_operand(),
+            },
         }
     }
 }
@@ -179,6 +219,43 @@ mod tests {
             let v = f64::from_bits(s.next_triple().b);
             assert!((-2.0..2.0).contains(&v));
         }
+    }
+
+    #[test]
+    fn special_heavy_mix_covers_all_classes() {
+        use crate::arch::fp::{decode, Class};
+        for precision in [Precision::Single, Precision::Double] {
+            let fmt = precision.format();
+            let mut s = OperandStream::new(precision, OperandMix::SpecialHeavy, 11);
+            let mut counts = [0usize; 5];
+            for _ in 0..4_000 {
+                let t = s.next_triple();
+                for bits in [t.a, t.b, t.c] {
+                    let idx = match decode(fmt, bits).class {
+                        Class::Zero => 0,
+                        Class::Subnormal => 1,
+                        Class::Normal => 2,
+                        Class::Infinity => 3,
+                        Class::Nan => 4,
+                    };
+                    counts[idx] += 1;
+                }
+            }
+            for (i, &c) in counts.iter().enumerate() {
+                assert!(c > 100, "{precision:?}: class {i} undersampled ({c})");
+            }
+            // Specials really are heavy: ≳ a third of all draws.
+            let specials = counts[0] + counts[1] + counts[3] + counts[4];
+            assert!(specials * 3 > 12_000, "specials too rare: {specials}");
+        }
+    }
+
+    #[test]
+    fn fill_matches_batch_at_equal_seed() {
+        let want = OperandStream::new(Precision::Single, OperandMix::SpecialHeavy, 8).batch(333);
+        let mut buf = vec![OperandTriple { a: 0, b: 0, c: 0 }; 333];
+        OperandStream::new(Precision::Single, OperandMix::SpecialHeavy, 8).fill(&mut buf);
+        assert_eq!(want, buf);
     }
 
     #[test]

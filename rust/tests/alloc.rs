@@ -1,0 +1,116 @@
+//! Allocation accounting for the engine hot path: repeated
+//! `BatchExecutor` runs into a reused caller-provided buffer must be
+//! **zero-allocation** after warmup on the serial path, and must never
+//! allocate proportionally to the batch size on the parallel path (the
+//! only parallel allocations are the O(workers) scoped-thread
+//! bookkeeping).
+//!
+//! Counted via a global-allocator shim — this test binary's allocator
+//! wraps `System` with atomic counters, so any hidden `Vec`/`collect()`
+//! on the hot path shows up as a hard failure.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use fpmax::arch::engine::{BatchExecutor, Datapath, Fidelity, UnitDatapath};
+use fpmax::arch::generator::{FpuConfig, FpuUnit};
+use fpmax::workloads::throughput::{OperandMix, OperandStream};
+
+struct CountingAlloc;
+
+static ALLOC_CALLS: AtomicU64 = AtomicU64::new(0);
+static ALLOC_BYTES: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOC_CALLS.fetch_add(1, Ordering::Relaxed);
+        ALLOC_BYTES.fetch_add(layout.size() as u64, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOC_CALLS.fetch_add(1, Ordering::Relaxed);
+        ALLOC_BYTES.fetch_add(layout.size() as u64, Ordering::Relaxed);
+        System.alloc_zeroed(layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOC_CALLS.fetch_add(1, Ordering::Relaxed);
+        ALLOC_BYTES.fetch_add(new_size as u64, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+#[global_allocator]
+static ALLOCATOR: CountingAlloc = CountingAlloc;
+
+/// Allocation calls and bytes attributable to `f`.
+fn allocations<F: FnOnce()>(f: F) -> (u64, u64) {
+    let c0 = ALLOC_CALLS.load(Ordering::Relaxed);
+    let b0 = ALLOC_BYTES.load(Ordering::Relaxed);
+    f();
+    (
+        ALLOC_CALLS.load(Ordering::Relaxed) - c0,
+        ALLOC_BYTES.load(Ordering::Relaxed) - b0,
+    )
+}
+
+#[test]
+fn serial_batch_reuse_is_allocation_free_after_warmup() {
+    let unit = FpuUnit::generate(&FpuConfig::sp_fma());
+    let word = UnitDatapath::new(&unit, Fidelity::WordLevel);
+    let simd = UnitDatapath::new(&unit, Fidelity::WordSimd);
+    let triples =
+        OperandStream::new(fpmax::arch::Precision::Single, OperandMix::Anything, 42).batch(20_000);
+    let mut out = vec![0u64; triples.len()];
+    let exec = BatchExecutor::serial();
+
+    // Warmup: first touches of lazy TLS / libstd internals.
+    exec.run_into(&word, &triples, &mut out);
+    exec.run_into(&simd, &triples, &mut out);
+    let mut acc = fpmax::arch::ActivityAccumulator::default();
+
+    let (calls, bytes) = allocations(|| {
+        for _ in 0..8 {
+            exec.run_into(&simd, &triples, &mut out);
+            exec.run_into(&word, &triples, &mut out);
+            acc.merge(&exec.run_tracked_into(&word, &triples, &mut out));
+        }
+    });
+    assert_eq!(
+        (calls, bytes),
+        (0, 0),
+        "serial engine hot path allocated: {calls} calls / {bytes} bytes"
+    );
+    assert_eq!(acc.ops, 8 * triples.len() as u64);
+    // The results are real (paranoia against the loop being optimized out).
+    assert_eq!(out[7], simd.fmac_one(triples[7].a, triples[7].b, triples[7].c));
+}
+
+#[test]
+fn parallel_batch_reuse_allocations_do_not_scale_with_batch_size() {
+    let unit = FpuUnit::generate(&FpuConfig::sp_fma());
+    let simd = UnitDatapath::new(&unit, Fidelity::WordSimd);
+    let triples =
+        OperandStream::new(fpmax::arch::Precision::Single, OperandMix::Finite, 7).batch(200_000);
+    let mut out = vec![0u64; triples.len()];
+    let exec = BatchExecutor::new(4);
+
+    // Warmup calibrates the chunk size and touches thread-spawn paths.
+    exec.run_into(&simd, &triples, &mut out);
+
+    let (_, bytes) = allocations(|| {
+        exec.run_into(&simd, &triples, &mut out);
+    });
+    // A 200k-op batch would need 1.6 MB if the executor still collect()ed
+    // results; scoped-thread bookkeeping for 4 workers is a few KiB.
+    assert!(
+        bytes < 256 * 1024,
+        "parallel run allocated {bytes} bytes for a 200k-op batch — \
+         something on the hot path is materializing per-op state"
+    );
+}

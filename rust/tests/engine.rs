@@ -17,10 +17,11 @@ fn stream(cfg: &FpuConfig, mix: OperandMix, n: usize, seed: u64) -> Vec<OperandT
 #[test]
 fn prop_fmac_batch_equals_n_scalar_ops_all_presets() {
     // The issue's core property: for random streams on all four presets,
-    // `fmac_batch` must be bit-identical to N× `fmac_one` — at both
-    // fidelity tiers, at several batch shapes that exercise the chunking.
+    // `fmac_batch` must be bit-identical to N× `fmac_one` — at every
+    // fidelity tier, at several batch shapes that exercise the chunking
+    // (and, for word-simd, the lane blocks plus their scalar remainder).
     for cfg in FpuConfig::fpmax_units() {
-        for fidelity in [Fidelity::GateLevel, Fidelity::WordLevel] {
+        for fidelity in [Fidelity::GateLevel, Fidelity::WordLevel, Fidelity::WordSimd] {
             let dp = UnitDatapath::generate(&cfg, fidelity);
             for (seed, n) in [(0xBA7C4 ^ cfg.stages as u64, 4_097usize), (99, 1_000), (7, 33)] {
                 let triples = stream(&cfg, OperandMix::Anything, n, seed);
@@ -78,6 +79,65 @@ fn prop_word_level_sampled_crosscheck_clean_all_presets() {
         let want = BatchExecutor::auto().run(&unit, &triples);
         assert_eq!(out, want, "{}", cfg.name());
     }
+}
+
+#[test]
+fn prop_simd_equals_word_equals_gate_all_presets_all_mixes() {
+    // The word-simd acceptance property: on every preset, over random
+    // operand mixes including subnormal/NaN/Inf-heavy ones, the
+    // lane-batched tier, the scalar word tier and the gate-level datapath
+    // produce identical bits at every batch shape (odd lengths exercise
+    // the scalar remainder after the lane blocks).
+    for cfg in FpuConfig::fpmax_units() {
+        let gate = UnitDatapath::generate(&cfg, Fidelity::GateLevel);
+        let word = UnitDatapath::generate(&cfg, Fidelity::WordLevel);
+        let simd = UnitDatapath::generate(&cfg, Fidelity::WordSimd);
+        for mix in [OperandMix::Anything, OperandMix::SpecialHeavy, OperandMix::Finite] {
+            for (seed, n) in [(0x51AD ^ cfg.stages as u64, 2_051usize), (3, 64), (19, 7)] {
+                let triples = stream(&cfg, mix, n, seed);
+                let mut got_word = vec![0u64; n];
+                let mut got_simd = vec![0u64; n];
+                word.fmac_batch(&triples, &mut got_word);
+                simd.fmac_batch(&triples, &mut got_simd);
+                for (i, t) in triples.iter().enumerate() {
+                    let g = gate.fmac_one(t.a, t.b, t.c);
+                    assert_eq!(
+                        got_simd[i], g,
+                        "{} {mix:?} n={n} slot {i}: simd vs gate (a={:#x} b={:#x} c={:#x})",
+                        cfg.name(), t.a, t.b, t.c
+                    );
+                    assert_eq!(got_word[i], g, "{} {mix:?} n={n} slot {i}: word vs gate", cfg.name());
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_simd_executor_invariant_over_worker_counts() {
+    // The chunk-pulling parallel path must be bit-invariant for the lane
+    // tier too, whatever the worker count, chunk calibration, or
+    // remainder shape.
+    let cfg = FpuConfig::sp_cma();
+    let simd = UnitDatapath::generate(&cfg, Fidelity::WordSimd);
+    check_cases(0x51AD5EED, 10, |r: &mut Rng| {
+        (1 + r.below(32) as usize, 1 + r.below(4_000) as usize, r.next_u64())
+    }, |&(workers, n, seed)| {
+        let triples = stream(&cfg, OperandMix::SpecialHeavy, n, seed);
+        let want: Vec<u64> = triples.iter().map(|t| simd.fmac_one(t.a, t.b, t.c)).collect();
+        let exec = BatchExecutor::new(workers);
+        let mut got = vec![0u64; n];
+        exec.run_into(&simd, &triples, &mut got);
+        if got != want {
+            return Err(format!("first run diverged at workers={workers} n={n}"));
+        }
+        // Second run reuses the buffer and the persisted calibration.
+        exec.run_into(&simd, &triples, &mut got);
+        if got != want {
+            return Err(format!("calibrated rerun diverged at workers={workers} n={n}"));
+        }
+        Ok(())
+    });
 }
 
 #[test]
