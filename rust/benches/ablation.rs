@@ -148,19 +148,21 @@ fn main() {
             // One untimed warmup per tier absorbs the executor's one-shot
             // serial calibration pass, keeping it out of the measurement;
             // recalibrate between tiers (per-op cost differs ~10×).
-            exec.run_into(&unit, &triples, &mut out);
+            exec.run_into(&unit, &triples, &mut out).unwrap();
             let batch_gate = time(&mut || {
-                exec.run_into(&unit, &triples, &mut out);
+                exec.run_into(&unit, &triples, &mut out).unwrap();
                 std::hint::black_box(out[0]);
             });
             exec.recalibrate();
-            exec.run_into(&word, &triples, &mut out);
+            exec.run_into(&word, &triples, &mut out).unwrap();
             let batch_word = time(&mut || {
-                exec.run_into(&word, &triples, &mut out);
+                exec.run_into(&word, &triples, &mut out).unwrap();
                 std::hint::black_box(out[0]);
             });
+            exec.recalibrate();
+            exec.run_into(&simd, &triples, &mut out).unwrap();
             let batch_simd = time(&mut || {
-                exec.run_into(&simd, &triples, &mut out);
+                exec.run_into(&simd, &triples, &mut out).unwrap();
                 std::hint::black_box(out[0]);
             });
             exec.recalibrate(); // next unit recalibrates from scratch

@@ -31,6 +31,7 @@ struct UnitRow {
     batch_word: f64,
     simd_word_serial: f64,
     batch_word_simd: f64,
+    windowed_word_simd: f64,
     crosscheck_sampled: usize,
     crosscheck_mismatches: usize,
     simd_crosscheck_sampled: usize,
@@ -49,7 +50,17 @@ impl UnitRow {
     fn simd_speedup(&self) -> f64 {
         self.simd_word_serial / self.scalar_word
     }
+
+    /// Cost of time-resolved tracing: windowed-tracked word-simd run vs
+    /// the untracked batch (×; 1.0 = free, target < 1.05 on toolchain
+    /// hosts — the CI smoke gate enforces < 2× via `verify --bb`).
+    fn trace_overhead(&self) -> f64 {
+        self.batch_word_simd / self.windowed_word_simd
+    }
 }
+
+/// Trace window width the windowed rows use (ops per window).
+const TRACE_WINDOW_OPS: usize = 4096;
 
 fn main() {
     let fast = std::env::var("FPMAX_BENCH_FAST").as_deref() == Ok("1");
@@ -91,7 +102,7 @@ fn main() {
         exec.recalibrate();
         let batch_gate = runner
             .run(&format!("engine/{}/batch_gate", cfg.name()), Some(n as f64), || {
-                exec.run_into(&unit, &triples, &mut out);
+                exec.run_into(&unit, &triples, &mut out).unwrap();
                 black_box(out[0]);
             })
             .throughput()
@@ -111,7 +122,7 @@ fn main() {
         exec.recalibrate();
         let batch_word = runner
             .run(&format!("engine/{}/batch_word", cfg.name()), Some(n as f64), || {
-                exec.run_into(&word, &triples, &mut out);
+                exec.run_into(&word, &triples, &mut out).unwrap();
                 black_box(out[0]);
             })
             .throughput()
@@ -121,7 +132,7 @@ fn main() {
         // committed lane-kernel speedup.
         let simd_word_serial = runner
             .run(&format!("engine/{}/simd_word_serial", cfg.name()), Some(n as f64), || {
-                serial.run_into(&simd, &triples, &mut out);
+                serial.run_into(&simd, &triples, &mut out).unwrap();
                 black_box(out[0]);
             })
             .throughput()
@@ -130,7 +141,20 @@ fn main() {
         exec.recalibrate();
         let batch_word_simd = runner
             .run(&format!("engine/{}/batch_word_simd", cfg.name()), Some(n as f64), || {
-                exec.run_into(&simd, &triples, &mut out);
+                exec.run_into(&simd, &triples, &mut out).unwrap();
+                black_box(out[0]);
+            })
+            .throughput()
+            .unwrap();
+
+        // Time-resolved tracing cost: the windowed-tracked run against
+        // the untracked batch above (same tier, same chunk calibration).
+        let windowed_word_simd = runner
+            .run(&format!("engine/{}/windowed_word_simd", cfg.name()), Some(n as f64), || {
+                let trace = exec
+                    .run_windowed_into(&simd, &triples, &mut out, TRACE_WINDOW_OPS)
+                    .unwrap();
+                black_box(trace.len());
                 black_box(out[0]);
             })
             .throughput()
@@ -164,6 +188,7 @@ fn main() {
             batch_word,
             simd_word_serial,
             batch_word_simd,
+            windowed_word_simd,
             crosscheck_sampled: check.sampled,
             crosscheck_mismatches: check.mismatches.len(),
             simd_crosscheck_sampled: simd_check.sampled,
@@ -174,7 +199,7 @@ fn main() {
     println!();
     for r in &rows {
         println!(
-            "{:<7}  scalar-gate {:>8.2} Mops/s  batch-gate {:>8.2}  scalar-word {:>8.2}  simd-word {:>8.2} ({:.2}× lane)  batch-word {:>8.2}  batch-simd {:>8.2}  → {:.1}× (crosschecks {}/{} and {}/{} clean)",
+            "{:<7}  scalar-gate {:>8.2} Mops/s  batch-gate {:>8.2}  scalar-word {:>8.2}  simd-word {:>8.2} ({:.2}× lane)  batch-word {:>8.2}  batch-simd {:>8.2}  windowed-simd {:>8.2} ({:.2}× trace cost)  → {:.1}× (crosschecks {}/{} and {}/{} clean)",
             r.name,
             r.scalar_gate / 1e6,
             r.batch_gate / 1e6,
@@ -183,6 +208,8 @@ fn main() {
             r.simd_speedup(),
             r.batch_word / 1e6,
             r.batch_word_simd / 1e6,
+            r.windowed_word_simd / 1e6,
+            r.trace_overhead(),
             r.speedup(),
             r.crosscheck_sampled - r.crosscheck_mismatches,
             r.crosscheck_sampled,
@@ -209,6 +236,7 @@ fn render_json(ops: usize, workers: usize, rows: &[UnitRow]) -> String {
     s.push_str("  \"measured\": true,\n");
     s.push_str(&format!("  \"ops_per_unit\": {ops},\n"));
     s.push_str(&format!("  \"workers\": {workers},\n"));
+    s.push_str(&format!("  \"trace_window_ops\": {TRACE_WINDOW_OPS},\n"));
     s.push_str("  \"units\": {\n");
     for (i, r) in rows.iter().enumerate() {
         s.push_str(&format!("    \"{}\": {{\n", r.name));
@@ -223,6 +251,14 @@ fn render_json(ops: usize, workers: usize, rows: &[UnitRow]) -> String {
         s.push_str(&format!(
             "      \"batch_word_simd_ops_per_s\": {:.0},\n",
             r.batch_word_simd
+        ));
+        s.push_str(&format!(
+            "      \"windowed_word_simd_ops_per_s\": {:.0},\n",
+            r.windowed_word_simd
+        ));
+        s.push_str(&format!(
+            "      \"trace_overhead_windowed_vs_untracked\": {:.2},\n",
+            r.trace_overhead()
         ));
         s.push_str(&format!(
             "      \"speedup_batch_word_vs_scalar_gate\": {:.2},\n",

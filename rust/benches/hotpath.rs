@@ -56,29 +56,32 @@ fn main() {
             black_box(acc);
         });
         runner.run("engine/sp_fma/batch_gate", Some(n as f64), || {
-            exec.run_into(&unit, &triples, &mut out);
+            exec.run_into(&unit, &triples, &mut out).unwrap();
             black_box(out[0]);
         });
         // Recalibrate between tiers: the chunk hint tuned for one
         // datapath's per-op cost is ~10× off for the next.
         exec.recalibrate();
         runner.run("engine/sp_fma/batch_word", Some(n as f64), || {
-            exec.run_into(&word, &triples, &mut out);
+            exec.run_into(&word, &triples, &mut out).unwrap();
             black_box(out[0]);
         });
         exec.recalibrate();
         runner.run("engine/sp_fma/batch_word_simd", Some(n as f64), || {
-            exec.run_into(&simd, &triples, &mut out);
+            exec.run_into(&simd, &triples, &mut out).unwrap();
             black_box(out[0]);
         });
         exec.recalibrate();
         runner.run("engine/sp_fma/batch_word_checked", Some(n as f64), || {
-            let check = exec.run_checked_into(&unit, Fidelity::WordLevel, &triples, 997, &mut out);
+            let check =
+                exec.run_checked_into(&unit, Fidelity::WordLevel, &triples, 997, &mut out).unwrap();
             assert!(check.clean());
             black_box(out[0]);
         });
+        exec.recalibrate();
         runner.run("engine/sp_fma/batch_simd_checked", Some(n as f64), || {
-            let check = exec.run_checked_into(&unit, Fidelity::WordSimd, &triples, 997, &mut out);
+            let check =
+                exec.run_checked_into(&unit, Fidelity::WordSimd, &triples, 997, &mut out).unwrap();
             assert!(check.clean());
             black_box(out[0]);
         });

@@ -44,8 +44,8 @@ pub mod softfloat;
 pub mod tree;
 
 pub use engine::{
-    ActivityAccumulator, BatchExecutor, CrossCheck, Datapath, Fidelity, GoldenFma, UnitDatapath,
-    WordSimdUnit, WordUnit,
+    ActivityAccumulator, ActivityTrace, ActivityWindow, BatchExecutor, BatchLenError, CrossCheck,
+    Datapath, Fidelity, GoldenFma, UnitDatapath, WordSimdUnit, WordUnit,
 };
 pub use fp::{decode, encode_finite, Class, Decoded, Format, Precision};
 pub use generator::{FpuConfig, FpuKind, FpuUnit, StructureReport};

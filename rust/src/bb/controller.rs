@@ -12,7 +12,18 @@
 //! V_t. Both costs are modelled; the controller only wins when idle
 //! periods are long compared to the settle time, exactly as the paper's
 //! "lowering BB for low-utilization period" phrasing implies.
+//!
+//! Since the engine grew time-resolved [`ActivityTrace`]s, the adaptive
+//! policy consumes **measured** traces directly ([`run_energy_trace`]):
+//! idle/low-occupancy windows trigger the bias drop with the modelled
+//! settle cost, and each active window's dynamic energy is scaled by its
+//! own measured toggle statistics instead of the run-level average. The
+//! original [`UtilizationProfile`] path ([`run_energy`]) is a thin shim
+//! over the same accounting core (a profile is just a trace with
+//! synthetic occupancy — see [`ActivityTrace::from_profile`]), so the
+//! Fig. 4 reproduction is unchanged.
 
+use crate::arch::engine::ActivityTrace;
 use crate::arch::generator::FpuUnit;
 use crate::energy::components::unit_cost;
 use crate::energy::tech::{OperatingPoint, Technology};
@@ -66,54 +77,83 @@ pub struct BbRunEnergy {
     pub pj_per_op: f64,
 }
 
-/// Simulate the energy of running `profile` on `unit` at `vdd` under a
-/// bias policy. The unit issues one FMAC per active cycle (the Fig. 4
-/// latency units are kept fed during bursts) and is clock-gated when
-/// idle.
-pub fn run_energy(
-    unit: &FpuUnit,
-    tech: &Technology,
-    vdd: f64,
-    policy: BbPolicy,
-    profile: &UtilizationProfile,
-) -> Option<BbRunEnergy> {
-    let cost = unit_cost(unit);
-    let (vbb_active, vbb_idle, settle) = match policy {
+/// One run of the shared accounting core: a stretch of consecutive
+/// active cycles (with a dynamic-energy activity scale) or of
+/// consecutive idle cycles.
+#[derive(Debug, Clone, Copy)]
+struct ActivityRun {
+    active: bool,
+    cycles: u64,
+    /// Data-activity scale of the active cycles' dynamic energy (1.0 =
+    /// the calibrated average; see `ActivityAccumulator::activity_scale`).
+    scale: f64,
+}
+
+/// The levels a policy resolves to: (active V_BB, idle V_BB, settle).
+fn policy_levels(policy: BbPolicy) -> (f64, f64, u64) {
+    match policy {
         BbPolicy::Static { vbb } => (vbb, vbb, 0),
         BbPolicy::Adaptive { vbb_active, vbb_idle, settle_cycles } => {
             (vbb_active, vbb_idle, settle_cycles)
         }
-    };
+    }
+}
+
+/// The accounting core shared by the profile path and the trace path:
+/// integrate dynamic, leakage and bias-transition energy over a stream
+/// of active/idle runs. Consecutive idle runs are merged before the
+/// settle-time decision, so window-granular producers see the same
+/// contiguous gaps a segment-granular profile would.
+fn energy_of_runs(
+    unit: &FpuUnit,
+    tech: &Technology,
+    vdd: f64,
+    policy: BbPolicy,
+    runs: impl Iterator<Item = ActivityRun>,
+) -> Option<BbRunEnergy> {
+    let cost = unit_cost(unit);
+    let (vbb_active, vbb_idle, settle) = policy_levels(policy);
     // Timing is set by the *active* operating point; the unit never
     // computes under idle bias.
     let t = timing::timing(&unit.config, tech, OperatingPoint::new(vdd, vbb_active))?;
     let cycle_s = t.cycle_ps * 1e-12;
     let leak_active_w = tech.leakage_mw(cost.area_mm2, OperatingPoint::new(vdd, vbb_active)) * 1e-3;
     let leak_idle_w = tech.leakage_mw(cost.area_mm2, OperatingPoint::new(vdd, vbb_idle)) * 1e-3;
-    let e_op_j = cost.dyn_energy_pj(vdd, 1.0) * 1e-12;
 
     let mut ops = 0u64;
     let mut dynamic = 0.0f64;
     let mut leakage = 0.0f64;
     let mut transition = 0.0f64;
-    for seg in &profile.segments {
-        let dur_s = seg.cycles as f64 * cycle_s;
-        if seg.active {
-            ops += seg.cycles;
-            dynamic += seg.cycles as f64 * e_op_j;
-            leakage += leak_active_w * dur_s;
-        } else if seg.cycles <= 2 * settle {
+    let mut pending_idle = 0u64;
+    let flush_gap = |gap: u64, leakage: &mut f64, transition: &mut f64| {
+        if gap == 0 {
+            return;
+        }
+        if gap <= 2 * settle {
             // Idle gap too short to re-bias: leak at the active level.
-            leakage += leak_active_w * dur_s;
+            *leakage += leak_active_w * (gap as f64 * cycle_s);
         } else {
             // Down-transition (detect + settle) and up-transition each
             // leak at the high-bias level for `settle` cycles.
             let settle_s = settle as f64 * cycle_s;
-            transition += 2.0 * leak_active_w * settle_s;
-            let low_s = (seg.cycles - 2 * settle) as f64 * cycle_s;
-            leakage += leak_idle_w * low_s;
+            *transition += 2.0 * leak_active_w * settle_s;
+            let low_s = (gap - 2 * settle) as f64 * cycle_s;
+            *leakage += leak_idle_w * low_s;
+        }
+    };
+    for run in runs {
+        if run.active {
+            flush_gap(pending_idle, &mut leakage, &mut transition);
+            pending_idle = 0;
+            ops += run.cycles;
+            dynamic += run.cycles as f64 * (cost.dyn_energy_pj(vdd, run.scale) * 1e-12);
+            leakage += leak_active_w * (run.cycles as f64 * cycle_s);
+        } else {
+            pending_idle += run.cycles;
         }
     }
+    flush_gap(pending_idle, &mut leakage, &mut transition);
+
     let total = dynamic + leakage + transition;
     Some(BbRunEnergy {
         ops,
@@ -122,6 +162,94 @@ pub fn run_energy(
         transition_pj: transition * 1e12,
         pj_per_op: if ops > 0 { total * 1e12 / ops as f64 } else { f64::INFINITY },
     })
+}
+
+/// Simulate the energy of running `profile` on `unit` at `vdd` under a
+/// bias policy. The unit issues one FMAC per active cycle (the Fig. 4
+/// latency units are kept fed during bursts) and is clock-gated when
+/// idle. This is the synthetic-occupancy shim over the same accounting
+/// core [`run_energy_trace`] uses (activity scale pinned at the
+/// calibrated 1.0), so the Fig. 4 reproduction is unchanged.
+pub fn run_energy(
+    unit: &FpuUnit,
+    tech: &Technology,
+    vdd: f64,
+    policy: BbPolicy,
+    profile: &UtilizationProfile,
+) -> Option<BbRunEnergy> {
+    let runs = profile
+        .segments
+        .iter()
+        .map(|s| ActivityRun { active: s.active, cycles: s.cycles, scale: 1.0 });
+    energy_of_runs(unit, tech, vdd, policy, runs)
+}
+
+/// Simulate the energy of a **measured** time-resolved trace under a
+/// bias policy — the phase-aware path. Each window contributes its ops
+/// as active cycles whose dynamic energy is scaled by the window's own
+/// measured activity, and its unoccupied slots as idle cycles;
+/// consecutive idle windows form the contiguous gaps the adaptive
+/// policy's settle-time decision sees. A trace converted from a profile
+/// with segment-aligned windows reproduces [`run_energy`] to float
+/// round-off.
+pub fn run_energy_trace(
+    unit: &FpuUnit,
+    tech: &Technology,
+    vdd: f64,
+    policy: BbPolicy,
+    trace: &ActivityTrace,
+) -> Option<BbRunEnergy> {
+    let s = unit.structure();
+    let runs = trace.windows().iter().flat_map(|w| {
+        let ops = w.acc.ops;
+        let idle = w.slots.saturating_sub(ops);
+        let active_run = (ops > 0).then(|| ActivityRun {
+            active: true,
+            cycles: ops,
+            scale: w.acc.activity_scale(s),
+        });
+        let idle_run = (idle > 0).then(|| ActivityRun { active: false, cycles: idle, scale: 1.0 });
+        [active_run, idle_run].into_iter().flatten()
+    });
+    energy_of_runs(unit, tech, vdd, policy, runs)
+}
+
+/// The per-window V_BB schedule a policy produces on a trace — the
+/// controller's decision sequence, consumable by
+/// [`crate::energy::power::evaluate_windowed`] for window-granular power
+/// integration. Fully-idle windows deep enough inside a long gap (≥ one
+/// settle time from both edges, in a gap longer than two settle times)
+/// sit at the idle bias; everything else stays at the active bias.
+pub fn window_bias_schedule(policy: BbPolicy, trace: &ActivityTrace) -> Vec<f64> {
+    let (vbb_active, vbb_idle, settle) = policy_levels(policy);
+    let windows = trace.windows();
+    let mut vbb = vec![vbb_active; windows.len()];
+    let mut i = 0;
+    while i < windows.len() {
+        if windows[i].acc.ops > 0 {
+            i += 1;
+            continue;
+        }
+        // Contiguous run of fully-idle windows [i, j).
+        let mut j = i;
+        let mut gap = 0u64;
+        while j < windows.len() && windows[j].acc.ops == 0 {
+            gap += windows[j].slots;
+            j += 1;
+        }
+        if gap > 2 * settle {
+            let mut off = 0u64;
+            for (w, slot) in vbb[i..j].iter_mut().zip(&windows[i..j]) {
+                let end = off + slot.slots;
+                if off >= settle && end <= gap - settle {
+                    *w = vbb_idle;
+                }
+                off = end;
+            }
+        }
+        i = j;
+    }
+    vbb
 }
 
 /// The Fig. 4 blow-up factor: energy/op of a profile relative to the
@@ -228,6 +356,127 @@ mod tests {
         let er = run_energy(&unit, &tech, 0.7, rev, &prof).unwrap();
         assert!(er.leakage_pj < ez.leakage_pj);
         assert!(er.pj_per_op < ez.pj_per_op);
+    }
+
+    #[test]
+    fn adaptive_on_full_activity_trace_equals_static() {
+        // Satellite property (b): a 100%-activity trace has no idle
+        // windows, so the adaptive policy never diverges from static —
+        // the energies must be *identical*, not merely close.
+        let (unit, tech) = setup();
+        let trace = ActivityTrace::from_profile(&UtilizationProfile::full(200_000), 1_000);
+        let adaptive = BbPolicy::Adaptive { vbb_active: 1.2, vbb_idle: 0.0, settle_cycles: 1_000 };
+        let a = run_energy_trace(&unit, &tech, 0.7, adaptive, &trace).unwrap();
+        let s = run_energy_trace(&unit, &tech, 0.7, BbPolicy::static_nominal(), &trace).unwrap();
+        assert_eq!(a.pj_per_op, s.pj_per_op);
+        assert_eq!(a.dynamic_pj, s.dynamic_pj);
+        assert_eq!(a.leakage_pj, s.leakage_pj);
+        assert_eq!(a.transition_pj, 0.0);
+        // And a *measured* full-occupancy trace obeys the same identity.
+        use crate::arch::engine::WordUnit;
+        use crate::workloads::throughput::{OperandMix, OperandStream};
+        let word = WordUnit::of(&unit);
+        let mut stream = OperandStream::new(unit.config.precision, OperandMix::Finite, 11);
+        let measured = ActivityTrace::record_profile(
+            &word,
+            &UtilizationProfile::full(20_000),
+            512,
+            &mut stream,
+        );
+        let am = run_energy_trace(&unit, &tech, 0.7, adaptive, &measured).unwrap();
+        let sm =
+            run_energy_trace(&unit, &tech, 0.7, BbPolicy::static_nominal(), &measured).unwrap();
+        assert_eq!(am.pj_per_op, sm.pj_per_op);
+        assert_eq!(am.transition_pj, 0.0);
+    }
+
+    #[test]
+    fn trace_path_reproduces_profile_path_on_aligned_windows() {
+        // The shim guarantee: a profile converted to a trace with
+        // segment-aligned windows must reproduce the profile-based
+        // energies (static and adaptive) to float round-off.
+        let (unit, tech) = setup();
+        let profile = ten_pct(1_000_000); // 10k bursts, 90k gaps
+        let trace = ActivityTrace::from_profile(&profile, 1_000); // divides both
+        for policy in [
+            BbPolicy::static_nominal(),
+            BbPolicy::Adaptive { vbb_active: 1.2, vbb_idle: 0.0, settle_cycles: 1_000 },
+            BbPolicy::Adaptive { vbb_active: 1.2, vbb_idle: -1.0, settle_cycles: 500 },
+        ] {
+            let p = run_energy(&unit, &tech, 0.6, policy, &profile).unwrap();
+            let t = run_energy_trace(&unit, &tech, 0.6, policy, &trace).unwrap();
+            assert_eq!(p.ops, t.ops);
+            assert!((t.pj_per_op / p.pj_per_op - 1.0).abs() < 1e-9, "{policy:?}");
+            assert!((t.transition_pj - p.transition_pj).abs() <= 1e-9 * p.transition_pj.max(1.0));
+        }
+    }
+
+    #[test]
+    fn window_bias_schedule_drops_only_deep_idle_windows() {
+        // 2 active windows, 8 idle, 2 active — window 100 slots,
+        // settle 150 ⇒ the first/last ~2 idle windows keep the active
+        // bias (settling), the interior drops.
+        let profile = UtilizationProfile {
+            name: "t".into(),
+            segments: vec![
+                crate::workloads::utilization::Segment { active: true, cycles: 200 },
+                crate::workloads::utilization::Segment { active: false, cycles: 800 },
+                crate::workloads::utilization::Segment { active: true, cycles: 200 },
+            ],
+        };
+        let trace = ActivityTrace::from_profile(&profile, 100);
+        let pol = BbPolicy::Adaptive { vbb_active: 1.2, vbb_idle: 0.0, settle_cycles: 150 };
+        let vbb = window_bias_schedule(pol, &trace);
+        assert_eq!(vbb.len(), trace.len());
+        // Active windows (0,1 and 10,11) at the active bias.
+        assert_eq!(vbb[0], 1.2);
+        assert_eq!(vbb[1], 1.2);
+        assert_eq!(vbb[10], 1.2);
+        assert_eq!(vbb[11], 1.2);
+        // Gap windows: 2,3 settle down; 4..=7 idle; 8,9 settle up.
+        assert_eq!(vbb[2], 1.2);
+        assert_eq!(vbb[3], 1.2);
+        for w in 4..=7 {
+            assert_eq!(vbb[w], 0.0, "window {w}");
+        }
+        assert_eq!(vbb[8], 1.2);
+        assert_eq!(vbb[9], 1.2);
+        // A short gap (≤ 2·settle) never drops.
+        let short = UtilizationProfile::duty(0.5, 100, 10_000);
+        let strace = ActivityTrace::from_profile(&short, 100);
+        let pol2 = BbPolicy::Adaptive { vbb_active: 1.2, vbb_idle: 0.0, settle_cycles: 100 };
+        assert!(window_bias_schedule(pol2, &strace).iter().all(|&v| v == 1.2));
+        // Static schedules are flat.
+        assert!(window_bias_schedule(BbPolicy::static_nominal(), &trace)
+            .iter()
+            .all(|&v| v == Technology::NOMINAL_VBB));
+    }
+
+    #[test]
+    fn measured_trace_adaptive_beats_static_at_low_occupancy() {
+        // The phase-aware payoff on a *measured* trace: word-level
+        // execution woven into the Fig. 4 10% duty profile.
+        use crate::arch::engine::WordUnit;
+        use crate::workloads::throughput::{OperandMix, OperandStream};
+        let (unit, tech) = setup();
+        let word = WordUnit::of(&unit);
+        let mut stream = OperandStream::new(unit.config.precision, OperandMix::Finite, 23);
+        let trace = ActivityTrace::record_profile(
+            &word,
+            &UtilizationProfile::duty(0.1, 10_000, 200_000),
+            1_000,
+            &mut stream,
+        );
+        let freq = timing::timing(&unit.config, &tech, OperatingPoint::new(0.6, 1.2))
+            .unwrap()
+            .freq_ghz;
+        let s =
+            run_energy_trace(&unit, &tech, 0.6, BbPolicy::static_nominal(), &trace).unwrap();
+        let a =
+            run_energy_trace(&unit, &tech, 0.6, BbPolicy::adaptive_nominal(freq), &trace).unwrap();
+        assert_eq!(s.ops, 20_000);
+        assert!(a.pj_per_op < s.pj_per_op, "adaptive {} vs static {}", a.pj_per_op, s.pj_per_op);
+        assert!(a.transition_pj > 0.0);
     }
 
     #[test]

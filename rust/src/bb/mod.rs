@@ -1,6 +1,11 @@
 //! Body-bias controllers: static vs dynamically adaptive V_BB and the
-//! low-utilization energy accounting behind Fig. 4.
+//! low-utilization energy accounting behind Fig. 4. The adaptive policy
+//! consumes measured [`crate::arch::engine::ActivityTrace`]s
+//! ([`run_energy_trace`]); the synthetic-profile path ([`run_energy`])
+//! is a shim over the same accounting core.
 
 pub mod controller;
 
-pub use controller::{blowup_vs_full, run_energy, BbPolicy, BbRunEnergy};
+pub use controller::{
+    blowup_vs_full, run_energy, run_energy_trace, window_bias_schedule, BbPolicy, BbRunEnergy,
+};

@@ -8,7 +8,9 @@
 //! (accumulation tests), with cycle accounting per burst. All four
 //! generated FPUs live on the chip simultaneously, as fabricated.
 
-use crate::arch::engine::{add_batch, mul_batch, reference_fmac, Datapath};
+use crate::arch::engine::{
+    add_batch, mul_batch, reference_fmac, ActivityAccumulator, ActivityTrace, Datapath,
+};
 use crate::arch::fp::Precision;
 use crate::arch::generator::{FpuConfig, FpuUnit};
 use crate::arch::rounding::RoundMode;
@@ -89,6 +91,23 @@ impl FpMaxChip {
 
     /// Execute the loaded program at speed.
     pub fn run(&mut self) -> crate::Result<RunStats> {
+        self.run_inner(None)
+    }
+
+    /// Execute the loaded program at speed while emitting a
+    /// time-resolved [`ActivityTrace`] of the sequencer's issue-slot
+    /// timeline: every cycle of the run lands in a window — FMAC bursts
+    /// as gate-level tracked ops, Mul/Add bursts as occupancy-only ops,
+    /// forwarding stalls / pipeline drains / `Nop`s as idle slots. The
+    /// trace's slot count equals the run's cycle count exactly, so the
+    /// body-bias controller sees the program's real phase structure.
+    pub fn run_traced(&mut self, window_slots: u64) -> crate::Result<(RunStats, ActivityTrace)> {
+        let mut trace = ActivityTrace::new(window_slots);
+        let stats = self.run_inner(Some(&mut trace))?;
+        Ok((stats, trace))
+    }
+
+    fn run_inner(&mut self, mut trace: Option<&mut ActivityTrace>) -> crate::Result<RunStats> {
         let mut stats = RunStats::default();
         let mut result_wptr = 0usize;
         for pc in 0..self.program.depth() {
@@ -99,6 +118,9 @@ impl FpMaxChip {
             let ins = Instruction::decode(word as u32);
             stats.instructions += 1;
             if matches!(ins.op, Op::Nop) {
+                if let Some(t) = trace.as_deref_mut() {
+                    t.push_idle(ins.repeat as u64 + 1);
+                }
                 stats.cycles += (ins.repeat as u64) + 1;
                 continue;
             }
@@ -169,14 +191,34 @@ impl FpMaxChip {
                 }
                 let bits = &mut self.burst_bits[..count];
                 match ins.op {
-                    Op::Fmac => unit.fmac_batch(&self.burst_triples, bits),
+                    Op::Fmac => match trace.as_deref_mut() {
+                        // Traced FMAC bursts stream through the tracked
+                        // gate-level op, landing one issue slot per op in
+                        // the trace's windows (same bits either way).
+                        Some(t) => t
+                            .push_batch_tracked(unit, &self.burst_triples, bits)
+                            .expect("burst scratch sized together"),
+                        None => unit.fmac_batch(&self.burst_triples, bits),
+                    },
                     Op::Mul => {
-                        mul_batch(unit.format, ins.rounding, &self.burst_triples, bits)
+                        mul_batch(unit.format, ins.rounding, &self.burst_triples, bits);
+                        if let Some(t) = trace.as_deref_mut() {
+                            // Occupancy-only: Mul/Add bursts carry no
+                            // FMAC activity record.
+                            t.push_untracked_ops(count as u64);
+                        }
                     }
                     Op::Add => {
-                        add_batch(unit.format, ins.rounding, &self.burst_triples, bits)
+                        add_batch(unit.format, ins.rounding, &self.burst_triples, bits);
+                        if let Some(t) = trace.as_deref_mut() {
+                            t.push_untracked_ops(count as u64);
+                        }
                     }
                     Op::Nop => unreachable!("excluded above"),
+                }
+                if let Some(t) = trace.as_deref_mut() {
+                    // Pipeline drain between instructions.
+                    t.push_idle(lat.full as u64);
                 }
                 for &r in &self.burst_bits[..count] {
                     self.result.write(result_wptr, r)?;
@@ -202,11 +244,36 @@ impl FpMaxChip {
                 let b = fetch(&mut self.stim_b, ins.src_b, forward)?;
                 let c = fetch(&mut self.stim_c, ins.src_c, forward)?;
                 let r = match ins.op {
-                    Op::Fmac => unit.fmac_mode(ins.rounding, a, b, c).0,
-                    Op::Mul => crate::arch::softfloat::mul(unit.format, ins.rounding, a, b),
-                    Op::Add => crate::arch::softfloat::add(unit.format, ins.rounding, a, c),
+                    Op::Fmac => {
+                        let (r, act) = unit.fmac_mode(ins.rounding, a, b, c);
+                        if let Some(t) = trace.as_deref_mut() {
+                            let mut acc = ActivityAccumulator::default();
+                            acc.record(&act);
+                            t.push_op(&acc);
+                        }
+                        r
+                    }
+                    Op::Mul => {
+                        let r = crate::arch::softfloat::mul(unit.format, ins.rounding, a, b);
+                        if let Some(t) = trace.as_deref_mut() {
+                            t.push_untracked_ops(1);
+                        }
+                        r
+                    }
+                    Op::Add => {
+                        let r = crate::arch::softfloat::add(unit.format, ins.rounding, a, c);
+                        if let Some(t) = trace.as_deref_mut() {
+                            t.push_untracked_ops(1);
+                        }
+                        r
+                    }
                     Op::Nop => unreachable!(),
                 };
+                if let Some(t) = trace.as_deref_mut() {
+                    // Bypass-throttled issue: the slots between
+                    // successive ops are stalls.
+                    t.push_idle(issue_dist - 1);
+                }
                 forward = r.bits;
                 self.result.write(result_wptr, r.bits)?;
                 result_wptr += 1;
@@ -214,6 +281,9 @@ impl FpMaxChip {
                 stats.cycles += issue_dist;
             }
             // Pipeline drain between instructions.
+            if let Some(t) = trace.as_deref_mut() {
+                t.push_idle(lat.full as u64);
+            }
             stats.cycles += lat.full as u64;
         }
         stats.results_written = result_wptr as u64;
@@ -418,6 +488,74 @@ mod tests {
         // SP results: 1·2+1 = 3.
         let r = chip.jtag().read_bank(BANK_RESULT, 8).unwrap();
         assert!(r[..8].iter().all(|&w| f32::from_bits(w as u32) == 3.0));
+    }
+
+    #[test]
+    fn traced_run_matches_untraced_and_covers_every_cycle() {
+        // The sequencer's trace must cover the run's cycle count exactly
+        // (one slot per cycle), count one op per executed op, and leave
+        // the results bit-identical to an untraced run.
+        let mut chip = FpMaxChip::new(64);
+        let mut stream = OperandStream::new(Precision::Single, OperandMix::Finite, 77);
+        let triples: Vec<(u64, u64, u64)> =
+            stream.batch(48).into_iter().map(|t| (t.a, t.b, t.c)).collect();
+        load_triples(&mut chip, &triples);
+        let prog = [
+            Instruction::fmac_burst(UnitSel::SpFma, 0, 32).encode() as u64,
+            Instruction {
+                op: Op::Nop,
+                ..Instruction::fmac_burst(UnitSel::SpFma, 0, 100)
+            }
+            .encode() as u64,
+            Instruction::accumulate_burst(UnitSel::SpCma, 32, 8).encode() as u64,
+        ];
+        chip.jtag().load_bank(BANK_PROGRAM, &prog).unwrap();
+        let (stats, trace) = chip.run_traced(64).unwrap();
+        assert_eq!(stats.ops, 40);
+        assert_eq!(trace.total_slots(), stats.cycles, "one trace slot per sequencer cycle");
+        assert_eq!(trace.total_ops(), stats.ops);
+        assert_eq!(trace.aggregate().ops, stats.ops);
+        // The FMAC burst ran gate-level tracked: real toggle counts.
+        assert!(trace.aggregate().tree_fa_ops > 0);
+        // The Nop + drain + forwarding stalls make the trace non-trivially
+        // idle.
+        assert!(trace.occupancy() < 1.0);
+        let traced_results = chip.jtag().read_bank(BANK_RESULT, 40).unwrap();
+        // Re-run untraced on a fresh chip: identical results and stats.
+        let mut chip2 = FpMaxChip::new(64);
+        load_triples(&mut chip2, &triples);
+        chip2.jtag().load_bank(BANK_PROGRAM, &prog).unwrap();
+        let stats2 = chip2.run().unwrap();
+        assert_eq!(stats2, stats);
+        assert_eq!(chip2.jtag().read_bank(BANK_RESULT, 40).unwrap(), traced_results);
+    }
+
+    #[test]
+    fn traced_mul_burst_counts_occupancy_only() {
+        let mut chip = FpMaxChip::new(32);
+        let mut stream = OperandStream::new(Precision::Single, OperandMix::Finite, 3);
+        let triples: Vec<(u64, u64, u64)> =
+            stream.batch(16).into_iter().map(|t| (t.a, t.b, t.c)).collect();
+        load_triples(&mut chip, &triples);
+        let ins = Instruction {
+            unit: UnitSel::SpFma,
+            op: Op::Mul,
+            rounding: RoundMode::NearestEven,
+            src_a: SrcSel::Ram,
+            src_b: SrcSel::Ram,
+            src_c: SrcSel::Ram,
+            base_addr: 0,
+            repeat: 15,
+        };
+        chip.jtag().load_bank(BANK_PROGRAM, &[ins.encode() as u64]).unwrap();
+        let (stats, trace) = chip.run_traced(8).unwrap();
+        assert_eq!(stats.ops, 16);
+        assert_eq!(trace.total_slots(), stats.cycles);
+        assert_eq!(trace.total_ops(), 16);
+        // Occupancy-only: ops counted, no datapath activity detail.
+        let agg = trace.aggregate();
+        assert_eq!(agg.tree_fa_ops, 0);
+        assert_eq!(agg.digits, 0);
     }
 
     #[test]

@@ -20,7 +20,7 @@
 
 use std::time::Instant;
 
-use crate::arch::engine::{BatchExecutor, Fidelity, GoldenFma, UnitDatapath};
+use crate::arch::engine::{ActivityTrace, BatchExecutor, Fidelity, GoldenFma, UnitDatapath};
 use crate::arch::fp::{decode, Class, Precision};
 use crate::arch::generator::{FpuKind, FpuUnit};
 use crate::runtime::FmacArtifact;
@@ -122,17 +122,17 @@ pub fn verify_batch(
     let mut datapath = vec![0u64; n];
     let mut reference = vec![0u64; n];
     let t1 = Instant::now();
-    exec.run_into(unit, triples, &mut datapath);
+    exec.run_into(unit, triples, &mut datapath)?;
     let rust_secs = t1.elapsed().as_secs_f64();
     // The chunk hint is now tuned for the ~10× slower gate-level pass;
     // retime it for the word-tier reference passes below.
     exec.recalibrate();
-    exec.run_into(&GoldenFma { format: precision.format() }, triples, &mut reference);
+    exec.run_into(&GoldenFma { format: precision.format() }, triples, &mut reference)?;
     let artifact_mismatches = collect_mismatches(precision, triples, &out.bits, &reference);
     // CMA units are specified by the cascade; FMA units by the fused
     // golden results already in hand.
     if unit.config.kind == FpuKind::Cma {
-        exec.run_into(&UnitDatapath::new(unit, Fidelity::WordSimd), triples, &mut reference);
+        exec.run_into(&UnitDatapath::new(unit, Fidelity::WordSimd), triples, &mut reference)?;
     }
 
     Ok(VerifyReport {
@@ -153,23 +153,55 @@ pub fn verify_datapath_only(
     triples: &[OperandTriple],
     workers: usize,
 ) -> VerifyReport {
-    let precision = unit.config.precision;
     let exec = BatchExecutor::new(workers);
-    let n = triples.len();
-    let mut got = vec![0u64; n];
-    let mut want = vec![0u64; n];
+    let mut got = vec![0u64; triples.len()];
     let t1 = Instant::now();
-    exec.run_into(unit, triples, &mut got);
+    exec.run_into(unit, triples, &mut got).expect("buffers sized together");
     let rust_secs = t1.elapsed().as_secs_f64();
-    // The word spec runs through the lane-batched tier: same bits, and
-    // the verification loop stops paying the scalar decode tax. Retune
-    // the chunk hint first — it was calibrated on the gate-level pass.
+    datapath_report(unit, &exec, triples, &got, rust_secs)
+}
+
+/// Traced verification: like [`verify_datapath_only`], but the pass under
+/// test runs **windowed-tracked** at the chosen fidelity tier, emitting
+/// the time-resolved [`ActivityTrace`] the body-bias controller consumes.
+/// The reference pass stays on the lane-batched word tier.
+pub fn verify_datapath_traced(
+    unit: &FpuUnit,
+    tier: Fidelity,
+    triples: &[OperandTriple],
+    workers: usize,
+    window_ops: usize,
+) -> (VerifyReport, ActivityTrace) {
+    let exec = BatchExecutor::new(workers);
+    let mut got = vec![0u64; triples.len()];
+    let dp = UnitDatapath::new(unit, tier);
+    let t1 = Instant::now();
+    let trace = exec
+        .run_windowed_into(&dp, triples, &mut got, window_ops)
+        .expect("buffers sized together");
+    let rust_secs = t1.elapsed().as_secs_f64();
+    (datapath_report(unit, &exec, triples, &got, rust_secs), trace)
+}
+
+/// Shared tail of the datapath verifications: retune the chunk hint (the
+/// timed pass calibrated it on a different tier's per-op cost), run the
+/// lane-batched word reference — same bits, none of the scalar decode
+/// tax — and assemble the report.
+fn datapath_report(
+    unit: &FpuUnit,
+    exec: &BatchExecutor,
+    triples: &[OperandTriple],
+    got: &[u64],
+    rust_secs: f64,
+) -> VerifyReport {
+    let mut want = vec![0u64; triples.len()];
     exec.recalibrate();
-    exec.run_into(&UnitDatapath::new(unit, Fidelity::WordSimd), triples, &mut want);
+    exec.run_into(&UnitDatapath::new(unit, Fidelity::WordSimd), triples, &mut want)
+        .expect("buffers sized together");
     VerifyReport {
-        ops: n,
+        ops: triples.len(),
         artifact_mismatches: Vec::new(),
-        datapath_mismatches: collect_mismatches(precision, triples, &got, &want),
+        datapath_mismatches: collect_mismatches(unit.config.precision, triples, got, &want),
         artifact_toggles: 0,
         rust_secs,
         pjrt_secs: 0.0,
@@ -214,6 +246,22 @@ mod tests {
             let r = verify_datapath_only(&unit, &triples, workers);
             assert_eq!(r.ops, 1003);
             assert!(r.datapath_mismatches.is_empty(), "workers={workers}");
+        }
+    }
+
+    #[test]
+    fn traced_verification_clean_with_exact_window_sums() {
+        let cfg = FpuConfig::sp_fma();
+        let unit = FpuUnit::generate(&cfg);
+        let mut s = OperandStream::new(cfg.precision, OperandMix::Anything, 31);
+        let triples = s.batch(3_000);
+        for tier in [Fidelity::GateLevel, Fidelity::WordSimd] {
+            let (r, trace) = verify_datapath_traced(&unit, tier, &triples, 4, 500);
+            assert!(r.datapath_mismatches.is_empty(), "{tier:?}");
+            assert_eq!(r.ops, 3_000);
+            assert_eq!(trace.len(), 6);
+            assert_eq!(trace.total_ops(), 3_000);
+            assert_eq!(trace.aggregate().ops, 3_000);
         }
     }
 

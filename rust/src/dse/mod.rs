@@ -7,5 +7,6 @@ pub mod sweep;
 
 pub use pareto::{dominates, frontier, Objective};
 pub use sweep::{
-    arch_space, arch_sweep, arch_sweep_measured, voltage_bb_sweep, voltage_sweep, DsePoint,
+    arch_space, arch_sweep, arch_sweep_measured, arch_sweep_measured_bb, voltage_bb_sweep,
+    voltage_sweep, DsePoint,
 };

@@ -3,13 +3,16 @@
 //! sweeps of a chosen design (the square-marked and BB curves).
 
 use crate::arch::booth::BoothRadix;
-use crate::arch::engine::{BatchExecutor, Fidelity, UnitDatapath};
+use crate::arch::engine::{ActivityTrace, BatchExecutor, Fidelity, UnitDatapath};
 use crate::arch::fp::Precision;
 use crate::arch::generator::{FpuConfig, FpuKind, FpuUnit};
 use crate::arch::tree::TreeKind;
+use crate::bb::{run_energy_trace, BbPolicy};
 use crate::energy::power::{evaluate, evaluate_measured, EfficiencyPoint};
 use crate::energy::tech::{OperatingPoint, Technology};
+use crate::timing;
 use crate::workloads::throughput::{OperandMix, OperandStream, OperandTriple};
+use crate::workloads::utilization::UtilizationProfile;
 
 use super::pareto::Objective;
 
@@ -18,6 +21,11 @@ use super::pareto::Objective;
 pub struct DsePoint {
     pub config: FpuConfig,
     pub eff: EfficiencyPoint,
+    /// Measured phase-aware body-bias column: energy/op (pJ) of this
+    /// design running a low-utilization measured trace under the
+    /// adaptive V_BB policy (see [`arch_sweep_measured_bb`]). `None` for
+    /// sweeps that did not execute traces.
+    pub bb_adaptive_pj_per_op: Option<f64>,
 }
 
 impl Objective for DsePoint {
@@ -73,7 +81,8 @@ pub fn arch_sweep(
         .into_iter()
         .filter_map(|cfg| {
             let unit = FpuUnit::generate(&cfg);
-            evaluate(&unit, tech, op, 1.0).map(|eff| DsePoint { config: cfg, eff })
+            evaluate(&unit, tech, op, 1.0)
+                .map(|eff| DsePoint { config: cfg, eff, bb_adaptive_pj_per_op: None })
         })
         .collect()
 }
@@ -112,9 +121,62 @@ pub fn arch_sweep_measured(
         .filter_map(|cfg| {
             let unit = FpuUnit::generate(&cfg);
             let dp = UnitDatapath::new(&unit, fidelity);
-            let activity = exec.run_tracked_into(&dp, &triples, &mut bits);
+            let activity =
+                exec.run_tracked_into(&dp, &triples, &mut bits).expect("buffer sized above");
             evaluate_measured(&unit, tech, op, 1.0, &activity)
-                .map(|eff| DsePoint { config: cfg, eff })
+                .map(|eff| DsePoint { config: cfg, eff, bb_adaptive_pj_per_op: None })
+        })
+        .collect()
+}
+
+/// Phase-aware data-driven sweep: like [`arch_sweep_measured`], but every
+/// candidate additionally runs a **measured low-utilization trace** (the
+/// shared operand sample woven into a `utilization`-duty schedule at
+/// `window_slots`-slot windows) and is scored under the adaptive
+/// body-bias policy — the `bb_adaptive_pj_per_op` column. This is the
+/// sweep behind `fpmax sweep --bb adaptive`: designs whose leakage looms
+/// large at low occupancy separate from those whose dynamic energy
+/// dominates, which a run-level average cannot show.
+#[allow(clippy::too_many_arguments)]
+pub fn arch_sweep_measured_bb(
+    precision: Precision,
+    kind: FpuKind,
+    tech: &Technology,
+    op: OperatingPoint,
+    sample_ops: usize,
+    fidelity: Fidelity,
+    seed: u64,
+    window_slots: u64,
+    utilization: f64,
+) -> Vec<DsePoint> {
+    assert!(utilization > 0.0 && utilization <= 1.0);
+    // Bursts of ~10 windows (capped at the op budget) keep the idle gaps
+    // long relative to the bias settle time at the default grids; the
+    // active cycles across the whole schedule equal `sample_ops`.
+    let burst = (window_slots * 10).min(sample_ops.max(1) as u64);
+    let total = ((sample_ops as f64 / utilization).round() as u64).max(burst);
+    let profile = UtilizationProfile::duty(utilization, burst, total);
+    arch_space(precision, kind)
+        .into_iter()
+        .filter_map(|cfg| {
+            let unit = FpuUnit::generate(&cfg);
+            let dp = UnitDatapath::new(&unit, fidelity);
+            let mut stream = OperandStream::new(precision, OperandMix::Finite, seed);
+            let trace = ActivityTrace::record_profile(&dp, &profile, window_slots, &mut stream);
+            let eff = evaluate_measured(&unit, tech, op, 1.0, &trace.aggregate())?;
+            let freq = timing::timing(&cfg, tech, op)?.freq_ghz;
+            let adaptive = run_energy_trace(
+                &unit,
+                tech,
+                op.vdd,
+                BbPolicy::adaptive_nominal(freq),
+                &trace,
+            )?;
+            Some(DsePoint {
+                config: cfg,
+                eff,
+                bb_adaptive_pj_per_op: Some(adaptive.pj_per_op),
+            })
         })
         .collect()
 }
@@ -302,6 +364,43 @@ mod tests {
             assert_eq!(w.eff.pj_per_flop, s.eff.pj_per_flop, "{:?}", w.config);
             assert_eq!(w.eff.gflops_per_mm2, s.eff.gflops_per_mm2);
         }
+    }
+
+    #[test]
+    fn measured_bb_sweep_fills_phase_aware_column() {
+        let tech = Technology::fdsoi28();
+        let op = OperatingPoint::new(0.7, 1.2);
+        let pts = arch_sweep_measured_bb(
+            Precision::Single,
+            FpuKind::Fma,
+            &tech,
+            op,
+            2_000,
+            Fidelity::WordLevel,
+            42,
+            1_000,
+            0.1,
+        );
+        assert_eq!(pts.len(), arch_space(Precision::Single, FpuKind::Fma).len());
+        for p in &pts {
+            let col = p.bb_adaptive_pj_per_op.expect("bb column populated");
+            assert!(col.is_finite() && col > 0.0, "{:?}: {col}", p.config);
+            // At 10% occupancy the adaptive energy/op must exceed the
+            // full-utilization dynamic energy (leakage and stalls only
+            // add) — a cheap sanity bound that catches unit slips.
+            assert!(col > 0.1 * p.eff.pj_per_flop, "{:?}", p.config);
+        }
+        // The plain measured sweep leaves the column empty.
+        let plain = arch_sweep_measured(
+            Precision::Single,
+            FpuKind::Fma,
+            &tech,
+            op,
+            500,
+            Fidelity::WordLevel,
+            42,
+        );
+        assert!(plain.iter().all(|p| p.bb_adaptive_pj_per_op.is_none()));
     }
 
     #[test]

@@ -6,7 +6,7 @@
 //! operating point) — "GFLOPS/W" = 2·f·u / P_total, "GFLOPS/mm²" =
 //! 2·f·u / area — with utilization u = 1 unless stated.
 
-use crate::arch::engine::ActivityAccumulator;
+use crate::arch::engine::{ActivityAccumulator, ActivityTrace};
 use crate::arch::generator::{FpuConfig, FpuUnit};
 use crate::timing::{self, Timing};
 
@@ -118,6 +118,73 @@ pub fn evaluate_with_activity(
         gflops_per_mm2: gflops / cost.area_mm2,
         utilization,
     }
+}
+
+/// Window-granular energy integration of a time-resolved trace under a
+/// per-window body-bias schedule.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct WindowedEnergy {
+    /// Windows integrated.
+    pub windows: usize,
+    /// Ops executed across the trace.
+    pub ops: u64,
+    /// Issue slots (ops + idle) across the trace.
+    pub slots: u64,
+    /// Dynamic energy, pJ (per-window measured activity scale applied).
+    pub dynamic_pj: f64,
+    /// Leakage energy, pJ — integrated at **each window's own bias
+    /// point** instead of one static V_BB.
+    pub leakage_pj: f64,
+    /// Energy per op, pJ.
+    pub pj_per_op: f64,
+}
+
+/// Integrate a trace's energy window by window: each window's dynamic
+/// energy uses its measured activity scale, and its leakage is evaluated
+/// at the bias point `vbb[w]` the controller scheduled for it (see
+/// [`crate::bb::window_bias_schedule`]) — replacing the single static
+/// V_BB of [`evaluate`]/[`evaluate_measured`].
+///
+/// Timing (and therefore real time per slot) comes from the *active*
+/// operating point `(vdd, vbb_active)`; the unit never computes under a
+/// dropped bias. Bias-transition energy is settle-window leakage at the
+/// active level, which the schedule already encodes by holding the edge
+/// windows of each gap at `vbb_active` — the finer sub-window transition
+/// accounting lives in [`crate::bb::run_energy_trace`].
+pub fn evaluate_windowed(
+    unit: &FpuUnit,
+    tech: &Technology,
+    vdd: f64,
+    vbb_active: f64,
+    trace: &ActivityTrace,
+    vbb: &[f64],
+) -> Option<WindowedEnergy> {
+    assert_eq!(vbb.len(), trace.len(), "one bias point per window");
+    let cost = unit_cost(unit);
+    let s = unit.structure();
+    let t = timing::timing(&unit.config, tech, OperatingPoint::new(vdd, vbb_active))?;
+    let cycle_s = t.cycle_ps * 1e-12;
+    let mut ops = 0u64;
+    let mut slots = 0u64;
+    let mut dynamic = 0.0f64;
+    let mut leakage = 0.0f64;
+    for (w, &vbb_w) in trace.windows().iter().zip(vbb) {
+        ops += w.acc.ops;
+        slots += w.slots;
+        dynamic +=
+            w.acc.ops as f64 * (cost.dyn_energy_pj(vdd, w.acc.activity_scale(s)) * 1e-12);
+        let leak_w = tech.leakage_mw(cost.area_mm2, OperatingPoint::new(vdd, vbb_w)) * 1e-3;
+        leakage += leak_w * (w.slots as f64 * cycle_s);
+    }
+    let total = dynamic + leakage;
+    Some(WindowedEnergy {
+        windows: trace.len(),
+        ops,
+        slots,
+        dynamic_pj: dynamic * 1e12,
+        leakage_pj: leakage * 1e12,
+        pj_per_op: if ops > 0 { total * 1e12 / ops as f64 } else { f64::INFINITY },
+    })
 }
 
 #[cfg(test)]
@@ -268,5 +335,35 @@ mod tests {
         let p = evaluate(&unit, &tech, OperatingPoint::new(0.9, 1.2), 0.0).unwrap();
         assert!(p.pj_per_flop.is_infinite());
         assert_eq!(p.gflops_per_w, 0.0);
+    }
+
+    #[test]
+    fn windowed_integration_tracks_per_window_bias() {
+        use crate::bb::{window_bias_schedule, BbPolicy};
+        use crate::workloads::utilization::UtilizationProfile;
+        let unit = FpuUnit::generate(&FpuConfig::sp_cma());
+        let tech = Technology::fdsoi28();
+        let profile = UtilizationProfile::duty(0.1, 10_000, 200_000);
+        let trace = ActivityTrace::from_profile(&profile, 1_000);
+        let vdd = 0.6;
+        let adaptive = BbPolicy::Adaptive { vbb_active: 1.2, vbb_idle: 0.0, settle_cycles: 1_000 };
+        let sched_a = window_bias_schedule(adaptive, &trace);
+        let sched_s = window_bias_schedule(BbPolicy::static_nominal(), &trace);
+        let ea = evaluate_windowed(&unit, &tech, vdd, 1.2, &trace, &sched_a).unwrap();
+        let es = evaluate_windowed(&unit, &tech, vdd, 1.2, &trace, &sched_s).unwrap();
+        assert_eq!(ea.ops, profile.active_cycles());
+        assert_eq!(ea.slots, profile.total_cycles());
+        // Identical dynamic energy, strictly lower leakage once idle
+        // windows sit at the dropped bias.
+        assert_eq!(ea.dynamic_pj, es.dynamic_pj);
+        assert!(ea.leakage_pj < es.leakage_pj);
+        assert!(ea.pj_per_op < es.pj_per_op);
+        // A flat active schedule reproduces the static leakage integral
+        // of the same timeline to round-off.
+        let flat = evaluate(&unit, &tech, OperatingPoint::new(vdd, 1.2), 1.0).unwrap();
+        let t = crate::timing::timing(&unit.config, &tech, OperatingPoint::new(vdd, 1.2)).unwrap();
+        let total_s = profile.total_cycles() as f64 * t.cycle_ps * 1e-12;
+        let want_leak_pj = flat.power.leakage_mw * 1e-3 * total_s * 1e12;
+        assert!((es.leakage_pj / want_leak_pj - 1.0).abs() < 1e-9);
     }
 }

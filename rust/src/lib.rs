@@ -22,8 +22,13 @@
 //!   [`arch::engine::Fidelity::WordSimd`] restructures the same spec into
 //!   branch-light SoA lane kernels for batch throughput), and the
 //!   thread-parallel, allocation-free [`arch::engine::BatchExecutor`]
+//!   (persistent worker pool — threads spawn once and park between runs)
 //!   that the coordinator, the DSE sweeps, the chip sequencer, and the
-//!   benches all issue through.
+//!   benches all issue through. Tracked runs can be **time-resolved**:
+//!   [`arch::engine::ActivityTrace`] cuts a run into fixed-width windows
+//!   of toggle counts and occupancy (window sums equal the aggregate
+//!   accumulator bit-for-bit), which the body-bias controller consumes
+//!   to react to workload phases instead of run-level averages.
 //! * [`timing`] — FO4-based delay model: per-component logic depth, the
 //!   α-power-law FO4(V_DD, V_t), and pipeline stage partitioning.
 //! * [`energy`] — 28nm UTBB FDSOI technology model: per-component effective

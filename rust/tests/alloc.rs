@@ -70,15 +70,15 @@ fn serial_batch_reuse_is_allocation_free_after_warmup() {
     let exec = BatchExecutor::serial();
 
     // Warmup: first touches of lazy TLS / libstd internals.
-    exec.run_into(&word, &triples, &mut out);
-    exec.run_into(&simd, &triples, &mut out);
+    exec.run_into(&word, &triples, &mut out).unwrap();
+    exec.run_into(&simd, &triples, &mut out).unwrap();
     let mut acc = fpmax::arch::ActivityAccumulator::default();
 
     let (calls, bytes) = allocations(|| {
         for _ in 0..8 {
-            exec.run_into(&simd, &triples, &mut out);
-            exec.run_into(&word, &triples, &mut out);
-            acc.merge(&exec.run_tracked_into(&word, &triples, &mut out));
+            exec.run_into(&simd, &triples, &mut out).unwrap();
+            exec.run_into(&word, &triples, &mut out).unwrap();
+            acc.merge(&exec.run_tracked_into(&word, &triples, &mut out).unwrap());
         }
     });
     assert_eq!(
@@ -100,17 +100,55 @@ fn parallel_batch_reuse_allocations_do_not_scale_with_batch_size() {
     let mut out = vec![0u64; triples.len()];
     let exec = BatchExecutor::new(4);
 
-    // Warmup calibrates the chunk size and touches thread-spawn paths.
-    exec.run_into(&simd, &triples, &mut out);
+    // Warmup calibrates the chunk size and spawns the persistent pool.
+    exec.run_into(&simd, &triples, &mut out).unwrap();
 
     let (_, bytes) = allocations(|| {
-        exec.run_into(&simd, &triples, &mut out);
+        exec.run_into(&simd, &triples, &mut out).unwrap();
     });
     // A 200k-op batch would need 1.6 MB if the executor still collect()ed
-    // results; scoped-thread bookkeeping for 4 workers is a few KiB.
+    // results; post-warmup pool dispatch is down to condvar signalling.
     assert!(
         bytes < 256 * 1024,
         "parallel run allocated {bytes} bytes for a 200k-op batch — \
          something on the hot path is materializing per-op state"
     );
+}
+
+#[test]
+fn parallel_batch_zero_alloc_after_pool_warmup() {
+    // The persistent-pool guarantee: once the pool threads exist and the
+    // chunk size is calibrated, parallel runs allocate NOTHING — job
+    // dispatch is an epoch bump plus condvar signalling, the workers pull
+    // chunks off a stack-held atomic cursor, and tracked merges fold into
+    // stack-held accumulators.
+    let unit = FpuUnit::generate(&FpuConfig::sp_fma());
+    let word = UnitDatapath::new(&unit, Fidelity::WordLevel);
+    let simd = UnitDatapath::new(&unit, Fidelity::WordSimd);
+    let triples =
+        OperandStream::new(fpmax::arch::Precision::Single, OperandMix::Finite, 9).batch(100_000);
+    let mut out = vec![0u64; triples.len()];
+    let exec = BatchExecutor::new(4);
+
+    // Warmup: spawns the pool, calibrates, and touches every lazy path
+    // (untracked + tracked) once.
+    exec.run_into(&simd, &triples, &mut out).unwrap();
+    exec.run_into(&word, &triples, &mut out).unwrap();
+    let _ = exec.run_tracked_into(&word, &triples, &mut out).unwrap();
+
+    let mut acc = fpmax::arch::ActivityAccumulator::default();
+    let (calls, bytes) = allocations(|| {
+        for _ in 0..4 {
+            exec.run_into(&simd, &triples, &mut out).unwrap();
+            exec.run_into(&word, &triples, &mut out).unwrap();
+            acc.merge(&exec.run_tracked_into(&word, &triples, &mut out).unwrap());
+        }
+    });
+    assert_eq!(
+        (calls, bytes),
+        (0, 0),
+        "parallel engine hot path allocated after pool warmup: {calls} calls / {bytes} bytes"
+    );
+    assert_eq!(acc.ops, 4 * triples.len() as u64);
+    assert_eq!(out[3], simd.fmac_one(triples[3].a, triples[3].b, triples[3].c));
 }

@@ -127,17 +127,72 @@ fn prop_simd_executor_invariant_over_worker_counts() {
         let want: Vec<u64> = triples.iter().map(|t| simd.fmac_one(t.a, t.b, t.c)).collect();
         let exec = BatchExecutor::new(workers);
         let mut got = vec![0u64; n];
-        exec.run_into(&simd, &triples, &mut got);
+        exec.run_into(&simd, &triples, &mut got).unwrap();
         if got != want {
             return Err(format!("first run diverged at workers={workers} n={n}"));
         }
-        // Second run reuses the buffer and the persisted calibration.
-        exec.run_into(&simd, &triples, &mut got);
+        // Second run reuses the buffer and the persisted pool +
+        // calibration.
+        exec.run_into(&simd, &triples, &mut got).unwrap();
         if got != want {
             return Err(format!("calibrated rerun diverged at workers={workers} n={n}"));
         }
         Ok(())
     });
+}
+
+#[test]
+fn prop_window_sums_equal_aggregate_all_tiers() {
+    // Satellite property (a): for every fidelity tier, random window
+    // widths and worker counts, the windowed trace's per-window sums
+    // reproduce the aggregate ActivityAccumulator of the same run bit
+    // for bit, and the parallel trace equals the serial trace exactly.
+    for cfg in [FpuConfig::sp_fma(), FpuConfig::dp_cma()] {
+        let unit = FpuUnit::generate(&cfg);
+        for fidelity in [Fidelity::GateLevel, Fidelity::WordLevel, Fidelity::WordSimd] {
+            let dp = UnitDatapath::new(&unit, fidelity);
+            check_cases(
+                0x717A ^ cfg.stages as u64,
+                6,
+                |r: &mut Rng| {
+                    (
+                        1 + r.below(12) as usize,        // workers
+                        1 + r.below(2_500) as usize,     // ops
+                        1 + r.below(700) as usize,       // window
+                        r.next_u64(),
+                    )
+                },
+                |&(workers, n, window, seed)| {
+                    let triples = stream(&cfg, OperandMix::Anything, n, seed);
+                    let serial = BatchExecutor::serial();
+                    let (want_bits, want_acc) = serial.run_tracked(&dp, &triples);
+                    let (ser_bits, ser_trace) = serial.run_windowed(&dp, &triples, window);
+                    if ser_bits != want_bits {
+                        return Err(format!("serial windowed bits diverged n={n} win={window}"));
+                    }
+                    if ser_trace.aggregate() != want_acc {
+                        return Err(format!(
+                            "serial window sums != aggregate ({fidelity:?} n={n} win={window})"
+                        ));
+                    }
+                    let exec = BatchExecutor::new(workers);
+                    let (bits, trace) = exec.run_windowed(&dp, &triples, window);
+                    if bits != want_bits {
+                        return Err(format!("parallel windowed bits diverged w={workers}"));
+                    }
+                    if trace != ser_trace {
+                        return Err(format!(
+                            "parallel trace != serial trace ({fidelity:?} w={workers} n={n} win={window})"
+                        ));
+                    }
+                    if trace.total_slots() != n as u64 || trace.total_ops() != n as u64 {
+                        return Err("trace slot accounting broken".into());
+                    }
+                    Ok(())
+                },
+            );
+        }
+    }
 }
 
 #[test]
