@@ -1,0 +1,160 @@
+#!/usr/bin/env python3
+"""Bench-regression gate for CI.
+
+Compares measured bench artifacts (``BENCH_engine.ci.json``,
+``BENCH_serve.ci.json``) against the acceptance thresholds **embedded in
+the JSON itself** (the ``thresholds`` object each bench writes), and
+fails the job with a readable delta table when any budget is blown:
+
+* engine: ``word-simd >= 2x scalar word`` per unit, windowed trace
+  overhead ``< 2x`` untracked, zero sampled gate cross-check mismatches;
+* serve: sustained (4 producers) ``>= 0.8x`` the plain windowed-tracked
+  batch throughput, ``p99 <= 10x p50`` submission latency, zero
+  cross-check mismatches, streamed BB bit-identical to post-hoc.
+
+Usage::
+
+    python3 python/ci_check_bench.py BENCH_engine.ci.json BENCH_serve.ci.json
+
+Exit status 0 iff every check passes. Artifacts with ``"measured":
+false`` fail immediately — the gate only makes sense on freshly measured
+numbers, which is exactly what the CI bench-smoke steps produce.
+"""
+
+from __future__ import annotations
+
+import json
+import sys
+from dataclasses import dataclass
+
+
+@dataclass
+class Check:
+    """One gated quantity: ``value`` must satisfy ``op`` vs ``bound``."""
+
+    unit: str
+    name: str
+    value: float
+    op: str  # ">=", "<=", "==", "is-true"
+    bound: float
+
+    @property
+    def ok(self) -> bool:
+        if self.op == ">=":
+            return self.value >= self.bound
+        if self.op == "<=":
+            return self.value <= self.bound
+        if self.op == "==":
+            return self.value == self.bound
+        if self.op == "is-true":
+            return bool(self.value)
+        raise ValueError(f"unknown op {self.op!r}")
+
+    @property
+    def margin(self) -> str:
+        if self.op == "is-true":
+            return "-"
+        if self.bound == 0:
+            return f"{self.value - self.bound:+g}"
+        return f"{(self.value / self.bound - 1.0) * 100.0:+.1f}%"
+
+
+def engine_checks(doc: dict) -> list[Check]:
+    t = doc["thresholds"]
+    out = []
+    for unit, row in doc["units"].items():
+        out.append(
+            Check(unit, "simd_word_vs_scalar_word",
+                  row["speedup_simd_word_vs_scalar_word"], ">=",
+                  t["min_speedup_simd_word_vs_scalar_word"]))
+        out.append(
+            Check(unit, "trace_overhead_windowed",
+                  row["trace_overhead_windowed_vs_untracked"], "<=",
+                  t["max_trace_overhead_windowed_vs_untracked"]))
+        out.append(
+            Check(unit, "crosscheck_mismatches",
+                  row["crosscheck_mismatches"] + row["simd_crosscheck_mismatches"],
+                  "==", t["max_crosscheck_mismatches"]))
+    return out
+
+
+def serve_checks(doc: dict) -> list[Check]:
+    t = doc["thresholds"]
+    out = []
+    for unit, row in doc["units"].items():
+        out.append(
+            Check(unit, "serve_vs_plain_windowed",
+                  row["serve_vs_plain_windowed_ratio"], ">=",
+                  t["min_serve_vs_plain_windowed_ratio"]))
+        out.append(
+            Check(unit, "p99_over_p50", row["p99_over_p50"], "<=",
+                  t["max_p99_over_p50"]))
+        out.append(
+            Check(unit, "crosscheck_mismatches", row["crosscheck_mismatches"],
+                  "==", t["max_crosscheck_mismatches"]))
+        if t.get("require_bb_identity", False):
+            out.append(
+                Check(unit, "bb_schedule_match",
+                      1.0 if row["bb_schedule_match"] else 0.0, "is-true", 1.0))
+            out.append(
+                Check(unit, "bb_energy_match",
+                      1.0 if row["bb_energy_match"] else 0.0, "is-true", 1.0))
+    return out
+
+
+CHECKERS = {"engine": engine_checks, "serve": serve_checks}
+
+
+def check_file(path: str) -> tuple[list[Check], list[str]]:
+    """Returns (checks, errors) for one artifact."""
+    with open(path, encoding="utf-8") as f:
+        doc = json.load(f)
+    errors = []
+    if not doc.get("measured", False):
+        errors.append(
+            f"{path}: \"measured\" is false — the gate needs a freshly "
+            "measured artifact (run the bench first)")
+        return [], errors
+    bench = doc.get("bench")
+    checker = CHECKERS.get(bench)
+    if checker is None:
+        errors.append(f"{path}: unknown bench kind {bench!r}")
+        return [], errors
+    if "thresholds" not in doc:
+        errors.append(f"{path}: no embedded thresholds object")
+        return [], errors
+    return checker(doc), errors
+
+
+def main(argv: list[str]) -> int:
+    if not argv:
+        print(__doc__)
+        return 2
+    failures = 0
+    for path in argv:
+        checks, errors = check_file(path)
+        for e in errors:
+            print(f"ERROR  {e}")
+            failures += 1
+        if not checks:
+            continue
+        print(f"\n== {path} ==")
+        width = max(len(c.name) for c in checks)
+        uwidth = max(len(c.unit) for c in checks)
+        for c in checks:
+            status = "PASS" if c.ok else "FAIL"
+            if not c.ok:
+                failures += 1
+            print(f"  {status}  {c.unit:<{uwidth}}  {c.name:<{width}}  "
+                  f"value {c.value:>10.4g}  budget {c.op} {c.bound:<8.4g}  "
+                  f"margin {c.margin}")
+    print()
+    if failures:
+        print(f"ci_check_bench: {failures} check(s) FAILED")
+        return 1
+    print("ci_check_bench: all checks passed")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))

@@ -237,6 +237,13 @@ fn render_json(ops: usize, workers: usize, rows: &[UnitRow]) -> String {
     s.push_str(&format!("  \"ops_per_unit\": {ops},\n"));
     s.push_str(&format!("  \"workers\": {workers},\n"));
     s.push_str(&format!("  \"trace_window_ops\": {TRACE_WINDOW_OPS},\n"));
+    // Budgets the CI regression gate (python/ci_check_bench.py) enforces
+    // against every unit row of this artifact.
+    s.push_str("  \"thresholds\": {\n");
+    s.push_str("    \"min_speedup_simd_word_vs_scalar_word\": 2.0,\n");
+    s.push_str("    \"max_trace_overhead_windowed_vs_untracked\": 2.0,\n");
+    s.push_str("    \"max_crosscheck_mismatches\": 0\n");
+    s.push_str("  },\n");
     s.push_str("  \"units\": {\n");
     for (i, r) in rows.iter().enumerate() {
         s.push_str(&format!("    \"{}\": {{\n", r.name));

@@ -45,6 +45,13 @@
 //!   [`ActivityAccumulator`] of the same run, bit for bit. The body-bias
 //!   controller ([`crate::bb`]) consumes traces to react to workload
 //!   phases instead of run-level averages.
+//! * [`window_ring`] — a bounded, lock-free, allocation-free SPSC ring
+//!   carrying completed [`ActivityWindow`]s from the engine side to a
+//!   live consumer (the streaming body-bias controller of the serve
+//!   layer, [`crate::runtime::serve`]). Overflow coalesces windows —
+//!   granularity degrades, slot/toggle accounting never drops. Custom
+//!   schedulers drive the persistent pool through
+//!   [`BatchExecutor::run_region`].
 //!
 //! Implementations provided: [`FpuUnit`] (the generated gate-level
 //! datapath), [`WordUnit`] (the scalar word-level tier of a unit),
@@ -52,7 +59,8 @@
 //! (a unit bound to a fidelity at run time), and [`GoldenFma`] (the fused
 //! softfloat spec, regardless of unit kind).
 
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::cell::UnsafeCell;
+use std::sync::atomic::{fence, AtomicBool, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex, OnceLock};
 
 use super::fma::FmaActivity;
@@ -492,6 +500,247 @@ impl ActivityTrace {
             }
         }
         trace
+    }
+
+    /// Assemble a trace directly from explicit windows, kept verbatim.
+    /// Unlike the streaming `push_*` builders this never merges or
+    /// splits at window boundaries, so interior windows may be partial —
+    /// the shape a serving layer produces when successive batches are
+    /// not multiples of the window width. `window_slots` records the
+    /// nominal width the producer was cutting at.
+    pub fn from_raw_windows(window_slots: u64, windows: Vec<ActivityWindow>) -> ActivityTrace {
+        assert!(window_slots >= 1, "window width must be at least one slot");
+        ActivityTrace { window_slots, windows }
+    }
+
+    /// Append one already-formed window verbatim (no boundary
+    /// splitting). The serve layer's master trace mirrors exactly the
+    /// window sequence it published to the [`window_ring`], so the
+    /// post-hoc schedule computed on this trace is comparable
+    /// bit-for-bit with the streamed one.
+    pub fn push_window(&mut self, w: ActivityWindow) {
+        self.windows.push(w);
+    }
+}
+
+/// One published entry of a [`window_ring`]: an activity window plus the
+/// number of engine windows it carries. `coalesced == 1` is a pristine
+/// window; `> 1` means the ring was full and the producer merged
+/// neighbouring windows — slot counts and toggle statistics are all
+/// retained (energy accounting never drops), only the window-granular
+/// idle structure degrades to the merged window's occupancy.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct RingWindow {
+    pub window: ActivityWindow,
+    pub coalesced: u32,
+}
+
+/// The shared state of a bounded SPSC window ring. Slots are a fixed
+/// array written only by the producer and read only by the consumer;
+/// `head`/`tail` are monotonic counters (index = counter mod capacity).
+struct WindowRing {
+    slots: Box<[UnsafeCell<RingWindow>]>,
+    /// Next slot the consumer reads.
+    head: AtomicUsize,
+    /// Next slot the producer writes.
+    tail: AtomicUsize,
+    /// Producer has closed the stream (set after its last push).
+    closed: AtomicBool,
+    /// Consumer is (about to be) parked in [`WindowConsumer::recv`].
+    /// Producer publishes check it with a store/fence/load handshake so
+    /// the consumer never burns a core waiting out a long batch, and
+    /// the producer pays nothing while the consumer is running.
+    parked: AtomicBool,
+    /// Parking lot for the blocking consumer; the producer notifies
+    /// while holding the (otherwise empty) mutex, which closes the
+    /// check-then-wait window.
+    park: Mutex<()>,
+    wake: Condvar,
+}
+
+// SAFETY: slot `i` is written only by the single producer while
+// `tail - head < capacity` keeps the consumer away from it, and read
+// only by the single consumer after the Release store of `tail` has
+// published the write. The counters are monotonic, so no slot is ever
+// aliased by a read and a write at once.
+unsafe impl Send for WindowRing {}
+unsafe impl Sync for WindowRing {}
+
+/// Create a bounded SPSC ring carrying completed [`ActivityWindow`]s
+/// from the engine side (single producer: the serve dispatcher
+/// publishing each batch's windows in order) to a live consumer (the
+/// streaming body-bias controller, [`crate::bb::StreamingController`]).
+///
+/// Push and pop are lock-free and allocation-free after construction
+/// (pinned by `rust/tests/alloc.rs`). Overflow never blocks the engine
+/// and never drops activity: a window published into a full ring is
+/// merged into a producer-side pending window and delivered as soon as
+/// a slot frees, marked by its [`RingWindow::coalesced`] count.
+pub fn window_ring(capacity: usize) -> (WindowProducer, WindowConsumer) {
+    assert!(capacity >= 1, "window ring needs at least one slot");
+    let slots: Box<[UnsafeCell<RingWindow>]> =
+        (0..capacity).map(|_| UnsafeCell::new(RingWindow::default())).collect();
+    let shared = Arc::new(WindowRing {
+        slots,
+        head: AtomicUsize::new(0),
+        tail: AtomicUsize::new(0),
+        closed: AtomicBool::new(false),
+        parked: AtomicBool::new(false),
+        park: Mutex::new(()),
+        wake: Condvar::new(),
+    });
+    (
+        WindowProducer { shared: Arc::clone(&shared), pending: None, coalesced: 0 },
+        WindowConsumer { shared },
+    )
+}
+
+/// Producer half of a [`window_ring`]. **Single-producer**: exactly one
+/// thread may hold and use this handle.
+pub struct WindowProducer {
+    shared: Arc<WindowRing>,
+    /// Window merged while the ring was full, waiting for a free slot.
+    pending: Option<RingWindow>,
+    coalesced: u64,
+}
+
+impl WindowProducer {
+    fn try_push(&self, e: RingWindow) -> bool {
+        let tail = self.shared.tail.load(Ordering::Relaxed);
+        if tail.wrapping_sub(self.shared.head.load(Ordering::Acquire)) == self.shared.slots.len()
+        {
+            return false;
+        }
+        let idx = tail % self.shared.slots.len();
+        // SAFETY: tail - head < capacity, so the consumer cannot be
+        // reading this slot, and this thread is the only producer.
+        unsafe { *self.shared.slots[idx].get() = e };
+        self.shared.tail.store(tail.wrapping_add(1), Ordering::Release);
+        // Wake a parked consumer. Store-fence-load pairs with recv()'s
+        // store-fence-load: at least one side sees the other's store,
+        // so either we notify here or the consumer's recheck sees the
+        // new tail — never a lost wakeup. When the consumer is live,
+        // this is a single relaxed load.
+        fence(Ordering::SeqCst);
+        if self.shared.parked.load(Ordering::Relaxed) {
+            let _g = self.shared.park.lock().expect("window ring poisoned");
+            self.shared.wake.notify_one();
+        }
+        true
+    }
+
+    /// Publish one completed window. Never blocks and never drops
+    /// activity: when the ring is full the window is folded into a
+    /// pending coalesced window (occupancy and toggle sums retained,
+    /// window granularity lost) that is pushed as soon as a slot frees.
+    pub fn publish(&mut self, w: ActivityWindow) {
+        if let Some(p) = self.pending.take() {
+            if !self.try_push(p) {
+                let mut p = p;
+                p.window.slots += w.slots;
+                p.window.acc.merge(&w.acc);
+                p.coalesced += 1;
+                self.coalesced += 1;
+                self.pending = Some(p);
+                return;
+            }
+        }
+        let e = RingWindow { window: w, coalesced: 1 };
+        if !self.try_push(e) {
+            self.pending = Some(e);
+        }
+    }
+
+    /// Windows that were merged into a neighbour because the ring was
+    /// full (0 = the consumer saw the pristine window sequence).
+    pub fn coalesced(&self) -> u64 {
+        self.coalesced
+    }
+
+    /// Flush the pending window (waiting for the consumer to free a
+    /// slot) and close the stream; returns the total coalesced-window
+    /// count. If the consumer handle is already gone, the pending window
+    /// is dropped — nothing is left to account it to.
+    pub fn close(mut self) -> u64 {
+        while let Some(p) = self.pending.take() {
+            if self.try_push(p) {
+                break;
+            }
+            if Arc::strong_count(&self.shared) == 1 {
+                break;
+            }
+            self.pending = Some(p);
+            std::thread::yield_now();
+        }
+        self.shared.closed.store(true, Ordering::Release);
+        // Unconditional wake: a parked consumer must observe the close.
+        let _g = self.shared.park.lock().expect("window ring poisoned");
+        self.shared.wake.notify_all();
+        self.coalesced
+    }
+}
+
+/// Consumer half of a [`window_ring`]. **Single-consumer**: exactly one
+/// thread may hold and use this handle.
+pub struct WindowConsumer {
+    shared: Arc<WindowRing>,
+}
+
+impl WindowConsumer {
+    /// Non-blocking pop of the oldest published window.
+    pub fn pop(&mut self) -> Option<RingWindow> {
+        let head = self.shared.head.load(Ordering::Relaxed);
+        if self.shared.tail.load(Ordering::Acquire) == head {
+            return None;
+        }
+        let idx = head % self.shared.slots.len();
+        // SAFETY: head < tail, so the producer's Release store has
+        // published this slot, and it cannot be overwriting it (that
+        // would need tail - head == capacity).
+        let e = unsafe { *self.shared.slots[idx].get() };
+        self.shared.head.store(head.wrapping_add(1), Ordering::Release);
+        Some(e)
+    }
+
+    /// Blocking receive: parks on the ring's condvar until a window
+    /// arrives, or returns `None` once the producer has closed and the
+    /// ring is drained. Parking (instead of spinning) matters in the
+    /// serve layer: the controller thread would otherwise burn a core
+    /// against the engine workers for the whole duration of every
+    /// batch.
+    pub fn recv(&mut self) -> Option<RingWindow> {
+        loop {
+            if let Some(e) = self.pop() {
+                return Some(e);
+            }
+            if self.shared.closed.load(Ordering::Acquire) {
+                // One final pop closes the push-then-close race: the
+                // Acquire load of `closed` orders us after every push
+                // the producer made before closing.
+                return self.pop();
+            }
+            // Park. Store-fence-load pairs with the producer's
+            // publish-side store-fence-load (see `try_push`): if the
+            // producer missed our flag, the recheck below sees its
+            // tail; if the recheck misses the tail, the producer saw
+            // the flag and will notify — under the same mutex we wait
+            // on, so the notify cannot slip between recheck and wait.
+            self.shared.parked.store(true, Ordering::Relaxed);
+            fence(Ordering::SeqCst);
+            let nonempty = self.shared.tail.load(Ordering::Acquire)
+                != self.shared.head.load(Ordering::Relaxed);
+            if !nonempty && !self.shared.closed.load(Ordering::Acquire) {
+                let g = self.shared.park.lock().expect("window ring poisoned");
+                let nonempty_now = self.shared.tail.load(Ordering::Acquire)
+                    != self.shared.head.load(Ordering::Relaxed);
+                if !nonempty_now && !self.shared.closed.load(Ordering::Acquire) {
+                    // Spurious wakeups are fine: the outer loop
+                    // re-examines everything.
+                    let _g = self.shared.wake.wait(g).expect("window ring poisoned");
+                }
+            }
+            self.shared.parked.store(false, Ordering::Relaxed);
+        }
     }
 }
 
@@ -1031,25 +1280,42 @@ impl CrossCheck {
 const CROSSCHECK_CAP: usize = 16;
 
 /// Below this batch size the scoped-spawn overhead dominates any
-/// parallel win: run on the calling thread.
-const SERIAL_CUTOFF: usize = 512;
+/// parallel win: run on the calling thread. (Shared with the serve
+/// layer's stealing scheduler, which applies the same cutoff.)
+pub(crate) const SERIAL_CUTOFF: usize = 512;
 /// Ops executed serially by the one-shot chunk calibration pass.
-const CALIBRATION_OPS: usize = 2_048;
+pub(crate) const CALIBRATION_OPS: usize = 2_048;
 /// Target wall-clock per pulled chunk: long enough to amortize the
 /// atomic cursor, short enough that a straggler chunk cannot idle the
 /// other workers for long (specials-heavy regions run slower than
 /// finite-dense ones, so static `n / workers` splits load-imbalance).
-const TARGET_CHUNK_SECS: f64 = 2e-3;
-const MIN_CHUNK: usize = 256;
-const MAX_CHUNK: usize = 1 << 16;
+pub(crate) const TARGET_CHUNK_SECS: f64 = 2e-3;
+pub(crate) const MIN_CHUNK: usize = 256;
+pub(crate) const MAX_CHUNK: usize = 1 << 16;
+/// A persisted chunk hint is stale for batches more than this factor
+/// smaller than the batch that calibrated it: a hint timed on a 1M-op
+/// pass can exceed a whole serve-sized submission, collapsing it onto
+/// one worker. Such runs drop the hint and re-time at their own scale
+/// (the rule is one-sided — growing batches keep the hint, because the
+/// per-op cost estimate it encodes is batch-size independent).
+pub(crate) const RECAL_RATIO: usize = 8;
 
 /// A raw pointer that may cross thread boundaries. Workers derive
 /// disjoint sub-slices from it (ranges handed out by an atomic cursor),
-/// so no two threads ever alias a byte.
+/// so no two threads ever alias a byte. (`pub(crate)`: the serve
+/// layer's stealing scheduler uses the same wrapper.)
 #[derive(Clone, Copy)]
-struct SendPtr<T>(*mut T);
+pub(crate) struct SendPtr<T>(pub(crate) *mut T);
 unsafe impl<T> Send for SendPtr<T> {}
 unsafe impl<T> Sync for SendPtr<T> {}
+
+/// The one chunk-sizing formula: ops per pulled chunk so one chunk runs
+/// ≈ the target wall-clock at the measured per-op cost. Shared by the
+/// executor's calibration pass and the serve layer's window-aligned
+/// calibration, so the two paths can never drift apart.
+pub(crate) fn chunk_from_per_op(per_op_secs: f64) -> usize {
+    ((TARGET_CHUNK_SECS / per_op_secs.max(1e-9)) as usize).clamp(MIN_CHUNK, MAX_CHUNK)
+}
 
 /// A type-erased parallel region: `run` is a monomorphized worker entry
 /// point, `ctx` points at a stack-held context struct that outlives the
@@ -1252,6 +1518,18 @@ struct WindowCtx<'a, D: ?Sized> {
     cursor: &'a AtomicUsize,
 }
 
+/// Context of a custom parallel region (see [`BatchExecutor::run_region`]).
+struct RegionCtx<'a, F> {
+    f: &'a F,
+    ticket: &'a AtomicUsize,
+}
+
+unsafe fn region_worker<F: Fn(usize) + Sync>(ctx: *const ()) {
+    let c = &*(ctx as *const RegionCtx<'_, F>);
+    let id = c.ticket.fetch_add(1, Ordering::Relaxed);
+    (c.f)(id);
+}
+
 unsafe fn window_worker<D: Datapath + ?Sized>(ctx: *const ()) {
     let c = &*(ctx as *const WindowCtx<'_, D>);
     loop {
@@ -1292,6 +1570,11 @@ pub struct BatchExecutor {
     /// mutability so calibration can persist through `&self` (executors
     /// are shared immutably across call sites and worker threads).
     chunk_hint: AtomicUsize,
+    /// Batch length of the run that produced `chunk_hint` (0 = none).
+    /// Runs more than [`RECAL_RATIO`]× smaller treat the hint as stale
+    /// and re-calibrate, so tiny serve submissions never inherit a
+    /// chunk size tuned on a million-op pass.
+    calibrated_ops: AtomicUsize,
     /// Persistent worker pool, spawned lazily by the first parallel run.
     pool: OnceLock<WorkerPool>,
 }
@@ -1301,6 +1584,7 @@ impl std::fmt::Debug for BatchExecutor {
         f.debug_struct("BatchExecutor")
             .field("workers", &self.workers)
             .field("chunk_hint", &self.chunk_hint.load(Ordering::Relaxed))
+            .field("calibrated_ops", &self.calibrated_ops.load(Ordering::Relaxed))
             .field("pool_started", &self.pool.get().is_some())
             .finish()
     }
@@ -1319,6 +1603,7 @@ impl Clone for BatchExecutor {
         BatchExecutor {
             workers: self.workers,
             chunk_hint: AtomicUsize::new(self.chunk_hint.load(Ordering::Relaxed)),
+            calibrated_ops: AtomicUsize::new(self.calibrated_ops.load(Ordering::Relaxed)),
             pool: OnceLock::new(),
         }
     }
@@ -1330,6 +1615,7 @@ impl BatchExecutor {
         BatchExecutor {
             workers: workers.max(1),
             chunk_hint: AtomicUsize::new(0),
+            calibrated_ops: AtomicUsize::new(0),
             pool: OnceLock::new(),
         }
     }
@@ -1355,6 +1641,12 @@ impl BatchExecutor {
         self.chunk_hint.load(Ordering::Relaxed)
     }
 
+    /// Batch length of the run that produced the current chunk hint
+    /// (0 = uncalibrated).
+    pub fn calibrated_ops(&self) -> usize {
+        self.calibrated_ops.load(Ordering::Relaxed)
+    }
+
     /// Drop the persisted chunk calibration — the next run re-times. Use
     /// when switching this executor to a datapath with a very different
     /// per-op cost (gate-level is ~an order of magnitude slower than
@@ -1362,6 +1654,28 @@ impl BatchExecutor {
     /// never correctness).
     pub fn recalibrate(&self) {
         self.chunk_hint.store(0, Ordering::Relaxed);
+        self.calibrated_ops.store(0, Ordering::Relaxed);
+    }
+
+    /// Install a previously-observed calibration (both values 0 clears
+    /// it). The serve layer keeps one executor — one persistent pool —
+    /// across fidelity tiers whose per-op costs differ by ~an order of
+    /// magnitude, and swaps each tier's saved calibration back in
+    /// instead of re-timing on every tier switch.
+    pub fn seed_calibration(&self, chunk: usize, calibrated_ops: usize) {
+        self.chunk_hint.store(chunk, Ordering::Relaxed);
+        self.calibrated_ops.store(calibrated_ops, Ordering::Relaxed);
+    }
+
+    /// Apply the [`RECAL_RATIO`] staleness rule for an `n`-op run: a
+    /// hint calibrated on a much larger batch is dropped so this run
+    /// re-times (or, on paths that never time, falls back to an even
+    /// per-worker split).
+    pub(crate) fn refresh_calibration(&self, n: usize) {
+        let cal = self.calibrated_ops.load(Ordering::Relaxed);
+        if cal != 0 && n.saturating_mul(RECAL_RATIO) < cal {
+            self.recalibrate();
+        }
     }
 
     /// Chunk size for an `n`-op parallel run: the calibrated hint,
@@ -1396,15 +1710,38 @@ impl BatchExecutor {
             Some(acc) => dp.fmac_batch_tracked(&triples[..prefix], &mut out[..prefix], acc),
             None => dp.fmac_batch(&triples[..prefix], &mut out[..prefix]),
         }
-        let per_op = (t0.elapsed().as_secs_f64() / prefix as f64).max(1e-9);
-        let chunk = ((TARGET_CHUNK_SECS / per_op) as usize).clamp(MIN_CHUNK, MAX_CHUNK);
-        self.chunk_hint.store(chunk, Ordering::Relaxed);
+        let per_op = t0.elapsed().as_secs_f64() / prefix as f64;
+        self.chunk_hint.store(chunk_from_per_op(per_op), Ordering::Relaxed);
+        self.calibrated_ops.store(triples.len(), Ordering::Relaxed);
         prefix
     }
 
     /// The persistent pool, spawning it on first use.
     fn pool(&self) -> &WorkerPool {
         self.pool.get_or_init(|| WorkerPool::start(self.workers))
+    }
+
+    /// Run `f` once on every pool worker concurrently (spawning the
+    /// persistent pool on first use); each invocation receives a dense
+    /// per-region worker index in `0..workers()`. With one worker the
+    /// closure runs on the calling thread; either way the call blocks
+    /// until every invocation has returned, so `f` may freely borrow
+    /// from the caller's stack.
+    ///
+    /// This is the extension point custom schedulers use to drive the
+    /// same parked threads the chunked runs use — the serve layer's
+    /// per-worker stealing queues dispatch through it.
+    pub fn run_region<F: Fn(usize) + Sync>(&self, f: F) {
+        if self.workers <= 1 {
+            f(0);
+            return;
+        }
+        let ticket = AtomicUsize::new(0);
+        let ctx = RegionCtx { f: &f, ticket: &ticket };
+        self.pool().broadcast(Job {
+            run: region_worker::<F>,
+            ctx: &ctx as *const RegionCtx<'_, F> as *const (),
+        });
     }
 
     /// Parallel region: workers pull `chunk`-sized ranges off an atomic
@@ -1480,6 +1817,7 @@ impl BatchExecutor {
             dp.fmac_batch(triples, out);
             return Ok(());
         }
+        self.refresh_calibration(n);
         let done = self.calibrate(dp, triples, out, None);
         self.run_chunked(dp, &triples[done..], &mut out[done..], None);
         Ok(())
@@ -1516,6 +1854,7 @@ impl BatchExecutor {
             dp.fmac_batch_tracked(triples, out, &mut total);
             return Ok(total);
         }
+        self.refresh_calibration(n);
         let done = self.calibrate(dp, triples, out, Some(&mut total));
         self.run_chunked(dp, &triples[done..], &mut out[done..], Some(&mut total));
         Ok(total)
@@ -1566,8 +1905,10 @@ impl BatchExecutor {
             }
         } else {
             // No timed calibration pass here (it would straddle window
-            // boundaries); reuse the persisted hint when present, else
-            // fall back to an even static split.
+            // boundaries); reuse the persisted hint when present — after
+            // the staleness rule — else fall back to an even static
+            // split.
+            self.refresh_calibration(n);
             let chunk_windows = (self.chunk_for(n) / window).max(1);
             let cursor = AtomicUsize::new(0);
             let ctx = WindowCtx {
@@ -2136,6 +2477,165 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn window_ring_delivers_in_order_and_coalesces_on_overflow() {
+        let (mut p, mut c) = window_ring(4);
+        let win = |slots: u64, ops: u64| ActivityWindow {
+            slots,
+            acc: ActivityAccumulator { ops, digits: 3 * ops, ..ActivityAccumulator::default() },
+        };
+        // In-order delivery with room to spare.
+        p.publish(win(10, 10));
+        p.publish(win(10, 7));
+        assert_eq!(c.pop().unwrap(), RingWindow { window: win(10, 10), coalesced: 1 });
+        assert_eq!(c.pop().unwrap(), RingWindow { window: win(10, 7), coalesced: 1 });
+        assert_eq!(c.pop(), None);
+        // Overflow: 10 publishes into 4 slots with no pops in between.
+        // Nothing is dropped — the surplus merges into one pending
+        // window delivered at close, slots and activity intact.
+        for i in 0..10u64 {
+            p.publish(win(10, i));
+        }
+        assert!(p.coalesced() > 0);
+        let mut received = Vec::new();
+        while let Some(e) = c.pop() {
+            received.push(e); // drain the ring so close() can flush
+        }
+        let total_coalesced = p.close();
+        while let Some(e) = c.recv() {
+            received.push(e);
+        }
+        let slots: u64 = received.iter().map(|e| e.window.slots).sum();
+        let mut agg = ActivityAccumulator::default();
+        for e in &received {
+            agg.merge(&e.window.acc);
+        }
+        let carried: u64 = received.iter().map(|e| e.coalesced as u64).sum();
+        assert_eq!(slots, 100, "every published slot must arrive");
+        assert_eq!(agg.ops, (0..10).sum::<u64>());
+        assert_eq!(agg.digits, 3 * agg.ops, "activity sums survive coalescing");
+        assert_eq!(carried, 10, "each original window is carried exactly once");
+        assert_eq!(received.len() as u64 + total_coalesced, 10);
+        assert!(received.len() < 10, "overflow must have merged some windows");
+        // After close + drain, recv reports end of stream.
+        assert_eq!(c.recv(), None);
+    }
+
+    #[test]
+    fn window_ring_close_flushes_pending() {
+        // A pending overflow window must be delivered by close() even if
+        // the consumer only starts draining afterwards.
+        let (mut p, mut c) = window_ring(1);
+        let w = ActivityWindow {
+            slots: 5,
+            acc: ActivityAccumulator { ops: 5, ..ActivityAccumulator::default() },
+        };
+        p.publish(w);
+        p.publish(w); // ring full -> pending
+        // Drain one so close() can flush without spinning forever.
+        assert_eq!(c.pop().unwrap().window.slots, 5);
+        p.close();
+        let e = c.recv().unwrap();
+        assert_eq!(e.window.slots, 5);
+        assert_eq!(e.coalesced, 1);
+        assert_eq!(c.recv(), None);
+    }
+
+    #[test]
+    fn run_region_visits_every_worker_once() {
+        for workers in [1usize, 4] {
+            let exec = BatchExecutor::new(workers);
+            let visits: Vec<AtomicUsize> = (0..workers).map(|_| AtomicUsize::new(0)).collect();
+            exec.run_region(|w| {
+                visits[w].fetch_add(1, Ordering::Relaxed);
+            });
+            for (w, v) in visits.iter().enumerate() {
+                assert_eq!(v.load(Ordering::Relaxed), 1, "worker {w} of {workers}");
+            }
+            // The pool is reusable for ordinary runs afterwards.
+            let cfg = FpuConfig::sp_fma();
+            let word = WordUnit::generate(&cfg);
+            let triples = sample(&cfg, OperandMix::Finite, 700, 2);
+            let got = exec.run(&word, &triples);
+            assert_eq!(got[0], word.fmac_one(triples[0].a, triples[0].b, triples[0].c));
+        }
+    }
+
+    #[test]
+    fn small_batches_recalibrate_stale_chunk_hint() {
+        // Satellite fix: a chunk hint calibrated on a huge batch must
+        // not be reused verbatim by a much smaller submission (tiny
+        // serve batches were inheriting chunk sizes tuned on million-op
+        // passes). Mixed big/small submissions each calibrate at their
+        // own scale, stay bit-identical to serial, and the rule is
+        // one-sided so alternating sizes cannot thrash.
+        let cfg = FpuConfig::sp_fma();
+        let unit = FpuUnit::generate(&cfg);
+        let word = WordUnit::of(&unit);
+        let big = sample(&cfg, OperandMix::Finite, 1_000_000, 3);
+        let small = sample(&cfg, OperandMix::Finite, 4_096, 4);
+        let tiny = sample(&cfg, OperandMix::Finite, 64, 5);
+        let exec = BatchExecutor::new(8);
+
+        let mut out_big = vec![0u64; big.len()];
+        exec.run_into(&word, &big, &mut out_big).unwrap();
+        assert_eq!(exec.calibrated_ops(), big.len());
+        assert!(exec.chunk_hint() > 0);
+        for i in [0usize, 999_999] {
+            assert_eq!(out_big[i], word.fmac_one(big[i].a, big[i].b, big[i].c));
+        }
+
+        // Tiny submissions run serially (below the cutoff) and leave
+        // the calibration alone.
+        let mut out_tiny = vec![0u64; tiny.len()];
+        exec.run_into(&word, &tiny, &mut out_tiny).unwrap();
+        assert_eq!(exec.calibrated_ops(), big.len());
+        for (i, t) in tiny.iter().enumerate() {
+            assert_eq!(out_tiny[i], word.fmac_one(t.a, t.b, t.c), "tiny slot {i}");
+        }
+
+        // A parallel-sized but 8×-smaller batch re-times at its own
+        // scale instead of inheriting the 1M-op hint.
+        let mut out_small = vec![0u64; small.len()];
+        exec.run_into(&word, &small, &mut out_small).unwrap();
+        assert_eq!(exec.calibrated_ops(), small.len());
+        assert!(exec.chunk_hint() > 0);
+        for (i, t) in small.iter().enumerate() {
+            assert_eq!(out_small[i], word.fmac_one(t.a, t.b, t.c), "small slot {i}");
+        }
+
+        // One-sided: the next big batch keeps the small calibration
+        // (the per-op estimate is scale-independent) — no flapping.
+        exec.run_into(&word, &big, &mut out_big).unwrap();
+        assert_eq!(exec.calibrated_ops(), small.len());
+        assert_eq!(out_big[77], word.fmac_one(big[77].a, big[77].b, big[77].c));
+
+        // seed_calibration round-trips (the serve layer's per-tier swap).
+        let saved = (exec.chunk_hint(), exec.calibrated_ops());
+        exec.seed_calibration(0, 0);
+        assert_eq!((exec.chunk_hint(), exec.calibrated_ops()), (0, 0));
+        exec.seed_calibration(saved.0, saved.1);
+        assert_eq!((exec.chunk_hint(), exec.calibrated_ops()), saved);
+    }
+
+    #[test]
+    fn raw_window_trace_keeps_partial_interior_windows() {
+        let w = |slots: u64, ops: u64| ActivityWindow {
+            slots,
+            acc: ActivityAccumulator { ops, ..ActivityAccumulator::default() },
+        };
+        let mut t = ActivityTrace::from_raw_windows(10, vec![w(10, 10), w(3, 3)]);
+        t.push_window(w(10, 0));
+        t.push_window(w(7, 7));
+        // Verbatim: the partial interior window is NOT merged into its
+        // successor (unlike the streaming push_* builders).
+        assert_eq!(t.len(), 4);
+        assert_eq!(t.windows()[1].slots, 3);
+        assert_eq!(t.total_slots(), 30);
+        assert_eq!(t.total_ops(), 20);
+        assert_eq!(t.aggregate().ops, 20);
     }
 
     #[test]

@@ -44,8 +44,9 @@ pub mod softfloat;
 pub mod tree;
 
 pub use engine::{
-    ActivityAccumulator, ActivityTrace, ActivityWindow, BatchExecutor, BatchLenError, CrossCheck,
-    Datapath, Fidelity, GoldenFma, UnitDatapath, WordSimdUnit, WordUnit,
+    window_ring, ActivityAccumulator, ActivityTrace, ActivityWindow, BatchExecutor,
+    BatchLenError, CrossCheck, Datapath, Fidelity, GoldenFma, RingWindow, UnitDatapath,
+    WindowConsumer, WindowProducer, WordSimdUnit, WordUnit,
 };
 pub use fp::{decode, encode_finite, Class, Decoded, Format, Precision};
 pub use generator::{FpuConfig, FpuKind, FpuUnit, StructureReport};

@@ -23,9 +23,9 @@
 //! synthetic occupancy — see [`ActivityTrace::from_profile`]), so the
 //! Fig. 4 reproduction is unchanged.
 
-use crate::arch::engine::ActivityTrace;
-use crate::arch::generator::FpuUnit;
-use crate::energy::components::unit_cost;
+use crate::arch::engine::{ActivityAccumulator, ActivityTrace, ActivityWindow};
+use crate::arch::generator::{FpuUnit, StructureReport};
+use crate::energy::components::{unit_cost, UnitCost};
 use crate::energy::tech::{OperatingPoint, Technology};
 use crate::timing;
 use crate::workloads::utilization::UtilizationProfile;
@@ -99,11 +99,111 @@ fn policy_levels(policy: BbPolicy) -> (f64, f64, u64) {
     }
 }
 
-/// The accounting core shared by the profile path and the trace path:
-/// integrate dynamic, leakage and bias-transition energy over a stream
-/// of active/idle runs. Consecutive idle runs are merged before the
-/// settle-time decision, so window-granular producers see the same
-/// contiguous gaps a segment-granular profile would.
+/// The streaming form of the accounting core: push active/idle runs as
+/// they arrive, read the totals at the end. Consecutive idle runs are
+/// merged before the settle-time decision, so window-granular producers
+/// see the same contiguous gaps a segment-granular profile would.
+///
+/// Both post-hoc entry points ([`run_energy`] / [`run_energy_trace`],
+/// via [`energy_of_runs`]) and the live [`StreamingController`] drive
+/// this exact state machine — same operations, same order, same floats —
+/// which is what makes the streamed energies **bit-identical** to the
+/// post-hoc ones rather than merely close.
+struct EnergyIntegrator {
+    cost: UnitCost,
+    vdd: f64,
+    settle: u64,
+    cycle_s: f64,
+    leak_active_w: f64,
+    leak_idle_w: f64,
+    ops: u64,
+    dynamic: f64,
+    leakage: f64,
+    transition: f64,
+    pending_idle: u64,
+}
+
+impl EnergyIntegrator {
+    /// `None` when the unit cannot operate at `vdd` under the policy's
+    /// active bias (timing infeasible).
+    fn new(unit: &FpuUnit, tech: &Technology, vdd: f64, policy: BbPolicy) -> Option<Self> {
+        let cost = unit_cost(unit);
+        let (vbb_active, vbb_idle, settle) = policy_levels(policy);
+        // Timing is set by the *active* operating point; the unit never
+        // computes under idle bias.
+        let t = timing::timing(&unit.config, tech, OperatingPoint::new(vdd, vbb_active))?;
+        let cycle_s = t.cycle_ps * 1e-12;
+        let leak_active_w =
+            tech.leakage_mw(cost.area_mm2, OperatingPoint::new(vdd, vbb_active)) * 1e-3;
+        let leak_idle_w =
+            tech.leakage_mw(cost.area_mm2, OperatingPoint::new(vdd, vbb_idle)) * 1e-3;
+        Some(EnergyIntegrator {
+            cost,
+            vdd,
+            settle,
+            cycle_s,
+            leak_active_w,
+            leak_idle_w,
+            ops: 0,
+            dynamic: 0.0,
+            leakage: 0.0,
+            transition: 0.0,
+            pending_idle: 0,
+        })
+    }
+
+    /// Account the pending contiguous idle gap under the settle-time
+    /// rule.
+    fn flush_gap(&mut self) {
+        let gap = self.pending_idle;
+        self.pending_idle = 0;
+        if gap == 0 {
+            return;
+        }
+        if gap <= 2 * self.settle {
+            // Idle gap too short to re-bias: leak at the active level.
+            self.leakage += self.leak_active_w * (gap as f64 * self.cycle_s);
+        } else {
+            // Down-transition (detect + settle) and up-transition each
+            // leak at the high-bias level for `settle` cycles.
+            let settle_s = self.settle as f64 * self.cycle_s;
+            self.transition += 2.0 * self.leak_active_w * settle_s;
+            let low_s = (gap - 2 * self.settle) as f64 * self.cycle_s;
+            self.leakage += self.leak_idle_w * low_s;
+        }
+    }
+
+    fn push_run(&mut self, run: ActivityRun) {
+        if run.active {
+            self.flush_gap();
+            self.ops += run.cycles;
+            self.dynamic +=
+                run.cycles as f64 * (self.cost.dyn_energy_pj(self.vdd, run.scale) * 1e-12);
+            self.leakage += self.leak_active_w * (run.cycles as f64 * self.cycle_s);
+        } else {
+            self.pending_idle += run.cycles;
+        }
+    }
+
+    fn finish(&mut self) -> BbRunEnergy {
+        self.flush_gap();
+        let total = self.dynamic + self.leakage + self.transition;
+        BbRunEnergy {
+            ops: self.ops,
+            dynamic_pj: self.dynamic * 1e12,
+            leakage_pj: self.leakage * 1e12,
+            transition_pj: self.transition * 1e12,
+            pj_per_op: if self.ops > 0 {
+                total * 1e12 / self.ops as f64
+            } else {
+                f64::INFINITY
+            },
+        }
+    }
+}
+
+/// The accounting core shared by the profile path and the trace path —
+/// a thin driver over [`EnergyIntegrator`].
 fn energy_of_runs(
     unit: &FpuUnit,
     tech: &Technology,
@@ -111,57 +211,11 @@ fn energy_of_runs(
     policy: BbPolicy,
     runs: impl Iterator<Item = ActivityRun>,
 ) -> Option<BbRunEnergy> {
-    let cost = unit_cost(unit);
-    let (vbb_active, vbb_idle, settle) = policy_levels(policy);
-    // Timing is set by the *active* operating point; the unit never
-    // computes under idle bias.
-    let t = timing::timing(&unit.config, tech, OperatingPoint::new(vdd, vbb_active))?;
-    let cycle_s = t.cycle_ps * 1e-12;
-    let leak_active_w = tech.leakage_mw(cost.area_mm2, OperatingPoint::new(vdd, vbb_active)) * 1e-3;
-    let leak_idle_w = tech.leakage_mw(cost.area_mm2, OperatingPoint::new(vdd, vbb_idle)) * 1e-3;
-
-    let mut ops = 0u64;
-    let mut dynamic = 0.0f64;
-    let mut leakage = 0.0f64;
-    let mut transition = 0.0f64;
-    let mut pending_idle = 0u64;
-    let flush_gap = |gap: u64, leakage: &mut f64, transition: &mut f64| {
-        if gap == 0 {
-            return;
-        }
-        if gap <= 2 * settle {
-            // Idle gap too short to re-bias: leak at the active level.
-            *leakage += leak_active_w * (gap as f64 * cycle_s);
-        } else {
-            // Down-transition (detect + settle) and up-transition each
-            // leak at the high-bias level for `settle` cycles.
-            let settle_s = settle as f64 * cycle_s;
-            *transition += 2.0 * leak_active_w * settle_s;
-            let low_s = (gap - 2 * settle) as f64 * cycle_s;
-            *leakage += leak_idle_w * low_s;
-        }
-    };
+    let mut acc = EnergyIntegrator::new(unit, tech, vdd, policy)?;
     for run in runs {
-        if run.active {
-            flush_gap(pending_idle, &mut leakage, &mut transition);
-            pending_idle = 0;
-            ops += run.cycles;
-            dynamic += run.cycles as f64 * (cost.dyn_energy_pj(vdd, run.scale) * 1e-12);
-            leakage += leak_active_w * (run.cycles as f64 * cycle_s);
-        } else {
-            pending_idle += run.cycles;
-        }
+        acc.push_run(run);
     }
-    flush_gap(pending_idle, &mut leakage, &mut transition);
-
-    let total = dynamic + leakage + transition;
-    Some(BbRunEnergy {
-        ops,
-        dynamic_pj: dynamic * 1e12,
-        leakage_pj: leakage * 1e12,
-        transition_pj: transition * 1e12,
-        pj_per_op: if ops > 0 { total * 1e12 / ops as f64 } else { f64::INFINITY },
-    })
+    Some(acc.finish())
 }
 
 /// Simulate the energy of running `profile` on `unit` at `vdd` under a
@@ -250,6 +304,154 @@ pub fn window_bias_schedule(policy: BbPolicy, trace: &ActivityTrace) -> Vec<f64>
         i = j;
     }
     vbb
+}
+
+/// Outcome of a streamed body-bias control run ([`StreamingController`]).
+#[derive(Debug, Clone, PartialEq)]
+pub struct StreamedBb {
+    /// Per-received-window bias decisions, in arrival order — the live
+    /// counterpart of [`window_bias_schedule`]. On the same window
+    /// sequence the two are bit-identical.
+    pub schedule: Vec<f64>,
+    /// Energy accounting over everything received — bit-identical to
+    /// [`run_energy_trace`] on the same window sequence.
+    pub energy: BbRunEnergy,
+    /// Windows received (after any ring-overflow coalescing upstream).
+    pub windows: u64,
+    /// Ops received. Never drops, even when the feeding ring overflowed:
+    /// coalesced windows carry their merged occupancy and toggle sums.
+    pub ops: u64,
+    /// Aggregate activity received — equals the producing trace's
+    /// [`ActivityTrace::aggregate`] bit for bit, overflow or not.
+    pub aggregate: ActivityAccumulator,
+}
+
+/// The **live** body-bias controller: consumes [`ActivityWindow`]s as
+/// the engine publishes them (typically off a
+/// [`crate::arch::engine::window_ring`] fed by the serve dispatcher) and
+/// emits the bias decision per window plus running energy accounting —
+/// re-biasing *during* a run instead of scoring it afterwards.
+///
+/// Guarantee (pinned by tests and asserted per serve run): on the same
+/// window sequence, [`StreamingController::finish`] returns a schedule
+/// bit-identical to [`window_bias_schedule`] and energies bit-identical
+/// to [`run_energy_trace`]. Both follow from construction — the idle-gap
+/// decision is deferred exactly until the gap closes (an active window
+/// arrives or the stream ends), which is the same information horizon
+/// the post-hoc pass has, and the energy side shares the post-hoc
+/// [`EnergyIntegrator`] state machine verbatim.
+///
+/// A window merged by ring overflow is pushed like any other: its
+/// occupancy and activity sums are intact (energy accounting never
+/// drops), only the sub-window idle structure has degraded to the merged
+/// window's occupancy — the documented overflow behavior.
+pub struct StreamingController {
+    vbb_active: f64,
+    vbb_idle: f64,
+    settle: u64,
+    structure: StructureReport,
+    integrator: EnergyIntegrator,
+    schedule: Vec<f64>,
+    /// Slot widths of the contiguous fully-idle windows whose bias
+    /// decision is still open.
+    pending_idle: Vec<u64>,
+    windows: u64,
+    ops: u64,
+    aggregate: ActivityAccumulator,
+}
+
+impl StreamingController {
+    /// `None` when the unit cannot operate at `vdd` under the policy's
+    /// active bias.
+    pub fn new(
+        unit: &FpuUnit,
+        tech: &Technology,
+        vdd: f64,
+        policy: BbPolicy,
+    ) -> Option<StreamingController> {
+        let (vbb_active, vbb_idle, settle) = policy_levels(policy);
+        Some(StreamingController {
+            vbb_active,
+            vbb_idle,
+            settle,
+            structure: *unit.structure(),
+            integrator: EnergyIntegrator::new(unit, tech, vdd, policy)?,
+            schedule: Vec::new(),
+            pending_idle: Vec::new(),
+            windows: 0,
+            ops: 0,
+            aggregate: ActivityAccumulator::default(),
+        })
+    }
+
+    /// Decide the pending idle gap: interior windows ≥ one settle time
+    /// from both edges of a gap longer than two settle times drop to the
+    /// idle bias — the same rule, in the same arithmetic, as
+    /// [`window_bias_schedule`].
+    fn flush_idle_gap(&mut self) {
+        if self.pending_idle.is_empty() {
+            return;
+        }
+        let gap: u64 = self.pending_idle.iter().sum();
+        let deep = gap > 2 * self.settle;
+        let mut off = 0u64;
+        for &slots in &self.pending_idle {
+            let end = off + slots;
+            let vbb = if deep && off >= self.settle && end <= gap - self.settle {
+                self.vbb_idle
+            } else {
+                self.vbb_active
+            };
+            self.schedule.push(vbb);
+            off = end;
+        }
+        self.pending_idle.clear();
+    }
+
+    /// Consume one published window.
+    pub fn push_window(&mut self, w: &ActivityWindow) {
+        self.windows += 1;
+        self.ops += w.acc.ops;
+        self.aggregate.merge(&w.acc);
+        // Energy: the same per-window decomposition as `run_energy_trace`
+        // (active ops at the window's own measured activity scale, then
+        // the unoccupied slots as idle cycles).
+        let ops = w.acc.ops;
+        let idle = w.slots.saturating_sub(ops);
+        if ops > 0 {
+            self.integrator.push_run(ActivityRun {
+                active: true,
+                cycles: ops,
+                scale: w.acc.activity_scale(&self.structure),
+            });
+        }
+        if idle > 0 {
+            self.integrator.push_run(ActivityRun { active: false, cycles: idle, scale: 1.0 });
+        }
+        // Schedule: an active window closes (and decides) any open idle
+        // gap and itself sits at the active bias; a fully-idle window
+        // joins the open gap.
+        if w.acc.ops > 0 {
+            self.flush_idle_gap();
+            self.schedule.push(self.vbb_active);
+        } else {
+            self.pending_idle.push(w.slots);
+        }
+    }
+
+    /// End of stream: decide any open idle gap and return the schedule
+    /// and totals.
+    pub fn finish(mut self) -> StreamedBb {
+        self.flush_idle_gap();
+        let energy = self.integrator.finish();
+        StreamedBb {
+            schedule: self.schedule,
+            energy,
+            windows: self.windows,
+            ops: self.ops,
+            aggregate: self.aggregate,
+        }
+    }
 }
 
 /// The Fig. 4 blow-up factor: energy/op of a profile relative to the
@@ -477,6 +679,94 @@ mod tests {
         assert_eq!(s.ops, 20_000);
         assert!(a.pj_per_op < s.pj_per_op, "adaptive {} vs static {}", a.pj_per_op, s.pj_per_op);
         assert!(a.transition_pj > 0.0);
+    }
+
+    #[test]
+    fn streaming_controller_matches_posthoc_bit_for_bit() {
+        // The live controller's contract: pushing a trace's windows one
+        // at a time yields the SAME schedule as window_bias_schedule and
+        // the SAME energies as run_energy_trace — bit-for-bit equality,
+        // not tolerance — on synthetic and measured traces, under
+        // static and adaptive policies.
+        use crate::arch::engine::WordUnit;
+        use crate::workloads::throughput::{OperandMix, OperandStream};
+        let (unit, tech) = setup();
+        let synthetic = ActivityTrace::from_profile(&ten_pct(300_000), 1_000);
+        let word = WordUnit::of(&unit);
+        let mut stream = OperandStream::new(unit.config.precision, OperandMix::Finite, 17);
+        let measured = ActivityTrace::record_profile(
+            &word,
+            &UtilizationProfile::duty(0.2, 5_000, 100_000),
+            500,
+            &mut stream,
+        );
+        for trace in [&synthetic, &measured] {
+            for policy in [
+                BbPolicy::static_nominal(),
+                BbPolicy::Adaptive { vbb_active: 1.2, vbb_idle: 0.0, settle_cycles: 1_000 },
+                BbPolicy::Adaptive { vbb_active: 1.2, vbb_idle: -1.0, settle_cycles: 500 },
+            ] {
+                let mut ctrl = StreamingController::new(&unit, &tech, 0.6, policy).unwrap();
+                for w in trace.windows() {
+                    ctrl.push_window(w);
+                }
+                let out = ctrl.finish();
+                assert_eq!(out.schedule, window_bias_schedule(policy, trace), "{policy:?}");
+                let want = run_energy_trace(&unit, &tech, 0.6, policy, trace).unwrap();
+                assert_eq!(out.energy, want, "{policy:?}: streamed energy must be bit-identical");
+                assert_eq!(out.windows, trace.len() as u64);
+                assert_eq!(out.ops, trace.total_ops());
+                assert_eq!(out.aggregate, trace.aggregate());
+            }
+        }
+    }
+
+    #[test]
+    fn streaming_controller_coalesced_stream_preserves_accounting() {
+        // The ring-overflow degradation: neighbouring windows merged
+        // into one. The controller's schedule then equals the post-hoc
+        // schedule of the *merged* trace (it can only decide on what it
+        // received), and — the satellite guarantee — no ops or activity
+        // are ever dropped from the energy accounting.
+        let (unit, tech) = setup();
+        let trace = ActivityTrace::from_profile(&ten_pct(200_000), 500);
+        let mut merged: Vec<ActivityWindow> = Vec::new();
+        for (i, w) in trace.windows().iter().enumerate() {
+            if i % 3 == 0 {
+                merged.push(*w);
+            } else {
+                let last = merged.last_mut().unwrap();
+                last.slots += w.slots;
+                last.acc.merge(&w.acc);
+            }
+        }
+        let merged_trace = ActivityTrace::from_raw_windows(500, merged);
+        let policy =
+            BbPolicy::Adaptive { vbb_active: 1.2, vbb_idle: 0.0, settle_cycles: 1_000 };
+        let mut ctrl = StreamingController::new(&unit, &tech, 0.6, policy).unwrap();
+        for w in merged_trace.windows() {
+            ctrl.push_window(w);
+        }
+        let out = ctrl.finish();
+        assert_eq!(out.schedule, window_bias_schedule(policy, &merged_trace));
+        assert_eq!(out.energy, run_energy_trace(&unit, &tech, 0.6, policy, &merged_trace).unwrap());
+        // Accounting preserved vs the ORIGINAL stream.
+        assert_eq!(out.ops, trace.total_ops());
+        assert_eq!(out.aggregate, trace.aggregate());
+        let mut slots = 0u64;
+        for w in merged_trace.windows() {
+            slots += w.slots;
+        }
+        assert_eq!(slots, trace.total_slots());
+        // Occupancy-only degradation is graceful, not free: the merged
+        // windows still carry every idle slot, so total energy stays
+        // finite and comparable (same ops, same dynamic term).
+        let orig = run_energy_trace(&unit, &tech, 0.6, policy, &trace).unwrap();
+        assert_eq!(out.energy.ops, orig.ops);
+        assert!((out.energy.dynamic_pj - orig.dynamic_pj).abs() < 1e-9 * orig.dynamic_pj);
+        let mut acc = ActivityAccumulator::default();
+        acc.merge(&out.aggregate);
+        assert_eq!(acc, trace.aggregate());
     }
 
     #[test]

@@ -2,10 +2,15 @@
 //! low-utilization energy accounting behind Fig. 4. The adaptive policy
 //! consumes measured [`crate::arch::engine::ActivityTrace`]s
 //! ([`run_energy_trace`]); the synthetic-profile path ([`run_energy`])
-//! is a shim over the same accounting core.
+//! is a shim over the same accounting core. [`StreamingController`]
+//! consumes windows **live** off a ring buffer while the engine is
+//! still executing — its schedule and energies are bit-identical to
+//! the post-hoc [`window_bias_schedule`] / [`run_energy_trace`] pair on
+//! the same window stream.
 
 pub mod controller;
 
 pub use controller::{
     blowup_vs_full, run_energy, run_energy_trace, window_bias_schedule, BbPolicy, BbRunEnergy,
+    StreamedBb, StreamingController,
 };

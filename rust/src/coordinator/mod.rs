@@ -23,8 +23,9 @@ use std::time::Instant;
 use crate::arch::engine::{ActivityTrace, BatchExecutor, Fidelity, GoldenFma, UnitDatapath};
 use crate::arch::fp::{decode, Class, Precision};
 use crate::arch::generator::{FpuKind, FpuUnit};
+use crate::runtime::serve::{ServeConfig, ServeLoad, ServeQueue, ServeReport, Ticket};
 use crate::runtime::FmacArtifact;
-use crate::workloads::throughput::{OperandBatch, OperandTriple};
+use crate::workloads::throughput::{OperandBatch, OperandMix, OperandStream, OperandTriple};
 
 /// One mismatch record (capped in the report).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -206,6 +207,104 @@ fn datapath_report(
         rust_secs,
         pjrt_secs: 0.0,
     }
+}
+
+/// Drive `unit` through the streaming serve layer: `load.producers`
+/// threads submit `load.total_ops` ops at `tier` in variable-sized
+/// chunks (idle phases woven in under `load.duty`), the queue coalesces
+/// them into batches over the persistent pool's stealing scheduler, and
+/// the streaming body-bias controller re-biases mid-run off the window
+/// ring. Every producer validates its returned result lengths; the
+/// returned [`ServeReport`] carries sustained throughput, submission
+/// latency percentiles, the sampled gate cross-check, and the
+/// streamed-vs-post-hoc bias-schedule comparison.
+pub fn serve_datapath(
+    unit: &FpuUnit,
+    tier: Fidelity,
+    load: ServeLoad,
+    cfg: ServeConfig,
+) -> crate::Result<ServeReport> {
+    anyhow::ensure!(load.producers >= 1, "need at least one producer");
+    anyhow::ensure!(load.sub_ops >= 1, "submissions need at least one op");
+    anyhow::ensure!(
+        load.duty > 0.0 && load.duty <= 1.0,
+        "--duty must be in (0, 1], got {}",
+        load.duty
+    );
+    /// Submissions a producer keeps in flight before waiting the oldest.
+    const INFLIGHT: usize = 8;
+    /// Bursts between idle-phase submissions (batching the idle debt
+    /// keeps gaps long enough for the settle-time rule to act on).
+    const BURSTS_PER_IDLE: u64 = 4;
+
+    let queue = ServeQueue::start(unit, cfg)?;
+    let max_q = queue.max_queue_ops();
+    let precision = unit.config.precision;
+    std::thread::scope(|s| -> crate::Result<()> {
+        let mut joins = Vec::new();
+        for p in 0..load.producers {
+            let handle = queue.handle();
+            let share = load.total_ops / load.producers
+                + usize::from(p < load.total_ops % load.producers);
+            joins.push(s.spawn(move || -> crate::Result<()> {
+                let mut stream = OperandStream::new(
+                    precision,
+                    OperandMix::Finite,
+                    load.seed.wrapping_add(0x9E37_79B9_7F4A_7C15u64.wrapping_mul(p as u64 + 1)),
+                );
+                let mut rng =
+                    crate::util::Rng::new(load.seed ^ (((p as u64 + 1) << 32) | 0xA5));
+                let mut left = share;
+                let mut inflight: std::collections::VecDeque<(usize, Ticket)> =
+                    std::collections::VecDeque::new();
+                let mut ops_since_idle = 0u64;
+                let mut idle_debt = 0.0f64;
+                while left > 0 {
+                    let span = (load.sub_ops / 2
+                        + rng.below(load.sub_ops.max(1) as u64) as usize)
+                        .clamp(1, left);
+                    let triples = stream.batch(span);
+                    inflight.push_back((span, handle.submit(tier, triples, max_q)?));
+                    if inflight.len() > INFLIGHT {
+                        let (m, t) = inflight.pop_front().expect("nonempty");
+                        let bits = t.wait();
+                        anyhow::ensure!(bits.len() == m, "short result: {} of {m}", bits.len());
+                    }
+                    left -= span;
+                    ops_since_idle += span as u64;
+                    if load.duty < 1.0
+                        && ops_since_idle >= BURSTS_PER_IDLE * load.sub_ops as u64
+                    {
+                        idle_debt += ops_since_idle as f64 * (1.0 - load.duty) / load.duty;
+                        ops_since_idle = 0;
+                        let slots = idle_debt as u64;
+                        if slots > 0 {
+                            handle.submit_idle(slots)?;
+                            idle_debt -= slots as f64;
+                        }
+                    }
+                }
+                if load.duty < 1.0 && ops_since_idle > 0 {
+                    let slots = (idle_debt
+                        + ops_since_idle as f64 * (1.0 - load.duty) / load.duty)
+                        as u64;
+                    if slots > 0 {
+                        handle.submit_idle(slots)?;
+                    }
+                }
+                for (m, t) in inflight {
+                    let bits = t.wait();
+                    anyhow::ensure!(bits.len() == m, "short result: {} of {m}", bits.len());
+                }
+                Ok(())
+            }));
+        }
+        for j in joins {
+            j.join().map_err(|_| anyhow::anyhow!("serve producer panicked"))??;
+        }
+        Ok(())
+    })?;
+    queue.finish()
 }
 
 #[cfg(test)]

@@ -46,9 +46,15 @@
 //! * [`chip`] — the FPMax chip testbench of Fig. 5: on-chip RAM banks, a
 //!   JTAG-like slow port, the instruction encoding, and the at-speed test
 //!   sequencer.
-//! * [`runtime`] — PJRT runtime: loads the AOT-compiled JAX/Pallas HLO
-//!   artifacts (`artifacts/*.hlo.txt`) and executes them from Rust; Python
-//!   never runs on the request path.
+//! * [`runtime`] — run-time services: the **streaming serve layer**
+//!   ([`runtime::serve`] — an async submission queue over the persistent
+//!   engine: many producers, coalesced fidelity-tiered batches,
+//!   per-worker work-stealing dispatch, and a live body-bias controller
+//!   fed by a lock-free window ring whose streamed schedule is
+//!   bit-identical to the post-hoc pass), plus the PJRT runtime that
+//!   loads the AOT-compiled JAX/Pallas HLO artifacts
+//!   (`artifacts/*.hlo.txt`) and executes them from Rust; Python never
+//!   runs on the request path.
 //! * [`coordinator`] — the asynchronous verification coordinator that
 //!   batches operands through both the Rust datapath and the PJRT artifact
 //!   and cross-checks them.

@@ -14,6 +14,11 @@
 //!              [--bb static|adaptive] [--window 4096] [--bb-json PATH]
 //!              [--max-trace-overhead X]
 //! fpmax selftest [--ops 65536] [--artifacts DIR] # chip + PJRT cross-check
+//! fpmax serve  [--unit sp_fma] [--ops 1000000] [--producers 4]
+//!              [--fidelity gate|word|word-simd] [--bb static|adaptive]
+//!              [--window 4096] [--duty 1.0] [--sub-ops 8192] [--ring 1024]
+//!              [--workers N] [--json PATH] [--max-p99-ratio X]
+//!              [--min-sustained-ratio R]
 //! ```
 //!
 //! `verify --fidelity word` runs the batched word-level tier with a
@@ -31,6 +36,17 @@
 //! figure's four curves from measured traces; `sweep --bb adaptive` adds
 //! the measured phase-aware adaptive-BB energy column to every design
 //! point.
+//!
+//! `serve` drives the streaming serve layer: P producer threads submit
+//! variable-sized op slices into the async queue, the dispatcher
+//! coalesces them into fidelity-tiered batches over the persistent
+//! pool's work-stealing scheduler, and the streaming body-bias
+//! controller re-biases mid-run off the window ring. Reports sustained
+//! ops/s, p50/p99 submission latency and the streamed-BB energy as
+//! JSON (`--json PATH`), and hard-fails on any sampled gate cross-check
+//! mismatch, any streamed-vs-post-hoc bias-schedule divergence, a p99
+//! latency above `--max-p99-ratio`×p50, or a sustained throughput below
+//! `--min-sustained-ratio`× the plain windowed-tracked batch baseline.
 
 use fpmax::arch::fp::Precision;
 use fpmax::arch::generator::{FpuConfig, FpuKind, FpuUnit};
@@ -217,12 +233,15 @@ fn main() -> fpmax::Result<()> {
         Some("selftest") => {
             selftest(&args)?;
         }
+        Some("serve") => {
+            serve_cmd(&args)?;
+        }
         other => {
             if let Some(cmd) = other {
                 eprintln!("unknown subcommand {cmd:?}\n");
             }
             eprintln!(
-                "usage: fpmax <table1|table2|fig2c|fig3|fig4|calib|sweep|verify|selftest> [options]"
+                "usage: fpmax <table1|table2|fig2c|fig3|fig4|calib|sweep|verify|selftest|serve> [options]"
             );
             std::process::exit(2);
         }
@@ -327,6 +346,165 @@ fn selftest(args: &Args) -> fpmax::Result<()> {
             println!("\nPJRT unavailable ({e}); chip-vs-golden portion passed");
         }
     }
+    Ok(())
+}
+
+/// The `fpmax serve` subcommand: measure a plain windowed-tracked batch
+/// baseline, then drive the same ops through the streaming serve layer
+/// (async queue → coalesced batches → stealing scheduler → window ring →
+/// live BB controller) and gate on measured behavior: clean sampled gate
+/// cross-checks, a streamed bias schedule bit-identical to the post-hoc
+/// one, bounded tail latency, and a sustained-throughput floor.
+fn serve_cmd(args: &Args) -> fpmax::Result<()> {
+    use fpmax::arch::engine::{BatchExecutor, Fidelity, UnitDatapath};
+    use fpmax::runtime::serve::{ServeConfig, ServeLoad};
+
+    let cfg = unit_arg(args)?;
+    let ops = args.get_parse("ops", 1_000_000usize)?;
+    let producers = args.get_parse("producers", 4usize)?;
+    let workers = args.get_parse("workers", num_threads())?;
+    let fidelity = match args.get("fidelity").unwrap_or("word-simd") {
+        "gate" => Fidelity::GateLevel,
+        "word" => Fidelity::WordLevel,
+        "word-simd" | "simd" => Fidelity::WordSimd,
+        other => anyhow::bail!("--fidelity must be gate, word or word-simd, got {other}"),
+    };
+    let adaptive = match args.get("bb").unwrap_or("adaptive") {
+        "adaptive" => true,
+        "static" => false,
+        other => anyhow::bail!("--bb must be static or adaptive, got {other}"),
+    };
+    let window = args.get_parse("window", 4_096usize)?;
+    let duty = args.get_parse("duty", 1.0f64)?;
+    let sub_ops = args.get_parse("sub-ops", 8_192usize)?;
+    let seed = args.get_parse("seed", 42u64)?;
+    let ring = args.get_parse("ring", 1_024usize)?;
+    let max_p99_ratio = args.get_parse("max-p99-ratio", f64::INFINITY)?;
+    let min_sustained_ratio = args.get_parse("min-sustained-ratio", 0.0f64)?;
+    let json_path = args.get("json").map(|s| s.to_string());
+    anyhow::ensure!(ops >= 1, "--ops must be at least 1");
+    anyhow::ensure!(window >= 1, "--window must be at least 1 op");
+    anyhow::ensure!(duty > 0.0 && duty <= 1.0, "--duty must be in (0, 1], got {duty}");
+
+    let unit = FpuUnit::generate(&cfg);
+    let mut scfg = ServeConfig::nominal(&cfg, adaptive)?;
+    scfg.workers = workers;
+    scfg.window_ops = window;
+    scfg.ring_windows = ring;
+
+    // Plain-batch baseline: the same ops as ONE windowed-tracked batch
+    // through the executor — the serving-equivalent fidelity and
+    // tracking with none of the queueing. (The untracked run is also
+    // timed, for reference in the JSON.)
+    let dp = UnitDatapath::new(&unit, fidelity);
+    let mut stream = OperandStream::new(cfg.precision, OperandMix::Finite, seed);
+    let triples = stream.batch(ops);
+    let mut out = vec![0u64; ops];
+    let exec = BatchExecutor::new(workers);
+    // Warmup spawns the pool and calibrates the chunk size.
+    exec.run_windowed_into(&dp, &triples, &mut out, window)?;
+    let t0 = std::time::Instant::now();
+    exec.run_windowed_into(&dp, &triples, &mut out, window)?;
+    let plain_windowed = ops as f64 / t0.elapsed().as_secs_f64();
+    let t1 = std::time::Instant::now();
+    exec.run_into(&dp, &triples, &mut out)?;
+    let plain_untracked = ops as f64 / t1.elapsed().as_secs_f64();
+    drop(triples);
+    drop(out);
+
+    let load = ServeLoad { total_ops: ops, producers, sub_ops, duty, seed };
+    let report = coordinator::serve_datapath(&unit, fidelity, load, scfg)?;
+
+    let ratio = report.sustained_ops_per_s / plain_windowed.max(1e-12);
+    let p99_over_p50 = if report.p50_latency_s > 0.0 {
+        report.p99_latency_s / report.p50_latency_s
+    } else {
+        1.0
+    };
+    println!(
+        "{}: served {} ops ({} submissions → {} batches, {} producers, {} workers, {}-level)",
+        cfg.name(),
+        report.ops,
+        report.submissions,
+        report.batches,
+        producers,
+        workers,
+        fidelity.name()
+    );
+    println!(
+        "throughput: serve {:.2} Mops/s vs plain windowed batch {:.2} Mops/s ({ratio:.2}×; untracked {:.2})",
+        report.sustained_ops_per_s / 1e6,
+        plain_windowed / 1e6,
+        plain_untracked / 1e6
+    );
+    println!(
+        "submission latency: p50 {:.1} µs, p99 {:.1} µs ({p99_over_p50:.1}× p50)",
+        report.p50_latency_s * 1e6,
+        report.p99_latency_s * 1e6
+    );
+    println!(
+        "streamed BB [{}]: {} windows (occupancy {:.2}), {:.3} pJ/op, schedule {} post-hoc, energy {} (ring coalesced {})",
+        if adaptive { "adaptive" } else { "static" },
+        report.streamed.windows,
+        report.occupancy,
+        report.streamed.energy.pj_per_op,
+        if report.schedule_matches { "==" } else { "!=" },
+        if report.energy_matches { "bit-identical" } else { "DIVERGED" },
+        report.ring_coalesced
+    );
+    println!(
+        "gate cross-check: {} sampled, {} mismatches",
+        report.crosscheck_sampled, report.crosscheck_mismatches
+    );
+
+    if let Some(path) = json_path {
+        let json = format!(
+            "{{\n  \"unit\": \"{}\",\n  \"fidelity\": \"{}\",\n  \"ops\": {},\n  \"producers\": {producers},\n  \"workers\": {workers},\n  \"window_ops\": {window},\n  \"sub_ops_mean\": {sub_ops},\n  \"duty\": {duty},\n  \"bb_policy\": \"{}\",\n  \"submissions\": {},\n  \"batches\": {},\n  \"sustained_ops_per_s\": {:.0},\n  \"plain_windowed_ops_per_s\": {plain_windowed:.0},\n  \"plain_untracked_ops_per_s\": {plain_untracked:.0},\n  \"serve_vs_plain_ratio\": {ratio:.4},\n  \"p50_submit_us\": {:.3},\n  \"p99_submit_us\": {:.3},\n  \"p99_over_p50\": {p99_over_p50:.3},\n  \"streamed_pj_per_op\": {:.6},\n  \"posthoc_pj_per_op\": {:.6},\n  \"bb_schedule_match\": {},\n  \"bb_energy_match\": {},\n  \"ring_coalesced\": {},\n  \"crosscheck_sampled\": {},\n  \"crosscheck_mismatches\": {}\n}}\n",
+            cfg.name(),
+            fidelity.name(),
+            report.ops,
+            if adaptive { "adaptive" } else { "static" },
+            report.submissions,
+            report.batches,
+            report.sustained_ops_per_s,
+            report.p50_latency_s * 1e6,
+            report.p99_latency_s * 1e6,
+            report.streamed.energy.pj_per_op,
+            report.posthoc_energy.pj_per_op,
+            report.schedule_matches,
+            report.energy_matches,
+            report.ring_coalesced,
+            report.crosscheck_sampled,
+            report.crosscheck_mismatches,
+        );
+        std::fs::write(&path, json)?;
+        println!("wrote {path}");
+    }
+
+    // Hard gates (the CI serve smoke step relies on these exit codes).
+    anyhow::ensure!(
+        report.crosscheck_mismatches == 0,
+        "sampled gate cross-check found {} mismatches at global indices {:?}",
+        report.crosscheck_mismatches,
+        report.mismatch_indices
+    );
+    anyhow::ensure!(
+        report.bb_gate_ok(),
+        "streamed BB diverged from post-hoc (schedule match {}, energy match {}, received-stream match {}, activity preserved {}, ring coalesced {})",
+        report.schedule_matches,
+        report.energy_matches,
+        report.received_schedule_matches,
+        report.activity_preserved,
+        report.ring_coalesced
+    );
+    anyhow::ensure!(
+        p99_over_p50 <= max_p99_ratio,
+        "p99 submission latency is {p99_over_p50:.1}× p50, above the --max-p99-ratio {max_p99_ratio}× budget"
+    );
+    anyhow::ensure!(
+        ratio >= min_sustained_ratio,
+        "serve sustained only {ratio:.2}× the plain windowed batch throughput, below the --min-sustained-ratio {min_sustained_ratio} floor"
+    );
     Ok(())
 }
 

@@ -1,4 +1,9 @@
-//! PJRT runtime: loads the AOT-compiled JAX/Pallas artifacts
+//! Run-time services: the streaming [`serve`] layer (an async
+//! submission queue over the persistent batch engine with mid-run
+//! body-bias re-biasing — see [`serve::ServeQueue`]) and the PJRT
+//! artifact runtime.
+//!
+//! PJRT side: loads the AOT-compiled JAX/Pallas artifacts
 //! (`artifacts/*.hlo.txt`) and executes them from Rust.
 //!
 //! The real implementation ([`pjrt`], behind the `pjrt` cargo feature) is
@@ -14,6 +19,10 @@
 //! Python never runs here either way: artifacts are compiled once by
 //! `make artifacts`, and the resulting executables are pure XLA:CPU
 //! programs fed with raw bit patterns.
+
+pub mod serve;
+
+pub use serve::{ServeConfig, ServeLoad, ServeQueue, ServeReport, SubmitHandle, Ticket};
 
 #[cfg(feature = "pjrt")]
 mod pjrt;

@@ -1,0 +1,954 @@
+//! The streaming serve layer: an asynchronous submission queue over the
+//! persistent [`BatchExecutor`] with **mid-run body-bias re-biasing**.
+//!
+//! This is the piece that turns the batch engine into a serving
+//! architecture. Producers (request handlers, workload drivers, the
+//! `fpmax serve` CLI) submit variable-sized op slices from many threads;
+//! a dispatcher coalesces them into fidelity-tiered batches and drives
+//! the engine's persistent worker pool through **per-worker
+//! work-stealing queues** of window-aligned chunk ranges (each queue is
+//! drained by the atomic-cursor claim idiom the chunked runs use; a
+//! worker that runs dry turns thief and claims ranges off another
+//! worker's cursor — lock-free in both roles). Completed
+//! [`ActivityWindow`]s are published in order into a bounded SPSC
+//! [`window_ring`], where a [`StreamingController`] consumes them
+//! **while the run is still executing** and emits a live bias schedule —
+//! the sub-microsecond reaction the FPMax adaptive body bias needs to
+//! recover its ~2× saving at 10% activity in a serving context, instead
+//! of scoring the trace after the fact.
+//!
+//! Correctness contract (asserted per run and pinned by
+//! `rust/tests/serve.rs`):
+//!
+//! * results are bit-identical to a serial pass, guarded by the same
+//!   sampled gate-level cross-check the batch paths use;
+//! * the streamed bias schedule and energies are **bit-identical** to
+//!   the post-hoc [`crate::bb::window_bias_schedule`] /
+//!   [`crate::bb::run_energy_trace`] pair on the same master trace
+//!   whenever the ring never overflowed;
+//! * ring overflow degrades gracefully: windows coalesce (losing
+//!   granularity, keeping every slot and toggle count), so the
+//!   controller's energy accounting never drops an op.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Instant;
+
+use crate::arch::engine::{
+    chunk_from_per_op, window_ring, ActivityAccumulator, ActivityTrace, ActivityWindow,
+    BatchExecutor, Datapath, Fidelity, SendPtr, UnitDatapath, WindowProducer, CALIBRATION_OPS,
+    RECAL_RATIO, SERIAL_CUTOFF,
+};
+use crate::arch::generator::{FpuConfig, FpuUnit};
+use crate::bb::{run_energy_trace, window_bias_schedule, BbPolicy, BbRunEnergy, StreamedBb,
+    StreamingController};
+use crate::energy::tech::Technology;
+use crate::timing;
+use crate::util::stats::percentile;
+use crate::workloads::throughput::OperandTriple;
+
+/// Cap on reported cross-check mismatch indices.
+const MISMATCH_CAP: usize = 8;
+
+/// Configuration of a [`ServeQueue`].
+#[derive(Debug, Clone, Copy)]
+pub struct ServeConfig {
+    /// Engine pool workers.
+    pub workers: usize,
+    /// Trace window width, in ops/slots.
+    pub window_ops: usize,
+    /// Coalescing cap: a dispatched batch never exceeds this many ops.
+    pub max_batch_ops: usize,
+    /// Backpressure bound: producers block while this many ops queue.
+    pub max_queue_ops: usize,
+    /// Capacity (in windows) of the engine→controller ring.
+    pub ring_windows: usize,
+    /// Sampled gate-level cross-check stride (0 disables; ignored on the
+    /// gate tier, which is the reference).
+    pub crosscheck_every: usize,
+    /// Body-bias policy the streaming controller runs.
+    pub policy: BbPolicy,
+    /// Supply voltage the energy accounting is scored at.
+    pub vdd: f64,
+}
+
+impl ServeConfig {
+    /// Nominal serving configuration for a unit: its Table-I operating
+    /// point, the paper's adaptive (or static) policy at the nominal
+    /// clock, one worker per hardware thread.
+    pub fn nominal(cfg: &FpuConfig, adaptive: bool) -> crate::Result<ServeConfig> {
+        let tech = Technology::fdsoi28();
+        let op = timing::nominal_op(cfg);
+        let freq = timing::timing(cfg, &tech, op)
+            .ok_or_else(|| anyhow::anyhow!("nominal operating point not operable"))?
+            .freq_ghz;
+        let policy = if adaptive {
+            BbPolicy::adaptive_nominal(freq)
+        } else {
+            BbPolicy::static_nominal()
+        };
+        let workers = std::thread::available_parallelism().map(|v| v.get()).unwrap_or(4);
+        Ok(ServeConfig {
+            workers,
+            window_ops: 4_096,
+            max_batch_ops: 1 << 16,
+            max_queue_ops: 1 << 20,
+            ring_windows: 1_024,
+            // Sparse by default: a gate-level re-execution costs ~100×
+            // a word-simd op, so the serving hot path samples lightly
+            // (still dozens of samples over any real run; `fpmax verify`
+            // remains the dense cross-check surface).
+            crosscheck_every: 9_973,
+            policy,
+            vdd: op.vdd,
+        })
+    }
+}
+
+/// A synthetic serving workload for [`crate::coordinator::serve_datapath`]:
+/// `producers` threads submit `total_ops` ops in variable-sized chunks
+/// around `sub_ops`, weaving in idle phases to hit `duty` occupancy —
+/// the serving-shaped analogue of the Fig. 4 duty-cycle profiles.
+#[derive(Debug, Clone, Copy)]
+pub struct ServeLoad {
+    /// Total ops across all producers.
+    pub total_ops: usize,
+    /// Producer threads.
+    pub producers: usize,
+    /// Mean submission size; actual sizes vary in `[sub_ops/2, 3·sub_ops/2)`.
+    pub sub_ops: usize,
+    /// Target occupancy in `(0, 1]`; `< 1` interleaves idle-slot
+    /// submissions (accounting only — no wall-clock) whose gaps the
+    /// adaptive controller re-biases through.
+    pub duty: f64,
+    /// Operand/size stream seed.
+    pub seed: u64,
+}
+
+/// Completion slot a submission's [`Ticket`] waits on.
+#[derive(Default)]
+struct Completion {
+    state: Mutex<CompletionState>,
+    cv: Condvar,
+}
+
+#[derive(Default)]
+struct CompletionState {
+    bits: Option<Vec<u64>>,
+    done: bool,
+}
+
+/// Handle to one in-flight submission.
+pub struct Ticket {
+    done: Arc<Completion>,
+}
+
+impl Ticket {
+    /// Block until the submission's batch has executed; returns the
+    /// result bits, one per submitted triple, in submission order.
+    pub fn wait(self) -> Vec<u64> {
+        let mut st = self.done.state.lock().expect("serve completion poisoned");
+        while !st.done {
+            st = self.done.cv.wait(st).expect("serve completion poisoned");
+        }
+        st.bits.take().unwrap_or_default()
+    }
+}
+
+/// One queued work item.
+enum Work {
+    Ops(OpsSub),
+    /// Explicit idle issue slots (a low-utilization phase): published as
+    /// idle windows so the streaming controller can re-bias through the
+    /// gap, exactly like the post-hoc Fig. 4 weaves.
+    Idle { slots: u64 },
+}
+
+struct OpsSub {
+    tier: Fidelity,
+    triples: Vec<OperandTriple>,
+    /// Result buffer, allocated by the submitting producer (so the
+    /// dispatcher hot path never allocates per submission) and handed
+    /// to the ticket whole once the batch completes — zero copies.
+    out: Vec<u64>,
+    done: Arc<Completion>,
+    submitted: Instant,
+}
+
+struct QueueState {
+    items: VecDeque<Work>,
+    queued_ops: usize,
+    closed: bool,
+}
+
+struct QueueShared {
+    q: Mutex<QueueState>,
+    /// Producers park here while the queue is at its ops bound.
+    space: Condvar,
+    /// The dispatcher parks here while the queue is empty.
+    work: Condvar,
+}
+
+/// Cloneable producer handle onto a [`ServeQueue`].
+#[derive(Clone)]
+pub struct SubmitHandle {
+    shared: Arc<QueueShared>,
+}
+
+impl SubmitHandle {
+    /// Submit a variable-sized op slice at a fidelity tier. Blocks while
+    /// the queue is at its backpressure bound; the returned [`Ticket`]
+    /// resolves to the result bits once the dispatcher has executed the
+    /// batch the submission was coalesced into. Submission latency is
+    /// measured from entry here (queue wait included) to completion.
+    pub fn submit(
+        &self,
+        tier: Fidelity,
+        triples: Vec<OperandTriple>,
+        max_queue_ops: usize,
+    ) -> crate::Result<Ticket> {
+        let submitted = Instant::now();
+        let done = Arc::new(Completion::default());
+        let n = triples.len();
+        // The producer pays the result-buffer allocation, not the
+        // dispatcher: workers write straight into it (zero-copy) and
+        // the ticket receives it whole.
+        let out = vec![0u64; n];
+        let mut st = self.shared.q.lock().expect("serve queue poisoned");
+        while !st.closed && st.queued_ops > 0 && st.queued_ops + n > max_queue_ops {
+            st = self.shared.space.wait(st).expect("serve queue poisoned");
+        }
+        anyhow::ensure!(!st.closed, "serve queue is closed");
+        st.queued_ops += n;
+        st.items.push_back(Work::Ops(OpsSub {
+            tier,
+            triples,
+            out,
+            done: Arc::clone(&done),
+            submitted,
+        }));
+        drop(st);
+        self.shared.work.notify_one();
+        Ok(Ticket { done })
+    }
+
+    /// Submit an idle phase of `slots` issue slots (accounting only — no
+    /// wall-clock is consumed). The dispatcher publishes it as idle
+    /// windows in queue order, giving the streaming controller the gaps
+    /// the adaptive policy re-biases through.
+    pub fn submit_idle(&self, slots: u64) -> crate::Result<()> {
+        if slots == 0 {
+            return Ok(());
+        }
+        let mut st = self.shared.q.lock().expect("serve queue poisoned");
+        anyhow::ensure!(!st.closed, "serve queue is closed");
+        st.items.push_back(Work::Idle { slots });
+        drop(st);
+        self.shared.work.notify_one();
+        Ok(())
+    }
+}
+
+/// Per-worker work-stealing queues of window-range chunks.
+///
+/// Every queue is a pre-seeded contiguous share of the batch's windows,
+/// cut into chunk-sized ranges and drained by a per-queue atomic cursor
+/// (the unique-claim `fetch_add` idiom of the engine's chunked runs — the
+/// intra-batch fast path). A worker that exhausts its own queue scans the
+/// others round-robin and claims ranges off their cursors: stealing is
+/// the same lock-free `fetch_add`, just on a victim's cursor, so owner
+/// and thief never need a lock and every range is executed exactly once.
+struct StealQueues {
+    ranges: Vec<Vec<(u32, u32)>>,
+    cursors: Vec<AtomicUsize>,
+}
+
+impl StealQueues {
+    fn new(workers: usize) -> StealQueues {
+        StealQueues {
+            ranges: (0..workers).map(|_| Vec::new()).collect(),
+            cursors: (0..workers).map(|_| AtomicUsize::new(0)).collect(),
+        }
+    }
+
+    /// Reseed for a batch covering windows `[start_window, n_windows)`,
+    /// `chunk_windows` windows per claimable range. Reuses the range
+    /// vectors' capacity — allocation-free once warm.
+    fn seed(&mut self, start_window: usize, n_windows: usize, chunk_windows: usize) {
+        let workers = self.ranges.len();
+        for c in &self.cursors {
+            c.store(0, Ordering::Relaxed);
+        }
+        let total = n_windows.saturating_sub(start_window);
+        let per = total.div_ceil(workers.max(1)).max(1);
+        for (w, q) in self.ranges.iter_mut().enumerate() {
+            q.clear();
+            let lo = start_window + w * per;
+            let hi = (lo + per).min(n_windows);
+            let mut s = lo;
+            while s < hi {
+                let e = (s + chunk_windows).min(hi);
+                q.push((s as u32, e as u32));
+                s = e;
+            }
+        }
+    }
+
+    /// Claim the next window range for worker `w`: own queue first, then
+    /// round-robin theft. `None` once every queue is drained.
+    fn next(&self, w: usize) -> Option<(usize, usize)> {
+        let workers = self.cursors.len();
+        for k in 0..workers {
+            let v = (w + k) % workers;
+            let i = self.cursors[v].fetch_add(1, Ordering::Relaxed);
+            let q = &self.ranges[v];
+            if i < q.len() {
+                let (a, b) = q[i];
+                return Some((a as usize, b as usize));
+            }
+        }
+        None
+    }
+}
+
+/// Shared read-only companion of the engine's `SendPtr`.
+#[derive(Clone, Copy)]
+struct SendConst<T>(*const T);
+unsafe impl<T> Send for SendConst<T> {}
+unsafe impl<T> Sync for SendConst<T> {}
+
+/// One submission's slice of the logical batch. The dispatcher never
+/// gathers operands into a contiguous scratch buffer: workers execute
+/// **zero-copy** straight out of each submission's own operand and
+/// result vectors, addressed through the concatenated op index space.
+struct Segment {
+    /// Start in the concatenated op index space.
+    start: usize,
+    len: usize,
+    tri: SendConst<OperandTriple>,
+    out: SendPtr<u64>,
+}
+
+/// Execute ops `[lo, hi)` of the concatenated batch through `dp`,
+/// walking the overlapping submission segments.
+///
+/// # Safety
+/// The caller must guarantee `[lo, hi)` is claimed by exactly one
+/// executor (no other thread touches these output ops) and that the
+/// segments' backing vectors outlive the call.
+unsafe fn exec_span(
+    dp: &UnitDatapath,
+    segs: &[Segment],
+    lo: usize,
+    hi: usize,
+    acc: &mut ActivityAccumulator,
+) {
+    let mut si = segs.partition_point(|s| s.start + s.len <= lo);
+    let mut pos = lo;
+    while pos < hi {
+        let s = &segs[si];
+        let off = pos - s.start;
+        let take = (s.len - off).min(hi - pos);
+        let tri = std::slice::from_raw_parts(s.tri.0.add(off), take);
+        let os = std::slice::from_raw_parts_mut(s.out.0.add(off), take);
+        dp.fmac_batch_tracked(tri, os, acc);
+        pos += take;
+        si += 1;
+    }
+}
+
+fn tier_index(tier: Fidelity) -> usize {
+    match tier {
+        Fidelity::GateLevel => 0,
+        Fidelity::WordLevel => 1,
+        Fidelity::WordSimd => 2,
+    }
+}
+
+/// What the dispatcher thread hands back at shutdown.
+struct DispatchOutcome {
+    master: ActivityTrace,
+    ops: u64,
+    batches: u64,
+    submissions: u64,
+    latencies: Vec<f64>,
+    crosscheck_sampled: u64,
+    crosscheck_mismatches: u64,
+    mismatch_indices: Vec<usize>,
+    busy_secs: f64,
+    ring_coalesced: u64,
+}
+
+/// The dispatcher: owns the engine side of the serve loop.
+struct Dispatcher {
+    shared: Arc<QueueShared>,
+    exec: BatchExecutor,
+    /// The unit at all three fidelity tiers (index = [`tier_index`]).
+    dps: [UnitDatapath; 3],
+    /// Gate-level reference for the sampled cross-check.
+    unit: FpuUnit,
+    window_ops: usize,
+    max_batch_ops: usize,
+    crosscheck_every: usize,
+    producer: WindowProducer,
+    master: ActivityTrace,
+    /// Saved (chunk_hint, calibrated_ops) per tier — one pool, per-tier
+    /// calibration (per-op costs differ ~10× between tiers).
+    tier_cal: [(usize, usize); 3],
+    cur_tier: Option<usize>,
+    // Reused scratch (allocation-free once grown to the batch shape).
+    batch_items: Vec<OpsSub>,
+    segs: Vec<Segment>,
+    accs: Vec<ActivityAccumulator>,
+    queues: StealQueues,
+    // Stats.
+    ops: u64,
+    batches: u64,
+    submissions: u64,
+    latencies: Vec<f64>,
+    crosscheck_sampled: u64,
+    crosscheck_mismatches: u64,
+    mismatch_indices: Vec<usize>,
+    first_batch: Option<Instant>,
+    busy_until: Option<Instant>,
+}
+
+enum Action {
+    Ops(Fidelity),
+    Idle,
+    Done,
+}
+
+impl Dispatcher {
+    fn run(mut self) -> DispatchOutcome {
+        // Spawn the pool before the first submission arrives so the
+        // O(workers) thread-spawn cost never lands inside a batch (and
+        // never inside the sustained-throughput window).
+        self.exec.run_region(|_| {});
+        loop {
+            let mut st = self.shared.q.lock().expect("serve queue poisoned");
+            let action = loop {
+                match st.items.front() {
+                    Some(Work::Ops(s)) => break Action::Ops(s.tier),
+                    Some(Work::Idle { .. }) => break Action::Idle,
+                    None if st.closed => break Action::Done,
+                    None => st = self.shared.work.wait(st).expect("serve queue poisoned"),
+                }
+            };
+            match action {
+                Action::Done => {
+                    drop(st);
+                    break;
+                }
+                Action::Idle => {
+                    // Merge consecutive idle phases into one gap.
+                    let mut slots = 0u64;
+                    loop {
+                        let take = match st.items.front() {
+                            Some(Work::Idle { slots: s }) => Some(*s),
+                            _ => None,
+                        };
+                        match take {
+                            Some(s) => {
+                                slots += s;
+                                st.items.pop_front();
+                            }
+                            None => break,
+                        }
+                    }
+                    drop(st);
+                    self.run_idle(slots);
+                }
+                Action::Ops(tier) => {
+                    // Coalesce consecutive same-tier submissions up to
+                    // the batch cap (the first one is admitted whatever
+                    // its size, so oversized submissions still run).
+                    let mut ops = 0usize;
+                    loop {
+                        let take = match st.items.front() {
+                            Some(Work::Ops(s)) => {
+                                s.tier == tier
+                                    && (ops == 0
+                                        || ops + s.triples.len() <= self.max_batch_ops)
+                            }
+                            _ => false,
+                        };
+                        if !take {
+                            break;
+                        }
+                        let Some(Work::Ops(s)) = st.items.pop_front() else {
+                            unreachable!("front was just matched as Ops")
+                        };
+                        ops += s.triples.len();
+                        st.queued_ops -= s.triples.len();
+                        self.batch_items.push(s);
+                    }
+                    drop(st);
+                    self.shared.space.notify_all();
+                    self.run_ops_batch(tier);
+                }
+            }
+        }
+        let busy_secs = match (self.first_batch, self.busy_until) {
+            (Some(t0), Some(t1)) => t1.duration_since(t0).as_secs_f64(),
+            _ => 0.0,
+        };
+        let ring_coalesced = self.producer.close();
+        DispatchOutcome {
+            master: self.master,
+            ops: self.ops,
+            batches: self.batches,
+            submissions: self.submissions,
+            latencies: self.latencies,
+            crosscheck_sampled: self.crosscheck_sampled,
+            crosscheck_mismatches: self.crosscheck_mismatches,
+            mismatch_indices: self.mismatch_indices,
+            busy_secs,
+            ring_coalesced,
+        }
+    }
+
+    /// Publish an idle gap as window-width idle windows (queue order —
+    /// the master trace and the ring see the identical sequence).
+    fn run_idle(&mut self, mut slots: u64) {
+        let window = self.window_ops as u64;
+        while slots > 0 {
+            let take = slots.min(window);
+            let w = ActivityWindow { slots: take, acc: ActivityAccumulator::default() };
+            self.master.push_window(w);
+            self.producer.publish(w);
+            slots -= take;
+        }
+    }
+
+    /// Execute one coalesced batch: map the submissions into zero-copy
+    /// segments, run (stealing scheduler over the persistent pool),
+    /// publish windows, cross-check, and complete every submission in
+    /// it — result buffers move to their tickets whole, nothing is
+    /// gathered or scattered.
+    fn run_ops_batch(&mut self, tier: Fidelity) {
+        let t_batch = Instant::now();
+        if self.first_batch.is_none() {
+            self.first_batch = Some(t_batch);
+        }
+        // Map submissions onto the concatenated op index space. The
+        // backing vectors stay in `batch_items`, untouched until the
+        // completions below, so the raw pointers are stable.
+        self.segs.clear();
+        let mut n = 0usize;
+        for s in &mut self.batch_items {
+            let m = s.triples.len();
+            if m == 0 {
+                continue; // completes with empty bits; no segment
+            }
+            debug_assert_eq!(s.out.len(), m, "producer-allocated buffer is sized with the ops");
+            self.segs.push(Segment {
+                start: n,
+                len: m,
+                tri: SendConst(s.triples.as_ptr()),
+                out: SendPtr(s.out.as_mut_ptr()),
+            });
+            n += m;
+        }
+        let window = self.window_ops.max(1);
+        let n_windows = n.div_ceil(window);
+        self.accs.clear();
+        self.accs.resize(n_windows, ActivityAccumulator::default());
+
+        if n > 0 {
+            let ti = tier_index(tier);
+            // Per-tier calibration swap: one pool, per-tier chunk hints.
+            if self.cur_tier != Some(ti) {
+                if let Some(prev) = self.cur_tier {
+                    self.tier_cal[prev] = (self.exec.chunk_hint(), self.exec.calibrated_ops());
+                }
+                let (chunk, cal) = self.tier_cal[ti];
+                self.exec.seed_calibration(chunk, cal);
+                self.cur_tier = Some(ti);
+            }
+            // The satellite staleness rule, applied through the public
+            // API: a hint calibrated on a much larger batch is dropped.
+            if self.exec.calibrated_ops() != 0
+                && n.saturating_mul(RECAL_RATIO) < self.exec.calibrated_ops()
+            {
+                self.exec.recalibrate();
+            }
+            self.execute_windows(ti, n, window, n_windows);
+            self.publish_windows(n, window, n_windows);
+            self.crosscheck(tier, n);
+        }
+
+        // Complete every submission: its result buffer moves to the
+        // ticket whole.
+        for sub in self.batch_items.drain(..) {
+            let latency = sub.submitted.elapsed().as_secs_f64();
+            self.latencies.push(latency);
+            self.submissions += 1;
+            let mut st = sub.done.state.lock().expect("serve completion poisoned");
+            st.bits = Some(sub.out);
+            st.done = true;
+            drop(st);
+            sub.done.cv.notify_all();
+        }
+        self.ops += n as u64;
+        self.batches += 1;
+        self.busy_until = Some(Instant::now());
+    }
+
+    /// Run the batch's windows through the stealing scheduler (or
+    /// serially under the engine's cutoff), each window computed whole by
+    /// one worker so the trace is deterministic.
+    fn execute_windows(&mut self, ti: usize, n: usize, window: usize, n_windows: usize) {
+        let dp = &self.dps[ti];
+        let segs = &self.segs[..];
+        let accs = &mut self.accs[..n_windows];
+        let workers = self.exec.workers();
+        if workers <= 1 || n <= SERIAL_CUTOFF {
+            for (w, acc) in accs.iter_mut().enumerate() {
+                let lo = w * window;
+                let hi = ((w + 1) * window).min(n);
+                // SAFETY: the dispatcher is the only executor here and
+                // the segment vectors live in `batch_items`.
+                unsafe { exec_span(dp, segs, lo, hi, acc) };
+            }
+            return;
+        }
+        // One-shot per-tier calibration on the stealing path: time the
+        // first few windows serially (their accumulators are final —
+        // windows are computed whole either way) and persist the derived
+        // chunk through the executor, same formula as the engine's own
+        // calibration pass.
+        let mut start_window = 0usize;
+        if self.exec.chunk_hint() == 0 {
+            let t0 = Instant::now();
+            let mut done_ops = 0usize;
+            while done_ops < CALIBRATION_OPS && start_window < n_windows {
+                let lo = start_window * window;
+                let hi = ((start_window + 1) * window).min(n);
+                // SAFETY: no worker is running yet; exclusive access.
+                unsafe { exec_span(dp, segs, lo, hi, &mut accs[start_window]) };
+                done_ops += hi - lo;
+                start_window += 1;
+            }
+            let per_op = t0.elapsed().as_secs_f64() / done_ops.max(1) as f64;
+            self.exec.seed_calibration(chunk_from_per_op(per_op), n);
+        }
+        if start_window >= n_windows {
+            return;
+        }
+        let chunk_windows = (self.exec.chunk_hint() / window).max(1);
+        self.queues.seed(start_window, n_windows, chunk_windows);
+        let queues = &self.queues;
+        let accs_ptr = SendPtr(accs.as_mut_ptr());
+        self.exec.run_region(|w| {
+            while let Some((w0, w1)) = queues.next(w) {
+                for win in w0..w1 {
+                    let lo = win * window;
+                    let hi = ((win + 1) * window).min(n);
+                    // SAFETY: window `win` sits in a range claimed by
+                    // exactly one `fetch_add` winner, so its output ops
+                    // and accumulator slot are unaliased; the dispatcher
+                    // keeps the submission buffers and `accs` alive
+                    // until run_region returns (pool barrier).
+                    unsafe {
+                        let acc = &mut *accs_ptr.0.add(win);
+                        exec_span(dp, segs, lo, hi, acc);
+                    }
+                }
+            }
+        });
+    }
+
+    /// Publish the batch's windows, in window order, to both the master
+    /// trace and the ring — the two sides of the bit-identity assert.
+    fn publish_windows(&mut self, n: usize, window: usize, n_windows: usize) {
+        for win in 0..n_windows {
+            let lo = win * window;
+            let hi = ((win + 1) * window).min(n);
+            let w = ActivityWindow { slots: (hi - lo) as u64, acc: self.accs[win] };
+            self.master.push_window(w);
+            self.producer.publish(w);
+        }
+    }
+
+    /// Sampled gate-level cross-check of the word tiers' results (the
+    /// gate tier is the reference and reports no sampling). Sample
+    /// indices are resolved through the segment map — by now the batch
+    /// is complete, so the dispatcher reads the submissions' buffers
+    /// directly.
+    fn crosscheck(&mut self, tier: Fidelity, n: usize) {
+        if self.crosscheck_every == 0 || tier == Fidelity::GateLevel {
+            return;
+        }
+        let step = self.crosscheck_every;
+        let mut si = 0usize;
+        let mut i = 0usize;
+        while i < n {
+            while self.segs[si].start + self.segs[si].len <= i {
+                si += 1;
+            }
+            let s = &self.segs[si];
+            let off = i - s.start;
+            // SAFETY: the region barrier has passed; the dispatcher is
+            // the only thread touching the submission buffers now.
+            let (t, got) = unsafe { (*s.tri.0.add(off), *s.out.0.add(off)) };
+            if self.unit.fmac_one(t.a, t.b, t.c) != got {
+                self.crosscheck_mismatches += 1;
+                if self.mismatch_indices.len() < MISMATCH_CAP {
+                    self.mismatch_indices.push(self.master.total_ops() as usize - n + i);
+                }
+            }
+            self.crosscheck_sampled += 1;
+            i += step;
+        }
+    }
+}
+
+/// Outcome of one serve run ([`ServeQueue::finish`]).
+#[derive(Debug, Clone)]
+pub struct ServeReport {
+    /// Ops executed.
+    pub ops: u64,
+    /// Batches dispatched (after coalescing).
+    pub batches: u64,
+    /// Submissions completed.
+    pub submissions: u64,
+    /// Ops per second over the busy window (first batch start → last
+    /// batch end). 0.0 when nothing ran.
+    pub sustained_ops_per_s: f64,
+    /// Submission latency percentiles, seconds (submit entry →
+    /// completion, queue wait included). 0.0 when nothing ran.
+    pub p50_latency_s: f64,
+    pub p99_latency_s: f64,
+    /// Sampled gate-level cross-check totals.
+    pub crosscheck_sampled: u64,
+    pub crosscheck_mismatches: u64,
+    pub mismatch_indices: Vec<usize>,
+    /// Windows merged by ring overflow (0 = the controller saw the
+    /// pristine window sequence).
+    pub ring_coalesced: u64,
+    /// The live controller's outcome.
+    pub streamed: StreamedBb,
+    /// Post-hoc schedule/energy on the master trace — the comparison
+    /// target of the bit-identity contract.
+    pub posthoc_schedule: Vec<f64>,
+    pub posthoc_energy: BbRunEnergy,
+    /// Streamed schedule == post-hoc schedule on the master trace
+    /// (guaranteed whenever `ring_coalesced == 0`).
+    pub schedule_matches: bool,
+    /// Streamed energies == post-hoc energies, bit for bit.
+    pub energy_matches: bool,
+    /// Streamed schedule == post-hoc schedule of the window sequence the
+    /// controller actually received — holds under ANY interleaving,
+    /// overflow included.
+    pub received_schedule_matches: bool,
+    /// No ops/activity dropped between engine and controller (holds
+    /// overflow included).
+    pub activity_preserved: bool,
+    /// Occupancy of the master trace (ops / slots).
+    pub occupancy: f64,
+    /// The master trace itself (window sequence as published).
+    pub master: ActivityTrace,
+}
+
+impl ServeReport {
+    /// The acceptance contract: clean cross-checks and a streamed
+    /// controller bit-identical to the post-hoc pass.
+    pub fn bb_consistent(&self) -> bool {
+        self.schedule_matches && self.energy_matches && self.activity_preserved
+    }
+
+    /// The per-run hard gate, overflow-aware: on a pristine stream
+    /// (`ring_coalesced == 0`) the streamed controller must be
+    /// bit-identical to the post-hoc pass on the master trace; after
+    /// overflow — the *documented* graceful degradation — it must still
+    /// be exact on the window sequence it actually received and must
+    /// not have dropped any accounting.
+    pub fn bb_gate_ok(&self) -> bool {
+        if self.ring_coalesced == 0 {
+            self.bb_consistent()
+        } else {
+            self.received_schedule_matches && self.activity_preserved
+        }
+    }
+}
+
+/// The streaming serve queue (see the module docs). Construct with
+/// [`ServeQueue::start`], submit through [`ServeQueue::handle`] clones
+/// from any number of producer threads, then call [`ServeQueue::finish`]
+/// to drain, join, and collect the [`ServeReport`].
+pub struct ServeQueue {
+    shared: Arc<QueueShared>,
+    max_queue_ops: usize,
+    dispatcher: std::thread::JoinHandle<DispatchOutcome>,
+    controller: std::thread::JoinHandle<(StreamedBb, Vec<ActivityWindow>, u64)>,
+    unit: FpuUnit,
+    tech: Technology,
+    policy: BbPolicy,
+    vdd: f64,
+    window_ops: usize,
+}
+
+impl ServeQueue {
+    /// Spin up the serve loop for `unit`: the dispatcher (engine side,
+    /// single ring producer) and the streaming body-bias controller
+    /// (single ring consumer). Fails if the unit cannot operate at the
+    /// configured voltage under the policy's active bias.
+    pub fn start(unit: &FpuUnit, cfg: ServeConfig) -> crate::Result<ServeQueue> {
+        anyhow::ensure!(cfg.window_ops >= 1, "window width must be at least 1 op");
+        anyhow::ensure!(cfg.max_batch_ops >= 1, "batch cap must be at least 1 op");
+        anyhow::ensure!(cfg.ring_windows >= 1, "ring needs at least one window slot");
+        let tech = Technology::fdsoi28();
+        let ctrl = StreamingController::new(unit, &tech, cfg.vdd, cfg.policy).ok_or_else(|| {
+            anyhow::anyhow!(
+                "unit not operable at vdd {} under the policy's active bias",
+                cfg.vdd
+            )
+        })?;
+        let (producer, mut consumer) = window_ring(cfg.ring_windows);
+        let shared = Arc::new(QueueShared {
+            q: Mutex::new(QueueState {
+                items: VecDeque::new(),
+                queued_ops: 0,
+                closed: false,
+            }),
+            space: Condvar::new(),
+            work: Condvar::new(),
+        });
+        let controller = std::thread::Builder::new()
+            .name("fpmax-serve-bb".to_string())
+            .spawn(move || {
+                let mut ctrl = ctrl;
+                let mut received = Vec::new();
+                let mut merged_in = 0u64;
+                while let Some(e) = consumer.recv() {
+                    received.push(e.window);
+                    merged_in += (e.coalesced as u64).saturating_sub(1);
+                    ctrl.push_window(&e.window);
+                }
+                (ctrl.finish(), received, merged_in)
+            })?;
+        let dispatcher = Dispatcher {
+            shared: Arc::clone(&shared),
+            exec: BatchExecutor::new(cfg.workers),
+            dps: [
+                UnitDatapath::new(unit, Fidelity::GateLevel),
+                UnitDatapath::new(unit, Fidelity::WordLevel),
+                UnitDatapath::new(unit, Fidelity::WordSimd),
+            ],
+            unit: unit.clone(),
+            window_ops: cfg.window_ops,
+            max_batch_ops: cfg.max_batch_ops,
+            crosscheck_every: cfg.crosscheck_every,
+            producer,
+            master: ActivityTrace::from_raw_windows(cfg.window_ops as u64, Vec::new()),
+            tier_cal: [(0, 0); 3],
+            cur_tier: None,
+            batch_items: Vec::new(),
+            segs: Vec::new(),
+            accs: Vec::new(),
+            queues: StealQueues::new(cfg.workers.max(1)),
+            ops: 0,
+            batches: 0,
+            submissions: 0,
+            latencies: Vec::new(),
+            crosscheck_sampled: 0,
+            crosscheck_mismatches: 0,
+            mismatch_indices: Vec::new(),
+            first_batch: None,
+            busy_until: None,
+        };
+        let dispatcher = std::thread::Builder::new()
+            .name("fpmax-serve-dispatch".to_string())
+            .spawn(move || dispatcher.run())?;
+        Ok(ServeQueue {
+            shared,
+            max_queue_ops: cfg.max_queue_ops,
+            dispatcher,
+            controller,
+            unit: unit.clone(),
+            tech,
+            policy: cfg.policy,
+            vdd: cfg.vdd,
+            window_ops: cfg.window_ops,
+        })
+    }
+
+    /// A producer handle (clone freely across threads).
+    pub fn handle(&self) -> SubmitHandle {
+        SubmitHandle { shared: Arc::clone(&self.shared) }
+    }
+
+    /// The backpressure bound handed to [`SubmitHandle::submit`].
+    pub fn max_queue_ops(&self) -> usize {
+        self.max_queue_ops
+    }
+
+    /// Convenience: submit through the queue's own bound.
+    pub fn submit(&self, tier: Fidelity, triples: Vec<OperandTriple>) -> crate::Result<Ticket> {
+        self.handle().submit(tier, triples, self.max_queue_ops)
+    }
+
+    /// Close the queue, drain everything still in flight, join both
+    /// threads, and assemble the report — including the post-hoc
+    /// bias-schedule and energy comparison on the master trace.
+    pub fn finish(self) -> crate::Result<ServeReport> {
+        {
+            let mut st = self.shared.q.lock().expect("serve queue poisoned");
+            st.closed = true;
+        }
+        self.shared.work.notify_all();
+        self.shared.space.notify_all();
+        let d = self
+            .dispatcher
+            .join()
+            .map_err(|_| anyhow::anyhow!("serve dispatcher panicked"))?;
+        let (streamed, received, _merged_in) = self
+            .controller
+            .join()
+            .map_err(|_| anyhow::anyhow!("serve BB controller panicked"))?;
+
+        let posthoc_schedule = window_bias_schedule(self.policy, &d.master);
+        let posthoc_energy =
+            run_energy_trace(&self.unit, &self.tech, self.vdd, self.policy, &d.master)
+                .ok_or_else(|| anyhow::anyhow!("post-hoc energy not evaluable"))?;
+        let received_trace = ActivityTrace::from_raw_windows(self.window_ops as u64, received);
+        let received_schedule = window_bias_schedule(self.policy, &received_trace);
+
+        let mut lat = d.latencies;
+        lat.sort_by(|a, b| a.partial_cmp(b).expect("NaN latency"));
+        let (p50, p99) = if lat.is_empty() {
+            (0.0, 0.0)
+        } else {
+            (percentile(&lat, 0.50), percentile(&lat, 0.99))
+        };
+        let master_agg = d.master.aggregate();
+        Ok(ServeReport {
+            ops: d.ops,
+            batches: d.batches,
+            submissions: d.submissions,
+            sustained_ops_per_s: if d.busy_secs > 0.0 {
+                d.ops as f64 / d.busy_secs
+            } else {
+                0.0
+            },
+            p50_latency_s: p50,
+            p99_latency_s: p99,
+            crosscheck_sampled: d.crosscheck_sampled,
+            crosscheck_mismatches: d.crosscheck_mismatches,
+            mismatch_indices: d.mismatch_indices,
+            ring_coalesced: d.ring_coalesced,
+            schedule_matches: streamed.schedule == posthoc_schedule,
+            energy_matches: streamed.energy == posthoc_energy,
+            received_schedule_matches: streamed.schedule == received_schedule,
+            activity_preserved: streamed.aggregate == master_agg
+                && streamed.ops == d.master.total_ops(),
+            occupancy: d.master.occupancy(),
+            posthoc_schedule,
+            posthoc_energy,
+            streamed,
+            master: d.master,
+        })
+    }
+}

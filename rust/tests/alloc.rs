@@ -116,6 +116,56 @@ fn parallel_batch_reuse_allocations_do_not_scale_with_batch_size() {
 }
 
 #[test]
+fn window_ring_publish_pop_allocation_free() {
+    // The serve layer's engine→controller ring: after construction,
+    // publish and pop allocate NOTHING — including the overflow path,
+    // where surplus windows merge into the producer-side pending window
+    // instead of growing anything.
+    use fpmax::arch::engine::{window_ring, ActivityAccumulator, ActivityWindow};
+    let (mut p, mut c) = window_ring(8);
+    let w = ActivityWindow {
+        slots: 64,
+        acc: ActivityAccumulator { ops: 64, digits: 512, ..ActivityAccumulator::default() },
+    };
+    // Warmup (first touches of anything lazy).
+    p.publish(w);
+    let _ = c.pop();
+
+    let mut received = 0u64;
+    let mut slots = 0u64;
+    let (calls, bytes) = allocations(|| {
+        for round in 0..100u32 {
+            // Overfill: 24 publishes into 8 slots, forcing coalescing.
+            for _ in 0..24 {
+                p.publish(w);
+            }
+            // Drain; skip some rounds so the pending window also gets
+            // exercised across publish calls.
+            if round % 3 != 2 {
+                while let Some(e) = c.pop() {
+                    received += 1;
+                    slots += e.window.slots;
+                }
+            }
+        }
+        while let Some(e) = c.pop() {
+            received += 1;
+            slots += e.window.slots;
+        }
+    });
+    assert_eq!(
+        (calls, bytes),
+        (0, 0),
+        "window ring publish/pop allocated: {calls} calls / {bytes} bytes"
+    );
+    assert!(received > 0);
+    // The pending window may still hold coalesced slots (close() would
+    // flush it); everything else arrived intact.
+    assert!(slots <= 100 * 24 * 64);
+    assert_eq!(slots % 64, 0);
+}
+
+#[test]
 fn parallel_batch_zero_alloc_after_pool_warmup() {
     // The persistent-pool guarantee: once the pool threads exist and the
     // chunk size is calibrated, parallel runs allocate NOTHING — job

@@ -1,0 +1,271 @@
+//! Integration properties of the streaming serve layer: results stay
+//! bit-identical to the batch engine under any producer interleaving,
+//! and the streamed body-bias controller is bit-identical to the
+//! post-hoc pass — across all three fidelity tiers, with idle phases
+//! woven in, overflow included. (All randomness is seeded; the
+//! *interleaving* of producer threads is genuinely nondeterministic,
+//! which is the point: the invariants must hold for every schedule the
+//! OS happens to produce.)
+
+use fpmax::arch::engine::{BatchExecutor, Datapath, Fidelity, UnitDatapath};
+use fpmax::arch::generator::{FpuConfig, FpuUnit};
+use fpmax::bb::{run_energy_trace, window_bias_schedule, BbPolicy};
+use fpmax::coordinator::serve_datapath;
+use fpmax::energy::tech::Technology;
+use fpmax::runtime::serve::{ServeConfig, ServeLoad, ServeQueue};
+use fpmax::workloads::throughput::{OperandMix, OperandStream};
+
+fn base_config(cfg: &FpuConfig, workers: usize, window: usize) -> ServeConfig {
+    let mut scfg = ServeConfig::nominal(cfg, true).expect("nominal serve config");
+    scfg.workers = workers;
+    scfg.window_ops = window;
+    scfg
+}
+
+#[test]
+fn serve_results_match_direct_submission_order() {
+    // Single producer, known submission order: every ticket's bits must
+    // equal a direct batch run of the same triples.
+    let cfg = FpuConfig::sp_fma();
+    let unit = FpuUnit::generate(&cfg);
+    let queue = ServeQueue::start(&unit, base_config(&cfg, 4, 256)).unwrap();
+    let dp = UnitDatapath::new(&unit, Fidelity::WordSimd);
+    let mut stream = OperandStream::new(cfg.precision, OperandMix::Anything, 99);
+    let mut pending = Vec::new();
+    for n in [1usize, 63, 700, 4_097, 256] {
+        let triples = stream.batch(n);
+        let mut want = vec![0u64; n];
+        dp.fmac_batch(&triples, &mut want);
+        let ticket = queue.submit(Fidelity::WordSimd, triples).unwrap();
+        pending.push((want, ticket));
+    }
+    for (want, ticket) in pending {
+        assert_eq!(ticket.wait(), want);
+    }
+    let report = queue.finish().unwrap();
+    assert_eq!(report.ops, 1 + 63 + 700 + 4_097 + 256);
+    assert_eq!(report.submissions, 5);
+    assert_eq!(report.crosscheck_mismatches, 0, "at {:?}", report.mismatch_indices);
+    assert!(report.bb_consistent());
+    assert_eq!(report.master.total_ops(), report.ops);
+}
+
+#[test]
+fn prop_streamed_bb_equals_posthoc_all_tiers_and_interleavings() {
+    // The tentpole property: for every fidelity tier, several seeds
+    // (different submission-size sequences and operand streams), random
+    // multi-producer interleavings and idle phases woven in, the
+    // streamed controller's schedule AND energies are bit-identical to
+    // the post-hoc pass over the master trace, the cross-check is
+    // clean, and no activity is dropped.
+    for (tier, total_ops) in [
+        (Fidelity::GateLevel, 6_000usize),
+        (Fidelity::WordLevel, 40_000),
+        (Fidelity::WordSimd, 40_000),
+    ] {
+        let cfg = FpuConfig::sp_cma();
+        let unit = FpuUnit::generate(&cfg);
+        for (seed, duty) in [(1u64, 1.0f64), (2, 0.25), (3, 0.1)] {
+            let load = ServeLoad {
+                total_ops,
+                producers: 3,
+                sub_ops: 1_024,
+                duty,
+                seed,
+            };
+            let report =
+                serve_datapath(&unit, tier, load, base_config(&cfg, 4, 512)).unwrap();
+            assert_eq!(report.ops, total_ops as u64, "{tier:?} seed {seed}");
+            assert_eq!(
+                report.crosscheck_mismatches, 0,
+                "{tier:?} seed {seed}: gate cross-check at {:?}",
+                report.mismatch_indices
+            );
+            // Under any interleaving, the controller is exact on what it
+            // received, and nothing was dropped on the way.
+            assert!(report.received_schedule_matches, "{tier:?} seed {seed}");
+            assert!(report.activity_preserved, "{tier:?} seed {seed}");
+            // With the default ring the stream never overflows, so the
+            // streamed schedule/energies equal the post-hoc pass on the
+            // master trace bit for bit.
+            assert_eq!(report.ring_coalesced, 0, "{tier:?} seed {seed}");
+            assert!(
+                report.schedule_matches && report.energy_matches,
+                "{tier:?} seed {seed}: streamed BB diverged from post-hoc"
+            );
+            assert_eq!(
+                report.streamed.schedule.len(),
+                report.master.len(),
+                "{tier:?} seed {seed}"
+            );
+            if duty < 1.0 {
+                // Idle weave landed: occupancy near the requested duty.
+                assert!(
+                    report.occupancy < duty + 0.15,
+                    "{tier:?} seed {seed}: occupancy {}",
+                    report.occupancy
+                );
+            }
+            if duty <= 0.1 {
+                // Gaps this deep (≥ 9 idle slots per op) are far beyond
+                // any plausible settle time, so the adaptive schedule
+                // must actually re-bias at least one window.
+                let (vbb_active, dropped) = {
+                    let s = &report.streamed.schedule;
+                    let hi = s.iter().cloned().fold(f64::MIN, f64::max);
+                    (hi, s.iter().any(|&v| v < hi))
+                };
+                assert!(
+                    dropped,
+                    "{tier:?} seed {seed}: no window ever left vbb {vbb_active}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn serve_overflow_degrades_without_losing_accounting() {
+    // A 1-window ring under a multi-batch run WILL overflow whenever the
+    // controller lags; whether a particular scheduling produces
+    // coalescing is timing-dependent, but the accounting invariants must
+    // hold either way — and the received-stream identity always holds.
+    let cfg = FpuConfig::sp_fma();
+    let unit = FpuUnit::generate(&cfg);
+    let mut scfg = base_config(&cfg, 4, 128);
+    scfg.ring_windows = 1;
+    let load = ServeLoad { total_ops: 30_000, producers: 2, sub_ops: 512, duty: 0.5, seed: 7 };
+    let report = serve_datapath(&unit, Fidelity::WordSimd, load, scfg).unwrap();
+    assert_eq!(report.ops, 30_000);
+    assert_eq!(report.crosscheck_mismatches, 0);
+    // The two always-invariants.
+    assert!(report.received_schedule_matches);
+    assert!(report.activity_preserved, "overflow must never drop ops or toggles");
+    // Whatever got merged, the controller saw every slot.
+    assert_eq!(
+        report.streamed.ops,
+        report.master.total_ops(),
+        "ring coalesced {} windows",
+        report.ring_coalesced
+    );
+    // When nothing coalesced, full bit-identity follows.
+    if report.ring_coalesced == 0 {
+        assert!(report.schedule_matches && report.energy_matches);
+    }
+}
+
+#[test]
+fn serve_mixed_tiers_split_batches_and_stay_clean() {
+    // Submissions at different tiers never coalesce into one batch, and
+    // every tier's results are bit-identical to its own datapath.
+    let cfg = FpuConfig::dp_fma();
+    let unit = FpuUnit::generate(&cfg);
+    let queue = ServeQueue::start(&unit, base_config(&cfg, 4, 256)).unwrap();
+    let mut stream = OperandStream::new(cfg.precision, OperandMix::Anything, 5);
+    let mut pending = Vec::new();
+    for (i, tier) in [Fidelity::WordSimd, Fidelity::WordLevel, Fidelity::GateLevel]
+        .into_iter()
+        .cycle()
+        .take(9)
+        .enumerate()
+    {
+        let n = 300 + 37 * i;
+        let triples = stream.batch(n);
+        let dp = UnitDatapath::new(&unit, tier);
+        let mut want = vec![0u64; n];
+        dp.fmac_batch(&triples, &mut want);
+        pending.push((want, queue.submit(tier, triples).unwrap()));
+    }
+    for (want, ticket) in pending {
+        assert_eq!(ticket.wait(), want);
+    }
+    let report = queue.finish().unwrap();
+    assert_eq!(report.submissions, 9);
+    assert_eq!(report.crosscheck_mismatches, 0);
+    assert!(report.bb_consistent());
+}
+
+#[test]
+fn streamed_energy_scores_like_offline_weave() {
+    // End-to-end sanity: a low-duty serve run's streamed adaptive energy
+    // equals run_energy_trace on the master trace (bit-identical — that
+    // is schedule_matches/energy_matches), and the adaptive policy beats
+    // the static one on the same master trace, reproducing the Fig. 4
+    // recovery in the serving context.
+    let cfg = FpuConfig::sp_cma();
+    let unit = FpuUnit::generate(&cfg);
+    let scfg = base_config(&cfg, 4, 1_024);
+    let vdd = scfg.vdd;
+    let policy = scfg.policy;
+    let load = ServeLoad { total_ops: 50_000, producers: 2, sub_ops: 4_096, duty: 0.1, seed: 11 };
+    let report = serve_datapath(&unit, Fidelity::WordSimd, load, scfg).unwrap();
+    assert!(report.bb_consistent());
+    let tech = Technology::fdsoi28();
+    let adaptive = run_energy_trace(&unit, &tech, vdd, policy, &report.master).unwrap();
+    assert_eq!(report.streamed.energy, adaptive);
+    let static_e =
+        run_energy_trace(&unit, &tech, vdd, BbPolicy::static_nominal(), &report.master)
+            .unwrap();
+    assert!(
+        adaptive.pj_per_op < static_e.pj_per_op,
+        "adaptive {} >= static {} at 10% duty",
+        adaptive.pj_per_op,
+        static_e.pj_per_op
+    );
+    // And the schedule really has idle-bias windows.
+    let sched = window_bias_schedule(policy, &report.master);
+    assert_eq!(report.streamed.schedule, sched);
+}
+
+#[test]
+fn serve_handles_tiny_and_huge_submissions_mixed() {
+    // The recalibration satellite, end-to-end: 64-op submissions mixed
+    // with submissions far above the batch cap, all bit-exact.
+    let cfg = FpuConfig::sp_fma();
+    let unit = FpuUnit::generate(&cfg);
+    let mut scfg = base_config(&cfg, 4, 512);
+    scfg.max_batch_ops = 8_192;
+    let queue = ServeQueue::start(&unit, scfg).unwrap();
+    let dp = UnitDatapath::new(&unit, Fidelity::WordSimd);
+    let mut stream = OperandStream::new(cfg.precision, OperandMix::Finite, 31);
+    let mut pending = Vec::new();
+    for n in [64usize, 100_000, 64, 64, 20_000, 64] {
+        let triples = stream.batch(n);
+        let mut want = vec![0u64; n];
+        dp.fmac_batch(&triples, &mut want);
+        pending.push((want, queue.submit(Fidelity::WordSimd, triples).unwrap()));
+    }
+    for (want, ticket) in pending {
+        assert_eq!(ticket.wait(), want);
+    }
+    let report = queue.finish().unwrap();
+    assert_eq!(report.ops, (64 * 4 + 100_000 + 20_000) as u64);
+    assert_eq!(report.crosscheck_mismatches, 0);
+    assert!(report.bb_consistent());
+}
+
+#[test]
+fn executor_recalibration_visible_through_serve_sized_runs() {
+    // Companion to the engine-level regression test: the public
+    // calibration surface behaves for the serve-shaped mixed sizes.
+    let cfg = FpuConfig::sp_fma();
+    let unit = FpuUnit::generate(&cfg);
+    let dp = UnitDatapath::new(&unit, Fidelity::WordSimd);
+    let exec = BatchExecutor::new(4);
+    let mut stream = OperandStream::new(cfg.precision, OperandMix::Finite, 8);
+    let big = stream.batch(400_000);
+    let small = stream.batch(2_048);
+    let mut out = vec![0u64; big.len()];
+    exec.run_into(&dp, &big, &mut out).unwrap();
+    assert_eq!(exec.calibrated_ops(), big.len());
+    let mut out_small = vec![0u64; small.len()];
+    exec.run_into(&dp, &small, &mut out_small).unwrap();
+    assert_eq!(
+        exec.calibrated_ops(),
+        small.len(),
+        "a ≥8×-smaller batch must recalibrate at its own scale"
+    );
+    for (i, t) in small.iter().enumerate() {
+        assert_eq!(out_small[i], dp.fmac_one(t.a, t.b, t.c), "slot {i}");
+    }
+}
