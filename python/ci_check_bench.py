@@ -10,7 +10,12 @@ fails the job with a readable delta table when any budget is blown:
   overhead ``< 2x`` untracked, zero sampled gate cross-check mismatches;
 * serve: sustained (4 producers) ``>= 0.8x`` the plain windowed-tracked
   batch throughput, ``p99 <= 10x p50`` submission latency, zero
-  cross-check mismatches, streamed BB bit-identical to post-hoc.
+  cross-check mismatches, streamed BB bit-identical to post-hoc;
+* routed fleet (``routed`` object in the serve artifact): fleet
+  sustained ``>= 0.8x`` the best single shard, fleet ``p99 <= 10x p50``,
+  zero misrouted submissions under the static policy, zero cross-check
+  mismatches, and every shard's streamed BB bit-identical to its own
+  post-hoc pass.
 
 Usage::
 
@@ -99,6 +104,27 @@ def serve_checks(doc: dict) -> list[Check]:
             out.append(
                 Check(unit, "bb_energy_match",
                       1.0 if row["bb_energy_match"] else 0.0, "is-true", 1.0))
+    routed = doc.get("routed")
+    if routed is not None:
+        out.append(
+            Check("fleet", "routed_vs_best_shard",
+                  routed["fleet_vs_best_shard_ratio"], ">=",
+                  t.get("min_routed_vs_best_shard_ratio", 0.8)))
+        out.append(
+            Check("fleet", "fleet_p99_over_p50", routed["fleet_p99_over_p50"],
+                  "<=", t.get("max_fleet_p99_over_p50", 10.0)))
+        out.append(
+            Check("fleet", "misrouted", routed["misrouted"], "==",
+                  t.get("max_misrouted", 0)))
+        out.append(
+            Check("fleet", "crosscheck_mismatches",
+                  routed["crosscheck_mismatches"], "==",
+                  t["max_crosscheck_mismatches"]))
+        if t.get("require_shard_bb_identity", False):
+            out.append(
+                Check("fleet", "all_shards_bb_identity",
+                      1.0 if routed["all_shards_bb_identity"] else 0.0,
+                      "is-true", 1.0))
     return out
 
 

@@ -1,0 +1,110 @@
+"""Gate-logic tests for ``python/ci_check_bench.py``: synthetic pass /
+fail / unmeasured artifacts for the engine, serve, and routed-fleet
+checks (no bench run needed — the artifacts are hand-built dicts dumped
+to temp files)."""
+
+import importlib.util
+import json
+import os
+import sys
+
+_SPEC = importlib.util.spec_from_file_location(
+    "ci_check_bench",
+    os.path.join(os.path.dirname(__file__), "..", "ci_check_bench.py"),
+)
+ci_check = importlib.util.module_from_spec(_SPEC)
+# Registered before exec: the module uses @dataclass, which resolves
+# type annotations through sys.modules[cls.__module__].
+sys.modules["ci_check_bench"] = ci_check
+_SPEC.loader.exec_module(ci_check)
+
+
+def serve_doc():
+    return {
+        "bench": "serve",
+        "measured": True,
+        "thresholds": {
+            "min_serve_vs_plain_windowed_ratio": 0.8,
+            "max_p99_over_p50": 10.0,
+            "max_crosscheck_mismatches": 0,
+            "require_bb_identity": True,
+            "min_routed_vs_best_shard_ratio": 0.8,
+            "max_fleet_p99_over_p50": 10.0,
+            "max_misrouted": 0,
+            "require_shard_bb_identity": True,
+        },
+        "units": {
+            "SP FMA": {
+                "serve_vs_plain_windowed_ratio": 0.95,
+                "p99_over_p50": 2.5,
+                "crosscheck_mismatches": 0,
+                "bb_schedule_match": True,
+                "bb_energy_match": True,
+            },
+        },
+        "routed": {
+            "fleet_vs_best_shard_ratio": 2.1,
+            "fleet_p99_over_p50": 4.0,
+            "misrouted": 0,
+            "crosscheck_mismatches": 0,
+            "all_shards_bb_identity": True,
+        },
+    }
+
+
+def run_doc(tmp_path, doc):
+    path = tmp_path / "artifact.json"
+    path.write_text(json.dumps(doc))
+    checks, errors = ci_check.check_file(str(path))
+    return checks, errors
+
+
+def test_serve_with_routed_all_pass(tmp_path):
+    checks, errors = run_doc(tmp_path, serve_doc())
+    assert not errors
+    # 5 per-unit checks + 5 fleet checks.
+    assert len(checks) == 10
+    assert all(c.ok for c in checks)
+    fleet = [c for c in checks if c.unit == "fleet"]
+    assert {c.name for c in fleet} == {
+        "routed_vs_best_shard",
+        "fleet_p99_over_p50",
+        "misrouted",
+        "crosscheck_mismatches",
+        "all_shards_bb_identity",
+    }
+
+
+def test_routed_budget_violations_fail(tmp_path):
+    doc = serve_doc()
+    doc["routed"]["fleet_vs_best_shard_ratio"] = 0.5
+    doc["routed"]["misrouted"] = 2
+    doc["routed"]["all_shards_bb_identity"] = False
+    checks, errors = run_doc(tmp_path, doc)
+    assert not errors
+    failed = {c.name for c in checks if not c.ok}
+    assert failed == {
+        "routed_vs_best_shard",
+        "misrouted",
+        "all_shards_bb_identity",
+    }
+
+
+def test_serve_without_routed_section_still_checks_units(tmp_path):
+    # Backwards compatibility: a pre-PR-5 artifact (no "routed" object)
+    # gates only the per-unit rows.
+    doc = serve_doc()
+    del doc["routed"]
+    checks, errors = run_doc(tmp_path, doc)
+    assert not errors
+    assert len(checks) == 5
+    assert all(c.unit != "fleet" for c in checks)
+    assert all(c.ok for c in checks)
+
+
+def test_unmeasured_artifact_is_an_error(tmp_path):
+    doc = serve_doc()
+    doc["measured"] = False
+    checks, errors = run_doc(tmp_path, doc)
+    assert not checks
+    assert errors and "measured" in errors[0]

@@ -11,7 +11,11 @@
 //!   none of the queueing;
 //! * p99 submission latency ≤ 10× p50;
 //! * zero sampled gate-level cross-check mismatches;
-//! * streamed bias schedule and energies bit-identical to post-hoc.
+//! * streamed bias schedule and energies bit-identical to post-hoc;
+//! * **routed fleet** (4 Table-1 shards, mixed SP/DP latency/bulk
+//!   producers): fleet sustained ≥ **0.8×** the best single shard,
+//!   fleet p99 ≤ 10× p50, zero misrouted under the static policy, and
+//!   every shard's streamed BB bit-identical to its own post-hoc pass.
 //!
 //! Results are written to `BENCH_serve.json` at the repository root
 //! (override with `FPMAX_BENCH_OUT=path`).
@@ -20,7 +24,8 @@
 
 use fpmax::arch::engine::{BatchExecutor, Fidelity, UnitDatapath};
 use fpmax::arch::generator::{FpuConfig, FpuUnit};
-use fpmax::coordinator;
+use fpmax::coordinator::{self, RoutedLoad};
+use fpmax::runtime::router::{FleetReport, RouterConfig, ServeRouter};
 use fpmax::runtime::serve::{ServeConfig, ServeLoad};
 use fpmax::util::bench::header;
 use fpmax::workloads::throughput::{OperandMix, OperandStream};
@@ -142,6 +147,36 @@ fn main() {
         });
     }
 
+    // Routed fleet: all four Table-1 units behind the shard router,
+    // mixed SP/DP latency/bulk producers, fair-share worker budget.
+    let routed_once = |seed: u64| -> FleetReport {
+        let specs = ServeRouter::fleet_nominal(Fidelity::WordSimd, true, workers, WINDOW_OPS, 1_024)
+            .expect("fleet specs");
+        let load = RoutedLoad {
+            total_ops: n,
+            producers_per_class: 1,
+            sub_ops: SUB_OPS,
+            duty: 1.0,
+            seed,
+        };
+        coordinator::serve_routed(&specs, RouterConfig::no_spill(workers), Fidelity::WordSimd, load)
+            .expect("routed serve run")
+    };
+    let mut routed = routed_once(42);
+    for s in 1..samples {
+        let r = routed_once(42 + s as u64);
+        if r.fleet_sustained_ops_per_s > routed.fleet_sustained_ops_per_s {
+            routed = r;
+        }
+    }
+    assert_eq!(
+        routed.crosscheck_mismatches(),
+        0,
+        "routed fleet gate cross-check mismatches"
+    );
+    assert!(routed.bb_gate_ok(), "a routed shard's streamed BB diverged from post-hoc");
+    assert_eq!(routed.misrouted, 0, "static policy with no spill pressure misrouted work");
+
     println!();
     for r in &rows {
         println!(
@@ -161,9 +196,22 @@ fn main() {
         );
     }
 
+    let routed_best = routed.best_shard_ops_per_s();
+    let routed_ratio = routed.fleet_vs_best_shard_ratio();
+    let routed_p99_over_p50 = routed.fleet_p99_over_p50();
+    println!(
+        "routed   fleet {:>8.2} Mops/s ({routed_ratio:.2}× best shard {:>8.2})  p50 {:>7.1} µs  p99 {:>7.1} µs ({routed_p99_over_p50:.1}×)  misrouted {}  bb {}",
+        routed.fleet_sustained_ops_per_s / 1e6,
+        routed_best / 1e6,
+        routed.fleet_p50_latency_s * 1e6,
+        routed.fleet_p99_latency_s * 1e6,
+        routed.misrouted,
+        if routed.bb_gate_ok() { "bit-identical/shard" } else { "DIVERGED" },
+    );
+
     let out_path = std::env::var("FPMAX_BENCH_OUT")
         .unwrap_or_else(|_| format!("{}/../BENCH_serve.json", env!("CARGO_MANIFEST_DIR")));
-    let json = render_json(n, workers, &rows);
+    let json = render_json(n, workers, &rows, &routed);
     match std::fs::write(&out_path, &json) {
         Ok(()) => println!("\nwrote {out_path}"),
         Err(e) => println!("\ncould not write {out_path}: {e}"),
@@ -173,7 +221,7 @@ fn main() {
 /// Hand-rolled JSON (no serde offline): stable key order, thresholds
 /// embedded so the CI regression gate reads its budgets from the
 /// artifact itself.
-fn render_json(ops: usize, workers: usize, rows: &[ServeRow]) -> String {
+fn render_json(ops: usize, workers: usize, rows: &[ServeRow], routed: &FleetReport) -> String {
     let mut s = String::new();
     s.push_str("{\n");
     s.push_str("  \"bench\": \"serve\",\n");
@@ -186,7 +234,11 @@ fn render_json(ops: usize, workers: usize, rows: &[ServeRow]) -> String {
     s.push_str("    \"min_serve_vs_plain_windowed_ratio\": 0.8,\n");
     s.push_str("    \"max_p99_over_p50\": 10.0,\n");
     s.push_str("    \"max_crosscheck_mismatches\": 0,\n");
-    s.push_str("    \"require_bb_identity\": true\n");
+    s.push_str("    \"require_bb_identity\": true,\n");
+    s.push_str("    \"min_routed_vs_best_shard_ratio\": 0.8,\n");
+    s.push_str("    \"max_fleet_p99_over_p50\": 10.0,\n");
+    s.push_str("    \"max_misrouted\": 0,\n");
+    s.push_str("    \"require_shard_bb_identity\": true\n");
     s.push_str("  },\n");
     s.push_str("  \"units\": {\n");
     for (i, r) in rows.iter().enumerate() {
@@ -221,6 +273,53 @@ fn render_json(ops: usize, workers: usize, rows: &[ServeRow]) -> String {
         s.push_str(&format!("      \"ring_coalesced\": {}\n", r.ring_coalesced));
         s.push_str(if i + 1 == rows.len() { "    }\n" } else { "    },\n" });
     }
+    s.push_str("  },\n");
+    let best = routed.best_shard_ops_per_s();
+    let ratio = routed.fleet_vs_best_shard_ratio();
+    let p99_over_p50 = routed.fleet_p99_over_p50();
+    s.push_str("  \"routed\": {\n");
+    s.push_str(&format!("    \"shard_count\": {},\n", routed.shards.len()));
+    s.push_str(&format!(
+        "    \"fleet_sustained_ops_per_s\": {:.0},\n",
+        routed.fleet_sustained_ops_per_s
+    ));
+    s.push_str(&format!("    \"best_shard_ops_per_s\": {best:.0},\n"));
+    s.push_str(&format!("    \"fleet_vs_best_shard_ratio\": {ratio:.4},\n"));
+    s.push_str(&format!(
+        "    \"fleet_p50_us\": {:.3},\n",
+        routed.fleet_p50_latency_s * 1e6
+    ));
+    s.push_str(&format!(
+        "    \"fleet_p99_us\": {:.3},\n",
+        routed.fleet_p99_latency_s * 1e6
+    ));
+    s.push_str(&format!("    \"fleet_p99_over_p50\": {p99_over_p50:.3},\n"));
+    s.push_str(&format!("    \"misrouted\": {},\n", routed.misrouted));
+    s.push_str(&format!("    \"spilled\": {},\n", routed.spilled));
+    s.push_str(&format!(
+        "    \"crosscheck_sampled\": {},\n",
+        routed.crosscheck_sampled()
+    ));
+    s.push_str(&format!(
+        "    \"crosscheck_mismatches\": {},\n",
+        routed.crosscheck_mismatches()
+    ));
+    s.push_str(&format!(
+        "    \"all_shards_bb_identity\": {},\n",
+        routed.bb_gate_ok()
+    ));
+    s.push_str("    \"shards\": {\n");
+    for (i, sh) in routed.shards.iter().enumerate() {
+        s.push_str(&format!(
+            "      \"{}\": {{ \"ops\": {}, \"sustained_ops_per_s\": {:.0}, \"bb_gate_ok\": {} }}{}\n",
+            sh.unit,
+            sh.report.ops,
+            sh.report.sustained_ops_per_s,
+            sh.report.bb_gate_ok(),
+            if i + 1 == routed.shards.len() { "" } else { "," }
+        ));
+    }
+    s.push_str("    }\n");
     s.push_str("  }\n}\n");
     s
 }

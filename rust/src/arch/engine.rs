@@ -680,6 +680,25 @@ impl WindowProducer {
     }
 }
 
+impl Drop for WindowProducer {
+    /// A producer that goes away without [`WindowProducer::close`] —
+    /// e.g. a serve dispatcher unwinding mid-run — still closes the
+    /// stream, so a consumer parked in [`WindowConsumer::recv`] wakes
+    /// and drains instead of hanging forever. (The orderly `close` path
+    /// has already stored the flag by the time this runs; storing it
+    /// twice is harmless.)
+    fn drop(&mut self) {
+        self.shared.closed.store(true, Ordering::Release);
+        match self.shared.park.lock() {
+            Ok(_g) => self.shared.wake.notify_all(),
+            Err(p) => {
+                let _g = p.into_inner();
+                self.shared.wake.notify_all();
+            }
+        }
+    }
+}
+
 /// Consumer half of a [`window_ring`]. **Single-consumer**: exactly one
 /// thread may hold and use this handle.
 pub struct WindowConsumer {
@@ -2043,6 +2062,66 @@ impl BatchExecutor {
     }
 }
 
+/// Registry portioning one fleet-wide worker budget across shard
+/// executors.
+///
+/// The serve router runs one [`BatchExecutor`] — one persistent pool —
+/// per (unit preset × precision × fidelity tier) shard. Sizing each of
+/// those pools independently at `available_parallelism` would
+/// oversubscribe the host by the shard count; the registry hands out
+/// executors whose worker counts sum to at most the budget (each grant
+/// clamped to what remains, but never below one worker, so a late shard
+/// still makes progress).
+///
+/// Every granted executor is fully independent: its own pool, its own
+/// chunk-size calibration. That is the per-shard calibration-isolation
+/// guarantee — a gate-level shard's ~10×-slower per-op cost can never
+/// poison a word-simd sibling's chunk hint, because they do not share a
+/// `chunk_hint` cell to begin with.
+pub struct ExecutorRegistry {
+    budget: usize,
+    claimed: AtomicUsize,
+}
+
+impl ExecutorRegistry {
+    /// A registry over a fixed worker budget (clamped to ≥ 1).
+    pub fn new(budget: usize) -> ExecutorRegistry {
+        ExecutorRegistry { budget: budget.max(1), claimed: AtomicUsize::new(0) }
+    }
+
+    /// The total worker budget.
+    pub fn budget(&self) -> usize {
+        self.budget
+    }
+
+    /// Workers granted so far (may exceed the budget only by the
+    /// one-worker floor of grants made after exhaustion).
+    pub fn claimed(&self) -> usize {
+        self.claimed.load(Ordering::Relaxed)
+    }
+
+    /// Claim a shard executor of up to `requested` workers, clamped to
+    /// the remaining budget (always at least one). The executor is
+    /// independent of every other grant — no shared pool, no shared
+    /// calibration.
+    pub fn shard(&self, requested: usize) -> BatchExecutor {
+        let want = requested.max(1);
+        let mut cur = self.claimed.load(Ordering::Relaxed);
+        loop {
+            let grant = want.min(self.budget.saturating_sub(cur)).max(1);
+            match self.claimed.compare_exchange_weak(
+                cur,
+                cur + grant,
+                Ordering::Relaxed,
+                Ordering::Relaxed,
+            ) {
+                Ok(_) => return BatchExecutor::new(grant),
+                Err(seen) => cur = seen,
+            }
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -2648,5 +2727,59 @@ mod tests {
         for (i, (t, &o)) in triples.iter().zip(out.iter()).enumerate() {
             assert_eq!(o, word.fmac_one(t.a, t.b, t.c), "slot {i}");
         }
+    }
+
+    #[test]
+    fn registry_portions_the_worker_budget() {
+        let reg = ExecutorRegistry::new(4);
+        assert_eq!(reg.budget(), 4);
+        let a = reg.shard(3);
+        assert_eq!(a.workers(), 3);
+        let b = reg.shard(3);
+        assert_eq!(b.workers(), 1, "clamped to the remaining budget");
+        // Budget exhausted: the floor still grants one worker so a late
+        // shard can make progress.
+        let c = reg.shard(5);
+        assert_eq!(c.workers(), 1);
+        assert!(reg.claimed() >= reg.budget());
+    }
+
+    #[test]
+    fn registry_shards_do_not_share_calibration() {
+        // The per-shard isolation guarantee behind the serve router: a
+        // calibration observed on one shard's executor (say a slow
+        // gate-level tier) must be invisible to every sibling.
+        let reg = ExecutorRegistry::new(8);
+        let gate_shard = reg.shard(2);
+        let simd_shard = reg.shard(2);
+        gate_shard.seed_calibration(512, 1_000_000);
+        assert_eq!(simd_shard.chunk_hint(), 0, "sibling saw a foreign chunk hint");
+        assert_eq!(simd_shard.calibrated_ops(), 0);
+        simd_shard.seed_calibration(65_536, 4_096);
+        assert_eq!(gate_shard.chunk_hint(), 512);
+        assert_eq!(gate_shard.calibrated_ops(), 1_000_000);
+        gate_shard.recalibrate();
+        assert_eq!(simd_shard.chunk_hint(), 65_536);
+    }
+
+    #[test]
+    fn window_ring_producer_drop_closes_the_stream() {
+        // A producer dropped without close() (dispatcher death) must
+        // still wake and terminate a blocking consumer.
+        let (producer, mut consumer) = window_ring(4);
+        let t = std::thread::spawn(move || {
+            let mut seen = 0u64;
+            while consumer.recv().is_some() {
+                seen += 1;
+            }
+            seen
+        });
+        let mut producer = producer;
+        producer.publish(ActivityWindow {
+            slots: 5,
+            acc: ActivityAccumulator { ops: 5, ..ActivityAccumulator::default() },
+        });
+        drop(producer);
+        assert_eq!(t.join().expect("consumer thread"), 1);
     }
 }

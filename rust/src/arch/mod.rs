@@ -45,8 +45,8 @@ pub mod tree;
 
 pub use engine::{
     window_ring, ActivityAccumulator, ActivityTrace, ActivityWindow, BatchExecutor,
-    BatchLenError, CrossCheck, Datapath, Fidelity, GoldenFma, RingWindow, UnitDatapath,
-    WindowConsumer, WindowProducer, WordSimdUnit, WordUnit,
+    BatchLenError, CrossCheck, Datapath, ExecutorRegistry, Fidelity, GoldenFma, RingWindow,
+    UnitDatapath, WindowConsumer, WindowProducer, WordSimdUnit, WordUnit,
 };
 pub use fp::{decode, encode_finite, Class, Decoded, Format, Precision};
 pub use generator::{FpuConfig, FpuKind, FpuUnit, StructureReport};

@@ -268,6 +268,43 @@ pub fn run_energy_trace(
     energy_of_runs(unit, tech, vdd, policy, runs)
 }
 
+/// Fleet-level merge of independently accounted energy runs — the
+/// multi-stream counterpart of the per-shard accounting.
+///
+/// Each serve shard runs its own [`StreamingController`] over its own
+/// window stream (its numbers stay bit-identical to that shard's
+/// post-hoc [`run_energy_trace`] pass — nothing here touches them); the
+/// fleet total is the exact sum of the per-run ops and energy terms,
+/// with `pj_per_op` recomputed over the merged totals. Streams from
+/// different units at different operating points merge soundly because
+/// every term is already absolute energy, not a rate.
+pub fn merge_run_energies<'a, I>(runs: I) -> BbRunEnergy
+where
+    I: IntoIterator<Item = &'a BbRunEnergy>,
+{
+    let mut ops = 0u64;
+    let mut dynamic_pj = 0.0f64;
+    let mut leakage_pj = 0.0f64;
+    let mut transition_pj = 0.0f64;
+    for r in runs {
+        ops += r.ops;
+        dynamic_pj += r.dynamic_pj;
+        leakage_pj += r.leakage_pj;
+        transition_pj += r.transition_pj;
+    }
+    BbRunEnergy {
+        ops,
+        dynamic_pj,
+        leakage_pj,
+        transition_pj,
+        pj_per_op: if ops > 0 {
+            (dynamic_pj + leakage_pj + transition_pj) / ops as f64
+        } else {
+            f64::INFINITY
+        },
+    }
+}
+
 /// The per-window V_BB schedule a policy produces on a trace — the
 /// controller's decision sequence, consumable by
 /// [`crate::energy::power::evaluate_windowed`] for window-granular power
@@ -767,6 +804,35 @@ mod tests {
         let mut acc = ActivityAccumulator::default();
         acc.merge(&out.aggregate);
         assert_eq!(acc, trace.aggregate());
+    }
+
+    #[test]
+    fn merge_run_energies_is_the_exact_sum() {
+        let (unit, tech) = setup();
+        let freq = 1.0;
+        let a = run_energy(&unit, &tech, 0.7, BbPolicy::static_nominal(), &ten_pct(200_000))
+            .unwrap();
+        let b = run_energy(&unit, &tech, 0.6, BbPolicy::adaptive_nominal(freq), &ten_pct(500_000))
+            .unwrap();
+        let m = merge_run_energies([&a, &b]);
+        assert_eq!(m.ops, a.ops + b.ops);
+        assert_eq!(m.dynamic_pj, a.dynamic_pj + b.dynamic_pj);
+        assert_eq!(m.leakage_pj, a.leakage_pj + b.leakage_pj);
+        assert_eq!(m.transition_pj, a.transition_pj + b.transition_pj);
+        let total = m.dynamic_pj + m.leakage_pj + m.transition_pj;
+        assert!((m.pj_per_op - total / m.ops as f64).abs() < 1e-12 * m.pj_per_op.max(1.0));
+        // A singleton merge keeps every term verbatim (pj_per_op is
+        // recomputed from the pJ terms, so it agrees to round-off).
+        let one = merge_run_energies([&a]);
+        assert_eq!(one.ops, a.ops);
+        assert_eq!(one.dynamic_pj, a.dynamic_pj);
+        assert_eq!(one.leakage_pj, a.leakage_pj);
+        assert_eq!(one.transition_pj, a.transition_pj);
+        assert!((one.pj_per_op / a.pj_per_op - 1.0).abs() < 1e-12);
+        // Empty merge: nothing ran, energy/op undefined.
+        let none = merge_run_energies(std::iter::empty::<&BbRunEnergy>());
+        assert_eq!(none.ops, 0);
+        assert!(none.pj_per_op.is_infinite());
     }
 
     #[test]

@@ -11,6 +11,6 @@
 pub mod controller;
 
 pub use controller::{
-    blowup_vs_full, run_energy, run_energy_trace, window_bias_schedule, BbPolicy, BbRunEnergy,
-    StreamedBb, StreamingController,
+    blowup_vs_full, merge_run_energies, run_energy, run_energy_trace, window_bias_schedule,
+    BbPolicy, BbRunEnergy, StreamedBb, StreamingController,
 };

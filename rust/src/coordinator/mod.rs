@@ -23,6 +23,7 @@ use std::time::Instant;
 use crate::arch::engine::{ActivityTrace, BatchExecutor, Fidelity, GoldenFma, UnitDatapath};
 use crate::arch::fp::{decode, Class, Precision};
 use crate::arch::generator::{FpuKind, FpuUnit};
+use crate::runtime::router::{FleetReport, RouterConfig, ServeRouter, ShardSpec, WorkloadClass};
 use crate::runtime::serve::{ServeConfig, ServeLoad, ServeQueue, ServeReport, Ticket};
 use crate::runtime::FmacArtifact;
 use crate::workloads::throughput::{OperandBatch, OperandMix, OperandStream, OperandTriple};
@@ -231,80 +232,206 @@ pub fn serve_datapath(
         "--duty must be in (0, 1], got {}",
         load.duty
     );
-    /// Submissions a producer keeps in flight before waiting the oldest.
-    const INFLIGHT: usize = 8;
-    /// Bursts between idle-phase submissions (batching the idle debt
-    /// keeps gaps long enough for the settle-time rule to act on).
-    const BURSTS_PER_IDLE: u64 = 4;
-
     let queue = ServeQueue::start(unit, cfg)?;
     let max_q = queue.max_queue_ops();
     let precision = unit.config.precision;
-    std::thread::scope(|s| -> crate::Result<()> {
+    let produced = std::thread::scope(|s| -> crate::Result<()> {
         let mut joins = Vec::new();
         for p in 0..load.producers {
             let handle = queue.handle();
             let share = load.total_ops / load.producers
                 + usize::from(p < load.total_ops % load.producers);
             joins.push(s.spawn(move || -> crate::Result<()> {
-                let mut stream = OperandStream::new(
+                drive_producer(
                     precision,
-                    OperandMix::Finite,
-                    load.seed.wrapping_add(0x9E37_79B9_7F4A_7C15u64.wrapping_mul(p as u64 + 1)),
-                );
-                let mut rng =
-                    crate::util::Rng::new(load.seed ^ (((p as u64 + 1) << 32) | 0xA5));
-                let mut left = share;
-                let mut inflight: std::collections::VecDeque<(usize, Ticket)> =
-                    std::collections::VecDeque::new();
-                let mut ops_since_idle = 0u64;
-                let mut idle_debt = 0.0f64;
-                while left > 0 {
-                    let span = (load.sub_ops / 2
-                        + rng.below(load.sub_ops.max(1) as u64) as usize)
-                        .clamp(1, left);
-                    let triples = stream.batch(span);
-                    inflight.push_back((span, handle.submit(tier, triples, max_q)?));
-                    if inflight.len() > INFLIGHT {
-                        let (m, t) = inflight.pop_front().expect("nonempty");
-                        let bits = t.wait();
-                        anyhow::ensure!(bits.len() == m, "short result: {} of {m}", bits.len());
-                    }
-                    left -= span;
-                    ops_since_idle += span as u64;
-                    if load.duty < 1.0
-                        && ops_since_idle >= BURSTS_PER_IDLE * load.sub_ops as u64
-                    {
-                        idle_debt += ops_since_idle as f64 * (1.0 - load.duty) / load.duty;
-                        ops_since_idle = 0;
-                        let slots = idle_debt as u64;
-                        if slots > 0 {
-                            handle.submit_idle(slots)?;
-                            idle_debt -= slots as f64;
-                        }
-                    }
-                }
-                if load.duty < 1.0 && ops_since_idle > 0 {
-                    let slots = (idle_debt
-                        + ops_since_idle as f64 * (1.0 - load.duty) / load.duty)
-                        as u64;
-                    if slots > 0 {
-                        handle.submit_idle(slots)?;
-                    }
-                }
-                for (m, t) in inflight {
-                    let bits = t.wait();
-                    anyhow::ensure!(bits.len() == m, "short result: {} of {m}", bits.len());
-                }
-                Ok(())
+                    share,
+                    load.sub_ops,
+                    load.duty,
+                    producer_seeds(load.seed, p),
+                    |triples| handle.submit(tier, triples, max_q),
+                    |slots| handle.submit_idle(slots),
+                )
             }));
         }
+        let mut first_err = None;
         for j in joins {
-            j.join().map_err(|_| anyhow::anyhow!("serve producer panicked"))??;
+            match j.join().map_err(|_| anyhow::anyhow!("serve producer panicked")) {
+                Ok(Ok(())) => {}
+                Ok(Err(e)) | Err(e) => {
+                    first_err.get_or_insert(e);
+                }
+            }
         }
-        Ok(())
-    })?;
-    queue.finish()
+        first_err.map_or(Ok(()), Err)
+    });
+    // Finish even when a producer failed: finish() closes the queue and
+    // joins the dispatcher/controller — bailing first would leak them.
+    let finished = queue.finish();
+    match produced {
+        Ok(()) => finished,
+        Err(e) => Err(e),
+    }
+}
+
+/// The deterministic per-producer seed pair every synthetic serve
+/// workload uses: (operand-stream seed, submission-size seed).
+fn producer_seeds(seed: u64, p: usize) -> (u64, u64) {
+    (
+        seed.wrapping_add(0x9E37_79B9_7F4A_7C15u64.wrapping_mul(p as u64 + 1)),
+        seed ^ (((p as u64 + 1) << 32) | 0xA5),
+    )
+}
+
+/// One synthetic serve producer: submits `share` ops of `precision` in
+/// variable-sized chunks around `sub_ops`, keeps a bounded ticket
+/// pipeline in flight (validating every returned result length), and
+/// weaves idle-slot submissions in to hit `duty` occupancy. Shared by
+/// the single-queue ([`serve_datapath`]) and routed ([`serve_routed`])
+/// workloads — only the submission target differs.
+fn drive_producer<FS, FI>(
+    precision: Precision,
+    share: usize,
+    sub_ops: usize,
+    duty: f64,
+    (stream_seed, size_seed): (u64, u64),
+    mut submit: FS,
+    mut submit_idle: FI,
+) -> crate::Result<()>
+where
+    FS: FnMut(Vec<OperandTriple>) -> crate::Result<Ticket>,
+    FI: FnMut(u64) -> crate::Result<()>,
+{
+    /// Submissions a producer keeps in flight before waiting the oldest.
+    const INFLIGHT: usize = 8;
+    /// Bursts between idle-phase submissions (batching the idle debt
+    /// keeps gaps long enough for the settle-time rule to act on).
+    const BURSTS_PER_IDLE: u64 = 4;
+
+    let mut stream = OperandStream::new(precision, OperandMix::Finite, stream_seed);
+    let mut rng = crate::util::Rng::new(size_seed);
+    let mut left = share;
+    let mut inflight: std::collections::VecDeque<(usize, Ticket)> =
+        std::collections::VecDeque::new();
+    let mut ops_since_idle = 0u64;
+    let mut idle_debt = 0.0f64;
+    while left > 0 {
+        let span =
+            (sub_ops / 2 + rng.below(sub_ops.max(1) as u64) as usize).clamp(1, left);
+        let triples = stream.batch(span);
+        inflight.push_back((span, submit(triples)?));
+        if inflight.len() > INFLIGHT {
+            let (m, t) = inflight.pop_front().expect("nonempty");
+            let bits = t.wait()?;
+            anyhow::ensure!(bits.len() == m, "short result: {} of {m}", bits.len());
+        }
+        left -= span;
+        ops_since_idle += span as u64;
+        if duty < 1.0 && ops_since_idle >= BURSTS_PER_IDLE * sub_ops as u64 {
+            idle_debt += ops_since_idle as f64 * (1.0 - duty) / duty;
+            ops_since_idle = 0;
+            let slots = idle_debt as u64;
+            if slots > 0 {
+                submit_idle(slots)?;
+                idle_debt -= slots as f64;
+            }
+        }
+    }
+    if duty < 1.0 && ops_since_idle > 0 {
+        let slots = (idle_debt + ops_since_idle as f64 * (1.0 - duty) / duty) as u64;
+        if slots > 0 {
+            submit_idle(slots)?;
+        }
+    }
+    for (m, t) in inflight {
+        let bits = t.wait()?;
+        anyhow::ensure!(bits.len() == m, "short result: {} of {m}", bits.len());
+    }
+    Ok(())
+}
+
+/// A synthetic routed serving workload for [`serve_routed`]:
+/// `producers_per_class` producer threads **per workload class** (all
+/// four of [`WorkloadClass::ALL`] — mixed SP/DP, latency/bulk) submit
+/// `total_ops` ops in variable-sized chunks through the router, idle
+/// phases woven in under `duty`.
+#[derive(Debug, Clone, Copy)]
+pub struct RoutedLoad {
+    /// Total ops across all producers of all classes.
+    pub total_ops: usize,
+    /// Producer threads per workload class (4 classes ⇒ `4 × this`
+    /// threads).
+    pub producers_per_class: usize,
+    /// Mean submission size; actual sizes vary in `[sub_ops/2, 3·sub_ops/2)`.
+    pub sub_ops: usize,
+    /// Target occupancy in `(0, 1]` per class's affinity shard.
+    pub duty: f64,
+    /// Operand/size stream seed.
+    pub seed: u64,
+}
+
+/// Drive a shard fleet through the [`ServeRouter`]: mixed SP/DP
+/// latency/bulk producers submit classified work, the router dispatches
+/// by Table-1 unit affinity (spilling under backlog pressure when the
+/// config allows), and every shard's streaming body-bias controller
+/// re-biases its own unit mid-run. Every producer validates its
+/// returned result lengths; the returned [`FleetReport`] carries the
+/// per-shard serve reports (each holding the single-shard bit-identity
+/// gates), the per-class shard histogram, and the merged fleet
+/// accounting.
+pub fn serve_routed(
+    specs: &[ShardSpec],
+    rcfg: RouterConfig,
+    tier: Fidelity,
+    load: RoutedLoad,
+) -> crate::Result<FleetReport> {
+    anyhow::ensure!(load.producers_per_class >= 1, "need at least one producer per class");
+    anyhow::ensure!(load.sub_ops >= 1, "submissions need at least one op");
+    anyhow::ensure!(
+        load.duty > 0.0 && load.duty <= 1.0,
+        "--duty must be in (0, 1], got {}",
+        load.duty
+    );
+    let router = ServeRouter::start(specs, rcfg)?;
+    let classes = WorkloadClass::ALL;
+    let producers = classes.len() * load.producers_per_class;
+    let produced = std::thread::scope(|s| -> crate::Result<()> {
+        let mut joins = Vec::new();
+        for p in 0..producers {
+            let class = classes[p % classes.len()];
+            let share =
+                load.total_ops / producers + usize::from(p < load.total_ops % producers);
+            let router = &router;
+            joins.push(s.spawn(move || -> crate::Result<()> {
+                drive_producer(
+                    class.precision,
+                    share,
+                    load.sub_ops,
+                    load.duty,
+                    producer_seeds(load.seed, p),
+                    |triples| router.submit(class, tier, triples).map(|(_, t)| t),
+                    |slots| router.submit_idle(class, tier, slots).map(|_| ()),
+                )
+            }));
+        }
+        let mut first_err = None;
+        for j in joins {
+            match j.join().map_err(|_| anyhow::anyhow!("routed serve producer panicked")) {
+                Ok(Ok(())) => {}
+                Ok(Err(e)) | Err(e) => {
+                    first_err.get_or_insert(e);
+                }
+            }
+        }
+        first_err.map_or(Ok(()), Err)
+    });
+    // Finish the fleet even when a producer failed: router.finish()
+    // closes every shard queue and joins its threads — bailing first
+    // would leak all of them. The producer error still wins the report.
+    let finished = router.finish();
+    match produced {
+        Ok(()) => finished,
+        Err(e) => Err(e),
+    }
 }
 
 #[cfg(test)]

@@ -51,7 +51,12 @@
 //!   engine: many producers, coalesced fidelity-tiered batches,
 //!   per-worker work-stealing dispatch, and a live body-bias controller
 //!   fed by a lock-free window ring whose streamed schedule is
-//!   bit-identical to the post-hoc pass), plus the PJRT runtime that
+//!   bit-identical to the post-hoc pass), the **sharded multi-unit
+//!   router** ([`runtime::router`] — one serve shard per unit preset ×
+//!   precision × fidelity tier, classified submissions dispatched by the
+//!   paper's Table 1 unit affinity with load-aware spill, and
+//!   fleet-level accounting that keeps every shard's streamed numbers
+//!   bit-identical to its own post-hoc pass), plus the PJRT runtime that
 //!   loads the AOT-compiled JAX/Pallas HLO artifacts
 //!   (`artifacts/*.hlo.txt`) and executes them from Rust; Python never
 //!   runs on the request path.

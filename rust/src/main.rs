@@ -19,6 +19,10 @@
 //!              [--window 4096] [--duty 1.0] [--sub-ops 8192] [--ring 1024]
 //!              [--workers N] [--json PATH] [--max-p99-ratio X]
 //!              [--min-sustained-ratio R]
+//! fpmax serve --routed [--ops 200000] [--producers 1(per class)]
+//!              [--fidelity ...] [--bb ...] [--window] [--duty] [--sub-ops]
+//!              [--ring] [--workers BUDGET] [--spill-pressure OPS]
+//!              [--json PATH] [--max-p99-ratio X] [--min-sustained-ratio R]
 //! ```
 //!
 //! `verify --fidelity word` runs the batched word-level tier with a
@@ -47,6 +51,16 @@
 //! mismatch, any streamed-vs-post-hoc bias-schedule divergence, a p99
 //! latency above `--max-p99-ratio`×p50, or a sustained throughput below
 //! `--min-sustained-ratio`× the plain windowed-tracked batch baseline.
+//!
+//! `serve --routed` drives the **whole Table-1 fleet** behind the shard
+//! router: one serve shard per fabricated unit, mixed SP/DP
+//! latency/bulk producers submitting classified work, static unit
+//! affinity (latency → CMA, bulk → FMA) with optional load-aware spill
+//! (`--spill-pressure OPS`; off by default). Emits the per-shard +
+//! fleet JSON report and hard-fails on any shard's cross-check or BB
+//! divergence, a fleet p99 above `--max-p99-ratio`×p50, a fleet
+//! sustained throughput below `--min-sustained-ratio`× the best single
+//! shard, or any misrouted submission while spill is off.
 
 use fpmax::arch::fp::Precision;
 use fpmax::arch::generator::{FpuConfig, FpuKind, FpuUnit};
@@ -78,6 +92,25 @@ fn unit_arg(args: &Args) -> fpmax::Result<FpuConfig> {
         "dp_cma" => FpuConfig::dp_cma(),
         other => anyhow::bail!("--unit must be one of sp_fma|sp_cma|dp_fma|dp_cma, got {other}"),
     })
+}
+
+fn fidelity_arg(args: &Args, default: &str) -> fpmax::Result<fpmax::arch::engine::Fidelity> {
+    use fpmax::arch::engine::Fidelity;
+    Ok(match args.get("fidelity").unwrap_or(default) {
+        "gate" => Fidelity::GateLevel,
+        "word" => Fidelity::WordLevel,
+        "word-simd" | "simd" => Fidelity::WordSimd,
+        other => anyhow::bail!("--fidelity must be gate, word or word-simd, got {other}"),
+    })
+}
+
+/// `--bb static|adaptive` → `true` for adaptive (the serve default).
+fn bb_adaptive_arg(args: &Args) -> fpmax::Result<bool> {
+    match args.get("bb").unwrap_or("adaptive") {
+        "adaptive" => Ok(true),
+        "static" => Ok(false),
+        other => anyhow::bail!("--bb must be static or adaptive, got {other}"),
+    }
 }
 
 fn main() -> fpmax::Result<()> {
@@ -179,12 +212,7 @@ fn main() -> fpmax::Result<()> {
             let ops = args.get_parse("ops", 100_000usize)?;
             let seed = args.get_parse("seed", 42u64)?;
             let workers = args.get_parse("workers", num_threads())?;
-            let fidelity = match args.get("fidelity").unwrap_or("gate") {
-                "gate" => fpmax::arch::engine::Fidelity::GateLevel,
-                "word" => fpmax::arch::engine::Fidelity::WordLevel,
-                "word-simd" | "simd" => fpmax::arch::engine::Fidelity::WordSimd,
-                other => anyhow::bail!("--fidelity must be gate, word or word-simd, got {other}"),
-            };
+            let fidelity = fidelity_arg(&args, "gate")?;
             let unit = FpuUnit::generate(&cfg);
             let mut stream = OperandStream::new(cfg.precision, OperandMix::Anything, seed);
             let triples = stream.batch(ops);
@@ -356,24 +384,18 @@ fn selftest(args: &Args) -> fpmax::Result<()> {
 /// cross-checks, a streamed bias schedule bit-identical to the post-hoc
 /// one, bounded tail latency, and a sustained-throughput floor.
 fn serve_cmd(args: &Args) -> fpmax::Result<()> {
-    use fpmax::arch::engine::{BatchExecutor, Fidelity, UnitDatapath};
+    use fpmax::arch::engine::{BatchExecutor, UnitDatapath};
     use fpmax::runtime::serve::{ServeConfig, ServeLoad};
 
+    if args.flag("routed") {
+        return serve_routed_cmd(args);
+    }
     let cfg = unit_arg(args)?;
     let ops = args.get_parse("ops", 1_000_000usize)?;
     let producers = args.get_parse("producers", 4usize)?;
     let workers = args.get_parse("workers", num_threads())?;
-    let fidelity = match args.get("fidelity").unwrap_or("word-simd") {
-        "gate" => Fidelity::GateLevel,
-        "word" => Fidelity::WordLevel,
-        "word-simd" | "simd" => Fidelity::WordSimd,
-        other => anyhow::bail!("--fidelity must be gate, word or word-simd, got {other}"),
-    };
-    let adaptive = match args.get("bb").unwrap_or("adaptive") {
-        "adaptive" => true,
-        "static" => false,
-        other => anyhow::bail!("--bb must be static or adaptive, got {other}"),
-    };
+    let fidelity = fidelity_arg(args, "word-simd")?;
+    let adaptive = bb_adaptive_arg(args)?;
     let window = args.get_parse("window", 4_096usize)?;
     let duty = args.get_parse("duty", 1.0f64)?;
     let sub_ops = args.get_parse("sub-ops", 8_192usize)?;
@@ -504,6 +526,249 @@ fn serve_cmd(args: &Args) -> fpmax::Result<()> {
     anyhow::ensure!(
         ratio >= min_sustained_ratio,
         "serve sustained only {ratio:.2}× the plain windowed batch throughput, below the --min-sustained-ratio {min_sustained_ratio} floor"
+    );
+    Ok(())
+}
+
+/// The `fpmax serve --routed` subcommand: the sharded multi-unit serve
+/// router over the full Table-1 fleet. Four shards — one per fabricated
+/// unit at the chosen fidelity tier, each with its own persistent pool
+/// (sized from one fleet-wide worker budget), window ring, and live BB
+/// controller — take classified submissions from mixed SP/DP
+/// latency/bulk producers, dispatched by static unit affinity with
+/// optional load-aware spill. Gates on measured behavior: clean
+/// cross-checks and streamed-vs-post-hoc BB identity on **every**
+/// shard, zero misrouted submissions while spill is off, bounded fleet
+/// tail latency, and a fleet sustained-throughput floor against the
+/// best single shard.
+fn serve_routed_cmd(args: &Args) -> fpmax::Result<()> {
+    use fpmax::coordinator::RoutedLoad;
+    use fpmax::runtime::router::{RouterConfig, ServeRouter, WorkloadClass};
+
+    let ops = args.get_parse("ops", 200_000usize)?;
+    let producers_per_class = args.get_parse("producers", 1usize)?;
+    let workers_budget = args.get_parse("workers", num_threads())?;
+    let fidelity = fidelity_arg(args, "word-simd")?;
+    let adaptive = bb_adaptive_arg(args)?;
+    let window = args.get_parse("window", 4_096usize)?;
+    let duty = args.get_parse("duty", 1.0f64)?;
+    let sub_ops = args.get_parse("sub-ops", 8_192usize)?;
+    let seed = args.get_parse("seed", 42u64)?;
+    let ring = args.get_parse("ring", 1_024usize)?;
+    let spill = args.get_parse("spill-pressure", usize::MAX)?;
+    let max_p99_ratio = args.get_parse("max-p99-ratio", f64::INFINITY)?;
+    let min_sustained_ratio = args.get_parse("min-sustained-ratio", 0.0f64)?;
+    let json_path = args.get("json").map(|s| s.to_string());
+    anyhow::ensure!(ops >= 1, "--ops must be at least 1");
+    anyhow::ensure!(window >= 1, "--window must be at least 1 op");
+    anyhow::ensure!(duty > 0.0 && duty <= 1.0, "--duty must be in (0, 1], got {duty}");
+    let spill_off = spill == usize::MAX;
+
+    let specs = ServeRouter::fleet_nominal(fidelity, adaptive, workers_budget, window, ring)?;
+    let rcfg = RouterConfig { workers_budget, spill_pressure_ops: spill };
+    let load = RoutedLoad { total_ops: ops, producers_per_class, sub_ops, duty, seed };
+    let report = fpmax::coordinator::serve_routed(&specs, rcfg, fidelity, load)?;
+
+    let best = report.best_shard_ops_per_s();
+    let fleet_ratio = report.fleet_vs_best_shard_ratio();
+    let p99_over_p50 = report.fleet_p99_over_p50();
+    println!(
+        "routed fleet: {} shards, {} ops ({} submissions, {} producers, {} workers budget, {}-level)",
+        report.shards.len(),
+        report.ops,
+        report.submissions,
+        4 * producers_per_class,
+        workers_budget,
+        fidelity.name()
+    );
+    for s in &report.shards {
+        println!(
+            "  {:<7} [{}] workers {}  ops {:>9}  sustained {:>8.2} Mops/s  p50 {:>7.1} µs  p99 {:>7.1} µs  occ {:.2}  bb {}  ring-coalesced {}  spilled-in {}",
+            s.unit,
+            s.config.kind.name(),
+            s.workers,
+            s.report.ops,
+            s.report.sustained_ops_per_s / 1e6,
+            s.report.p50_latency_s * 1e6,
+            s.report.p99_latency_s * 1e6,
+            s.report.occupancy,
+            if s.report.bb_gate_ok() { "ok" } else { "DIVERGED" },
+            s.report.ring_coalesced,
+            s.spilled_in,
+        );
+    }
+    let hist = report.class_histogram();
+    for class in WorkloadClass::ALL {
+        let row: Vec<String> = report
+            .shards
+            .iter()
+            .zip(&hist[class.index()])
+            .map(|(s, &n)| format!("{}:{n}", s.unit))
+            .collect();
+        println!("  class {:<10} → {}", class.name(), row.join("  "));
+    }
+    println!(
+        "fleet: sustained {:.2} Mops/s ({fleet_ratio:.2}× best shard {:.2}), p50 {:.1} µs, p99 {:.1} µs ({p99_over_p50:.1}×), {:.3} pJ/op merged, misrouted {}/{} ({}), spilled {}",
+        report.fleet_sustained_ops_per_s / 1e6,
+        best / 1e6,
+        report.fleet_p50_latency_s * 1e6,
+        report.fleet_p99_latency_s * 1e6,
+        report.fleet_energy.pj_per_op,
+        report.misrouted,
+        report.submissions,
+        if spill_off { "spill off" } else { "spill on" },
+        report.spilled,
+    );
+    println!(
+        "gate cross-check: {} sampled, {} mismatches across the fleet",
+        report.crosscheck_sampled(),
+        report.crosscheck_mismatches()
+    );
+
+    if let Some(path) = json_path {
+        let mut s = String::new();
+        s.push_str("{\n");
+        s.push_str("  \"routed\": true,\n");
+        s.push_str(&format!("  \"fidelity\": \"{}\",\n", fidelity.name()));
+        s.push_str(&format!("  \"ops\": {},\n", report.ops));
+        s.push_str(&format!("  \"producers_per_class\": {producers_per_class},\n"));
+        s.push_str(&format!("  \"workers_budget\": {workers_budget},\n"));
+        s.push_str(&format!("  \"window_ops\": {window},\n"));
+        s.push_str(&format!("  \"sub_ops_mean\": {sub_ops},\n"));
+        s.push_str(&format!("  \"duty\": {duty},\n"));
+        s.push_str(&format!(
+            "  \"bb_policy\": \"{}\",\n",
+            if adaptive { "adaptive" } else { "static" }
+        ));
+        s.push_str(&format!(
+            "  \"spill_pressure_ops\": {},\n",
+            if spill_off { "null".to_string() } else { spill.to_string() }
+        ));
+        s.push_str(&format!("  \"submissions\": {},\n", report.submissions));
+        s.push_str(&format!("  \"misrouted\": {},\n", report.misrouted));
+        s.push_str(&format!("  \"spilled\": {},\n", report.spilled));
+        s.push_str(&format!(
+            "  \"misrouted_fraction\": {:.6},\n",
+            report.misrouted_fraction()
+        ));
+        s.push_str(&format!(
+            "  \"fleet_sustained_ops_per_s\": {:.0},\n",
+            report.fleet_sustained_ops_per_s
+        ));
+        s.push_str(&format!("  \"best_shard_ops_per_s\": {best:.0},\n"));
+        s.push_str(&format!("  \"fleet_vs_best_shard_ratio\": {fleet_ratio:.4},\n"));
+        s.push_str(&format!(
+            "  \"fleet_p50_us\": {:.3},\n",
+            report.fleet_p50_latency_s * 1e6
+        ));
+        s.push_str(&format!(
+            "  \"fleet_p99_us\": {:.3},\n",
+            report.fleet_p99_latency_s * 1e6
+        ));
+        s.push_str(&format!("  \"fleet_p99_over_p50\": {p99_over_p50:.3},\n"));
+        s.push_str(&format!(
+            "  \"fleet_pj_per_op\": {:.6},\n",
+            report.fleet_energy.pj_per_op
+        ));
+        s.push_str(&format!(
+            "  \"all_shards_bb_identity\": {},\n",
+            report.bb_gate_ok()
+        ));
+        s.push_str(&format!(
+            "  \"crosscheck_sampled\": {},\n",
+            report.crosscheck_sampled()
+        ));
+        s.push_str(&format!(
+            "  \"crosscheck_mismatches\": {},\n",
+            report.crosscheck_mismatches()
+        ));
+        s.push_str("  \"class_histogram\": {\n");
+        for (ci, class) in WorkloadClass::ALL.into_iter().enumerate() {
+            let row: Vec<String> =
+                hist[class.index()].iter().map(|n| n.to_string()).collect();
+            s.push_str(&format!(
+                "    \"{}\": [{}]{}\n",
+                class.name(),
+                row.join(", "),
+                if ci + 1 == WorkloadClass::ALL.len() { "" } else { "," }
+            ));
+        }
+        s.push_str("  },\n");
+        s.push_str("  \"shards\": [\n");
+        for (si, sh) in report.shards.iter().enumerate() {
+            s.push_str("    {\n");
+            s.push_str(&format!("      \"unit\": \"{}\",\n", sh.unit));
+            s.push_str(&format!("      \"kind\": \"{}\",\n", sh.config.kind.name()));
+            s.push_str(&format!("      \"tier\": \"{}\",\n", sh.tier.name()));
+            s.push_str(&format!("      \"workers\": {},\n", sh.workers));
+            s.push_str(&format!("      \"ops\": {},\n", sh.report.ops));
+            s.push_str(&format!(
+                "      \"sustained_ops_per_s\": {:.0},\n",
+                sh.report.sustained_ops_per_s
+            ));
+            s.push_str(&format!(
+                "      \"p50_submit_us\": {:.3},\n",
+                sh.report.p50_latency_s * 1e6
+            ));
+            s.push_str(&format!(
+                "      \"p99_submit_us\": {:.3},\n",
+                sh.report.p99_latency_s * 1e6
+            ));
+            s.push_str(&format!("      \"occupancy\": {:.4},\n", sh.report.occupancy));
+            s.push_str(&format!(
+                "      \"streamed_pj_per_op\": {:.6},\n",
+                sh.report.streamed.energy.pj_per_op
+            ));
+            s.push_str(&format!("      \"bb_gate_ok\": {},\n", sh.report.bb_gate_ok()));
+            s.push_str(&format!(
+                "      \"ring_coalesced\": {},\n",
+                sh.report.ring_coalesced
+            ));
+            s.push_str(&format!(
+                "      \"crosscheck_mismatches\": {},\n",
+                sh.report.crosscheck_mismatches
+            ));
+            s.push_str(&format!("      \"spilled_in\": {}\n", sh.spilled_in));
+            s.push_str(if si + 1 == report.shards.len() { "    }\n" } else { "    },\n" });
+        }
+        s.push_str("  ]\n}\n");
+        std::fs::write(&path, s)?;
+        println!("wrote {path}");
+    }
+
+    // Hard gates (the routed-serve CI smoke step relies on these exit
+    // codes).
+    anyhow::ensure!(
+        report.crosscheck_mismatches() == 0,
+        "sampled gate cross-check found {} mismatches across the fleet",
+        report.crosscheck_mismatches()
+    );
+    for s in &report.shards {
+        anyhow::ensure!(
+            s.report.bb_gate_ok(),
+            "{}: streamed BB diverged from post-hoc (schedule match {}, energy match {}, received-stream match {}, activity preserved {}, ring coalesced {})",
+            s.unit,
+            s.report.schedule_matches,
+            s.report.energy_matches,
+            s.report.received_schedule_matches,
+            s.report.activity_preserved,
+            s.report.ring_coalesced
+        );
+    }
+    if spill_off {
+        anyhow::ensure!(
+            report.misrouted == 0,
+            "{} submissions misrouted under the static policy with spill off",
+            report.misrouted
+        );
+    }
+    anyhow::ensure!(
+        p99_over_p50 <= max_p99_ratio,
+        "fleet p99 latency is {p99_over_p50:.1}× p50, above the --max-p99-ratio {max_p99_ratio}× budget"
+    );
+    anyhow::ensure!(
+        fleet_ratio >= min_sustained_ratio,
+        "fleet sustained only {fleet_ratio:.2}× the best single shard, below the --min-sustained-ratio {min_sustained_ratio} floor"
     );
     Ok(())
 }

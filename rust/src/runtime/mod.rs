@@ -1,7 +1,9 @@
 //! Run-time services: the streaming [`serve`] layer (an async
 //! submission queue over the persistent batch engine with mid-run
-//! body-bias re-biasing — see [`serve::ServeQueue`]) and the PJRT
-//! artifact runtime.
+//! body-bias re-biasing — see [`serve::ServeQueue`]), the sharded
+//! multi-unit [`router`] (one serve shard per unit preset × precision ×
+//! fidelity tier behind workload-aware dispatch — see
+//! [`router::ServeRouter`]), and the PJRT artifact runtime.
 //!
 //! PJRT side: loads the AOT-compiled JAX/Pallas artifacts
 //! (`artifacts/*.hlo.txt`) and executes them from Rust.
@@ -20,8 +22,12 @@
 //! `make artifacts`, and the resulting executables are pure XLA:CPU
 //! programs fed with raw bit patterns.
 
+pub mod router;
 pub mod serve;
 
+pub use router::{
+    FleetReport, RouterConfig, ServeRouter, ServiceClass, ShardReport, ShardSpec, WorkloadClass,
+};
 pub use serve::{ServeConfig, ServeLoad, ServeQueue, ServeReport, SubmitHandle, Ticket};
 
 #[cfg(feature = "pjrt")]

@@ -1,0 +1,563 @@
+//! The sharded multi-unit serve router.
+//!
+//! FPMax's whole point is that there is no single best FPU: the chip
+//! fabricates **four** units — latency-optimized CMA and
+//! throughput-optimized FMA pipelines, in both SP and DP — and the right
+//! one depends on the workload. One [`ServeQueue`] drives exactly one
+//! unit; this module is the serving surface that drives the fleet:
+//!
+//! ```text
+//!  producers                router                    shards
+//!  ────────────┐   ┌─────────────────────┐   ┌──────────────────────┐
+//!  submit(     │   │ WorkloadClass ──────┼──▶│ SP CMA  (latency)    │
+//!    class,   ─┼──▶│   Table-1 affinity  │   │ SP FMA  (bulk)       │
+//!    tier,     │   │ + load-aware spill  │   │ DP CMA  (latency)    │
+//!    ops)      │   │   (pressure probe)  │   │ DP FMA  (bulk)       │
+//!  ────────────┘   └─────────────────────┘   └──────────────────────┘
+//!                                               each: own ServeQueue,
+//!                                               own BatchExecutor pool,
+//!                                               own window ring + live
+//!                                               bb::StreamingController
+//! ```
+//!
+//! * A **shard** is one (unit preset × precision × fidelity tier)
+//!   [`ServeQueue`]: its own persistent executor pool (sized from one
+//!   fleet-wide [`ExecutorRegistry`] budget, so co-resident shards never
+//!   oversubscribe the host), its own window ring, its own streaming
+//!   body-bias controller, its own chunk-size calibration.
+//! * Submissions carry a [`WorkloadClass`] — latency-sensitive vs
+//!   bulk-throughput, SP vs DP — and the **static affinity policy** maps
+//!   it per the paper's Table 1: latency classes to the CMA (cascade)
+//!   pipelines, bulk classes to the FMA (fused) pipelines of the same
+//!   precision.
+//! * **Load-aware spill**: when the affinity shard's in-flight pressure
+//!   crosses the configured threshold and a compatible sibling (same
+//!   precision, same tier) is strictly less loaded, the submission
+//!   spills there. A spilled submission is computed in the *receiving*
+//!   unit's own Table-I semantics — fused and cascade round differently,
+//!   exactly as on the real heterogeneous chip — so callers that need
+//!   one fixed rounding semantics run with spill disabled. Either way
+//!   the result is bit-exact for the unit that executed it, and the
+//!   sampled gate cross-check rides along per shard.
+//! * [`ServeRouter::finish`] lifts the per-shard accounting into a
+//!   [`FleetReport`]: each shard's streamed schedule + energies stay
+//!   **bit-identical** to the post-hoc single-shard path on that shard's
+//!   own window stream (the PR 4 `EnergyIntegrator` identity gates,
+//!   unchanged), and the fleet totals are exact sums on top
+//!   ([`crate::bb::merge_run_energies`]).
+//!
+//! The per-class shard histogram is recorded per dispatch, so a report
+//! can show that latency-class traffic measurably landed on
+//! latency-optimized shards (`misrouted == 0` under the static policy
+//! with no spill pressure).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::arch::engine::{ExecutorRegistry, Fidelity};
+use crate::arch::fp::Precision;
+use crate::arch::generator::{FpuConfig, FpuKind, FpuUnit};
+use crate::bb::{merge_run_energies, BbRunEnergy};
+use crate::runtime::serve::{ServeConfig, ServeQueue, ServeReport, SubmitHandle, Ticket};
+use crate::util::stats::percentile;
+use crate::workloads::throughput::OperandTriple;
+
+/// What a submission is optimized for — the paper's workload axis.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ServiceClass {
+    /// Latency-sensitive: dependent chains, short deadlines.
+    Latency,
+    /// Bulk throughput: abundant independent parallelism.
+    Bulk,
+}
+
+impl ServiceClass {
+    /// The Table 1 unit-affinity mapping: latency-sensitive work to the
+    /// latency-optimized cascade (CMA) pipelines, bulk work to the
+    /// throughput-optimized fused (FMA) pipelines.
+    pub fn affinity_kind(self) -> FpuKind {
+        match self {
+            ServiceClass::Latency => FpuKind::Cma,
+            ServiceClass::Bulk => FpuKind::Fma,
+        }
+    }
+}
+
+/// The workload taxonomy a submission declares: precision × service
+/// class. Four classes cover the paper's four fabricated units.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct WorkloadClass {
+    pub precision: Precision,
+    pub service: ServiceClass,
+}
+
+impl WorkloadClass {
+    /// All four classes, in [`WorkloadClass::index`] order.
+    pub const ALL: [WorkloadClass; 4] = [
+        WorkloadClass { precision: Precision::Single, service: ServiceClass::Latency },
+        WorkloadClass { precision: Precision::Single, service: ServiceClass::Bulk },
+        WorkloadClass { precision: Precision::Double, service: ServiceClass::Latency },
+        WorkloadClass { precision: Precision::Double, service: ServiceClass::Bulk },
+    ];
+
+    /// Dense index in `0..4` (histogram axis).
+    pub fn index(self) -> usize {
+        let p = match self.precision {
+            Precision::Single => 0,
+            Precision::Double => 1,
+        };
+        let s = match self.service {
+            ServiceClass::Latency => 0,
+            ServiceClass::Bulk => 1,
+        };
+        p * 2 + s
+    }
+
+    pub fn name(self) -> &'static str {
+        match (self.precision, self.service) {
+            (Precision::Single, ServiceClass::Latency) => "sp-latency",
+            (Precision::Single, ServiceClass::Bulk) => "sp-bulk",
+            (Precision::Double, ServiceClass::Latency) => "dp-latency",
+            (Precision::Double, ServiceClass::Bulk) => "dp-bulk",
+        }
+    }
+}
+
+/// One shard of the fleet: a unit preset served at one fidelity tier
+/// under one [`ServeConfig`].
+#[derive(Debug, Clone, Copy)]
+pub struct ShardSpec {
+    pub config: FpuConfig,
+    pub tier: Fidelity,
+    pub serve: ServeConfig,
+}
+
+/// Router-level policy knobs.
+#[derive(Debug, Clone, Copy)]
+pub struct RouterConfig {
+    /// Fleet-wide worker budget, portioned across the shard executors by
+    /// an [`ExecutorRegistry`] (each shard's `serve.workers` request is
+    /// clamped to what remains).
+    pub workers_budget: usize,
+    /// In-flight ops on the affinity shard above which a submission may
+    /// spill to a strictly-less-loaded compatible sibling.
+    /// `usize::MAX` disables spill — the pure static policy.
+    pub spill_pressure_ops: usize,
+}
+
+impl RouterConfig {
+    /// Static affinity only, no spill.
+    pub fn no_spill(workers_budget: usize) -> RouterConfig {
+        RouterConfig { workers_budget, spill_pressure_ops: usize::MAX }
+    }
+
+    /// Affinity with load-aware spill above `pressure_ops` in-flight ops.
+    pub fn with_spill(workers_budget: usize, pressure_ops: usize) -> RouterConfig {
+        RouterConfig { workers_budget, spill_pressure_ops: pressure_ops }
+    }
+}
+
+/// Where a dispatch decision landed.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Placement {
+    /// The class's affinity shard.
+    Affinity,
+    /// Diverted off-affinity by backlog pressure.
+    Spill,
+    /// No affinity shard exists for the class at this tier; any
+    /// compatible shard took it.
+    Fallback,
+}
+
+struct Shard {
+    config: FpuConfig,
+    tier: Fidelity,
+    workers: usize,
+    max_queue_ops: usize,
+    handle: SubmitHandle,
+    queue: ServeQueue,
+    /// Submissions landed here, by [`WorkloadClass::index`].
+    class_counts: [AtomicU64; 4],
+    /// Submissions that arrived here via spill.
+    spilled_in: AtomicU64,
+}
+
+/// The fleet dispatcher (see the module docs). Construct with
+/// [`ServeRouter::start`], submit classified work from any number of
+/// producer threads, then [`ServeRouter::finish`] to drain every shard
+/// and assemble the [`FleetReport`].
+pub struct ServeRouter {
+    shards: Vec<Shard>,
+    spill_pressure_ops: usize,
+    submissions: AtomicU64,
+    spilled: AtomicU64,
+    misrouted: AtomicU64,
+}
+
+impl ServeRouter {
+    /// The paper's Table 1 fleet at one fidelity tier: all four
+    /// fabricated units, each at its own nominal operating point, the
+    /// worker budget split fairly four ways. Tweak the returned specs
+    /// (window, ring, per-shard workers) before [`ServeRouter::start`]
+    /// if the defaults don't fit.
+    pub fn fleet_nominal(
+        tier: Fidelity,
+        adaptive: bool,
+        workers_budget: usize,
+        window_ops: usize,
+        ring_windows: usize,
+    ) -> crate::Result<Vec<ShardSpec>> {
+        // Split the budget without discarding the remainder: the first
+        // `budget % 4` shards get one extra worker, so the whole budget
+        // the registry portions is actually requested.
+        let base = workers_budget / 4;
+        let rem = workers_budget % 4;
+        FpuConfig::fpmax_units()
+            .into_iter()
+            .enumerate()
+            .map(|(i, config)| {
+                let mut serve = ServeConfig::nominal(&config, adaptive)?;
+                serve.workers = (base + usize::from(i < rem)).max(1);
+                serve.window_ops = window_ops;
+                serve.ring_windows = ring_windows;
+                Ok(ShardSpec { config, tier, serve })
+            })
+            .collect()
+    }
+
+    /// Spin up one [`ServeQueue`] per spec, pools sized through a shared
+    /// [`ExecutorRegistry`] over `cfg.workers_budget`.
+    pub fn start(specs: &[ShardSpec], cfg: RouterConfig) -> crate::Result<ServeRouter> {
+        anyhow::ensure!(!specs.is_empty(), "a router needs at least one shard");
+        let registry = ExecutorRegistry::new(cfg.workers_budget);
+        let mut shards: Vec<Shard> = Vec::with_capacity(specs.len());
+        for spec in specs {
+            let exec = registry.shard(spec.serve.workers);
+            let workers = exec.workers();
+            let unit = FpuUnit::generate(&spec.config);
+            let queue = match ServeQueue::start_with_executor(&unit, spec.serve, exec) {
+                Ok(q) => q,
+                Err(e) => {
+                    // Close the shards already started before bailing —
+                    // a dropped ServeQueue is never shut down, so
+                    // propagating here directly would strand their
+                    // dispatcher/controller/pool threads forever.
+                    for s in shards {
+                        let _ = s.queue.finish();
+                    }
+                    return Err(e.context(format!(
+                        "starting shard {} at the {} tier",
+                        spec.config.name(),
+                        spec.tier.name()
+                    )));
+                }
+            };
+            shards.push(Shard {
+                config: spec.config,
+                tier: spec.tier,
+                workers,
+                max_queue_ops: spec.serve.max_queue_ops,
+                handle: queue.handle(),
+                queue,
+                class_counts: Default::default(),
+                spilled_in: AtomicU64::new(0),
+            });
+        }
+        Ok(ServeRouter {
+            shards,
+            spill_pressure_ops: cfg.spill_pressure_ops,
+            submissions: AtomicU64::new(0),
+            spilled: AtomicU64::new(0),
+            misrouted: AtomicU64::new(0),
+        })
+    }
+
+    /// Shard count.
+    pub fn shard_count(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// In-flight pressure of shard `idx` (ops submitted, not yet
+    /// resolved).
+    pub fn shard_pressure(&self, idx: usize) -> usize {
+        self.shards[idx].handle.pressure_ops()
+    }
+
+    /// The dispatch decision, read-only: candidates are shards matching
+    /// the class precision and the requested tier; the affinity shard
+    /// (least-loaded, if several) wins unless spill pressure diverts to
+    /// a strictly-less-loaded compatible sibling.
+    fn route(&self, class: WorkloadClass, tier: Fidelity) -> crate::Result<(usize, Placement)> {
+        let mut preferred: Option<(usize, usize)> = None;
+        let mut alt: Option<(usize, usize)> = None;
+        for (i, s) in self.shards.iter().enumerate() {
+            if s.config.precision != class.precision || s.tier != tier {
+                continue;
+            }
+            let pressure = s.handle.pressure_ops();
+            let slot = if s.config.kind == class.service.affinity_kind() {
+                &mut preferred
+            } else {
+                &mut alt
+            };
+            let better = match *slot {
+                None => true,
+                Some((_, best)) => pressure < best,
+            };
+            if better {
+                *slot = Some((i, pressure));
+            }
+        }
+        match (preferred, alt) {
+            (Some((_, pp)), Some((a, ap)))
+                if pp > self.spill_pressure_ops && ap < pp =>
+            {
+                Ok((a, Placement::Spill))
+            }
+            (Some((p, _)), _) => Ok((p, Placement::Affinity)),
+            (None, Some((a, _))) => Ok((a, Placement::Fallback)),
+            (None, None) => anyhow::bail!(
+                "no shard serves {} at the {} tier",
+                class.name(),
+                tier.name()
+            ),
+        }
+    }
+
+    /// Dispatch one classified submission; returns the shard index it
+    /// landed on and the completion ticket. The operands must be in the
+    /// class's precision (each shard computes its own unit's Table-I
+    /// semantics on them, bit-exactly, wherever the submission lands).
+    pub fn submit(
+        &self,
+        class: WorkloadClass,
+        tier: Fidelity,
+        triples: Vec<OperandTriple>,
+    ) -> crate::Result<(usize, Ticket)> {
+        let (idx, placement) = self.route(class, tier)?;
+        let shard = &self.shards[idx];
+        // Dispatch first, count after: a submission the shard rejected
+        // (closed queue, dead dispatcher) must not skew the histogram or
+        // the misrouted/spilled counters the acceptance gates read —
+        // and a retry must not double-count.
+        let ticket = shard.handle.submit(tier, triples, shard.max_queue_ops)?;
+        self.submissions.fetch_add(1, Ordering::Relaxed);
+        shard.class_counts[class.index()].fetch_add(1, Ordering::Relaxed);
+        match placement {
+            Placement::Affinity => {}
+            Placement::Spill => {
+                self.spilled.fetch_add(1, Ordering::Relaxed);
+                self.misrouted.fetch_add(1, Ordering::Relaxed);
+                shard.spilled_in.fetch_add(1, Ordering::Relaxed);
+            }
+            Placement::Fallback => {
+                self.misrouted.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+        Ok((idx, ticket))
+    }
+
+    /// Dispatch an idle phase (accounting-only issue slots) to the
+    /// class's affinity shard — idle never spills; it is the shard's own
+    /// low-utilization gap, the thing its adaptive controller re-biases
+    /// through. Returns the shard index.
+    pub fn submit_idle(
+        &self,
+        class: WorkloadClass,
+        tier: Fidelity,
+        slots: u64,
+    ) -> crate::Result<usize> {
+        // Pure affinity: ignore pressure entirely.
+        let mut pick = None;
+        for (i, s) in self.shards.iter().enumerate() {
+            if s.config.precision != class.precision || s.tier != tier {
+                continue;
+            }
+            if s.config.kind == class.service.affinity_kind() {
+                pick = Some(i);
+                break;
+            }
+            pick.get_or_insert(i);
+        }
+        let idx = pick.ok_or_else(|| {
+            anyhow::anyhow!("no shard serves {} at the {} tier", class.name(), tier.name())
+        })?;
+        self.shards[idx].handle.submit_idle(slots)?;
+        Ok(idx)
+    }
+
+    /// Close every shard, drain, join, and assemble the fleet report.
+    /// Shard order in the report matches the spec order given to
+    /// [`ServeRouter::start`].
+    pub fn finish(self) -> crate::Result<FleetReport> {
+        let spilled = self.spilled.load(Ordering::Relaxed);
+        let misrouted = self.misrouted.load(Ordering::Relaxed);
+        let submissions = self.submissions.load(Ordering::Relaxed);
+        // Finish EVERY shard before propagating any error: each finish()
+        // closes that shard's queue and joins its dispatcher/controller
+        // threads, so bailing on the first failure would leak the
+        // siblings' threads for the life of the process.
+        let mut first_err: Option<anyhow::Error> = None;
+        let mut shards = Vec::with_capacity(self.shards.len());
+        for s in self.shards {
+            match s.queue.finish() {
+                Ok(report) => shards.push(ShardReport {
+                    unit: s.config.name(),
+                    config: s.config,
+                    tier: s.tier,
+                    workers: s.workers,
+                    class_counts: s.class_counts.map(|c| c.into_inner()),
+                    spilled_in: s.spilled_in.into_inner(),
+                    report,
+                }),
+                Err(e) => {
+                    let e = e.context(format!("shard {} failed to finish", s.config.name()));
+                    first_err.get_or_insert(e);
+                }
+            }
+        }
+        if let Some(e) = first_err {
+            return Err(e);
+        }
+        let ops = shards.iter().map(|s| s.report.ops).sum();
+        // Fleet latency distribution: every shard's (sorted) latencies
+        // merged, then re-sorted once.
+        let mut latencies: Vec<f64> =
+            shards.iter().flat_map(|s| s.report.latencies_s.iter().copied()).collect();
+        latencies.sort_by(|a, b| a.partial_cmp(b).expect("NaN latency"));
+        let (p50, p99) = if latencies.is_empty() {
+            (0.0, 0.0)
+        } else {
+            (percentile(&latencies, 0.50), percentile(&latencies, 0.99))
+        };
+        // Union busy span on the shared monotonic clock.
+        let first = shards.iter().filter_map(|s| s.report.first_batch).min();
+        let last = shards.iter().filter_map(|s| s.report.busy_until).max();
+        let busy_secs = match (first, last) {
+            (Some(t0), Some(t1)) => t1.duration_since(t0).as_secs_f64(),
+            _ => 0.0,
+        };
+        let energy = merge_run_energies(shards.iter().map(|s| &s.report.streamed.energy));
+        Ok(FleetReport {
+            spilled,
+            misrouted,
+            submissions,
+            ops,
+            fleet_energy: energy,
+            fleet_p50_latency_s: p50,
+            fleet_p99_latency_s: p99,
+            fleet_busy_secs: busy_secs,
+            fleet_sustained_ops_per_s: if busy_secs > 0.0 { ops as f64 / busy_secs } else { 0.0 },
+            shards,
+        })
+    }
+}
+
+/// One shard's slice of a [`FleetReport`].
+#[derive(Debug, Clone)]
+pub struct ShardReport {
+    /// Table-I unit name ("SP FMA", …).
+    pub unit: String,
+    pub config: FpuConfig,
+    pub tier: Fidelity,
+    /// Workers granted by the fleet registry (≤ the spec's request).
+    pub workers: usize,
+    /// Submissions landed here, by [`WorkloadClass::index`].
+    pub class_counts: [u64; 4],
+    /// How many of those arrived via spill.
+    pub spilled_in: u64,
+    /// The shard's own [`ServeReport`] — streamed-vs-post-hoc BB
+    /// identity, cross-check, latency percentiles, master trace — exactly
+    /// as a single-unit serve run would have produced on this shard's
+    /// stream.
+    pub report: ServeReport,
+}
+
+/// Outcome of one routed serve run ([`ServeRouter::finish`]).
+#[derive(Debug, Clone)]
+pub struct FleetReport {
+    /// Per-shard reports, in spec order.
+    pub shards: Vec<ShardReport>,
+    /// Dispatches diverted off-affinity by backlog pressure.
+    pub spilled: u64,
+    /// Dispatches that landed on an off-affinity shard for any reason
+    /// (spill or missing-affinity fallback). Zero under the static
+    /// policy with no spill pressure.
+    pub misrouted: u64,
+    /// Total op submissions dispatched.
+    pub submissions: u64,
+    /// Total ops executed across the fleet.
+    pub ops: u64,
+    /// Exact sum of the shards' streamed energy accounting
+    /// ([`crate::bb::merge_run_energies`]); each shard's own numbers
+    /// remain bit-identical to its post-hoc single-shard path.
+    pub fleet_energy: BbRunEnergy,
+    /// Cross-shard submission-latency percentiles (merged distribution).
+    pub fleet_p50_latency_s: f64,
+    pub fleet_p99_latency_s: f64,
+    /// Union busy span: earliest shard first-batch → latest shard
+    /// last-batch.
+    pub fleet_busy_secs: f64,
+    /// Total ops over the union busy span.
+    pub fleet_sustained_ops_per_s: f64,
+}
+
+impl FleetReport {
+    /// The fleet-level hard gate: every shard passes its own
+    /// overflow-aware streamed-vs-post-hoc BB identity gate.
+    pub fn bb_gate_ok(&self) -> bool {
+        self.shards.iter().all(|s| s.report.bb_gate_ok())
+    }
+
+    /// Sampled gate cross-check totals across the fleet.
+    pub fn crosscheck_sampled(&self) -> u64 {
+        self.shards.iter().map(|s| s.report.crosscheck_sampled).sum()
+    }
+
+    pub fn crosscheck_mismatches(&self) -> u64 {
+        self.shards.iter().map(|s| s.report.crosscheck_mismatches).sum()
+    }
+
+    /// Fraction of dispatches that landed off-affinity (0.0 when nothing
+    /// was dispatched).
+    pub fn misrouted_fraction(&self) -> f64 {
+        if self.submissions == 0 {
+            0.0
+        } else {
+            self.misrouted as f64 / self.submissions as f64
+        }
+    }
+
+    /// The best single shard's sustained throughput — the baseline the
+    /// routed-sustained CI gate compares against.
+    pub fn best_shard_ops_per_s(&self) -> f64 {
+        self.shards.iter().map(|s| s.report.sustained_ops_per_s).fold(0.0, f64::max)
+    }
+
+    /// Fleet sustained over the best single shard — the quantity the
+    /// `min-sustained-ratio` gate and the bench threshold compare. One
+    /// definition here so the CLI gate and the CI artifact can never
+    /// diverge.
+    pub fn fleet_vs_best_shard_ratio(&self) -> f64 {
+        self.fleet_sustained_ops_per_s / self.best_shard_ops_per_s().max(1e-12)
+    }
+
+    /// Fleet p99 over p50 on the merged latency distribution (1.0 when
+    /// nothing ran — a degenerate run trivially meets any tail budget).
+    pub fn fleet_p99_over_p50(&self) -> f64 {
+        if self.fleet_p50_latency_s > 0.0 {
+            self.fleet_p99_latency_s / self.fleet_p50_latency_s
+        } else {
+            1.0
+        }
+    }
+
+    /// `hist[class][shard]` — the per-class shard histogram the
+    /// acceptance gate inspects.
+    pub fn class_histogram(&self) -> [Vec<u64>; 4] {
+        let mut hist: [Vec<u64>; 4] = Default::default();
+        for (c, row) in hist.iter_mut().enumerate() {
+            *row = self.shards.iter().map(|s| s.class_counts[c]).collect();
+        }
+        hist
+    }
+}

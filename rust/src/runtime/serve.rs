@@ -28,12 +28,22 @@
 //!   whenever the ring never overflowed;
 //! * ring overflow degrades gracefully: windows coalesce (losing
 //!   granularity, keeping every slot and toggle count), so the
-//!   controller's energy accounting never drops an op.
+//!   controller's energy accounting never drops an op;
+//! * every ticket resolves: a dispatcher that dies mid-run errors all
+//!   outstanding submissions (queued and mid-batch) instead of hanging
+//!   their producers.
+//!
+//! One `ServeQueue` serves one unit. The multi-unit serving surface —
+//! one shard per (unit preset × precision × fidelity tier) behind a
+//! workload-aware dispatch policy — is [`crate::runtime::router`],
+//! which composes queues started through
+//! [`ServeQueue::start_with_executor`] so the fleet shares one worker
+//! budget.
 
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use crate::arch::engine::{
     chunk_from_per_op, window_ring, ActivityAccumulator, ActivityTrace, ActivityWindow,
@@ -136,23 +146,90 @@ struct Completion {
 #[derive(Default)]
 struct CompletionState {
     bits: Option<Vec<u64>>,
+    /// Set instead of `bits` when the dispatcher dropped the submission
+    /// (it died mid-run, or the queue was torn down under it).
+    err: Option<&'static str>,
     done: bool,
 }
 
+impl CompletionState {
+    fn take(&mut self) -> crate::Result<Vec<u64>> {
+        match self.err {
+            Some(e) => Err(anyhow::anyhow!("{e}")),
+            // The dispatcher always sets `bits` on completion (empty
+            // submissions complete with an empty vec), so a done ticket
+            // with no bits means an earlier wait already consumed them —
+            // distinct from a legitimate empty result.
+            None => self
+                .bits
+                .take()
+                .ok_or_else(|| anyhow::anyhow!("serve result already taken by an earlier wait")),
+        }
+    }
+}
+
 /// Handle to one in-flight submission.
+///
+/// Every ticket resolves: the dispatcher completes it with the result
+/// bits, or — if the dispatcher dies mid-run — the teardown path
+/// completes it with an error. A producer blocked in [`Ticket::wait`]
+/// therefore never hangs on a dead serve loop; bounded-patience callers
+/// can use [`Ticket::wait_timeout`] / [`Ticket::try_wait`] instead.
 pub struct Ticket {
     done: Arc<Completion>,
 }
 
 impl Ticket {
     /// Block until the submission's batch has executed; returns the
-    /// result bits, one per submitted triple, in submission order.
-    pub fn wait(self) -> Vec<u64> {
+    /// result bits, one per submitted triple, in submission order, or an
+    /// error if the dispatcher dropped the submission.
+    pub fn wait(self) -> crate::Result<Vec<u64>> {
         let mut st = self.done.state.lock().expect("serve completion poisoned");
         while !st.done {
             st = self.done.cv.wait(st).expect("serve completion poisoned");
         }
-        st.bits.take().unwrap_or_default()
+        st.take()
+    }
+
+    /// Like [`Ticket::wait`], but gives up after `timeout`: `Ok(None)`
+    /// means the submission is still in flight (the ticket stays valid —
+    /// wait again or keep polling), `Ok(Some(bits))` is completion, and
+    /// `Err` means the dispatcher dropped the submission — or an earlier
+    /// wait on this ticket already took the bits (the result is handed
+    /// out exactly once).
+    pub fn wait_timeout(&self, timeout: Duration) -> crate::Result<Option<Vec<u64>>> {
+        // A timeout too large to represent as a deadline (Duration::MAX
+        // as a wait-forever sentinel) degrades to an untimed wait
+        // instead of panicking on Instant overflow.
+        let deadline = Instant::now().checked_add(timeout);
+        let mut st = self.done.state.lock().expect("serve completion poisoned");
+        while !st.done {
+            match deadline {
+                None => st = self.done.cv.wait(st).expect("serve completion poisoned"),
+                Some(d) => {
+                    let now = Instant::now();
+                    if now >= d {
+                        return Ok(None);
+                    }
+                    let (g, _timed_out) = self
+                        .done
+                        .cv
+                        .wait_timeout(st, d - now)
+                        .expect("serve completion poisoned");
+                    st = g;
+                }
+            }
+        }
+        st.take().map(Some)
+    }
+
+    /// Non-blocking poll: `Ok(None)` while the submission is in flight.
+    pub fn try_wait(&self) -> crate::Result<Option<Vec<u64>>> {
+        let mut st = self.done.state.lock().expect("serve completion poisoned");
+        if !st.done {
+            return Ok(None);
+        }
+        st.take().map(Some)
     }
 }
 
@@ -163,7 +240,13 @@ enum Work {
     /// idle windows so the streaming controller can re-bias through the
     /// gap, exactly like the post-hoc Fig. 4 weaves.
     Idle { slots: u64 },
+    /// Fault injection ([`SubmitHandle::inject_fault`]): the dispatcher
+    /// panics when it dequeues this, exercising the ticket-teardown path.
+    Fault,
 }
+
+const DROPPED_SUBMISSION: &str =
+    "serve dispatcher dropped this submission (dispatcher died or the queue was torn down)";
 
 struct OpsSub {
     tier: Fidelity,
@@ -174,6 +257,31 @@ struct OpsSub {
     out: Vec<u64>,
     done: Arc<Completion>,
     submitted: Instant,
+    /// The queue's in-flight op counter; decremented exactly once, when
+    /// this submission is dropped (completed or errored).
+    pressure: Arc<AtomicUsize>,
+}
+
+impl Drop for OpsSub {
+    /// Every submission resolves its ticket exactly once. The normal
+    /// path completes it with result bits before the `OpsSub` drops;
+    /// any drop that finds the ticket still open — the dispatcher
+    /// unwinding mid-batch, or the teardown guard draining the queue
+    /// after a dispatcher death — errors it, so producers blocked in
+    /// [`Ticket::wait`] never hang.
+    fn drop(&mut self) {
+        self.pressure.fetch_sub(self.triples.len(), Ordering::Relaxed);
+        let mut st = match self.done.state.lock() {
+            Ok(g) => g,
+            Err(p) => p.into_inner(),
+        };
+        if !st.done {
+            st.err = Some(DROPPED_SUBMISSION);
+            st.done = true;
+            drop(st);
+            self.done.cv.notify_all();
+        }
+    }
 }
 
 struct QueueState {
@@ -188,6 +296,10 @@ struct QueueShared {
     space: Condvar,
     /// The dispatcher parks here while the queue is empty.
     work: Condvar,
+    /// Ops submitted but not yet resolved (completed or errored) — the
+    /// queue's load-pressure signal, readable lock-free by the router's
+    /// spill policy while the owning shard is mid-batch.
+    pressure: Arc<AtomicUsize>,
 }
 
 /// Cloneable producer handle onto a [`ServeQueue`].
@@ -221,16 +333,38 @@ impl SubmitHandle {
         }
         anyhow::ensure!(!st.closed, "serve queue is closed");
         st.queued_ops += n;
+        self.shared.pressure.fetch_add(n, Ordering::Relaxed);
         st.items.push_back(Work::Ops(OpsSub {
             tier,
             triples,
             out,
             done: Arc::clone(&done),
             submitted,
+            pressure: Arc::clone(&self.shared.pressure),
         }));
         drop(st);
         self.shared.work.notify_one();
         Ok(Ticket { done })
+    }
+
+    /// Ops submitted through this queue and not yet resolved (queued or
+    /// mid-batch). Lock-free; the router's load-aware spill policy reads
+    /// it per dispatch decision.
+    pub fn pressure_ops(&self) -> usize {
+        self.shared.pressure.load(Ordering::Relaxed)
+    }
+
+    /// Fault injection: make the dispatcher panic when it reaches this
+    /// point of the queue. Exists for tests and chaos drills of the
+    /// ticket-teardown contract — every outstanding ticket must resolve
+    /// with an error instead of hanging its producer.
+    pub fn inject_fault(&self) -> crate::Result<()> {
+        let mut st = self.shared.q.lock().expect("serve queue poisoned");
+        anyhow::ensure!(!st.closed, "serve queue is closed");
+        st.items.push_back(Work::Fault);
+        drop(st);
+        self.shared.work.notify_one();
+        Ok(())
     }
 
     /// Submit an idle phase of `slots` issue slots (accounting only — no
@@ -377,6 +511,8 @@ struct DispatchOutcome {
     crosscheck_mismatches: u64,
     mismatch_indices: Vec<usize>,
     busy_secs: f64,
+    first_batch: Option<Instant>,
+    busy_until: Option<Instant>,
     ring_coalesced: u64,
 }
 
@@ -417,7 +553,36 @@ struct Dispatcher {
 enum Action {
     Ops(Fidelity),
     Idle,
+    Fault,
     Done,
+}
+
+/// Teardown net under the dispatcher thread: when the dispatcher exits
+/// — normally (queue already closed and drained) or by unwinding — the
+/// guard closes the queue, wakes blocked producers, and drains whatever
+/// is still queued. Dropping the drained [`Work::Ops`] items errors
+/// their tickets ([`OpsSub::drop`]), so a dispatcher death resolves
+/// every outstanding submission instead of hanging its producers.
+struct DispatchGuard {
+    shared: Arc<QueueShared>,
+}
+
+impl Drop for DispatchGuard {
+    fn drop(&mut self) {
+        let drained: Vec<Work> = {
+            let mut st = match self.shared.q.lock() {
+                Ok(g) => g,
+                Err(p) => p.into_inner(),
+            };
+            st.closed = true;
+            st.queued_ops = 0;
+            st.items.drain(..).collect()
+        };
+        // Ticket errors fire outside the queue lock.
+        drop(drained);
+        self.shared.space.notify_all();
+        self.shared.work.notify_all();
+    }
 }
 
 impl Dispatcher {
@@ -432,6 +597,7 @@ impl Dispatcher {
                 match st.items.front() {
                     Some(Work::Ops(s)) => break Action::Ops(s.tier),
                     Some(Work::Idle { .. }) => break Action::Idle,
+                    Some(Work::Fault) => break Action::Fault,
                     None if st.closed => break Action::Done,
                     None => st = self.shared.work.wait(st).expect("serve queue poisoned"),
                 }
@@ -440,6 +606,14 @@ impl Dispatcher {
                 Action::Done => {
                     drop(st);
                     break;
+                }
+                Action::Fault => {
+                    // Pop before unwinding so the queue mutex is never
+                    // poisoned; the DispatchGuard + OpsSub teardown then
+                    // errors every outstanding ticket.
+                    st.items.pop_front();
+                    drop(st);
+                    panic!("injected serve dispatcher fault");
                 }
                 Action::Idle => {
                     // Merge consecutive idle phases into one gap.
@@ -505,6 +679,8 @@ impl Dispatcher {
             crosscheck_mismatches: self.crosscheck_mismatches,
             mismatch_indices: self.mismatch_indices,
             busy_secs,
+            first_batch: self.first_batch,
+            busy_until: self.busy_until,
             ring_coalesced,
         }
     }
@@ -580,13 +756,14 @@ impl Dispatcher {
         }
 
         // Complete every submission: its result buffer moves to the
-        // ticket whole.
-        for sub in self.batch_items.drain(..) {
+        // ticket whole. (`take` rather than a field move — `OpsSub` has
+        // a `Drop` teardown for the error path.)
+        for mut sub in self.batch_items.drain(..) {
             let latency = sub.submitted.elapsed().as_secs_f64();
             self.latencies.push(latency);
             self.submissions += 1;
             let mut st = sub.done.state.lock().expect("serve completion poisoned");
-            st.bits = Some(sub.out);
+            st.bits = Some(std::mem::take(&mut sub.out));
             st.done = true;
             drop(st);
             sub.done.cv.notify_all();
@@ -721,6 +898,15 @@ pub struct ServeReport {
     /// completion, queue wait included). 0.0 when nothing ran.
     pub p50_latency_s: f64,
     pub p99_latency_s: f64,
+    /// Every completed submission's latency, seconds, sorted ascending —
+    /// the raw distribution fleet-level reports merge before taking
+    /// cross-shard percentiles.
+    pub latencies_s: Vec<f64>,
+    /// Busy-window endpoints (first batch start / last batch end) on the
+    /// shared monotonic clock, so a fleet of shards can compute its
+    /// union busy span. `None` when nothing ran.
+    pub first_batch: Option<Instant>,
+    pub busy_until: Option<Instant>,
     /// Sampled gate-level cross-check totals.
     pub crosscheck_sampled: u64,
     pub crosscheck_mismatches: u64,
@@ -796,6 +982,22 @@ impl ServeQueue {
     /// (single ring consumer). Fails if the unit cannot operate at the
     /// configured voltage under the policy's active bias.
     pub fn start(unit: &FpuUnit, cfg: ServeConfig) -> crate::Result<ServeQueue> {
+        let exec = BatchExecutor::new(cfg.workers);
+        ServeQueue::start_with_executor(unit, cfg, exec)
+    }
+
+    /// [`ServeQueue::start`] with a caller-provided executor — the shard
+    /// path: the router sizes each shard's pool from one fleet-wide
+    /// [`crate::arch::engine::ExecutorRegistry`] budget instead of
+    /// letting every shard claim `cfg.workers` threads for itself. The
+    /// executor is owned exclusively by this queue, which is what keeps
+    /// chunk-size calibration per-shard (a gate-tier shard can never
+    /// poison a word-tier sibling's hint).
+    pub fn start_with_executor(
+        unit: &FpuUnit,
+        cfg: ServeConfig,
+        exec: BatchExecutor,
+    ) -> crate::Result<ServeQueue> {
         anyhow::ensure!(cfg.window_ops >= 1, "window width must be at least 1 op");
         anyhow::ensure!(cfg.max_batch_ops >= 1, "batch cap must be at least 1 op");
         anyhow::ensure!(cfg.ring_windows >= 1, "ring needs at least one window slot");
@@ -815,6 +1017,7 @@ impl ServeQueue {
             }),
             space: Condvar::new(),
             work: Condvar::new(),
+            pressure: Arc::new(AtomicUsize::new(0)),
         });
         let controller = std::thread::Builder::new()
             .name("fpmax-serve-bb".to_string())
@@ -829,9 +1032,10 @@ impl ServeQueue {
                 }
                 (ctrl.finish(), received, merged_in)
             })?;
+        let steal_workers = exec.workers().max(1);
         let dispatcher = Dispatcher {
             shared: Arc::clone(&shared),
-            exec: BatchExecutor::new(cfg.workers),
+            exec,
             dps: [
                 UnitDatapath::new(unit, Fidelity::GateLevel),
                 UnitDatapath::new(unit, Fidelity::WordLevel),
@@ -848,7 +1052,7 @@ impl ServeQueue {
             batch_items: Vec::new(),
             segs: Vec::new(),
             accs: Vec::new(),
-            queues: StealQueues::new(cfg.workers.max(1)),
+            queues: StealQueues::new(steal_workers),
             ops: 0,
             batches: 0,
             submissions: 0,
@@ -859,9 +1063,16 @@ impl ServeQueue {
             first_batch: None,
             busy_until: None,
         };
+        let guard_shared = Arc::clone(&shared);
         let dispatcher = std::thread::Builder::new()
             .name("fpmax-serve-dispatch".to_string())
-            .spawn(move || dispatcher.run())?;
+            .spawn(move || {
+                // Runs at thread exit, normal or unwinding: closes the
+                // queue and errors anything still queued, so a
+                // dispatcher death never strands a producer.
+                let _teardown = DispatchGuard { shared: guard_shared };
+                dispatcher.run()
+            })?;
         Ok(ServeQueue {
             shared,
             max_queue_ops: cfg.max_queue_ops,
@@ -935,6 +1146,9 @@ impl ServeQueue {
             },
             p50_latency_s: p50,
             p99_latency_s: p99,
+            latencies_s: lat,
+            first_batch: d.first_batch,
+            busy_until: d.busy_until,
             crosscheck_sampled: d.crosscheck_sampled,
             crosscheck_mismatches: d.crosscheck_mismatches,
             mismatch_indices: d.mismatch_indices,

@@ -1,0 +1,306 @@
+//! Integration properties of the sharded serve router: Table-1
+//! affinity routing, load-aware spill, per-shard isolation (calibration,
+//! ring overflow, BB identity), and deterministic dispatch under seeded
+//! load. Every shard's streamed body-bias accounting must stay
+//! bit-identical to its own post-hoc single-shard path no matter what
+//! its siblings are doing — that is the fleet contract.
+
+use fpmax::arch::engine::{Datapath, Fidelity, UnitDatapath};
+use fpmax::arch::fp::Precision;
+use fpmax::arch::generator::FpuConfig;
+use fpmax::bb::merge_run_energies;
+use fpmax::coordinator::{serve_routed, RoutedLoad};
+use fpmax::runtime::router::{
+    RouterConfig, ServeRouter, ServiceClass, ShardSpec, WorkloadClass,
+};
+use fpmax::runtime::serve::ServeConfig;
+use fpmax::workloads::throughput::{OperandMix, OperandStream};
+
+fn spec(config: FpuConfig, tier: Fidelity, workers: usize, window: usize) -> ShardSpec {
+    let mut serve = ServeConfig::nominal(&config, true).expect("nominal serve config");
+    serve.workers = workers;
+    serve.window_ops = window;
+    ShardSpec { config, tier, serve }
+}
+
+fn table1_specs(tier: Fidelity, window: usize) -> Vec<ShardSpec> {
+    FpuConfig::fpmax_units().into_iter().map(|c| spec(c, tier, 1, window)).collect()
+}
+
+/// The affinity shard index for `class` within `specs`.
+fn affinity_shard(specs: &[ShardSpec], class: WorkloadClass) -> usize {
+    specs
+        .iter()
+        .position(|s| {
+            s.config.precision == class.precision
+                && s.config.kind == class.service.affinity_kind()
+        })
+        .expect("full fleet has an affinity shard per class")
+}
+
+#[test]
+fn static_policy_routes_every_class_to_its_table1_unit() {
+    // The acceptance property: latency classes land on the CMA shards,
+    // bulk classes on the FMA shards, per precision — misrouted == 0
+    // with spill off — and every ticket's bits equal the landing unit's
+    // own datapath (each shard computes its own Table-I semantics).
+    let tier = Fidelity::WordSimd;
+    let specs = table1_specs(tier, 256);
+    let router = ServeRouter::start(&specs, RouterConfig::no_spill(4)).unwrap();
+    let mut pending = Vec::new();
+    for (ci, class) in WorkloadClass::ALL.into_iter().enumerate() {
+        let expect_idx = affinity_shard(&specs, class);
+        let dp = UnitDatapath::generate(&specs[expect_idx].config, tier);
+        let mut stream =
+            OperandStream::new(class.precision, OperandMix::Anything, 50 + ci as u64);
+        for k in 0..3usize {
+            let n = 200 + 61 * k;
+            let triples = stream.batch(n);
+            let mut want = vec![0u64; n];
+            dp.fmac_batch(&triples, &mut want);
+            let (idx, ticket) = router.submit(class, tier, triples).unwrap();
+            assert_eq!(idx, expect_idx, "{} routed off-affinity", class.name());
+            pending.push((want, ticket));
+        }
+    }
+    for (want, ticket) in pending {
+        assert_eq!(ticket.wait().unwrap(), want);
+    }
+    let report = router.finish().unwrap();
+    assert_eq!(report.submissions, 12);
+    assert_eq!(report.misrouted, 0, "static policy, no spill pressure");
+    assert_eq!(report.spilled, 0);
+    assert_eq!(report.misrouted_fraction(), 0.0);
+    assert_eq!(report.crosscheck_mismatches(), 0);
+    assert!(report.bb_gate_ok(), "every shard's streamed BB must match post-hoc");
+    // The per-class shard histogram is concentrated on the affinity
+    // diagonal.
+    let hist = report.class_histogram();
+    for class in WorkloadClass::ALL {
+        let expect_idx = affinity_shard(&specs, class);
+        for (si, _) in report.shards.iter().enumerate() {
+            let want = if si == expect_idx { 3 } else { 0 };
+            assert_eq!(
+                hist[class.index()][si],
+                want,
+                "class {} shard {si}",
+                class.name()
+            );
+        }
+    }
+    let total: u64 = report.shards.iter().map(|s| s.report.ops).sum();
+    assert_eq!(report.ops, total);
+}
+
+#[test]
+fn overloaded_shard_spills_to_its_compatible_sibling() {
+    // Load-aware spill: pile large latency-class batches onto the SP CMA
+    // shard; once its in-flight pressure crosses the threshold, the
+    // router diverts to the less-loaded SP FMA sibling. A spilled
+    // submission is computed in the receiving unit's own semantics
+    // (fused vs cascade), so expectations follow the landing shard.
+    let tier = Fidelity::WordSimd;
+    let specs = vec![
+        spec(FpuConfig::sp_cma(), tier, 1, 512),
+        spec(FpuConfig::sp_fma(), tier, 1, 512),
+    ];
+    let router = ServeRouter::start(&specs, RouterConfig::with_spill(2, 1_000)).unwrap();
+    let class = WorkloadClass { precision: Precision::Single, service: ServiceClass::Latency };
+    let dps =
+        [UnitDatapath::generate(&specs[0].config, tier), UnitDatapath::generate(&specs[1].config, tier)];
+    // Precompute all batches + both units' expectations BEFORE the first
+    // submit, so the submissions land back-to-back while the single
+    // worker is still chewing on the first batch.
+    let mut stream = OperandStream::new(Precision::Single, OperandMix::Finite, 4);
+    const N: usize = 150_000;
+    let prepared: Vec<_> = (0..4)
+        .map(|_| {
+            let triples = stream.batch(N);
+            let mut wants = [vec![0u64; N], vec![0u64; N]];
+            dps[0].fmac_batch(&triples, &mut wants[0]);
+            dps[1].fmac_batch(&triples, &mut wants[1]);
+            (triples, wants)
+        })
+        .collect();
+    let mut pending = Vec::new();
+    for (i, (triples, wants)) in prepared.into_iter().enumerate() {
+        let (idx, ticket) = router.submit(class, tier, triples).unwrap();
+        if i == 0 {
+            // The first dispatch just landed N unresolved ops on the
+            // affinity shard — the pressure probe the spill policy reads.
+            assert!(
+                router.shard_pressure(idx) >= N,
+                "in-flight pressure must be visible immediately after submit"
+            );
+        }
+        let [cma, fma] = wants;
+        pending.push((idx, if idx == 0 { cma } else { fma }, ticket));
+    }
+    let mut landed = [0u64; 2];
+    for (idx, want, ticket) in pending {
+        assert_eq!(ticket.wait().unwrap(), want, "shard {idx} result diverged");
+        landed[idx] += 1;
+    }
+    let report = router.finish().unwrap();
+    assert!(report.spilled >= 1, "overload never spilled: landed {landed:?}");
+    assert_eq!(report.spilled, report.misrouted, "all off-affinity traffic here is spill");
+    assert_eq!(report.shards[1].spilled_in, report.spilled);
+    assert_eq!(report.shards[0].spilled_in, 0);
+    assert_eq!(report.crosscheck_mismatches(), 0);
+    assert!(report.bb_gate_ok());
+    assert_eq!(report.ops, 4 * N as u64);
+}
+
+#[test]
+fn routed_duty_weave_rebiases_every_shard() {
+    // All-shards-idle duty weave: every class's producer weaves idle
+    // phases onto its affinity shard, so all four adaptive controllers
+    // see deep gaps and actually re-bias — and the fleet energy is the
+    // exact sum of the per-shard streamed accounting.
+    let tier = Fidelity::WordSimd;
+    let specs = table1_specs(tier, 512);
+    let load =
+        RoutedLoad { total_ops: 40_000, producers_per_class: 1, sub_ops: 1_024, duty: 0.1, seed: 5 };
+    let report = serve_routed(&specs, RouterConfig::no_spill(4), tier, load).unwrap();
+    assert_eq!(report.ops, 40_000);
+    assert_eq!(report.misrouted, 0);
+    assert_eq!(report.crosscheck_mismatches(), 0);
+    for s in &report.shards {
+        assert!(s.report.ops > 0, "{}: no work landed", s.unit);
+        assert!(
+            s.report.occupancy < 0.25,
+            "{}: idle weave missing (occupancy {})",
+            s.unit,
+            s.report.occupancy
+        );
+        assert_eq!(s.report.ring_coalesced, 0, "{}", s.unit);
+        assert!(
+            s.report.schedule_matches && s.report.energy_matches,
+            "{}: streamed BB diverged from post-hoc",
+            s.unit
+        );
+        // 10% duty ⇒ gaps of ~9 idle slots per op — far beyond any
+        // plausible settle time, so at least one window must drop bias.
+        let sched = &s.report.streamed.schedule;
+        let hi = sched.iter().cloned().fold(f64::MIN, f64::max);
+        assert!(
+            sched.iter().any(|&v| v < hi),
+            "{}: adaptive schedule never re-biased",
+            s.unit
+        );
+    }
+    // Fleet accounting is the exact sum of the shards' streamed runs.
+    let manual = merge_run_energies(report.shards.iter().map(|s| &s.report.streamed.energy));
+    assert_eq!(report.fleet_energy.ops, manual.ops);
+    assert_eq!(report.fleet_energy.dynamic_pj, manual.dynamic_pj);
+    assert_eq!(report.fleet_energy.leakage_pj, manual.leakage_pj);
+    assert_eq!(report.fleet_energy.transition_pj, manual.transition_pj);
+    let streamed_total: u64 = report.shards.iter().map(|s| s.report.streamed.ops).sum();
+    assert_eq!(report.fleet_energy.ops, streamed_total);
+}
+
+#[test]
+fn ring_overflow_on_one_shard_leaves_siblings_bit_identical() {
+    // Shard isolation under overflow: a 1-window ring on the SP FMA
+    // shard may coalesce under load, but its siblings' streams must stay
+    // pristine — full streamed-vs-post-hoc bit identity — and even the
+    // overflowing shard never drops accounting.
+    let tier = Fidelity::WordSimd;
+    let mut specs = table1_specs(tier, 128);
+    let squeezed = affinity_shard(
+        &specs,
+        WorkloadClass { precision: Precision::Single, service: ServiceClass::Bulk },
+    );
+    specs[squeezed].serve.ring_windows = 1;
+    let load =
+        RoutedLoad { total_ops: 60_000, producers_per_class: 1, sub_ops: 512, duty: 0.5, seed: 7 };
+    let report = serve_routed(&specs, RouterConfig::no_spill(4), tier, load).unwrap();
+    assert_eq!(report.ops, 60_000);
+    assert_eq!(report.crosscheck_mismatches(), 0);
+    for (si, s) in report.shards.iter().enumerate() {
+        // The always-invariants, every shard.
+        assert!(s.report.received_schedule_matches, "{}", s.unit);
+        assert!(s.report.activity_preserved, "{}: accounting dropped", s.unit);
+        assert!(s.report.bb_gate_ok(), "{}", s.unit);
+        if si != squeezed {
+            // Siblings are untouched by the squeezed shard's overflow.
+            assert_eq!(s.report.ring_coalesced, 0, "{}: sibling ring overflowed", s.unit);
+            assert!(
+                s.report.schedule_matches && s.report.energy_matches,
+                "{}: sibling lost bit identity",
+                s.unit
+            );
+        }
+    }
+}
+
+#[test]
+fn routing_is_deterministic_under_seeded_load() {
+    // Two identical seeded runs through the pure static policy must
+    // produce identical dispatch decisions: same per-shard submission
+    // histograms, same per-shard op totals.
+    let tier = Fidelity::WordLevel;
+    let load =
+        RoutedLoad { total_ops: 30_000, producers_per_class: 1, sub_ops: 512, duty: 1.0, seed: 9 };
+    let run = || {
+        let specs = table1_specs(tier, 512);
+        serve_routed(&specs, RouterConfig::no_spill(4), tier, load).unwrap()
+    };
+    let a = run();
+    let b = run();
+    assert_eq!(a.submissions, b.submissions);
+    assert_eq!(a.ops, b.ops);
+    assert_eq!(a.misrouted, 0);
+    assert_eq!(b.misrouted, 0);
+    for (sa, sb) in a.shards.iter().zip(&b.shards) {
+        assert_eq!(sa.unit, sb.unit);
+        assert_eq!(sa.class_counts, sb.class_counts, "{}", sa.unit);
+        assert_eq!(sa.report.ops, sb.report.ops, "{}", sa.unit);
+        assert_eq!(sa.report.submissions, sb.report.submissions, "{}", sa.unit);
+    }
+}
+
+#[test]
+fn mixed_tier_shards_isolate_chunk_calibration() {
+    // The per-shard calibration satellite, end-to-end: the same unit
+    // served at gate and word-simd tiers as two shards (per-op costs
+    // ~an order of magnitude apart), huge lane-tier submissions
+    // interleaved with tiny gate-tier ones. Each shard owns its
+    // executor, so neither tier's chunk hint can poison the other's —
+    // pinned here by exactness and clean per-shard reports at every
+    // scale.
+    let specs = vec![
+        spec(FpuConfig::sp_fma(), Fidelity::GateLevel, 1, 256),
+        spec(FpuConfig::sp_fma(), Fidelity::WordSimd, 1, 512),
+    ];
+    let router = ServeRouter::start(&specs, RouterConfig::no_spill(2)).unwrap();
+    let class = WorkloadClass { precision: Precision::Single, service: ServiceClass::Bulk };
+    // Bits are tier-invariant, so one golden covers both shards.
+    let dp = UnitDatapath::generate(&FpuConfig::sp_fma(), Fidelity::WordLevel);
+    let mut stream = OperandStream::new(Precision::Single, OperandMix::Finite, 13);
+    let mut pending = Vec::new();
+    for (tier, n, expect_idx) in [
+        (Fidelity::WordSimd, 120_000usize, 1usize),
+        (Fidelity::GateLevel, 64, 0),
+        (Fidelity::WordSimd, 64, 1),
+        (Fidelity::GateLevel, 2_000, 0),
+        (Fidelity::WordSimd, 80_000, 1),
+        (Fidelity::GateLevel, 64, 0),
+    ] {
+        let triples = stream.batch(n);
+        let mut want = vec![0u64; n];
+        dp.fmac_batch(&triples, &mut want);
+        let (idx, ticket) = router.submit(class, tier, triples).unwrap();
+        assert_eq!(idx, expect_idx, "tier {tier:?} landed on the wrong shard");
+        pending.push((want, ticket));
+    }
+    for (want, ticket) in pending {
+        assert_eq!(ticket.wait().unwrap(), want);
+    }
+    let report = router.finish().unwrap();
+    assert_eq!(report.ops, (120_000 + 64 + 64 + 2_000 + 80_000 + 64) as u64);
+    assert_eq!(report.shards[0].report.ops, (64 + 2_000 + 64) as u64);
+    assert_eq!(report.shards[1].report.ops, (120_000 + 64 + 80_000) as u64);
+    assert_eq!(report.crosscheck_mismatches(), 0);
+    assert!(report.bb_gate_ok());
+}

@@ -40,7 +40,7 @@ fn serve_results_match_direct_submission_order() {
         pending.push((want, ticket));
     }
     for (want, ticket) in pending {
-        assert_eq!(ticket.wait(), want);
+        assert_eq!(ticket.wait().unwrap(), want);
     }
     let report = queue.finish().unwrap();
     assert_eq!(report.ops, 1 + 63 + 700 + 4_097 + 256);
@@ -177,7 +177,7 @@ fn serve_mixed_tiers_split_batches_and_stay_clean() {
         pending.push((want, queue.submit(tier, triples).unwrap()));
     }
     for (want, ticket) in pending {
-        assert_eq!(ticket.wait(), want);
+        assert_eq!(ticket.wait().unwrap(), want);
     }
     let report = queue.finish().unwrap();
     assert_eq!(report.submissions, 9);
@@ -236,12 +236,93 @@ fn serve_handles_tiny_and_huge_submissions_mixed() {
         pending.push((want, queue.submit(Fidelity::WordSimd, triples).unwrap()));
     }
     for (want, ticket) in pending {
-        assert_eq!(ticket.wait(), want);
+        assert_eq!(ticket.wait().unwrap(), want);
     }
     let report = queue.finish().unwrap();
     assert_eq!(report.ops, (64 * 4 + 100_000 + 20_000) as u64);
     assert_eq!(report.crosscheck_mismatches, 0);
     assert!(report.bb_consistent());
+}
+
+#[test]
+fn ticket_try_wait_and_wait_timeout() {
+    let cfg = FpuConfig::sp_fma();
+    let unit = FpuUnit::generate(&cfg);
+    let queue = ServeQueue::start(&unit, base_config(&cfg, 2, 256)).unwrap();
+    let dp = UnitDatapath::new(&unit, Fidelity::WordSimd);
+    let mut stream = OperandStream::new(cfg.precision, OperandMix::Finite, 3);
+    let triples = stream.batch(500);
+    let mut want = vec![0u64; 500];
+    dp.fmac_batch(&triples, &mut want);
+    let ticket = queue.submit(Fidelity::WordSimd, triples).unwrap();
+    // Poll until complete: a zero timeout returns Ok(None) while the
+    // batch is in flight instead of blocking, then the bits exactly once.
+    let mut got = None;
+    for _ in 0..10_000 {
+        if let Some(bits) = ticket
+            .wait_timeout(std::time::Duration::from_millis(10))
+            .expect("live dispatcher never errors tickets")
+        {
+            got = Some(bits);
+            break;
+        }
+    }
+    assert_eq!(got.expect("completed within the polling budget"), want);
+    // After the bits were taken, a second poll errors distinctly — it is
+    // never confusable with a legitimate empty result.
+    assert!(ticket.try_wait().is_err(), "already-taken ticket must error, not hang or alias");
+    let report = queue.finish().unwrap();
+    assert_eq!(report.ops, 500);
+    assert!(report.bb_consistent());
+}
+
+#[test]
+fn dropped_dispatcher_errors_all_outstanding_tickets() {
+    // The satellite regression: a dispatcher that dies mid-run must
+    // error every outstanding ticket — queued AND mid-batch — instead of
+    // hanging its producers, and the queue must reject new submissions.
+    let cfg = FpuConfig::sp_fma();
+    let unit = FpuUnit::generate(&cfg);
+    let queue = ServeQueue::start(&unit, base_config(&cfg, 2, 256)).unwrap();
+    let handle = queue.handle();
+    let max_q = queue.max_queue_ops();
+    let mut stream = OperandStream::new(cfg.precision, OperandMix::Finite, 21);
+
+    // One submission the dispatcher may or may not reach before the
+    // fault, then the fault, then submissions queued strictly behind it.
+    let first = handle.submit(Fidelity::WordSimd, stream.batch(256), max_q).unwrap();
+    handle.inject_fault().unwrap();
+    let mut behind = Vec::new();
+    for _ in 0..4 {
+        // The dispatcher may already have hit the fault and closed the
+        // queue — a submit-time error is the same contract, delivered
+        // earlier.
+        if let Ok(t) = handle.submit(Fidelity::WordSimd, stream.batch(100), max_q) {
+            behind.push(t);
+        }
+    }
+
+    // Everything behind the fault must resolve to an error in bounded
+    // time — never a hang.
+    for t in behind {
+        let r = t.wait_timeout(std::time::Duration::from_secs(30));
+        match r {
+            Err(_) => {}
+            Ok(Some(_)) => panic!("a submission behind the fault cannot have executed"),
+            Ok(None) => panic!("ticket still pending: dispatcher death left it hanging"),
+        }
+    }
+    // The first submission either completed cleanly (dispatcher got to
+    // it first) or was errored by the teardown; both resolve.
+    match first.wait_timeout(std::time::Duration::from_secs(30)) {
+        Ok(Some(bits)) => assert_eq!(bits.len(), 256),
+        Err(_) => {}
+        Ok(None) => panic!("first ticket still pending after dispatcher death"),
+    }
+    // New submissions bounce off the closed queue...
+    assert!(handle.submit(Fidelity::WordSimd, stream.batch(10), max_q).is_err());
+    // ...and finish() reports the dispatcher death instead of a report.
+    assert!(queue.finish().is_err());
 }
 
 #[test]
