@@ -8,6 +8,10 @@ fails the job with a readable delta table when any budget is blown:
 
 * engine: ``word-simd >= 2x scalar word`` per unit, windowed trace
   overhead ``< 2x`` untracked, zero sampled gate cross-check mismatches;
+  on ``--features simd`` artifacts (``"simd_feature": true``)
+  additionally ``simd_vector >= 2x scalar_lane`` on the FMA rows — the
+  raw std::simd lane-kernel speedup (skipped on scalar builds, where the
+  dispatching path *is* the scalar path and the rows are 0);
 * serve: sustained (4 producers) ``>= 0.8x`` the plain windowed-tracked
   batch throughput, ``p99 <= 10x p50`` submission latency, zero
   cross-check mismatches, streamed BB bit-identical to post-hoc;
@@ -66,12 +70,23 @@ class Check:
 
 def engine_checks(doc: dict) -> list[Check]:
     t = doc["thresholds"]
+    # The raw lane-kernel vectorization gate only exists on simd builds
+    # (scalar builds dispatch to the scalar_ref path, so the comparison
+    # degenerates to 1x and the bench writes 0 rows); it gates the FMA
+    # hot path, the fully vectorized kernel.
+    gate_vector = (doc.get("simd_feature", False)
+                   and "min_speedup_simd_vector_vs_scalar_lane" in t)
     out = []
     for unit, row in doc["units"].items():
         out.append(
             Check(unit, "simd_word_vs_scalar_word",
                   row["speedup_simd_word_vs_scalar_word"], ">=",
                   t["min_speedup_simd_word_vs_scalar_word"]))
+        if gate_vector and "FMA" in unit.upper():
+            out.append(
+                Check(unit, "simd_vector_vs_scalar_lane",
+                      row["speedup_simd_vector_vs_scalar_lane"], ">=",
+                      t["min_speedup_simd_vector_vs_scalar_lane"]))
         out.append(
             Check(unit, "trace_overhead_windowed",
                   row["trace_overhead_windowed_vs_untracked"], "<=",

@@ -108,3 +108,66 @@ def test_unmeasured_artifact_is_an_error(tmp_path):
     checks, errors = run_doc(tmp_path, doc)
     assert not checks
     assert errors and "measured" in errors[0]
+
+
+def engine_doc(simd_feature):
+    unit_row = {
+        "speedup_simd_word_vs_scalar_word": 3.0,
+        "speedup_simd_vector_vs_scalar_lane": 2.5 if simd_feature else 0.0,
+        "trace_overhead_windowed_vs_untracked": 1.1,
+        "crosscheck_mismatches": 0,
+        "simd_crosscheck_mismatches": 0,
+    }
+    return {
+        "bench": "engine",
+        "measured": True,
+        "simd_feature": simd_feature,
+        "thresholds": {
+            "min_speedup_simd_word_vs_scalar_word": 2.0,
+            "min_speedup_simd_vector_vs_scalar_lane": 2.0,
+            "max_trace_overhead_windowed_vs_untracked": 2.0,
+            "max_crosscheck_mismatches": 0,
+        },
+        "units": {
+            "SP FMA": dict(unit_row),
+            "SP CMA": dict(unit_row),
+        },
+    }
+
+
+def test_engine_simd_vector_gate_applies_to_fma_rows_on_simd_builds(tmp_path):
+    checks, errors = run_doc(tmp_path, engine_doc(simd_feature=True))
+    assert not errors
+    vector = [c for c in checks if c.name == "simd_vector_vs_scalar_lane"]
+    # Gated on the FMA row only: the CMA cascade keeps a scalar tail.
+    assert [c.unit for c in vector] == ["SP FMA"]
+    assert all(c.ok for c in checks)
+
+
+def test_engine_simd_vector_gate_fails_below_threshold(tmp_path):
+    doc = engine_doc(simd_feature=True)
+    doc["units"]["SP FMA"]["speedup_simd_vector_vs_scalar_lane"] = 1.3
+    checks, errors = run_doc(tmp_path, doc)
+    assert not errors
+    failed = [(c.unit, c.name) for c in checks if not c.ok]
+    assert failed == [("SP FMA", "simd_vector_vs_scalar_lane")]
+
+
+def test_engine_simd_vector_gate_skipped_on_scalar_builds(tmp_path):
+    # A scalar-build artifact carries 0 in the simd_vector rows; the
+    # gate must not fire (the dispatching path IS the scalar path).
+    checks, errors = run_doc(tmp_path, engine_doc(simd_feature=False))
+    assert not errors
+    assert all(c.name != "simd_vector_vs_scalar_lane" for c in checks)
+    assert all(c.ok for c in checks)
+
+
+def test_engine_legacy_artifact_without_simd_feature_key(tmp_path):
+    # Pre-PR-6 artifacts have neither the key nor the threshold: both
+    # absences independently disable the new gate.
+    doc = engine_doc(simd_feature=False)
+    del doc["simd_feature"]
+    del doc["thresholds"]["min_speedup_simd_vector_vs_scalar_lane"]
+    checks, errors = run_doc(tmp_path, doc)
+    assert not errors
+    assert all(c.name != "simd_vector_vs_scalar_lane" for c in checks)

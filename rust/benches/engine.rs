@@ -19,9 +19,11 @@
 //! Run: `cargo bench --bench engine` (FPMAX_BENCH_FAST=1 for a smoke run).
 
 use fpmax::arch::engine::{BatchExecutor, Datapath, Fidelity, UnitDatapath};
-use fpmax::arch::generator::{FpuConfig, FpuUnit};
+use fpmax::arch::fp::Format;
+use fpmax::arch::generator::{FpuConfig, FpuKind, FpuUnit};
+use fpmax::arch::softfloat::lanes;
 use fpmax::util::bench::{black_box, header, BenchRunner};
-use fpmax::workloads::throughput::{OperandMix, OperandStream};
+use fpmax::workloads::throughput::{OperandMix, OperandStream, OperandTriple};
 
 struct UnitRow {
     name: String,
@@ -30,6 +32,8 @@ struct UnitRow {
     scalar_word: f64,
     batch_word: f64,
     simd_word_serial: f64,
+    scalar_lane_serial: f64,
+    simd_vector_serial: f64,
     batch_word_simd: f64,
     windowed_word_simd: f64,
     crosscheck_sampled: usize,
@@ -49,6 +53,20 @@ impl UnitRow {
     /// the single-thread scalar word loop (the PR 2 acceptance number).
     fn simd_speedup(&self) -> f64 {
         self.simd_word_serial / self.scalar_word
+    }
+
+    /// Raw lane-kernel vectorization speedup: the dispatching blocks
+    /// (`std::simd` stages under `--features simd`) vs the always-scalar
+    /// `scalar_ref` SoA blocks, both single-threaded over full blocks —
+    /// the std::simd acceptance number. 0.0 when the feature is off
+    /// (the dispatching path IS the scalar path then, so there is
+    /// nothing to compare).
+    fn simd_vector_speedup(&self) -> f64 {
+        if self.simd_vector_serial > 0.0 && self.scalar_lane_serial > 0.0 {
+            self.simd_vector_serial / self.scalar_lane_serial
+        } else {
+            0.0
+        }
     }
 
     /// Cost of time-resolved tracing: windowed-tracked word-simd run vs
@@ -138,6 +156,30 @@ fn main() {
             .throughput()
             .unwrap();
 
+        // Raw lane-kernel blocks, no executor: the always-scalar
+        // `scalar_ref` SoA baseline vs the dispatching blocks (vector
+        // stages under --features simd). Same block loop on both sides
+        // so the delta is the kernel body alone.
+        let fmt = unit.format;
+        let scalar_lane_serial = runner
+            .run(&format!("engine/{}/scalar_lane_serial", cfg.name()), Some(n as f64), || {
+                lane_block_pass(cfg.kind, fmt, &triples, &mut out, false);
+                black_box(out[0]);
+            })
+            .throughput()
+            .unwrap();
+        let simd_vector_serial = if cfg!(feature = "simd") {
+            runner
+                .run(&format!("engine/{}/simd_vector_serial", cfg.name()), Some(n as f64), || {
+                    lane_block_pass(cfg.kind, fmt, &triples, &mut out, true);
+                    black_box(out[0]);
+                })
+                .throughput()
+                .unwrap()
+        } else {
+            0.0
+        };
+
         exec.recalibrate();
         let batch_word_simd = runner
             .run(&format!("engine/{}/batch_word_simd", cfg.name()), Some(n as f64), || {
@@ -187,6 +229,8 @@ fn main() {
             scalar_word,
             batch_word,
             simd_word_serial,
+            scalar_lane_serial,
+            simd_vector_serial,
             batch_word_simd,
             windowed_word_simd,
             crosscheck_sampled: check.sampled,
@@ -199,13 +243,16 @@ fn main() {
     println!();
     for r in &rows {
         println!(
-            "{:<7}  scalar-gate {:>8.2} Mops/s  batch-gate {:>8.2}  scalar-word {:>8.2}  simd-word {:>8.2} ({:.2}× lane)  batch-word {:>8.2}  batch-simd {:>8.2}  windowed-simd {:>8.2} ({:.2}× trace cost)  → {:.1}× (crosschecks {}/{} and {}/{} clean)",
+            "{:<7}  scalar-gate {:>8.2} Mops/s  batch-gate {:>8.2}  scalar-word {:>8.2}  simd-word {:>8.2} ({:.2}× lane)  lane-scalar {:>8.2}  lane-vector {:>8.2} ({:.2}× vec)  batch-word {:>8.2}  batch-simd {:>8.2}  windowed-simd {:>8.2} ({:.2}× trace cost)  → {:.1}× (crosschecks {}/{} and {}/{} clean)",
             r.name,
             r.scalar_gate / 1e6,
             r.batch_gate / 1e6,
             r.scalar_word / 1e6,
             r.simd_word_serial / 1e6,
             r.simd_speedup(),
+            r.scalar_lane_serial / 1e6,
+            r.simd_vector_serial / 1e6,
+            r.simd_vector_speedup(),
             r.batch_word / 1e6,
             r.batch_word_simd / 1e6,
             r.windowed_word_simd / 1e6,
@@ -227,6 +274,49 @@ fn main() {
     }
 }
 
+/// One full pass over `triples` through the lane-kernel blocks
+/// (FMA-kind units take the fused block, CMA-kind the cascade block),
+/// `vector: true` → the dispatching blocks (std::simd stages when the
+/// feature is on), `false` → the always-compiled `scalar_ref` SoA
+/// blocks. The scalar remainder (< LANES triples) goes through the
+/// scalar_ref block padded with zeros, matching what `WordSimdUnit`
+/// does internally.
+fn lane_block_pass(
+    kind: FpuKind,
+    fmt: Format,
+    triples: &[OperandTriple],
+    out: &mut [u64],
+    vector: bool,
+) {
+    let mut av = [0u64; lanes::LANES];
+    let mut bv = [0u64; lanes::LANES];
+    let mut cv = [0u64; lanes::LANES];
+    let mut rv = [0u64; lanes::LANES];
+    for (block, dst) in triples.chunks(lanes::LANES).zip(out.chunks_mut(lanes::LANES)) {
+        for (i, t) in block.iter().enumerate() {
+            av[i] = t.a;
+            bv[i] = t.b;
+            cv[i] = t.c;
+        }
+        for i in block.len()..lanes::LANES {
+            av[i] = 0;
+            bv[i] = 0;
+            cv[i] = 0;
+        }
+        match (kind, vector) {
+            (FpuKind::Fma, true) => lanes::fma_block_rne(fmt, &av, &bv, &cv, &mut rv),
+            (FpuKind::Fma, false) => {
+                lanes::scalar_ref::fma_block_rne(fmt, &av, &bv, &cv, &mut rv)
+            }
+            (FpuKind::Cma, true) => lanes::cma_block_rne(fmt, &av, &bv, &cv, &mut rv),
+            (FpuKind::Cma, false) => {
+                lanes::scalar_ref::cma_block_rne(fmt, &av, &bv, &cv, &mut rv)
+            }
+        }
+        dst.copy_from_slice(&rv[..block.len()]);
+    }
+}
+
 /// Hand-rolled JSON (no serde offline): stable key order, one unit per
 /// entry.
 fn render_json(ops: usize, workers: usize, rows: &[UnitRow]) -> String {
@@ -237,10 +327,14 @@ fn render_json(ops: usize, workers: usize, rows: &[UnitRow]) -> String {
     s.push_str(&format!("  \"ops_per_unit\": {ops},\n"));
     s.push_str(&format!("  \"workers\": {workers},\n"));
     s.push_str(&format!("  \"trace_window_ops\": {TRACE_WINDOW_OPS},\n"));
+    s.push_str(&format!("  \"simd_feature\": {},\n", cfg!(feature = "simd")));
     // Budgets the CI regression gate (python/ci_check_bench.py) enforces
-    // against every unit row of this artifact.
+    // against every unit row of this artifact. The simd_vector threshold
+    // only applies to FMA rows of simd_feature builds (the FMA hot path
+    // is the fully vectorized one; the checker skips it otherwise).
     s.push_str("  \"thresholds\": {\n");
     s.push_str("    \"min_speedup_simd_word_vs_scalar_word\": 2.0,\n");
+    s.push_str("    \"min_speedup_simd_vector_vs_scalar_lane\": 2.0,\n");
     s.push_str("    \"max_trace_overhead_windowed_vs_untracked\": 2.0,\n");
     s.push_str("    \"max_crosscheck_mismatches\": 0\n");
     s.push_str("  },\n");
@@ -254,6 +348,14 @@ fn render_json(ops: usize, workers: usize, rows: &[UnitRow]) -> String {
         s.push_str(&format!(
             "      \"simd_word_serial_ops_per_s\": {:.0},\n",
             r.simd_word_serial
+        ));
+        s.push_str(&format!(
+            "      \"scalar_lane_serial_ops_per_s\": {:.0},\n",
+            r.scalar_lane_serial
+        ));
+        s.push_str(&format!(
+            "      \"simd_vector_serial_ops_per_s\": {:.0},\n",
+            r.simd_vector_serial
         ));
         s.push_str(&format!(
             "      \"batch_word_simd_ops_per_s\": {:.0},\n",
@@ -274,6 +376,10 @@ fn render_json(ops: usize, workers: usize, rows: &[UnitRow]) -> String {
         s.push_str(&format!(
             "      \"speedup_simd_word_vs_scalar_word\": {:.2},\n",
             r.simd_speedup()
+        ));
+        s.push_str(&format!(
+            "      \"speedup_simd_vector_vs_scalar_lane\": {:.2},\n",
+            r.simd_vector_speedup()
         ));
         s.push_str(&format!("      \"crosscheck_sampled\": {},\n", r.crosscheck_sampled));
         s.push_str(&format!(

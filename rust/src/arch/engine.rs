@@ -60,7 +60,7 @@
 //! softfloat spec, regardless of unit kind).
 
 use std::cell::UnsafeCell;
-use std::sync::atomic::{fence, AtomicBool, AtomicUsize, Ordering};
+use std::sync::atomic::{fence, AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex, OnceLock};
 
 use super::fma::FmaActivity;
@@ -1336,6 +1336,36 @@ pub(crate) fn chunk_from_per_op(per_op_secs: f64) -> usize {
     ((TARGET_CHUNK_SECS / per_op_secs.max(1e-9)) as usize).clamp(MIN_CHUNK, MAX_CHUNK)
 }
 
+/// Compile-time fingerprint of the lane-kernel implementation this
+/// binary carries: the `WordSimd` tier's per-op cost depends on whether
+/// `softfloat::lanes` was built with the scalar SoA stages or the
+/// `std::simd` vector stages (`--features simd`), so a chunk hint
+/// calibrated by one build must not be reused by the other. The values
+/// are arbitrary distinct tags, stable across compilations of the same
+/// feature set.
+pub const fn lane_kernel_fingerprint() -> u64 {
+    if cfg!(feature = "simd") {
+        0x513D_0002
+    } else {
+        0x5CA1_0001
+    }
+}
+
+/// Calibration key for a fidelity tier: what a persisted chunk hint is
+/// validated against before reuse (see [`BatchExecutor::seed_calibration`]).
+/// Gate- and word-level tiers key on the tier alone (their kernels are
+/// identical in every build); the `WordSimd` tier additionally mixes in
+/// [`lane_kernel_fingerprint`], so a hint persisted by a scalar build is
+/// stale — and re-timed, not trusted — under `--features simd` and vice
+/// versa. Never returns 0 (0 = uncalibrated).
+pub const fn calibration_key(tier: Fidelity) -> u64 {
+    match tier {
+        Fidelity::GateLevel => 1,
+        Fidelity::WordLevel => 2,
+        Fidelity::WordSimd => 3 | (lane_kernel_fingerprint() << 8),
+    }
+}
+
 /// A type-erased parallel region: `run` is a monomorphized worker entry
 /// point, `ctx` points at a stack-held context struct that outlives the
 /// broadcast (the submitter blocks until every worker has finished).
@@ -1594,6 +1624,12 @@ pub struct BatchExecutor {
     /// and re-calibrate, so tiny serve submissions never inherit a
     /// chunk size tuned on a million-op pass.
     calibrated_ops: AtomicUsize,
+    /// [`calibration_key`] of the run that produced `chunk_hint`
+    /// (0 = none): fidelity tier + lane-kernel fingerprint. A run whose
+    /// key differs drops the hint and re-times, so a hint calibrated by
+    /// a different tier — or persisted from a build with the other lane
+    /// kernels (scalar vs `--features simd`) — is never reused.
+    cal_key: AtomicU64,
     /// Persistent worker pool, spawned lazily by the first parallel run.
     pool: OnceLock<WorkerPool>,
 }
@@ -1604,6 +1640,7 @@ impl std::fmt::Debug for BatchExecutor {
             .field("workers", &self.workers)
             .field("chunk_hint", &self.chunk_hint.load(Ordering::Relaxed))
             .field("calibrated_ops", &self.calibrated_ops.load(Ordering::Relaxed))
+            .field("cal_key", &self.cal_key.load(Ordering::Relaxed))
             .field("pool_started", &self.pool.get().is_some())
             .finish()
     }
@@ -1623,6 +1660,7 @@ impl Clone for BatchExecutor {
             workers: self.workers,
             chunk_hint: AtomicUsize::new(self.chunk_hint.load(Ordering::Relaxed)),
             calibrated_ops: AtomicUsize::new(self.calibrated_ops.load(Ordering::Relaxed)),
+            cal_key: AtomicU64::new(self.cal_key.load(Ordering::Relaxed)),
             pool: OnceLock::new(),
         }
     }
@@ -1635,6 +1673,7 @@ impl BatchExecutor {
             workers: workers.max(1),
             chunk_hint: AtomicUsize::new(0),
             calibrated_ops: AtomicUsize::new(0),
+            cal_key: AtomicU64::new(0),
             pool: OnceLock::new(),
         }
     }
@@ -1666,6 +1705,12 @@ impl BatchExecutor {
         self.calibrated_ops.load(Ordering::Relaxed)
     }
 
+    /// The [`calibration_key`] of the run that produced the current
+    /// chunk hint (0 = uncalibrated).
+    pub fn calibration_key(&self) -> u64 {
+        self.cal_key.load(Ordering::Relaxed)
+    }
+
     /// Drop the persisted chunk calibration — the next run re-times. Use
     /// when switching this executor to a datapath with a very different
     /// per-op cost (gate-level is ~an order of magnitude slower than
@@ -1674,25 +1719,37 @@ impl BatchExecutor {
     pub fn recalibrate(&self) {
         self.chunk_hint.store(0, Ordering::Relaxed);
         self.calibrated_ops.store(0, Ordering::Relaxed);
+        self.cal_key.store(0, Ordering::Relaxed);
     }
 
-    /// Install a previously-observed calibration (both values 0 clears
+    /// Install a previously-observed calibration (all values 0 clears
     /// it). The serve layer keeps one executor — one persistent pool —
     /// across fidelity tiers whose per-op costs differ by ~an order of
     /// magnitude, and swaps each tier's saved calibration back in
     /// instead of re-timing on every tier switch.
-    pub fn seed_calibration(&self, chunk: usize, calibrated_ops: usize) {
+    ///
+    /// `key` is the [`calibration_key`] the calibration was observed
+    /// under. Runs validate it before reusing the hint, so seeding a
+    /// calibration persisted by a build with different lane kernels
+    /// (scalar vs `--features simd`), or observed on a different tier,
+    /// costs one re-timing pass instead of a mis-sized chunk.
+    pub fn seed_calibration(&self, chunk: usize, calibrated_ops: usize, key: u64) {
         self.chunk_hint.store(chunk, Ordering::Relaxed);
         self.calibrated_ops.store(calibrated_ops, Ordering::Relaxed);
+        self.cal_key.store(key, Ordering::Relaxed);
     }
 
-    /// Apply the [`RECAL_RATIO`] staleness rule for an `n`-op run: a
-    /// hint calibrated on a much larger batch is dropped so this run
-    /// re-times (or, on paths that never time, falls back to an even
-    /// per-worker split).
-    pub(crate) fn refresh_calibration(&self, n: usize) {
+    /// Apply the staleness rules for an `n`-op run under `key`: a hint
+    /// calibrated on a batch more than [`RECAL_RATIO`]× larger, or under
+    /// a different [`calibration_key`] (other tier, or other lane-kernel
+    /// build), is dropped so this run re-times (or, on paths that never
+    /// time, falls back to an even per-worker split).
+    pub(crate) fn refresh_calibration(&self, n: usize, key: u64) {
         let cal = self.calibrated_ops.load(Ordering::Relaxed);
-        if cal != 0 && n.saturating_mul(RECAL_RATIO) < cal {
+        if cal != 0
+            && (n.saturating_mul(RECAL_RATIO) < cal
+                || self.cal_key.load(Ordering::Relaxed) != key)
+        {
             self.recalibrate();
         }
     }
@@ -1732,6 +1789,7 @@ impl BatchExecutor {
         let per_op = t0.elapsed().as_secs_f64() / prefix as f64;
         self.chunk_hint.store(chunk_from_per_op(per_op), Ordering::Relaxed);
         self.calibrated_ops.store(triples.len(), Ordering::Relaxed);
+        self.cal_key.store(calibration_key(dp.fidelity()), Ordering::Relaxed);
         prefix
     }
 
@@ -1836,7 +1894,7 @@ impl BatchExecutor {
             dp.fmac_batch(triples, out);
             return Ok(());
         }
-        self.refresh_calibration(n);
+        self.refresh_calibration(n, calibration_key(dp.fidelity()));
         let done = self.calibrate(dp, triples, out, None);
         self.run_chunked(dp, &triples[done..], &mut out[done..], None);
         Ok(())
@@ -1873,7 +1931,7 @@ impl BatchExecutor {
             dp.fmac_batch_tracked(triples, out, &mut total);
             return Ok(total);
         }
-        self.refresh_calibration(n);
+        self.refresh_calibration(n, calibration_key(dp.fidelity()));
         let done = self.calibrate(dp, triples, out, Some(&mut total));
         self.run_chunked(dp, &triples[done..], &mut out[done..], Some(&mut total));
         Ok(total)
@@ -1927,7 +1985,7 @@ impl BatchExecutor {
             // boundaries); reuse the persisted hint when present — after
             // the staleness rule — else fall back to an even static
             // split.
-            self.refresh_calibration(n);
+            self.refresh_calibration(n, calibration_key(dp.fidelity()));
             let chunk_windows = (self.chunk_for(n) / window).max(1);
             let cursor = AtomicUsize::new(0);
             let ctx = WindowCtx {
@@ -2692,11 +2750,56 @@ mod tests {
         assert_eq!(out_big[77], word.fmac_one(big[77].a, big[77].b, big[77].c));
 
         // seed_calibration round-trips (the serve layer's per-tier swap).
-        let saved = (exec.chunk_hint(), exec.calibrated_ops());
-        exec.seed_calibration(0, 0);
-        assert_eq!((exec.chunk_hint(), exec.calibrated_ops()), (0, 0));
-        exec.seed_calibration(saved.0, saved.1);
-        assert_eq!((exec.chunk_hint(), exec.calibrated_ops()), saved);
+        let saved = (exec.chunk_hint(), exec.calibrated_ops(), exec.calibration_key());
+        assert_eq!(saved.2, calibration_key(Fidelity::WordLevel));
+        exec.seed_calibration(0, 0, 0);
+        assert_eq!((exec.chunk_hint(), exec.calibrated_ops(), exec.calibration_key()), (0, 0, 0));
+        exec.seed_calibration(saved.0, saved.1, saved.2);
+        assert_eq!((exec.chunk_hint(), exec.calibrated_ops(), exec.calibration_key()), saved);
+    }
+
+    #[test]
+    fn foreign_lane_kernel_calibration_is_dropped() {
+        // Satellite fix: a chunk hint persisted by the *other* lane-
+        // kernel build (scalar vs `--features simd`) — or by another
+        // tier — must not be reused verbatim: the per-op cost it encodes
+        // was measured on different kernels. Seeding under a mismatched
+        // key costs exactly one re-timing pass.
+        let cfg = FpuConfig::sp_fma();
+        let unit = FpuUnit::generate(&cfg);
+        let simd = WordSimdUnit::of(&unit);
+        let triples = sample(&cfg, OperandMix::Finite, 9_001, 11);
+        let exec = BatchExecutor::new(4);
+        let my_key = calibration_key(Fidelity::WordSimd);
+
+        // Simulate a persisted calibration from the other build: same
+        // tier tag, flipped lane-kernel fingerprint bits.
+        let foreign_key = my_key ^ (0xDEAD << 8);
+        assert_ne!(foreign_key, my_key);
+        exec.seed_calibration(MAX_CHUNK, 10_000_000, foreign_key);
+        assert_eq!(exec.chunk_hint(), MAX_CHUNK);
+
+        let mut out = vec![0u64; triples.len()];
+        exec.run_into(&simd, &triples, &mut out).unwrap();
+        // The foreign hint was dropped and the run re-calibrated at its
+        // own scale under its own key (results stay bit-exact either way).
+        assert_eq!(exec.calibrated_ops(), triples.len(), "foreign-key hint was reused");
+        assert_eq!(exec.calibration_key(), my_key);
+        for (i, t) in triples.iter().enumerate().step_by(997) {
+            assert_eq!(out[i], simd.fmac_one(t.a, t.b, t.c), "slot {i}");
+        }
+
+        // A matching-key seed IS reused: no re-timing, hint intact.
+        exec.seed_calibration(1_024, triples.len(), my_key);
+        exec.run_into(&simd, &triples, &mut out).unwrap();
+        assert_eq!(exec.chunk_hint(), 1_024, "matching-key hint was dropped");
+        assert_eq!(exec.calibrated_ops(), triples.len());
+
+        // Cross-tier reuse is keyed off too: the scalar word tier drops
+        // a WordSimd-keyed hint instead of inheriting it.
+        let word = WordUnit::of(&unit);
+        exec.run_into(&word, &triples, &mut out).unwrap();
+        assert_eq!(exec.calibration_key(), calibration_key(Fidelity::WordLevel));
     }
 
     #[test]
@@ -2752,10 +2855,10 @@ mod tests {
         let reg = ExecutorRegistry::new(8);
         let gate_shard = reg.shard(2);
         let simd_shard = reg.shard(2);
-        gate_shard.seed_calibration(512, 1_000_000);
+        gate_shard.seed_calibration(512, 1_000_000, calibration_key(Fidelity::GateLevel));
         assert_eq!(simd_shard.chunk_hint(), 0, "sibling saw a foreign chunk hint");
         assert_eq!(simd_shard.calibrated_ops(), 0);
-        simd_shard.seed_calibration(65_536, 4_096);
+        simd_shard.seed_calibration(65_536, 4_096, calibration_key(Fidelity::WordSimd));
         assert_eq!(gate_shard.chunk_hint(), 512);
         assert_eq!(gate_shard.calibrated_ops(), 1_000_000);
         gate_shard.recalibrate();

@@ -1,0 +1,759 @@
+//! Differential conformance fuzzing for the FMAC datapaths.
+//!
+//! The trust story behind every tier swap in this repo is bit-identity:
+//! gate-level structural simulation == scalar word-level softfloat ==
+//! lane-batched word-simd kernels (scalar SoA *and* `std::simd` stages)
+//! == the host CPU's own IEEE-754 hardware. This module checks that
+//! claim the way wasmtime's differential oracles do: run the same
+//! seeded operand stream through N independent engines and diff every
+//! result, shrinking any disagreement to a minimal counterexample.
+//!
+//! Two operand generators feed the diff:
+//!
+//! * [`StreamKind::UniformBits`] — raw uniform bit patterns (every
+//!   class appears, specials at their natural ~1/256 / ~1/2048 rate);
+//! * [`StreamKind::Structured`] — bit-pattern stratified: subnormals,
+//!   exponent boundaries, sparse (tie-prone) significands, NaN
+//!   payloads, exact powers of two, near-overflow, and **cancellation
+//!   pairs** (`c ≈ -round(a·b)`), the stratum that separates fused from
+//!   cascade semantics on nearly every inexact product.
+//!
+//! Failures are auto-minimized by bit-flip shrinking (clear set bits /
+//! zero whole operands while the disagreement persists) and rendered in
+//! the `rust/src/arch/tests/edge_vectors.rs` `v(a, b, c, want)` format,
+//! ready to promote into the permanent corpus (see `docs/simd.md`).
+//!
+//! The harness is deliberately engine-agnostic: [`Engine`] is a label
+//! plus a closure, so the planted-bug self-tests (is the fuzzer able to
+//! *find* a wrong rounding constant?) plug in the same way the real
+//! tiers do.
+
+use super::fp::{decode, Class, Format};
+use super::generator::{FpuKind, FpuUnit};
+use super::rounding::RoundMode;
+use super::softfloat::{self, lanes};
+use crate::util::Rng;
+
+/// The four op kinds the chip sequencer issues and the lane kernels
+/// implement. All are checked at RNE, the only mode the burst paths run.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum OpKind {
+    /// Fused `round(a·b + c)` — single rounding.
+    Fma,
+    /// Cascade `round(round(a·b) + c)` — the CMA units' two roundings.
+    Cma,
+    /// `round(a·b)`.
+    Mul,
+    /// `round(a + c)` (`b` is ignored).
+    Add,
+}
+
+impl OpKind {
+    pub const ALL: [OpKind; 4] = [OpKind::Fma, OpKind::Cma, OpKind::Mul, OpKind::Add];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            OpKind::Fma => "fma",
+            OpKind::Cma => "cma",
+            OpKind::Mul => "mul",
+            OpKind::Add => "add",
+        }
+    }
+}
+
+/// One differential engine: a label plus a bits-in/bits-out evaluator.
+///
+/// `exact_nan` selects the comparison rule: the internal tiers all
+/// produce the canonical quiet NaN, so they must match bit-for-bit; the
+/// host's NaN payload propagation is platform-defined, so host engines
+/// compare NaN results by class only.
+pub struct Engine<'a> {
+    pub label: &'static str,
+    pub exact_nan: bool,
+    eval: Box<dyn Fn(OpKind, u64, u64, u64) -> u64 + 'a>,
+}
+
+impl<'a> Engine<'a> {
+    pub fn new(
+        label: &'static str,
+        exact_nan: bool,
+        eval: impl Fn(OpKind, u64, u64, u64) -> u64 + 'a,
+    ) -> Engine<'a> {
+        Engine { label, exact_nan, eval: Box::new(eval) }
+    }
+
+    /// Evaluate one operation.
+    pub fn eval(&self, kind: OpKind, a: u64, b: u64, c: u64) -> u64 {
+        (self.eval)(kind, a, b, c)
+    }
+}
+
+/// Bits of 1.0 in `fmt` (the multiplicative identity the gate engine
+/// uses to express `Add` through the FMAC datapath).
+fn one_bits(fmt: Format) -> u64 {
+    (fmt.bias() as u64) << (fmt.sig_bits - 1)
+}
+
+/// Scalar word-level evaluation of `kind` (RNE) — the softfloat spec.
+pub fn scalar_word(fmt: Format, kind: OpKind, a: u64, b: u64, c: u64) -> u64 {
+    let m = RoundMode::NearestEven;
+    match kind {
+        OpKind::Fma => softfloat::fma(fmt, m, a, b, c).bits,
+        OpKind::Cma => {
+            let p = softfloat::mul(fmt, m, a, b);
+            softfloat::add(fmt, m, p.bits, c).bits
+        }
+        OpKind::Mul => softfloat::mul(fmt, m, a, b).bits,
+        OpKind::Add => softfloat::add(fmt, m, a, c).bits,
+    }
+}
+
+/// Word-simd evaluation of `kind`: the triple replicated across a full
+/// lane block through the dispatching lane kernels (vector stages under
+/// `--features simd`, scalar SoA otherwise), lane 0 returned. Every
+/// lane computes the same value, so replication exercises the full
+/// 8-lane decode/multiply stages on each call.
+pub fn simd_word(fmt: Format, kind: OpKind, a: u64, b: u64, c: u64) -> u64 {
+    let av = [a; lanes::LANES];
+    let bv = [b; lanes::LANES];
+    let cv = [c; lanes::LANES];
+    let mut out = [0u64; lanes::LANES];
+    match kind {
+        OpKind::Fma => lanes::fma_block_rne(fmt, &av, &bv, &cv, &mut out),
+        OpKind::Cma => lanes::cma_block_rne(fmt, &av, &bv, &cv, &mut out),
+        OpKind::Mul => lanes::mul_block_rne(fmt, &av, &bv, &mut out),
+        OpKind::Add => lanes::add_block_rne(fmt, &av, &cv, &mut out),
+    }
+    out[0]
+}
+
+/// Scalar-reference lane evaluation (always the scalar SoA stages, even
+/// under `--features simd`): the fourth internal voice of the diff.
+pub fn scalar_lane(fmt: Format, kind: OpKind, a: u64, b: u64, c: u64) -> u64 {
+    let av = [a; lanes::LANES];
+    let bv = [b; lanes::LANES];
+    let cv = [c; lanes::LANES];
+    let mut out = [0u64; lanes::LANES];
+    match kind {
+        OpKind::Fma => lanes::scalar_ref::fma_block_rne(fmt, &av, &bv, &cv, &mut out),
+        OpKind::Cma => lanes::scalar_ref::cma_block_rne(fmt, &av, &bv, &cv, &mut out),
+        OpKind::Mul => lanes::scalar_ref::mul_block_rne(fmt, &av, &bv, &mut out),
+        OpKind::Add => lanes::scalar_ref::add_block_rne(fmt, &av, &cv, &mut out),
+    }
+    out[0]
+}
+
+/// Host-hardware evaluation of `kind` through the CPU's own IEEE-754
+/// units: `mul_add` is the fused reference (correctly rounded whether
+/// it lowers to an FMA instruction or libm's `fma`), and the plain
+/// `*`/`+` compositions are the cascade/mul/add references. Rust does
+/// not enable FTZ/DAZ, so subnormal semantics match.
+pub fn host(fmt: Format, kind: OpKind, a: u64, b: u64, c: u64) -> u64 {
+    if fmt.sig_bits == 24 {
+        let (x, y, z) = (
+            f32::from_bits(a as u32),
+            f32::from_bits(b as u32),
+            f32::from_bits(c as u32),
+        );
+        let r = match kind {
+            OpKind::Fma => x.mul_add(y, z),
+            OpKind::Cma => (x * y) + z,
+            OpKind::Mul => x * y,
+            OpKind::Add => x + z,
+        };
+        r.to_bits() as u64
+    } else {
+        let (x, y, z) = (f64::from_bits(a), f64::from_bits(b), f64::from_bits(c));
+        let r = match kind {
+            OpKind::Fma => x.mul_add(y, z),
+            OpKind::Cma => (x * y) + z,
+            OpKind::Mul => x * y,
+            OpKind::Add => x + z,
+        };
+        r.to_bits()
+    }
+}
+
+/// The standard four-way engine set: gate tier (reference, first) vs
+/// scalar word vs the dispatching word-simd kernels vs host hardware —
+/// plus the always-scalar lane reference as a fifth voice when the
+/// `simd` feature makes it a distinct code path.
+///
+/// `fma_unit`/`cma_unit` must be the gate-level FMA- and CMA-kind units
+/// of the same format. The gate tier expresses `Mul` as `a·b + (-0)`
+/// and `Add` as `a·1 + c` through the fused datapath — both identities
+/// are exact under RNE (`x + (-0)` preserves every sign case because
+/// the product is never an exact `-0`-cancelling partner, and `a·1` is
+/// exact), so no separate gate mul/add hardware is needed.
+pub fn standard_engines<'a>(fma_unit: &'a FpuUnit, cma_unit: &'a FpuUnit) -> Vec<Engine<'a>> {
+    debug_assert_eq!(fma_unit.config.kind, FpuKind::Fma);
+    debug_assert_eq!(cma_unit.config.kind, FpuKind::Cma);
+    debug_assert_eq!(fma_unit.format, cma_unit.format);
+    let fmt = fma_unit.format;
+    let neg_zero = fmt.zero(true);
+    let one = one_bits(fmt);
+    let mut engines = vec![
+        Engine::new("gate", true, move |kind, a, b, c| match kind {
+            OpKind::Fma => fma_unit.fmac(a, b, c).bits,
+            OpKind::Cma => cma_unit.fmac(a, b, c).bits,
+            OpKind::Mul => fma_unit.fmac(a, b, neg_zero).bits,
+            OpKind::Add => fma_unit.fmac(a, one, c).bits,
+        }),
+        Engine::new("scalar-word", true, move |kind, a, b, c| scalar_word(fmt, kind, a, b, c)),
+        Engine::new("word-simd", true, move |kind, a, b, c| simd_word(fmt, kind, a, b, c)),
+        Engine::new("host", false, move |kind, a, b, c| host(fmt, kind, a, b, c)),
+    ];
+    if cfg!(feature = "simd") {
+        engines.push(Engine::new("scalar-lane", true, move |kind, a, b, c| {
+            scalar_lane(fmt, kind, a, b, c)
+        }));
+    }
+    engines
+}
+
+/// Operand stream flavor.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StreamKind {
+    /// Raw uniform bit patterns.
+    UniformBits,
+    /// Bit-pattern stratified (subnormals, exponent boundaries, sparse
+    /// significands, NaN payloads, cancellation pairs, ...).
+    Structured,
+}
+
+/// Seeded operand-triple generator.
+pub struct OperandGen {
+    fmt: Format,
+    stream: StreamKind,
+    rng: Rng,
+}
+
+impl OperandGen {
+    pub fn new(fmt: Format, stream: StreamKind, seed: u64) -> OperandGen {
+        OperandGen { fmt, stream, rng: Rng::new(seed) }
+    }
+
+    /// Next `(a, b, c)` triple.
+    pub fn next_triple(&mut self) -> (u64, u64, u64) {
+        match self.stream {
+            StreamKind::UniformBits => {
+                let m = self.fmt.storage_mask();
+                (self.rng.next_u64() & m, self.rng.next_u64() & m, self.rng.next_u64() & m)
+            }
+            StreamKind::Structured => {
+                let a = self.structured_operand();
+                let b = self.structured_operand();
+                let c = match self.rng.below(4) {
+                    // Cancellation pair: c ≈ -round(a·b). Exposes the
+                    // residual a·b - round(a·b), the fused-vs-cascade
+                    // discriminator, on every inexact product; the ±1-ulp
+                    // jitter variant probes near-total cancellation.
+                    0 | 1 => {
+                        let p = softfloat::mul(self.fmt, RoundMode::NearestEven, a, b).bits;
+                        let flipped = p ^ self.fmt.sign_bit();
+                        if self.rng.chance(0.5) {
+                            flipped
+                        } else {
+                            // Jitter the significand by one ulp (wrapping
+                            // within storage — still a legal pattern).
+                            (flipped.wrapping_add(1) & self.fmt.storage_mask())
+                                | (flipped & self.fmt.sign_bit())
+                        }
+                    }
+                    _ => self.structured_operand(),
+                };
+                (a, b, c)
+            }
+        }
+    }
+
+    /// A fraction with 0–3 random set bits: tie-prone products.
+    fn sparse_frac(&mut self) -> u64 {
+        let mut f = 0u64;
+        for _ in 0..self.rng.below(4) {
+            f |= 1u64 << self.rng.below(self.fmt.sig_bits as u64 - 1);
+        }
+        f & self.fmt.frac_mask()
+    }
+
+    /// One stratified operand.
+    fn structured_operand(&mut self) -> u64 {
+        let fmt = self.fmt;
+        let sign = if self.rng.chance(0.5) { fmt.sign_bit() } else { 0 };
+        let field = |biased: u64, frac: u64| sign | (biased << (fmt.sig_bits - 1)) | frac;
+        match self.rng.below(8) {
+            // Subnormals (dense and sparse fractions).
+            0 => field(0, self.rng.next_u64() & fmt.frac_mask()),
+            1 => field(0, self.sparse_frac().max(1)),
+            // Exponent boundaries: qmin edge, just-normal, near/at emax
+            // (the emax_biased case yields Inf/NaN operands).
+            2 => {
+                let edges = [
+                    0,
+                    1,
+                    2,
+                    fmt.emax_biased() - 2,
+                    fmt.emax_biased() - 1,
+                    fmt.emax_biased(),
+                ];
+                let biased = edges[self.rng.below(edges.len() as u64) as usize];
+                field(biased, self.rng.next_u64() & fmt.frac_mask())
+            }
+            // Sparse significand at a uniform finite exponent: products
+            // land exactly on round-to-even ties.
+            3 => field(self.rng.below(fmt.emax_biased()), self.sparse_frac()),
+            // NaN payloads (quiet and signaling-shaped) and infinities.
+            4 => {
+                if self.rng.chance(0.25) {
+                    fmt.inf(sign != 0)
+                } else {
+                    let payload = (self.rng.next_u64() & fmt.frac_mask()).max(1);
+                    field(fmt.emax_biased(), payload)
+                }
+            }
+            // Exact powers of two (frac = 0) incl. ±0 at biased 0.
+            5 => field(self.rng.below(fmt.emax_biased()), 0),
+            // Near-overflow: all-ones fraction at the top finite binade.
+            6 => field(fmt.emax_biased() - 1, fmt.frac_mask()),
+            // Uniform finite (exponent-uniform, like Rng::f32_operand).
+            _ => field(
+                self.rng.below(fmt.emax_biased()),
+                self.rng.next_u64() & fmt.frac_mask(),
+            ),
+        }
+    }
+}
+
+/// One engine's disagreement with the reference on a triple.
+#[derive(Debug, Clone)]
+pub struct Mismatch {
+    pub engine: &'static str,
+    pub got: u64,
+    pub want: u64,
+}
+
+/// A minimized failing case.
+#[derive(Debug, Clone)]
+pub struct Counterexample {
+    pub kind: OpKind,
+    pub fmt: Format,
+    pub a: u64,
+    pub b: u64,
+    pub c: u64,
+    /// The triple as originally generated, before shrinking.
+    pub original: (u64, u64, u64),
+    /// Number of accepted shrink mutations.
+    pub shrink_steps: usize,
+    /// Engines disagreeing with the reference on the minimized triple.
+    pub mismatches: Vec<Mismatch>,
+}
+
+impl Counterexample {
+    /// Render in the `edge_vectors.rs` corpus format: `v(a, b, c, want)`
+    /// with the gate/reference result as `want`, plus provenance. SP
+    /// prints 8 hex digits (the corpus takes `u32`), DP prints 16.
+    pub fn render_edge_vector(&self) -> String {
+        let w = if self.fmt.sig_bits == 24 { 8 } else { 16 };
+        let want = self.mismatches.first().map(|m| m.want).unwrap_or(0);
+        let diffs: Vec<String> = self
+            .mismatches
+            .iter()
+            .map(|m| format!("{}=0x{:0w$x}", m.engine, m.got, w = w))
+            .collect();
+        format!(
+            "v(0x{:0w$x}, 0x{:0w$x}, 0x{:0w$x}, 0x{:0w$x}), // fuzz {} {}: {} (shrunk {} steps from 0x{:0w$x},0x{:0w$x},0x{:0w$x})",
+            self.a,
+            self.b,
+            self.c,
+            want,
+            if self.fmt.sig_bits == 24 { "sp" } else { "dp" },
+            self.kind.name(),
+            diffs.join(" "),
+            self.shrink_steps,
+            self.original.0,
+            self.original.1,
+            self.original.2,
+            w = w,
+        )
+    }
+}
+
+/// Fuzz-run configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct FuzzConfig {
+    /// Operand triples to generate.
+    pub ops: usize,
+    pub seed: u64,
+    pub stream: StreamKind,
+    /// Stop after this many (minimized) counterexamples.
+    pub max_counterexamples: usize,
+    /// Candidate-evaluation budget per minimization.
+    pub shrink_budget: usize,
+}
+
+impl FuzzConfig {
+    pub fn new(ops: usize, seed: u64, stream: StreamKind) -> FuzzConfig {
+        FuzzConfig { ops, seed, stream, max_counterexamples: 8, shrink_budget: 4_096 }
+    }
+}
+
+/// Outcome of one differential run.
+#[derive(Debug)]
+pub struct FuzzReport {
+    pub kind: OpKind,
+    pub fmt: Format,
+    pub seed: u64,
+    pub stream: StreamKind,
+    /// Triples executed (may stop early at `max_counterexamples`).
+    pub executed: usize,
+    pub counterexamples: Vec<Counterexample>,
+}
+
+impl FuzzReport {
+    pub fn clean(&self) -> bool {
+        self.counterexamples.is_empty()
+    }
+
+    /// Multi-line human/corpus rendering of every counterexample.
+    pub fn render(&self) -> String {
+        let mut s = format!(
+            "# {} {} stream={:?} seed=0x{:x}: {} executed, {} counterexample(s)\n",
+            if self.fmt.sig_bits == 24 { "sp" } else { "dp" },
+            self.kind.name(),
+            self.stream,
+            self.seed,
+            self.executed,
+            self.counterexamples.len(),
+        );
+        for ce in &self.counterexamples {
+            s.push_str(&ce.render_edge_vector());
+            s.push('\n');
+        }
+        s
+    }
+}
+
+/// Do `got` and `want` disagree under the engine's NaN rule?
+fn disagree(fmt: Format, want: u64, got: u64, exact_nan: bool) -> bool {
+    if want == got {
+        return false;
+    }
+    if !exact_nan
+        && decode(fmt, want).class == Class::Nan
+        && decode(fmt, got).class == Class::Nan
+    {
+        return false;
+    }
+    true
+}
+
+/// All engines beyond the first, diffed against the first (reference);
+/// returns the disagreements.
+fn diff_engines(
+    fmt: Format,
+    kind: OpKind,
+    engines: &[Engine<'_>],
+    a: u64,
+    b: u64,
+    c: u64,
+) -> Vec<Mismatch> {
+    let want = engines[0].eval(kind, a, b, c);
+    engines[1..]
+        .iter()
+        .filter_map(|e| {
+            let got = e.eval(kind, a, b, c);
+            disagree(fmt, want, got, e.exact_nan)
+                .then_some(Mismatch { engine: e.label, got, want })
+        })
+        .collect()
+}
+
+/// Bit-flip shrinking: repeatedly try zeroing whole operands, then
+/// clearing individual set bits, keeping any mutation that preserves
+/// the disagreement, until a fixpoint or the candidate budget runs out.
+/// Monotone by construction (mutations only clear bits), so it
+/// terminates; the result is locally minimal under single-bit clears.
+fn minimize(
+    fmt: Format,
+    kind: OpKind,
+    engines: &[Engine<'_>],
+    start: (u64, u64, u64),
+    budget: usize,
+) -> Counterexample {
+    let mut cur = start;
+    let mut steps = 0usize;
+    let mut evals = 0usize;
+    let width = if fmt.sig_bits == 24 { 32 } else { 64 };
+    'outer: loop {
+        // Whole-operand zeroing first: the biggest single shrink.
+        for op in 0..3 {
+            let mut cand = cur;
+            let slot = match op {
+                0 => &mut cand.0,
+                1 => &mut cand.1,
+                _ => &mut cand.2,
+            };
+            if *slot == 0 {
+                continue;
+            }
+            *slot = 0;
+            evals += 1;
+            if !diff_engines(fmt, kind, engines, cand.0, cand.1, cand.2).is_empty() {
+                cur = cand;
+                steps += 1;
+                if evals < budget {
+                    continue 'outer;
+                }
+            }
+            if evals >= budget {
+                break 'outer;
+            }
+        }
+        // Then single-bit clears, high to low.
+        for op in 0..3 {
+            for bit in (0..width).rev() {
+                let mask = 1u64 << bit;
+                let v = match op {
+                    0 => cur.0,
+                    1 => cur.1,
+                    _ => cur.2,
+                };
+                if v & mask == 0 {
+                    continue;
+                }
+                let mut cand = cur;
+                match op {
+                    0 => cand.0 &= !mask,
+                    1 => cand.1 &= !mask,
+                    _ => cand.2 &= !mask,
+                }
+                evals += 1;
+                if !diff_engines(fmt, kind, engines, cand.0, cand.1, cand.2).is_empty() {
+                    cur = cand;
+                    steps += 1;
+                    if evals < budget {
+                        continue 'outer;
+                    }
+                }
+                if evals >= budget {
+                    break 'outer;
+                }
+            }
+        }
+        break;
+    }
+    let mismatches = diff_engines(fmt, kind, engines, cur.0, cur.1, cur.2);
+    debug_assert!(!mismatches.is_empty(), "minimization lost the failure");
+    Counterexample {
+        kind,
+        fmt,
+        a: cur.0,
+        b: cur.1,
+        c: cur.2,
+        original: start,
+        shrink_steps: steps,
+        mismatches,
+    }
+}
+
+/// Run one differential fuzz pass: generate `cfg.ops` triples, evaluate
+/// every engine on each, diff against `engines[0]` (the reference), and
+/// minimize each disagreement. Fully deterministic for a given
+/// `(cfg.seed, cfg.stream)`.
+pub fn run_differential(
+    fmt: Format,
+    kind: OpKind,
+    engines: &[Engine<'_>],
+    cfg: &FuzzConfig,
+) -> FuzzReport {
+    assert!(engines.len() >= 2, "need a reference plus at least one engine to diff");
+    let mut opgen = OperandGen::new(fmt, cfg.stream, cfg.seed);
+    let mut report = FuzzReport {
+        kind,
+        fmt,
+        seed: cfg.seed,
+        stream: cfg.stream,
+        executed: 0,
+        counterexamples: Vec::new(),
+    };
+    for _ in 0..cfg.ops {
+        let (a, b, c) = opgen.next_triple();
+        report.executed += 1;
+        if !diff_engines(fmt, kind, engines, a, b, c).is_empty() {
+            report.counterexamples.push(minimize(
+                fmt,
+                kind,
+                engines,
+                (a, b, c),
+                cfg.shrink_budget,
+            ));
+            if report.counterexamples.len() >= cfg.max_counterexamples {
+                break;
+            }
+        }
+    }
+    report
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// A planted-bug engine: the scalar spec with its rounding-mode
+    /// constant mutated (`TowardZero` where the kernels round
+    /// `NearestEven`). Every inexact round-up disagrees, so uniform
+    /// streams find it almost immediately — the coarse detection case.
+    fn planted_wrong_rounding(fmt: Format) -> Engine<'static> {
+        Engine::new("planted-rz", true, move |kind, a, b, c| {
+            let m = RoundMode::TowardZero;
+            match kind {
+                OpKind::Fma => softfloat::fma(fmt, m, a, b, c).bits,
+                OpKind::Cma => {
+                    let p = softfloat::mul(fmt, m, a, b);
+                    softfloat::add(fmt, m, p.bits, c).bits
+                }
+                OpKind::Mul => softfloat::mul(fmt, m, a, b).bits,
+                OpKind::Add => softfloat::add(fmt, m, a, c).bits,
+            }
+        })
+    }
+
+    /// A subtler planted bug: `Fma` evaluated with cascade (two-
+    /// rounding) semantics. Uniform random operands almost never expose
+    /// it; the structured stream's cancellation pairs expose the
+    /// dropped residual on nearly every inexact product.
+    fn planted_double_rounding(fmt: Format) -> Engine<'static> {
+        Engine::new("planted-cascade", true, move |kind, a, b, c| match kind {
+            OpKind::Fma => scalar_word(fmt, OpKind::Cma, a, b, c),
+            other => scalar_word(fmt, other, a, b, c),
+        })
+    }
+
+    fn reference(fmt: Format) -> Engine<'static> {
+        Engine::new("spec", true, move |kind, a, b, c| scalar_word(fmt, kind, a, b, c))
+    }
+
+    #[test]
+    fn planted_wrong_rounding_is_found_and_minimized() {
+        for fmt in [Format::SP, Format::DP] {
+            for kind in OpKind::ALL {
+                let engines = [reference(fmt), planted_wrong_rounding(fmt)];
+                let mut cfg = FuzzConfig::new(2_000, 0xF00D ^ fmt.sig_bits as u64, StreamKind::UniformBits);
+                cfg.max_counterexamples = 1;
+                let report = run_differential(fmt, kind, &engines, &cfg);
+                assert!(
+                    !report.clean(),
+                    "{} {}: wrong-rounding bug not found in {} ops",
+                    fmt.sig_bits,
+                    kind.name(),
+                    report.executed
+                );
+                // Bounded budget: a bug this coarse falls out fast.
+                assert!(report.executed <= 2_000);
+                let ce = &report.counterexamples[0];
+                // Minimization kept the failure and never grew the triple.
+                assert!(!ce.mismatches.is_empty());
+                let pop = |t: (u64, u64, u64)| {
+                    t.0.count_ones() + t.1.count_ones() + t.2.count_ones()
+                };
+                assert!(
+                    pop((ce.a, ce.b, ce.c)) <= pop(ce.original),
+                    "shrinking grew the counterexample"
+                );
+                // The minimized triple still disagrees when re-evaluated
+                // from scratch.
+                assert_ne!(
+                    engines[0].eval(kind, ce.a, ce.b, ce.c),
+                    engines[1].eval(kind, ce.a, ce.b, ce.c),
+                    "minimized case no longer fails"
+                );
+                // And renders in corpus format.
+                assert!(ce.render_edge_vector().starts_with("v(0x"));
+            }
+        }
+    }
+
+    #[test]
+    fn planted_double_rounding_needs_the_structured_stream() {
+        // The cancellation-pair stratum is what separates fused from
+        // cascade: structured streams must find the planted cascade bug
+        // within a small budget.
+        for fmt in [Format::SP, Format::DP] {
+            let engines = [reference(fmt), planted_double_rounding(fmt)];
+            let mut cfg = FuzzConfig::new(5_000, 0xCAFE, StreamKind::Structured);
+            cfg.max_counterexamples = 1;
+            let report = run_differential(fmt, OpKind::Fma, &engines, &cfg);
+            assert!(
+                !report.clean(),
+                "sig_bits={}: cascade bug not exposed by structured stream",
+                fmt.sig_bits
+            );
+            let ce = &report.counterexamples[0];
+            assert_ne!(
+                engines[0].eval(OpKind::Fma, ce.a, ce.b, ce.c),
+                engines[1].eval(OpKind::Fma, ce.a, ce.b, ce.c)
+            );
+        }
+    }
+
+    #[test]
+    fn internal_tiers_agree_on_structured_streams() {
+        // Smoke version of tests/differential.rs (which adds the gate
+        // tier and host hardware): spec vs word-simd vs scalar-lane.
+        for fmt in [Format::SP, Format::DP] {
+            for kind in OpKind::ALL {
+                let engines = [
+                    reference(fmt),
+                    Engine::new("word-simd", true, move |k, a, b, c| simd_word(fmt, k, a, b, c)),
+                    Engine::new("scalar-lane", true, move |k, a, b, c| {
+                        scalar_lane(fmt, k, a, b, c)
+                    }),
+                ];
+                for stream in [StreamKind::UniformBits, StreamKind::Structured] {
+                    let report = run_differential(
+                        fmt,
+                        kind,
+                        &engines,
+                        &FuzzConfig::new(2_000, 0x5EED, stream),
+                    );
+                    assert!(
+                        report.clean(),
+                        "{} {} {:?}:\n{}",
+                        fmt.sig_bits,
+                        kind.name(),
+                        stream,
+                        report.render()
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn generators_are_deterministic_and_cover_strata() {
+        let fmt = Format::SP;
+        let mut g1 = OperandGen::new(fmt, StreamKind::Structured, 9);
+        let mut g2 = OperandGen::new(fmt, StreamKind::Structured, 9);
+        let (mut subnormal, mut special, mut zero_or_pow2) = (0, 0, 0);
+        for _ in 0..4_000 {
+            let t = g1.next_triple();
+            assert_eq!(t, g2.next_triple(), "generator must be seed-deterministic");
+            for v in [t.0, t.1, t.2] {
+                let d = decode(fmt, v);
+                let biased = (v >> (fmt.sig_bits - 1)) & fmt.emax_biased();
+                if biased == 0 && v & fmt.frac_mask() != 0 {
+                    subnormal += 1;
+                }
+                if d.class == Class::Nan || d.class == Class::Infinity {
+                    special += 1;
+                }
+                if v & fmt.frac_mask() == 0 && biased < fmt.emax_biased() {
+                    zero_or_pow2 += 1;
+                }
+            }
+        }
+        assert!(subnormal > 100, "subnormals undersampled: {subnormal}");
+        assert!(special > 100, "NaN/Inf undersampled: {special}");
+        assert!(zero_or_pow2 > 100, "powers of two undersampled: {zero_or_pow2}");
+    }
+}

@@ -37,6 +37,7 @@ pub mod csa;
 pub mod engine;
 pub mod fma;
 pub mod fp;
+pub mod fuzz;
 pub mod generator;
 pub mod multiplier;
 pub mod rounding;
@@ -44,9 +45,10 @@ pub mod softfloat;
 pub mod tree;
 
 pub use engine::{
-    window_ring, ActivityAccumulator, ActivityTrace, ActivityWindow, BatchExecutor,
-    BatchLenError, CrossCheck, Datapath, ExecutorRegistry, Fidelity, GoldenFma, RingWindow,
-    UnitDatapath, WindowConsumer, WindowProducer, WordSimdUnit, WordUnit,
+    calibration_key, lane_kernel_fingerprint, window_ring, ActivityAccumulator, ActivityTrace,
+    ActivityWindow, BatchExecutor, BatchLenError, CrossCheck, Datapath, ExecutorRegistry,
+    Fidelity, GoldenFma, RingWindow, UnitDatapath, WindowConsumer, WindowProducer, WordSimdUnit,
+    WordUnit,
 };
 pub use fp::{decode, encode_finite, Class, Decoded, Format, Precision};
 pub use generator::{FpuConfig, FpuKind, FpuUnit, StructureReport};

@@ -318,11 +318,11 @@ fn exact_sum_rne_bits(fmt: Format, x: Exact, y: Exact) -> u64 {
 ///
 /// Layout per block of [`LANES`] operations:
 ///
-/// * **decode** runs as a straight loop filling separate sign/exponent/
-///   significand arrays (no `Class` enum, no per-operand branches — the
-///   normal/subnormal split is a mask-select), while collecting a bitmask
-///   of lanes holding Inf/NaN operands;
-/// * **multiply** is a pure SoA loop (`u128` products never overflow);
+/// * **decode** fills separate sign/exponent/significand arrays (no
+///   `Class` enum, no per-operand branches — the normal/subnormal split
+///   is a mask-select), while collecting a bitmask of lanes holding
+///   Inf/NaN operands;
+/// * **multiply** is a pure SoA stage (`u128` products never overflow);
 /// * **add + round** runs per lane through the RNE-specialized, flag-free
 ///   tail ([`round_rne_bits`]), which shares `add_exact` and
 ///   `shift_right_rs` with the generic spec;
@@ -330,15 +330,25 @@ fn exact_sum_rne_bits(fmt: Format, x: Exact, y: Exact) -> u64 {
 ///   [`mul`], [`add`]), so NaN propagation and Inf arithmetic never leak
 ///   into the fast path.
 ///
+/// The decode and multiply stages exist in two interchangeable forms:
+/// a scalar SoA loop (always compiled — it is the differential-fuzzing
+/// reference, exported as [`scalar_ref`]) and, behind the `simd` cargo
+/// feature, `std::simd` portable-vector versions that run the same
+/// dataflow over `u64x8`/`i32x8` registers. The peel rules are identical
+/// in both: the u128 wide paths (DP partial products, `add_exact`, the
+/// rounder) and all special lanes stay on the scalar spec.
+///
 /// Every lane result is debug-asserted against the scalar spec, so any
-/// divergence fails loudly under `cargo test`; release builds are
-/// guarded by the engine's sampled gate-level cross-checks.
+/// divergence fails loudly under `cargo test` (with or without `simd`);
+/// release builds are guarded by the engine's sampled gate-level
+/// cross-checks and the differential fuzzer ([`crate::arch::fuzz`]).
 pub mod lanes {
     use super::*;
 
     /// Operations per lane block. Eight lanes keep the SoA arrays inside
-    /// two cache lines for SP while giving the compiler enough
-    /// independent work to vectorize the decode/multiply loops.
+    /// two cache lines for SP while exactly filling one `u64x8` vector
+    /// register per column under the `simd` feature (scalar builds rely
+    /// on the compiler auto-vectorizing the same loops).
     pub const LANES: usize = 8;
 
     /// SoA view of one decoded operand column.
@@ -354,11 +364,12 @@ pub mod lanes {
         }
     }
 
-    /// Branch-light SoA decode of one operand column. Returns the lane
-    /// bitmask of non-finite (Inf/NaN) operands — those lanes hold
-    /// unusable sign/exp/sig values and must be peeled by the caller.
+    /// Branch-light SoA decode of one operand column (scalar stage;
+    /// always compiled). Returns the lane bitmask of non-finite (Inf/NaN)
+    /// operands — those lanes hold unusable sign/exp/sig values and must
+    /// be peeled by the caller.
     #[inline(always)]
-    fn decode_lanes(fmt: Format, bits: &[u64; LANES], out: &mut DecodedLanes) -> u32 {
+    fn decode_lanes_scalar(fmt: Format, bits: &[u64; LANES], out: &mut DecodedLanes) -> u32 {
         let ebias = fmt.bias() + fmt.sig_bits as i32 - 1;
         let mut special = 0u32;
         for i in 0..LANES {
@@ -377,33 +388,134 @@ pub mod lanes {
         special
     }
 
-    /// One lane block of fused FMAs (`round(a·b + c)`, RNE). Lanes with
-    /// any Inf/NaN operand peel to the scalar [`fma`] spec.
-    pub fn fma_block_rne(
-        fmt: Format,
-        a: &[u64; LANES],
-        b: &[u64; LANES],
-        c: &[u64; LANES],
-        out: &mut [u64; LANES],
+    /// Multiply stage (scalar form): sign XOR, exponent add, exact
+    /// significand product widened to u128 (53+53 bits max).
+    #[inline(always)]
+    fn mul_stage_scalar(
+        da: &DecodedLanes,
+        db: &DecodedLanes,
+        psign: &mut [bool; LANES],
+        pexp: &mut [i32; LANES],
+        psig: &mut [u128; LANES],
     ) {
-        let mut da = DecodedLanes::zeroed();
-        let mut db = DecodedLanes::zeroed();
-        let mut dc = DecodedLanes::zeroed();
-        let mut special = decode_lanes(fmt, a, &mut da);
-        special |= decode_lanes(fmt, b, &mut db);
-        special |= decode_lanes(fmt, c, &mut dc);
-
-        // Multiply stage: pure SoA loops, exact in u128 (53+53 bits max).
-        let mut psign = [false; LANES];
-        let mut pexp = [0i32; LANES];
-        let mut psig = [0u128; LANES];
         for i in 0..LANES {
             psign[i] = da.sign[i] ^ db.sign[i];
             pexp[i] = da.exp[i] + db.exp[i];
             psig[i] = da.sig[i] as u128 * db.sig[i] as u128;
         }
+    }
 
-        // Add + round tail per lane; special lanes take the scalar spec.
+    /// `std::simd` portable-vector stages (nightly `portable_simd`,
+    /// gated by the `simd` cargo feature). Same dataflow as the scalar
+    /// stages, one `u64x8` register per operand column.
+    #[cfg(feature = "simd")]
+    mod vector {
+        use super::{DecodedLanes, Format, LANES};
+        use std::simd::prelude::*;
+
+        /// Vector decode: masked field extraction, hidden-bit OR via
+        /// mask-select, specials bitmask via a lane compare against the
+        /// all-ones exponent.
+        #[inline(always)]
+        pub(super) fn decode_lanes(
+            fmt: Format,
+            bits: &[u64; LANES],
+            out: &mut DecodedLanes,
+        ) -> u32 {
+            let ebias = fmt.bias() + fmt.sig_bits as i32 - 1;
+            let w = Simd::<u64, LANES>::from_array(*bits) & Simd::splat(fmt.storage_mask());
+            let biased = (w >> Simd::splat(fmt.sig_bits as u64 - 1)) & Simd::splat(fmt.emax_biased());
+            let is_norm = biased.simd_ne(Simd::splat(0));
+            let hidden = is_norm.select(Simd::splat(fmt.hidden_bit()), Simd::splat(0));
+            let special = biased.simd_eq(Simd::splat(fmt.emax_biased())).to_bitmask() as u32;
+            out.sign = (w & Simd::splat(fmt.sign_bit())).simd_ne(Simd::splat(0)).to_array();
+            out.sig = ((w & Simd::splat(fmt.frac_mask())) | hidden).to_array();
+            out.exp = (biased.cast::<i32>().simd_max(Simd::splat(1)) - Simd::splat(ebias))
+                .to_array();
+            special
+        }
+
+        /// Vector multiply stage. SP partial products (24+24 = 48 bits)
+        /// fit `u64x8` lanes; the DP 106-bit product is the documented
+        /// u128 peel and stays a scalar loop.
+        #[inline(always)]
+        pub(super) fn mul_stage(
+            fmt: Format,
+            da: &DecodedLanes,
+            db: &DecodedLanes,
+            psign: &mut [bool; LANES],
+            pexp: &mut [i32; LANES],
+            psig: &mut [u128; LANES],
+        ) {
+            *psign =
+                (Mask::<i64, LANES>::from_array(da.sign) ^ Mask::from_array(db.sign)).to_array();
+            *pexp = (Simd::<i32, LANES>::from_array(da.exp) + Simd::from_array(db.exp)).to_array();
+            if 2 * fmt.sig_bits <= 64 {
+                let p = Simd::<u64, LANES>::from_array(da.sig) * Simd::from_array(db.sig);
+                let pa = p.to_array();
+                for i in 0..LANES {
+                    psig[i] = pa[i] as u128;
+                }
+            } else {
+                for i in 0..LANES {
+                    psig[i] = da.sig[i] as u128 * db.sig[i] as u128;
+                }
+            }
+        }
+    }
+
+    /// Dispatching decode stage: vector when the `simd` feature is on,
+    /// scalar SoA otherwise.
+    #[inline(always)]
+    fn decode_lanes(fmt: Format, bits: &[u64; LANES], out: &mut DecodedLanes) -> u32 {
+        #[cfg(feature = "simd")]
+        {
+            vector::decode_lanes(fmt, bits, out)
+        }
+        #[cfg(not(feature = "simd"))]
+        {
+            decode_lanes_scalar(fmt, bits, out)
+        }
+    }
+
+    /// Dispatching multiply stage (see [`decode_lanes`]).
+    #[inline(always)]
+    fn mul_stage(
+        fmt: Format,
+        da: &DecodedLanes,
+        db: &DecodedLanes,
+        psign: &mut [bool; LANES],
+        pexp: &mut [i32; LANES],
+        psig: &mut [u128; LANES],
+    ) {
+        #[cfg(feature = "simd")]
+        {
+            vector::mul_stage(fmt, da, db, psign, pexp, psig)
+        }
+        #[cfg(not(feature = "simd"))]
+        {
+            let _ = fmt;
+            mul_stage_scalar(da, db, psign, pexp, psig)
+        }
+    }
+
+    /// Fused add + round tail: per lane, special lanes take the scalar
+    /// [`fma`] spec; the rest run the exact-sum RNE rounder. Shared by
+    /// the dispatching and scalar-reference block entries.
+    #[inline(always)]
+    #[allow(clippy::too_many_arguments)]
+    fn fma_tail(
+        fmt: Format,
+        a: &[u64; LANES],
+        b: &[u64; LANES],
+        c: &[u64; LANES],
+        dc: &DecodedLanes,
+        special: u32,
+        psign: &[bool; LANES],
+        pexp: &[i32; LANES],
+        psig: &[u128; LANES],
+        out: &mut [u64; LANES],
+    ) {
         for i in 0..LANES {
             out[i] = if special & (1 << i) != 0 {
                 fma(fmt, RoundMode::NearestEven, a[i], b[i], c[i]).bits
@@ -430,34 +542,31 @@ pub mod lanes {
         }
     }
 
-    /// One lane block of cascade FMACs: `round(a·b)` then
-    /// `round(p + c)`, both RNE — the CMA units' two-rounding Table-I
-    /// semantics. Lanes with Inf/NaN operands, or whose rounded product
-    /// overflows to Inf, peel to the scalar [`mul`]+[`add`] composition.
-    pub fn cma_block_rne(
+    /// Cascade add + round tail: round the product, then (unless the
+    /// rounded product overflowed to Inf — scalar peel) the second RNE
+    /// rounding of `p + c`.
+    #[inline(always)]
+    #[allow(clippy::too_many_arguments)]
+    fn cma_tail(
         fmt: Format,
         a: &[u64; LANES],
         b: &[u64; LANES],
         c: &[u64; LANES],
+        dc: &DecodedLanes,
+        special: u32,
+        psign: &[bool; LANES],
+        pexp: &[i32; LANES],
+        psig: &[u128; LANES],
         out: &mut [u64; LANES],
     ) {
-        let mut da = DecodedLanes::zeroed();
-        let mut db = DecodedLanes::zeroed();
-        let mut dc = DecodedLanes::zeroed();
-        let mut special = decode_lanes(fmt, a, &mut da);
-        special |= decode_lanes(fmt, b, &mut db);
-        special |= decode_lanes(fmt, c, &mut dc);
-
         for i in 0..LANES {
             out[i] = if special & (1 << i) != 0 {
                 let p = mul(fmt, RoundMode::NearestEven, a[i], b[i]);
                 add(fmt, RoundMode::NearestEven, p.bits, c[i]).bits
             } else {
-                let psign = da.sign[i] ^ db.sign[i];
-                let psig = da.sig[i] as u128 * db.sig[i] as u128;
                 let pbits = round_rne_bits(
                     fmt,
-                    Exact { sign: psign, exp: da.exp[i] + db.exp[i], sig: psig, sticky: false },
+                    Exact { sign: psign[i], exp: pexp[i], sig: psig[i], sticky: false },
                 );
                 let dp = decode(fmt, pbits);
                 if dp.class == Class::Infinity {
@@ -491,39 +600,43 @@ pub mod lanes {
         }
     }
 
-    /// One lane block of multiplies (`round(a·b)`, RNE) — the chip
-    /// sequencer's `Mul` burst path.
-    pub fn mul_block_rne(fmt: Format, a: &[u64; LANES], b: &[u64; LANES], out: &mut [u64; LANES]) {
-        let mut da = DecodedLanes::zeroed();
-        let mut db = DecodedLanes::zeroed();
-        let mut special = decode_lanes(fmt, a, &mut da);
-        special |= decode_lanes(fmt, b, &mut db);
+    /// Multiply round tail: one RNE rounding of the exact product.
+    #[inline(always)]
+    fn mul_tail(
+        fmt: Format,
+        a: &[u64; LANES],
+        b: &[u64; LANES],
+        special: u32,
+        psign: &[bool; LANES],
+        pexp: &[i32; LANES],
+        psig: &[u128; LANES],
+        out: &mut [u64; LANES],
+    ) {
         for i in 0..LANES {
             out[i] = if special & (1 << i) != 0 {
                 mul(fmt, RoundMode::NearestEven, a[i], b[i]).bits
             } else {
-                let psig = da.sig[i] as u128 * db.sig[i] as u128;
                 round_rne_bits(
                     fmt,
-                    Exact {
-                        sign: da.sign[i] ^ db.sign[i],
-                        exp: da.exp[i] + db.exp[i],
-                        sig: psig,
-                        sticky: false,
-                    },
+                    Exact { sign: psign[i], exp: pexp[i], sig: psig[i], sticky: false },
                 )
             };
             debug_assert_eq!(out[i], mul(fmt, RoundMode::NearestEven, a[i], b[i]).bits);
         }
     }
 
-    /// One lane block of adds (`round(a + c)`, RNE) — the chip
-    /// sequencer's `Add` burst path.
-    pub fn add_block_rne(fmt: Format, a: &[u64; LANES], c: &[u64; LANES], out: &mut [u64; LANES]) {
-        let mut da = DecodedLanes::zeroed();
-        let mut dc = DecodedLanes::zeroed();
-        let mut special = decode_lanes(fmt, a, &mut da);
-        special |= decode_lanes(fmt, c, &mut dc);
+    /// Add tail: one RNE rounding of the exact sum of two decoded
+    /// columns (no product stage).
+    #[inline(always)]
+    fn add_tail(
+        fmt: Format,
+        a: &[u64; LANES],
+        c: &[u64; LANES],
+        da: &DecodedLanes,
+        dc: &DecodedLanes,
+        special: u32,
+        out: &mut [u64; LANES],
+    ) {
         for i in 0..LANES {
             out[i] = if special & (1 << i) != 0 {
                 add(fmt, RoundMode::NearestEven, a[i], c[i]).bits
@@ -535,6 +648,160 @@ pub mod lanes {
                 )
             };
             debug_assert_eq!(out[i], add(fmt, RoundMode::NearestEven, a[i], c[i]).bits);
+        }
+    }
+
+    /// One lane block of fused FMAs (`round(a·b + c)`, RNE). Lanes with
+    /// any Inf/NaN operand peel to the scalar [`fma`] spec.
+    pub fn fma_block_rne(
+        fmt: Format,
+        a: &[u64; LANES],
+        b: &[u64; LANES],
+        c: &[u64; LANES],
+        out: &mut [u64; LANES],
+    ) {
+        let mut da = DecodedLanes::zeroed();
+        let mut db = DecodedLanes::zeroed();
+        let mut dc = DecodedLanes::zeroed();
+        let mut special = decode_lanes(fmt, a, &mut da);
+        special |= decode_lanes(fmt, b, &mut db);
+        special |= decode_lanes(fmt, c, &mut dc);
+        let mut psign = [false; LANES];
+        let mut pexp = [0i32; LANES];
+        let mut psig = [0u128; LANES];
+        mul_stage(fmt, &da, &db, &mut psign, &mut pexp, &mut psig);
+        fma_tail(fmt, a, b, c, &dc, special, &psign, &pexp, &psig, out);
+    }
+
+    /// One lane block of cascade FMACs: `round(a·b)` then
+    /// `round(p + c)`, both RNE — the CMA units' two-rounding Table-I
+    /// semantics. Lanes with Inf/NaN operands, or whose rounded product
+    /// overflows to Inf, peel to the scalar [`mul`]+[`add`] composition.
+    pub fn cma_block_rne(
+        fmt: Format,
+        a: &[u64; LANES],
+        b: &[u64; LANES],
+        c: &[u64; LANES],
+        out: &mut [u64; LANES],
+    ) {
+        let mut da = DecodedLanes::zeroed();
+        let mut db = DecodedLanes::zeroed();
+        let mut dc = DecodedLanes::zeroed();
+        let mut special = decode_lanes(fmt, a, &mut da);
+        special |= decode_lanes(fmt, b, &mut db);
+        special |= decode_lanes(fmt, c, &mut dc);
+        let mut psign = [false; LANES];
+        let mut pexp = [0i32; LANES];
+        let mut psig = [0u128; LANES];
+        mul_stage(fmt, &da, &db, &mut psign, &mut pexp, &mut psig);
+        cma_tail(fmt, a, b, c, &dc, special, &psign, &pexp, &psig, out);
+    }
+
+    /// One lane block of multiplies (`round(a·b)`, RNE) — the chip
+    /// sequencer's `Mul` burst path.
+    pub fn mul_block_rne(fmt: Format, a: &[u64; LANES], b: &[u64; LANES], out: &mut [u64; LANES]) {
+        let mut da = DecodedLanes::zeroed();
+        let mut db = DecodedLanes::zeroed();
+        let mut special = decode_lanes(fmt, a, &mut da);
+        special |= decode_lanes(fmt, b, &mut db);
+        let mut psign = [false; LANES];
+        let mut pexp = [0i32; LANES];
+        let mut psig = [0u128; LANES];
+        mul_stage(fmt, &da, &db, &mut psign, &mut pexp, &mut psig);
+        mul_tail(fmt, a, b, special, &psign, &pexp, &psig, out);
+    }
+
+    /// One lane block of adds (`round(a + c)`, RNE) — the chip
+    /// sequencer's `Add` burst path.
+    pub fn add_block_rne(fmt: Format, a: &[u64; LANES], c: &[u64; LANES], out: &mut [u64; LANES]) {
+        let mut da = DecodedLanes::zeroed();
+        let mut dc = DecodedLanes::zeroed();
+        let mut special = decode_lanes(fmt, a, &mut da);
+        special |= decode_lanes(fmt, c, &mut dc);
+        add_tail(fmt, a, c, &da, &dc, special, out);
+    }
+
+    /// Scalar-stage lane blocks, always compiled regardless of the
+    /// `simd` feature: the SoA loops the vector stages are diffed
+    /// against. Under `--features simd` these are a *distinct* code path
+    /// from the dispatching blocks above (which run the `std::simd`
+    /// stages); without the feature the two are identical. The
+    /// differential fuzzer and the `scalar_lane` bench rows call these.
+    pub mod scalar_ref {
+        use super::*;
+
+        /// Scalar-stage FMA block (see [`super::fma_block_rne`]).
+        pub fn fma_block_rne(
+            fmt: Format,
+            a: &[u64; LANES],
+            b: &[u64; LANES],
+            c: &[u64; LANES],
+            out: &mut [u64; LANES],
+        ) {
+            let mut da = DecodedLanes::zeroed();
+            let mut db = DecodedLanes::zeroed();
+            let mut dc = DecodedLanes::zeroed();
+            let mut special = decode_lanes_scalar(fmt, a, &mut da);
+            special |= decode_lanes_scalar(fmt, b, &mut db);
+            special |= decode_lanes_scalar(fmt, c, &mut dc);
+            let mut psign = [false; LANES];
+            let mut pexp = [0i32; LANES];
+            let mut psig = [0u128; LANES];
+            mul_stage_scalar(&da, &db, &mut psign, &mut pexp, &mut psig);
+            fma_tail(fmt, a, b, c, &dc, special, &psign, &pexp, &psig, out);
+        }
+
+        /// Scalar-stage CMA block (see [`super::cma_block_rne`]).
+        pub fn cma_block_rne(
+            fmt: Format,
+            a: &[u64; LANES],
+            b: &[u64; LANES],
+            c: &[u64; LANES],
+            out: &mut [u64; LANES],
+        ) {
+            let mut da = DecodedLanes::zeroed();
+            let mut db = DecodedLanes::zeroed();
+            let mut dc = DecodedLanes::zeroed();
+            let mut special = decode_lanes_scalar(fmt, a, &mut da);
+            special |= decode_lanes_scalar(fmt, b, &mut db);
+            special |= decode_lanes_scalar(fmt, c, &mut dc);
+            let mut psign = [false; LANES];
+            let mut pexp = [0i32; LANES];
+            let mut psig = [0u128; LANES];
+            mul_stage_scalar(&da, &db, &mut psign, &mut pexp, &mut psig);
+            cma_tail(fmt, a, b, c, &dc, special, &psign, &pexp, &psig, out);
+        }
+
+        /// Scalar-stage Mul block (see [`super::mul_block_rne`]).
+        pub fn mul_block_rne(
+            fmt: Format,
+            a: &[u64; LANES],
+            b: &[u64; LANES],
+            out: &mut [u64; LANES],
+        ) {
+            let mut da = DecodedLanes::zeroed();
+            let mut db = DecodedLanes::zeroed();
+            let mut special = decode_lanes_scalar(fmt, a, &mut da);
+            special |= decode_lanes_scalar(fmt, b, &mut db);
+            let mut psign = [false; LANES];
+            let mut pexp = [0i32; LANES];
+            let mut psig = [0u128; LANES];
+            mul_stage_scalar(&da, &db, &mut psign, &mut pexp, &mut psig);
+            mul_tail(fmt, a, b, special, &psign, &pexp, &psig, out);
+        }
+
+        /// Scalar-stage Add block (see [`super::add_block_rne`]).
+        pub fn add_block_rne(
+            fmt: Format,
+            a: &[u64; LANES],
+            c: &[u64; LANES],
+            out: &mut [u64; LANES],
+        ) {
+            let mut da = DecodedLanes::zeroed();
+            let mut dc = DecodedLanes::zeroed();
+            let mut special = decode_lanes_scalar(fmt, a, &mut da);
+            special |= decode_lanes_scalar(fmt, c, &mut dc);
+            add_tail(fmt, a, c, &da, &dc, special, out);
         }
     }
 }

@@ -1,3 +1,8 @@
+// std::simd is nightly-only; the `simd` cargo feature opts into it (see
+// the feature's doc block in Cargo.toml — on stable this line is the
+// intended E0554 tripwire).
+#![cfg_attr(feature = "simd", feature(portable_simd))]
+
 //! # fpmax — a reproduction of the FPMax FPU test chip as a software system
 //!
 //! FPMax (Pu, Galal, Yang, Shacham, Horowitz; 2016) is a 28nm UTBB FDSOI

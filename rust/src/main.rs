@@ -13,6 +13,9 @@
 //! fpmax verify [--unit sp_fma] [--ops 100000] [--fidelity gate|word|word-simd]
 //!              [--bb static|adaptive] [--window 4096] [--bb-json PATH]
 //!              [--max-trace-overhead X]
+//! fpmax fuzz   [--ops 200000] [--seed 7] [--precision sp|dp|both]
+//!              [--stream uniform|structured|both]
+//!              [--max-counterexamples 8] [--out PATH]
 //! fpmax selftest [--ops 65536] [--artifacts DIR] # chip + PJRT cross-check
 //! fpmax serve  [--unit sp_fma] [--ops 1000000] [--producers 4]
 //!              [--fidelity gate|word|word-simd] [--bb static|adaptive]
@@ -24,6 +27,14 @@
 //!              [--ring] [--workers BUDGET] [--spill-pressure OPS]
 //!              [--json PATH] [--max-p99-ratio X] [--min-sustained-ratio R]
 //! ```
+//!
+//! `fuzz` is the differential conformance harness (`arch::fuzz`): every
+//! seeded operand triple runs four ways — gate tier vs scalar word vs
+//! the dispatching word-simd lane kernels vs the host CPU's own
+//! IEEE-754 hardware (five ways with the scalar lane reference under
+//! `--features simd`) — and any disagreement is bit-flip minimized and
+//! written to `--out` in `edge_vectors.rs` corpus format. Exits
+//! non-zero on any mismatch (the CI fuzz smoke gates on this).
 //!
 //! `verify --fidelity word` runs the batched word-level tier with a
 //! sampled gate-level cross-check — the fast path the DSE sweeps use;
@@ -258,6 +269,9 @@ fn main() -> fpmax::Result<()> {
                 windowed_bb_report(&cfg, &unit, fidelity, &triples, workers, &args)?;
             }
         }
+        Some("fuzz") => {
+            fuzz_cmd(&args)?;
+        }
         Some("selftest") => {
             selftest(&args)?;
         }
@@ -269,12 +283,102 @@ fn main() -> fpmax::Result<()> {
                 eprintln!("unknown subcommand {cmd:?}\n");
             }
             eprintln!(
-                "usage: fpmax <table1|table2|fig2c|fig3|fig4|calib|sweep|verify|selftest|serve> [options]"
+                "usage: fpmax <table1|table2|fig2c|fig3|fig4|calib|sweep|verify|fuzz|selftest|serve> [options]"
             );
             std::process::exit(2);
         }
     }
     args.reject_unknown()?;
+    Ok(())
+}
+
+/// The `fpmax fuzz` subcommand: differential conformance fuzzing of the
+/// full tier stack (gate / scalar word / word-simd / host hardware) on
+/// seeded uniform-bits and structured operand streams, all four op
+/// kinds. Minimized counterexamples are always written to `--out`
+/// (header-only when clean, so the CI artifact upload is
+/// unconditional); any mismatch exits non-zero.
+fn fuzz_cmd(args: &Args) -> fpmax::Result<()> {
+    use fpmax::arch::fuzz::{run_differential, standard_engines, FuzzConfig, OpKind, StreamKind};
+
+    let ops = args.get_parse("ops", 200_000usize)?;
+    let seed = args.get_parse("seed", 7u64)?;
+    let max_ce = args.get_parse("max-counterexamples", 8usize)?;
+    let out_path = args.get("out").map(|s| s.to_string());
+    anyhow::ensure!(ops >= 1, "--ops must be at least 1");
+    let precisions: &[Precision] = match args.get("precision").unwrap_or("both") {
+        "sp" => &[Precision::Single],
+        "dp" => &[Precision::Double],
+        "both" => &[Precision::Single, Precision::Double],
+        other => anyhow::bail!("--precision must be sp, dp or both, got {other}"),
+    };
+    let streams: &[StreamKind] = match args.get("stream").unwrap_or("both") {
+        "uniform" => &[StreamKind::UniformBits],
+        "structured" => &[StreamKind::Structured],
+        "both" => &[StreamKind::UniformBits, StreamKind::Structured],
+        other => anyhow::bail!("--stream must be uniform, structured or both, got {other}"),
+    };
+
+    let mut artifact = format!(
+        "# fpmax fuzz: differential counterexamples (edge_vectors.rs format)\n\
+         # ops={ops} seed={seed} simd_feature={}\n",
+        cfg!(feature = "simd")
+    );
+    let mut total_executed = 0usize;
+    let mut total_ce = 0usize;
+    for &precision in precisions {
+        let (fma_cfg, cma_cfg) = match precision {
+            Precision::Single => (FpuConfig::sp_fma(), FpuConfig::sp_cma()),
+            Precision::Double => (FpuConfig::dp_fma(), FpuConfig::dp_cma()),
+        };
+        let fma_unit = FpuUnit::generate(&fma_cfg);
+        let cma_unit = FpuUnit::generate(&cma_cfg);
+        let engines = standard_engines(&fma_unit, &cma_unit);
+        let fmt = fma_unit.format;
+        for kind in OpKind::ALL {
+            for &stream in streams {
+                // Split the op budget across the streams so `--ops` is
+                // the total per precision × kind (the CI smoke contract).
+                let share = (ops / streams.len()).max(1);
+                let mut fcfg = FuzzConfig::new(
+                    share,
+                    seed ^ ((fmt.sig_bits as u64) << 8),
+                    stream,
+                );
+                fcfg.max_counterexamples = max_ce;
+                let report = run_differential(fmt, kind, &engines, &fcfg);
+                total_executed += report.executed;
+                total_ce += report.counterexamples.len();
+                println!(
+                    "{} {:<4} {:<11} {:>8} ops  {} engines  {} counterexample(s)",
+                    precision.name(),
+                    kind.name(),
+                    format!("{stream:?}"),
+                    report.executed,
+                    engines.len(),
+                    report.counterexamples.len(),
+                );
+                if !report.clean() {
+                    artifact.push_str(&report.render());
+                }
+            }
+        }
+    }
+    if total_ce == 0 {
+        artifact.push_str("# none\n");
+    }
+    if let Some(path) = out_path {
+        std::fs::write(&path, &artifact)?;
+        println!("wrote {path}");
+    }
+    println!(
+        "fuzz total: {total_executed} ops executed, {total_ce} counterexample(s), simd_feature={}",
+        cfg!(feature = "simd")
+    );
+    anyhow::ensure!(
+        total_ce == 0,
+        "differential fuzzing found {total_ce} counterexample(s):\n{artifact}"
+    );
     Ok(())
 }
 

@@ -46,9 +46,9 @@ use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
 use crate::arch::engine::{
-    chunk_from_per_op, window_ring, ActivityAccumulator, ActivityTrace, ActivityWindow,
-    BatchExecutor, Datapath, Fidelity, SendPtr, UnitDatapath, WindowProducer, CALIBRATION_OPS,
-    RECAL_RATIO, SERIAL_CUTOFF,
+    calibration_key, chunk_from_per_op, window_ring, ActivityAccumulator, ActivityTrace,
+    ActivityWindow, BatchExecutor, Datapath, Fidelity, SendPtr, UnitDatapath, WindowProducer,
+    CALIBRATION_OPS, RECAL_RATIO, SERIAL_CUTOFF,
 };
 use crate::arch::generator::{FpuConfig, FpuUnit};
 use crate::bb::{run_energy_trace, window_bias_schedule, BbPolicy, BbRunEnergy, StreamedBb,
@@ -530,7 +530,10 @@ struct Dispatcher {
     producer: WindowProducer,
     master: ActivityTrace,
     /// Saved (chunk_hint, calibrated_ops) per tier — one pool, per-tier
-    /// calibration (per-op costs differ ~10× between tiers).
+    /// calibration (per-op costs differ ~10× between tiers). Seeded back
+    /// under the tier's [`calibration_key`], so a hint that somehow
+    /// crossed tiers — or came from the other lane-kernel build — is
+    /// dropped by the staleness check instead of trusted.
     tier_cal: [(usize, usize); 3],
     cur_tier: Option<usize>,
     // Reused scratch (allocation-free once grown to the batch shape).
@@ -740,13 +743,15 @@ impl Dispatcher {
                     self.tier_cal[prev] = (self.exec.chunk_hint(), self.exec.calibrated_ops());
                 }
                 let (chunk, cal) = self.tier_cal[ti];
-                self.exec.seed_calibration(chunk, cal);
+                self.exec.seed_calibration(chunk, cal, calibration_key(tier));
                 self.cur_tier = Some(ti);
             }
-            // The satellite staleness rule, applied through the public
-            // API: a hint calibrated on a much larger batch is dropped.
+            // The staleness rules, applied through the public API: a
+            // hint calibrated on a much larger batch, or under another
+            // tier/lane-kernel key, is dropped.
             if self.exec.calibrated_ops() != 0
-                && n.saturating_mul(RECAL_RATIO) < self.exec.calibrated_ops()
+                && (n.saturating_mul(RECAL_RATIO) < self.exec.calibrated_ops()
+                    || self.exec.calibration_key() != calibration_key(tier))
             {
                 self.exec.recalibrate();
             }
@@ -809,7 +814,11 @@ impl Dispatcher {
                 start_window += 1;
             }
             let per_op = t0.elapsed().as_secs_f64() / done_ops.max(1) as f64;
-            self.exec.seed_calibration(chunk_from_per_op(per_op), n);
+            self.exec.seed_calibration(
+                chunk_from_per_op(per_op),
+                n,
+                calibration_key(dp.fidelity()),
+            );
         }
         if start_window >= n_windows {
             return;
