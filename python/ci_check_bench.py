@@ -19,11 +19,20 @@ fails the job with a readable delta table when any budget is blown:
   sustained ``>= 0.8x`` the best single shard, fleet ``p99 <= 10x p50``,
   zero misrouted submissions under the static policy, zero cross-check
   mismatches, and every shard's streamed BB bit-identical to its own
-  post-hoc pass.
+  post-hoc pass;
+* chaos (``BENCH_chaos.ci.json``, from ``fpmax chaos``): the fault
+  drill's hard gates, re-validated from the raw ledger rather than
+  trusting the artifact's own ``gates`` verdicts — zero hung tickets,
+  zero lost ops (completed + errored + hung == submitted at both the
+  submission and the op ledger), zero cross-check mismatches on
+  surviving work, every planned fault fired, fleet accounting conserved
+  across shard incarnations, and at least one respawn per dispatcher
+  kill. Chaos artifacts carry no ``thresholds`` object: the gates are
+  absolute.
 
 Usage::
 
-    python3 python/ci_check_bench.py BENCH_engine.ci.json BENCH_serve.ci.json
+    python3 python/ci_check_bench.py BENCH_engine.ci.json BENCH_serve.ci.json BENCH_chaos.ci.json
 
 Exit status 0 iff every check passes. Artifacts with ``"measured":
 false`` fail immediately — the gate only makes sense on freshly measured
@@ -143,7 +152,42 @@ def serve_checks(doc: dict) -> list[Check]:
     return out
 
 
-CHECKERS = {"engine": engine_checks, "serve": serve_checks}
+def chaos_checks(doc: dict) -> list[Check]:
+    p = doc["producer"]
+    faults = doc["faults"]
+    fleet = doc["fleet"]
+    gates = doc["gates"]
+    out = [
+        # Re-derive every gate from the raw ledger; the artifact's own
+        # booleans are checked last so a disagreement shows up as two
+        # failures, not a silently-trusted verdict.
+        Check("producer", "hung_subs", p["hung_subs"], "==", 0),
+        Check("producer", "hung_ops", p["hung_ops"], "==", 0),
+        Check("producer", "sub_ledger_balance",
+              p["completed_subs"] + p["errored_subs"] + p["hung_subs"]
+              - p["submitted_subs"], "==", 0),
+        Check("producer", "op_ledger_balance",
+              p["completed_ops"] + p["errored_ops"] + p["hung_ops"]
+              - p["submitted_ops"], "==", 0),
+        Check("fleet", "crosscheck_mismatches",
+              fleet["crosscheck_mismatches"], "==", 0),
+        Check("faults", "coverage",
+              faults["fired"] - faults["planned"], "==", 0),
+        Check("fleet", "respawns_vs_kills",
+              fleet["respawns"], ">=", faults["kills"]),
+        Check("gates", "conservation_ok",
+              1.0 if gates["conservation_ok"] else 0.0, "is-true", 1.0),
+        Check("gates", "all",
+              1.0 if gates["all"] else 0.0, "is-true", 1.0),
+    ]
+    return out
+
+
+CHECKERS = {"engine": engine_checks, "serve": serve_checks, "chaos": chaos_checks}
+
+# Chaos gates are absolute (zero hung, zero lost, ...) — the artifact
+# embeds no tunable thresholds object.
+NEEDS_THRESHOLDS = {"engine", "serve"}
 
 
 def check_file(path: str) -> tuple[list[Check], list[str]]:
@@ -161,7 +205,7 @@ def check_file(path: str) -> tuple[list[Check], list[str]]:
     if checker is None:
         errors.append(f"{path}: unknown bench kind {bench!r}")
         return [], errors
-    if "thresholds" not in doc:
+    if bench in NEEDS_THRESHOLDS and "thresholds" not in doc:
         errors.append(f"{path}: no embedded thresholds object")
         return [], errors
     return checker(doc), errors

@@ -171,3 +171,102 @@ def test_engine_legacy_artifact_without_simd_feature_key(tmp_path):
     checks, errors = run_doc(tmp_path, doc)
     assert not errors
     assert all(c.name != "simd_vector_vs_scalar_lane" for c in checks)
+
+
+def chaos_doc():
+    # Mirrors ChaosReport::render_json: a 4-shard kill-all drill where
+    # every gate holds.
+    return {
+        "bench": "chaos",
+        "measured": True,
+        "seed": 42,
+        "tier": "word-simd",
+        "shards": 4,
+        "wall_secs": 1.5,
+        "faults": {
+            "planned": 4,
+            "fired": 4,
+            "kills": 4,
+            "worker_panics": 0,
+            "ring_floods": 0,
+            "latency_injections": 0,
+            "nan_storms": 0,
+        },
+        "producer": {
+            "submitted_subs": 100,
+            "completed_subs": 98,
+            "errored_subs": 2,
+            "hung_subs": 0,
+            "submitted_ops": 100000,
+            "completed_ops": 98000,
+            "errored_ops": 2000,
+            "hung_ops": 0,
+            "retries": 7,
+            "checksums": ["cbf29ce484222325"],
+        },
+        "fleet": {
+            "ops": 98000,
+            "respawns": 4,
+            "rerouted_on_failure": 3,
+            "crosscheck_sampled": 512,
+            "crosscheck_mismatches": 0,
+            "pj_per_op": 11.2,
+        },
+        "gates": {
+            "zero_hung": True,
+            "zero_lost": True,
+            "crosscheck_clean": True,
+            "coverage_ok": True,
+            "conservation_ok": True,
+            "all": True,
+        },
+    }
+
+
+def test_chaos_all_gates_pass(tmp_path):
+    # Chaos artifacts carry no thresholds object — the gates are
+    # absolute, and its absence must not be an error.
+    checks, errors = run_doc(tmp_path, chaos_doc())
+    assert not errors
+    assert len(checks) == 9
+    assert all(c.ok for c in checks)
+
+
+def test_chaos_ledger_violations_fail(tmp_path):
+    # The checker recomputes the gates from the raw ledger, so a doc
+    # whose own "gates" booleans still claim success cannot pass.
+    doc = chaos_doc()
+    doc["producer"]["hung_subs"] = 1
+    doc["producer"]["hung_ops"] = 1000
+    doc["producer"]["completed_ops"] = 90000  # loses 7000 ops
+    doc["fleet"]["respawns"] = 3  # one shard stayed dead
+    doc["faults"]["fired"] = 3  # one fault never fired
+    checks, errors = run_doc(tmp_path, doc)
+    assert not errors
+    failed = {(c.unit, c.name) for c in checks if not c.ok}
+    assert failed == {
+        ("producer", "hung_subs"),
+        ("producer", "hung_ops"),
+        ("producer", "sub_ledger_balance"),
+        ("producer", "op_ledger_balance"),
+        ("faults", "coverage"),
+        ("fleet", "respawns_vs_kills"),
+    }
+
+
+def test_chaos_conservation_break_fails_even_with_clean_ledger(tmp_path):
+    doc = chaos_doc()
+    doc["gates"]["conservation_ok"] = False
+    doc["gates"]["all"] = False
+    checks, errors = run_doc(tmp_path, doc)
+    assert not errors
+    failed = {c.name for c in checks if not c.ok}
+    assert failed == {"conservation_ok", "all"}
+
+
+def test_chaos_unmeasured_is_an_error(tmp_path):
+    doc = chaos_doc()
+    doc["measured"] = False
+    checks, errors = run_doc(tmp_path, doc)
+    assert not checks
+    assert errors and "measured" in errors[0]

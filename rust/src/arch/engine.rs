@@ -235,6 +235,24 @@ impl std::fmt::Display for BatchLenError {
 
 impl std::error::Error for BatchLenError {}
 
+/// A parallel-region closure panicked on one or more pool workers (see
+/// [`BatchExecutor::run_region_checked`]). The pool itself survives —
+/// each worker catches its epoch's unwind — so this is a per-call fault,
+/// not a poisoned executor.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct WorkerPanicked {
+    /// How many workers' closure invocations panicked in this region.
+    pub workers: usize,
+}
+
+impl std::fmt::Display for WorkerPanicked {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "parallel region panicked on {} engine worker(s)", self.workers)
+    }
+}
+
+impl std::error::Error for WorkerPanicked {}
+
 #[inline]
 fn check_len(triples: &[OperandTriple], out: &[u64]) -> Result<(), BatchLenError> {
     if triples.len() == out.len() {
@@ -1476,7 +1494,15 @@ impl WorkerPool {
     /// bodies coordinate actual work division through an atomic cursor
     /// inside the context, so threads that find no work return
     /// immediately.
-    fn broadcast(&self, job: Job) {
+    ///
+    /// Returns the number of workers whose job body panicked this epoch.
+    /// Worker threads themselves survive a panicking body (each epoch is
+    /// wrapped in `catch_unwind` inside [`pool_worker_loop`]), so the
+    /// pool stays usable afterwards; the *caller* decides whether a
+    /// non-zero count is an invariant violation (the chunked/windowed
+    /// batch paths, whose partial output would be silently wrong) or a
+    /// containable fault (the serve layer's checked regions).
+    fn broadcast(&self, job: Job) -> usize {
         let _turn = self.submit.lock().expect("engine pool poisoned");
         let workers = self.handles.len();
         {
@@ -1494,7 +1520,7 @@ impl WorkerPool {
         st.job = None;
         let panics = st.panics;
         drop(st);
-        assert_eq!(panics, 0, "{panics} engine worker(s) panicked");
+        panics
     }
 }
 
@@ -1815,10 +1841,37 @@ impl BatchExecutor {
         }
         let ticket = AtomicUsize::new(0);
         let ctx = RegionCtx { f: &f, ticket: &ticket };
-        self.pool().broadcast(Job {
+        let panics = self.pool().broadcast(Job {
             run: region_worker::<F>,
             ctx: &ctx as *const RegionCtx<'_, F> as *const (),
         });
+        assert_eq!(panics, 0, "invariant: run_region closure panicked on {panics} worker(s)");
+    }
+
+    /// [`BatchExecutor::run_region`] with panic containment: a region
+    /// closure that panics on any worker (or, with one worker, on the
+    /// calling thread) yields `Err(WorkerPanicked)` instead of unwinding
+    /// the caller or aborting the process. The persistent pool survives
+    /// — parked threads catch each epoch's unwind — so the executor
+    /// remains fully usable for subsequent runs. This is the serve
+    /// dispatcher's entry point: a lane-kernel panic must error one
+    /// batch's tickets, not take down the shard's process.
+    pub fn run_region_checked<F: Fn(usize) + Sync>(&self, f: F) -> Result<(), WorkerPanicked> {
+        if self.workers <= 1 {
+            return std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(0)))
+                .map_err(|_| WorkerPanicked { workers: 1 });
+        }
+        let ticket = AtomicUsize::new(0);
+        let ctx = RegionCtx { f: &f, ticket: &ticket };
+        let panics = self.pool().broadcast(Job {
+            run: region_worker::<F>,
+            ctx: &ctx as *const RegionCtx<'_, F> as *const (),
+        });
+        if panics == 0 {
+            Ok(())
+        } else {
+            Err(WorkerPanicked { workers: panics })
+        }
     }
 
     /// Parallel region: workers pull `chunk`-sized ranges off an atomic
@@ -1858,10 +1911,14 @@ impl BatchExecutor {
             track,
             merged: &merged,
         };
-        self.pool().broadcast(Job {
+        let panics = self.pool().broadcast(Job {
             run: chunk_worker::<D>,
             ctx: &ctx as *const ChunkCtx<'_, D> as *const (),
         });
+        // A panic mid-chunk leaves `out` partially written with no record
+        // of which ranges completed — that is unrecoverable corruption,
+        // not a containable fault.
+        assert_eq!(panics, 0, "invariant: datapath kernel panicked mid-chunked-batch on {panics} worker(s)");
         if let Some(acc) = acc {
             acc.merge(&merged.into_inner().expect("engine worker poisoned"));
         }
@@ -1999,10 +2056,16 @@ impl BatchExecutor {
                 chunk_windows,
                 cursor: &cursor,
             };
-            self.pool().broadcast(Job {
+            let panics = self.pool().broadcast(Job {
                 run: window_worker::<D>,
                 ctx: &ctx as *const WindowCtx<'_, D> as *const (),
             });
+            // Same invariant as the chunked path: a partial windowed run
+            // would publish wrong per-window activity sums.
+            assert_eq!(
+                panics, 0,
+                "invariant: datapath kernel panicked mid-windowed-batch on {panics} worker(s)"
+            );
         }
         Ok(ActivityTrace::from_windows(window as u64, n as u64, accs))
     }
@@ -2695,6 +2758,33 @@ mod tests {
             let cfg = FpuConfig::sp_fma();
             let word = WordUnit::generate(&cfg);
             let triples = sample(&cfg, OperandMix::Finite, 700, 2);
+            let got = exec.run(&word, &triples);
+            assert_eq!(got[0], word.fmac_one(triples[0].a, triples[0].b, triples[0].c));
+        }
+    }
+
+    #[test]
+    fn run_region_checked_contains_panics_and_pool_survives() {
+        for workers in [1usize, 4] {
+            let exec = BatchExecutor::new(workers);
+            // A clean region reports Ok.
+            assert_eq!(exec.run_region_checked(|_| {}), Ok(()));
+            // A panicking region is contained: the call errors instead
+            // of unwinding, and reports how many workers blew up.
+            let err = exec
+                .run_region_checked(|w| {
+                    if w == 0 {
+                        panic!("injected lane-kernel fault");
+                    }
+                })
+                .unwrap_err();
+            assert_eq!(err.workers, 1);
+            // The same parked pool keeps serving both checked regions
+            // and ordinary batch runs afterwards.
+            assert_eq!(exec.run_region_checked(|_| {}), Ok(()));
+            let cfg = FpuConfig::sp_fma();
+            let word = WordUnit::generate(&cfg);
+            let triples = sample(&cfg, OperandMix::Finite, 700, 9);
             let got = exec.run(&word, &triples);
             assert_eq!(got[0], word.fmac_one(triples[0].a, triples[0].b, triples[0].c));
         }

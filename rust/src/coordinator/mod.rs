@@ -18,13 +18,17 @@
 //! (Table-I semantics), and the PJRT artifact is checked against the
 //! fused golden softfloat ([`GoldenFma`]).
 
-use std::time::Instant;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::time::{Duration, Instant};
 
 use crate::arch::engine::{ActivityTrace, BatchExecutor, Fidelity, GoldenFma, UnitDatapath};
 use crate::arch::fp::{decode, Class, Precision};
 use crate::arch::generator::{FpuKind, FpuUnit};
-use crate::runtime::router::{FleetReport, RouterConfig, ServeRouter, ShardSpec, WorkloadClass};
-use crate::runtime::serve::{ServeConfig, ServeLoad, ServeQueue, ServeReport, Ticket};
+use crate::runtime::chaos::{fnv1a_fold, ChaosReport, FaultKind, FaultPlan, ProducerStats, FNV_OFFSET};
+use crate::runtime::router::{
+    FleetReport, RetryPolicy, RouterConfig, ServeRouter, ShardHealth, ShardSpec, WorkloadClass,
+};
+use crate::runtime::serve::{ServeConfig, ServeError, ServeLoad, ServeQueue, ServeReport, Ticket};
 use crate::runtime::FmacArtifact;
 use crate::workloads::throughput::{OperandBatch, OperandMix, OperandStream, OperandTriple};
 
@@ -432,6 +436,255 @@ pub fn serve_routed(
         Ok(()) => finished,
         Err(e) => Err(e),
     }
+}
+
+/// Outcome of a chaos run: the gated report plus the full fleet detail
+/// behind it.
+#[derive(Debug, Clone)]
+pub struct ChaosOutcome {
+    pub report: ChaosReport,
+    pub fleet: FleetReport,
+}
+
+/// Drive the routed fleet under a seeded [`FaultPlan`]: producers per
+/// workload class submit through the resilient path
+/// ([`ServeRouter::submit_with_retry`], deadline-bounded waits, capped
+/// exponential backoff on retryable faults) while an injector thread
+/// arms each scheduled fault when the fleet-wide submitted-op counter
+/// crosses its trigger point. The supervisor respawns killed shards
+/// mid-run; the returned [`ChaosReport`] holds the producer-side
+/// submission ledger and the hard gates.
+///
+/// Determinism note: the *plan* is fully determined by its seed, and so
+/// are the operand/size streams (same seeds as [`serve_routed`]). With
+/// an empty plan the run is a plain routed run — same streams, same
+/// affinity placement, same result bits (witnessed by the per-producer
+/// checksums in the report). `load.duty` is ignored: chaos producers
+/// weave no idle phases — duty-cycle shaping is [`serve_routed`]'s
+/// experiment, failure-handling is this one's.
+pub fn serve_chaos(
+    specs: &[ShardSpec],
+    rcfg: RouterConfig,
+    tier: Fidelity,
+    load: RoutedLoad,
+    plan: &FaultPlan,
+    deadline: Duration,
+    retry: RetryPolicy,
+) -> crate::Result<ChaosOutcome> {
+    anyhow::ensure!(load.producers_per_class >= 1, "need at least one producer per class");
+    anyhow::ensure!(load.sub_ops >= 1, "submissions need at least one op");
+    for f in &plan.faults {
+        let shard_ok = match f.kind {
+            FaultKind::KillDispatcher { shard }
+            | FaultKind::WorkerPanic { shard }
+            | FaultKind::RingFlood { shard, .. }
+            | FaultKind::Latency { shard, .. } => shard < specs.len(),
+            FaultKind::NanStorm { class_idx, .. } => class_idx < WorkloadClass::ALL.len(),
+        };
+        anyhow::ensure!(shard_ok, "fault {:?} targets outside the fleet", f.kind);
+    }
+    let t0 = Instant::now();
+    let router = ServeRouter::start(specs, rcfg)?;
+    let classes = WorkloadClass::ALL;
+    let producers = classes.len() * load.producers_per_class;
+    let submitted_ops = AtomicU64::new(0);
+    let done = AtomicBool::new(false);
+    let (fired, stats, produce_err) = std::thread::scope(|s| {
+        let injector = s.spawn(|| {
+            let mut fired = Vec::new();
+            for f in &plan.faults {
+                while submitted_ops.load(Ordering::Relaxed) < f.after_ops
+                    && !done.load(Ordering::Relaxed)
+                {
+                    std::thread::sleep(Duration::from_micros(200));
+                }
+                // A fault aimed at a shard that is itself mid-respawn
+                // can bounce off a closed queue — retry the injection
+                // briefly rather than dropping plan coverage.
+                let armed = Instant::now();
+                loop {
+                    if fire_fault(&router, tier, f.kind, deadline).is_ok() {
+                        fired.push(f.kind);
+                        break;
+                    }
+                    if armed.elapsed() > Duration::from_secs(5) {
+                        break;
+                    }
+                    std::thread::sleep(Duration::from_millis(5));
+                }
+            }
+            fired
+        });
+        let mut joins = Vec::new();
+        for p in 0..producers {
+            let class = classes[p % classes.len()];
+            let share =
+                load.total_ops / producers + usize::from(p < load.total_ops % producers);
+            let router = &router;
+            let submitted_ops = &submitted_ops;
+            joins.push(s.spawn(move || {
+                chaos_producer(
+                    router,
+                    class,
+                    tier,
+                    share,
+                    load.sub_ops,
+                    producer_seeds(load.seed, p),
+                    deadline,
+                    retry,
+                    submitted_ops,
+                )
+            }));
+        }
+        let mut stats = ProducerStats::default();
+        let mut err: Option<anyhow::Error> = None;
+        for j in joins {
+            match j.join() {
+                Ok(Ok(p)) => stats.absorb(&p),
+                Ok(Err(e)) => {
+                    err.get_or_insert(e);
+                }
+                Err(_) => {
+                    err.get_or_insert(anyhow::anyhow!("chaos producer panicked"));
+                }
+            }
+        }
+        done.store(true, Ordering::Relaxed);
+        let fired = injector.join().unwrap_or_default();
+        (fired, stats, err)
+    });
+    // Let in-flight recoveries land before teardown: a kill fired near
+    // the end of the stream may still be mid-respawn, and finish() on a
+    // half-booted shard is an error, not an accounting merge.
+    let recovery_grace = Instant::now() + Duration::from_secs(30);
+    while Instant::now() < recovery_grace {
+        let healthy = (0..router.shard_count())
+            .all(|i| router.shard_health(i) == ShardHealth::Healthy);
+        if healthy {
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(1));
+    }
+    let finished = router.finish();
+    if let Some(e) = produce_err {
+        return Err(e);
+    }
+    let fleet = finished?;
+    let report = ChaosReport::new(
+        plan.seed,
+        tier.name(),
+        plan,
+        &fired,
+        stats,
+        &fleet,
+        t0.elapsed().as_secs_f64(),
+    );
+    Ok(ChaosOutcome { report, fleet })
+}
+
+/// Arm one fault against the live fleet.
+fn fire_fault(
+    router: &ServeRouter,
+    tier: Fidelity,
+    kind: FaultKind,
+    deadline: Duration,
+) -> crate::Result<()> {
+    match kind {
+        FaultKind::KillDispatcher { shard } => router.shard_handle(shard).inject_fault(),
+        FaultKind::WorkerPanic { shard } => router.shard_handle(shard).inject_worker_panic(),
+        FaultKind::RingFlood { shard, windows } => {
+            // Idle slots arrive in one submission but publish one window
+            // per `window_ops` — a burst the controller can't drain in
+            // step, forcing the ring's coalescing path.
+            let slots = windows.saturating_mul(router.shard_window_ops(shard) as u64);
+            router.shard_handle(shard).submit_idle(slots)
+        }
+        FaultKind::Latency { shard, micros } => {
+            router.shard_handle(shard).inject_latency(Duration::from_micros(micros))
+        }
+        FaultKind::NanStorm { class_idx, ops } => {
+            let class = WorkloadClass::ALL[class_idx % WorkloadClass::ALL.len()];
+            let triples =
+                OperandStream::new(class.precision, OperandMix::SpecialHeavy, 0x5707_11 ^ ops as u64)
+                    .batch(ops.max(1));
+            // Routed like any traffic; the storm's results are surviving
+            // work, so they flow through the sampled cross-check too.
+            let outcome = router.submit_with_retry(
+                class,
+                tier,
+                &triples,
+                Some(deadline),
+                RetryPolicy::bounded(4, Duration::from_millis(1), Duration::from_millis(50)),
+            )?;
+            anyhow::ensure!(
+                outcome.bits.len() == triples.len(),
+                "NaN storm came back short: {} of {}",
+                outcome.bits.len(),
+                triples.len()
+            );
+            Ok(())
+        }
+    }
+}
+
+/// One chaos producer: same operand/size streams as
+/// [`drive_producer`], but every submission goes through the resilient
+/// deadline + retry path, and every outcome lands in exactly one
+/// column of the [`ProducerStats`] ledger. Returns `Err` only for
+/// harness-level corruption (a *short* successful result) — fleet
+/// faults are data, not errors, in a chaos run.
+#[allow(clippy::too_many_arguments)]
+fn chaos_producer(
+    router: &ServeRouter,
+    class: WorkloadClass,
+    tier: Fidelity,
+    share: usize,
+    sub_ops: usize,
+    (stream_seed, size_seed): (u64, u64),
+    deadline: Duration,
+    retry: RetryPolicy,
+    submitted_ops: &AtomicU64,
+) -> crate::Result<ProducerStats> {
+    let mut stream = OperandStream::new(class.precision, OperandMix::Finite, stream_seed);
+    let mut rng = crate::util::Rng::new(size_seed);
+    let mut st = ProducerStats::default();
+    let mut checksum = FNV_OFFSET;
+    let mut left = share;
+    while left > 0 {
+        let span =
+            (sub_ops / 2 + rng.below(sub_ops.max(1) as u64) as usize).clamp(1, left);
+        let triples = stream.batch(span);
+        st.submitted_subs += 1;
+        st.submitted_ops += span as u64;
+        submitted_ops.fetch_add(span as u64, Ordering::Relaxed);
+        match router.submit_with_retry(class, tier, &triples, Some(deadline), retry) {
+            Ok(out) => {
+                anyhow::ensure!(
+                    out.bits.len() == span,
+                    "short result: {} of {span}",
+                    out.bits.len()
+                );
+                for b in &out.bits {
+                    checksum = fnv1a_fold(checksum, *b);
+                }
+                st.completed_subs += 1;
+                st.completed_ops += span as u64;
+                st.retries += u64::from(out.retries);
+            }
+            Err(e) => {
+                if ServeError::classify(&e) == Some(ServeError::DeadlineExceeded) {
+                    st.hung_subs += 1;
+                    st.hung_ops += span as u64;
+                } else {
+                    st.errored_subs += 1;
+                    st.errored_ops += span as u64;
+                }
+            }
+        }
+        left -= span;
+    }
+    st.checksums.push(checksum);
+    Ok(st)
 }
 
 #[cfg(test)]

@@ -26,6 +26,11 @@
 //!              [--fidelity ...] [--bb ...] [--window] [--duty] [--sub-ops]
 //!              [--ring] [--workers BUDGET] [--spill-pressure OPS]
 //!              [--json PATH] [--max-p99-ratio X] [--min-sustained-ratio R]
+//! fpmax chaos  [--ops 100000] [--producers 1(per class)] [--seed 42]
+//!              [--plan kill-all|full|none] [--fidelity ...] [--bb ...]
+//!              [--window] [--sub-ops] [--ring] [--workers BUDGET]
+//!              [--deadline-ms 60000] [--retries 8] [--backoff-us 500]
+//!              [--backoff-cap-ms 50] [--json PATH]
 //! ```
 //!
 //! `fuzz` is the differential conformance harness (`arch::fuzz`): every
@@ -72,6 +77,18 @@
 //! divergence, a fleet p99 above `--max-p99-ratio`×p50, a fleet
 //! sustained throughput below `--min-sustained-ratio`× the best single
 //! shard, or any misrouted submission while spill is off.
+//!
+//! `chaos` drives the same routed fleet under a seeded fault plan
+//! (`--plan kill-all` kills every shard once mid-load; `full` adds a
+//! worker panic, a ring flood, a latency stall and a NaN storm; `none`
+//! is the bit-identity control run). Producers submit through the
+//! resilient deadline + bounded-retry path while the supervisor
+//! quarantines, salvages and respawns killed shards. Emits the chaos
+//! JSON report (`--json`) and hard-fails unless every gate holds: zero
+//! hung tickets, zero lost ops (completed + errored == submitted),
+//! crosscheck clean on surviving work, every scheduled fault fired,
+//! every killed shard respawned, and fleet accounting conserved across
+//! shard incarnations.
 
 use fpmax::arch::fp::Precision;
 use fpmax::arch::generator::{FpuConfig, FpuKind, FpuUnit};
@@ -278,12 +295,15 @@ fn main() -> fpmax::Result<()> {
         Some("serve") => {
             serve_cmd(&args)?;
         }
+        Some("chaos") => {
+            chaos_cmd(&args)?;
+        }
         other => {
             if let Some(cmd) = other {
                 eprintln!("unknown subcommand {cmd:?}\n");
             }
             eprintln!(
-                "usage: fpmax <table1|table2|fig2c|fig3|fig4|calib|sweep|verify|fuzz|selftest|serve> [options]"
+                "usage: fpmax <table1|table2|fig2c|fig3|fig4|calib|sweep|verify|fuzz|selftest|serve|chaos> [options]"
             );
             std::process::exit(2);
         }
@@ -669,7 +689,11 @@ fn serve_routed_cmd(args: &Args) -> fpmax::Result<()> {
     let spill_off = spill == usize::MAX;
 
     let specs = ServeRouter::fleet_nominal(fidelity, adaptive, workers_budget, window, ring)?;
-    let rcfg = RouterConfig { workers_budget, spill_pressure_ops: spill };
+    let rcfg = if spill_off {
+        RouterConfig::no_spill(workers_budget)
+    } else {
+        RouterConfig::with_spill(workers_budget, spill)
+    };
     let load = RoutedLoad { total_ops: ops, producers_per_class, sub_ops, duty, seed };
     let report = fpmax::coordinator::serve_routed(&specs, rcfg, fidelity, load)?;
 
@@ -873,6 +897,146 @@ fn serve_routed_cmd(args: &Args) -> fpmax::Result<()> {
     anyhow::ensure!(
         fleet_ratio >= min_sustained_ratio,
         "fleet sustained only {fleet_ratio:.2}× the best single shard, below the --min-sustained-ratio {min_sustained_ratio} floor"
+    );
+    Ok(())
+}
+
+/// The `fpmax chaos` subcommand: the routed fleet under a seeded fault
+/// plan, producers on the resilient deadline + retry path, supervisor
+/// respawning killed shards mid-run. Exit code IS the gate: non-zero
+/// unless zero tickets hung, zero ops were lost, the cross-check stayed
+/// clean on surviving work, every scheduled fault fired, every killed
+/// shard respawned, and the fleet report conserved ops/energy/latency
+/// accounting across shard incarnations.
+fn chaos_cmd(args: &Args) -> fpmax::Result<()> {
+    use fpmax::coordinator::RoutedLoad;
+    use fpmax::runtime::chaos::FaultPlan;
+    use fpmax::runtime::router::{RetryPolicy, RouterConfig, ServeRouter, WorkloadClass};
+    use std::time::Duration;
+
+    let ops = args.get_parse("ops", 100_000usize)?;
+    let producers_per_class = args.get_parse("producers", 1usize)?;
+    let workers_budget = args.get_parse("workers", num_threads())?;
+    let fidelity = fidelity_arg(args, "word-simd")?;
+    let adaptive = bb_adaptive_arg(args)?;
+    let window = args.get_parse("window", 4_096usize)?;
+    let sub_ops = args.get_parse("sub-ops", 4_096usize)?;
+    let seed = args.get_parse("seed", 42u64)?;
+    let ring = args.get_parse("ring", 1_024usize)?;
+    let deadline_ms = args.get_parse("deadline-ms", 60_000u64)?;
+    let retries = args.get_parse("retries", 8u32)?;
+    let backoff_us = args.get_parse("backoff-us", 500u64)?;
+    let backoff_cap_ms = args.get_parse("backoff-cap-ms", 50u64)?;
+    let json_path = args.get("json").map(|s| s.to_string());
+    anyhow::ensure!(ops >= 1, "--ops must be at least 1");
+    anyhow::ensure!(window >= 1, "--window must be at least 1 op");
+    anyhow::ensure!(deadline_ms >= 1, "--deadline-ms must be at least 1");
+
+    let specs = ServeRouter::fleet_nominal(fidelity, adaptive, workers_budget, window, ring)?;
+    let plan = match args.get("plan").unwrap_or("kill-all") {
+        "kill-all" => FaultPlan::kill_each_shard_once(seed, specs.len(), ops as u64),
+        "full" => {
+            FaultPlan::full_drill(seed, specs.len(), WorkloadClass::ALL.len(), ops as u64)
+        }
+        "none" => FaultPlan::none(seed),
+        other => anyhow::bail!("--plan must be kill-all, full or none, got {other}"),
+    };
+    let rcfg = RouterConfig::no_spill(workers_budget);
+    let load = RoutedLoad { total_ops: ops, producers_per_class, sub_ops, duty: 1.0, seed };
+    let retry = RetryPolicy::bounded(
+        retries,
+        Duration::from_micros(backoff_us),
+        Duration::from_millis(backoff_cap_ms),
+    );
+    let outcome = fpmax::coordinator::serve_chaos(
+        &specs,
+        rcfg,
+        fidelity,
+        load,
+        &plan,
+        Duration::from_millis(deadline_ms),
+        retry,
+    )?;
+    let report = &outcome.report;
+    let p = &report.producer;
+
+    println!(
+        "chaos: {} shards, seed {}, plan {} fault(s) ({} fired) — kills {}, worker panics {}, ring floods {}, latency {}, NaN storms {}",
+        report.shards,
+        report.seed,
+        report.faults_planned,
+        report.faults_fired,
+        report.kills,
+        report.worker_panics,
+        report.ring_floods,
+        report.latency_injections,
+        report.nan_storms,
+    );
+    println!(
+        "producer ledger: {} submissions ({} ops) → {} completed, {} errored, {} hung; {} retries",
+        p.submitted_subs, p.submitted_ops, p.completed_subs, p.errored_subs, p.hung_subs, p.retries,
+    );
+    println!(
+        "fleet: {} ops across incarnations, {} respawns, {} rerouted-on-failure, crosscheck {}/{} mismatches, {:.3} pJ/op merged, conservation {}",
+        report.fleet_ops,
+        report.respawns,
+        report.rerouted_on_failure,
+        report.crosscheck_mismatches,
+        report.crosscheck_sampled,
+        report.fleet_pj_per_op,
+        if report.conservation_ok { "exact" } else { "BROKEN" },
+    );
+    for sh in &outcome.fleet.shards {
+        println!(
+            "  {:<7} respawns {}  incarnation ops {:>8} (+{} prior)  rerouted {}  health {:?}",
+            sh.unit,
+            sh.respawns,
+            sh.report.ops,
+            sh.prior.iter().map(|r| r.ops).sum::<u64>(),
+            sh.rerouted_on_failure,
+            sh.health,
+        );
+    }
+
+    if let Some(path) = json_path {
+        std::fs::write(&path, report.render_json())?;
+        println!("wrote {path}");
+    }
+
+    // Hard gates (the CI chaos smoke step relies on these exit codes).
+    anyhow::ensure!(
+        report.zero_hung(),
+        "{} submission(s) ({} ops) hung past the {deadline_ms} ms deadline",
+        p.hung_subs,
+        p.hung_ops
+    );
+    anyhow::ensure!(
+        report.zero_lost(),
+        "op ledger does not balance: {} completed + {} errored != {} submitted",
+        p.completed_ops,
+        p.errored_ops,
+        p.submitted_ops
+    );
+    anyhow::ensure!(
+        report.crosscheck_clean(),
+        "sampled gate cross-check found {} mismatches on surviving work",
+        report.crosscheck_mismatches
+    );
+    anyhow::ensure!(
+        report.coverage_ok(),
+        "only {} of {} scheduled faults fired",
+        report.faults_fired,
+        report.faults_planned
+    );
+    anyhow::ensure!(
+        report.respawns >= report.kills,
+        "{} dispatcher kill(s) but only {} respawn(s) — a shard stayed dead",
+        report.kills,
+        report.respawns
+    );
+    anyhow::ensure!(
+        report.conservation_ok,
+        "fleet report accounting is not conserved across shard incarnations"
     );
     Ok(())
 }

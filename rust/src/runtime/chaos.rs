@@ -1,0 +1,571 @@
+//! The deterministic chaos engine: seeded fault plans for the serve
+//! fleet, and the report + hard gates a chaos run is judged by.
+//!
+//! A chaos run is the fleet's trust argument: the paper's numbers
+//! assume the FPU computes through every duty-cycle regime, and a
+//! production fleet must additionally compute through *failures* —
+//! dead dispatchers, panicking lane kernels, overflowing window rings,
+//! stalled shards, special-heavy operand storms. This module makes
+//! those failures **reproducible**: a [`FaultPlan`] is derived from a
+//! seed, so the same seed always yields the same typed fault sequence
+//! at the same op-count trigger points, in tests and in CI alike.
+//!
+//! The plan only *schedules* faults; firing them is the
+//! [`crate::coordinator::serve_chaos`] harness's job (it owns the
+//! router and the producer threads). The split keeps this module pure
+//! and deterministic — no threads, no clocks — which is what makes
+//! same-seed ⇒ same-plan trivially true.
+//!
+//! A run's outcome is a [`ChaosReport`] with four hard gates
+//! ([`ChaosReport::gates_ok`]):
+//!
+//! 1. **Zero hung tickets** — every producer wait resolved within its
+//!    deadline (a hang is the one failure mode retry cannot paper
+//!    over).
+//! 2. **Zero lost ops** — completed + errored ops equal submitted ops,
+//!    at the producer side of the retry layer: every submission's fate
+//!    is known.
+//! 3. **Crosscheck clean on surviving work** — the sampled gate-level
+//!    cross-check found zero mismatches across every incarnation that
+//!    reported.
+//! 4. **Conservation across incarnations** — the [`FleetReport`]'s
+//!    fleet ops/energy/latency totals are the exact sum of every
+//!    incarnation's (dead ones included), per
+//!    [`FleetReport::conservation_ok`].
+//!
+//! plus the plan-coverage check that every scheduled fault actually
+//! fired.
+
+use crate::runtime::router::FleetReport;
+use crate::util::Rng;
+
+/// One typed fault. `shard` indexes the routed fleet's spec order.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultKind {
+    /// Kill the shard's dispatcher thread mid-queue
+    /// ([`crate::runtime::serve::SubmitHandle::inject_fault`]): every
+    /// outstanding ticket errors, the supervisor quarantines, salvages
+    /// and respawns the shard.
+    KillDispatcher { shard: usize },
+    /// Panic the next batch's parallel region on the shard
+    /// ([`crate::runtime::serve::SubmitHandle::inject_worker_panic`]):
+    /// the batch's tickets error, the dispatcher and its pool survive.
+    WorkerPanic { shard: usize },
+    /// Force the shard's window ring to overflow by flooding it with
+    /// `windows` windows' worth of idle slots faster than the
+    /// controller drains — exercises the coalescing path and the
+    /// overflow-aware BB gate under fault load.
+    RingFlood { shard: usize, windows: u64 },
+    /// Stall the shard's dispatcher for `micros` when the fault is
+    /// reached — a degraded-shard drill for deadline and spill paths.
+    Latency { shard: usize, micros: u64 },
+    /// A special-heavy submission burst
+    /// ([`crate::workloads::throughput::OperandMix::SpecialHeavy`]):
+    /// `ops` ops of the class at `class_idx` (a
+    /// [`crate::runtime::router::WorkloadClass::ALL`] index) routed
+    /// normally — NaN/Inf/subnormal storms must flow through routing,
+    /// serving and cross-checking like any other traffic.
+    NanStorm { class_idx: usize, ops: usize },
+}
+
+impl FaultKind {
+    /// Stable JSON name.
+    pub fn name(&self) -> &'static str {
+        match self {
+            FaultKind::KillDispatcher { .. } => "kill_dispatcher",
+            FaultKind::WorkerPanic { .. } => "worker_panic",
+            FaultKind::RingFlood { .. } => "ring_flood",
+            FaultKind::Latency { .. } => "latency",
+            FaultKind::NanStorm { .. } => "nan_storm",
+        }
+    }
+}
+
+/// A fault armed at a point in the submitted-op stream: it fires once
+/// the fleet-wide submitted-op counter reaches `after_ops`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ScheduledFault {
+    pub after_ops: u64,
+    pub kind: FaultKind,
+}
+
+/// A seeded, ordered fault schedule. Same seed (and shape arguments)
+/// ⇒ the same faults at the same trigger points, every time.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct FaultPlan {
+    pub seed: u64,
+    /// Sorted by `after_ops` (ties keep construction order).
+    pub faults: Vec<ScheduledFault>,
+}
+
+impl FaultPlan {
+    /// The empty plan: a chaos run under it must be indistinguishable
+    /// from a plain routed run — the no-fault bit-identity gate.
+    pub fn none(seed: u64) -> FaultPlan {
+        FaultPlan { seed, faults: Vec::new() }
+    }
+
+    /// The acceptance-gate plan: kill every shard of the fleet exactly
+    /// once, at seeded points spread across the middle of the op stream
+    /// (10%–80% of `total_ops`, so every kill lands under live load —
+    /// never before traffic starts or after it drains).
+    pub fn kill_each_shard_once(seed: u64, shards: usize, total_ops: u64) -> FaultPlan {
+        let mut rng = Rng::new(seed ^ 0xC4A0_5C4A_05C4_A05C);
+        let lo = total_ops / 10;
+        let span = (total_ops * 8 / 10).saturating_sub(lo).max(1);
+        let mut faults: Vec<ScheduledFault> = (0..shards)
+            .map(|shard| ScheduledFault {
+                after_ops: lo + rng.below(span),
+                kind: FaultKind::KillDispatcher { shard },
+            })
+            .collect();
+        faults.sort_by_key(|f| f.after_ops);
+        FaultPlan { seed, faults }
+    }
+
+    /// The full drill: every shard killed once, plus one of each other
+    /// fault kind at seeded points — the widest coverage a single run
+    /// exercises. `classes` is the workload-class count (4 for the
+    /// standard fleet).
+    pub fn full_drill(seed: u64, shards: usize, classes: usize, total_ops: u64) -> FaultPlan {
+        let mut plan = FaultPlan::kill_each_shard_once(seed, shards, total_ops);
+        let mut rng = Rng::new(seed ^ 0xD511_D511_D511_D511);
+        let lo = total_ops / 10;
+        let span = (total_ops * 8 / 10).saturating_sub(lo).max(1);
+        let shard = |rng: &mut Rng| rng.below(shards.max(1) as u64) as usize;
+        let extra = [
+            FaultKind::WorkerPanic { shard: shard(&mut rng) },
+            FaultKind::RingFlood { shard: shard(&mut rng), windows: 8 + rng.below(8) },
+            FaultKind::Latency { shard: shard(&mut rng), micros: 500 + rng.below(1500) },
+            FaultKind::NanStorm {
+                class_idx: rng.below(classes.max(1) as u64) as usize,
+                ops: 256 + rng.below(256) as usize,
+            },
+        ];
+        plan.faults.extend(
+            extra.into_iter().map(|kind| ScheduledFault { after_ops: lo + rng.below(span), kind }),
+        );
+        plan.faults.sort_by_key(|f| f.after_ops);
+        plan
+    }
+
+    /// Kills scheduled in this plan (the respawn count a clean run must
+    /// reach).
+    pub fn kills(&self) -> usize {
+        self.faults
+            .iter()
+            .filter(|f| matches!(f.kind, FaultKind::KillDispatcher { .. }))
+            .count()
+    }
+}
+
+/// Producer-side accounting from a chaos run, at the *logical
+/// submission* level (above the retry layer): every submission ends in
+/// exactly one of the three outcome columns.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct ProducerStats {
+    /// Logical submissions issued.
+    pub submitted_subs: u64,
+    /// … that delivered bits.
+    pub completed_subs: u64,
+    /// … that resolved with an error (retries exhausted or
+    /// non-retryable).
+    pub errored_subs: u64,
+    /// … whose wait hit its deadline without resolving — the hung
+    /// tickets. Must be zero.
+    pub hung_subs: u64,
+    /// Op-level versions of the same three columns.
+    pub submitted_ops: u64,
+    pub completed_ops: u64,
+    pub errored_ops: u64,
+    pub hung_ops: u64,
+    /// Retry attempts beyond first tries, across all submissions.
+    pub retries: u64,
+    /// FNV-1a checksum per producer (producer-index order) over the
+    /// result bits of its *completed* submissions, in submission order —
+    /// the no-fault bit-identity witness.
+    pub checksums: Vec<u64>,
+}
+
+impl ProducerStats {
+    pub fn absorb(&mut self, other: &ProducerStats) {
+        self.submitted_subs += other.submitted_subs;
+        self.completed_subs += other.completed_subs;
+        self.errored_subs += other.errored_subs;
+        self.hung_subs += other.hung_subs;
+        self.submitted_ops += other.submitted_ops;
+        self.completed_ops += other.completed_ops;
+        self.errored_ops += other.errored_ops;
+        self.hung_ops += other.hung_ops;
+        self.retries += other.retries;
+        self.checksums.extend(other.checksums.iter().copied());
+    }
+}
+
+/// FNV-1a fold step over one result-bit word — the chaos checksum
+/// primitive (order-sensitive, cheap, dependency-free).
+pub fn fnv1a_fold(h: u64, word: u64) -> u64 {
+    let mut h = h;
+    for b in word.to_le_bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01B3);
+    }
+    h
+}
+
+/// The FNV-1a offset basis — seed for [`fnv1a_fold`] chains.
+pub const FNV_OFFSET: u64 = 0xCBF2_9CE4_8422_2325;
+
+/// Outcome of one chaos run: the plan, what actually fired, the
+/// producer-side ledger, and the fleet's own merged report.
+#[derive(Debug, Clone)]
+pub struct ChaosReport {
+    pub seed: u64,
+    pub tier_name: &'static str,
+    pub shards: usize,
+    /// Faults scheduled / actually fired (coverage gate: equal).
+    pub faults_planned: usize,
+    pub faults_fired: usize,
+    /// Fired-fault counts by kind, JSON-stable order.
+    pub kills: u64,
+    pub worker_panics: u64,
+    pub ring_floods: u64,
+    pub latency_injections: u64,
+    pub nan_storms: u64,
+    pub producer: ProducerStats,
+    /// Fleet totals pulled from the [`FleetReport`] (which holds the
+    /// full per-shard, per-incarnation detail).
+    pub respawns: u64,
+    pub rerouted_on_failure: u64,
+    pub fleet_ops: u64,
+    pub crosscheck_sampled: u64,
+    pub crosscheck_mismatches: u64,
+    pub fleet_pj_per_op: f64,
+    pub conservation_ok: bool,
+    pub wall_secs: f64,
+}
+
+impl ChaosReport {
+    /// Assemble from the harness's raw outputs.
+    pub fn new(
+        seed: u64,
+        tier_name: &'static str,
+        plan: &FaultPlan,
+        fired: &[FaultKind],
+        producer: ProducerStats,
+        fleet: &FleetReport,
+        wall_secs: f64,
+    ) -> ChaosReport {
+        let count = |pred: fn(&FaultKind) -> bool| fired.iter().filter(|k| pred(k)).count() as u64;
+        ChaosReport {
+            seed,
+            tier_name,
+            shards: fleet.shards.len(),
+            faults_planned: plan.faults.len(),
+            faults_fired: fired.len(),
+            kills: count(|k| matches!(k, FaultKind::KillDispatcher { .. })),
+            worker_panics: count(|k| matches!(k, FaultKind::WorkerPanic { .. })),
+            ring_floods: count(|k| matches!(k, FaultKind::RingFlood { .. })),
+            latency_injections: count(|k| matches!(k, FaultKind::Latency { .. })),
+            nan_storms: count(|k| matches!(k, FaultKind::NanStorm { .. })),
+            producer,
+            respawns: fleet.respawns(),
+            rerouted_on_failure: fleet.rerouted_on_failure,
+            fleet_ops: fleet.ops,
+            crosscheck_sampled: fleet.crosscheck_sampled(),
+            crosscheck_mismatches: fleet.crosscheck_mismatches(),
+            fleet_pj_per_op: fleet.fleet_energy.pj_per_op,
+            conservation_ok: fleet.conservation_ok(),
+            wall_secs,
+        }
+    }
+
+    /// Gate 1: zero hung tickets.
+    pub fn zero_hung(&self) -> bool {
+        self.producer.hung_subs == 0 && self.producer.hung_ops == 0
+    }
+
+    /// Gate 2: zero lost ops — completed + errored == submitted, at
+    /// both the submission and the op ledger.
+    pub fn zero_lost(&self) -> bool {
+        self.producer.completed_subs + self.producer.errored_subs + self.producer.hung_subs
+            == self.producer.submitted_subs
+            && self.producer.completed_ops + self.producer.errored_ops + self.producer.hung_ops
+                == self.producer.submitted_ops
+    }
+
+    /// Gate 3: crosscheck clean on surviving work.
+    pub fn crosscheck_clean(&self) -> bool {
+        self.crosscheck_mismatches == 0
+    }
+
+    /// Gate 4: every scheduled fault fired.
+    pub fn coverage_ok(&self) -> bool {
+        self.faults_fired == self.faults_planned
+    }
+
+    /// All hard gates (including [`FleetReport::conservation_ok`],
+    /// captured at construction).
+    pub fn gates_ok(&self) -> bool {
+        self.zero_hung()
+            && self.zero_lost()
+            && self.crosscheck_clean()
+            && self.coverage_ok()
+            && self.conservation_ok
+    }
+
+    /// The machine-readable artifact (manual JSON, like the benches —
+    /// no serde in the dependency set). Schema documented in
+    /// `docs/serving.md`.
+    pub fn render_json(&self) -> String {
+        let p = &self.producer;
+        let checksums: Vec<String> =
+            p.checksums.iter().map(|c| format!("\"{c:016x}\"")).collect();
+        format!(
+            concat!(
+                "{{\n",
+                "  \"bench\": \"chaos\",\n",
+                "  \"measured\": true,\n",
+                "  \"seed\": {seed},\n",
+                "  \"tier\": \"{tier}\",\n",
+                "  \"shards\": {shards},\n",
+                "  \"wall_secs\": {wall:.3},\n",
+                "  \"faults\": {{\n",
+                "    \"planned\": {planned},\n",
+                "    \"fired\": {fired},\n",
+                "    \"kills\": {kills},\n",
+                "    \"worker_panics\": {wp},\n",
+                "    \"ring_floods\": {rf},\n",
+                "    \"latency_injections\": {li},\n",
+                "    \"nan_storms\": {ns}\n",
+                "  }},\n",
+                "  \"producer\": {{\n",
+                "    \"submitted_subs\": {ssub},\n",
+                "    \"completed_subs\": {csub},\n",
+                "    \"errored_subs\": {esub},\n",
+                "    \"hung_subs\": {hsub},\n",
+                "    \"submitted_ops\": {sops},\n",
+                "    \"completed_ops\": {cops},\n",
+                "    \"errored_ops\": {eops},\n",
+                "    \"hung_ops\": {hops},\n",
+                "    \"retries\": {retries},\n",
+                "    \"checksums\": [{checksums}]\n",
+                "  }},\n",
+                "  \"fleet\": {{\n",
+                "    \"ops\": {fops},\n",
+                "    \"respawns\": {respawns},\n",
+                "    \"rerouted_on_failure\": {rerouted},\n",
+                "    \"crosscheck_sampled\": {xs},\n",
+                "    \"crosscheck_mismatches\": {xm},\n",
+                "    \"pj_per_op\": {pj:.6}\n",
+                "  }},\n",
+                "  \"gates\": {{\n",
+                "    \"zero_hung\": {g_hung},\n",
+                "    \"zero_lost\": {g_lost},\n",
+                "    \"crosscheck_clean\": {g_x},\n",
+                "    \"coverage_ok\": {g_cov},\n",
+                "    \"conservation_ok\": {g_cons},\n",
+                "    \"all\": {g_all}\n",
+                "  }}\n",
+                "}}\n",
+            ),
+            seed = self.seed,
+            tier = self.tier_name,
+            shards = self.shards,
+            wall = self.wall_secs,
+            planned = self.faults_planned,
+            fired = self.faults_fired,
+            kills = self.kills,
+            wp = self.worker_panics,
+            rf = self.ring_floods,
+            li = self.latency_injections,
+            ns = self.nan_storms,
+            ssub = p.submitted_subs,
+            csub = p.completed_subs,
+            esub = p.errored_subs,
+            hsub = p.hung_subs,
+            sops = p.submitted_ops,
+            cops = p.completed_ops,
+            eops = p.errored_ops,
+            hops = p.hung_ops,
+            retries = p.retries,
+            checksums = checksums.join(", "),
+            fops = self.fleet_ops,
+            respawns = self.respawns,
+            rerouted = self.rerouted_on_failure,
+            xs = self.crosscheck_sampled,
+            xm = self.crosscheck_mismatches,
+            pj = self.fleet_pj_per_op,
+            g_hung = self.zero_hung(),
+            g_lost = self.zero_lost(),
+            g_x = self.crosscheck_clean(),
+            g_cov = self.coverage_ok(),
+            g_cons = self.conservation_ok,
+            g_all = self.gates_ok(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn same_seed_same_plan() {
+        let a = FaultPlan::kill_each_shard_once(42, 4, 100_000);
+        let b = FaultPlan::kill_each_shard_once(42, 4, 100_000);
+        assert_eq!(a, b);
+        let c = FaultPlan::full_drill(42, 4, 4, 100_000);
+        let d = FaultPlan::full_drill(42, 4, 4, 100_000);
+        assert_eq!(c, d);
+        // And a different seed genuinely moves the plan.
+        let e = FaultPlan::kill_each_shard_once(43, 4, 100_000);
+        assert_ne!(a.faults, e.faults);
+    }
+
+    #[test]
+    fn kill_plan_covers_every_shard_once_inside_the_live_window() {
+        let plan = FaultPlan::kill_each_shard_once(7, 4, 100_000);
+        assert_eq!(plan.faults.len(), 4);
+        assert_eq!(plan.kills(), 4);
+        let mut shards: Vec<usize> = plan
+            .faults
+            .iter()
+            .map(|f| match f.kind {
+                FaultKind::KillDispatcher { shard } => shard,
+                other => panic!("unexpected fault {other:?}"),
+            })
+            .collect();
+        shards.sort_unstable();
+        assert_eq!(shards, vec![0, 1, 2, 3]);
+        for f in &plan.faults {
+            assert!(
+                (10_000..90_000).contains(&f.after_ops),
+                "kill at {} is outside the live window",
+                f.after_ops
+            );
+        }
+        // Sorted by trigger point.
+        assert!(plan.faults.windows(2).all(|w| w[0].after_ops <= w[1].after_ops));
+    }
+
+    #[test]
+    fn full_drill_schedules_every_fault_kind() {
+        let plan = FaultPlan::full_drill(11, 4, 4, 50_000);
+        assert_eq!(plan.faults.len(), 8); // 4 kills + one of each other kind
+        for name in ["kill_dispatcher", "worker_panic", "ring_flood", "latency", "nan_storm"] {
+            assert!(
+                plan.faults.iter().any(|f| f.kind.name() == name),
+                "missing {name}"
+            );
+        }
+        assert_eq!(plan.kills(), 4);
+    }
+
+    #[test]
+    fn fnv_checksum_is_order_sensitive() {
+        let a = fnv1a_fold(fnv1a_fold(FNV_OFFSET, 1), 2);
+        let b = fnv1a_fold(fnv1a_fold(FNV_OFFSET, 2), 1);
+        assert_ne!(a, b);
+        assert_eq!(a, fnv1a_fold(fnv1a_fold(FNV_OFFSET, 1), 2));
+    }
+
+    #[test]
+    fn gates_read_the_ledger() {
+        let mut p = ProducerStats::default();
+        p.submitted_subs = 10;
+        p.completed_subs = 8;
+        p.errored_subs = 2;
+        p.submitted_ops = 1000;
+        p.completed_ops = 800;
+        p.errored_ops = 200;
+        let mk = |producer: ProducerStats, fired: usize| ChaosReport {
+            seed: 1,
+            tier_name: "word",
+            shards: 4,
+            faults_planned: 4,
+            faults_fired: fired,
+            kills: fired as u64,
+            worker_panics: 0,
+            ring_floods: 0,
+            latency_injections: 0,
+            nan_storms: 0,
+            producer,
+            respawns: fired as u64,
+            rerouted_on_failure: 0,
+            fleet_ops: 1000,
+            crosscheck_sampled: 10,
+            crosscheck_mismatches: 0,
+            fleet_pj_per_op: 10.0,
+            conservation_ok: true,
+            wall_secs: 0.1,
+        };
+        let good = mk(p.clone(), 4);
+        assert!(good.zero_hung() && good.zero_lost() && good.gates_ok());
+        // A hung ticket fails gate 1 (and keeps the ledger balanced so
+        // gate 2 isolates *loss*, not hangs).
+        let mut hung = p.clone();
+        hung.completed_subs = 7;
+        hung.hung_subs = 1;
+        hung.completed_ops = 700;
+        hung.hung_ops = 100;
+        let r = mk(hung, 4);
+        assert!(!r.zero_hung() && r.zero_lost() && !r.gates_ok());
+        // A lost op fails gate 2.
+        let mut lost = p.clone();
+        lost.completed_ops = 799;
+        let r = mk(lost, 4);
+        assert!(!r.zero_lost() && !r.gates_ok());
+        // An unfired fault fails coverage.
+        let r = mk(p, 3);
+        assert!(!r.coverage_ok() && !r.gates_ok());
+    }
+
+    #[test]
+    fn chaos_json_shape() {
+        let report = ChaosReport {
+            seed: 42,
+            tier_name: "word",
+            shards: 4,
+            faults_planned: 4,
+            faults_fired: 4,
+            kills: 4,
+            worker_panics: 0,
+            ring_floods: 0,
+            latency_injections: 0,
+            nan_storms: 0,
+            producer: ProducerStats {
+                submitted_subs: 2,
+                completed_subs: 2,
+                submitted_ops: 100,
+                completed_ops: 100,
+                checksums: vec![0xdead_beef],
+                ..ProducerStats::default()
+            },
+            respawns: 4,
+            rerouted_on_failure: 3,
+            fleet_ops: 100,
+            crosscheck_sampled: 5,
+            crosscheck_mismatches: 0,
+            fleet_pj_per_op: 12.5,
+            conservation_ok: true,
+            wall_secs: 1.0,
+        };
+        let json = report.render_json();
+        for needle in [
+            "\"bench\": \"chaos\"",
+            "\"measured\": true",
+            "\"kills\": 4",
+            "\"hung_subs\": 0",
+            "\"retries\": 0",
+            "\"conservation_ok\": true",
+            "\"all\": true",
+            "\"00000000deadbeef\"",
+        ] {
+            assert!(json.contains(needle), "missing {needle} in\n{json}");
+        }
+        // Balanced braces — the cheapest structural sanity check
+        // available without a JSON parser on the Rust side.
+        assert_eq!(json.matches('{').count(), json.matches('}').count());
+    }
+}

@@ -3,7 +3,9 @@
 //! body-bias re-biasing — see [`serve::ServeQueue`]), the sharded
 //! multi-unit [`router`] (one serve shard per unit preset × precision ×
 //! fidelity tier behind workload-aware dispatch — see
-//! [`router::ServeRouter`]), and the PJRT artifact runtime.
+//! [`router::ServeRouter`]), the deterministic [`chaos`] fault engine
+//! that proves the fleet serves through failures, and the PJRT artifact
+//! runtime.
 //!
 //! PJRT side: loads the AOT-compiled JAX/Pallas artifacts
 //! (`artifacts/*.hlo.txt`) and executes them from Rust.
@@ -22,13 +24,18 @@
 //! `make artifacts`, and the resulting executables are pure XLA:CPU
 //! programs fed with raw bit patterns.
 
+pub mod chaos;
 pub mod router;
 pub mod serve;
 
+pub use chaos::{ChaosReport, FaultKind, FaultPlan, ScheduledFault};
 pub use router::{
-    FleetReport, RouterConfig, ServeRouter, ServiceClass, ShardReport, ShardSpec, WorkloadClass,
+    FleetReport, RetryPolicy, RouterConfig, ServeRouter, ServiceClass, ShardHealth, ShardReport,
+    ShardSpec, SubmitOutcome, WorkloadClass,
 };
-pub use serve::{ServeConfig, ServeLoad, ServeQueue, ServeReport, SubmitHandle, Ticket};
+pub use serve::{
+    SalvagedRun, ServeConfig, ServeError, ServeLoad, ServeQueue, ServeReport, SubmitHandle, Ticket,
+};
 
 #[cfg(feature = "pjrt")]
 mod pjrt;

@@ -11,13 +11,16 @@
 //!  ────────────┐   ┌─────────────────────┐   ┌──────────────────────┐
 //!  submit(     │   │ WorkloadClass ──────┼──▶│ SP CMA  (latency)    │
 //!    class,   ─┼──▶│   Table-1 affinity  │   │ SP FMA  (bulk)       │
-//!    tier,     │   │ + load-aware spill  │   │ DP CMA  (latency)    │
-//!    ops)      │   │   (pressure probe)  │   │ DP FMA  (bulk)       │
-//!  ────────────┘   └─────────────────────┘   └──────────────────────┘
-//!                                               each: own ServeQueue,
-//!                                               own BatchExecutor pool,
-//!                                               own window ring + live
-//!                                               bb::StreamingController
+//!    ops)      │   │ + load-aware spill  │   │ DP CMA  (latency)    │
+//!  ────────────┘   │   (pressure probe)  │   │ DP FMA  (bulk)       │
+//!                  │ + health-aware      │   └──────────────────────┘
+//!                  │   failover          │      each: own ServeQueue,
+//!                  └─────────────────────┘      own BatchExecutor pool,
+//!                        ▲        │             own window ring + live
+//!                        │ respawn│             bb::StreamingController
+//!                  ┌─────┴────────▼─────┐
+//!                  │     supervisor      │  (detects dead dispatchers,
+//!                  └─────────────────────┘   salvages + respawns shards)
 //! ```
 //!
 //! * A **shard** is one (unit preset × precision × fidelity tier)
@@ -39,27 +42,63 @@
 //!   one fixed rounding semantics run with spill disabled. Either way
 //!   the result is bit-exact for the unit that executed it, and the
 //!   sampled gate cross-check rides along per shard.
-//! * [`ServeRouter::finish`] lifts the per-shard accounting into a
-//!   [`FleetReport`]: each shard's streamed schedule + energies stay
-//!   **bit-identical** to the post-hoc single-shard path on that shard's
-//!   own window stream (the PR 4 `EnergyIntegrator` identity gates,
-//!   unchanged), and the fleet totals are exact sums on top
-//!   ([`crate::bb::merge_run_energies`]).
+//!
+//! # Fault tolerance (PR 7)
+//!
+//! Each shard carries a health state machine — **Healthy → Degraded →
+//! Quarantined** — driven by a supervisor thread:
+//!
+//! * A shard whose dispatcher died is **Quarantined**: the supervisor
+//!   salvages its partial [`ServeReport`] (exact accounting up to the
+//!   moment of death, via [`ServeQueue::finish_salvaging`]), records it
+//!   as a *prior incarnation*, and respawns the shard as a fresh
+//!   [`ServeQueue`] on a new executor with the same worker grant —
+//!   re-seeded from the dead incarnation's chunk calibration under the
+//!   shard's own [`calibration_key`], so the replacement skips cold
+//!   calibration.
+//! * A respawned shard is **Degraded** until a seeded probe submission
+//!   round-trips through it; only then is it re-admitted to routing
+//!   (probe-based re-admission). Quarantined/Degraded shards take no
+//!   routed traffic: their would-be submissions divert through the same
+//!   compatible-sibling machinery spill uses, counted separately as
+//!   `rerouted_on_failure` (they are failovers, not policy violations —
+//!   `misrouted` still means what it meant in a healthy fleet).
+//! * [`ServeRouter::finish`] merges every incarnation: `FleetReport`
+//!   ops / latency distributions / energy are exact sums across prior
+//!   incarnations and the final one, so killing a shard mid-run loses
+//!   no accounting ([`crate::bb::merge_run_energies`] over every
+//!   incarnation's streamed energy). A fleet that saw **no** faults
+//!   produces a report identical to the pre-supervision router: the
+//!   supervisor is passive (it only polls thread liveness) until
+//!   something actually dies.
+//!
+//! Producer-side resilience rides on top:
+//! [`ServeRouter::submit_with_deadline`] bounds the wait on one
+//! submission, and [`ServeRouter::submit_with_retry`] adds bounded
+//! capped-exponential-backoff retry on retryable faults
+//! ([`ServeError::retryable`]) — safe because ops are pure and a ticket
+//! hands its result out exactly once, so a retried submission can never
+//! alias or double-count (the abandoned attempt's ticket is simply
+//! dropped; its completion slot dies with it).
 //!
 //! The per-class shard histogram is recorded per dispatch, so a report
 //! can show that latency-class traffic measurably landed on
 //! latency-optimized shards (`misrouted == 0` under the static policy
 //! with no spill pressure).
 
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicU8, Ordering};
+use std::sync::{Arc, RwLock};
+use std::time::{Duration, Instant};
 
-use crate::arch::engine::{ExecutorRegistry, Fidelity};
+use crate::arch::engine::{calibration_key, BatchExecutor, ExecutorRegistry, Fidelity};
 use crate::arch::fp::Precision;
 use crate::arch::generator::{FpuConfig, FpuKind, FpuUnit};
 use crate::bb::{merge_run_energies, BbRunEnergy};
-use crate::runtime::serve::{ServeConfig, ServeQueue, ServeReport, SubmitHandle, Ticket};
+use crate::runtime::serve::{
+    ServeConfig, ServeError, ServeQueue, ServeReport, SubmitHandle, Ticket,
+};
 use crate::util::stats::percentile;
-use crate::workloads::throughput::OperandTriple;
+use crate::workloads::throughput::{OperandMix, OperandStream, OperandTriple};
 
 /// What a submission is optimized for — the paper's workload axis.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
@@ -131,6 +170,42 @@ pub struct ShardSpec {
     pub serve: ServeConfig,
 }
 
+/// A shard's health, as the supervisor sees it.
+///
+/// ```text
+///  Healthy ──dispatcher died──▶ Quarantined ──respawned──▶ Degraded
+///     ▲                                                        │
+///     └────────────────── probe round-tripped ─────────────────┘
+/// ```
+///
+/// Only Healthy shards take routed traffic; a class whose affinity
+/// shard is Quarantined/Degraded fails over to a Healthy compatible
+/// sibling (`rerouted_on_failure`), or — when no sibling serves the
+/// class — gets a retryable [`ServeError::ShardFailed`] so producer
+/// retry can outwait the respawn.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ShardHealth {
+    /// Serving; dispatcher alive.
+    Healthy,
+    /// Freshly respawned; awaiting probe-based re-admission.
+    Degraded,
+    /// Dispatcher dead; salvage + respawn pending (or respawn failed and
+    /// will be retried).
+    Quarantined,
+}
+
+const HEALTH_HEALTHY: u8 = 0;
+const HEALTH_DEGRADED: u8 = 1;
+const HEALTH_QUARANTINED: u8 = 2;
+
+fn health_of(v: u8) -> ShardHealth {
+    match v {
+        HEALTH_HEALTHY => ShardHealth::Healthy,
+        HEALTH_DEGRADED => ShardHealth::Degraded,
+        _ => ShardHealth::Quarantined,
+    }
+}
+
 /// Router-level policy knobs.
 #[derive(Debug, Clone, Copy)]
 pub struct RouterConfig {
@@ -142,18 +217,88 @@ pub struct RouterConfig {
     /// spill to a strictly-less-loaded compatible sibling.
     /// `usize::MAX` disables spill — the pure static policy.
     pub spill_pressure_ops: usize,
+    /// Run the supervisor (dead-dispatcher detection, salvage, respawn,
+    /// probe re-admission). On by default; a no-fault run is unaffected
+    /// either way — the supervisor only polls thread liveness until a
+    /// dispatcher actually dies.
+    pub supervise: bool,
+    /// Supervisor liveness-poll interval.
+    pub supervision_poll: Duration,
+    /// Ops in the seeded probe submission a respawned shard must
+    /// round-trip before re-admission.
+    pub probe_ops: usize,
+    /// How long one probe attempt waits before the supervisor re-probes
+    /// on its next pass (the shard stays Degraded in between).
+    pub probe_timeout: Duration,
 }
 
 impl RouterConfig {
-    /// Static affinity only, no spill.
+    /// Static affinity only, no spill; supervision on.
     pub fn no_spill(workers_budget: usize) -> RouterConfig {
-        RouterConfig { workers_budget, spill_pressure_ops: usize::MAX }
+        RouterConfig {
+            workers_budget,
+            spill_pressure_ops: usize::MAX,
+            supervise: true,
+            supervision_poll: Duration::from_micros(500),
+            probe_ops: 64,
+            probe_timeout: Duration::from_secs(10),
+        }
     }
 
     /// Affinity with load-aware spill above `pressure_ops` in-flight ops.
     pub fn with_spill(workers_budget: usize, pressure_ops: usize) -> RouterConfig {
-        RouterConfig { workers_budget, spill_pressure_ops: pressure_ops }
+        RouterConfig { spill_pressure_ops: pressure_ops, ..RouterConfig::no_spill(workers_budget) }
     }
+
+    /// Disable the supervisor — the pre-PR-7 router: a dead shard stays
+    /// dead, and [`ServeRouter::finish`] errors on it.
+    pub fn without_supervision(mut self) -> RouterConfig {
+        self.supervise = false;
+        self
+    }
+}
+
+/// Bounded retry with capped exponential backoff, for
+/// [`ServeRouter::submit_with_retry`]. Attempt `k` (0-based) sleeps
+/// `min(base_backoff · 2^k, max_backoff)` before retrying.
+#[derive(Debug, Clone, Copy)]
+pub struct RetryPolicy {
+    /// Retries *after* the first attempt (0 = fail fast).
+    pub max_retries: u32,
+    pub base_backoff: Duration,
+    pub max_backoff: Duration,
+}
+
+impl RetryPolicy {
+    /// No retries — the plain submit path with deadline support.
+    pub fn none() -> RetryPolicy {
+        RetryPolicy {
+            max_retries: 0,
+            base_backoff: Duration::ZERO,
+            max_backoff: Duration::ZERO,
+        }
+    }
+
+    /// `retries` retries starting at `base` backoff, capped at `cap`.
+    pub fn bounded(retries: u32, base: Duration, cap: Duration) -> RetryPolicy {
+        RetryPolicy { max_retries: retries, base_backoff: base, max_backoff: cap }
+    }
+
+    fn backoff(self, attempt: u32) -> Duration {
+        let mult = 1u32.checked_shl(attempt).unwrap_or(u32::MAX);
+        self.base_backoff.saturating_mul(mult).min(self.max_backoff)
+    }
+}
+
+/// Outcome of a resilient submission ([`ServeRouter::submit_with_retry`]).
+#[derive(Debug, Clone)]
+pub struct SubmitOutcome {
+    /// The shard whose result was delivered (the last attempt's shard).
+    pub shard: usize,
+    /// Result bits, one per submitted triple, in submission order.
+    pub bits: Vec<u64>,
+    /// Attempts beyond the first that were needed.
+    pub retries: u32,
 }
 
 /// Where a dispatch decision landed.
@@ -166,19 +311,62 @@ enum Placement {
     /// No affinity shard exists for the class at this tier; any
     /// compatible shard took it.
     Fallback,
+    /// Diverted off the (existing) affinity shard because it is
+    /// quarantined or awaiting probe re-admission.
+    Failover,
 }
 
-struct Shard {
+/// The mutable part of a shard slot: swapped whole on respawn, behind a
+/// read-mostly lock (routing takes read; only the supervisor writes).
+struct ShardRuntime {
+    /// `None` only transiently while the supervisor swaps incarnations.
+    queue: Option<ServeQueue>,
+    handle: SubmitHandle,
+    /// Completed reports of dead incarnations, oldest first — merged
+    /// into the shard's fleet accounting at finish.
+    prior: Vec<ServeReport>,
+}
+
+/// One fleet slot: immutable identity + the respawnable runtime.
+struct ShardSlot {
     config: FpuConfig,
     tier: Fidelity,
+    /// Workers granted by the fleet registry at start; every respawned
+    /// incarnation reuses exactly this grant (the dead executor's pool
+    /// threads are joined before the new one spawns, so the fleet never
+    /// exceeds its budget).
     workers: usize,
     max_queue_ops: usize,
-    handle: SubmitHandle,
-    queue: ServeQueue,
+    /// The spec's serve config with `workers` clamped to the grant —
+    /// what a respawn boots the replacement queue from.
+    serve: ServeConfig,
+    rt: RwLock<ShardRuntime>,
+    health: AtomicU8,
     /// Submissions landed here, by [`WorkloadClass::index`].
     class_counts: [AtomicU64; 4],
     /// Submissions that arrived here via spill.
     spilled_in: AtomicU64,
+    /// Submissions whose affinity was this shard but were diverted to a
+    /// sibling because this shard was quarantined/degraded.
+    rerouted_on_failure: AtomicU64,
+    /// Incarnations spawned beyond the first.
+    respawns: AtomicU64,
+}
+
+fn read_rt(slot: &ShardSlot) -> std::sync::RwLockReadGuard<'_, ShardRuntime> {
+    slot.rt.read().unwrap_or_else(|p| p.into_inner())
+}
+
+fn write_rt(slot: &ShardSlot) -> std::sync::RwLockWriteGuard<'_, ShardRuntime> {
+    slot.rt.write().unwrap_or_else(|p| p.into_inner())
+}
+
+fn serve_tier_index(tier: Fidelity) -> usize {
+    match tier {
+        Fidelity::GateLevel => 0,
+        Fidelity::WordLevel => 1,
+        Fidelity::WordSimd => 2,
+    }
 }
 
 /// The fleet dispatcher (see the module docs). Construct with
@@ -186,11 +374,18 @@ struct Shard {
 /// producer threads, then [`ServeRouter::finish`] to drain every shard
 /// and assemble the [`FleetReport`].
 pub struct ServeRouter {
-    shards: Vec<Shard>,
+    slots: Arc<Vec<ShardSlot>>,
     spill_pressure_ops: usize,
     submissions: AtomicU64,
     spilled: AtomicU64,
     misrouted: AtomicU64,
+    rerouted_on_failure: AtomicU64,
+    supervisor: Option<Supervisor>,
+}
+
+struct Supervisor {
+    handle: std::thread::JoinHandle<()>,
+    stop: Arc<AtomicBool>,
 }
 
 impl ServeRouter {
@@ -225,11 +420,13 @@ impl ServeRouter {
     }
 
     /// Spin up one [`ServeQueue`] per spec, pools sized through a shared
-    /// [`ExecutorRegistry`] over `cfg.workers_budget`.
+    /// [`ExecutorRegistry`] over `cfg.workers_budget`, plus (by default)
+    /// the supervisor thread that keeps the fleet serving through shard
+    /// deaths.
     pub fn start(specs: &[ShardSpec], cfg: RouterConfig) -> crate::Result<ServeRouter> {
         anyhow::ensure!(!specs.is_empty(), "a router needs at least one shard");
         let registry = ExecutorRegistry::new(cfg.workers_budget);
-        let mut shards: Vec<Shard> = Vec::with_capacity(specs.len());
+        let mut slots: Vec<ShardSlot> = Vec::with_capacity(specs.len());
         for spec in specs {
             let exec = registry.shard(spec.serve.workers);
             let workers = exec.workers();
@@ -241,8 +438,10 @@ impl ServeRouter {
                     // a dropped ServeQueue is never shut down, so
                     // propagating here directly would strand their
                     // dispatcher/controller/pool threads forever.
-                    for s in shards {
-                        let _ = s.queue.finish();
+                    for s in slots {
+                        if let Some(q) = write_rt(&s).queue.take() {
+                            let _ = q.finish();
+                        }
                     }
                     return Err(e.context(format!(
                         "starting shard {} at the {} tier",
@@ -251,54 +450,105 @@ impl ServeRouter {
                     )));
                 }
             };
-            shards.push(Shard {
+            let mut serve = spec.serve;
+            serve.workers = workers;
+            slots.push(ShardSlot {
                 config: spec.config,
                 tier: spec.tier,
                 workers,
                 max_queue_ops: spec.serve.max_queue_ops,
-                handle: queue.handle(),
-                queue,
+                serve,
+                rt: RwLock::new(ShardRuntime {
+                    handle: queue.handle(),
+                    queue: Some(queue),
+                    prior: Vec::new(),
+                }),
+                health: AtomicU8::new(HEALTH_HEALTHY),
                 class_counts: Default::default(),
                 spilled_in: AtomicU64::new(0),
+                rerouted_on_failure: AtomicU64::new(0),
+                respawns: AtomicU64::new(0),
             });
         }
+        let slots = Arc::new(slots);
+        let supervisor = if cfg.supervise {
+            let stop = Arc::new(AtomicBool::new(false));
+            let handle = {
+                let slots = Arc::clone(&slots);
+                let stop = Arc::clone(&stop);
+                std::thread::Builder::new()
+                    .name("fpmax-fleet-supervisor".to_string())
+                    .spawn(move || supervise(&slots, &stop, cfg))?
+            };
+            Some(Supervisor { handle, stop })
+        } else {
+            None
+        };
         Ok(ServeRouter {
-            shards,
+            slots,
             spill_pressure_ops: cfg.spill_pressure_ops,
             submissions: AtomicU64::new(0),
             spilled: AtomicU64::new(0),
             misrouted: AtomicU64::new(0),
+            rerouted_on_failure: AtomicU64::new(0),
+            supervisor,
         })
     }
 
     /// Shard count.
     pub fn shard_count(&self) -> usize {
-        self.shards.len()
+        self.slots.len()
     }
 
     /// In-flight pressure of shard `idx` (ops submitted, not yet
-    /// resolved).
+    /// resolved) — the current incarnation's.
     pub fn shard_pressure(&self, idx: usize) -> usize {
-        self.shards[idx].handle.pressure_ops()
+        read_rt(&self.slots[idx]).handle.pressure_ops()
     }
 
-    /// The dispatch decision, read-only: candidates are shards matching
-    /// the class precision and the requested tier; the affinity shard
-    /// (least-loaded, if several) wins unless spill pressure diverts to
-    /// a strictly-less-loaded compatible sibling.
+    /// Shard `idx`'s health as last set by the supervisor (always
+    /// Healthy when supervision is off).
+    pub fn shard_health(&self, idx: usize) -> ShardHealth {
+        health_of(self.slots[idx].health.load(Ordering::Relaxed))
+    }
+
+    /// Respawned incarnations of shard `idx` so far.
+    pub fn shard_respawns(&self, idx: usize) -> u64 {
+        self.slots[idx].respawns.load(Ordering::Relaxed)
+    }
+
+    /// Shard `idx`'s window size in ops (the chaos ring-flood fault
+    /// sizes its idle burst in windows, not raw slots).
+    pub fn shard_window_ops(&self, idx: usize) -> usize {
+        self.slots[idx].serve.window_ops
+    }
+
+    /// The dispatch decision, read-only: candidates are **healthy**
+    /// shards matching the class precision and the requested tier; the
+    /// affinity shard (least-loaded, if several) wins unless spill
+    /// pressure diverts to a strictly-less-loaded compatible sibling. A
+    /// class whose affinity shard exists but is not healthy fails over
+    /// to a healthy sibling ([`Placement::Failover`]); if *no* healthy
+    /// candidate serves the class, the error is a retryable
+    /// [`ServeError::ShardFailed`] so producer retry can outwait a
+    /// respawn in flight.
     fn route(&self, class: WorkloadClass, tier: Fidelity) -> crate::Result<(usize, Placement)> {
         let mut preferred: Option<(usize, usize)> = None;
         let mut alt: Option<(usize, usize)> = None;
-        for (i, s) in self.shards.iter().enumerate() {
+        let mut unhealthy_affinity = false;
+        let mut any_match = false;
+        for (i, s) in self.slots.iter().enumerate() {
             if s.config.precision != class.precision || s.tier != tier {
                 continue;
             }
-            let pressure = s.handle.pressure_ops();
-            let slot = if s.config.kind == class.service.affinity_kind() {
-                &mut preferred
-            } else {
-                &mut alt
-            };
+            any_match = true;
+            let affinity = s.config.kind == class.service.affinity_kind();
+            if s.health.load(Ordering::Relaxed) != HEALTH_HEALTHY {
+                unhealthy_affinity |= affinity;
+                continue;
+            }
+            let pressure = read_rt(s).handle.pressure_ops();
+            let slot = if affinity { &mut preferred } else { &mut alt };
             let better = match *slot {
                 None => true,
                 Some((_, best)) => pressure < best,
@@ -308,13 +558,18 @@ impl ServeRouter {
             }
         }
         match (preferred, alt) {
-            (Some((_, pp)), Some((a, ap)))
-                if pp > self.spill_pressure_ops && ap < pp =>
-            {
+            (Some((_, pp)), Some((a, ap))) if pp > self.spill_pressure_ops && ap < pp => {
                 Ok((a, Placement::Spill))
             }
             (Some((p, _)), _) => Ok((p, Placement::Affinity)),
+            (None, Some((a, _))) if unhealthy_affinity => Ok((a, Placement::Failover)),
             (None, Some((a, _))) => Ok((a, Placement::Fallback)),
+            (None, None) if any_match => Err(anyhow::Error::new(ServeError::ShardFailed)
+                .context(format!(
+                    "every shard serving {} at the {} tier is quarantined or degraded",
+                    class.name(),
+                    tier.name()
+                ))),
             (None, None) => anyhow::bail!(
                 "no shard serves {} at the {} tier",
                 class.name(),
@@ -334,32 +589,122 @@ impl ServeRouter {
         triples: Vec<OperandTriple>,
     ) -> crate::Result<(usize, Ticket)> {
         let (idx, placement) = self.route(class, tier)?;
-        let shard = &self.shards[idx];
+        let slot = &self.slots[idx];
         // Dispatch first, count after: a submission the shard rejected
         // (closed queue, dead dispatcher) must not skew the histogram or
         // the misrouted/spilled counters the acceptance gates read —
         // and a retry must not double-count.
-        let ticket = shard.handle.submit(tier, triples, shard.max_queue_ops)?;
+        let handle = read_rt(slot).handle.clone();
+        let ticket = handle.submit(tier, triples, slot.max_queue_ops)?;
         self.submissions.fetch_add(1, Ordering::Relaxed);
-        shard.class_counts[class.index()].fetch_add(1, Ordering::Relaxed);
+        slot.class_counts[class.index()].fetch_add(1, Ordering::Relaxed);
         match placement {
             Placement::Affinity => {}
             Placement::Spill => {
                 self.spilled.fetch_add(1, Ordering::Relaxed);
                 self.misrouted.fetch_add(1, Ordering::Relaxed);
-                shard.spilled_in.fetch_add(1, Ordering::Relaxed);
+                slot.spilled_in.fetch_add(1, Ordering::Relaxed);
             }
             Placement::Fallback => {
                 self.misrouted.fetch_add(1, Ordering::Relaxed);
+            }
+            Placement::Failover => {
+                // A failover is not a policy violation — the policy shard
+                // is down — so it is counted on its own axis, charged to
+                // the shard that *should* have taken the work.
+                self.rerouted_on_failure.fetch_add(1, Ordering::Relaxed);
+                slot.spilled_in.fetch_add(1, Ordering::Relaxed);
+                for s in self.slots.iter() {
+                    if s.config.precision == class.precision
+                        && s.tier == tier
+                        && s.config.kind == class.service.affinity_kind()
+                    {
+                        s.rerouted_on_failure.fetch_add(1, Ordering::Relaxed);
+                        break;
+                    }
+                }
             }
         }
         Ok((idx, ticket))
     }
 
+    /// [`ServeRouter::submit`] + a bounded wait: `Ok` with the result
+    /// bits if the submission completes within `deadline`, otherwise a
+    /// non-retryable [`ServeError::DeadlineExceeded`]. An abandoned
+    /// submission still executes (ops are pure; its ticket is dropped
+    /// and the result dies with it) — the deadline bounds the
+    /// *producer's* wait, it does not cancel queued work.
+    pub fn submit_with_deadline(
+        &self,
+        class: WorkloadClass,
+        tier: Fidelity,
+        triples: Vec<OperandTriple>,
+        deadline: Duration,
+    ) -> crate::Result<(usize, Vec<u64>)> {
+        let (idx, ticket) = self.submit(class, tier, triples)?;
+        match ticket.wait_timeout(deadline)? {
+            Some(bits) => Ok((idx, bits)),
+            None => Err(anyhow::Error::new(ServeError::DeadlineExceeded)),
+        }
+    }
+
+    /// Resilient submission: submit, wait (bounded by `deadline` when
+    /// given), and retry per `policy` — capped exponential backoff —
+    /// while the failure is a retryable serve fault
+    /// ([`ServeError::retryable`]: shard died, worker panicked, queue
+    /// closed under the submission). Deadline misses and caller bugs are
+    /// never retried.
+    ///
+    /// Exactly-once delivery is preserved across retries: each attempt
+    /// is an independent submission whose ticket hands its result out
+    /// once; a failed attempt's ticket resolved to an error (never
+    /// bits), so at most one attempt's bits are ever returned.
+    pub fn submit_with_retry(
+        &self,
+        class: WorkloadClass,
+        tier: Fidelity,
+        triples: &[OperandTriple],
+        deadline: Option<Duration>,
+        policy: RetryPolicy,
+    ) -> crate::Result<SubmitOutcome> {
+        let mut attempt = 0u32;
+        loop {
+            let r: crate::Result<(usize, Vec<u64>)> = (|| {
+                let (idx, ticket) = self.submit(class, tier, triples.to_vec())?;
+                match deadline {
+                    None => Ok((idx, ticket.wait()?)),
+                    Some(d) => match ticket.wait_timeout(d)? {
+                        Some(bits) => Ok((idx, bits)),
+                        None => Err(anyhow::Error::new(ServeError::DeadlineExceeded)),
+                    },
+                }
+            })();
+            match r {
+                Ok((shard, bits)) => {
+                    return Ok(SubmitOutcome { shard, bits, retries: attempt })
+                }
+                Err(e) => {
+                    let retryable =
+                        ServeError::classify(&e).map(ServeError::retryable).unwrap_or(false);
+                    if !retryable || attempt >= policy.max_retries {
+                        return Err(e.context(format!(
+                            "submission failed after {attempt} retr{}",
+                            if attempt == 1 { "y" } else { "ies" }
+                        )));
+                    }
+                    std::thread::sleep(policy.backoff(attempt));
+                    attempt += 1;
+                }
+            }
+        }
+    }
+
     /// Dispatch an idle phase (accounting-only issue slots) to the
     /// class's affinity shard — idle never spills; it is the shard's own
     /// low-utilization gap, the thing its adaptive controller re-biases
-    /// through. Returns the shard index.
+    /// through. Returns the shard index. Idle submitted while the
+    /// affinity shard is down is dropped with a retryable error (an idle
+    /// gap on a dead shard is not accounting anyone needs).
     pub fn submit_idle(
         &self,
         class: WorkloadClass,
@@ -368,7 +713,7 @@ impl ServeRouter {
     ) -> crate::Result<usize> {
         // Pure affinity: ignore pressure entirely.
         let mut pick = None;
-        for (i, s) in self.shards.iter().enumerate() {
+        for (i, s) in self.slots.iter().enumerate() {
             if s.config.precision != class.precision || s.tier != tier {
                 continue;
             }
@@ -381,65 +726,141 @@ impl ServeRouter {
         let idx = pick.ok_or_else(|| {
             anyhow::anyhow!("no shard serves {} at the {} tier", class.name(), tier.name())
         })?;
-        self.shards[idx].handle.submit_idle(slots)?;
+        let handle = read_rt(&self.slots[idx]).handle.clone();
+        handle.submit_idle(slots)?;
         Ok(idx)
+    }
+
+    /// A producer handle onto shard `idx`'s current incarnation — test
+    /// and chaos hook (fault injection wants a specific shard, not a
+    /// routing decision).
+    pub fn shard_handle(&self, idx: usize) -> SubmitHandle {
+        read_rt(&self.slots[idx]).handle.clone()
     }
 
     /// Close every shard, drain, join, and assemble the fleet report.
     /// Shard order in the report matches the spec order given to
     /// [`ServeRouter::start`].
+    ///
+    /// Accounting is merged **across incarnations**: a shard that died
+    /// and was respawned contributes every incarnation's ops, latencies
+    /// and streamed energy to the fleet totals (exact sums — nothing a
+    /// dead incarnation completed is lost). A shard that is dead *at
+    /// finish time* with supervision off errors, exactly as before
+    /// supervision existed.
     pub fn finish(self) -> crate::Result<FleetReport> {
+        // Stop the supervisor first so no respawn races the teardown.
+        if let Some(sup) = self.supervisor {
+            sup.stop.store(true, Ordering::Relaxed);
+            let _ = sup.handle.join();
+        }
         let spilled = self.spilled.load(Ordering::Relaxed);
         let misrouted = self.misrouted.load(Ordering::Relaxed);
         let submissions = self.submissions.load(Ordering::Relaxed);
+        let rerouted_on_failure = self.rerouted_on_failure.load(Ordering::Relaxed);
+        let slots = Arc::try_unwrap(self.slots).map_err(|_| {
+            anyhow::anyhow!("invariant: supervisor joined but the shard table is still shared")
+        })?;
         // Finish EVERY shard before propagating any error: each finish()
         // closes that shard's queue and joins its dispatcher/controller
         // threads, so bailing on the first failure would leak the
         // siblings' threads for the life of the process.
         let mut first_err: Option<anyhow::Error> = None;
-        let mut shards = Vec::with_capacity(self.shards.len());
-        for s in self.shards {
-            match s.queue.finish() {
-                Ok(report) => shards.push(ShardReport {
+        let mut shards = Vec::with_capacity(slots.len());
+        for s in slots {
+            let rt = s.rt.into_inner().unwrap_or_else(|p| p.into_inner());
+            let final_report = match rt.queue {
+                Some(q) => match q.finish() {
+                    Ok(report) => Some(report),
+                    Err(e) => {
+                        let e =
+                            e.context(format!("shard {} failed to finish", s.config.name()));
+                        first_err.get_or_insert(e);
+                        None
+                    }
+                },
+                // Dead at finish with the respawn incomplete: the prior
+                // incarnations were salvaged, but the shard has no live
+                // incarnation to report — surface it instead of quietly
+                // under-reporting the fleet.
+                None => {
+                    first_err.get_or_insert(
+                        anyhow::Error::new(ServeError::ShardFailed).context(format!(
+                            "shard {} was down at finish with its respawn incomplete",
+                            s.config.name()
+                        )),
+                    );
+                    None
+                }
+            };
+            if let Some(report) = final_report {
+                shards.push(ShardReport {
                     unit: s.config.name(),
                     config: s.config,
                     tier: s.tier,
                     workers: s.workers,
                     class_counts: s.class_counts.map(|c| c.into_inner()),
                     spilled_in: s.spilled_in.into_inner(),
+                    rerouted_on_failure: s.rerouted_on_failure.into_inner(),
+                    respawns: s.respawns.into_inner(),
+                    health: health_of(s.health.into_inner()),
+                    prior: rt.prior,
                     report,
-                }),
-                Err(e) => {
-                    let e = e.context(format!("shard {} failed to finish", s.config.name()));
-                    first_err.get_or_insert(e);
-                }
+                });
             }
         }
         if let Some(e) = first_err {
             return Err(e);
         }
-        let ops = shards.iter().map(|s| s.report.ops).sum();
-        // Fleet latency distribution: every shard's (sorted) latencies
-        // merged, then re-sorted once.
-        let mut latencies: Vec<f64> =
-            shards.iter().flat_map(|s| s.report.latencies_s.iter().copied()).collect();
-        latencies.sort_by(|a, b| a.partial_cmp(b).expect("NaN latency"));
+        let ops = shards.iter().map(ShardReport::total_ops).sum();
+        // Fleet latency distribution: every incarnation's (sorted)
+        // latencies merged, then re-sorted once.
+        let mut latencies: Vec<f64> = shards
+            .iter()
+            .flat_map(|s| {
+                s.report
+                    .latencies_s
+                    .iter()
+                    .chain(s.prior.iter().flat_map(|p| p.latencies_s.iter()))
+                    .copied()
+            })
+            .collect();
+        latencies.sort_by(|a, b| {
+            a.partial_cmp(b).expect("invariant: submission latencies are never NaN")
+        });
         let (p50, p99) = if latencies.is_empty() {
             (0.0, 0.0)
         } else {
             (percentile(&latencies, 0.50), percentile(&latencies, 0.99))
         };
-        // Union busy span on the shared monotonic clock.
-        let first = shards.iter().filter_map(|s| s.report.first_batch).min();
-        let last = shards.iter().filter_map(|s| s.report.busy_until).max();
+        // Union busy span on the shared monotonic clock, incarnations
+        // included.
+        let first = shards
+            .iter()
+            .flat_map(|s| {
+                s.report.first_batch.into_iter().chain(s.prior.iter().filter_map(|p| p.first_batch))
+            })
+            .min();
+        let last = shards
+            .iter()
+            .flat_map(|s| {
+                s.report.busy_until.into_iter().chain(s.prior.iter().filter_map(|p| p.busy_until))
+            })
+            .max();
         let busy_secs = match (first, last) {
             (Some(t0), Some(t1)) => t1.duration_since(t0).as_secs_f64(),
             _ => 0.0,
         };
-        let energy = merge_run_energies(shards.iter().map(|s| &s.report.streamed.energy));
+        let energy = merge_run_energies(shards.iter().flat_map(|s| {
+            s.prior
+                .iter()
+                .map(|p| &p.streamed.energy)
+                .chain(std::iter::once(&s.report.streamed.energy))
+        }));
         Ok(FleetReport {
             spilled,
             misrouted,
+            rerouted_on_failure,
             submissions,
             ops,
             fleet_energy: energy,
@@ -449,6 +870,135 @@ impl ServeRouter {
             fleet_sustained_ops_per_s: if busy_secs > 0.0 { ops as f64 / busy_secs } else { 0.0 },
             shards,
         })
+    }
+}
+
+/// The supervisor loop: poll every shard's dispatcher liveness; on a
+/// death, quarantine → salvage the incarnation's accounting → respawn
+/// on the same worker grant (calibration re-seeded from the salvage) →
+/// probe → re-admit. Runs until `stop` is set by
+/// [`ServeRouter::finish`].
+fn supervise(slots: &[ShardSlot], stop: &AtomicBool, cfg: RouterConfig) {
+    while !stop.load(Ordering::Relaxed) {
+        for slot in slots {
+            if stop.load(Ordering::Relaxed) {
+                return;
+            }
+            match health_of(slot.health.load(Ordering::Relaxed)) {
+                ShardHealth::Healthy | ShardHealth::Quarantined => {
+                    // 0 = alive, 1 = dead (salvage + respawn),
+                    // 2 = no incarnation at all (a previous respawn
+                    // failed to boot — retry it).
+                    let state = {
+                        let rt = read_rt(slot);
+                        match rt.queue.as_ref() {
+                            Some(q) if q.dispatcher_alive() => 0u8,
+                            Some(_) => 1,
+                            None => 2,
+                        }
+                    };
+                    match state {
+                        1 => {
+                            slot.health.store(HEALTH_QUARANTINED, Ordering::Relaxed);
+                            respawn(slot);
+                        }
+                        2 => {
+                            let mut rt = write_rt(slot);
+                            if rt.queue.is_none() {
+                                let cal = rt.prior.last().map(|p| p.tier_cal);
+                                boot(slot, &mut rt, cal);
+                            }
+                        }
+                        _ => {}
+                    }
+                }
+                ShardHealth::Degraded => probe(slot, &cfg),
+            }
+        }
+        std::thread::sleep(cfg.supervision_poll);
+    }
+}
+
+/// Salvage a dead incarnation's accounting and boot its replacement.
+/// On success the slot is Degraded (awaiting probe); on failure it
+/// stays Quarantined and the next supervisor pass retries.
+fn respawn(slot: &ShardSlot) {
+    let mut rt = write_rt(slot);
+    let Some(queue) = rt.queue.take() else {
+        return;
+    };
+    // The dispatcher is dead, so this joins immediately; the salvaged
+    // report is exact up to the moment of death.
+    let salvaged = match queue.finish_salvaging() {
+        Ok(s) => s,
+        Err(_) => {
+            // Report assembly itself failed (controller died too) — the
+            // incarnation's accounting is unrecoverable, but the shard
+            // can still be respawned; the slot just loses that
+            // incarnation's prior entry.
+            boot(slot, &mut rt, None);
+            return;
+        }
+    };
+    let tier_cal = salvaged.report.tier_cal;
+    rt.prior.push(salvaged.report);
+    boot(slot, &mut rt, Some(tier_cal));
+}
+
+/// Start a fresh incarnation into `rt` (the slot's write lock is held).
+fn boot(
+    slot: &ShardSlot,
+    rt: &mut ShardRuntime,
+    tier_cal: Option<[(usize, usize); 3]>,
+) {
+    let exec = BatchExecutor::new(slot.workers);
+    if let Some(cal) = tier_cal {
+        // Reuse the dead incarnation's chunk calibration for the shard's
+        // tier, under the tier's own key — the staleness rules still
+        // apply, so a bogus hint is re-timed, not trusted.
+        let (chunk, cal_ops) = cal[serve_tier_index(slot.tier)];
+        if chunk != 0 {
+            exec.seed_calibration(chunk, cal_ops, calibration_key(slot.tier));
+        }
+    }
+    let unit = FpuUnit::generate(&slot.config);
+    match ServeQueue::start_with_executor(&unit, slot.serve, exec) {
+        Ok(queue) => {
+            rt.handle = queue.handle();
+            rt.queue = Some(queue);
+            slot.respawns.fetch_add(1, Ordering::Relaxed);
+            slot.health.store(HEALTH_DEGRADED, Ordering::Relaxed);
+        }
+        Err(_) => {
+            // Stay quarantined; the next pass retries the respawn.
+            slot.health.store(HEALTH_QUARANTINED, Ordering::Relaxed);
+        }
+    }
+}
+
+/// Probe-based re-admission: a seeded submission must round-trip
+/// through the respawned shard before it takes routed traffic again.
+fn probe(slot: &ShardSlot, cfg: &RouterConfig) {
+    let handle = read_rt(slot).handle.clone();
+    let respawns = slot.respawns.load(Ordering::Relaxed);
+    // Deterministic probe operands: keyed by the incarnation number so
+    // a re-probe never replays the previous probe's stream.
+    let triples = OperandStream::new(slot.config.precision, OperandMix::Finite, 0xF9 + respawns)
+        .batch(cfg.probe_ops.max(1));
+    let ticket = match handle.submit(slot.tier, triples, slot.max_queue_ops) {
+        Ok(t) => t,
+        Err(_) => {
+            // The fresh incarnation is already dead — back to quarantine;
+            // the liveness check will respawn again.
+            slot.health.store(HEALTH_QUARANTINED, Ordering::Relaxed);
+            return;
+        }
+    };
+    match ticket.wait_timeout(cfg.probe_timeout) {
+        Ok(Some(_bits)) => slot.health.store(HEALTH_HEALTHY, Ordering::Relaxed),
+        // Still in flight: stay Degraded, re-probe next pass.
+        Ok(None) => {}
+        Err(_) => slot.health.store(HEALTH_QUARANTINED, Ordering::Relaxed),
     }
 }
 
@@ -463,13 +1013,52 @@ pub struct ShardReport {
     pub workers: usize,
     /// Submissions landed here, by [`WorkloadClass::index`].
     pub class_counts: [u64; 4],
-    /// How many of those arrived via spill.
+    /// How many of those arrived via spill or failover.
     pub spilled_in: u64,
-    /// The shard's own [`ServeReport`] — streamed-vs-post-hoc BB
-    /// identity, cross-check, latency percentiles, master trace — exactly
-    /// as a single-unit serve run would have produced on this shard's
-    /// stream.
+    /// Submissions whose affinity was this shard, diverted to a sibling
+    /// while this shard was quarantined/degraded.
+    pub rerouted_on_failure: u64,
+    /// Incarnations spawned beyond the first (0 = never died).
+    pub respawns: u64,
+    /// Health at finish time.
+    pub health: ShardHealth,
+    /// Dead incarnations' salvaged reports, oldest first — exact
+    /// accounting up to each death; merged into the fleet totals.
+    pub prior: Vec<ServeReport>,
+    /// The final incarnation's own [`ServeReport`] — streamed-vs-post-hoc
+    /// BB identity, cross-check, latency percentiles, master trace —
+    /// exactly as a single-unit serve run would have produced on this
+    /// shard's stream.
     pub report: ServeReport,
+}
+
+impl ShardReport {
+    /// Ops across every incarnation of this shard.
+    pub fn total_ops(&self) -> u64 {
+        self.report.ops + self.prior.iter().map(|p| p.ops).sum::<u64>()
+    }
+
+    /// Exact-sum energy across every incarnation.
+    pub fn total_energy(&self) -> BbRunEnergy {
+        merge_run_energies(
+            self.prior
+                .iter()
+                .map(|p| &p.streamed.energy)
+                .chain(std::iter::once(&self.report.streamed.energy)),
+        )
+    }
+
+    /// The BB identity gate across incarnations: the live incarnation
+    /// passes its full overflow-aware gate; dead incarnations must be
+    /// exact on the window sequence their controller actually received
+    /// (a dispatcher that dies with a coalesced window still pending
+    /// cannot flush it — that one window's *granularity* is lost with
+    /// the incarnation, never its ops or energy, which are salvaged from
+    /// the master trace).
+    pub fn bb_gate_ok(&self) -> bool {
+        self.report.bb_gate_ok()
+            && self.prior.iter().all(|p| p.received_schedule_matches)
+    }
 }
 
 /// Outcome of one routed serve run ([`ServeRouter::finish`]).
@@ -479,19 +1068,24 @@ pub struct FleetReport {
     pub shards: Vec<ShardReport>,
     /// Dispatches diverted off-affinity by backlog pressure.
     pub spilled: u64,
-    /// Dispatches that landed on an off-affinity shard for any reason
-    /// (spill or missing-affinity fallback). Zero under the static
-    /// policy with no spill pressure.
+    /// Dispatches that landed on an off-affinity shard for any
+    /// *policy* reason (spill or missing-affinity fallback). Zero under
+    /// the static policy with no spill pressure — health failovers are
+    /// counted in `rerouted_on_failure`, not here.
     pub misrouted: u64,
+    /// Dispatches diverted off a quarantined/degraded affinity shard.
+    pub rerouted_on_failure: u64,
     /// Total op submissions dispatched.
     pub submissions: u64,
-    /// Total ops executed across the fleet.
+    /// Total ops executed across the fleet, every incarnation included.
     pub ops: u64,
-    /// Exact sum of the shards' streamed energy accounting
-    /// ([`crate::bb::merge_run_energies`]); each shard's own numbers
-    /// remain bit-identical to its post-hoc single-shard path.
+    /// Exact sum of the shards' streamed energy accounting across every
+    /// incarnation ([`crate::bb::merge_run_energies`]); each
+    /// incarnation's own numbers remain bit-identical to its post-hoc
+    /// single-shard path.
     pub fleet_energy: BbRunEnergy,
-    /// Cross-shard submission-latency percentiles (merged distribution).
+    /// Cross-shard submission-latency percentiles (merged distribution,
+    /// every incarnation included).
     pub fleet_p50_latency_s: f64,
     pub fleet_p99_latency_s: f64,
     /// Union busy span: earliest shard first-batch → latest shard
@@ -503,18 +1097,37 @@ pub struct FleetReport {
 
 impl FleetReport {
     /// The fleet-level hard gate: every shard passes its own
-    /// overflow-aware streamed-vs-post-hoc BB identity gate.
+    /// overflow-aware streamed-vs-post-hoc BB identity gate, dead
+    /// incarnations included (see [`ShardReport::bb_gate_ok`]).
     pub fn bb_gate_ok(&self) -> bool {
-        self.shards.iter().all(|s| s.report.bb_gate_ok())
+        self.shards.iter().all(ShardReport::bb_gate_ok)
     }
 
-    /// Sampled gate cross-check totals across the fleet.
+    /// Sampled gate cross-check totals across the fleet (every
+    /// incarnation).
     pub fn crosscheck_sampled(&self) -> u64 {
-        self.shards.iter().map(|s| s.report.crosscheck_sampled).sum()
+        self.shards
+            .iter()
+            .map(|s| {
+                s.report.crosscheck_sampled
+                    + s.prior.iter().map(|p| p.crosscheck_sampled).sum::<u64>()
+            })
+            .sum()
     }
 
     pub fn crosscheck_mismatches(&self) -> u64 {
-        self.shards.iter().map(|s| s.report.crosscheck_mismatches).sum()
+        self.shards
+            .iter()
+            .map(|s| {
+                s.report.crosscheck_mismatches
+                    + s.prior.iter().map(|p| p.crosscheck_mismatches).sum::<u64>()
+            })
+            .sum()
+    }
+
+    /// Respawned incarnations across the fleet (0 = nothing ever died).
+    pub fn respawns(&self) -> u64 {
+        self.shards.iter().map(|s| s.respawns).sum()
     }
 
     /// Fraction of dispatches that landed off-affinity (0.0 when nothing
@@ -559,5 +1172,36 @@ impl FleetReport {
             *row = self.shards.iter().map(|s| s.class_counts[c]).collect();
         }
         hist
+    }
+
+    /// The conservation identity the chaos harness gates on: fleet ops
+    /// equal the sum over every shard of every incarnation's ops, and
+    /// the fleet energy equals the exact re-merge of the same
+    /// incarnations' streamed energies. True by construction — exposed
+    /// so an external report consumer can re-verify from the parts.
+    pub fn conservation_ok(&self) -> bool {
+        let ops_sum: u64 = self.shards.iter().map(ShardReport::total_ops).sum();
+        let energy_sum = merge_run_energies(self.shards.iter().flat_map(|s| {
+            s.prior
+                .iter()
+                .map(|p| &p.streamed.energy)
+                .chain(std::iter::once(&s.report.streamed.energy))
+        }));
+        let lat_count: usize = self
+            .shards
+            .iter()
+            .map(|s| {
+                s.report.latencies_s.len()
+                    + s.prior.iter().map(|p| p.latencies_s.len()).sum::<usize>()
+            })
+            .sum();
+        let completed: u64 = self
+            .shards
+            .iter()
+            .map(|s| {
+                s.report.submissions + s.prior.iter().map(|p| p.submissions).sum::<u64>()
+            })
+            .sum();
+        ops_sum == self.ops && energy_sum == self.fleet_energy && lat_count as u64 == completed
     }
 }

@@ -31,7 +31,17 @@
 //!   controller's energy accounting never drops an op;
 //! * every ticket resolves: a dispatcher that dies mid-run errors all
 //!   outstanding submissions (queued and mid-batch) instead of hanging
-//!   their producers.
+//!   their producers;
+//! * faults are **contained and typed**: a panicking lane kernel errors
+//!   only its batch's tickets ([`ServeError::WorkerPanic`], the batch is
+//!   never published so the streamed-BB bit-identity contract is
+//!   untouched), a dead dispatcher is salvageable
+//!   ([`ServeQueue::finish_salvaging`] recovers the partial
+//!   [`ServeReport`] — exact ops/energy/latency accounting up to the
+//!   moment of death — so fleet supervision can respawn the shard and
+//!   keep conservation exact across incarnations), and every error a
+//!   producer can see downcasts to a [`ServeError`] that says whether a
+//!   resubmission is safe.
 //!
 //! One `ServeQueue` serves one unit. The multi-unit serving surface —
 //! one shard per (unit preset × precision × fidelity tier) behind a
@@ -48,7 +58,7 @@ use std::time::{Duration, Instant};
 use crate::arch::engine::{
     calibration_key, chunk_from_per_op, window_ring, ActivityAccumulator, ActivityTrace,
     ActivityWindow, BatchExecutor, Datapath, Fidelity, SendPtr, UnitDatapath, WindowProducer,
-    CALIBRATION_OPS, RECAL_RATIO, SERIAL_CUTOFF,
+    WorkerPanicked, CALIBRATION_OPS, RECAL_RATIO, SERIAL_CUTOFF,
 };
 use crate::arch::generator::{FpuConfig, FpuUnit};
 use crate::bb::{run_energy_trace, window_bias_schedule, BbPolicy, BbRunEnergy, StreamedBb,
@@ -60,6 +70,87 @@ use crate::workloads::throughput::OperandTriple;
 
 /// Cap on reported cross-check mismatch indices.
 const MISMATCH_CAP: usize = 8;
+
+/// Typed fault classification of the serve layer. Every error a
+/// producer-facing call can return on a *fault path* (as opposed to a
+/// misuse or invariant path) carries one of these as its source, so
+/// retry logic can downcast ([`ServeError::classify`]) and decide
+/// whether a resubmission is safe instead of string-matching messages.
+///
+/// Ops are pure — resubmitting a dropped or failed batch can never
+/// double-apply an effect — so the only *unsafe* retries are the ones
+/// that would paper over a caller bug ([`ServeError::ResultTaken`]) or
+/// a blown latency budget ([`ServeError::DeadlineExceeded`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ServeError {
+    /// The dispatcher died (or the queue was torn down) before this
+    /// submission completed; the shard may be respawned by a supervisor.
+    ShardFailed,
+    /// A worker panicked while executing this submission's batch; the
+    /// batch was discarded whole (never published), the shard survives.
+    WorkerPanic,
+    /// The queue is closed to new work (shutdown, or a dead dispatcher's
+    /// teardown guard) — a router-level retry may find a respawned shard.
+    QueueClosed,
+    /// This ticket's result was already taken by an earlier wait
+    /// (results are handed out exactly once) — a caller bug, not a fault.
+    ResultTaken,
+    /// A deadline-bounded wait ran out before the submission completed
+    /// ([`crate::runtime::router::ServeRouter::submit_with_deadline`]).
+    DeadlineExceeded,
+}
+
+impl ServeError {
+    /// Whether a fresh submission of the same ops is safe and useful.
+    pub fn retryable(self) -> bool {
+        match self {
+            ServeError::ShardFailed | ServeError::WorkerPanic | ServeError::QueueClosed => true,
+            ServeError::ResultTaken | ServeError::DeadlineExceeded => false,
+        }
+    }
+
+    /// Downcast an error chain to its serve-layer classification, if any.
+    pub fn classify(err: &anyhow::Error) -> Option<ServeError> {
+        err.chain().find_map(|e| e.downcast_ref::<ServeError>().copied())
+    }
+}
+
+impl std::fmt::Display for ServeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let msg = match self {
+            ServeError::ShardFailed => {
+                "serve dispatcher dropped this submission (dispatcher died or the queue was torn down)"
+            }
+            ServeError::WorkerPanic => {
+                "engine worker panicked executing this submission's batch (batch discarded whole)"
+            }
+            ServeError::QueueClosed => "serve queue is closed to new work",
+            ServeError::ResultTaken => "serve result already taken by an earlier wait",
+            ServeError::DeadlineExceeded => "submission deadline exceeded",
+        };
+        f.write_str(msg)
+    }
+}
+
+impl std::error::Error for ServeError {}
+
+/// Lock, tolerating poison. The serve layer's shared maps are only
+/// mutated in short, panic-free critical sections; a poisoned flag
+/// therefore means *another* thread died while holding the guard — the
+/// data behind it is still consistent, and fault/teardown paths must
+/// keep accounting (chaos gate: zero lost ops) instead of aborting on
+/// the flag.
+fn lock_unpoisoned<T>(m: &Mutex<T>) -> std::sync::MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+/// [`Condvar::wait`] with the same poison tolerance as [`lock_unpoisoned`].
+fn wait_unpoisoned<'a, T>(
+    cv: &Condvar,
+    g: std::sync::MutexGuard<'a, T>,
+) -> std::sync::MutexGuard<'a, T> {
+    cv.wait(g).unwrap_or_else(|p| p.into_inner())
+}
 
 /// Configuration of a [`ServeQueue`].
 #[derive(Debug, Clone, Copy)]
@@ -146,24 +237,25 @@ struct Completion {
 #[derive(Default)]
 struct CompletionState {
     bits: Option<Vec<u64>>,
-    /// Set instead of `bits` when the dispatcher dropped the submission
-    /// (it died mid-run, or the queue was torn down under it).
-    err: Option<&'static str>,
+    /// Set instead of `bits` when the dispatcher dropped or failed the
+    /// submission (it died mid-run, a worker panicked executing the
+    /// batch, or the queue was torn down under it).
+    err: Option<ServeError>,
     done: bool,
 }
 
 impl CompletionState {
     fn take(&mut self) -> crate::Result<Vec<u64>> {
         match self.err {
-            Some(e) => Err(anyhow::anyhow!("{e}")),
+            Some(e) => Err(anyhow::Error::new(e)),
             // The dispatcher always sets `bits` on completion (empty
             // submissions complete with an empty vec), so a done ticket
             // with no bits means an earlier wait already consumed them —
             // distinct from a legitimate empty result.
-            None => self
-                .bits
-                .take()
-                .ok_or_else(|| anyhow::anyhow!("serve result already taken by an earlier wait")),
+            None => match self.bits.take() {
+                Some(bits) => Ok(bits),
+                None => Err(anyhow::Error::new(ServeError::ResultTaken)),
+            },
         }
     }
 }
@@ -184,9 +276,9 @@ impl Ticket {
     /// result bits, one per submitted triple, in submission order, or an
     /// error if the dispatcher dropped the submission.
     pub fn wait(self) -> crate::Result<Vec<u64>> {
-        let mut st = self.done.state.lock().expect("serve completion poisoned");
+        let mut st = lock_unpoisoned(&self.done.state);
         while !st.done {
-            st = self.done.cv.wait(st).expect("serve completion poisoned");
+            st = wait_unpoisoned(&self.done.cv, st);
         }
         st.take()
     }
@@ -202,10 +294,10 @@ impl Ticket {
         // as a wait-forever sentinel) degrades to an untimed wait
         // instead of panicking on Instant overflow.
         let deadline = Instant::now().checked_add(timeout);
-        let mut st = self.done.state.lock().expect("serve completion poisoned");
+        let mut st = lock_unpoisoned(&self.done.state);
         while !st.done {
             match deadline {
-                None => st = self.done.cv.wait(st).expect("serve completion poisoned"),
+                None => st = wait_unpoisoned(&self.done.cv, st),
                 Some(d) => {
                     let now = Instant::now();
                     if now >= d {
@@ -215,7 +307,7 @@ impl Ticket {
                         .done
                         .cv
                         .wait_timeout(st, d - now)
-                        .expect("serve completion poisoned");
+                        .unwrap_or_else(|p| p.into_inner());
                     st = g;
                 }
             }
@@ -225,7 +317,7 @@ impl Ticket {
 
     /// Non-blocking poll: `Ok(None)` while the submission is in flight.
     pub fn try_wait(&self) -> crate::Result<Option<Vec<u64>>> {
-        let mut st = self.done.state.lock().expect("serve completion poisoned");
+        let mut st = lock_unpoisoned(&self.done.state);
         if !st.done {
             return Ok(None);
         }
@@ -243,10 +335,16 @@ enum Work {
     /// Fault injection ([`SubmitHandle::inject_fault`]): the dispatcher
     /// panics when it dequeues this, exercising the ticket-teardown path.
     Fault,
+    /// Fault injection ([`SubmitHandle::inject_worker_panic`]): the next
+    /// ops batch's parallel region panics — a stand-in for a lane-kernel
+    /// bug — exercising the containment path: that batch's tickets error
+    /// with [`ServeError::WorkerPanic`], the shard survives.
+    WorkerFault,
+    /// Fault injection ([`SubmitHandle::inject_latency`]): the
+    /// dispatcher stalls this long before processing further work — a
+    /// stand-in for a degraded shard backing up its queue.
+    Latency(Duration),
 }
-
-const DROPPED_SUBMISSION: &str =
-    "serve dispatcher dropped this submission (dispatcher died or the queue was torn down)";
 
 struct OpsSub {
     tier: Fidelity,
@@ -270,13 +368,25 @@ impl Drop for OpsSub {
     /// after a dispatcher death — errors it, so producers blocked in
     /// [`Ticket::wait`] never hang.
     fn drop(&mut self) {
-        self.pressure.fetch_sub(self.triples.len(), Ordering::Relaxed);
-        let mut st = match self.done.state.lock() {
-            Ok(g) => g,
-            Err(p) => p.into_inner(),
-        };
+        // Saturating decrement: `pressure` is the router's lock-free
+        // load/spill signal, and this drop can run on fault paths (a
+        // teardown drain racing a respawn, a submission dropped between
+        // enqueue and dispatch). An unbalanced decrement must clamp at
+        // zero, not wrap to usize::MAX and freeze the shard out of every
+        // routing decision.
+        let n = self.triples.len();
+        let mut cur = self.pressure.load(Ordering::Relaxed);
+        while let Err(seen) = self.pressure.compare_exchange_weak(
+            cur,
+            cur.saturating_sub(n),
+            Ordering::Relaxed,
+            Ordering::Relaxed,
+        ) {
+            cur = seen;
+        }
+        let mut st = lock_unpoisoned(&self.done.state);
         if !st.done {
-            st.err = Some(DROPPED_SUBMISSION);
+            st.err = Some(ServeError::ShardFailed);
             st.done = true;
             drop(st);
             self.done.cv.notify_all();
@@ -327,11 +437,13 @@ impl SubmitHandle {
         // dispatcher: workers write straight into it (zero-copy) and
         // the ticket receives it whole.
         let out = vec![0u64; n];
-        let mut st = self.shared.q.lock().expect("serve queue poisoned");
+        let mut st = lock_unpoisoned(&self.shared.q);
         while !st.closed && st.queued_ops > 0 && st.queued_ops + n > max_queue_ops {
-            st = self.shared.space.wait(st).expect("serve queue poisoned");
+            st = wait_unpoisoned(&self.shared.space, st);
         }
-        anyhow::ensure!(!st.closed, "serve queue is closed");
+        if st.closed {
+            return Err(anyhow::Error::new(ServeError::QueueClosed));
+        }
         st.queued_ops += n;
         self.shared.pressure.fetch_add(n, Ordering::Relaxed);
         st.items.push_back(Work::Ops(OpsSub {
@@ -359,12 +471,23 @@ impl SubmitHandle {
     /// ticket-teardown contract — every outstanding ticket must resolve
     /// with an error instead of hanging its producer.
     pub fn inject_fault(&self) -> crate::Result<()> {
-        let mut st = self.shared.q.lock().expect("serve queue poisoned");
-        anyhow::ensure!(!st.closed, "serve queue is closed");
-        st.items.push_back(Work::Fault);
-        drop(st);
-        self.shared.work.notify_one();
-        Ok(())
+        self.push_work(Work::Fault)
+    }
+
+    /// Fault injection: make the next coalesced ops batch panic inside
+    /// its parallel region (a stand-in for a lane-kernel bug). Unlike
+    /// [`SubmitHandle::inject_fault`] the dispatcher *survives*: the
+    /// batch's tickets error with [`ServeError::WorkerPanic`], the batch
+    /// is never published, and the shard keeps serving.
+    pub fn inject_worker_panic(&self) -> crate::Result<()> {
+        self.push_work(Work::WorkerFault)
+    }
+
+    /// Fault injection: stall the dispatcher for `dur` when it reaches
+    /// this point of the queue (a degraded-shard drill for the router's
+    /// load-aware spill and the chaos harness's deadline paths).
+    pub fn inject_latency(&self, dur: Duration) -> crate::Result<()> {
+        self.push_work(Work::Latency(dur))
     }
 
     /// Submit an idle phase of `slots` issue slots (accounting only — no
@@ -375,9 +498,15 @@ impl SubmitHandle {
         if slots == 0 {
             return Ok(());
         }
-        let mut st = self.shared.q.lock().expect("serve queue poisoned");
-        anyhow::ensure!(!st.closed, "serve queue is closed");
-        st.items.push_back(Work::Idle { slots });
+        self.push_work(Work::Idle { slots })
+    }
+
+    fn push_work(&self, w: Work) -> crate::Result<()> {
+        let mut st = lock_unpoisoned(&self.shared.q);
+        if st.closed {
+            return Err(anyhow::Error::new(ServeError::QueueClosed));
+        }
+        st.items.push_back(w);
         drop(st);
         self.shared.work.notify_one();
         Ok(())
@@ -500,20 +629,60 @@ fn tier_index(tier: Fidelity) -> usize {
     }
 }
 
-/// What the dispatcher thread hands back at shutdown.
-struct DispatchOutcome {
+/// The dispatcher's running accounting, shared with the owning
+/// [`ServeQueue`] behind a mutex so it **survives dispatcher death**: the
+/// dispatcher syncs it at every publish point (once per batch / idle gap
+/// — never inside the execution hot path), so when an injected fault or
+/// a real bug unwinds the dispatcher thread, [`ServeQueue::finish_salvaging`]
+/// still recovers exact ops/energy/latency accounting up to the last
+/// completed batch. That is what lets fleet supervision respawn a shard
+/// and keep `FleetReport` conservation exact across incarnations.
+#[derive(Clone)]
+struct DispatchStats {
     master: ActivityTrace,
     ops: u64,
     batches: u64,
+    /// Batches discarded whole because a worker panicked executing them
+    /// (their submissions are in `errored_submissions`, their windows
+    /// were never published).
+    failed_batches: u64,
     submissions: u64,
+    /// Submissions resolved with an error instead of bits.
+    errored_submissions: u64,
     latencies: Vec<f64>,
     crosscheck_sampled: u64,
     crosscheck_mismatches: u64,
     mismatch_indices: Vec<usize>,
-    busy_secs: f64,
     first_batch: Option<Instant>,
     busy_until: Option<Instant>,
+    /// Refreshed after every publish, so it is exact even at panic time
+    /// (no windows are published after the last sync).
     ring_coalesced: u64,
+    /// Saved (chunk_hint, calibrated_ops) per tier, synced on every tier
+    /// swap — a respawned incarnation re-seeds from this so it does not
+    /// pay cold calibration again.
+    tier_cal: [(usize, usize); 3],
+}
+
+impl DispatchStats {
+    fn new(window_ops: usize, tier_cal: [(usize, usize); 3]) -> DispatchStats {
+        DispatchStats {
+            master: ActivityTrace::from_raw_windows(window_ops as u64, Vec::new()),
+            ops: 0,
+            batches: 0,
+            failed_batches: 0,
+            submissions: 0,
+            errored_submissions: 0,
+            latencies: Vec::new(),
+            crosscheck_sampled: 0,
+            crosscheck_mismatches: 0,
+            mismatch_indices: Vec::new(),
+            first_batch: None,
+            busy_until: None,
+            ring_coalesced: 0,
+            tier_cal,
+        }
+    }
 }
 
 /// The dispatcher: owns the engine side of the serve loop.
@@ -528,7 +697,6 @@ struct Dispatcher {
     max_batch_ops: usize,
     crosscheck_every: usize,
     producer: WindowProducer,
-    master: ActivityTrace,
     /// Saved (chunk_hint, calibrated_ops) per tier — one pool, per-tier
     /// calibration (per-op costs differ ~10× between tiers). Seeded back
     /// under the tier's [`calibration_key`], so a hint that somehow
@@ -536,27 +704,23 @@ struct Dispatcher {
     /// dropped by the staleness check instead of trusted.
     tier_cal: [(usize, usize); 3],
     cur_tier: Option<usize>,
+    /// The next ops batch panics its parallel region (containment drill).
+    force_worker_panic: bool,
     // Reused scratch (allocation-free once grown to the batch shape).
     batch_items: Vec<OpsSub>,
     segs: Vec<Segment>,
     accs: Vec<ActivityAccumulator>,
     queues: StealQueues,
-    // Stats.
-    ops: u64,
-    batches: u64,
-    submissions: u64,
-    latencies: Vec<f64>,
-    crosscheck_sampled: u64,
-    crosscheck_mismatches: u64,
-    mismatch_indices: Vec<usize>,
-    first_batch: Option<Instant>,
-    busy_until: Option<Instant>,
+    /// Shared accounting (see [`DispatchStats`]).
+    stats: Arc<Mutex<DispatchStats>>,
 }
 
 enum Action {
     Ops(Fidelity),
     Idle,
     Fault,
+    WorkerFault,
+    Latency(Duration),
     Done,
 }
 
@@ -589,20 +753,22 @@ impl Drop for DispatchGuard {
 }
 
 impl Dispatcher {
-    fn run(mut self) -> DispatchOutcome {
+    fn run(mut self) {
         // Spawn the pool before the first submission arrives so the
         // O(workers) thread-spawn cost never lands inside a batch (and
         // never inside the sustained-throughput window).
         self.exec.run_region(|_| {});
         loop {
-            let mut st = self.shared.q.lock().expect("serve queue poisoned");
+            let mut st = lock_unpoisoned(&self.shared.q);
             let action = loop {
                 match st.items.front() {
                     Some(Work::Ops(s)) => break Action::Ops(s.tier),
                     Some(Work::Idle { .. }) => break Action::Idle,
                     Some(Work::Fault) => break Action::Fault,
+                    Some(Work::WorkerFault) => break Action::WorkerFault,
+                    Some(Work::Latency(d)) => break Action::Latency(*d),
                     None if st.closed => break Action::Done,
-                    None => st = self.shared.work.wait(st).expect("serve queue poisoned"),
+                    None => st = wait_unpoisoned(&self.shared.work, st),
                 }
             };
             match action {
@@ -617,6 +783,16 @@ impl Dispatcher {
                     st.items.pop_front();
                     drop(st);
                     panic!("injected serve dispatcher fault");
+                }
+                Action::WorkerFault => {
+                    st.items.pop_front();
+                    drop(st);
+                    self.force_worker_panic = true;
+                }
+                Action::Latency(d) => {
+                    st.items.pop_front();
+                    drop(st);
+                    std::thread::sleep(d);
                 }
                 Action::Idle => {
                     // Merge consecutive idle phases into one gap.
@@ -655,7 +831,7 @@ impl Dispatcher {
                             break;
                         }
                         let Some(Work::Ops(s)) = st.items.pop_front() else {
-                            unreachable!("front was just matched as Ops")
+                            unreachable!("invariant: queue front was just matched as Work::Ops")
                         };
                         ops += s.triples.len();
                         st.queued_ops -= s.triples.len();
@@ -667,38 +843,28 @@ impl Dispatcher {
                 }
             }
         }
-        let busy_secs = match (self.first_batch, self.busy_until) {
-            (Some(t0), Some(t1)) => t1.duration_since(t0).as_secs_f64(),
-            _ => 0.0,
-        };
         let ring_coalesced = self.producer.close();
-        DispatchOutcome {
-            master: self.master,
-            ops: self.ops,
-            batches: self.batches,
-            submissions: self.submissions,
-            latencies: self.latencies,
-            crosscheck_sampled: self.crosscheck_sampled,
-            crosscheck_mismatches: self.crosscheck_mismatches,
-            mismatch_indices: self.mismatch_indices,
-            busy_secs,
-            first_batch: self.first_batch,
-            busy_until: self.busy_until,
-            ring_coalesced,
+        let mut stats = lock_unpoisoned(&self.stats);
+        stats.ring_coalesced = ring_coalesced;
+        if let Some(ti) = self.cur_tier {
+            self.tier_cal[ti] = (self.exec.chunk_hint(), self.exec.calibrated_ops());
         }
+        stats.tier_cal = self.tier_cal;
     }
 
     /// Publish an idle gap as window-width idle windows (queue order —
     /// the master trace and the ring see the identical sequence).
     fn run_idle(&mut self, mut slots: u64) {
+        let mut stats = lock_unpoisoned(&self.stats);
         let window = self.window_ops as u64;
         while slots > 0 {
             let take = slots.min(window);
             let w = ActivityWindow { slots: take, acc: ActivityAccumulator::default() };
-            self.master.push_window(w);
+            stats.master.push_window(w);
             self.producer.publish(w);
             slots -= take;
         }
+        stats.ring_coalesced = self.producer.coalesced();
     }
 
     /// Execute one coalesced batch: map the submissions into zero-copy
@@ -708,9 +874,6 @@ impl Dispatcher {
     /// gathered or scattered.
     fn run_ops_batch(&mut self, tier: Fidelity) {
         let t_batch = Instant::now();
-        if self.first_batch.is_none() {
-            self.first_batch = Some(t_batch);
-        }
         // Map submissions onto the concatenated op index space. The
         // backing vectors stay in `batch_items`, untouched until the
         // completions below, so the raw pointers are stable.
@@ -735,6 +898,7 @@ impl Dispatcher {
         self.accs.clear();
         self.accs.resize(n_windows, ActivityAccumulator::default());
 
+        let mut panicked = false;
         if n > 0 {
             let ti = tier_index(tier);
             // Per-tier calibration swap: one pool, per-tier chunk hints.
@@ -745,6 +909,8 @@ impl Dispatcher {
                 let (chunk, cal) = self.tier_cal[ti];
                 self.exec.seed_calibration(chunk, cal, calibration_key(tier));
                 self.cur_tier = Some(ti);
+                let mut stats = lock_unpoisoned(&self.stats);
+                stats.tier_cal = self.tier_cal;
             }
             // The staleness rules, applied through the public API: a
             // hint calibrated on a much larger batch, or under another
@@ -755,46 +921,92 @@ impl Dispatcher {
             {
                 self.exec.recalibrate();
             }
-            self.execute_windows(ti, n, window, n_windows);
-            self.publish_windows(n, window, n_windows);
-            self.crosscheck(tier, n);
+            let run = if std::mem::take(&mut self.force_worker_panic) {
+                // Containment drill: drive a real panic through the same
+                // pool path a lane-kernel bug would take.
+                self.exec
+                    .run_region_checked(|_| panic!("injected serve worker fault"))
+            } else {
+                self.execute_windows(ti, n, window, n_windows)
+            };
+            match run {
+                Ok(()) => {
+                    self.publish_windows(n, window, n_windows);
+                    self.crosscheck(tier, n);
+                }
+                Err(_) => {
+                    // Containment: the batch is discarded whole. Nothing
+                    // was published, so the master trace, the ring, and
+                    // the streamed-BB bit-identity contract only ever
+                    // see completed batches; the partially-written
+                    // result buffers die with their errored tickets.
+                    panicked = true;
+                }
+            }
         }
 
-        // Complete every submission: its result buffer moves to the
-        // ticket whole. (`take` rather than a field move — `OpsSub` has
-        // a `Drop` teardown for the error path.)
+        // Resolve every submission exactly once: on success its result
+        // buffer moves to the ticket whole (`take` rather than a field
+        // move — `OpsSub` has a `Drop` teardown for the dropped path);
+        // on a contained worker panic it errors as `WorkerPanic`.
+        let mut stats = lock_unpoisoned(&self.stats);
+        if stats.first_batch.is_none() {
+            stats.first_batch = Some(t_batch);
+        }
         for mut sub in self.batch_items.drain(..) {
-            let latency = sub.submitted.elapsed().as_secs_f64();
-            self.latencies.push(latency);
-            self.submissions += 1;
-            let mut st = sub.done.state.lock().expect("serve completion poisoned");
-            st.bits = Some(std::mem::take(&mut sub.out));
+            let mut st = lock_unpoisoned(&sub.done.state);
+            if panicked {
+                st.err = Some(ServeError::WorkerPanic);
+            } else {
+                st.bits = Some(std::mem::take(&mut sub.out));
+            }
             st.done = true;
             drop(st);
             sub.done.cv.notify_all();
+            if panicked {
+                stats.errored_submissions += 1;
+            } else {
+                stats.latencies.push(sub.submitted.elapsed().as_secs_f64());
+                stats.submissions += 1;
+            }
         }
-        self.ops += n as u64;
-        self.batches += 1;
-        self.busy_until = Some(Instant::now());
+        if panicked {
+            stats.failed_batches += 1;
+        } else {
+            stats.ops += n as u64;
+            stats.batches += 1;
+        }
+        stats.busy_until = Some(Instant::now());
     }
 
     /// Run the batch's windows through the stealing scheduler (or
     /// serially under the engine's cutoff), each window computed whole by
-    /// one worker so the trace is deterministic.
-    fn execute_windows(&mut self, ti: usize, n: usize, window: usize, n_windows: usize) {
+    /// one worker so the trace is deterministic. A panicking kernel —
+    /// on any pool worker, or on the dispatcher thread itself on the
+    /// serial path — is contained into an `Err` so the caller can fail
+    /// just this batch.
+    fn execute_windows(
+        &mut self,
+        ti: usize,
+        n: usize,
+        window: usize,
+        n_windows: usize,
+    ) -> Result<(), WorkerPanicked> {
         let dp = &self.dps[ti];
         let segs = &self.segs[..];
         let accs = &mut self.accs[..n_windows];
         let workers = self.exec.workers();
         if workers <= 1 || n <= SERIAL_CUTOFF {
-            for (w, acc) in accs.iter_mut().enumerate() {
-                let lo = w * window;
-                let hi = ((w + 1) * window).min(n);
-                // SAFETY: the dispatcher is the only executor here and
-                // the segment vectors live in `batch_items`.
-                unsafe { exec_span(dp, segs, lo, hi, acc) };
-            }
-            return;
+            return std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                for (w, acc) in accs.iter_mut().enumerate() {
+                    let lo = w * window;
+                    let hi = ((w + 1) * window).min(n);
+                    // SAFETY: the dispatcher is the only executor here and
+                    // the segment vectors live in `batch_items`.
+                    unsafe { exec_span(dp, segs, lo, hi, acc) };
+                }
+            }))
+            .map_err(|_| WorkerPanicked { workers: 1 });
         }
         // One-shot per-tier calibration on the stealing path: time the
         // first few windows serially (their accumulators are final —
@@ -804,15 +1016,19 @@ impl Dispatcher {
         let mut start_window = 0usize;
         if self.exec.chunk_hint() == 0 {
             let t0 = Instant::now();
-            let mut done_ops = 0usize;
-            while done_ops < CALIBRATION_OPS && start_window < n_windows {
-                let lo = start_window * window;
-                let hi = ((start_window + 1) * window).min(n);
-                // SAFETY: no worker is running yet; exclusive access.
-                unsafe { exec_span(dp, segs, lo, hi, &mut accs[start_window]) };
-                done_ops += hi - lo;
-                start_window += 1;
-            }
+            let done_ops = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                let mut done_ops = 0usize;
+                while done_ops < CALIBRATION_OPS && start_window < n_windows {
+                    let lo = start_window * window;
+                    let hi = ((start_window + 1) * window).min(n);
+                    // SAFETY: no worker is running yet; exclusive access.
+                    unsafe { exec_span(dp, segs, lo, hi, &mut accs[start_window]) };
+                    done_ops += hi - lo;
+                    start_window += 1;
+                }
+                done_ops
+            }))
+            .map_err(|_| WorkerPanicked { workers: 1 })?;
             let per_op = t0.elapsed().as_secs_f64() / done_ops.max(1) as f64;
             self.exec.seed_calibration(
                 chunk_from_per_op(per_op),
@@ -821,13 +1037,13 @@ impl Dispatcher {
             );
         }
         if start_window >= n_windows {
-            return;
+            return Ok(());
         }
         let chunk_windows = (self.exec.chunk_hint() / window).max(1);
         self.queues.seed(start_window, n_windows, chunk_windows);
         let queues = &self.queues;
         let accs_ptr = SendPtr(accs.as_mut_ptr());
-        self.exec.run_region(|w| {
+        self.exec.run_region_checked(|w| {
             while let Some((w0, w1)) = queues.next(w) {
                 for win in w0..w1 {
                     let lo = win * window;
@@ -836,26 +1052,30 @@ impl Dispatcher {
                     // exactly one `fetch_add` winner, so its output ops
                     // and accumulator slot are unaliased; the dispatcher
                     // keeps the submission buffers and `accs` alive
-                    // until run_region returns (pool barrier).
+                    // until run_region_checked returns (pool barrier —
+                    // held through panics too: a panicking worker still
+                    // reports done before the barrier releases).
                     unsafe {
                         let acc = &mut *accs_ptr.0.add(win);
                         exec_span(dp, segs, lo, hi, acc);
                     }
                 }
             }
-        });
+        })
     }
 
     /// Publish the batch's windows, in window order, to both the master
     /// trace and the ring — the two sides of the bit-identity assert.
     fn publish_windows(&mut self, n: usize, window: usize, n_windows: usize) {
+        let mut stats = lock_unpoisoned(&self.stats);
         for win in 0..n_windows {
             let lo = win * window;
             let hi = ((win + 1) * window).min(n);
             let w = ActivityWindow { slots: (hi - lo) as u64, acc: self.accs[win] };
-            self.master.push_window(w);
+            stats.master.push_window(w);
             self.producer.publish(w);
         }
+        stats.ring_coalesced = self.producer.coalesced();
     }
 
     /// Sampled gate-level cross-check of the word tiers' results (the
@@ -868,6 +1088,8 @@ impl Dispatcher {
             return;
         }
         let step = self.crosscheck_every;
+        let mut sampled = 0u64;
+        let mut mismatches = Vec::new();
         let mut si = 0usize;
         let mut i = 0usize;
         while i < n {
@@ -880,13 +1102,23 @@ impl Dispatcher {
             // the only thread touching the submission buffers now.
             let (t, got) = unsafe { (*s.tri.0.add(off), *s.out.0.add(off)) };
             if self.unit.fmac_one(t.a, t.b, t.c) != got {
-                self.crosscheck_mismatches += 1;
-                if self.mismatch_indices.len() < MISMATCH_CAP {
-                    self.mismatch_indices.push(self.master.total_ops() as usize - n + i);
-                }
+                mismatches.push(i);
             }
-            self.crosscheck_sampled += 1;
+            sampled += 1;
             i += step;
+        }
+        // Gate-level re-execution is expensive; the stats lock is taken
+        // once per batch, after the sampling loop.
+        let mut stats = lock_unpoisoned(&self.stats);
+        let base = stats.master.total_ops() as usize - n;
+        stats.crosscheck_sampled += sampled;
+        stats.crosscheck_mismatches += mismatches.len() as u64;
+        for i in mismatches {
+            if stats.mismatch_indices.len() >= MISMATCH_CAP {
+                break;
+            }
+            let idx = base + i;
+            stats.mismatch_indices.push(idx);
         }
     }
 }
@@ -898,8 +1130,15 @@ pub struct ServeReport {
     pub ops: u64,
     /// Batches dispatched (after coalescing).
     pub batches: u64,
+    /// Batches discarded whole by a contained worker panic (their ops
+    /// are *not* in `ops` and their windows were never published).
+    pub failed_batches: u64,
     /// Submissions completed.
     pub submissions: u64,
+    /// Submissions resolved with an error instead of bits (worker
+    /// panic containment; teardown-errored tickets are not counted here
+    /// — their `OpsSub` never reached the dispatcher).
+    pub errored_submissions: u64,
     /// Ops per second over the busy window (first batch start → last
     /// batch end). 0.0 when nothing ran.
     pub sustained_ops_per_s: f64,
@@ -945,6 +1184,10 @@ pub struct ServeReport {
     pub occupancy: f64,
     /// The master trace itself (window sequence as published).
     pub master: ActivityTrace,
+    /// Per-tier (chunk_hint, calibrated_ops) at the end of the run — the
+    /// router's respawn path seeds a dead shard's replacement from this
+    /// so a fresh incarnation skips cold calibration.
+    pub(crate) tier_cal: [(usize, usize); 3],
 }
 
 impl ServeReport {
@@ -976,13 +1219,27 @@ impl ServeReport {
 pub struct ServeQueue {
     shared: Arc<QueueShared>,
     max_queue_ops: usize,
-    dispatcher: std::thread::JoinHandle<DispatchOutcome>,
+    dispatcher: std::thread::JoinHandle<()>,
     controller: std::thread::JoinHandle<(StreamedBb, Vec<ActivityWindow>, u64)>,
+    /// The dispatcher's accounting, shared so it survives dispatcher
+    /// death (see [`DispatchStats`]).
+    stats: Arc<Mutex<DispatchStats>>,
     unit: FpuUnit,
     tech: Technology,
     policy: BbPolicy,
     vdd: f64,
     window_ops: usize,
+}
+
+/// What [`ServeQueue::finish_salvaging`] recovers: the report (exact up
+/// to the moment of death when `died`) plus whether the dispatcher died
+/// before the queue was drained.
+pub struct SalvagedRun {
+    pub report: ServeReport,
+    /// The dispatcher thread panicked (injected fault or real bug). The
+    /// report covers everything it completed before dying; every
+    /// then-outstanding ticket was errored by the teardown guard.
+    pub died: bool,
 }
 
 impl ServeQueue {
@@ -1042,6 +1299,20 @@ impl ServeQueue {
                 (ctrl.finish(), received, merged_in)
             })?;
         let steal_workers = exec.workers().max(1);
+        // If the caller pre-seeded the executor's calibration under a
+        // tier's key (the router's respawn path replaying a dead
+        // incarnation's hints), adopt it as that tier's starting hint so
+        // the new incarnation skips cold calibration.
+        let mut tier_cal = [(0usize, 0usize); 3];
+        for (i, t) in [Fidelity::GateLevel, Fidelity::WordLevel, Fidelity::WordSimd]
+            .into_iter()
+            .enumerate()
+        {
+            if exec.calibration_key() == calibration_key(t) {
+                tier_cal[i] = (exec.chunk_hint(), exec.calibrated_ops());
+            }
+        }
+        let stats = Arc::new(Mutex::new(DispatchStats::new(cfg.window_ops, tier_cal)));
         let dispatcher = Dispatcher {
             shared: Arc::clone(&shared),
             exec,
@@ -1055,22 +1326,14 @@ impl ServeQueue {
             max_batch_ops: cfg.max_batch_ops,
             crosscheck_every: cfg.crosscheck_every,
             producer,
-            master: ActivityTrace::from_raw_windows(cfg.window_ops as u64, Vec::new()),
-            tier_cal: [(0, 0); 3],
+            tier_cal,
             cur_tier: None,
+            force_worker_panic: false,
             batch_items: Vec::new(),
             segs: Vec::new(),
             accs: Vec::new(),
             queues: StealQueues::new(steal_workers),
-            ops: 0,
-            batches: 0,
-            submissions: 0,
-            latencies: Vec::new(),
-            crosscheck_sampled: 0,
-            crosscheck_mismatches: 0,
-            mismatch_indices: Vec::new(),
-            first_batch: None,
-            busy_until: None,
+            stats: Arc::clone(&stats),
         };
         let guard_shared = Arc::clone(&shared);
         let dispatcher = std::thread::Builder::new()
@@ -1087,6 +1350,7 @@ impl ServeQueue {
             max_queue_ops: cfg.max_queue_ops,
             dispatcher,
             controller,
+            stats,
             unit: unit.clone(),
             tech,
             policy: cfg.policy,
@@ -1110,24 +1374,60 @@ impl ServeQueue {
         self.handle().submit(tier, triples, self.max_queue_ops)
     }
 
+    /// Whether the dispatcher thread is still running. `false` during
+    /// serving means it died (injected fault or real bug) — the signal
+    /// the router's supervisor polls; after [`ServeQueue::finish`] has
+    /// been called this is trivially `false`.
+    pub fn dispatcher_alive(&self) -> bool {
+        !self.dispatcher.is_finished()
+    }
+
     /// Close the queue, drain everything still in flight, join both
     /// threads, and assemble the report — including the post-hoc
     /// bias-schedule and energy comparison on the master trace.
+    ///
+    /// Errors if the dispatcher died mid-run (the PR 5 contract: a dead
+    /// shard is an error to its direct owner). Supervision code that
+    /// wants the partial accounting instead uses
+    /// [`ServeQueue::finish_salvaging`].
     pub fn finish(self) -> crate::Result<ServeReport> {
+        let fin = self.finish_salvaging()?;
+        if fin.died {
+            return Err(anyhow::Error::new(ServeError::ShardFailed)
+                .context("serve dispatcher panicked"));
+        }
+        Ok(fin.report)
+    }
+
+    /// [`ServeQueue::finish`] that survives a dead dispatcher: always
+    /// recovers the [`ServeReport`] covering everything the dispatcher
+    /// completed (exact ops, latencies, energy accounting, master trace
+    /// — the dispatcher syncs its shared stats at every publish point),
+    /// with `died` saying whether the run ended by death. The streamed
+    /// BB gate holds for dead incarnations too: the ring closes when
+    /// the dying dispatcher drops its producer handle, so the
+    /// controller received exactly the published prefix.
+    ///
+    /// Errors only if report *assembly* fails (controller panicked,
+    /// post-hoc energy not evaluable) — never because the dispatcher died.
+    pub fn finish_salvaging(self) -> crate::Result<SalvagedRun> {
         {
-            let mut st = self.shared.q.lock().expect("serve queue poisoned");
+            let mut st = lock_unpoisoned(&self.shared.q);
             st.closed = true;
         }
         self.shared.work.notify_all();
         self.shared.space.notify_all();
-        let d = self
-            .dispatcher
-            .join()
-            .map_err(|_| anyhow::anyhow!("serve dispatcher panicked"))?;
+        let died = self.dispatcher.join().is_err();
         let (streamed, received, _merged_in) = self
             .controller
             .join()
             .map_err(|_| anyhow::anyhow!("serve BB controller panicked"))?;
+        // The dispatcher thread is gone, so this Arc is the last user
+        // (fall back to a clone if a handle is somehow still alive).
+        let d = match Arc::try_unwrap(self.stats) {
+            Ok(m) => m.into_inner().unwrap_or_else(|p| p.into_inner()),
+            Err(arc) => lock_unpoisoned(&arc).clone(),
+        };
 
         let posthoc_schedule = window_bias_schedule(self.policy, &d.master);
         let posthoc_energy =
@@ -1137,22 +1437,26 @@ impl ServeQueue {
         let received_schedule = window_bias_schedule(self.policy, &received_trace);
 
         let mut lat = d.latencies;
-        lat.sort_by(|a, b| a.partial_cmp(b).expect("NaN latency"));
+        lat.sort_by(|a, b| {
+            a.partial_cmp(b).expect("invariant: submission latencies are never NaN")
+        });
         let (p50, p99) = if lat.is_empty() {
             (0.0, 0.0)
         } else {
             (percentile(&lat, 0.50), percentile(&lat, 0.99))
         };
+        let busy_secs = match (d.first_batch, d.busy_until) {
+            (Some(t0), Some(t1)) => t1.duration_since(t0).as_secs_f64(),
+            _ => 0.0,
+        };
         let master_agg = d.master.aggregate();
-        Ok(ServeReport {
+        let report = ServeReport {
             ops: d.ops,
             batches: d.batches,
+            failed_batches: d.failed_batches,
             submissions: d.submissions,
-            sustained_ops_per_s: if d.busy_secs > 0.0 {
-                d.ops as f64 / d.busy_secs
-            } else {
-                0.0
-            },
+            errored_submissions: d.errored_submissions,
+            sustained_ops_per_s: if busy_secs > 0.0 { d.ops as f64 / busy_secs } else { 0.0 },
             p50_latency_s: p50,
             p99_latency_s: p99,
             latencies_s: lat,
@@ -1172,6 +1476,71 @@ impl ServeQueue {
             posthoc_energy,
             streamed,
             master: d.master,
-        })
+            tier_cal: d.tier_cal,
+        };
+        Ok(SalvagedRun { report, died })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Regression (PR 7 satellite): the drop-path pressure decrement is
+    /// saturating. A submission dropped on a fault path after its queue
+    /// counter was already zeroed (teardown drain racing a respawn)
+    /// must clamp the load signal at zero, not wrap to usize::MAX.
+    #[test]
+    fn pressure_decrement_saturates_instead_of_underflowing() {
+        let pressure = Arc::new(AtomicUsize::new(0));
+        let done = Arc::new(Completion::default());
+        let sub = OpsSub {
+            tier: Fidelity::WordLevel,
+            triples: vec![OperandTriple { a: 0, b: 0, c: 0 }; 7],
+            out: vec![0u64; 7],
+            done: Arc::clone(&done),
+            submitted: Instant::now(),
+            pressure: Arc::clone(&pressure),
+        };
+        // The counter holds fewer ops than the submission carries — the
+        // unbalanced case a mid-dispatch fault can produce.
+        pressure.store(3, Ordering::Relaxed);
+        drop(sub);
+        assert_eq!(pressure.load(Ordering::Relaxed), 0, "clamped, not wrapped");
+        // The drop also errored the open ticket, typed.
+        let err = Ticket { done }.wait().unwrap_err();
+        assert_eq!(ServeError::classify(&err), Some(ServeError::ShardFailed));
+    }
+
+    /// The balanced case stays exact: drop removes exactly the
+    /// submission's ops.
+    #[test]
+    fn pressure_decrement_balanced_path_is_exact() {
+        let pressure = Arc::new(AtomicUsize::new(0));
+        let done = Arc::new(Completion::default());
+        let sub = OpsSub {
+            tier: Fidelity::WordLevel,
+            triples: vec![OperandTriple { a: 0, b: 0, c: 0 }; 5],
+            out: vec![0u64; 5],
+            done,
+            submitted: Instant::now(),
+            pressure: Arc::clone(&pressure),
+        };
+        pressure.store(12, Ordering::Relaxed);
+        drop(sub);
+        assert_eq!(pressure.load(Ordering::Relaxed), 7);
+    }
+
+    #[test]
+    fn serve_error_retryability_classification() {
+        assert!(ServeError::ShardFailed.retryable());
+        assert!(ServeError::WorkerPanic.retryable());
+        assert!(ServeError::QueueClosed.retryable());
+        assert!(!ServeError::ResultTaken.retryable());
+        assert!(!ServeError::DeadlineExceeded.retryable());
+        // classify() walks context chains.
+        let wrapped = anyhow::Error::new(ServeError::QueueClosed).context("submit failed");
+        assert_eq!(ServeError::classify(&wrapped), Some(ServeError::QueueClosed));
+        assert_eq!(ServeError::classify(&anyhow::anyhow!("unrelated")), None);
     }
 }

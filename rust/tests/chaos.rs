@@ -1,0 +1,401 @@
+//! Fault-tolerance properties of the serve fleet: shard death is
+//! contained (supervisor quarantines, salvages, respawns, re-admits by
+//! probe), accounting is conserved across shard incarnations, producers
+//! on the retry path get exactly one result, and a no-fault chaos run
+//! is bit-identical to the plain router path on the same op stream.
+
+use std::time::{Duration, Instant};
+
+use fpmax::arch::engine::{Datapath, Fidelity, UnitDatapath};
+use fpmax::arch::fp::Precision;
+use fpmax::arch::generator::{FpuConfig, FpuUnit};
+use fpmax::coordinator::{serve_chaos, RoutedLoad};
+use fpmax::runtime::chaos::{fnv1a_fold, FaultKind, FaultPlan, FNV_OFFSET};
+use fpmax::runtime::router::{
+    RetryPolicy, RouterConfig, ServeRouter, ServiceClass, ShardHealth, ShardSpec, WorkloadClass,
+};
+use fpmax::runtime::serve::{ServeConfig, ServeError, ServeQueue};
+use fpmax::util::Rng;
+use fpmax::workloads::throughput::{OperandMix, OperandStream};
+
+fn spec(config: FpuConfig, tier: Fidelity, workers: usize, window: usize) -> ShardSpec {
+    let mut serve = ServeConfig::nominal(&config, true).expect("nominal serve config");
+    serve.workers = workers;
+    serve.window_ops = window;
+    ShardSpec { config, tier, serve }
+}
+
+fn sp_pair(tier: Fidelity, window: usize) -> Vec<ShardSpec> {
+    vec![
+        spec(FpuConfig::sp_cma(), tier, 1, window),
+        spec(FpuConfig::sp_fma(), tier, 1, window),
+    ]
+}
+
+/// Fast supervision for tests: tight poll, small probe.
+fn fast_supervision(workers_budget: usize) -> RouterConfig {
+    let mut cfg = RouterConfig::no_spill(workers_budget);
+    cfg.supervision_poll = Duration::from_micros(200);
+    cfg.probe_ops = 32;
+    cfg
+}
+
+/// Block until shard `idx` is Healthy with at least `respawns`
+/// incarnation swaps behind it.
+fn wait_respawned(router: &ServeRouter, idx: usize, respawns: u64) {
+    let deadline = Instant::now() + Duration::from_secs(30);
+    while Instant::now() < deadline {
+        if router.shard_respawns(idx) >= respawns
+            && router.shard_health(idx) == ShardHealth::Healthy
+        {
+            return;
+        }
+        std::thread::sleep(Duration::from_millis(1));
+    }
+    panic!(
+        "shard {idx} did not recover: respawns {} health {:?}",
+        router.shard_respawns(idx),
+        router.shard_health(idx)
+    );
+}
+
+#[test]
+fn shard_respawns_and_serves_again_under_every_tier() {
+    // The supervision loop end-to-end, per fidelity tier: kill the
+    // latency shard's dispatcher mid-service, wait for quarantine →
+    // salvage → respawn → probe re-admission, then verify the respawned
+    // shard serves bit-exact results and the final report carries both
+    // incarnations' accounting.
+    for (tier, n) in [
+        (Fidelity::GateLevel, 96usize),
+        (Fidelity::WordLevel, 512),
+        (Fidelity::WordSimd, 512),
+    ] {
+        let specs = sp_pair(tier, 128);
+        let router = ServeRouter::start(&specs, fast_supervision(2)).unwrap();
+        let class =
+            WorkloadClass { precision: Precision::Single, service: ServiceClass::Latency };
+        let dp = UnitDatapath::generate(&specs[0].config, tier);
+        let mut stream = OperandStream::new(Precision::Single, OperandMix::Finite, 17);
+
+        // First incarnation serves.
+        let triples = stream.batch(n);
+        let mut want = vec![0u64; n];
+        dp.fmac_batch(&triples, &mut want);
+        let (idx, ticket) = router.submit(class, tier, triples).unwrap();
+        assert_eq!(idx, 0, "latency affinity is the CMA shard");
+        assert_eq!(ticket.wait().unwrap(), want, "{tier:?}");
+
+        // Kill it; the supervisor must bring incarnation 2 up.
+        router.shard_handle(0).inject_fault().unwrap();
+        wait_respawned(&router, 0, 1);
+
+        // Second incarnation serves the same class, bit-exact.
+        let triples = stream.batch(n);
+        let mut want = vec![0u64; n];
+        dp.fmac_batch(&triples, &mut want);
+        let (idx, ticket) = router.submit(class, tier, triples).unwrap();
+        assert_eq!(idx, 0, "recovered shard takes its affinity class back");
+        assert_eq!(ticket.wait().unwrap(), want, "{tier:?} after respawn");
+
+        let report = router.finish().unwrap();
+        let shard = &report.shards[0];
+        assert_eq!(shard.respawns, 1, "{tier:?}");
+        assert_eq!(shard.prior.len(), 1, "one dead incarnation salvaged");
+        // Both incarnations' ops are in the shard total: the killed
+        // incarnation's submission + the respawn's (probe + submission).
+        assert_eq!(shard.total_ops(), shard.prior[0].ops + shard.report.ops);
+        assert!(shard.total_ops() >= 2 * n as u64, "{tier:?}");
+        assert!(report.conservation_ok(), "{tier:?}");
+        assert_eq!(report.crosscheck_mismatches(), 0);
+        assert!(report.bb_gate_ok(), "{tier:?}: dead incarnation must stay exact-on-received");
+    }
+}
+
+#[test]
+fn fault_plan_runs_are_deterministic_given_serialized_submission() {
+    // Same seed ⇒ same plan ⇒ (under serialized submission, which
+    // removes scheduler interleaving) bit-identical result streams and
+    // identical deterministic report fields on every shard, dead
+    // incarnations included.
+    let tier = Fidelity::WordSimd;
+    let total: u64 = 6_000;
+    let plan = FaultPlan::kill_each_shard_once(99, 2, total);
+    assert_eq!(plan, FaultPlan::kill_each_shard_once(99, 2, total));
+
+    let run = || {
+        let specs = sp_pair(tier, 128);
+        let router = ServeRouter::start(&specs, fast_supervision(2)).unwrap();
+        let class =
+            WorkloadClass { precision: Precision::Single, service: ServiceClass::Latency };
+        let mut stream = OperandStream::new(Precision::Single, OperandMix::Finite, 5);
+        let mut rng = Rng::new(7);
+        let mut checksum = FNV_OFFSET;
+        let mut submitted = 0u64;
+        let mut fault_at = plan.faults.iter().peekable();
+        while submitted < total {
+            if let Some(f) = fault_at.peek() {
+                if submitted >= f.after_ops {
+                    let FaultKind::KillDispatcher { shard } = f.kind else {
+                        panic!("kill plan only schedules kills")
+                    };
+                    let before = router.shard_respawns(shard);
+                    router.shard_handle(shard).inject_fault().unwrap();
+                    wait_respawned(&router, shard, before + 1);
+                    fault_at.next();
+                }
+            }
+            let n = (64 + rng.below(128)) as usize;
+            let triples = stream.batch(n);
+            // Serialized: wait every ticket before the next submit, so
+            // batch boundaries (hence windows, hence energies) are
+            // schedule-independent.
+            let (_, ticket) = router.submit(class, tier, triples).unwrap();
+            for b in ticket.wait().unwrap() {
+                checksum = fnv1a_fold(checksum, b);
+            }
+            submitted += n as u64;
+        }
+        let report = router.finish().unwrap();
+        let shards: Vec<_> = report
+            .shards
+            .iter()
+            .map(|s| {
+                (
+                    s.respawns,
+                    s.prior.len(),
+                    s.total_ops(),
+                    s.class_counts,
+                    s.report.submissions,
+                    s.report.batches,
+                    s.prior.iter().map(|p| (p.ops, p.submissions, p.batches)).collect::<Vec<_>>(),
+                    s.total_energy(),
+                )
+            })
+            .collect();
+        (checksum, report.submissions, report.ops, shards)
+    };
+
+    let a = run();
+    let b = run();
+    assert_eq!(a.0, b.0, "result bit streams diverged between same-seed runs");
+    assert_eq!(a.1, b.1);
+    assert_eq!(a.2, b.2);
+    assert_eq!(a.3, b.3, "surviving-shard reports diverged between same-seed runs");
+}
+
+#[test]
+fn worker_panic_is_contained_and_the_pool_stays_usable() {
+    // A panicking lane kernel errors its own batch's tickets; the
+    // dispatcher, its persistent pool, and every later submission
+    // survive — no respawn involved.
+    let cfg = FpuConfig::sp_fma();
+    let unit = FpuUnit::generate(&cfg);
+    let mut scfg = ServeConfig::nominal(&cfg, true).unwrap();
+    scfg.workers = 2;
+    scfg.window_ops = 128;
+    let queue = ServeQueue::start(&unit, scfg).unwrap();
+    let dp = UnitDatapath::new(&unit, Fidelity::WordSimd);
+    let mut stream = OperandStream::new(cfg.precision, OperandMix::Finite, 23);
+
+    let n = 300usize;
+    let triples = stream.batch(n);
+    let mut want = vec![0u64; n];
+    dp.fmac_batch(&triples, &mut want);
+    let t1 = queue.submit(Fidelity::WordSimd, triples).unwrap();
+    assert_eq!(t1.wait().unwrap(), want);
+
+    queue.handle().inject_worker_panic().unwrap();
+    let doomed = stream.batch(n);
+    let t2 = queue.submit(Fidelity::WordSimd, doomed).unwrap();
+    let err = t2.wait().expect_err("the poisoned batch's ticket must error");
+    assert_eq!(ServeError::classify(&err), Some(ServeError::WorkerPanic));
+    assert!(ServeError::classify(&err).unwrap().retryable());
+
+    // Same dispatcher, same pool, next batch is clean.
+    assert!(queue.dispatcher_alive(), "worker panic must not kill the dispatcher");
+    let triples = stream.batch(n);
+    let mut want = vec![0u64; n];
+    dp.fmac_batch(&triples, &mut want);
+    let t3 = queue.submit(Fidelity::WordSimd, triples).unwrap();
+    assert_eq!(t3.wait().unwrap(), want);
+
+    let report = queue.finish().unwrap();
+    assert_eq!(report.failed_batches, 1);
+    assert_eq!(report.errored_submissions, 1);
+    assert_eq!(report.submissions, 2);
+    assert_eq!(report.ops, 2 * n as u64, "the poisoned batch is never counted as executed");
+    assert_eq!(report.crosscheck_mismatches, 0);
+    assert!(report.bb_gate_ok());
+}
+
+#[test]
+fn retry_after_quarantine_delivers_exactly_one_result() {
+    // Single-shard fleet, so the class has no failover sibling: while
+    // the shard is down the resilient path must retry (backoff) until
+    // the respawn re-admits it — and deliver the result exactly once.
+    let tier = Fidelity::WordSimd;
+    let specs = vec![spec(FpuConfig::sp_fma(), tier, 1, 128)];
+    let router = ServeRouter::start(&specs, fast_supervision(1)).unwrap();
+    let class = WorkloadClass { precision: Precision::Single, service: ServiceClass::Bulk };
+    let dp = UnitDatapath::generate(&specs[0].config, tier);
+
+    router.shard_handle(0).inject_fault().unwrap();
+    // Observe the outage before submitting, so at least one attempt
+    // must fail (the salvage-respawn-probe round trip is far longer
+    // than the gap between this check and the first route).
+    let deadline = Instant::now() + Duration::from_secs(30);
+    while router.shard_health(0) == ShardHealth::Healthy {
+        assert!(Instant::now() < deadline, "supervisor never quarantined the dead shard");
+        std::thread::sleep(Duration::from_micros(100));
+    }
+
+    let n = 400usize;
+    let triples = OperandStream::new(Precision::Single, OperandMix::Finite, 31).batch(n);
+    let mut want = vec![0u64; n];
+    dp.fmac_batch(&triples, &mut want);
+    let outcome = router
+        .submit_with_retry(
+            class,
+            tier,
+            &triples,
+            Some(Duration::from_secs(30)),
+            RetryPolicy::bounded(200, Duration::from_millis(1), Duration::from_millis(20)),
+        )
+        .expect("retry must outlast the quarantine window");
+    assert_eq!(outcome.bits, want, "exactly-once delivery, bit-exact");
+    assert_eq!(outcome.shard, 0);
+    assert!(outcome.retries >= 1, "the outage was observed before the first attempt");
+
+    // The old incarnation's pressure counter died with it; the live
+    // handle's is balanced back to zero once the fleet drains.
+    let deadline = Instant::now() + Duration::from_secs(10);
+    while router.shard_pressure(0) != 0 {
+        assert!(Instant::now() < deadline, "pressure never drained to zero");
+        std::thread::sleep(Duration::from_millis(1));
+    }
+
+    let report = router.finish().unwrap();
+    assert!(report.shards[0].respawns >= 1);
+    assert!(report.conservation_ok());
+    assert_eq!(report.crosscheck_mismatches(), 0);
+}
+
+#[test]
+fn kill_every_shard_mid_load_passes_all_chaos_gates() {
+    // The acceptance drill: a seeded plan kills every shard of the
+    // 4-shard Table-1 fleet once under routed load. Zero hangs, zero
+    // lost ops, crosscheck clean on surviving work, every fault fired,
+    // every shard respawned, and fleet ops/energy/latency accounting
+    // exact-sum across incarnations.
+    let tier = Fidelity::WordSimd;
+    let window = 256;
+    let specs: Vec<ShardSpec> =
+        FpuConfig::fpmax_units().into_iter().map(|c| spec(c, tier, 1, window)).collect();
+    let total_ops = 48_000usize;
+    let plan = FaultPlan::kill_each_shard_once(4242, specs.len(), total_ops as u64);
+    let load = RoutedLoad {
+        total_ops,
+        producers_per_class: 1,
+        sub_ops: 512,
+        duty: 1.0,
+        seed: 4242,
+    };
+    let outcome = serve_chaos(
+        &specs,
+        fast_supervision(4),
+        tier,
+        load,
+        &plan,
+        Duration::from_secs(60),
+        RetryPolicy::bounded(40, Duration::from_millis(1), Duration::from_millis(25)),
+    )
+    .unwrap();
+    let r = &outcome.report;
+    assert!(r.zero_hung(), "hung: {} subs / {} ops", r.producer.hung_subs, r.producer.hung_ops);
+    assert!(
+        r.zero_lost(),
+        "lost ops: {} completed + {} errored != {} submitted",
+        r.producer.completed_ops,
+        r.producer.errored_ops,
+        r.producer.submitted_ops
+    );
+    assert!(r.crosscheck_clean(), "{} crosscheck mismatches", r.crosscheck_mismatches);
+    assert!(r.coverage_ok(), "{} of {} faults fired", r.faults_fired, r.faults_planned);
+    assert_eq!(r.kills, 4);
+    assert!(r.respawns >= 4, "every killed shard must respawn, saw {}", r.respawns);
+    assert!(r.conservation_ok, "fleet accounting must be exact-sum across incarnations");
+    assert!(r.gates_ok());
+    // Ops conservation is also visible bottom-up: shard incarnation ops
+    // sum exactly to the fleet total.
+    let bottom_up: u64 = outcome.fleet.shards.iter().map(|s| s.total_ops()).sum();
+    assert_eq!(bottom_up, outcome.fleet.ops);
+}
+
+#[test]
+fn no_fault_chaos_is_bit_identical_to_the_plain_router_path() {
+    // The control arm of the acceptance criterion: an empty plan, the
+    // same seeds — the resilient path's checksums must equal a plain
+    // PR-5-style submit/wait mirror of the identical op stream. Full
+    // Table-1 fleet so every class has an affinity shard.
+    let tier = Fidelity::WordSimd;
+    let specs: Vec<ShardSpec> =
+        FpuConfig::fpmax_units().into_iter().map(|c| spec(c, tier, 1, 256)).collect();
+    let total_ops = 8_000usize;
+    let seed = 1234u64;
+    let load =
+        RoutedLoad { total_ops, producers_per_class: 1, sub_ops: 256, duty: 1.0, seed };
+    let outcome = serve_chaos(
+        &specs,
+        fast_supervision(4),
+        tier,
+        load,
+        &FaultPlan::none(seed),
+        Duration::from_secs(60),
+        RetryPolicy::none(),
+    )
+    .unwrap();
+    let r = &outcome.report;
+    assert!(r.gates_ok());
+    assert_eq!(r.respawns, 0, "nothing may die in the control run");
+    assert_eq!(r.rerouted_on_failure, 0);
+    assert_eq!(r.producer.errored_subs, 0);
+    assert_eq!(r.producer.retries, 0);
+
+    // Mirror: the plain submit/wait router path over the very same
+    // per-producer streams (serialized per producer — placement is
+    // pressure-independent with spill off, so interleaving cannot
+    // change where work lands or what bits come back).
+    let classes = WorkloadClass::ALL;
+    let producers = classes.len();
+    let router = ServeRouter::start(&specs, fast_supervision(4)).unwrap();
+    let mut mirror = Vec::with_capacity(producers);
+    for p in 0..producers {
+        let class = classes[p % classes.len()];
+        let share = total_ops / producers + usize::from(p < total_ops % producers);
+        // producer_seeds(seed, p), inlined: the chaos producers and the
+        // routed serve workload share this exact derivation.
+        let stream_seed = seed.wrapping_add(0x9E37_79B9_7F4A_7C15u64.wrapping_mul(p as u64 + 1));
+        let size_seed = seed ^ (((p as u64 + 1) << 32) | 0xA5);
+        let mut stream = OperandStream::new(class.precision, OperandMix::Finite, stream_seed);
+        let mut rng = Rng::new(size_seed);
+        let mut checksum = FNV_OFFSET;
+        let mut left = share;
+        while left > 0 {
+            let span = (256 / 2 + rng.below(256) as usize).clamp(1, left);
+            let triples = stream.batch(span);
+            let (_, ticket) = router.submit(class, tier, triples).unwrap();
+            for b in ticket.wait().unwrap() {
+                checksum = fnv1a_fold(checksum, b);
+            }
+            left -= span;
+        }
+        mirror.push(checksum);
+    }
+    router.finish().unwrap();
+
+    assert_eq!(
+        outcome.report.producer.checksums, mirror,
+        "no-fault chaos diverged from the plain router path"
+    );
+}
