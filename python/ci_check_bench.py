@@ -20,6 +20,10 @@ fails the job with a readable delta table when any budget is blown:
   zero misrouted submissions under the static policy, zero cross-check
   mismatches, and every shard's streamed BB bit-identical to its own
   post-hoc pass;
+* routing parity (``routing`` object in the serve artifact): the
+  energy-aware replay must sustain ``>= 0.99x`` static throughput on the
+  uniform trace, re-derived from the raw per-arm numbers, with both
+  arms' replay gates clean;
 * chaos (``BENCH_chaos.ci.json``, from ``fpmax chaos``): the fault
   drill's hard gates, re-validated from the raw ledger rather than
   trusting the artifact's own ``gates`` verdicts — zero hung tickets,
@@ -28,11 +32,19 @@ fails the job with a readable delta table when any budget is blown:
   surviving work, every planned fault fired, fleet accounting conserved
   across shard incarnations, and at least one respawn per dispatcher
   kill. Chaos artifacts carry no ``thresholds`` object: the gates are
-  absolute.
+  absolute;
+* routing (``BENCH_routing.ci.json``, from ``fpmax replay``): per-arm
+  replay gates re-derived from the raw ledger (zero hung, ledger
+  balanced, crosscheck clean, every fault fired, conservation exact,
+  replay digest stable across the double run), and — when both policy
+  arms are present — the dominance verdict re-derived from the raw
+  throughput and pJ/op numbers against the artifact's embedded
+  thresholds, cross-checked against the artifact's own
+  ``dynamic_dominates`` claim.
 
 Usage::
 
-    python3 python/ci_check_bench.py BENCH_engine.ci.json BENCH_serve.ci.json BENCH_chaos.ci.json
+    python3 python/ci_check_bench.py BENCH_engine.ci.json BENCH_serve.ci.json BENCH_chaos.ci.json BENCH_routing.ci.json
 
 Exit status 0 iff every check passes. Artifacts with ``"measured":
 false`` fail immediately — the gate only makes sense on freshly measured
@@ -60,6 +72,8 @@ class Check:
     def ok(self) -> bool:
         if self.op == ">=":
             return self.value >= self.bound
+        if self.op == ">":
+            return self.value > self.bound
         if self.op == "<=":
             return self.value <= self.bound
         if self.op == "==":
@@ -149,6 +163,20 @@ def serve_checks(doc: dict) -> list[Check]:
                 Check("fleet", "all_shards_bb_identity",
                       1.0 if routed["all_shards_bb_identity"] else 0.0,
                       "is-true", 1.0))
+    routing = doc.get("routing")
+    if routing is not None:
+        # Parity is re-derived from the raw per-arm numbers, never read
+        # from the artifact's own ratio field.
+        ratio = (routing["energy_aware"]["sustained_ops_per_s"]
+                 / max(routing["static"]["sustained_ops_per_s"], 1e-12))
+        out.append(
+            Check("routing", "dynamic_vs_static_uniform", ratio, ">=",
+                  t.get("min_dynamic_vs_static_uniform_ratio", 0.99)))
+        for arm in ("static", "energy_aware"):
+            out.append(
+                Check("routing", f"{arm}_gates_ok",
+                      1.0 if routing[arm]["gates_ok"] else 0.0,
+                      "is-true", 1.0))
     return out
 
 
@@ -183,11 +211,69 @@ def chaos_checks(doc: dict) -> list[Check]:
     return out
 
 
-CHECKERS = {"engine": engine_checks, "serve": serve_checks, "chaos": chaos_checks}
+def routing_checks(doc: dict) -> list[Check]:
+    """The ``fpmax replay`` artifact: per-arm replay gates re-derived
+    from the raw ledger, plus the static-vs-dynamic dominance verdict
+    recomputed from the raw throughput/energy numbers (the artifact's
+    own ``dynamic_dominates`` claim is cross-checked, never trusted)."""
+    t = doc["thresholds"]
+    out = []
+    arms = {arm["policy"]: arm for arm in doc["arms"]}
+    for name, arm in arms.items():
+        out.append(Check(name, "hung_subs", arm["hung_subs"], "==", 0))
+        out.append(
+            Check(name, "op_ledger_balance",
+                  arm["completed_ops"] + arm["errored_ops"]
+                  - arm["submitted_ops"], "==", 0))
+        out.append(
+            Check(name, "crosscheck_mismatches",
+                  arm["crosscheck_mismatches"], "==", 0))
+        out.append(
+            Check(name, "fault_coverage",
+                  arm["faults_fired"] - doc["faults_planned"], "==", 0))
+        out.append(
+            Check(name, "conservation_ok",
+                  1.0 if arm["conservation_ok"] else 0.0, "is-true", 1.0))
+        if doc.get("verify_determinism", False):
+            out.append(
+                Check(name, "digest_stable",
+                      1.0 if arm["digest_stable"] else 0.0, "is-true", 1.0))
+        out.append(
+            Check(name, "gates_ok",
+                  1.0 if arm["gates_ok"] else 0.0, "is-true", 1.0))
+    static = arms.get("static")
+    dynamic = arms.get("energy-aware")
+    if static is not None and dynamic is not None:
+        throughput_ratio = (dynamic["sustained_ops_per_s"]
+                            / max(static["sustained_ops_per_s"], 1e-12))
+        pj_ratio = (dynamic["fleet_pj_per_op"]
+                    / max(static["fleet_pj_per_op"], 1e-12))
+        out.append(
+            Check("dominance", "throughput_ratio", throughput_ratio, ">",
+                  t["min_throughput_ratio"]))
+        out.append(
+            Check("dominance", "pj_ratio", pj_ratio, "<=",
+                  t["max_pj_ratio"]))
+        derived = (throughput_ratio > t["min_throughput_ratio"]
+                   and pj_ratio <= t["max_pj_ratio"])
+        claimed = bool((doc.get("dominance") or {}).get("dynamic_dominates",
+                                                        False))
+        out.append(
+            Check("dominance", "verdict_agrees",
+                  1.0 if claimed == derived else 0.0, "is-true", 1.0))
+    return out
+
+
+CHECKERS = {
+    "engine": engine_checks,
+    "serve": serve_checks,
+    "chaos": chaos_checks,
+    "routing": routing_checks,
+}
 
 # Chaos gates are absolute (zero hung, zero lost, ...) — the artifact
 # embeds no tunable thresholds object.
-NEEDS_THRESHOLDS = {"engine", "serve"}
+NEEDS_THRESHOLDS = {"engine", "serve", "routing"}
 
 
 def check_file(path: str) -> tuple[list[Check], list[str]]:

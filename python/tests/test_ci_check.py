@@ -1,7 +1,7 @@
 """Gate-logic tests for ``python/ci_check_bench.py``: synthetic pass /
-fail / unmeasured artifacts for the engine, serve, and routed-fleet
-checks (no bench run needed — the artifacts are hand-built dicts dumped
-to temp files)."""
+fail / unmeasured artifacts for the engine, serve, routed-fleet,
+routing-parity, chaos, and trace-replay dominance checks (no bench run
+needed — the artifacts are hand-built dicts dumped to temp files)."""
 
 import importlib.util
 import json
@@ -266,6 +266,192 @@ def test_chaos_conservation_break_fails_even_with_clean_ledger(tmp_path):
 
 def test_chaos_unmeasured_is_an_error(tmp_path):
     doc = chaos_doc()
+    doc["measured"] = False
+    checks, errors = run_doc(tmp_path, doc)
+    assert not checks
+    assert errors and "measured" in errors[0]
+
+
+def serve_routing_parity(ratio):
+    def arm(ops_per_s):
+        return {
+            "sustained_ops_per_s": ops_per_s,
+            "fleet_pj_per_op": 12.0,
+            "policy_routed": 0,
+            "digest": "cbf29ce484222325",
+            "gates_ok": True,
+        }
+
+    return {
+        "trace": "uniform",
+        "trace_ops": 25000,
+        "trace_fingerprint": "cbf29ce484222325",
+        "static": arm(1e8),
+        "energy_aware": arm(ratio * 1e8),
+        # A deliberately wrong ratio field: the checker must re-derive
+        # from the raw arm numbers, never read this.
+        "dynamic_vs_static_uniform_ratio": 99.0,
+    }
+
+
+def test_serve_routing_parity_rederives_ratio_from_raw_arms(tmp_path):
+    doc = serve_doc()
+    doc["thresholds"]["min_dynamic_vs_static_uniform_ratio"] = 0.99
+    doc["routing"] = serve_routing_parity(1.002)
+    checks, errors = run_doc(tmp_path, doc)
+    assert not errors
+    parity = [c for c in checks if c.name == "dynamic_vs_static_uniform"]
+    assert len(parity) == 1
+    assert abs(parity[0].value - 1.002) < 1e-9
+    assert all(c.ok for c in checks)
+
+
+def test_serve_routing_parity_fails_below_budget(tmp_path):
+    doc = serve_doc()
+    doc["thresholds"]["min_dynamic_vs_static_uniform_ratio"] = 0.99
+    doc["routing"] = serve_routing_parity(0.9)
+    doc["routing"]["energy_aware"]["gates_ok"] = False
+    checks, errors = run_doc(tmp_path, doc)
+    assert not errors
+    failed = {c.name for c in checks if not c.ok}
+    assert failed == {"dynamic_vs_static_uniform", "energy_aware_gates_ok"}
+
+
+def test_serve_without_routing_section_is_backwards_compatible(tmp_path):
+    # A pre-PR-8 artifact (no "routing" object) gates units + fleet only.
+    checks, errors = run_doc(tmp_path, serve_doc())
+    assert not errors
+    assert all(c.unit != "routing" for c in checks)
+
+
+def routing_doc():
+    # Mirrors the `fpmax replay --policy both --verify-determinism`
+    # artifact: energy-aware dominates static on the diurnal-skew trace.
+    def arm(policy, ops_per_s, pj_per_op):
+        return {
+            "policy": policy,
+            "sustained_ops_per_s": ops_per_s,
+            "fleet_pj_per_op": pj_per_op,
+            "submitted_ops": 60000,
+            "completed_ops": 60000,
+            "errored_ops": 0,
+            "hung_subs": 0,
+            "retries": 3,
+            "policy_routed": 120 if policy == "energy-aware" else 0,
+            "misrouted": 0,
+            "rerouted_on_failure": 0,
+            "admission_denied": 0,
+            "respawns": 0,
+            "faults_fired": 0,
+            "crosscheck_sampled": 512,
+            "crosscheck_mismatches": 0,
+            "conservation_ok": True,
+            "digest": "cbf29ce484222325",
+            "results_in_digest": policy == "static",
+            "digest_stable": True,
+            "gates_ok": True,
+            "wall_secs": 0.8,
+        }
+
+    return {
+        "bench": "routing",
+        "measured": True,
+        "seed": 42,
+        "trace": "diurnal-skew",
+        "tier": "word-simd",
+        "total_ops": 60000,
+        "tenants": 4,
+        "events": 700,
+        "last_slot": 1400,
+        "trace_fingerprint": "cbf29ce484222325",
+        "faults_planned": 0,
+        "verify_determinism": True,
+        "arms": [
+            arm("static", 1.0e8, 13.0),
+            arm("energy-aware", 1.2e8, 12.4),
+        ],
+        "dominance": {
+            "throughput_ratio": 1.2,
+            "pj_ratio": 0.9538,
+            "dynamic_dominates": True,
+        },
+        "thresholds": {
+            "min_throughput_ratio": 1.0,
+            "max_pj_ratio": 1.0,
+        },
+    }
+
+
+def test_routing_dominance_passes_and_is_rederived(tmp_path):
+    checks, errors = run_doc(tmp_path, routing_doc())
+    assert not errors
+    # 7 per-arm checks x 2 arms + 3 dominance checks.
+    assert len(checks) == 17
+    assert all(c.ok for c in checks)
+    dom = {c.name: c for c in checks if c.unit == "dominance"}
+    assert set(dom) == {"throughput_ratio", "pj_ratio", "verdict_agrees"}
+    assert abs(dom["throughput_ratio"].value - 1.2) < 1e-9
+
+
+def test_routing_equal_throughput_does_not_dominate(tmp_path):
+    # Dominance is strict on throughput: a tie must fail the gate, and
+    # an artifact still claiming dominance must also fail verdict_agrees.
+    doc = routing_doc()
+    doc["arms"][1]["sustained_ops_per_s"] = doc["arms"][0]["sustained_ops_per_s"]
+    checks, errors = run_doc(tmp_path, doc)
+    assert not errors
+    failed = {c.name for c in checks if not c.ok}
+    assert failed == {"throughput_ratio", "verdict_agrees"}
+
+
+def test_routing_ledger_and_determinism_violations_fail(tmp_path):
+    doc = routing_doc()
+    doc["arms"][0]["completed_ops"] = 59000  # loses 1000 ops
+    doc["arms"][1]["digest_stable"] = False
+    doc["arms"][1]["faults_fired"] = 1  # fired more than planned
+    checks, errors = run_doc(tmp_path, doc)
+    assert not errors
+    failed = {(c.unit, c.name) for c in checks if not c.ok}
+    assert failed == {
+        ("static", "op_ledger_balance"),
+        ("energy-aware", "digest_stable"),
+        ("energy-aware", "fault_coverage"),
+    }
+
+
+def test_routing_single_arm_skips_dominance(tmp_path):
+    # A --policy static run has no dominance verdict to re-derive; the
+    # per-arm gates still apply.
+    doc = routing_doc()
+    doc["arms"] = doc["arms"][:1]
+    doc["dominance"] = None
+    checks, errors = run_doc(tmp_path, doc)
+    assert not errors
+    assert len(checks) == 7
+    assert all(c.unit == "static" for c in checks)
+    assert all(c.ok for c in checks)
+
+
+def test_routing_without_determinism_flag_skips_digest_gate(tmp_path):
+    doc = routing_doc()
+    doc["verify_determinism"] = False
+    doc["arms"][0]["digest_stable"] = False  # ignored without the flag
+    checks, errors = run_doc(tmp_path, doc)
+    assert not errors
+    assert all(c.name != "digest_stable" for c in checks)
+    assert all(c.ok for c in checks)
+
+
+def test_routing_needs_thresholds(tmp_path):
+    doc = routing_doc()
+    del doc["thresholds"]
+    checks, errors = run_doc(tmp_path, doc)
+    assert not checks
+    assert errors and "thresholds" in errors[0]
+
+
+def test_routing_unmeasured_is_an_error(tmp_path):
+    doc = routing_doc()
     doc["measured"] = False
     checks, errors = run_doc(tmp_path, doc)
     assert not checks

@@ -200,6 +200,19 @@ impl EnergyIntegrator {
             },
         }
     }
+
+    /// Non-destructive snapshot of energy/op over everything pushed so
+    /// far. The still-open idle gap is charged at the **active** leakage
+    /// level — its re-bias decision hasn't been made yet, so the
+    /// snapshot is conservative and converges onto `finish()` whenever
+    /// the gap closes. `INFINITY` before the first active cycle.
+    fn live_pj_per_op(&self) -> f64 {
+        if self.ops == 0 {
+            return f64::INFINITY;
+        }
+        let pending = self.leak_active_w * (self.pending_idle as f64 * self.cycle_s);
+        (self.dynamic + self.leakage + self.transition + pending) * 1e12 / self.ops as f64
+    }
 }
 
 /// The accounting core shared by the profile path and the trace path —
@@ -474,6 +487,17 @@ impl StreamingController {
         } else {
             self.pending_idle.push(w.slots);
         }
+    }
+
+    /// Live energy/op over everything received so far — the streamed
+    /// feedback signal an energy-aware router reads **mid-run**, without
+    /// consuming the controller. Open idle gaps are charged at the
+    /// active leakage level until their re-bias decision is made, so the
+    /// snapshot never understates the eventual accounting of a gap that
+    /// later drops to the idle bias. `INFINITY` until the first active
+    /// window arrives.
+    pub fn live_pj_per_op(&self) -> f64 {
+        self.integrator.live_pj_per_op()
     }
 
     /// End of stream: decide any open idle gap and return the schedule
@@ -756,6 +780,38 @@ mod tests {
                 assert_eq!(out.aggregate, trace.aggregate());
             }
         }
+    }
+
+    #[test]
+    fn live_pj_snapshot_matches_finish_when_no_gap_is_open() {
+        let (unit, tech) = setup();
+        let profile = UtilizationProfile {
+            name: "t".into(),
+            segments: vec![
+                crate::workloads::utilization::Segment { active: true, cycles: 200 },
+                crate::workloads::utilization::Segment { active: false, cycles: 800 },
+                crate::workloads::utilization::Segment { active: true, cycles: 200 },
+            ],
+        };
+        let trace = ActivityTrace::from_profile(&profile, 100);
+        let policy = BbPolicy::Adaptive { vbb_active: 1.2, vbb_idle: 0.0, settle_cycles: 150 };
+        let mut ctrl = StreamingController::new(&unit, &tech, 0.6, policy).unwrap();
+        assert!(ctrl.live_pj_per_op().is_infinite(), "undefined before the first op");
+        let mut snapshots = Vec::new();
+        for w in trace.windows() {
+            ctrl.push_window(w);
+            snapshots.push(ctrl.live_pj_per_op());
+        }
+        assert!(snapshots.iter().all(|v| v.is_finite()));
+        let final_snapshot = *snapshots.last().unwrap();
+        let out = ctrl.finish();
+        // The trace ends on an active window, so no idle gap is open
+        // and the snapshot equals the finished accounting exactly.
+        assert_eq!(final_snapshot, out.energy.pj_per_op);
+        // Mid-gap (window 5 sits deep in the 800-cycle gap) the open
+        // idle is charged at the active leakage level, so the snapshot
+        // never understates the eventual re-biased accounting.
+        assert!(snapshots[5] >= out.energy.pj_per_op);
     }
 
     #[test]

@@ -19,16 +19,21 @@
 //! fused golden softfloat ([`GoldenFma`]).
 
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use crate::arch::engine::{ActivityTrace, BatchExecutor, Fidelity, GoldenFma, UnitDatapath};
 use crate::arch::fp::{decode, Class, Precision};
 use crate::arch::generator::{FpuKind, FpuUnit};
-use crate::runtime::chaos::{fnv1a_fold, ChaosReport, FaultKind, FaultPlan, ProducerStats, FNV_OFFSET};
+use crate::runtime::chaos::{
+    fnv1a_fold, ChaosReport, FaultKind, FaultPlan, FaultTrigger, ProducerStats, FNV_OFFSET,
+};
 use crate::runtime::router::{
-    FleetReport, RetryPolicy, RouterConfig, ServeRouter, ShardHealth, ShardSpec, WorkloadClass,
+    FleetReport, RetryPolicy, RoutePolicy, RouterConfig, ServeRouter, ShardHealth, ShardSpec,
+    WorkloadClass,
 };
 use crate::runtime::serve::{ServeConfig, ServeError, ServeLoad, ServeQueue, ServeReport, Ticket};
+use crate::runtime::trace::Trace;
 use crate::runtime::FmacArtifact;
 use crate::workloads::throughput::{OperandBatch, OperandMix, OperandStream, OperandTriple};
 
@@ -483,6 +488,10 @@ pub fn serve_chaos(
         };
         anyhow::ensure!(shard_ok, "fault {:?} targets outside the fleet", f.kind);
     }
+    anyhow::ensure!(
+        !plan.needs_replay_clock(),
+        "fault plan has trace-slot triggers; only serve_trace advances a replay clock"
+    );
     let t0 = Instant::now();
     let router = ServeRouter::start(specs, rcfg)?;
     let classes = WorkloadClass::ALL;
@@ -493,7 +502,12 @@ pub fn serve_chaos(
         let injector = s.spawn(|| {
             let mut fired = Vec::new();
             for f in &plan.faults {
-                while submitted_ops.load(Ordering::Relaxed) < f.after_ops
+                // Op-anchored only: the replay-clock plans were
+                // rejected at entry.
+                let FaultTrigger::SubmittedOps(at) = f.trigger else {
+                    unreachable!("trace-slot plans are rejected before producers start")
+                };
+                while submitted_ops.load(Ordering::Relaxed) < at
                     && !done.load(Ordering::Relaxed)
                 {
                     std::thread::sleep(Duration::from_micros(200));
@@ -657,7 +671,12 @@ fn chaos_producer(
         st.submitted_subs += 1;
         st.submitted_ops += span as u64;
         submitted_ops.fetch_add(span as u64, Ordering::Relaxed);
-        match router.submit_with_retry(class, tier, &triples, Some(deadline), retry) {
+        // Backoff jitter derives from the submission's own identity
+        // (size-stream seed × submission index), never the wall clock —
+        // a replayed run reproduces its retry timing decisions.
+        let retry_seed = size_seed ^ st.submitted_subs.rotate_left(20);
+        match router.submit_with_retry_seeded(class, tier, &triples, Some(deadline), retry, retry_seed)
+        {
             Ok(out) => {
                 anyhow::ensure!(
                     out.bits.len() == span,
@@ -682,6 +701,362 @@ fn chaos_producer(
             }
         }
         left -= span;
+    }
+    st.checksums.push(checksum);
+    Ok(st)
+}
+
+/// Issue-slot equivalents per virtual trace slot: the scale that turns
+/// a tenant's inter-arrival gap into idle accounting on the fleet, so
+/// the BB controllers see the trace's duty cycle, not just its work.
+const IDLE_OPS_PER_SLOT: u64 = 32;
+
+/// Outcome of one trace replay: the digest-bearing report plus the
+/// full fleet detail behind it.
+#[derive(Debug, Clone)]
+pub struct ReplayOutcome {
+    pub report: ReplayReport,
+    pub fleet: FleetReport,
+}
+
+/// What a replayed trace produced, split into two kinds of numbers:
+///
+/// * **Deterministic invariants** — the trace fingerprint, per-class op
+///   totals, and the producer ledger (and, under kind-preserving
+///   configurations, the per-tenant result checksums). These fold into
+///   [`ReplayReport::digest`]: same seed + same trace ⇒ bit-identical
+///   digest, the replay determinism gate.
+/// * **Measurements** — sustained throughput, fleet pJ/op, placement
+///   counters, wall time. Timing-dependent by nature (routing under
+///   load observes live pressure and feedback); these are what the
+///   static-vs-dynamic dominance verdict reads, and they are *excluded*
+///   from the digest.
+#[derive(Debug, Clone)]
+pub struct ReplayReport {
+    pub seed: u64,
+    pub tier_name: &'static str,
+    pub policy_name: &'static str,
+    /// [`Trace::fingerprint`] — identity of the replayed input.
+    pub trace_fingerprint: u64,
+    pub events: usize,
+    pub tenants: usize,
+    /// The replay clock's final value.
+    pub last_slot: u64,
+    /// Per-class submitted ops in [`WorkloadClass::index`] order.
+    pub class_ops: [u64; 4],
+    pub producer: ProducerStats,
+    pub faults_planned: usize,
+    pub faults_fired: usize,
+    /// Fleet placement counters (see [`FleetReport`]).
+    pub misrouted: u64,
+    pub policy_routed: u64,
+    pub rerouted_on_failure: u64,
+    pub admission_denied: u64,
+    pub respawns: u64,
+    pub fleet_ops: u64,
+    pub crosscheck_sampled: u64,
+    pub crosscheck_mismatches: u64,
+    pub fleet_pj_per_op: f64,
+    /// Completed ops over end-to-end wall time — the throughput number
+    /// the dominance verdict compares.
+    pub sustained_ops_per_s: f64,
+    pub conservation_ok: bool,
+    /// Whether the per-tenant result checksums were folded into the
+    /// digest (kind-preserving policy + spill disabled + no faults;
+    /// cross-kind placement legitimately changes result bits, so a
+    /// dynamic run's digest covers the ledger invariants only).
+    pub results_in_digest: bool,
+    pub digest: u64,
+    pub wall_secs: f64,
+}
+
+impl ReplayReport {
+    /// Gate: every submission resolved within its deadline.
+    pub fn zero_hung(&self) -> bool {
+        self.producer.hung_subs == 0 && self.producer.hung_ops == 0
+    }
+
+    /// Gate: completed + errored + hung == submitted on both ledgers.
+    pub fn zero_lost(&self) -> bool {
+        self.producer.completed_subs + self.producer.errored_subs + self.producer.hung_subs
+            == self.producer.submitted_subs
+            && self.producer.completed_ops + self.producer.errored_ops + self.producer.hung_ops
+                == self.producer.submitted_ops
+    }
+
+    /// Gate: every planned fault fired.
+    pub fn coverage_ok(&self) -> bool {
+        self.faults_fired == self.faults_planned
+    }
+
+    /// Gate: zero sampled cross-check mismatches.
+    pub fn crosscheck_clean(&self) -> bool {
+        self.crosscheck_mismatches == 0
+    }
+
+    /// All hard gates (incl. [`FleetReport::conservation_ok`], captured
+    /// at construction).
+    pub fn gates_ok(&self) -> bool {
+        self.zero_hung()
+            && self.zero_lost()
+            && self.coverage_ok()
+            && self.crosscheck_clean()
+            && self.conservation_ok
+    }
+}
+
+/// The replay digest: FNV-1a over the deterministic invariants only.
+/// `retries` and every wall-clock measurement stay out — they are
+/// timing, not identity.
+fn replay_digest(
+    trace_fingerprint: u64,
+    class_ops: &[u64; 4],
+    p: &ProducerStats,
+    results_in_digest: bool,
+) -> u64 {
+    let mut h = fnv1a_fold(FNV_OFFSET, trace_fingerprint);
+    for &c in class_ops {
+        h = fnv1a_fold(h, c);
+    }
+    for v in [
+        p.submitted_subs,
+        p.completed_subs,
+        p.errored_subs,
+        p.hung_subs,
+        p.submitted_ops,
+        p.completed_ops,
+        p.errored_ops,
+        p.hung_ops,
+    ] {
+        h = fnv1a_fold(h, v);
+    }
+    h = fnv1a_fold(h, results_in_digest as u64);
+    if results_in_digest {
+        for &c in &p.checksums {
+            h = fnv1a_fold(h, c);
+        }
+    }
+    h
+}
+
+/// Replay a seeded multi-tenant [`Trace`] against a shard fleet under a
+/// chosen [`RoutePolicy`] — the experiment that judges the dynamic
+/// policies against the static baseline on realistic load shapes.
+///
+/// One producer thread per tenant walks its slice of the event stream
+/// in virtual-time order: each event's inter-arrival gap becomes idle
+/// accounting ([`ServeRouter::submit_idle`], [`IDLE_OPS_PER_SLOT`]
+/// issue slots per trace slot), then its ops are submitted through the
+/// resilient seeded-retry path ([`ServeRouter::submit_with_retry_seeded`]
+/// — backoff jitter derives from the event's own `op_seed`, never the
+/// wall clock). The shared replay clock is the monotonic max of
+/// submitted event slots; an injector thread fires the plan's faults
+/// against whichever axis each trigger names, so slot-anchored chaos
+/// ([`FaultTrigger::TraceSlot`]) composes with the trace's duty cycle.
+pub fn serve_trace(
+    specs: &[ShardSpec],
+    rcfg: RouterConfig,
+    tier: Fidelity,
+    trace: &Trace,
+    policy: Arc<dyn RoutePolicy>,
+    plan: &FaultPlan,
+    deadline: Duration,
+    retry: RetryPolicy,
+) -> crate::Result<ReplayOutcome> {
+    anyhow::ensure!(!trace.events.is_empty(), "trace has no events");
+    for f in &plan.faults {
+        let shard_ok = match f.kind {
+            FaultKind::KillDispatcher { shard }
+            | FaultKind::WorkerPanic { shard }
+            | FaultKind::RingFlood { shard, .. }
+            | FaultKind::Latency { shard, .. } => shard < specs.len(),
+            FaultKind::NanStorm { class_idx, .. } => class_idx < WorkloadClass::ALL.len(),
+        };
+        anyhow::ensure!(shard_ok, "fault {:?} targets outside the fleet", f.kind);
+    }
+    let results_in_digest = policy.kind_preserving()
+        && rcfg.spill_pressure_ops == usize::MAX
+        && plan.faults.is_empty();
+    let t0 = Instant::now();
+    let router = ServeRouter::start_with_policy(specs, rcfg, policy)?;
+    let tenants = trace.config.tenants;
+    let mut per_tenant: Vec<Vec<crate::runtime::trace::TraceEvent>> = vec![Vec::new(); tenants];
+    for e in &trace.events {
+        // The global stream is (slot, tenant)-sorted, so each tenant's
+        // slice stays in its own arrival order.
+        per_tenant[e.tenant].push(*e);
+    }
+    let submitted_ops = AtomicU64::new(0);
+    let replay_slot = AtomicU64::new(0);
+    let done = AtomicBool::new(false);
+    let (fired, stats, produce_err) = std::thread::scope(|s| {
+        let injector = s.spawn(|| {
+            let mut fired = Vec::new();
+            for f in &plan.faults {
+                loop {
+                    let reached = match f.trigger {
+                        FaultTrigger::SubmittedOps(at) => {
+                            submitted_ops.load(Ordering::Relaxed) >= at
+                        }
+                        FaultTrigger::TraceSlot(at) => replay_slot.load(Ordering::Relaxed) >= at,
+                    };
+                    if reached || done.load(Ordering::Relaxed) {
+                        break;
+                    }
+                    std::thread::sleep(Duration::from_micros(200));
+                }
+                let armed = Instant::now();
+                loop {
+                    if fire_fault(&router, tier, f.kind, deadline).is_ok() {
+                        fired.push(f.kind);
+                        break;
+                    }
+                    if armed.elapsed() > Duration::from_secs(5) {
+                        break;
+                    }
+                    std::thread::sleep(Duration::from_millis(5));
+                }
+            }
+            fired
+        });
+        let mut joins = Vec::new();
+        for events in &per_tenant {
+            let router = &router;
+            let submitted_ops = &submitted_ops;
+            let replay_slot = &replay_slot;
+            joins.push(s.spawn(move || {
+                trace_tenant(router, tier, events, deadline, retry, submitted_ops, replay_slot)
+            }));
+        }
+        let mut stats = ProducerStats::default();
+        let mut err: Option<anyhow::Error> = None;
+        for j in joins {
+            match j.join() {
+                Ok(Ok(p)) => stats.absorb(&p),
+                Ok(Err(e)) => {
+                    err.get_or_insert(e);
+                }
+                Err(_) => {
+                    err.get_or_insert(anyhow::anyhow!("trace tenant panicked"));
+                }
+            }
+        }
+        done.store(true, Ordering::Relaxed);
+        let fired = injector.join().unwrap_or_default();
+        (fired, stats, err)
+    });
+    // Same recovery grace as the chaos harness: a kill fired near the
+    // tail may still be mid-respawn, and finish() on a half-booted
+    // shard is an error, not an accounting merge.
+    if !plan.faults.is_empty() {
+        let recovery_grace = Instant::now() + Duration::from_secs(30);
+        while Instant::now() < recovery_grace {
+            let healthy = (0..router.shard_count())
+                .all(|i| router.shard_health(i) == ShardHealth::Healthy);
+            if healthy {
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(1));
+        }
+    }
+    let finished = router.finish();
+    if let Some(e) = produce_err {
+        return Err(e);
+    }
+    let fleet = finished?;
+    let wall_secs = t0.elapsed().as_secs_f64();
+    let class_ops = trace.class_ops();
+    let digest = replay_digest(trace.fingerprint, &class_ops, &stats, results_in_digest);
+    let report = ReplayReport {
+        seed: trace.config.seed,
+        tier_name: tier.name(),
+        policy_name: fleet.policy_name,
+        trace_fingerprint: trace.fingerprint,
+        events: trace.events.len(),
+        tenants,
+        last_slot: replay_slot.load(Ordering::Relaxed),
+        class_ops,
+        faults_planned: plan.faults.len(),
+        faults_fired: fired.len(),
+        misrouted: fleet.misrouted,
+        policy_routed: fleet.policy_routed,
+        rerouted_on_failure: fleet.rerouted_on_failure,
+        admission_denied: fleet.admission_denied,
+        respawns: fleet.respawns(),
+        fleet_ops: fleet.ops,
+        crosscheck_sampled: fleet.crosscheck_sampled(),
+        crosscheck_mismatches: fleet.crosscheck_mismatches(),
+        fleet_pj_per_op: fleet.fleet_energy.pj_per_op,
+        sustained_ops_per_s: stats.completed_ops as f64 / wall_secs.max(1e-9),
+        conservation_ok: fleet.conservation_ok(),
+        results_in_digest,
+        digest,
+        wall_secs,
+        producer: stats,
+    };
+    Ok(ReplayOutcome { report, fleet })
+}
+
+/// One replay tenant: walks its events in arrival order, turning gaps
+/// into idle accounting and ops into resilient submissions, and lands
+/// every outcome in exactly one ledger column. Returns `Err` only for
+/// harness-level corruption (a *short* successful result).
+fn trace_tenant(
+    router: &ServeRouter,
+    tier: Fidelity,
+    events: &[crate::runtime::trace::TraceEvent],
+    deadline: Duration,
+    retry: RetryPolicy,
+    submitted_ops: &AtomicU64,
+    replay_slot: &AtomicU64,
+) -> crate::Result<ProducerStats> {
+    let mut st = ProducerStats::default();
+    let mut checksum = FNV_OFFSET;
+    for e in events {
+        replay_slot.fetch_max(e.slot, Ordering::Relaxed);
+        if e.idle_before > 0 {
+            // Idle on a shard that happens to be mid-respawn is dropped
+            // (retryable error) — an idle gap is not work anyone loses.
+            let _ = router.submit_idle(e.class, tier, e.idle_before * IDLE_OPS_PER_SLOT);
+        }
+        let mut stream =
+            OperandStream::new(e.class.precision, OperandMix::Finite, e.op_seed);
+        let triples = stream.batch(e.ops as usize);
+        st.submitted_subs += 1;
+        st.submitted_ops += e.ops;
+        submitted_ops.fetch_add(e.ops, Ordering::Relaxed);
+        match router.submit_with_retry_seeded(
+            e.class,
+            tier,
+            &triples,
+            Some(deadline),
+            retry,
+            e.op_seed,
+        ) {
+            Ok(out) => {
+                anyhow::ensure!(
+                    out.bits.len() == e.ops as usize,
+                    "short result: {} of {}",
+                    out.bits.len(),
+                    e.ops
+                );
+                for b in &out.bits {
+                    checksum = fnv1a_fold(checksum, *b);
+                }
+                st.completed_subs += 1;
+                st.completed_ops += e.ops;
+                st.retries += u64::from(out.retries);
+            }
+            Err(err) => {
+                if ServeError::classify(&err) == Some(ServeError::DeadlineExceeded) {
+                    st.hung_subs += 1;
+                    st.hung_ops += e.ops;
+                } else {
+                    st.errored_subs += 1;
+                    st.errored_ops += e.ops;
+                }
+            }
+        }
     }
     st.checksums.push(checksum);
     Ok(st)

@@ -8,7 +8,10 @@
 //! stalled shards, special-heavy operand storms. This module makes
 //! those failures **reproducible**: a [`FaultPlan`] is derived from a
 //! seed, so the same seed always yields the same typed fault sequence
-//! at the same op-count trigger points, in tests and in CI alike.
+//! at the same trigger points, in tests and in CI alike. A trigger is
+//! either a fleet-wide submitted-op count or — so chaos drills compose
+//! with trace replay instead of needing a second fault layer — a
+//! replay-clock trace slot ([`FaultTrigger`]).
 //!
 //! The plan only *schedules* faults; firing them is the
 //! [`crate::coordinator::serve_chaos`] harness's job (it owns the
@@ -81,11 +84,43 @@ impl FaultKind {
     }
 }
 
-/// A fault armed at a point in the submitted-op stream: it fires once
-/// the fleet-wide submitted-op counter reaches `after_ops`.
+/// When a [`ScheduledFault`] fires.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultTrigger {
+    /// Once the fleet-wide submitted-op counter reaches this — the
+    /// classic chaos anchor, workload-shape independent.
+    SubmittedOps(u64),
+    /// Once the trace-replay clock reaches this trace slot — the anchor
+    /// that composes with [`crate::runtime::trace`] replays: "kill the
+    /// SP CMA shard at the diurnal trough" is a slot, not an op count.
+    /// Only the replay harness advances a replay clock, so op-stream
+    /// harnesses reject plans carrying these.
+    TraceSlot(u64),
+}
+
+impl FaultTrigger {
+    /// The trigger's scalar position on its own axis (plans never mix
+    /// axes, so this is also the plan's sort key).
+    pub fn at(self) -> u64 {
+        match self {
+            FaultTrigger::SubmittedOps(v) | FaultTrigger::TraceSlot(v) => v,
+        }
+    }
+
+    /// Stable JSON name of the axis.
+    pub fn axis(self) -> &'static str {
+        match self {
+            FaultTrigger::SubmittedOps(_) => "submitted_ops",
+            FaultTrigger::TraceSlot(_) => "trace_slot",
+        }
+    }
+}
+
+/// A fault armed at a trigger point: it fires once its trigger's axis
+/// (submitted-op counter, or the replay clock) reaches the armed value.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct ScheduledFault {
-    pub after_ops: u64,
+    pub trigger: FaultTrigger,
     pub kind: FaultKind,
 }
 
@@ -94,7 +129,7 @@ pub struct ScheduledFault {
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct FaultPlan {
     pub seed: u64,
-    /// Sorted by `after_ops` (ties keep construction order).
+    /// Sorted by trigger point (ties keep construction order).
     pub faults: Vec<ScheduledFault>,
 }
 
@@ -115,11 +150,33 @@ impl FaultPlan {
         let span = (total_ops * 8 / 10).saturating_sub(lo).max(1);
         let mut faults: Vec<ScheduledFault> = (0..shards)
             .map(|shard| ScheduledFault {
-                after_ops: lo + rng.below(span),
+                trigger: FaultTrigger::SubmittedOps(lo + rng.below(span)),
                 kind: FaultKind::KillDispatcher { shard },
             })
             .collect();
-        faults.sort_by_key(|f| f.after_ops);
+        faults.sort_by_key(|f| f.trigger.at());
+        FaultPlan { seed, faults }
+    }
+
+    /// The replay-composed variant of [`FaultPlan::kill_each_shard_once`]:
+    /// every shard killed exactly once, anchored to seeded **trace
+    /// slots** in the middle of the replay window (10%–80% of
+    /// `total_slots`) instead of op counts — so a diurnal trace drives
+    /// the load shape and the kill lands at a reproducible point of the
+    /// day regardless of how many ops the duty cycle put there. Only
+    /// [`crate::coordinator::serve_trace`] can fire these; op-stream
+    /// harnesses reject the plan.
+    pub fn kill_each_shard_once_at_slots(seed: u64, shards: usize, total_slots: u64) -> FaultPlan {
+        let mut rng = Rng::new(seed ^ 0xC4A0_5C4A_05C4_A05C);
+        let lo = total_slots / 10;
+        let span = (total_slots * 8 / 10).saturating_sub(lo).max(1);
+        let mut faults: Vec<ScheduledFault> = (0..shards)
+            .map(|shard| ScheduledFault {
+                trigger: FaultTrigger::TraceSlot(lo + rng.below(span)),
+                kind: FaultKind::KillDispatcher { shard },
+            })
+            .collect();
+        faults.sort_by_key(|f| f.trigger.at());
         FaultPlan { seed, faults }
     }
 
@@ -142,10 +199,11 @@ impl FaultPlan {
                 ops: 256 + rng.below(256) as usize,
             },
         ];
-        plan.faults.extend(
-            extra.into_iter().map(|kind| ScheduledFault { after_ops: lo + rng.below(span), kind }),
-        );
-        plan.faults.sort_by_key(|f| f.after_ops);
+        plan.faults.extend(extra.into_iter().map(|kind| ScheduledFault {
+            trigger: FaultTrigger::SubmittedOps(lo + rng.below(span)),
+            kind,
+        }));
+        plan.faults.sort_by_key(|f| f.trigger.at());
         plan
     }
 
@@ -156,6 +214,13 @@ impl FaultPlan {
             .iter()
             .filter(|f| matches!(f.kind, FaultKind::KillDispatcher { .. }))
             .count()
+    }
+
+    /// True if any fault is anchored to the replay clock
+    /// ([`FaultTrigger::TraceSlot`]) — such a plan only makes sense
+    /// under trace replay, and the op-stream chaos harness rejects it.
+    pub fn needs_replay_clock(&self) -> bool {
+        self.faults.iter().any(|f| matches!(f.trigger, FaultTrigger::TraceSlot(_)))
     }
 }
 
@@ -439,14 +504,37 @@ mod tests {
         shards.sort_unstable();
         assert_eq!(shards, vec![0, 1, 2, 3]);
         for f in &plan.faults {
+            let FaultTrigger::SubmittedOps(at) = f.trigger else {
+                panic!("op-anchored plan produced {:?}", f.trigger);
+            };
             assert!(
-                (10_000..90_000).contains(&f.after_ops),
-                "kill at {} is outside the live window",
-                f.after_ops
+                (10_000..90_000).contains(&at),
+                "kill at {at} is outside the live window"
             );
         }
         // Sorted by trigger point.
-        assert!(plan.faults.windows(2).all(|w| w[0].after_ops <= w[1].after_ops));
+        assert!(plan.faults.windows(2).all(|w| w[0].trigger.at() <= w[1].trigger.at()));
+    }
+
+    #[test]
+    fn slot_anchored_plan_uses_the_replay_clock() {
+        let plan = FaultPlan::kill_each_shard_once_at_slots(7, 4, 2_000);
+        assert_eq!(plan.faults.len(), 4);
+        assert_eq!(plan.kills(), 4);
+        assert!(plan.needs_replay_clock());
+        for f in &plan.faults {
+            let FaultTrigger::TraceSlot(slot) = f.trigger else {
+                panic!("slot-anchored plan produced {:?}", f.trigger);
+            };
+            assert!((200..1_800).contains(&slot), "kill at slot {slot} outside live window");
+            assert_eq!(f.trigger.axis(), "trace_slot");
+        }
+        assert!(plan.faults.windows(2).all(|w| w[0].trigger.at() <= w[1].trigger.at()));
+        // Same seed ⇒ same plan, on this axis too.
+        assert_eq!(plan, FaultPlan::kill_each_shard_once_at_slots(7, 4, 2_000));
+        // And the op-anchored plans stay clock-free.
+        assert!(!FaultPlan::kill_each_shard_once(7, 4, 100_000).needs_replay_clock());
+        assert!(!FaultPlan::full_drill(7, 4, 4, 100_000).needs_replay_clock());
     }
 
     #[test]

@@ -4,8 +4,9 @@
 //! multi-unit [`router`] (one serve shard per unit preset × precision ×
 //! fidelity tier behind workload-aware dispatch — see
 //! [`router::ServeRouter`]), the deterministic [`chaos`] fault engine
-//! that proves the fleet serves through failures, and the PJRT artifact
-//! runtime.
+//! that proves the fleet serves through failures, the seeded
+//! multi-tenant [`trace`] workload generator that drives and judges the
+//! dynamic routing policies, and the PJRT artifact runtime.
 //!
 //! PJRT side: loads the AOT-compiled JAX/Pallas artifacts
 //! (`artifacts/*.hlo.txt`) and executes them from Rust.
@@ -27,15 +28,19 @@
 pub mod chaos;
 pub mod router;
 pub mod serve;
+pub mod trace;
 
-pub use chaos::{ChaosReport, FaultKind, FaultPlan, ScheduledFault};
+pub use chaos::{ChaosReport, FaultKind, FaultPlan, FaultTrigger, ScheduledFault};
 pub use router::{
-    FleetReport, RetryPolicy, RouterConfig, ServeRouter, ServiceClass, ShardHealth, ShardReport,
-    ShardSpec, SubmitOutcome, WorkloadClass,
+    EnergyAware, FleetReport, Placement, RetryPolicy, RouteCandidate, RouteContext, RoutePolicy,
+    RouterConfig, ServeRouter, ServiceClass, ShardHealth, ShardReport, ShardSpec, StaticAffinity,
+    SubmitOutcome, WorkloadClass,
 };
 pub use serve::{
-    SalvagedRun, ServeConfig, ServeError, ServeLoad, ServeQueue, ServeReport, SubmitHandle, Ticket,
+    SalvagedRun, ServeConfig, ServeError, ServeLoad, ServeQueue, ServeReport, ShardFeedback,
+    SubmitHandle, Ticket,
 };
+pub use trace::{Trace, TraceConfig, TraceEvent};
 
 #[cfg(feature = "pjrt")]
 mod pjrt;

@@ -85,6 +85,35 @@
 //! can show that latency-class traffic measurably landed on
 //! latency-optimized shards (`misrouted == 0` under the static policy
 //! with no spill pressure).
+//!
+//! # Dynamic routing (PR 8)
+//!
+//! Placement is pluggable through [`RoutePolicy`]. The router surveys
+//! the healthy candidates for each submission — in-flight pressure,
+//! the shard's completed-latency EWMA, and the live streamed pJ/op its
+//! [`crate::bb::StreamingController`] publishes through
+//! [`ShardFeedback`] — and hands the survey to the policy:
+//!
+//! * [`StaticAffinity`] (the default) reproduces the Table-1 +
+//!   spill/failover decision tree above, bit-for-bit; it stays the
+//!   comparison baseline.
+//! * [`EnergyAware`] scores every candidate by
+//!   `w_lat·latency + w_pj·pJ/op + w_press·pressure (+ off-affinity
+//!   penalty)` and takes the minimum — so a backlogged CMA shard spills
+//!   its latency-class work onto the *more efficient* FMA pipeline
+//!   instead of queueing, a degrading shard (rising EWMA) sheds load
+//!   before its tail blows up, SLO-class admission control turns bulk
+//!   work away at saturation ([`ServeError::AdmissionDenied`]), and at
+//!   low fleet utilization idle phases are *parked* on one quiet shard
+//!   per precision — consolidated long gaps are what the adaptive
+//!   body-bias converts into the paper's ~2× low-activity recovery,
+//!   where scattered short gaps would leak at the active level.
+//!
+//! Off-affinity placements an energy policy chooses deliberately are
+//! counted as `policy_routed`, not `misrouted` — the latter keeps
+//! meaning "static-policy violation" so its zero-gate stays meaningful.
+//! Cross-kind placement computes in the receiving unit's own Table-I
+//! rounding semantics, exactly like spill always has.
 
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicU8, Ordering};
 use std::sync::{Arc, RwLock};
@@ -95,9 +124,10 @@ use crate::arch::fp::Precision;
 use crate::arch::generator::{FpuConfig, FpuKind, FpuUnit};
 use crate::bb::{merge_run_energies, BbRunEnergy};
 use crate::runtime::serve::{
-    ServeConfig, ServeError, ServeQueue, ServeReport, SubmitHandle, Ticket,
+    ServeConfig, ServeError, ServeQueue, ServeReport, ShardFeedback, SubmitHandle, Ticket,
 };
 use crate::util::stats::percentile;
+use crate::util::Rng;
 use crate::workloads::throughput::{OperandMix, OperandStream, OperandTriple};
 
 /// What a submission is optimized for — the paper's workload axis.
@@ -288,6 +318,21 @@ impl RetryPolicy {
         let mult = 1u32.checked_shl(attempt).unwrap_or(u32::MAX);
         self.base_backoff.saturating_mul(mult).min(self.max_backoff)
     }
+
+    /// Deterministically-jittered backoff: the capped exponential delay
+    /// for `attempt`, scaled by a factor in `[0.5, 1.0)` derived purely
+    /// from `(seed, attempt)` — desynchronizing colliding retriers like
+    /// wall-clock jitter would, but reproducing bit-identically on
+    /// replay. The same `(policy, seed)` always yields the same backoff
+    /// sequence, which is what lets trace replays and chaos runs pin
+    /// their retry timing.
+    pub fn backoff_jittered(self, attempt: u32, seed: u64) -> Duration {
+        let base = self.backoff(attempt);
+        // One SplitMix64 draw keyed by (seed, attempt): stateless, so
+        // retry loops need not thread an Rng through.
+        let mut rng = Rng::new(seed ^ ((u64::from(attempt) + 1) << 17));
+        base.mul_f64(0.5 + 0.5 * rng.f64())
+    }
 }
 
 /// Outcome of a resilient submission ([`ServeRouter::submit_with_retry`]).
@@ -301,12 +346,14 @@ pub struct SubmitOutcome {
     pub retries: u32,
 }
 
-/// Where a dispatch decision landed.
+/// Where a dispatch decision landed. Returned by [`RoutePolicy::place`];
+/// the router's fleet counters are keyed off it.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
-enum Placement {
+pub enum Placement {
     /// The class's affinity shard.
     Affinity,
-    /// Diverted off-affinity by backlog pressure.
+    /// Diverted off-affinity by backlog pressure (the static policy's
+    /// spill rule).
     Spill,
     /// No affinity shard exists for the class at this tier; any
     /// compatible shard took it.
@@ -314,6 +361,317 @@ enum Placement {
     /// Diverted off the (existing) affinity shard because it is
     /// quarantined or awaiting probe re-admission.
     Failover,
+    /// A dynamic policy chose an off-affinity shard on its cost score
+    /// while the affinity shard was healthy and available — deliberate
+    /// placement, counted as `policy_routed`, never `misrouted`.
+    Policy,
+}
+
+/// One healthy shard's routing survey, as a [`RoutePolicy`] sees it:
+/// identity, load, and the two feedback signals the shard publishes
+/// through its [`ShardFeedback`] cell.
+#[derive(Debug, Clone, Copy)]
+pub struct RouteCandidate {
+    /// Fleet slot index ([`ServeRouter`] shard order).
+    pub shard: usize,
+    /// The unit's pipeline kind (CMA = latency-optimized cascade,
+    /// FMA = throughput/efficiency-optimized fused).
+    pub kind: FpuKind,
+    /// This shard is the submission class's Table-1 affinity kind.
+    pub affinity: bool,
+    /// In-flight ops (queued or mid-batch) at survey time.
+    pub pressure: usize,
+    /// The shard's backpressure bound — normalizes `pressure`.
+    pub max_queue_ops: usize,
+    /// Completed-submission latency EWMA, seconds; `None` before the
+    /// shard (or any prior incarnation) completed anything.
+    pub ewma_latency_s: Option<f64>,
+    /// Live streamed pJ/op as of the shard controller's last consumed
+    /// window; `None` before the first op's window landed.
+    pub live_pj_per_op: Option<f64>,
+}
+
+/// Fleet-scope context shared by every candidate in one placement
+/// decision.
+#[derive(Debug, Clone, Copy)]
+pub struct RouteContext {
+    /// The router's spill threshold (the static policy's divert
+    /// trigger; `usize::MAX` = spill disabled).
+    pub spill_pressure_ops: usize,
+    /// The class's affinity shard exists but is quarantined or awaiting
+    /// probe re-admission (so an off-affinity pick is a failover, not a
+    /// policy choice).
+    pub unhealthy_affinity: bool,
+    /// Fleet-wide in-flight ops over fleet-wide queue capacity across
+    /// every *healthy* shard — the utilization signal for the
+    /// low-activity re-bias rule. In `[0, 1]`-ish (pressure can
+    /// transiently exceed a queue's bound by one submission).
+    pub fleet_utilization: f64,
+}
+
+/// A pluggable placement policy. The router surveys the healthy
+/// candidates matching a submission's precision and tier (never empty —
+/// empty surveys error before the policy is consulted) and the policy
+/// picks one.
+///
+/// Policies must be deterministic functions of their inputs: routing
+/// under load is inherently timing-dependent (pressure and feedback
+/// move), but a policy that added its own entropy would make even the
+/// trace-replay invariants (per-class op conservation, ledger totals)
+/// unreproducible.
+pub trait RoutePolicy: Send + Sync {
+    /// Short stable name, recorded in the [`FleetReport`] and the bench
+    /// artifacts.
+    fn name(&self) -> &'static str;
+
+    /// Choose among `candidates` (at least one): returns an index
+    /// **into `candidates`** plus the placement label to account the
+    /// dispatch under. `Err` refuses the submission — admission
+    /// control; wrap a [`ServeError`] so producers can classify it.
+    fn place(
+        &self,
+        class: WorkloadClass,
+        candidates: &[RouteCandidate],
+        ctx: &RouteContext,
+    ) -> crate::Result<(usize, Placement)>;
+
+    /// Which candidate absorbs an idle phase for `class`. `None` (the
+    /// default) keeps the static rule — idle lands on the class's
+    /// affinity shard. A dynamic policy may consolidate fleet idle onto
+    /// one quiet shard per precision at low utilization: long
+    /// contiguous gaps are what the adaptive body-bias recovers ~2×
+    /// from, where the same slots scattered across shards leak at the
+    /// active level.
+    fn place_idle(
+        &self,
+        _class: WorkloadClass,
+        _candidates: &[RouteCandidate],
+        _ctx: &RouteContext,
+    ) -> Option<usize> {
+        None
+    }
+
+    /// True if the policy never *chooses* to cross pipeline kinds
+    /// (FMA↔CMA) while the affinity shard is healthy and unpressured.
+    /// Cross-kind placement changes result bits (fused vs cascade
+    /// rounding), so the trace-replay digest includes per-tenant result
+    /// checksums only when the run's policy is kind-preserving *and*
+    /// spill is disabled *and* no faults were planned. Default `false`
+    /// (the conservative direction for the digest).
+    fn kind_preserving(&self) -> bool {
+        false
+    }
+}
+
+/// The default policy: the paper's Table-1 affinity with load-aware
+/// spill and health failover — the exact decision tree the router used
+/// before policies were pluggable, preserved bit-for-bit (first
+/// strict-minimum tie-break in shard order included). The comparison
+/// baseline every dynamic policy is judged against.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct StaticAffinity;
+
+impl RoutePolicy for StaticAffinity {
+    fn name(&self) -> &'static str {
+        "static"
+    }
+
+    fn place(
+        &self,
+        _class: WorkloadClass,
+        candidates: &[RouteCandidate],
+        ctx: &RouteContext,
+    ) -> crate::Result<(usize, Placement)> {
+        // (candidate index, pressure), first strict minimum wins —
+        // identical tie-break to the pre-policy router.
+        let mut preferred: Option<(usize, usize)> = None;
+        let mut alt: Option<(usize, usize)> = None;
+        for (ci, c) in candidates.iter().enumerate() {
+            let slot = if c.affinity { &mut preferred } else { &mut alt };
+            let better = match *slot {
+                None => true,
+                Some((_, best)) => c.pressure < best,
+            };
+            if better {
+                *slot = Some((ci, c.pressure));
+            }
+        }
+        Ok(match (preferred, alt) {
+            (Some((_, pp)), Some((a, ap))) if pp > ctx.spill_pressure_ops && ap < pp => {
+                (a, Placement::Spill)
+            }
+            (Some((p, _)), _) => (p, Placement::Affinity),
+            (None, Some((a, _))) if ctx.unhealthy_affinity => (a, Placement::Failover),
+            (None, Some((a, _))) => (a, Placement::Fallback),
+            (None, None) => unreachable!("place() is never called with an empty survey"),
+        })
+    }
+
+    fn kind_preserving(&self) -> bool {
+        // Affinity placement never crosses kinds by choice; spill and
+        // fallback only occur under spill pressure / missing shards,
+        // which the replay digest conditions exclude separately.
+        true
+    }
+}
+
+/// The energy-aware feedback policy (ROADMAP item 4): each submission
+/// goes to the candidate minimizing
+///
+/// ```text
+/// w_latency · (EWMA / best EWMA)  +  w_energy · (pJ/op / best pJ/op)
+///   +  w_pressure · (pressure / max_queue_ops)
+///   +  off_affinity_penalty  (iff not the class's Table-1 kind)
+/// ```
+///
+/// Feedback terms a candidate has not produced yet score neutral (1.0),
+/// so a cold fleet behaves like pressure-balanced affinity. The penalty
+/// keeps ties on the Table-1 shard when the fleet is quiet — which is
+/// what holds the uniform routed bench within 1% of [`StaticAffinity`]
+/// — while under skewed load the pressure and energy terms overcome it
+/// and latency-class work spills onto the *more efficient* fused
+/// pipelines instead of queueing on the cascade shard.
+#[derive(Debug, Clone, Copy)]
+pub struct EnergyAware {
+    /// Weight of the normalized latency-EWMA term.
+    pub w_latency: f64,
+    /// Weight of the normalized live-pJ/op term.
+    pub w_energy: f64,
+    /// Weight of the pressure (queue-fill fraction) term.
+    pub w_pressure: f64,
+    /// Flat score penalty for leaving the class's affinity kind
+    /// (cross-kind placement changes rounding semantics — worth paying
+    /// under load, not for free).
+    pub off_affinity_penalty: f64,
+    /// SLO-class admission control: refuse a *bulk* submission when
+    /// every candidate is over this many in-flight ops, keeping queue
+    /// room for the latency SLO class. `usize::MAX` disables.
+    pub admit_pressure_ops: usize,
+    /// Fleet-utilization threshold for the low-activity re-bias rule:
+    /// below it, idle phases are parked on the precision's CMA shard
+    /// (the quiet one under this policy) instead of scattering.
+    pub park_below_utilization: f64,
+}
+
+impl EnergyAware {
+    /// Balanced nominal weights: pressure dominates (it is the
+    /// congestion signal), latency and energy weigh equally, and a
+    /// quarter-point affinity penalty keeps the quiet-fleet behavior on
+    /// Table 1. Admission control off.
+    pub fn nominal() -> EnergyAware {
+        EnergyAware {
+            w_latency: 1.0,
+            w_energy: 1.0,
+            w_pressure: 4.0,
+            off_affinity_penalty: 0.25,
+            admit_pressure_ops: usize::MAX,
+            park_below_utilization: 0.10,
+        }
+    }
+
+    /// Enable bulk admission control above `ops` in-flight ops per
+    /// candidate.
+    pub fn with_admission(mut self, ops: usize) -> EnergyAware {
+        self.admit_pressure_ops = ops;
+        self
+    }
+}
+
+impl RoutePolicy for EnergyAware {
+    fn name(&self) -> &'static str {
+        "energy-aware"
+    }
+
+    fn place(
+        &self,
+        class: WorkloadClass,
+        candidates: &[RouteCandidate],
+        ctx: &RouteContext,
+    ) -> crate::Result<(usize, Placement)> {
+        // Admission control first: bulk is the best-effort class; when
+        // every candidate is saturated, refusing it (retryable) keeps
+        // queue room for the latency SLO class instead of letting bulk
+        // backlog inflate everyone's tail.
+        if class.service == ServiceClass::Bulk
+            && self.admit_pressure_ops != usize::MAX
+            && candidates.iter().all(|c| c.pressure > self.admit_pressure_ops)
+        {
+            return Err(anyhow::Error::new(ServeError::AdmissionDenied).context(format!(
+                "bulk admission refused: every {} candidate above {} in-flight ops",
+                class.name(),
+                self.admit_pressure_ops
+            )));
+        }
+        // Normalize the feedback terms by the best candidate so the
+        // score is scale-free; a candidate without a signal yet scores
+        // neutral rather than free.
+        let lat_floor = candidates
+            .iter()
+            .filter_map(|c| c.ewma_latency_s)
+            .fold(f64::INFINITY, f64::min);
+        let pj_floor = candidates
+            .iter()
+            .filter_map(|c| c.live_pj_per_op)
+            .fold(f64::INFINITY, f64::min);
+        let mut best: Option<(usize, f64)> = None;
+        let mut any_affinity = false;
+        for (ci, c) in candidates.iter().enumerate() {
+            any_affinity |= c.affinity;
+            let lat = match c.ewma_latency_s {
+                Some(v) if lat_floor.is_finite() => v / lat_floor.max(1e-300),
+                _ => 1.0,
+            };
+            let pj = match c.live_pj_per_op {
+                Some(v) if pj_floor.is_finite() => v / pj_floor.max(1e-300),
+                _ => 1.0,
+            };
+            let fill = c.pressure as f64 / c.max_queue_ops.max(1) as f64;
+            let mut score =
+                self.w_latency * lat + self.w_energy * pj + self.w_pressure * fill;
+            if !c.affinity {
+                score += self.off_affinity_penalty;
+            }
+            let better = match best {
+                None => true,
+                Some((_, b)) => score < b,
+            };
+            if better {
+                best = Some((ci, score));
+            }
+        }
+        let (ci, _) = best.expect("place() is never called with an empty survey");
+        let placement = if candidates[ci].affinity {
+            Placement::Affinity
+        } else if any_affinity {
+            Placement::Policy
+        } else if ctx.unhealthy_affinity {
+            Placement::Failover
+        } else {
+            Placement::Fallback
+        };
+        Ok((ci, placement))
+    }
+
+    fn place_idle(
+        &self,
+        _class: WorkloadClass,
+        candidates: &[RouteCandidate],
+        ctx: &RouteContext,
+    ) -> Option<usize> {
+        if ctx.fleet_utilization >= self.park_below_utilization {
+            return None;
+        }
+        // Park on the precision's CMA shard: this policy pushes loaded
+        // latency work toward the efficient FMA pipes, so the cascade
+        // shard is the quiet one — consolidating every idle phase there
+        // turns scattered short gaps (which leak at the active level)
+        // into the long contiguous gaps the adaptive controller's idle
+        // bias actually recovers from.
+        candidates
+            .iter()
+            .position(|c| c.kind == FpuKind::Cma)
+            .or(Some(0))
+    }
 }
 
 /// The mutable part of a shard slot: swapped whole on respawn, behind a
@@ -341,6 +699,10 @@ struct ShardSlot {
     /// what a respawn boots the replacement queue from.
     serve: ServeConfig,
     rt: RwLock<ShardRuntime>,
+    /// The slot's routing-feedback cell — owned here, not by the queue,
+    /// so the latency/energy signal survives incarnation swaps (every
+    /// respawn publishes into the same cell).
+    feedback: Arc<ShardFeedback>,
     health: AtomicU8,
     /// Submissions landed here, by [`WorkloadClass::index`].
     class_counts: [AtomicU64; 4],
@@ -376,10 +738,13 @@ fn serve_tier_index(tier: Fidelity) -> usize {
 pub struct ServeRouter {
     slots: Arc<Vec<ShardSlot>>,
     spill_pressure_ops: usize,
+    policy: Arc<dyn RoutePolicy>,
     submissions: AtomicU64,
     spilled: AtomicU64,
     misrouted: AtomicU64,
     rerouted_on_failure: AtomicU64,
+    policy_routed: AtomicU64,
+    admission_denied: AtomicU64,
     supervisor: Option<Supervisor>,
 }
 
@@ -424,6 +789,17 @@ impl ServeRouter {
     /// the supervisor thread that keeps the fleet serving through shard
     /// deaths.
     pub fn start(specs: &[ShardSpec], cfg: RouterConfig) -> crate::Result<ServeRouter> {
+        ServeRouter::start_with_policy(specs, cfg, Arc::new(StaticAffinity))
+    }
+
+    /// [`ServeRouter::start`] with an explicit [`RoutePolicy`] — the
+    /// dynamic-routing entry point. [`StaticAffinity`] here is exactly
+    /// `start` (and the baseline any other policy is compared against).
+    pub fn start_with_policy(
+        specs: &[ShardSpec],
+        cfg: RouterConfig,
+        policy: Arc<dyn RoutePolicy>,
+    ) -> crate::Result<ServeRouter> {
         anyhow::ensure!(!specs.is_empty(), "a router needs at least one shard");
         let registry = ExecutorRegistry::new(cfg.workers_budget);
         let mut slots: Vec<ShardSlot> = Vec::with_capacity(specs.len());
@@ -431,7 +807,13 @@ impl ServeRouter {
             let exec = registry.shard(spec.serve.workers);
             let workers = exec.workers();
             let unit = FpuUnit::generate(&spec.config);
-            let queue = match ServeQueue::start_with_executor(&unit, spec.serve, exec) {
+            let feedback = Arc::new(ShardFeedback::new());
+            let queue = match ServeQueue::start_with_feedback(
+                &unit,
+                spec.serve,
+                exec,
+                Arc::clone(&feedback),
+            ) {
                 Ok(q) => q,
                 Err(e) => {
                     // Close the shards already started before bailing —
@@ -463,6 +845,7 @@ impl ServeRouter {
                     queue: Some(queue),
                     prior: Vec::new(),
                 }),
+                feedback,
                 health: AtomicU8::new(HEALTH_HEALTHY),
                 class_counts: Default::default(),
                 spilled_in: AtomicU64::new(0),
@@ -487,10 +870,13 @@ impl ServeRouter {
         Ok(ServeRouter {
             slots,
             spill_pressure_ops: cfg.spill_pressure_ops,
+            policy,
             submissions: AtomicU64::new(0),
             spilled: AtomicU64::new(0),
             misrouted: AtomicU64::new(0),
             rerouted_on_failure: AtomicU64::new(0),
+            policy_routed: AtomicU64::new(0),
+            admission_denied: AtomicU64::new(0),
             supervisor,
         })
     }
@@ -517,65 +903,95 @@ impl ServeRouter {
         self.slots[idx].respawns.load(Ordering::Relaxed)
     }
 
+    /// Shard `idx`'s routing-feedback cell (latency EWMA + live pJ/op)
+    /// — the slot's persistent cell, continuous across incarnations.
+    pub fn shard_feedback(&self, idx: usize) -> Arc<ShardFeedback> {
+        Arc::clone(&self.slots[idx].feedback)
+    }
+
+    /// Admissions refused so far by the policy's admission control.
+    pub fn admission_denied_count(&self) -> u64 {
+        self.admission_denied.load(Ordering::Relaxed)
+    }
+
     /// Shard `idx`'s window size in ops (the chaos ring-flood fault
     /// sizes its idle burst in windows, not raw slots).
     pub fn shard_window_ops(&self, idx: usize) -> usize {
         self.slots[idx].serve.window_ops
     }
 
-    /// The dispatch decision, read-only: candidates are **healthy**
-    /// shards matching the class precision and the requested tier; the
-    /// affinity shard (least-loaded, if several) wins unless spill
-    /// pressure diverts to a strictly-less-loaded compatible sibling. A
-    /// class whose affinity shard exists but is not healthy fails over
-    /// to a healthy sibling ([`Placement::Failover`]); if *no* healthy
-    /// candidate serves the class, the error is a retryable
-    /// [`ServeError::ShardFailed`] so producer retry can outwait a
-    /// respawn in flight.
-    fn route(&self, class: WorkloadClass, tier: Fidelity) -> crate::Result<(usize, Placement)> {
-        let mut preferred: Option<(usize, usize)> = None;
-        let mut alt: Option<(usize, usize)> = None;
+    /// Survey the fleet for one placement decision: the healthy
+    /// candidates matching the class precision and tier (slot order —
+    /// policies' first-minimum tie-breaks key off it), the fleet
+    /// context, and whether *any* shard (healthy or not) serves the
+    /// class at all.
+    fn survey(
+        &self,
+        class: WorkloadClass,
+        tier: Fidelity,
+    ) -> (Vec<RouteCandidate>, RouteContext, bool) {
+        let mut candidates = Vec::new();
         let mut unhealthy_affinity = false;
         let mut any_match = false;
+        let mut fleet_pressure = 0usize;
+        let mut fleet_capacity = 0usize;
         for (i, s) in self.slots.iter().enumerate() {
-            if s.config.precision != class.precision || s.tier != tier {
-                continue;
-            }
-            any_match = true;
-            let affinity = s.config.kind == class.service.affinity_kind();
+            let matches = s.config.precision == class.precision && s.tier == tier;
+            any_match |= matches;
+            let affinity = matches && s.config.kind == class.service.affinity_kind();
             if s.health.load(Ordering::Relaxed) != HEALTH_HEALTHY {
                 unhealthy_affinity |= affinity;
                 continue;
             }
             let pressure = read_rt(s).handle.pressure_ops();
-            let slot = if affinity { &mut preferred } else { &mut alt };
-            let better = match *slot {
-                None => true,
-                Some((_, best)) => pressure < best,
-            };
-            if better {
-                *slot = Some((i, pressure));
+            fleet_pressure += pressure;
+            fleet_capacity += s.max_queue_ops;
+            if matches {
+                candidates.push(RouteCandidate {
+                    shard: i,
+                    kind: s.config.kind,
+                    affinity,
+                    pressure,
+                    max_queue_ops: s.max_queue_ops,
+                    ewma_latency_s: s.feedback.latency_ewma_s(),
+                    live_pj_per_op: s.feedback.live_pj_per_op(),
+                });
             }
         }
-        match (preferred, alt) {
-            (Some((_, pp)), Some((a, ap))) if pp > self.spill_pressure_ops && ap < pp => {
-                Ok((a, Placement::Spill))
-            }
-            (Some((p, _)), _) => Ok((p, Placement::Affinity)),
-            (None, Some((a, _))) if unhealthy_affinity => Ok((a, Placement::Failover)),
-            (None, Some((a, _))) => Ok((a, Placement::Fallback)),
-            (None, None) if any_match => Err(anyhow::Error::new(ServeError::ShardFailed)
-                .context(format!(
+        let ctx = RouteContext {
+            spill_pressure_ops: self.spill_pressure_ops,
+            unhealthy_affinity,
+            fleet_utilization: if fleet_capacity > 0 {
+                fleet_pressure as f64 / fleet_capacity as f64
+            } else {
+                0.0
+            },
+        };
+        (candidates, ctx, any_match)
+    }
+
+    /// The dispatch decision, read-only: the configured [`RoutePolicy`]
+    /// picks among the **healthy** shards matching the class precision
+    /// and the requested tier (under [`StaticAffinity`]: the affinity
+    /// shard, least-loaded if several, unless spill pressure diverts to
+    /// a strictly-less-loaded compatible sibling, with failover off an
+    /// unhealthy affinity shard). If *no* healthy candidate serves the
+    /// class, the error is a retryable [`ServeError::ShardFailed`] so
+    /// producer retry can outwait a respawn in flight.
+    fn route(&self, class: WorkloadClass, tier: Fidelity) -> crate::Result<(usize, Placement)> {
+        let (candidates, ctx, any_match) = self.survey(class, tier);
+        if candidates.is_empty() {
+            if any_match {
+                return Err(anyhow::Error::new(ServeError::ShardFailed).context(format!(
                     "every shard serving {} at the {} tier is quarantined or degraded",
                     class.name(),
                     tier.name()
-                ))),
-            (None, None) => anyhow::bail!(
-                "no shard serves {} at the {} tier",
-                class.name(),
-                tier.name()
-            ),
+                )));
+            }
+            anyhow::bail!("no shard serves {} at the {} tier", class.name(), tier.name());
         }
+        let (ci, placement) = self.policy.place(class, &candidates, &ctx)?;
+        Ok((candidates[ci].shard, placement))
     }
 
     /// Dispatch one classified submission; returns the shard index it
@@ -588,7 +1004,15 @@ impl ServeRouter {
         tier: Fidelity,
         triples: Vec<OperandTriple>,
     ) -> crate::Result<(usize, Ticket)> {
-        let (idx, placement) = self.route(class, tier)?;
+        let (idx, placement) = match self.route(class, tier) {
+            Ok(v) => v,
+            Err(e) => {
+                if ServeError::classify(&e) == Some(ServeError::AdmissionDenied) {
+                    self.admission_denied.fetch_add(1, Ordering::Relaxed);
+                }
+                return Err(e);
+            }
+        };
         let slot = &self.slots[idx];
         // Dispatch first, count after: a submission the shard rejected
         // (closed queue, dead dispatcher) must not skew the histogram or
@@ -607,6 +1031,13 @@ impl ServeRouter {
             }
             Placement::Fallback => {
                 self.misrouted.fetch_add(1, Ordering::Relaxed);
+            }
+            Placement::Policy => {
+                // Deliberate off-affinity placement by a dynamic policy:
+                // its own axis — `misrouted` keeps meaning "static-policy
+                // violation" so the existing zero-gates stay meaningful.
+                self.policy_routed.fetch_add(1, Ordering::Relaxed);
+                slot.spilled_in.fetch_add(1, Ordering::Relaxed);
             }
             Placement::Failover => {
                 // A failover is not a policy violation — the policy shard
@@ -667,6 +1098,36 @@ impl ServeRouter {
         deadline: Option<Duration>,
         policy: RetryPolicy,
     ) -> crate::Result<SubmitOutcome> {
+        self.submit_retry_inner(class, tier, triples, deadline, policy, None)
+    }
+
+    /// [`ServeRouter::submit_with_retry`] with deterministically-seeded
+    /// backoff jitter ([`RetryPolicy::backoff_jittered`]): colliding
+    /// retriers desynchronize, but the same `(seed, attempt)` always
+    /// sleeps the same duration — the trace-replay and chaos paths use
+    /// this so a replayed run reproduces its retry timing decisions
+    /// instead of deriving jitter from the wall clock.
+    pub fn submit_with_retry_seeded(
+        &self,
+        class: WorkloadClass,
+        tier: Fidelity,
+        triples: &[OperandTriple],
+        deadline: Option<Duration>,
+        policy: RetryPolicy,
+        seed: u64,
+    ) -> crate::Result<SubmitOutcome> {
+        self.submit_retry_inner(class, tier, triples, deadline, policy, Some(seed))
+    }
+
+    fn submit_retry_inner(
+        &self,
+        class: WorkloadClass,
+        tier: Fidelity,
+        triples: &[OperandTriple],
+        deadline: Option<Duration>,
+        policy: RetryPolicy,
+        seed: Option<u64>,
+    ) -> crate::Result<SubmitOutcome> {
         let mut attempt = 0u32;
         loop {
             let r: crate::Result<(usize, Vec<u64>)> = (|| {
@@ -692,25 +1153,42 @@ impl ServeRouter {
                             if attempt == 1 { "y" } else { "ies" }
                         )));
                     }
-                    std::thread::sleep(policy.backoff(attempt));
+                    let backoff = match seed {
+                        Some(s) => policy.backoff_jittered(attempt, s),
+                        None => policy.backoff(attempt),
+                    };
+                    std::thread::sleep(backoff);
                     attempt += 1;
                 }
             }
         }
     }
 
-    /// Dispatch an idle phase (accounting-only issue slots) to the
-    /// class's affinity shard — idle never spills; it is the shard's own
-    /// low-utilization gap, the thing its adaptive controller re-biases
-    /// through. Returns the shard index. Idle submitted while the
-    /// affinity shard is down is dropped with a retryable error (an idle
-    /// gap on a dead shard is not accounting anyone needs).
+    /// Dispatch an idle phase (accounting-only issue slots). Under the
+    /// static policy idle goes to the class's affinity shard — it is
+    /// the shard's own low-utilization gap, the thing its adaptive
+    /// controller re-biases through. A dynamic policy may override via
+    /// [`RoutePolicy::place_idle`] (e.g. [`EnergyAware`] parks fleet
+    /// idle on one quiet shard per precision at low utilization, so the
+    /// gaps consolidate into spans the idle bias actually recovers
+    /// from). Returns the shard index. Idle submitted while the target
+    /// shard is down is dropped with a retryable error (an idle gap on
+    /// a dead shard is not accounting anyone needs).
     pub fn submit_idle(
         &self,
         class: WorkloadClass,
         tier: Fidelity,
         slots: u64,
     ) -> crate::Result<usize> {
+        let (candidates, ctx, _) = self.survey(class, tier);
+        if !candidates.is_empty() {
+            if let Some(ci) = self.policy.place_idle(class, &candidates, &ctx) {
+                let idx = candidates[ci.min(candidates.len() - 1)].shard;
+                let handle = read_rt(&self.slots[idx]).handle.clone();
+                handle.submit_idle(slots)?;
+                return Ok(idx);
+            }
+        }
         // Pure affinity: ignore pressure entirely.
         let mut pick = None;
         for (i, s) in self.slots.iter().enumerate() {
@@ -758,6 +1236,9 @@ impl ServeRouter {
         let misrouted = self.misrouted.load(Ordering::Relaxed);
         let submissions = self.submissions.load(Ordering::Relaxed);
         let rerouted_on_failure = self.rerouted_on_failure.load(Ordering::Relaxed);
+        let policy_routed = self.policy_routed.load(Ordering::Relaxed);
+        let admission_denied = self.admission_denied.load(Ordering::Relaxed);
+        let policy_name = self.policy.name();
         let slots = Arc::try_unwrap(self.slots).map_err(|_| {
             anyhow::anyhow!("invariant: supervisor joined but the shard table is still shared")
         })?;
@@ -861,6 +1342,9 @@ impl ServeRouter {
             spilled,
             misrouted,
             rerouted_on_failure,
+            policy_routed,
+            admission_denied,
+            policy_name,
             submissions,
             ops,
             fleet_energy: energy,
@@ -962,7 +1446,16 @@ fn boot(
         }
     }
     let unit = FpuUnit::generate(&slot.config);
-    match ServeQueue::start_with_executor(&unit, slot.serve, exec) {
+    // Warm-start the replacement's latency estimator from the dead
+    // incarnation's exact (value, count) snapshot, so the dynamic
+    // routing policies never see a respawned shard as deceptively cold
+    // (the feedback cell itself is the slot's and persists regardless —
+    // the seed keeps the *dispatcher-side* estimator continuous too).
+    let mut serve = slot.serve;
+    if let Some(snap) = rt.prior.last().and_then(|p| p.latency_ewma) {
+        serve.ewma_seed = Some(snap);
+    }
+    match ServeQueue::start_with_feedback(&unit, serve, exec, Arc::clone(&slot.feedback)) {
         Ok(queue) => {
             rt.handle = queue.handle();
             rt.queue = Some(queue);
@@ -1075,6 +1568,16 @@ pub struct FleetReport {
     pub misrouted: u64,
     /// Dispatches diverted off a quarantined/degraded affinity shard.
     pub rerouted_on_failure: u64,
+    /// Off-affinity placements a dynamic policy chose deliberately on
+    /// its cost score (always 0 under [`StaticAffinity`]).
+    pub policy_routed: u64,
+    /// Submissions refused by the policy's SLO-class admission control
+    /// (nothing was enqueued for them; always 0 under
+    /// [`StaticAffinity`]).
+    pub admission_denied: u64,
+    /// The routing policy that produced this report
+    /// ([`RoutePolicy::name`]).
+    pub policy_name: &'static str,
     /// Total op submissions dispatched.
     pub submissions: u64,
     /// Total ops executed across the fleet, every incarnation included.

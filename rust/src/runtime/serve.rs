@@ -51,7 +51,7 @@
 //! budget.
 
 use std::collections::VecDeque;
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
@@ -65,7 +65,7 @@ use crate::bb::{run_energy_trace, window_bias_schedule, BbPolicy, BbRunEnergy, S
     StreamingController};
 use crate::energy::tech::Technology;
 use crate::timing;
-use crate::util::stats::percentile;
+use crate::util::stats::{percentile, Ewma};
 use crate::workloads::throughput::OperandTriple;
 
 /// Cap on reported cross-check mismatch indices.
@@ -98,13 +98,21 @@ pub enum ServeError {
     /// A deadline-bounded wait ran out before the submission completed
     /// ([`crate::runtime::router::ServeRouter::submit_with_deadline`]).
     DeadlineExceeded,
+    /// The routing policy's SLO-class admission control turned this
+    /// submission away: every candidate shard for its class was over
+    /// the policy's admission pressure bound. Nothing was enqueued —
+    /// retrying after backoff is safe and may find a drained fleet.
+    AdmissionDenied,
 }
 
 impl ServeError {
     /// Whether a fresh submission of the same ops is safe and useful.
     pub fn retryable(self) -> bool {
         match self {
-            ServeError::ShardFailed | ServeError::WorkerPanic | ServeError::QueueClosed => true,
+            ServeError::ShardFailed
+            | ServeError::WorkerPanic
+            | ServeError::QueueClosed
+            | ServeError::AdmissionDenied => true,
             ServeError::ResultTaken | ServeError::DeadlineExceeded => false,
         }
     }
@@ -127,6 +135,9 @@ impl std::fmt::Display for ServeError {
             ServeError::QueueClosed => "serve queue is closed to new work",
             ServeError::ResultTaken => "serve result already taken by an earlier wait",
             ServeError::DeadlineExceeded => "submission deadline exceeded",
+            ServeError::AdmissionDenied => {
+                "admission control rejected this submission (every candidate shard over the policy's pressure bound)"
+            }
         };
         f.write_str(msg)
     }
@@ -172,6 +183,15 @@ pub struct ServeConfig {
     pub policy: BbPolicy,
     /// Supply voltage the energy accounting is scored at.
     pub vdd: f64,
+    /// Weight of the per-shard completed-latency EWMA published to
+    /// [`ShardFeedback`] (in `(0, 1]`; each completed submission's
+    /// latency is folded in with this weight).
+    pub ewma_alpha: f64,
+    /// Warm-start for the latency estimator: a prior incarnation's
+    /// `(value_s, count)` snapshot, replayed by the router's respawn
+    /// path so the feedback signal survives a shard death. `None`
+    /// starts cold.
+    pub ewma_seed: Option<(f64, u64)>,
 }
 
 impl ServeConfig {
@@ -203,7 +223,80 @@ impl ServeConfig {
             crosscheck_every: 9_973,
             policy,
             vdd: op.vdd,
+            // Heavy enough smoothing to ride out batch-coalescing noise,
+            // light enough that a degrading shard shows within ~10
+            // completions.
+            ewma_alpha: 0.25,
+            ewma_seed: None,
         })
+    }
+}
+
+/// Lock-free feedback signals one shard publishes for the router's
+/// dynamic routing policies: the completed-latency EWMA (dispatcher
+/// side, updated once per batch) and the live streamed pJ/op snapshot
+/// (controller side, updated once per consumed window). The router owns
+/// one `Arc<ShardFeedback>` per shard *slot* and hands it to every
+/// incarnation ([`ServeQueue::start_with_feedback`]), so the signal is
+/// continuous across respawns — a policy never routes blind just
+/// because a shard died.
+///
+/// Both f64 cells store raw bits in an `AtomicU64`; a NaN pattern means
+/// "no observation yet" (NaN is never a legitimate value of either
+/// signal, and [`Ewma`] can never produce one from finite latencies).
+#[derive(Debug)]
+pub struct ShardFeedback {
+    ewma_bits: AtomicU64,
+    ewma_count: AtomicU64,
+    live_pj_bits: AtomicU64,
+}
+
+impl ShardFeedback {
+    /// A cold cell: no latency or energy signal yet.
+    pub fn new() -> ShardFeedback {
+        ShardFeedback {
+            ewma_bits: AtomicU64::new(f64::NAN.to_bits()),
+            ewma_count: AtomicU64::new(0),
+            live_pj_bits: AtomicU64::new(f64::NAN.to_bits()),
+        }
+    }
+
+    /// Current latency-EWMA estimate, seconds; `None` before the first
+    /// completed submission (and before any seeded-in prior).
+    pub fn latency_ewma_s(&self) -> Option<f64> {
+        let v = f64::from_bits(self.ewma_bits.load(Ordering::Relaxed));
+        (!v.is_nan()).then_some(v)
+    }
+
+    /// Observations folded into the latency EWMA, prior incarnations
+    /// included.
+    pub fn ewma_count(&self) -> u64 {
+        self.ewma_count.load(Ordering::Relaxed)
+    }
+
+    /// Live streamed pJ/op as of the last window the shard's
+    /// [`StreamingController`] consumed; `None` until the first op's
+    /// window lands (the integrator reports infinity before any op, and
+    /// non-finite snapshots are filtered here so cost scores stay
+    /// well-defined).
+    pub fn live_pj_per_op(&self) -> Option<f64> {
+        let v = f64::from_bits(self.live_pj_bits.load(Ordering::Relaxed));
+        v.is_finite().then_some(v)
+    }
+
+    fn publish_latency(&self, value_s: f64, count: u64) {
+        self.ewma_bits.store(value_s.to_bits(), Ordering::Relaxed);
+        self.ewma_count.store(count, Ordering::Relaxed);
+    }
+
+    fn publish_live_pj(&self, pj_per_op: f64) {
+        self.live_pj_bits.store(pj_per_op.to_bits(), Ordering::Relaxed);
+    }
+}
+
+impl Default for ShardFeedback {
+    fn default() -> ShardFeedback {
+        ShardFeedback::new()
     }
 }
 
@@ -650,6 +743,11 @@ struct DispatchStats {
     /// Submissions resolved with an error instead of bits.
     errored_submissions: u64,
     latencies: Vec<f64>,
+    /// Completed-latency EWMA, updated with every latency pushed above
+    /// and mirrored into the shard's [`ShardFeedback`] once per batch.
+    /// Lives in the salvageable stats so a respawn can seed the next
+    /// incarnation from the dead one's exact `(value, count)`.
+    latency_ewma: Ewma,
     crosscheck_sampled: u64,
     crosscheck_mismatches: u64,
     mismatch_indices: Vec<usize>,
@@ -665,7 +763,7 @@ struct DispatchStats {
 }
 
 impl DispatchStats {
-    fn new(window_ops: usize, tier_cal: [(usize, usize); 3]) -> DispatchStats {
+    fn new(window_ops: usize, tier_cal: [(usize, usize); 3], latency_ewma: Ewma) -> DispatchStats {
         DispatchStats {
             master: ActivityTrace::from_raw_windows(window_ops as u64, Vec::new()),
             ops: 0,
@@ -674,6 +772,7 @@ impl DispatchStats {
             submissions: 0,
             errored_submissions: 0,
             latencies: Vec::new(),
+            latency_ewma,
             crosscheck_sampled: 0,
             crosscheck_mismatches: 0,
             mismatch_indices: Vec::new(),
@@ -713,6 +812,9 @@ struct Dispatcher {
     queues: StealQueues,
     /// Shared accounting (see [`DispatchStats`]).
     stats: Arc<Mutex<DispatchStats>>,
+    /// Routing-feedback cell (latency side; the controller thread owns
+    /// the energy side).
+    feedback: Arc<ShardFeedback>,
 }
 
 enum Action {
@@ -966,7 +1068,9 @@ impl Dispatcher {
             if panicked {
                 stats.errored_submissions += 1;
             } else {
-                stats.latencies.push(sub.submitted.elapsed().as_secs_f64());
+                let lat = sub.submitted.elapsed().as_secs_f64();
+                stats.latencies.push(lat);
+                stats.latency_ewma.observe(lat);
                 stats.submissions += 1;
             }
         }
@@ -975,6 +1079,12 @@ impl Dispatcher {
         } else {
             stats.ops += n as u64;
             stats.batches += 1;
+        }
+        // Mirror the estimator once per batch (not per submission) so
+        // the routing feedback stays a cheap relaxed store off the hot
+        // completion loop.
+        if let Some(v) = stats.latency_ewma.value() {
+            self.feedback.publish_latency(v, stats.latency_ewma.count());
         }
         stats.busy_until = Some(Instant::now());
     }
@@ -1146,6 +1256,11 @@ pub struct ServeReport {
     /// completion, queue wait included). 0.0 when nothing ran.
     pub p50_latency_s: f64,
     pub p99_latency_s: f64,
+    /// Final latency-EWMA snapshot `(value_s, count)`, prior-incarnation
+    /// observations included — the router's respawn path seeds the
+    /// replacement shard's estimator from this so routing feedback is
+    /// continuous across deaths. `None` if nothing ever completed.
+    pub latency_ewma: Option<(f64, u64)>,
     /// Every completed submission's latency, seconds, sorted ascending —
     /// the raw distribution fleet-level reports merge before taking
     /// cross-shard percentiles.
@@ -1224,6 +1339,7 @@ pub struct ServeQueue {
     /// The dispatcher's accounting, shared so it survives dispatcher
     /// death (see [`DispatchStats`]).
     stats: Arc<Mutex<DispatchStats>>,
+    feedback: Arc<ShardFeedback>,
     unit: FpuUnit,
     tech: Technology,
     policy: BbPolicy,
@@ -1252,6 +1368,20 @@ impl ServeQueue {
         ServeQueue::start_with_executor(unit, cfg, exec)
     }
 
+    /// [`ServeQueue::start_with_executor`] with a caller-owned
+    /// [`ShardFeedback`] cell — the router's path: the cell belongs to
+    /// the shard *slot* and outlives any one incarnation, so the
+    /// dynamic routing policies keep their latency/energy signal
+    /// across a respawn.
+    pub fn start_with_feedback(
+        unit: &FpuUnit,
+        cfg: ServeConfig,
+        exec: BatchExecutor,
+        feedback: Arc<ShardFeedback>,
+    ) -> crate::Result<ServeQueue> {
+        ServeQueue::start_inner(unit, cfg, exec, feedback)
+    }
+
     /// [`ServeQueue::start`] with a caller-provided executor — the shard
     /// path: the router sizes each shard's pool from one fleet-wide
     /// [`crate::arch::engine::ExecutorRegistry`] budget instead of
@@ -1264,9 +1394,33 @@ impl ServeQueue {
         cfg: ServeConfig,
         exec: BatchExecutor,
     ) -> crate::Result<ServeQueue> {
+        ServeQueue::start_inner(unit, cfg, exec, Arc::new(ShardFeedback::new()))
+    }
+
+    fn start_inner(
+        unit: &FpuUnit,
+        cfg: ServeConfig,
+        exec: BatchExecutor,
+        feedback: Arc<ShardFeedback>,
+    ) -> crate::Result<ServeQueue> {
         anyhow::ensure!(cfg.window_ops >= 1, "window width must be at least 1 op");
         anyhow::ensure!(cfg.max_batch_ops >= 1, "batch cap must be at least 1 op");
         anyhow::ensure!(cfg.ring_windows >= 1, "ring needs at least one window slot");
+        anyhow::ensure!(
+            cfg.ewma_alpha > 0.0 && cfg.ewma_alpha <= 1.0,
+            "latency EWMA alpha must be in (0, 1], got {}",
+            cfg.ewma_alpha
+        );
+        let latency_ewma = match cfg.ewma_seed {
+            Some((v, c)) => Ewma::seeded(cfg.ewma_alpha, v, c),
+            None => Ewma::new(cfg.ewma_alpha),
+        };
+        // A seeded estimator is visible to routing immediately — a
+        // respawned shard must not look "cold" (and thus maximally
+        // attractive) while it warms back up.
+        if let Some(v) = latency_ewma.value() {
+            feedback.publish_latency(v, latency_ewma.count());
+        }
         let tech = Technology::fdsoi28();
         let ctrl = StreamingController::new(unit, &tech, cfg.vdd, cfg.policy).ok_or_else(|| {
             anyhow::anyhow!(
@@ -1285,6 +1439,7 @@ impl ServeQueue {
             work: Condvar::new(),
             pressure: Arc::new(AtomicUsize::new(0)),
         });
+        let ctrl_feedback = Arc::clone(&feedback);
         let controller = std::thread::Builder::new()
             .name("fpmax-serve-bb".to_string())
             .spawn(move || {
@@ -1295,6 +1450,11 @@ impl ServeQueue {
                     received.push(e.window);
                     merged_in += (e.coalesced as u64).saturating_sub(1);
                     ctrl.push_window(&e.window);
+                    // Live energy signal for the routing policies: one
+                    // relaxed store per consumed window, charging any
+                    // open gap conservatively (see
+                    // [`StreamingController::live_pj_per_op`]).
+                    ctrl_feedback.publish_live_pj(ctrl.live_pj_per_op());
                 }
                 (ctrl.finish(), received, merged_in)
             })?;
@@ -1312,7 +1472,8 @@ impl ServeQueue {
                 tier_cal[i] = (exec.chunk_hint(), exec.calibrated_ops());
             }
         }
-        let stats = Arc::new(Mutex::new(DispatchStats::new(cfg.window_ops, tier_cal)));
+        let stats =
+            Arc::new(Mutex::new(DispatchStats::new(cfg.window_ops, tier_cal, latency_ewma)));
         let dispatcher = Dispatcher {
             shared: Arc::clone(&shared),
             exec,
@@ -1334,6 +1495,7 @@ impl ServeQueue {
             accs: Vec::new(),
             queues: StealQueues::new(steal_workers),
             stats: Arc::clone(&stats),
+            feedback: Arc::clone(&feedback),
         };
         let guard_shared = Arc::clone(&shared);
         let dispatcher = std::thread::Builder::new()
@@ -1351,6 +1513,7 @@ impl ServeQueue {
             dispatcher,
             controller,
             stats,
+            feedback,
             unit: unit.clone(),
             tech,
             policy: cfg.policy,
@@ -1362,6 +1525,13 @@ impl ServeQueue {
     /// A producer handle (clone freely across threads).
     pub fn handle(&self) -> SubmitHandle {
         SubmitHandle { shared: Arc::clone(&self.shared) }
+    }
+
+    /// The shard's routing-feedback cell (the same `Arc` passed to
+    /// [`ServeQueue::start_with_feedback`], or the queue's own for the
+    /// plain start paths).
+    pub fn feedback(&self) -> Arc<ShardFeedback> {
+        Arc::clone(&self.feedback)
     }
 
     /// The backpressure bound handed to [`SubmitHandle::submit`].
@@ -1459,6 +1629,7 @@ impl ServeQueue {
             sustained_ops_per_s: if busy_secs > 0.0 { d.ops as f64 / busy_secs } else { 0.0 },
             p50_latency_s: p50,
             p99_latency_s: p99,
+            latency_ewma: d.latency_ewma.value().map(|v| (v, d.latency_ewma.count())),
             latencies_s: lat,
             first_batch: d.first_batch,
             busy_until: d.busy_until,
@@ -1531,11 +1702,32 @@ mod tests {
         assert_eq!(pressure.load(Ordering::Relaxed), 7);
     }
 
+    /// The feedback cell's NaN sentinel separates "no signal yet" from
+    /// any measured value, and the pre-first-op infinite pJ/op snapshot
+    /// is filtered rather than leaking into cost scores.
+    #[test]
+    fn shard_feedback_distinguishes_cold_from_measured() {
+        let f = ShardFeedback::new();
+        assert_eq!(f.latency_ewma_s(), None);
+        assert_eq!(f.ewma_count(), 0);
+        assert_eq!(f.live_pj_per_op(), None);
+        f.publish_latency(0.25e-3, 3);
+        assert_eq!(f.latency_ewma_s(), Some(0.25e-3));
+        assert_eq!(f.ewma_count(), 3);
+        f.publish_live_pj(f64::INFINITY);
+        assert_eq!(f.live_pj_per_op(), None, "no op executed yet means no energy signal");
+        f.publish_live_pj(9.5);
+        assert_eq!(f.live_pj_per_op(), Some(9.5));
+    }
+
     #[test]
     fn serve_error_retryability_classification() {
         assert!(ServeError::ShardFailed.retryable());
         assert!(ServeError::WorkerPanic.retryable());
         assert!(ServeError::QueueClosed.retryable());
+        // Admission denial enqueued nothing; retry-after-backoff is the
+        // intended producer response to a saturated fleet.
+        assert!(ServeError::AdmissionDenied.retryable());
         assert!(!ServeError::ResultTaken.retryable());
         assert!(!ServeError::DeadlineExceeded.retryable());
         // classify() walks context chains.

@@ -1,0 +1,425 @@
+//! Seeded multi-tenant trace workloads: the replayable load shapes
+//! that drive — and judge — the fleet's routing policies.
+//!
+//! The paper's energy story is a *duty-cycle* story: the BB controller
+//! recovers ~20% at full activity and ~2× in the 10%-activity regime,
+//! so which policy serves a fleet best depends entirely on what the
+//! offered load looks like over a day. A single uniform firehose (what
+//! the routed bench offers) cannot distinguish the static Table-1
+//! policy from a feedback policy; realistic traffic can. This module
+//! generates that traffic deterministically:
+//!
+//! * **Multi-tenant** — every tenant is an independent seeded arrival
+//!   process (one producer thread each at replay time).
+//! * **Diurnal duty cycle** — arrival rate follows a cosine day shape
+//!   around `duty_mean` with swing `duty_swing`; troughs produce the
+//!   long idle gaps the idle-bias physics rewards consolidating.
+//! * **Bursty, heavy-tailed arrivals** — exponential inter-arrival
+//!   gaps modulated by the duty cycle, Pareto batch sizes
+//!   (`burst_alpha` close to 1 ⇒ wild bursts).
+//! * **Mix shift mid-run** — the SP share of traffic moves from
+//!   `sp_frac_start` to `sp_frac_end` at the `shift_at` fraction of
+//!   each tenant's budget, so a policy is judged on how it re-biases
+//!   when the workload changes shape under it.
+//!
+//! Time is *virtual*: a trace is a sorted sequence of [`TraceEvent`]s
+//! on an integer slot axis. The replay harness
+//! ([`crate::coordinator::serve_trace`]) maps slots to submissions and
+//! idle accounting, and advances a replay clock that slot-anchored
+//! chaos triggers ([`super::chaos::FaultTrigger::TraceSlot`]) fire
+//! against. Nothing here touches a wall clock or an OS thread: same
+//! [`TraceConfig`] ⇒ bit-identical event stream and fingerprint,
+//! which is the foundation of the replay determinism gate.
+
+use crate::arch::fp::Precision;
+use crate::runtime::chaos::{fnv1a_fold, FNV_OFFSET};
+use crate::runtime::router::{ServiceClass, WorkloadClass};
+use crate::util::Rng;
+
+/// Batch sizes are clamped into this range: small enough that a single
+/// event never monopolizes a shard queue, large enough that the Pareto
+/// tail is visible.
+pub const MIN_BATCH_OPS: u64 = 8;
+pub const MAX_BATCH_OPS: u64 = 2048;
+
+/// Shape parameters for a seeded trace. All randomness derives from
+/// `seed`; everything else is deterministic structure.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TraceConfig {
+    pub seed: u64,
+    /// Independent arrival processes (and replay producer threads).
+    pub tenants: usize,
+    /// Exact total ops across all tenants (the last event of each
+    /// tenant is truncated so budgets are met exactly).
+    pub total_ops: u64,
+    /// Slots per diurnal period. The trace spans however many slots
+    /// the arrival processes need — typically one to a few "days".
+    pub slots_per_day: u64,
+    /// Mean duty (0, 1]: fraction of slots carrying traffic at the
+    /// day's average.
+    pub duty_mean: f64,
+    /// Relative swing of the cosine day shape: duty ranges over
+    /// `duty_mean * (1 ± duty_swing)`, clamped to (0, 1].
+    pub duty_swing: f64,
+    /// Mean Pareto batch size (ops per event, before clamping).
+    pub burst_mean_ops: f64,
+    /// Pareto tail index; smaller ⇒ heavier bursts. Must be > 1 so
+    /// the mean exists.
+    pub burst_alpha: f64,
+    /// Fraction of events in the latency service class (the rest are
+    /// bulk).
+    pub latency_frac: f64,
+    /// SP share of traffic before / after the shift point.
+    pub sp_frac_start: f64,
+    pub sp_frac_end: f64,
+    /// Fraction of each tenant's op budget at which the SP share
+    /// shifts (1.0 ⇒ no shift).
+    pub shift_at: f64,
+}
+
+impl TraceConfig {
+    /// The null hypothesis: flat duty, no bursts to speak of, balanced
+    /// class mix, no shift. Static and dynamic policies should tie
+    /// here — the "within 1% of static" guard-rail trace.
+    pub fn uniform(seed: u64, total_ops: u64) -> TraceConfig {
+        TraceConfig {
+            seed,
+            tenants: 4,
+            total_ops,
+            slots_per_day: 512,
+            duty_mean: 0.9,
+            duty_swing: 0.0,
+            burst_mean_ops: 64.0,
+            burst_alpha: 8.0,
+            latency_frac: 0.5,
+            sp_frac_start: 0.5,
+            sp_frac_end: 0.5,
+            shift_at: 1.0,
+        }
+    }
+
+    /// The dominance trace: latency-heavy (the paper's Table-1
+    /// affinity pins this to the CMA shards, which are the *less*
+    /// efficient pipelines) with a deep diurnal trough. A feedback
+    /// policy wins twice — spilling queued latency work onto the idle,
+    /// efficiency-optimized FMA shards, and parking trough idle so the
+    /// 2× low-activity recovery actually materializes.
+    pub fn diurnal_skew(seed: u64, total_ops: u64) -> TraceConfig {
+        TraceConfig {
+            seed,
+            tenants: 4,
+            total_ops,
+            slots_per_day: 512,
+            duty_mean: 0.45,
+            duty_swing: 0.8,
+            burst_mean_ops: 96.0,
+            burst_alpha: 2.5,
+            latency_frac: 0.75,
+            sp_frac_start: 0.5,
+            sp_frac_end: 0.5,
+            shift_at: 1.0,
+        }
+    }
+
+    /// The adaptation trace: heavy-tailed bursts plus an SP→DP mix
+    /// shift two-thirds of the way through — exercises EWMA decay and
+    /// the re-bias rule under a moving target.
+    pub fn burst_shift(seed: u64, total_ops: u64) -> TraceConfig {
+        TraceConfig {
+            seed,
+            tenants: 6,
+            total_ops,
+            slots_per_day: 384,
+            duty_mean: 0.6,
+            duty_swing: 0.5,
+            burst_mean_ops: 128.0,
+            burst_alpha: 1.6,
+            latency_frac: 0.6,
+            sp_frac_start: 0.8,
+            sp_frac_end: 0.2,
+            shift_at: 0.66,
+        }
+    }
+
+    /// Canned preset names (CLI `fpmax replay --trace <name>` and the
+    /// CI smoke step).
+    pub const PRESETS: [&'static str; 3] = ["uniform", "diurnal-skew", "burst-shift"];
+
+    /// Resolve a preset by name.
+    pub fn preset(name: &str, seed: u64, total_ops: u64) -> Option<TraceConfig> {
+        match name {
+            "uniform" => Some(TraceConfig::uniform(seed, total_ops)),
+            "diurnal-skew" => Some(TraceConfig::diurnal_skew(seed, total_ops)),
+            "burst-shift" => Some(TraceConfig::burst_shift(seed, total_ops)),
+            _ => None,
+        }
+    }
+
+    /// Instantaneous duty at a slot: the cosine day shape, clamped so
+    /// rate stays positive and bounded.
+    pub fn duty_at(&self, slot: u64) -> f64 {
+        let phase = 2.0 * std::f64::consts::PI * (slot % self.slots_per_day) as f64
+            / self.slots_per_day as f64;
+        (self.duty_mean * (1.0 + self.duty_swing * phase.cos())).clamp(0.02, 1.0)
+    }
+}
+
+/// One arrival: `ops` operations of `class`, from `tenant`, at virtual
+/// time `slot`, preceded by `idle_before` slots of that tenant's
+/// silence (the replay harness turns the gap into idle accounting so
+/// the BB controllers see the duty cycle, not just the work).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TraceEvent {
+    pub tenant: usize,
+    pub slot: u64,
+    pub idle_before: u64,
+    pub class: WorkloadClass,
+    pub ops: u64,
+    /// Seed for the event's operand stream — part of the trace, so a
+    /// replay submits bit-identical operands.
+    pub op_seed: u64,
+}
+
+/// A generated trace: the config it came from, the merged event
+/// stream (sorted by `(slot, tenant, sequence)`), and an FNV-1a
+/// fingerprint over every event field — the identity a replay digest
+/// is anchored to.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Trace {
+    pub config: TraceConfig,
+    pub events: Vec<TraceEvent>,
+    pub fingerprint: u64,
+}
+
+impl Trace {
+    /// Generate the trace. Pure: same config ⇒ bit-identical output.
+    pub fn generate(config: TraceConfig) -> crate::Result<Trace> {
+        anyhow::ensure!(config.tenants > 0, "trace needs at least one tenant");
+        anyhow::ensure!(config.total_ops > 0, "trace needs a positive op budget");
+        anyhow::ensure!(config.slots_per_day > 0, "slots_per_day must be positive");
+        anyhow::ensure!(
+            config.burst_alpha > 1.0,
+            "burst_alpha must exceed 1 (Pareto mean must exist)"
+        );
+        anyhow::ensure!(
+            (0.0..=1.0).contains(&config.latency_frac)
+                && (0.0..=1.0).contains(&config.sp_frac_start)
+                && (0.0..=1.0).contains(&config.sp_frac_end)
+                && (0.0..=1.0).contains(&config.shift_at),
+            "trace fractions must lie in [0, 1]"
+        );
+        anyhow::ensure!(
+            config.duty_mean > 0.0 && config.duty_mean <= 1.0 && config.duty_swing >= 0.0,
+            "duty_mean must lie in (0, 1] and duty_swing must be non-negative"
+        );
+
+        let per_tenant = config.total_ops / config.tenants as u64;
+        let remainder = config.total_ops % config.tenants as u64;
+        let mut events: Vec<TraceEvent> = Vec::new();
+        for tenant in 0..config.tenants {
+            // Same derivation shape as the chaos harness's
+            // producer_seeds: golden-ratio stride keeps tenant streams
+            // decorrelated under nearby seeds.
+            let mut rng = Rng::new(
+                config
+                    .seed
+                    .wrapping_add(0x9E37_79B9_7F4A_7C15u64.wrapping_mul(tenant as u64 + 1)),
+            );
+            // Spread the integer-division remainder over the first
+            // tenants so the fleet total is exact.
+            let budget = per_tenant + u64::from((tenant as u64) < remainder);
+            let shift_ops = (budget as f64 * config.shift_at) as u64;
+            let mut emitted = 0u64;
+            let mut slot = 0u64;
+            while emitted < budget {
+                // Exponential inter-arrival, shortened where the day
+                // is busy: mean gap = 1 / duty(slot).
+                let u = rng.f64();
+                let gap = (-(1.0 - u).ln() / config.duty_at(slot)).ceil() as u64;
+                let gap = gap.clamp(1, 4 * config.slots_per_day);
+                slot += gap;
+                // Pareto batch: mean burst_mean_ops at tail index
+                // burst_alpha (scale = mean * (alpha-1)/alpha).
+                let scale = config.burst_mean_ops * (config.burst_alpha - 1.0)
+                    / config.burst_alpha;
+                let u = rng.f64();
+                let raw = scale * (1.0 - u).powf(-1.0 / config.burst_alpha);
+                let ops = (raw as u64).clamp(MIN_BATCH_OPS, MAX_BATCH_OPS).min(budget - emitted);
+                let sp_frac = if emitted < shift_ops {
+                    config.sp_frac_start
+                } else {
+                    config.sp_frac_end
+                };
+                let precision =
+                    if rng.chance(sp_frac) { Precision::Single } else { Precision::Double };
+                let service = if rng.chance(config.latency_frac) {
+                    ServiceClass::Latency
+                } else {
+                    ServiceClass::Bulk
+                };
+                events.push(TraceEvent {
+                    tenant,
+                    slot,
+                    idle_before: gap.saturating_sub(1),
+                    class: WorkloadClass { precision, service },
+                    ops,
+                    op_seed: rng.next_u64(),
+                });
+                emitted += ops;
+            }
+        }
+        // Merge to global virtual-time order. Per-tenant order is
+        // already by slot; the stable sort keeps each tenant's
+        // sequence intact under ties, and the tenant key makes the
+        // merged order independent of generation order.
+        events.sort_by_key(|e| (e.slot, e.tenant));
+
+        let mut h = FNV_OFFSET;
+        for e in &events {
+            h = fnv1a_fold(h, e.tenant as u64);
+            h = fnv1a_fold(h, e.slot);
+            h = fnv1a_fold(h, e.idle_before);
+            h = fnv1a_fold(h, e.class.index() as u64);
+            h = fnv1a_fold(h, e.ops);
+            h = fnv1a_fold(h, e.op_seed);
+        }
+        Ok(Trace { config, events, fingerprint: h })
+    }
+
+    /// Total ops across all events — always exactly
+    /// `config.total_ops`.
+    pub fn total_ops(&self) -> u64 {
+        self.events.iter().map(|e| e.ops).sum()
+    }
+
+    /// The last event's slot (the replay clock's final value).
+    pub fn last_slot(&self) -> u64 {
+        self.events.last().map(|e| e.slot).unwrap_or(0)
+    }
+
+    /// Per-class op totals in [`WorkloadClass::index`] order — the
+    /// deterministic class-mix histogram the replay digest folds in.
+    pub fn class_ops(&self) -> [u64; 4] {
+        let mut out = [0u64; 4];
+        for e in &self.events {
+            out[e.class.index()] += e.ops;
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn same_seed_same_trace() {
+        let a = Trace::generate(TraceConfig::diurnal_skew(42, 50_000)).unwrap();
+        let b = Trace::generate(TraceConfig::diurnal_skew(42, 50_000)).unwrap();
+        // Bit-identical: every event field, the order, the fingerprint.
+        assert_eq!(a, b);
+        let c = Trace::generate(TraceConfig::diurnal_skew(43, 50_000)).unwrap();
+        assert_ne!(a.fingerprint, c.fingerprint);
+        assert_ne!(a.events, c.events);
+    }
+
+    #[test]
+    fn budgets_are_exact_and_order_is_global_virtual_time() {
+        for name in TraceConfig::PRESETS {
+            let cfg = TraceConfig::preset(name, 7, 30_000).unwrap();
+            let t = Trace::generate(cfg).unwrap();
+            assert_eq!(t.total_ops(), 30_000, "{name}: budget not exact");
+            assert_eq!(t.class_ops().iter().sum::<u64>(), 30_000);
+            assert!(
+                t.events.windows(2).all(|w| (w[0].slot, w[0].tenant) <= (w[1].slot, w[1].tenant)),
+                "{name}: events out of virtual-time order"
+            );
+            let tenants: std::collections::HashSet<usize> =
+                t.events.iter().map(|e| e.tenant).collect();
+            assert_eq!(tenants.len(), cfg.tenants, "{name}: silent tenant");
+            for e in &t.events {
+                assert!(e.ops >= 1 && e.ops <= MAX_BATCH_OPS);
+            }
+        }
+    }
+
+    #[test]
+    fn presets_shape_the_mix_as_documented() {
+        let skew = Trace::generate(TraceConfig::diurnal_skew(11, 60_000)).unwrap();
+        let [spl, spb, dpl, dpb] = skew.class_ops();
+        let latency_share = (spl + dpl) as f64 / 60_000.0;
+        assert!(
+            latency_share > 0.6,
+            "diurnal-skew should be latency-heavy, got {latency_share:.2}"
+        );
+        assert!(spb + dpb > 0, "bulk classes must not vanish");
+
+        // burst-shift: SP-heavy before the shift point, DP-heavy after.
+        let shift = Trace::generate(TraceConfig::burst_shift(11, 60_000)).unwrap();
+        let mid = shift.last_slot() / 2;
+        let sp_ops = |evs: &[&TraceEvent]| {
+            evs.iter()
+                .filter(|e| e.class.precision == Precision::Single)
+                .map(|e| e.ops)
+                .sum::<u64>() as f64
+                / evs.iter().map(|e| e.ops).sum::<u64>().max(1) as f64
+        };
+        let early: Vec<&TraceEvent> = shift.events.iter().filter(|e| e.slot < mid).collect();
+        let late: Vec<&TraceEvent> = shift.events.iter().filter(|e| e.slot >= mid).collect();
+        assert!(
+            sp_ops(&early) > sp_ops(&late),
+            "burst-shift must move the mix from SP toward DP"
+        );
+
+        // uniform: flat duty ⇒ duty_at is constant.
+        let u = TraceConfig::uniform(1, 1_000);
+        assert_eq!(u.duty_at(0), u.duty_at(u.slots_per_day / 2));
+        // diurnal: trough is genuinely quieter than the peak.
+        let d = TraceConfig::diurnal_skew(1, 1_000);
+        assert!(d.duty_at(d.slots_per_day / 2) < d.duty_at(0) / 2.0);
+    }
+
+    #[test]
+    fn idle_gaps_reflect_the_duty_trough() {
+        // Average idle_before in the trough half of the day should
+        // exceed the peak half — the structural fact the idle-parking
+        // policy feeds on.
+        let t = Trace::generate(TraceConfig::diurnal_skew(3, 80_000)).unwrap();
+        let day = t.config.slots_per_day;
+        let (mut peak_gap, mut peak_n, mut trough_gap, mut trough_n) = (0u64, 0u64, 0u64, 0u64);
+        for e in &t.events {
+            let phase = e.slot % day;
+            if phase < day / 4 || phase >= 3 * day / 4 {
+                peak_gap += e.idle_before;
+                peak_n += 1;
+            } else {
+                trough_gap += e.idle_before;
+                trough_n += 1;
+            }
+        }
+        assert!(peak_n > 0 && trough_n > 0);
+        assert!(
+            trough_gap as f64 / trough_n as f64 > peak_gap as f64 / peak_n as f64,
+            "trough gaps should be longer than peak gaps"
+        );
+    }
+
+    #[test]
+    fn generate_rejects_bad_shapes() {
+        assert!(Trace::generate(TraceConfig { tenants: 0, ..TraceConfig::uniform(1, 100) })
+            .is_err());
+        assert!(Trace::generate(TraceConfig { total_ops: 0, ..TraceConfig::uniform(1, 100) })
+            .is_err());
+        assert!(Trace::generate(TraceConfig {
+            burst_alpha: 1.0,
+            ..TraceConfig::uniform(1, 100)
+        })
+        .is_err());
+        assert!(Trace::generate(TraceConfig {
+            latency_frac: 1.5,
+            ..TraceConfig::uniform(1, 100)
+        })
+        .is_err());
+        assert!(TraceConfig::preset("no-such-trace", 1, 100).is_none());
+    }
+}

@@ -65,6 +65,67 @@ pub fn rel_diff(a: f64, b: f64) -> f64 {
     (a - b).abs() / a.abs().max(b.abs())
 }
 
+/// Exponentially-weighted moving average with an explicit observation
+/// count, so an estimator can be carried across shard incarnations: a
+/// respawned shard seeds its estimator from the dead incarnation's
+/// `(value, count)` snapshot ([`Ewma::seeded`]) and keeps decaying from
+/// there — the feedback router never restarts cold after a respawn.
+///
+/// `value()` is `None` until the first observation (warmup), so a
+/// routing policy can distinguish "no signal yet" from "measured zero".
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Ewma {
+    alpha: f64,
+    value: f64,
+    count: u64,
+}
+
+impl Ewma {
+    /// A cold estimator. `alpha` in (0, 1]: the weight of each new
+    /// observation (1.0 degenerates to "latest sample wins").
+    pub fn new(alpha: f64) -> Ewma {
+        assert!(alpha > 0.0 && alpha <= 1.0, "EWMA alpha must be in (0, 1], got {alpha}");
+        Ewma { alpha, value: 0.0, count: 0 }
+    }
+
+    /// An estimator warm-started from a prior incarnation's snapshot.
+    /// With `count == 0` this is identical to [`Ewma::new`].
+    pub fn seeded(alpha: f64, value: f64, count: u64) -> Ewma {
+        let mut e = Ewma::new(alpha);
+        if count > 0 {
+            e.value = value;
+            e.count = count;
+        }
+        e
+    }
+
+    /// Fold one observation in. The first observation initializes the
+    /// estimate exactly (no bias toward the zero default).
+    pub fn observe(&mut self, x: f64) {
+        if self.count == 0 {
+            self.value = x;
+        } else {
+            self.value += self.alpha * (x - self.value);
+        }
+        self.count += 1;
+    }
+
+    /// Current estimate; `None` before the first observation.
+    pub fn value(&self) -> Option<f64> {
+        (self.count > 0).then_some(self.value)
+    }
+
+    /// Observations folded in, including any seeded-in prior count.
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    /// The estimator's observation weight.
+    pub fn alpha(&self) -> f64 {
+        self.alpha
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -100,5 +161,71 @@ mod tests {
         assert_eq!(rel_diff(1.0, 1.0), 0.0);
         assert!((rel_diff(90.0, 100.0) - 0.1).abs() < 1e-12);
         assert_eq!(rel_diff(100.0, 90.0), rel_diff(90.0, 100.0));
+    }
+
+    #[test]
+    fn ewma_warmup_is_explicit() {
+        // No value before the first observation; the first observation
+        // becomes the estimate exactly (no pull toward zero).
+        let mut e = Ewma::new(0.25);
+        assert_eq!(e.value(), None);
+        assert_eq!(e.count(), 0);
+        e.observe(8.0);
+        assert_eq!(e.value(), Some(8.0));
+        assert_eq!(e.count(), 1);
+    }
+
+    #[test]
+    fn ewma_decays_toward_the_input() {
+        let mut e = Ewma::new(0.5);
+        e.observe(0.0);
+        for _ in 0..50 {
+            e.observe(10.0);
+        }
+        let v = e.value().unwrap();
+        assert!((v - 10.0).abs() < 1e-9, "converged to {v}");
+        // One step from a known state is exactly alpha-weighted.
+        let mut one = Ewma::new(0.25);
+        one.observe(4.0);
+        one.observe(8.0);
+        assert_eq!(one.value(), Some(4.0 + 0.25 * 4.0));
+        // A spike decays geometrically: each quiet step closes 1-alpha
+        // of the remaining gap.
+        let mut s = Ewma::new(0.25);
+        s.observe(1.0);
+        s.observe(100.0);
+        let spike = s.value().unwrap();
+        s.observe(1.0);
+        let after = s.value().unwrap();
+        assert!((after - 1.0) < (spike - 1.0) * 0.76);
+    }
+
+    #[test]
+    fn ewma_seeded_continues_the_original_exactly() {
+        // The merge-across-incarnation contract: snapshot (value, count)
+        // from a live estimator, seed a fresh one, and both must track
+        // identically from there on.
+        let mut orig = Ewma::new(0.2);
+        for x in [3.0, 7.0, 2.0, 9.0] {
+            orig.observe(x);
+        }
+        let mut revived = Ewma::seeded(0.2, orig.value().unwrap(), orig.count());
+        assert_eq!(revived.value(), orig.value());
+        assert_eq!(revived.count(), orig.count());
+        for x in [1.5, 8.25, 0.125] {
+            orig.observe(x);
+            revived.observe(x);
+        }
+        assert_eq!(revived.value(), orig.value());
+        assert_eq!(revived.count(), orig.count());
+        // Seeding with count 0 is a cold start, whatever the value says.
+        let cold = Ewma::seeded(0.2, 123.0, 0);
+        assert_eq!(cold.value(), None);
+    }
+
+    #[test]
+    #[should_panic(expected = "alpha")]
+    fn ewma_rejects_zero_alpha() {
+        let _ = Ewma::new(0.0);
     }
 }

@@ -10,7 +10,7 @@ use fpmax::arch::engine::{Datapath, Fidelity, UnitDatapath};
 use fpmax::arch::fp::Precision;
 use fpmax::arch::generator::{FpuConfig, FpuUnit};
 use fpmax::coordinator::{serve_chaos, RoutedLoad};
-use fpmax::runtime::chaos::{fnv1a_fold, FaultKind, FaultPlan, FNV_OFFSET};
+use fpmax::runtime::chaos::{fnv1a_fold, FaultKind, FaultPlan, FaultTrigger, FNV_OFFSET};
 use fpmax::runtime::router::{
     RetryPolicy, RouterConfig, ServeRouter, ServiceClass, ShardHealth, ShardSpec, WorkloadClass,
 };
@@ -135,7 +135,10 @@ fn fault_plan_runs_are_deterministic_given_serialized_submission() {
         let mut fault_at = plan.faults.iter().peekable();
         while submitted < total {
             if let Some(f) = fault_at.peek() {
-                if submitted >= f.after_ops {
+                let FaultTrigger::SubmittedOps(at) = f.trigger else {
+                    panic!("op-anchored kill plans never carry trace-slot triggers")
+                };
+                if submitted >= at {
                     let FaultKind::KillDispatcher { shard } = f.kind else {
                         panic!("kill plan only schedules kills")
                     };
