@@ -33,6 +33,13 @@ fails the job with a readable delta table when any budget is blown:
   across shard incarnations, and at least one respawn per dispatcher
   kill. Chaos artifacts carry no ``thresholds`` object: the gates are
   absolute;
+* formats (``BENCH_formats*.ci.json``, from ``fpmax fuzz --json``): the
+  transprecision format-matrix gate — every (format × op kind × stream)
+  differential run must report zero counterexamples on a non-empty op
+  count, and the packed-SWAR FP16 FMA probe must beat the SP
+  scalar-word baseline by the embedded ``min_packed_speedup`` threshold,
+  with the speedup re-derived from the raw rates (the artifact carries
+  no precomputed ratio to trust);
 * routing (``BENCH_routing.ci.json``, from ``fpmax replay``): per-arm
   replay gates re-derived from the raw ledger (zero hung, ledger
   balanced, crosscheck clean, every fault fired, conservation exact,
@@ -118,6 +125,54 @@ def engine_checks(doc: dict) -> list[Check]:
             Check(unit, "crosscheck_mismatches",
                   row["crosscheck_mismatches"] + row["simd_crosscheck_mismatches"],
                   "==", t["max_crosscheck_mismatches"]))
+    # Packed-SWAR transprecision rows (PR 9 schema; absent on older
+    # artifacts). The speedup is re-derived from the raw element rates
+    # against the SP FMA scalar-word baseline, never read back.
+    packed = doc.get("packed")
+    min_packed = t.get("min_packed_speedup_fp16_fma_vs_sp_scalar_word")
+    if packed and min_packed is not None:
+        sp_fma = doc["units"].get("SP FMA", {})
+        baseline = max(sp_fma.get("scalar_word_ops_per_s", 0.0), 1e-12)
+        for unit, row in packed.items():
+            speedup = row["packed_elems_per_s"] / baseline
+            if unit == "fp16_fma":
+                out.append(
+                    Check(unit, "packed_vs_sp_scalar_word", speedup, ">=",
+                          min_packed))
+            else:
+                out.append(
+                    Check(unit, "packed_elems_per_s",
+                          row["packed_elems_per_s"], ">", 0))
+    return out
+
+
+def formats_checks(doc: dict) -> list[Check]:
+    """The ``fpmax fuzz --json`` artifact: transprecision conformance
+    (zero counterexamples per run row, on a non-empty op count) plus the
+    packed-SWAR speedup gate, re-derived from the raw element rates."""
+    t = doc["thresholds"]
+    out = []
+    for row in doc["runs"]:
+        unit = f"{row['format']}_{row['kind']}_{row['stream'].lower()}"
+        out.append(Check(unit, "executed", row["executed"], ">", 0))
+        out.append(
+            Check(unit, "counterexamples", row["counterexamples"], "==",
+                  t["max_counterexamples"]))
+    min_speedup = t.get("min_packed_speedup_fp16_fma_vs_sp_scalar_word")
+    for probe in doc.get("packed_probe", []):
+        unit = f"{probe['format']}_{probe['kind']}_packed"
+        baseline = max(probe["sp_scalar_word_ops_per_s"], 1e-12)
+        speedup = probe["packed_elems_per_s"] / baseline
+        if probe["format"] == "fp16" and probe["kind"] == "fma" \
+                and min_speedup is not None:
+            out.append(
+                Check(unit, "packed_vs_sp_scalar_word", speedup, ">=",
+                      min_speedup))
+        else:
+            # Informational floor: packed throughput must at least exist.
+            out.append(
+                Check(unit, "packed_elems_per_s",
+                      probe["packed_elems_per_s"], ">", 0))
     return out
 
 
@@ -266,6 +321,7 @@ def routing_checks(doc: dict) -> list[Check]:
 
 CHECKERS = {
     "engine": engine_checks,
+    "formats": formats_checks,
     "serve": serve_checks,
     "chaos": chaos_checks,
     "routing": routing_checks,
@@ -273,7 +329,7 @@ CHECKERS = {
 
 # Chaos gates are absolute (zero hung, zero lost, ...) — the artifact
 # embeds no tunable thresholds object.
-NEEDS_THRESHOLDS = {"engine", "serve", "routing"}
+NEEDS_THRESHOLDS = {"engine", "formats", "serve", "routing"}
 
 
 def check_file(path: str) -> tuple[list[Check], list[str]]:

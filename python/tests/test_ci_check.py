@@ -173,6 +173,150 @@ def test_engine_legacy_artifact_without_simd_feature_key(tmp_path):
     assert all(c.name != "simd_vector_vs_scalar_lane" for c in checks)
 
 
+def formats_doc():
+    # Mirrors the `fpmax fuzz --json` artifact for one small format: two
+    # streams per op kind, a clean differential matrix, and the raw
+    # packed-probe rates (no precomputed speedup — the checker derives
+    # it).
+    runs = []
+    for kind in ("fma", "cma", "mul", "add"):
+        for stream in ("UniformBits", "Structured"):
+            runs.append({
+                "format": "fp16",
+                "kind": kind,
+                "stream": stream,
+                "executed": 100000,
+                "counterexamples": 0,
+                "engines": 6,
+                "packed_engine": True,
+            })
+    return {
+        "bench": "formats",
+        "measured": True,
+        "ops_per_format_kind": 200000,
+        "seed": 7,
+        "simd_feature": False,
+        "thresholds": {
+            "max_counterexamples": 0,
+            "min_packed_speedup_fp16_fma_vs_sp_scalar_word": 1.5,
+        },
+        "runs": runs,
+        "packed_probe": [
+            {
+                "format": "fp16",
+                "kind": "fma",
+                "elems_per_word": 2,
+                "packed_elems_per_s": 2.0e8,
+                "sp_scalar_word_ops_per_s": 1.0e8,
+            },
+        ],
+    }
+
+
+def test_formats_clean_matrix_passes(tmp_path):
+    checks, errors = run_doc(tmp_path, formats_doc())
+    assert not errors
+    # 2 checks per run row (8 rows) + 1 packed-speedup check.
+    assert len(checks) == 17
+    assert all(c.ok for c in checks)
+    speedup = [c for c in checks if c.name == "packed_vs_sp_scalar_word"]
+    assert len(speedup) == 1
+    # Re-derived from the raw rates: 2e8 / 1e8 = 2.0x.
+    assert abs(speedup[0].value - 2.0) < 1e-9
+
+
+def test_formats_counterexample_fails_its_row_only(tmp_path):
+    doc = formats_doc()
+    doc["runs"][3]["counterexamples"] = 2
+    checks, errors = run_doc(tmp_path, doc)
+    assert not errors
+    failed = [(c.unit, c.name) for c in checks if not c.ok]
+    row = doc["runs"][3]
+    unit = f"{row['format']}_{row['kind']}_{row['stream'].lower()}"
+    assert failed == [(unit, "counterexamples")]
+
+
+def test_formats_packed_speedup_rederived_not_trusted(tmp_path):
+    # Below-threshold raw rates must fail even though the artifact
+    # carries no ratio field at all to falsify.
+    doc = formats_doc()
+    doc["packed_probe"][0]["packed_elems_per_s"] = 1.2e8  # 1.2x < 1.5x
+    checks, errors = run_doc(tmp_path, doc)
+    assert not errors
+    failed = {c.name for c in checks if not c.ok}
+    assert failed == {"packed_vs_sp_scalar_word"}
+
+
+def test_formats_non_fp16_probe_rows_gate_existence_only(tmp_path):
+    doc = formats_doc()
+    doc["packed_probe"].append({
+        "format": "fp8e4m3",
+        "kind": "fma",
+        "elems_per_word": 4,
+        "packed_elems_per_s": 5.0e7,  # 0.5x SP — allowed, not the gated row
+        "sp_scalar_word_ops_per_s": 1.0e8,
+    })
+    checks, errors = run_doc(tmp_path, doc)
+    assert not errors
+    assert all(c.ok for c in checks)
+    fp8 = [c for c in checks if c.unit == "fp8e4m3_fma_packed"]
+    assert [c.name for c in fp8] == ["packed_elems_per_s"]
+
+
+def test_formats_empty_run_is_a_failure(tmp_path):
+    doc = formats_doc()
+    doc["runs"][0]["executed"] = 0
+    checks, errors = run_doc(tmp_path, doc)
+    assert not errors
+    failed = {c.name for c in checks if not c.ok}
+    assert failed == {"executed"}
+
+
+def test_formats_needs_thresholds(tmp_path):
+    doc = formats_doc()
+    del doc["thresholds"]
+    checks, errors = run_doc(tmp_path, doc)
+    assert not checks
+    assert errors and "thresholds" in errors[0]
+
+
+def test_engine_packed_section_gates_fp16_fma_only(tmp_path):
+    # PR-9 engine schema: the packed object rides along; the fp16_fma
+    # row is gated against the SP FMA scalar-word baseline, siblings
+    # only need a nonzero rate. Older artifacts without the section (or
+    # the threshold) skip cleanly — covered by the legacy test above.
+    doc = engine_doc(simd_feature=False)
+    doc["units"]["SP FMA"]["scalar_word_ops_per_s"] = 1.0e8
+    doc["thresholds"]["min_packed_speedup_fp16_fma_vs_sp_scalar_word"] = 1.5
+    doc["packed"] = {
+        "fp16_fma": {
+            "elems_per_word": 2,
+            "packed_elems_per_s": 1.6e8,
+            "lane_soa_elems_per_s": 1.0e8,
+            "speedup_packed_vs_sp_scalar_word": 99.0,  # never read back
+        },
+        "fp8e5m2_cma": {
+            "elems_per_word": 4,
+            "packed_elems_per_s": 4.0e7,
+            "lane_soa_elems_per_s": 2.0e7,
+            "speedup_packed_vs_sp_scalar_word": 0.4,
+        },
+    }
+    checks, errors = run_doc(tmp_path, doc)
+    assert not errors
+    assert all(c.ok for c in checks)
+    gated = {c.unit: c for c in checks if c.unit in doc["packed"]}
+    assert gated["fp16_fma"].name == "packed_vs_sp_scalar_word"
+    assert abs(gated["fp16_fma"].value - 1.6) < 1e-9  # re-derived, not 99.0
+    assert gated["fp8e5m2_cma"].name == "packed_elems_per_s"
+    # Below threshold on the raw rates → the gated row fails.
+    doc["packed"]["fp16_fma"]["packed_elems_per_s"] = 1.0e8
+    checks, errors = run_doc(tmp_path, doc)
+    assert not errors
+    failed = [(c.unit, c.name) for c in checks if not c.ok]
+    assert failed == [("fp16_fma", "packed_vs_sp_scalar_word")]
+
+
 def chaos_doc():
     # Mirrors ChaosReport::render_json: a 4-shard kill-all drill where
     # every gate holds.

@@ -19,7 +19,7 @@
 //! Run: `cargo bench --bench engine` (FPMAX_BENCH_FAST=1 for a smoke run).
 
 use fpmax::arch::engine::{BatchExecutor, Datapath, Fidelity, UnitDatapath};
-use fpmax::arch::fp::Format;
+use fpmax::arch::fp::{Format, Precision};
 use fpmax::arch::generator::{FpuConfig, FpuKind, FpuUnit};
 use fpmax::arch::softfloat::lanes;
 use fpmax::util::bench::{black_box, header, BenchRunner};
@@ -79,6 +79,19 @@ impl UnitRow {
 
 /// Trace window width the windowed rows use (ops per window).
 const TRACE_WINDOW_OPS: usize = 4096;
+
+/// One packed-SWAR row: a small format's FMA/CMA element throughput
+/// through the `lanes::packed` word entry point next to the dispatching
+/// SoA lane blocks on the same operand population.
+struct PackedRow {
+    /// Canonical format name (`fp16`, `bf16`, `fp8e4m3`, `fp8e5m2`).
+    format: &'static str,
+    /// `fma` or `cma`.
+    kind: &'static str,
+    elems_per_word: usize,
+    packed_elems_per_s: f64,
+    lane_soa_elems_per_s: f64,
+}
 
 fn main() {
     let fast = std::env::var("FPMAX_BENCH_FAST").as_deref() == Ok("1");
@@ -240,6 +253,74 @@ fn main() {
         });
     }
 
+    // Packed-SWAR tier: the small transprecision formats through the
+    // `lanes::packed` 32-bit word entry point (2×FP16/BF16 or 4×FP8 per
+    // word) vs the dispatching SoA lane blocks on the same operands.
+    // Element counts are what is compared — a packed pass covers
+    // `elems_per_word`× more values per word than the scalar tiers.
+    let mut packed_rows = Vec::new();
+    for precision in
+        [Precision::Half, Precision::Bfloat16, Precision::Fp8E4M3, Precision::Fp8E5M2]
+    {
+        let fmt = precision.format();
+        let epw = lanes::packed::elems_per_word(fmt);
+        let words = n / epw;
+        let elems = words * epw;
+        let triples = OperandStream::new(precision, OperandMix::Finite, 42).batch(elems);
+        let mut buf = vec![0u64; epw];
+        let (mut aw, mut bw, mut cw) =
+            (Vec::with_capacity(words), Vec::with_capacity(words), Vec::with_capacity(words));
+        for ch in triples.chunks(epw) {
+            for (sel, dst) in [(0usize, &mut aw), (1, &mut bw), (2, &mut cw)] {
+                for (i, t) in ch.iter().enumerate() {
+                    buf[i] = match sel {
+                        0 => t.a,
+                        1 => t.b,
+                        _ => t.c,
+                    };
+                }
+                dst.push(lanes::packed::pack_word(fmt, &buf));
+            }
+        }
+        let mut ow = vec![0u32; words];
+        let mut soa_out = vec![0u64; elems];
+        for kind in [FpuKind::Fma, FpuKind::Cma] {
+            let kind_name = if kind == FpuKind::Fma { "fma" } else { "cma" };
+            let packed_rate = runner
+                .run(
+                    &format!("engine/packed/{}_{kind_name}", precision.name()),
+                    Some(elems as f64),
+                    || {
+                        match kind {
+                            FpuKind::Fma => lanes::packed::fma_words(fmt, &aw, &bw, &cw, &mut ow),
+                            FpuKind::Cma => lanes::packed::cma_words(fmt, &aw, &bw, &cw, &mut ow),
+                        }
+                        black_box(ow[0]);
+                    },
+                )
+                .throughput()
+                .unwrap();
+            let lane_rate = runner
+                .run(
+                    &format!("engine/lane_soa/{}_{kind_name}", precision.name()),
+                    Some(elems as f64),
+                    || {
+                        lane_block_pass(kind, fmt, &triples, &mut soa_out, true);
+                        black_box(soa_out[0]);
+                    },
+                )
+                .throughput()
+                .unwrap();
+            packed_rows.push(PackedRow {
+                format: precision.name(),
+                kind: kind_name,
+                elems_per_word: epw,
+                packed_elems_per_s: packed_rate,
+                lane_soa_elems_per_s: lane_rate,
+            });
+        }
+    }
+
     println!();
     for r in &rows {
         println!(
@@ -265,9 +346,27 @@ fn main() {
         );
     }
 
+    let sp_scalar_word = rows
+        .iter()
+        .find(|r| r.name == "SP FMA")
+        .map(|r| r.scalar_word)
+        .unwrap_or(0.0);
+    println!();
+    for p in &packed_rows {
+        println!(
+            "packed {}_{}  {} elems/word  packed {:>8.2} Melems/s  lane-soa {:>8.2} Melems/s  ({:.2}× SP scalar-word)",
+            p.format,
+            p.kind,
+            p.elems_per_word,
+            p.packed_elems_per_s / 1e6,
+            p.lane_soa_elems_per_s / 1e6,
+            if sp_scalar_word > 0.0 { p.packed_elems_per_s / sp_scalar_word } else { 0.0 },
+        );
+    }
+
     let out_path = std::env::var("FPMAX_BENCH_OUT")
         .unwrap_or_else(|_| format!("{}/../BENCH_engine.json", env!("CARGO_MANIFEST_DIR")));
-    let json = render_json(n, exec.workers(), &rows);
+    let json = render_json(n, exec.workers(), &rows, &packed_rows);
     match std::fs::write(&out_path, &json) {
         Ok(()) => println!("\nwrote {out_path}"),
         Err(e) => println!("\ncould not write {out_path}: {e}"),
@@ -319,7 +418,7 @@ fn lane_block_pass(
 
 /// Hand-rolled JSON (no serde offline): stable key order, one unit per
 /// entry.
-fn render_json(ops: usize, workers: usize, rows: &[UnitRow]) -> String {
+fn render_json(ops: usize, workers: usize, rows: &[UnitRow], packed_rows: &[PackedRow]) -> String {
     let mut s = String::new();
     s.push_str("{\n");
     s.push_str("  \"bench\": \"engine\",\n");
@@ -336,7 +435,8 @@ fn render_json(ops: usize, workers: usize, rows: &[UnitRow]) -> String {
     s.push_str("    \"min_speedup_simd_word_vs_scalar_word\": 2.0,\n");
     s.push_str("    \"min_speedup_simd_vector_vs_scalar_lane\": 2.0,\n");
     s.push_str("    \"max_trace_overhead_windowed_vs_untracked\": 2.0,\n");
-    s.push_str("    \"max_crosscheck_mismatches\": 0\n");
+    s.push_str("    \"max_crosscheck_mismatches\": 0,\n");
+    s.push_str("    \"min_packed_speedup_fp16_fma_vs_sp_scalar_word\": 1.5\n");
     s.push_str("  },\n");
     s.push_str("  \"units\": {\n");
     for (i, r) in rows.iter().enumerate() {
@@ -395,6 +495,30 @@ fn render_json(ops: usize, workers: usize, rows: &[UnitRow]) -> String {
             r.simd_crosscheck_mismatches
         ));
         s.push_str(if i + 1 == rows.len() { "    }\n" } else { "    },\n" });
+    }
+    s.push_str("  },\n");
+    let sp_scalar_word = rows
+        .iter()
+        .find(|r| r.name == "SP FMA")
+        .map(|r| r.scalar_word)
+        .unwrap_or(0.0);
+    s.push_str("  \"packed\": {\n");
+    for (i, p) in packed_rows.iter().enumerate() {
+        s.push_str(&format!("    \"{}_{}\": {{\n", p.format, p.kind));
+        s.push_str(&format!("      \"elems_per_word\": {},\n", p.elems_per_word));
+        s.push_str(&format!(
+            "      \"packed_elems_per_s\": {:.0},\n",
+            p.packed_elems_per_s
+        ));
+        s.push_str(&format!(
+            "      \"lane_soa_elems_per_s\": {:.0},\n",
+            p.lane_soa_elems_per_s
+        ));
+        s.push_str(&format!(
+            "      \"speedup_packed_vs_sp_scalar_word\": {:.2}\n",
+            if sp_scalar_word > 0.0 { p.packed_elems_per_s / sp_scalar_word } else { 0.0 }
+        ));
+        s.push_str(if i + 1 == packed_rows.len() { "    }\n" } else { "    },\n" });
     }
     s.push_str("  }\n}\n");
     s

@@ -1,11 +1,21 @@
-//! IEEE-754 binary interchange format codecs (SP / DP).
+//! IEEE-754 binary interchange format codecs (SP / DP / FP16 / BF16 /
+//! FP8).
 //!
-//! Every datapath in this crate works on raw bit patterns (`u64`, with SP
-//! occupying the low 32 bits) so the same code drives both precisions —
-//! exactly how FPGen parameterizes its generated RTL over `(exp_bits,
-//! man_bits)`. This module owns unpacking to sign/exponent/significand
-//! triples, classification, and packing (including subnormal and
-//! overflow handling at encode time via [`crate::arch::rounding`]).
+//! Every datapath in this crate works on raw bit patterns (`u64`, with
+//! sub-64-bit formats occupying the low bits) so the same code drives
+//! every precision — exactly how FPGen parameterizes its generated RTL
+//! over `(exp_bits, man_bits)`. This module owns unpacking to
+//! sign/exponent/significand triples, classification, and packing
+//! (including subnormal and overflow handling at encode time via
+//! [`crate::arch::rounding`]).
+//!
+//! The transprecision tier set follows FPnew: alongside binary32/64 the
+//! stack carries `binary16`, `bfloat16`, and the two FP8 flavors
+//! (E4M3/E5M2). All are treated IEEE-interchange-style — the all-ones
+//! exponent encodes Inf/NaN even for E4M3, where OCP's variant spends
+//! that binade on finite values; the uniform treatment keeps one
+//! decode/encode/rounding path for every format, and the differential
+//! engines all agree on it by construction.
 
 
 /// Operand precision of a generated FPU.
@@ -15,23 +25,66 @@ pub enum Precision {
     Single,
     /// IEEE binary64.
     Double,
+    /// IEEE binary16.
+    Half,
+    /// bfloat16 (binary32 exponent range, 8-bit significand).
+    Bfloat16,
+    /// FP8 E4M3 (IEEE-interchange-style specials — see module docs).
+    Fp8E4M3,
+    /// FP8 E5M2.
+    Fp8E5M2,
 }
 
 impl Precision {
+    /// Every supported precision, SP/DP first (their positions are
+    /// load-bearing for [`crate::runtime::router::WorkloadClass`]
+    /// indexing), then the transprecision tiers widest-first.
+    pub const ALL: [Precision; 6] = [
+        Precision::Single,
+        Precision::Double,
+        Precision::Half,
+        Precision::Bfloat16,
+        Precision::Fp8E4M3,
+        Precision::Fp8E5M2,
+    ];
+
     /// The format descriptor for this precision.
     pub fn format(self) -> Format {
         match self {
             Precision::Single => Format::SP,
             Precision::Double => Format::DP,
+            Precision::Half => Format::FP16,
+            Precision::Bfloat16 => Format::BF16,
+            Precision::Fp8E4M3 => Format::FP8E4M3,
+            Precision::Fp8E5M2 => Format::FP8E5M2,
         }
     }
 
-    /// Short lowercase name used in reports and artifact paths.
+    /// Short lowercase name used in reports, artifact paths, CLI flags,
+    /// and JSON schemas — the one canonical spelling per format.
     pub fn name(self) -> &'static str {
         match self {
             Precision::Single => "sp",
             Precision::Double => "dp",
+            Precision::Half => "fp16",
+            Precision::Bfloat16 => "bf16",
+            Precision::Fp8E4M3 => "fp8e4m3",
+            Precision::Fp8E5M2 => "fp8e5m2",
         }
+    }
+
+    /// Parse the canonical spelling produced by [`Precision::name`]
+    /// (case-insensitive). The CLI, JSON schemas, and the CI checker all
+    /// round-trip through this pair.
+    pub fn parse(s: &str) -> Option<Precision> {
+        let lower = s.to_ascii_lowercase();
+        Precision::ALL.into_iter().find(|p| p.name() == lower)
+    }
+}
+
+impl std::fmt::Display for Precision {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
     }
 }
 
@@ -52,6 +105,46 @@ impl Format {
     pub const SP: Format = Format { exp_bits: 8, sig_bits: 24 };
     /// IEEE binary64.
     pub const DP: Format = Format { exp_bits: 11, sig_bits: 53 };
+    /// IEEE binary16.
+    pub const FP16: Format = Format { exp_bits: 5, sig_bits: 11 };
+    /// bfloat16: binary32's exponent range, truncated significand.
+    pub const BF16: Format = Format { exp_bits: 8, sig_bits: 8 };
+    /// FP8 E4M3 (IEEE-interchange specials — see module docs).
+    pub const FP8E4M3: Format = Format { exp_bits: 4, sig_bits: 4 };
+    /// FP8 E5M2.
+    pub const FP8E5M2: Format = Format { exp_bits: 5, sig_bits: 3 };
+
+    /// Every supported format, in [`Precision::ALL`] order.
+    pub fn all() -> [Format; 6] {
+        [
+            Format::SP,
+            Format::DP,
+            Format::FP16,
+            Format::BF16,
+            Format::FP8E4M3,
+            Format::FP8E5M2,
+        ]
+    }
+
+    /// The [`Precision`] tag for this format, if it is one of the six
+    /// supported tiers.
+    pub fn precision(&self) -> Option<Precision> {
+        Precision::ALL.into_iter().find(|p| p.format() == *self)
+    }
+
+    /// Canonical lowercase name (shared with [`Precision::name`]);
+    /// `"e{exp}m{man}"` for formats outside the supported set.
+    pub fn name(&self) -> &'static str {
+        match self.precision() {
+            Some(p) => p.name(),
+            None => "custom",
+        }
+    }
+
+    /// Parse the canonical spelling back into a format descriptor.
+    pub fn parse(s: &str) -> Option<Format> {
+        Precision::parse(s).map(|p| p.format())
+    }
 
     /// Total storage width (1 + exp + fraction).
     pub const fn width(&self) -> u32 {
@@ -142,6 +235,15 @@ impl Format {
             self.sign_bit()
         } else {
             0
+        }
+    }
+}
+
+impl std::fmt::Display for Format {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self.precision() {
+            Some(p) => f.write_str(p.name()),
+            None => write!(f, "e{}m{}", self.exp_bits, self.sig_bits - 1),
         }
     }
 }
@@ -283,6 +385,78 @@ mod tests {
     }
 
     #[test]
+    fn format_constants_small() {
+        let f = Format::FP16;
+        assert_eq!(f.width(), 16);
+        assert_eq!(f.bias(), 15);
+        assert_eq!(f.emin(), -14);
+        assert_eq!(f.emax(), 15);
+        assert_eq!(f.qmin(), -24);
+        assert_eq!(f.inf(false), 0x7c00);
+        assert_eq!(f.qnan(), 0x7e00);
+        assert_eq!(f.max_finite(false), 0x7bff);
+        assert_eq!(f.storage_mask(), 0xffff);
+
+        let f = Format::BF16;
+        assert_eq!(f.width(), 16);
+        assert_eq!(f.bias(), 127);
+        assert_eq!(f.emin(), -126);
+        assert_eq!(f.qmin(), -133);
+        assert_eq!(f.inf(false), 0x7f80);
+        assert_eq!(f.qnan(), 0x7fc0);
+        assert_eq!(f.max_finite(false), 0x7f7f);
+
+        let f = Format::FP8E4M3;
+        assert_eq!(f.width(), 8);
+        assert_eq!(f.bias(), 7);
+        assert_eq!(f.qmin(), -9);
+        assert_eq!(f.inf(false), 0x78);
+        assert_eq!(f.qnan(), 0x7c);
+        assert_eq!(f.max_finite(false), 0x77);
+
+        let f = Format::FP8E5M2;
+        assert_eq!(f.width(), 8);
+        assert_eq!(f.bias(), 15);
+        assert_eq!(f.qmin(), -16);
+        assert_eq!(f.inf(false), 0x7c);
+        assert_eq!(f.qnan(), 0x7e);
+        assert_eq!(f.max_finite(false), 0x7b);
+    }
+
+    #[test]
+    fn precision_format_name_parse_roundtrip_exhaustive() {
+        // One canonical spelling per format, shared by CLI flags, JSON
+        // schemas, and the CI checker: every hop of the round trip must
+        // be the identity, for every supported tier.
+        assert_eq!(Precision::ALL.len(), Format::all().len());
+        for (p, f) in Precision::ALL.into_iter().zip(Format::all()) {
+            assert_eq!(p.format(), f);
+            assert_eq!(f.precision(), Some(p));
+            assert_eq!(p.name(), f.name());
+            assert_eq!(Precision::parse(p.name()), Some(p));
+            assert_eq!(Format::parse(f.name()), Some(f));
+            // Case-insensitive parse, exact Display.
+            assert_eq!(Precision::parse(&p.name().to_uppercase()), Some(p));
+            assert_eq!(format!("{p}"), p.name());
+            assert_eq!(format!("{f}"), f.name());
+        }
+        // Names are pairwise distinct.
+        for a in Precision::ALL {
+            for b in Precision::ALL {
+                assert_eq!(a.name() == b.name(), a == b);
+            }
+        }
+        // Unknown spellings reject; non-canonical formats display raw.
+        assert_eq!(Precision::parse("half"), None);
+        assert_eq!(Format::parse("e4m3"), None);
+        assert_eq!(Precision::parse(""), None);
+        let odd = Format { exp_bits: 6, sig_bits: 10 };
+        assert_eq!(odd.precision(), None);
+        assert_eq!(format!("{odd}"), "e6m9");
+        assert_eq!(odd.name(), "custom");
+    }
+
+    #[test]
     fn decode_classes_sp() {
         let f = Format::SP;
         assert_eq!(decode(f, 0).class, Class::Zero);
@@ -315,8 +489,9 @@ mod tests {
 
     #[test]
     fn decode_encode_roundtrip_exhaustive_exponents() {
-        // Every exponent with a few fraction patterns, both signs, both fmts.
-        for fmt in [Format::SP, Format::DP] {
+        // Every exponent with a few fraction patterns, both signs, every
+        // supported format.
+        for fmt in Format::all() {
             for e in 0..fmt.emax_biased() {
                 for frac in [0u64, 1, fmt.frac_mask() / 2, fmt.frac_mask()] {
                     for sign in [false, true] {

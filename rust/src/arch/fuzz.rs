@@ -148,6 +148,15 @@ pub fn scalar_lane(fmt: Format, kind: OpKind, a: u64, b: u64, c: u64) -> u64 {
 /// it lowers to an FMA instruction or libm's `fma`), and the plain
 /// `*`/`+` compositions are the cascade/mul/add references. Rust does
 /// not enable FTZ/DAZ, so subnormal semantics match.
+///
+/// Sub-32-bit formats have no host arithmetic, so they evaluate in
+/// `f64` and convert back per rounding step ([`softfloat::to_f64`] is
+/// exact; the extra `f64` rounding is innocuous because `53 ≥
+/// 2·sig_bits + 2` for every small format — Figueroa's theorem). That
+/// makes this engine an *independent* correctly-rounded oracle for
+/// FP16/BF16/FP8 built on the host's own `f64` units, not on the spec
+/// rounder under test (`from_f64`'s final narrowing is the only shared
+/// code).
 pub fn host(fmt: Format, kind: OpKind, a: u64, b: u64, c: u64) -> u64 {
     if fmt.sig_bits == 24 {
         let (x, y, z) = (
@@ -162,7 +171,7 @@ pub fn host(fmt: Format, kind: OpKind, a: u64, b: u64, c: u64) -> u64 {
             OpKind::Add => x + z,
         };
         r.to_bits() as u64
-    } else {
+    } else if fmt.width() == 64 {
         let (x, y, z) = (f64::from_bits(a), f64::from_bits(b), f64::from_bits(c));
         let r = match kind {
             OpKind::Fma => x.mul_add(y, z),
@@ -171,7 +180,49 @@ pub fn host(fmt: Format, kind: OpKind, a: u64, b: u64, c: u64) -> u64 {
             OpKind::Add => x + z,
         };
         r.to_bits()
+    } else {
+        let (x, y, z) = (
+            softfloat::to_f64(fmt, a),
+            softfloat::to_f64(fmt, b),
+            softfloat::to_f64(fmt, c),
+        );
+        match kind {
+            // Small-format products are exact in f64 (2·sig_bits ≤ 22
+            // bits), so mul_add and the narrowing are the only
+            // roundings — single-rounding fused semantics hold.
+            OpKind::Fma => softfloat::from_f64(fmt, x.mul_add(y, z)),
+            OpKind::Cma => {
+                // Cascade needs the intermediate rounded *into fmt*,
+                // not into f64 — round-trip the product.
+                let p = softfloat::to_f64(fmt, softfloat::from_f64(fmt, x * y));
+                softfloat::from_f64(fmt, p + z)
+            }
+            OpKind::Mul => softfloat::from_f64(fmt, x * y),
+            OpKind::Add => softfloat::from_f64(fmt, x + z),
+        }
     }
+}
+
+/// Packed-SWAR evaluation of `kind`: the triple replicated across full
+/// packed words through [`lanes::packed`], element 0 of word 0
+/// returned. Only valid for formats with `width ≤ 16`.
+pub fn packed_word(fmt: Format, kind: OpKind, a: u64, b: u64, c: u64) -> u64 {
+    let epw = lanes::packed::elems_per_word(fmt);
+    let wpb = lanes::LANES / epw;
+    let word = |v: u64| lanes::packed::pack_word(fmt, &vec![v; epw]);
+    let av = vec![word(a); wpb];
+    let bv = vec![word(b); wpb];
+    let cv = vec![word(c); wpb];
+    let mut out = vec![0u32; wpb];
+    match kind {
+        OpKind::Fma => lanes::packed::fma_words(fmt, &av, &bv, &cv, &mut out),
+        OpKind::Cma => lanes::packed::cma_words(fmt, &av, &bv, &cv, &mut out),
+        OpKind::Mul => lanes::packed::mul_words(fmt, &av, &bv, &mut out),
+        OpKind::Add => lanes::packed::add_words(fmt, &av, &cv, &mut out),
+    }
+    let mut elems = vec![0u64; epw];
+    lanes::packed::unpack_word(fmt, out[0], &mut elems);
+    elems[0]
 }
 
 /// The standard four-way engine set: gate tier (reference, first) vs
@@ -206,6 +257,11 @@ pub fn standard_engines<'a>(fma_unit: &'a FpuUnit, cma_unit: &'a FpuUnit) -> Vec
     if cfg!(feature = "simd") {
         engines.push(Engine::new("scalar-lane", true, move |kind, a, b, c| {
             scalar_lane(fmt, kind, a, b, c)
+        }));
+    }
+    if lanes::packed::supports(fmt) {
+        engines.push(Engine::new("packed", true, move |kind, a, b, c| {
+            packed_word(fmt, kind, a, b, c)
         }));
     }
     engines
@@ -350,10 +406,11 @@ pub struct Counterexample {
 
 impl Counterexample {
     /// Render in the `edge_vectors.rs` corpus format: `v(a, b, c, want)`
-    /// with the gate/reference result as `want`, plus provenance. SP
-    /// prints 8 hex digits (the corpus takes `u32`), DP prints 16.
+    /// with the gate/reference result as `want`, plus provenance. Hex
+    /// width follows the storage width (8 digits for SP, 16 for DP, 4
+    /// for the 16-bit formats, 2 for FP8).
     pub fn render_edge_vector(&self) -> String {
-        let w = if self.fmt.sig_bits == 24 { 8 } else { 16 };
+        let w = (self.fmt.width() / 4) as usize;
         let want = self.mismatches.first().map(|m| m.want).unwrap_or(0);
         let diffs: Vec<String> = self
             .mismatches
@@ -366,7 +423,7 @@ impl Counterexample {
             self.b,
             self.c,
             want,
-            if self.fmt.sig_bits == 24 { "sp" } else { "dp" },
+            self.fmt.name(),
             self.kind.name(),
             diffs.join(" "),
             self.shrink_steps,
@@ -418,7 +475,7 @@ impl FuzzReport {
     pub fn render(&self) -> String {
         let mut s = format!(
             "# {} {} stream={:?} seed=0x{:x}: {} executed, {} counterexample(s)\n",
-            if self.fmt.sig_bits == 24 { "sp" } else { "dp" },
+            self.fmt.name(),
             self.kind.name(),
             self.stream,
             self.seed,
@@ -483,7 +540,7 @@ fn minimize(
     let mut cur = start;
     let mut steps = 0usize;
     let mut evals = 0usize;
-    let width = if fmt.sig_bits == 24 { 32 } else { 64 };
+    let width = fmt.width();
     'outer: loop {
         // Whole-operand zeroing first: the biggest single shrink.
         for op in 0..3 {
@@ -699,16 +756,24 @@ mod tests {
     #[test]
     fn internal_tiers_agree_on_structured_streams() {
         // Smoke version of tests/differential.rs (which adds the gate
-        // tier and host hardware): spec vs word-simd vs scalar-lane.
-        for fmt in [Format::SP, Format::DP] {
+        // tier): spec vs word-simd vs scalar-lane vs host hardware, plus
+        // the packed-SWAR voice for the formats narrow enough to pack —
+        // across the full six-format matrix.
+        for fmt in Format::all() {
             for kind in OpKind::ALL {
-                let engines = [
+                let mut engines = vec![
                     reference(fmt),
                     Engine::new("word-simd", true, move |k, a, b, c| simd_word(fmt, k, a, b, c)),
                     Engine::new("scalar-lane", true, move |k, a, b, c| {
                         scalar_lane(fmt, k, a, b, c)
                     }),
+                    Engine::new("host", false, move |k, a, b, c| host(fmt, k, a, b, c)),
                 ];
+                if lanes::packed::supports(fmt) {
+                    engines.push(Engine::new("packed", true, move |k, a, b, c| {
+                        packed_word(fmt, k, a, b, c)
+                    }));
+                }
                 for stream in [StreamKind::UniformBits, StreamKind::Structured] {
                     let report = run_differential(
                         fmt,

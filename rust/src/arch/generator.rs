@@ -117,6 +117,57 @@ impl FpuConfig {
         [Self::dp_cma(), Self::dp_fma(), Self::sp_cma(), Self::sp_fma()]
     }
 
+    /// Transprecision FMA preset for the small formats (FP16 / BF16 /
+    /// FP8): a shallow 3-stage fused pipe (mul 1 + merge + round),
+    /// Booth-2 + Wallace — the short significands (≤ 11 bits) neither
+    /// need deeper multiplier cuts nor amortize the ×3 pre-adder,
+    /// mirroring FPnew's small-format slices.
+    pub fn small_fma(precision: Precision) -> FpuConfig {
+        FpuConfig {
+            precision,
+            kind: FpuKind::Fma,
+            booth: BoothRadix::Booth2,
+            tree: TreeKind::Wallace,
+            stages: 3,
+            mul_pipe: 1,
+            add_pipe: 0,
+            forwarding: true,
+        }
+    }
+
+    /// Transprecision CMA preset (mul 1 + add 1 + round).
+    pub fn small_cma(precision: Precision) -> FpuConfig {
+        FpuConfig {
+            precision,
+            kind: FpuKind::Cma,
+            booth: BoothRadix::Booth2,
+            tree: TreeKind::Wallace,
+            stages: 3,
+            mul_pipe: 1,
+            add_pipe: 1,
+            forwarding: true,
+        }
+    }
+
+    /// The FMA-kind preset for any precision: the Table I unit for
+    /// SP/DP, the transprecision preset otherwise.
+    pub fn fma_of(precision: Precision) -> FpuConfig {
+        match precision {
+            Precision::Single => Self::sp_fma(),
+            Precision::Double => Self::dp_fma(),
+            _ => Self::small_fma(precision),
+        }
+    }
+
+    /// The CMA-kind preset for any precision (see [`FpuConfig::fma_of`]).
+    pub fn cma_of(precision: Precision) -> FpuConfig {
+        match precision {
+            Precision::Single => Self::sp_cma(),
+            Precision::Double => Self::dp_cma(),
+            _ => Self::small_cma(precision),
+        }
+    }
+
     /// Unit name as in Table I ("SP FMA" etc.).
     pub fn name(&self) -> String {
         format!("{} {}", self.precision.name().to_uppercase(), self.kind.name())
@@ -338,6 +389,57 @@ mod tests {
         for cfg in FpuConfig::fpmax_units() {
             cfg.validate().unwrap();
         }
+    }
+
+    #[test]
+    fn small_format_presets_validate_and_compute() {
+        use super::super::rounding::RoundMode;
+        use super::super::softfloat;
+        use crate::util::Rng;
+        for p in [
+            Precision::Half,
+            Precision::Bfloat16,
+            Precision::Fp8E4M3,
+            Precision::Fp8E5M2,
+        ] {
+            let fma_cfg = FpuConfig::fma_of(p);
+            let cma_cfg = FpuConfig::cma_of(p);
+            fma_cfg.validate().unwrap();
+            cma_cfg.validate().unwrap();
+            assert_eq!(fma_cfg.precision, p);
+            assert_eq!(
+                fma_cfg.name(),
+                format!("{} FMA", p.name().to_uppercase())
+            );
+            // Gate units of both kinds match the softfloat spec on raw
+            // uniform patterns (specials included at natural rates).
+            let fma_unit = FpuUnit::generate(&fma_cfg);
+            let cma_unit = FpuUnit::generate(&cma_cfg);
+            let fmt = p.format();
+            assert_eq!(fma_unit.format, fmt);
+            let mut rng = Rng::new(0x5ca1e ^ fmt.sig_bits as u64);
+            for _ in 0..500 {
+                let a = rng.next_u64() & fmt.storage_mask();
+                let b = rng.next_u64() & fmt.storage_mask();
+                let c = rng.next_u64() & fmt.storage_mask();
+                assert_eq!(
+                    fma_unit.fmac(a, b, c).bits,
+                    softfloat::fma(fmt, RoundMode::NearestEven, a, b, c).bits,
+                    "{} fmac({a:#x},{b:#x},{c:#x})",
+                    fma_cfg.name()
+                );
+                let pr = softfloat::mul(fmt, RoundMode::NearestEven, a, b);
+                assert_eq!(
+                    cma_unit.fmac(a, b, c).bits,
+                    softfloat::add(fmt, RoundMode::NearestEven, pr.bits, c).bits,
+                    "{} fmac({a:#x},{b:#x},{c:#x})",
+                    cma_cfg.name()
+                );
+            }
+        }
+        // SP/DP routing through the *_of helpers stays on Table I.
+        assert_eq!(FpuConfig::fma_of(Precision::Single), FpuConfig::sp_fma());
+        assert_eq!(FpuConfig::cma_of(Precision::Double), FpuConfig::dp_cma());
     }
 
     #[test]

@@ -153,6 +153,70 @@ pub fn round(fmt: Format, mode: RoundMode, v: Exact) -> Rounded {
     round_to_format(fmt, mode, v.sign, v.exp, v.sig, v.sticky)
 }
 
+/// Exact conversion of `bits` in `fmt` to the host's `f64`.
+///
+/// Exact for every supported format: each has `sig_bits ≤ 53` and an
+/// exponent range inside binary64's, so every finite value (subnormals
+/// included) is representable — the small formats' host differential
+/// engine leans on this. NaN payloads collapse to the host qNaN (host
+/// engines compare NaNs by class only).
+pub fn to_f64(fmt: Format, bits: u64) -> f64 {
+    if fmt == Format::DP {
+        return f64::from_bits(bits);
+    }
+    if fmt == Format::SP {
+        return f32::from_bits(bits as u32) as f64;
+    }
+    let d = decode(fmt, bits);
+    match d.class {
+        Class::Nan => f64::NAN,
+        Class::Infinity => {
+            if d.sign {
+                f64::NEG_INFINITY
+            } else {
+                f64::INFINITY
+            }
+        }
+        Class::Zero => {
+            if d.sign {
+                -0.0
+            } else {
+                0.0
+            }
+        }
+        _ => {
+            let v = (d.sig as f64) * 2f64.powi(d.exp);
+            if d.sign {
+                -v
+            } else {
+                v
+            }
+        }
+    }
+}
+
+/// Convert a host `f64` into `fmt` under round-to-nearest-even.
+///
+/// This is a genuine (second) rounding: combined with an f64
+/// computation it is still correctly rounded for the small formats by
+/// Figueroa's innocuous-double-rounding theorem (`53 ≥ 2·sig_bits + 2`
+/// holds for FP16/BF16/FP8, so `round_fmt(round_f64(x)) ==
+/// round_fmt(x)` for sums and products of `fmt` values). Overflow goes
+/// to ±Inf and underflow to subnormals/zero exactly as the spec
+/// rounder does.
+pub fn from_f64(fmt: Format, v: f64) -> u64 {
+    if fmt == Format::DP {
+        return v.to_bits();
+    }
+    let d = decode(Format::DP, v.to_bits());
+    match d.class {
+        Class::Nan => fmt.qnan(),
+        Class::Infinity => fmt.inf(d.sign),
+        Class::Zero => fmt.zero(d.sign),
+        _ => round(fmt, RoundMode::NearestEven, Exact::from_decoded(&d)).bits,
+    }
+}
+
 /// Invalid-operation result: canonical qNaN with the invalid flag.
 fn invalid(fmt: Format) -> Rounded {
     Rounded { bits: fmt.qnan(), flags: Flags { invalid: true, ..Flags::default() } }
@@ -804,6 +868,108 @@ pub mod lanes {
             add_tail(fmt, a, c, &da, &dc, special, out);
         }
     }
+
+    /// SIMD-within-a-register packed ops, FPnew style: small-format
+    /// elements packed little-endian into 32-bit words (2×FP16/BF16 or
+    /// 4×FP8 per word), executed by widening each word group into a
+    /// full SoA lane block and re-packing the results. A lane block
+    /// holds `LANES` elements regardless of format, so one block pass
+    /// covers 4 words of FP16/BF16 or 2 words of FP8 — the packing
+    /// multiplies *memory* density per word exactly as FPnew's packed
+    /// lanes do, while the compute stages stay the (already
+    /// format-generic, simd-dispatching) lane kernels. Specials peel
+    /// per element through the same lane-block rules; trailing partial
+    /// word groups pad with +0 lanes, which are inert and never
+    /// written back.
+    pub mod packed {
+        use super::*;
+
+        /// Packed elements per 32-bit word (2 for the 16-bit formats,
+        /// 4 for FP8).
+        pub fn elems_per_word(fmt: Format) -> usize {
+            (32 / fmt.width()) as usize
+        }
+
+        /// True for formats narrow enough to pack (width ≤ 16).
+        pub fn supports(fmt: Format) -> bool {
+            fmt.width() <= 16
+        }
+
+        /// Pack `elems_per_word` raw element bit patterns into one
+        /// word, element 0 in the low bits.
+        pub fn pack_word(fmt: Format, elems: &[u64]) -> u32 {
+            debug_assert_eq!(elems.len(), elems_per_word(fmt));
+            let mut word = 0u32;
+            for (i, &e) in elems.iter().enumerate() {
+                word |= ((e & fmt.storage_mask()) as u32) << (i as u32 * fmt.width());
+            }
+            word
+        }
+
+        /// Unpack one word into `elems_per_word` raw element patterns.
+        pub fn unpack_word(fmt: Format, word: u32, out: &mut [u64]) {
+            debug_assert_eq!(out.len(), elems_per_word(fmt));
+            for (i, o) in out.iter_mut().enumerate() {
+                *o = ((word >> (i as u32 * fmt.width())) as u64) & fmt.storage_mask();
+            }
+        }
+
+        /// Shared word-group driver: unpack up to `LANES` elements'
+        /// worth of words per column, run one lane block, re-pack.
+        #[inline(always)]
+        fn drive(
+            fmt: Format,
+            cols: [&[u32]; 3],
+            out: &mut [u32],
+            block: impl Fn(&[u64; LANES], &[u64; LANES], &[u64; LANES], &mut [u64; LANES]),
+        ) {
+            assert!(supports(fmt), "packed ops need width <= 16, got {}", fmt.width());
+            for col in cols {
+                assert_eq!(col.len(), out.len(), "packed column length mismatch");
+            }
+            let epw = elems_per_word(fmt);
+            let wpb = LANES / epw;
+            let mut i = 0;
+            while i < out.len() {
+                let n = wpb.min(out.len() - i);
+                let mut la = [0u64; LANES];
+                let mut lb = [0u64; LANES];
+                let mut lc = [0u64; LANES];
+                let mut lo = [0u64; LANES];
+                for j in 0..n {
+                    unpack_word(fmt, cols[0][i + j], &mut la[j * epw..(j + 1) * epw]);
+                    unpack_word(fmt, cols[1][i + j], &mut lb[j * epw..(j + 1) * epw]);
+                    unpack_word(fmt, cols[2][i + j], &mut lc[j * epw..(j + 1) * epw]);
+                }
+                block(&la, &lb, &lc, &mut lo);
+                for j in 0..n {
+                    out[i + j] = pack_word(fmt, &lo[j * epw..(j + 1) * epw]);
+                }
+                i += n;
+            }
+        }
+
+        /// Packed fused FMA over word slices: every element computes
+        /// `round(a·b + c)` (RNE).
+        pub fn fma_words(fmt: Format, a: &[u32], b: &[u32], c: &[u32], out: &mut [u32]) {
+            drive(fmt, [a, b, c], out, |la, lb, lc, lo| fma_block_rne(fmt, la, lb, lc, lo));
+        }
+
+        /// Packed cascade FMAC over word slices (two roundings).
+        pub fn cma_words(fmt: Format, a: &[u32], b: &[u32], c: &[u32], out: &mut [u32]) {
+            drive(fmt, [a, b, c], out, |la, lb, lc, lo| cma_block_rne(fmt, la, lb, lc, lo));
+        }
+
+        /// Packed multiply over word slices.
+        pub fn mul_words(fmt: Format, a: &[u32], b: &[u32], out: &mut [u32]) {
+            drive(fmt, [a, b, b], out, |la, lb, _, lo| mul_block_rne(fmt, la, lb, lo));
+        }
+
+        /// Packed add over word slices.
+        pub fn add_words(fmt: Format, a: &[u32], c: &[u32], out: &mut [u32]) {
+            drive(fmt, [a, c, c], out, |la, _, lc, lo| add_block_rne(fmt, la, lc, lo));
+        }
+    }
 }
 
 #[cfg(test)]
@@ -1021,8 +1187,8 @@ mod tests {
         use crate::util::Rng;
         // Raw uniform bit patterns: every class (zero, subnormal, normal,
         // Inf, NaN) appears, so both the fast path and the peel are hit.
-        for fmt in [Format::SP, Format::DP] {
-            let mut rng = Rng::new(0x1a_e5 ^ fmt.exp_bits as u64);
+        for fmt in Format::all() {
+            let mut rng = Rng::new(0x1a_e5 ^ ((fmt.exp_bits as u64) << 8) ^ fmt.sig_bits as u64);
             for _ in 0..500 {
                 let mut a = [0u64; lanes::LANES];
                 let mut b = [0u64; lanes::LANES];
@@ -1082,6 +1248,140 @@ mod tests {
             let p = mul(fmt, RoundMode::NearestEven, a[i], b[i]);
             assert_eq!(out[i], add(fmt, RoundMode::NearestEven, p.bits, c[i]).bits, "lane {i}");
         }
+    }
+
+    #[test]
+    fn f64_conversion_roundtrips_exhaustive_small_formats() {
+        // Every storage pattern of every sub-32-bit format: finite
+        // values must round-trip bit-exact through f64 (the conversions
+        // are exact by construction); NaNs canonicalize to the qNaN.
+        for fmt in [Format::FP16, Format::BF16, Format::FP8E4M3, Format::FP8E5M2] {
+            for bits in 0..=fmt.storage_mask() {
+                let v = to_f64(fmt, bits);
+                let back = from_f64(fmt, v);
+                let d = decode(fmt, bits);
+                match d.class {
+                    Class::Nan => {
+                        assert_eq!(back, fmt.qnan(), "{fmt} NaN {bits:#x}");
+                        assert!(v.is_nan());
+                    }
+                    _ => {
+                        assert_eq!(back, bits, "{fmt} {bits:#x} -> {v:e} -> {back:#x}");
+                    }
+                }
+            }
+        }
+        // FP16/BF16 agree with f32's own narrowing on a spot set (f32 ->
+        // fp16 via f64 is exact-then-round, same as direct rounding).
+        assert_eq!(from_f64(Format::FP16, 1.0), 0x3c00);
+        assert_eq!(from_f64(Format::FP16, 65504.0), 0x7bff); // fp16 max
+        assert_eq!(from_f64(Format::FP16, 65520.0), 0x7c00); // rounds to Inf
+        assert_eq!(from_f64(Format::BF16, 1.0), 0x3f80);
+        assert_eq!(from_f64(Format::FP8E4M3, 1.5), 0x3c);
+        assert_eq!(from_f64(Format::FP8E5M2, -2.0), 0xc0);
+        assert_eq!(from_f64(Format::FP16, 1e-30), 0); // underflow to zero
+    }
+
+    #[test]
+    fn packed_word_roundtrip_and_layout() {
+        use super::lanes::packed;
+        // FP16: 2 elements per word, element 0 in the low half.
+        assert_eq!(packed::elems_per_word(Format::FP16), 2);
+        assert_eq!(packed::elems_per_word(Format::BF16), 2);
+        assert_eq!(packed::elems_per_word(Format::FP8E4M3), 4);
+        assert_eq!(packed::elems_per_word(Format::FP8E5M2), 4);
+        assert!(!packed::supports(Format::SP));
+        assert!(!packed::supports(Format::DP));
+        let w = packed::pack_word(Format::FP16, &[0x3c00, 0xc000]);
+        assert_eq!(w, 0xc000_3c00);
+        let mut out = [0u64; 2];
+        packed::unpack_word(Format::FP16, w, &mut out);
+        assert_eq!(out, [0x3c00, 0xc000]);
+        let w = packed::pack_word(Format::FP8E4M3, &[0x01, 0x02, 0x03, 0x80]);
+        assert_eq!(w, 0x8003_0201);
+        let mut out = [0u64; 4];
+        packed::unpack_word(Format::FP8E4M3, w, &mut out);
+        assert_eq!(out, [0x01, 0x02, 0x03, 0x80]);
+    }
+
+    #[test]
+    fn packed_ops_match_scalar_spec_randomized() {
+        use super::lanes::packed;
+        use crate::util::Rng;
+        // Random words (hence random element classes — specials land at
+        // their natural rates and exercise the peel), with slice lengths
+        // that cover both full word groups and the padded tail.
+        for fmt in [Format::FP16, Format::BF16, Format::FP8E4M3, Format::FP8E5M2] {
+            let epw = packed::elems_per_word(fmt);
+            let mut rng = Rng::new(0x9ac_ed ^ fmt.sig_bits as u64);
+            for words in [1usize, 2, 3, 7, 16] {
+                let gen_col = |rng: &mut Rng| -> Vec<u32> {
+                    (0..words).map(|_| rng.next_u64() as u32).collect()
+                };
+                let a = gen_col(&mut rng);
+                let b = gen_col(&mut rng);
+                let c = gen_col(&mut rng);
+                let mut out = vec![0u32; words];
+                let unpack_all = |col: &[u32]| -> Vec<u64> {
+                    let mut v = vec![0u64; words * epw];
+                    for (i, &w) in col.iter().enumerate() {
+                        packed::unpack_word(fmt, w, &mut v[i * epw..(i + 1) * epw]);
+                    }
+                    v
+                };
+                let (ea, eb, ec) = (unpack_all(&a), unpack_all(&b), unpack_all(&c));
+
+                packed::fma_words(fmt, &a, &b, &c, &mut out);
+                let eo = unpack_all(&out);
+                for i in 0..words * epw {
+                    let want = fma(fmt, RoundMode::NearestEven, ea[i], eb[i], ec[i]).bits;
+                    assert_eq!(eo[i], want, "{fmt} packed fma elem {i}");
+                }
+
+                packed::cma_words(fmt, &a, &b, &c, &mut out);
+                let eo = unpack_all(&out);
+                for i in 0..words * epw {
+                    let p = mul(fmt, RoundMode::NearestEven, ea[i], eb[i]);
+                    let want = add(fmt, RoundMode::NearestEven, p.bits, ec[i]).bits;
+                    assert_eq!(eo[i], want, "{fmt} packed cma elem {i}");
+                }
+
+                packed::mul_words(fmt, &a, &b, &mut out);
+                let eo = unpack_all(&out);
+                for i in 0..words * epw {
+                    let want = mul(fmt, RoundMode::NearestEven, ea[i], eb[i]).bits;
+                    assert_eq!(eo[i], want, "{fmt} packed mul elem {i}");
+                }
+
+                packed::add_words(fmt, &a, &c, &mut out);
+                let eo = unpack_all(&out);
+                for i in 0..words * epw {
+                    let want = add(fmt, RoundMode::NearestEven, ea[i], ec[i]).bits;
+                    assert_eq!(eo[i], want, "{fmt} packed add elem {i}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn fp8_saturation_and_small_format_overflow() {
+        // FP8 E4M3 max is 240 under the IEEE-interchange convention this
+        // stack uses (exp all-ones reserved for Inf/NaN, unlike OCP's
+        // 448-max variant): 240·2 rounds to +Inf under RNE, never to
+        // max-finite.
+        let fmt = Format::FP8E4M3;
+        let max = fmt.max_finite(false);
+        assert_eq!(to_f64(fmt, max), 240.0);
+        let two = from_f64(fmt, 2.0);
+        let r = mul(fmt, RoundMode::NearestEven, max, two);
+        assert_eq!(r.bits, fmt.inf(false));
+        assert!(r.flags.overflow);
+        // ...but toward-zero saturates at max-finite.
+        let r = mul(fmt, RoundMode::TowardZero, max, two);
+        assert_eq!(r.bits, max);
+        // E5M2: max is 57344; adding half an ulp of max stays put (RNE).
+        let fmt = Format::FP8E5M2;
+        assert_eq!(to_f64(fmt, fmt.max_finite(false)), 57344.0);
     }
 
     #[test]

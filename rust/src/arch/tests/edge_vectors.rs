@@ -15,7 +15,7 @@
 
 use crate::arch::engine::{Datapath, Fidelity, UnitDatapath};
 use crate::arch::generator::{FpuConfig, FpuKind};
-use crate::arch::Precision;
+use crate::arch::{softfloat, Precision};
 
 /// Build an f32 bit pattern from an integer hex significand and a power
 /// of two: `(-1)^neg · mant · 2^exp`. Rust has no hex-float literals, so
@@ -141,6 +141,20 @@ fn preset_reference(cfg: &FpuConfig, a: u32, b: u32, c: u32) -> u64 {
             (fa as f64).mul_add(fb as f64, fc as f64).to_bits()
         }
         (Precision::Double, FpuKind::Cma) => ((fa as f64) * (fb as f64) + (fc as f64)).to_bits(),
+        // Small formats: the unit consumes the *narrowed* operands (see
+        // `widen`), so the reference narrows first, computes exactly in
+        // f64 (products of ≤11-bit significands are exact), and narrows
+        // the result — the same double-rounding-innocuous host path the
+        // fuzz harness uses.
+        (_, kind) => {
+            let fmt = cfg.precision.format();
+            let nf = |x: f64| softfloat::to_f64(fmt, softfloat::from_f64(fmt, x));
+            let (a, b, c) = (nf(fa as f64), nf(fb as f64), nf(fc as f64));
+            match kind {
+                FpuKind::Fma => softfloat::from_f64(fmt, a.mul_add(b, c)),
+                FpuKind::Cma => softfloat::from_f64(fmt, nf(a * b) + c),
+            }
+        }
     }
 }
 
@@ -149,6 +163,9 @@ fn widen(cfg: &FpuConfig, bits: u32) -> u64 {
     match cfg.precision {
         Precision::Single => bits as u64,
         Precision::Double => (f32::from_bits(bits) as f64).to_bits(),
+        // Small formats narrow (round-to-nearest-even) — lossy, which is
+        // fine: the reference consumes the identical narrowed operands.
+        _ => softfloat::from_f64(cfg.precision.format(), f32::from_bits(bits) as f64),
     }
 }
 

@@ -5,5 +5,10 @@
 //!   (±0, ±Inf, NaN propagation, subnormals, and the six x86_64
 //!   regression cases), executed through all four Table I presets at
 //!   both engine fidelity tiers.
+//! * [`small_formats`] — hand-built transprecision edge vectors
+//!   (subnormal-heavy, NaN-payload, near-overflow, FP8 saturation)
+//!   through the scalar spec, the SoA lane blocks, and the packed-SWAR
+//!   word ops for FP16/BF16/FP8.
 
 mod edge_vectors;
+mod small_formats;

@@ -1,0 +1,270 @@
+//! Hand-built edge vectors for the transprecision tiers (FP16, BF16,
+//! FP8 E4M3/E5M2): subnormal-heavy operands, NaN payloads, near-overflow
+//! rounding, and FP8 saturation — the regions where narrow formats
+//! diverge hardest from the SP/DP intuitions the original vector suite
+//! encodes.
+//!
+//! Every vector runs through three independent implementations of the
+//! same format semantics: the scalar softfloat spec (plus the generated
+//! unit datapaths at all three fidelity tiers), the SoA lane-block batch
+//! path, and the packed-SWAR word entry point. Expectations are stated
+//! as explicit bit patterns built from `Format`'s structural constants —
+//! never computed by the code under test.
+
+use crate::arch::engine::{Datapath, Fidelity, UnitDatapath};
+use crate::arch::generator::FpuConfig;
+use crate::arch::rounding::RoundMode;
+use crate::arch::softfloat::{self, lanes};
+use crate::arch::{decode, Class, Format, Precision};
+use crate::workloads::throughput::OperandTriple;
+
+/// The four small-format tiers.
+const SMALL: [Precision; 4] =
+    [Precision::Half, Precision::Bfloat16, Precision::Fp8E4M3, Precision::Fp8E5M2];
+
+/// Encode `v` in `fmt`, asserting exact representability so a vector
+/// transcription slip cannot pass silently.
+fn bits_of(fmt: Format, v: f64) -> u64 {
+    let bits = softfloat::from_f64(fmt, v);
+    assert_eq!(softfloat::to_f64(fmt, bits), v, "{v} is not exact in {fmt}");
+    bits
+}
+
+/// What a vector demands of the result.
+#[derive(Clone, Copy)]
+enum Want {
+    /// Exact bit pattern.
+    Bits(u64),
+    /// Any NaN encoding.
+    Nan,
+}
+
+struct Vector {
+    a: u64,
+    b: u64,
+    c: u64,
+    want: Want,
+    label: &'static str,
+}
+
+/// The format-generic edge set: each entry is exactly representable (and
+/// meaningful) in all four small formats.
+fn edge_vectors(fmt: Format) -> Vec<Vector> {
+    let one = bits_of(fmt, 1.0);
+    let two = bits_of(fmt, 2.0);
+    let half = bits_of(fmt, 0.5);
+    let max = fmt.max_finite(false);
+    let sub1 = 1u64; // smallest positive subnormal: 2^qmin
+    let min_normal = bits_of(fmt, 2f64.powi(fmt.emin()));
+    let v = |a, b, c, want, label| Vector { a, b, c, want, label };
+    vec![
+        // Near-overflow and saturation to infinity.
+        v(max, two, fmt.zero(false), Want::Bits(fmt.inf(false)), "max*2 overflows to +Inf"),
+        v(max, one, max, Want::Bits(fmt.inf(false)), "max+max overflows to +Inf"),
+        v(max, one, fmt.zero(false), Want::Bits(max), "max*1 stays exactly max"),
+        v(
+            fmt.max_finite(true),
+            two,
+            fmt.zero(false),
+            Want::Bits(fmt.inf(true)),
+            "-max*2 overflows to -Inf",
+        ),
+        // Subnormal-heavy arithmetic at the bottom of the range.
+        v(sub1, one, sub1, Want::Bits(2), "sub1+sub1 doubles exactly (still subnormal)"),
+        v(sub1, sub1, fmt.zero(false), Want::Bits(fmt.zero(false)), "sub1^2 underflows to +0"),
+        v(sub1, sub1, sub1, Want::Bits(sub1), "sub1^2 is RNE-sticky against sub1"),
+        v(
+            min_normal,
+            half,
+            fmt.zero(false),
+            Want::Bits(bits_of(fmt, 2f64.powi(fmt.emin() - 1))),
+            "min_normal/2 lands exactly subnormal",
+        ),
+        // NaN payloads and invalid operations.
+        v(fmt.qnan() | 1, one, fmt.zero(false), Want::Nan, "NaN payload propagates as NaN"),
+        v(fmt.inf(false), fmt.zero(false), one, Want::Nan, "Inf*0 is invalid"),
+        v(fmt.inf(false), one, fmt.inf(true), Want::Nan, "Inf-Inf is invalid"),
+        v(fmt.inf(false), one, fmt.zero(false), Want::Bits(fmt.inf(false)), "Inf propagates"),
+        // Zero sign rules under RNE.
+        v(
+            fmt.zero(false),
+            fmt.zero(true),
+            fmt.zero(false),
+            Want::Bits(fmt.zero(false)),
+            "(+0)*(-0)+(+0) is +0 under RNE",
+        ),
+    ]
+}
+
+fn check(fmt: Format, got: u64, want: Want, ctx: &str, label: &str) {
+    match want {
+        Want::Bits(bits) => assert_eq!(got, bits, "{ctx}: {label} (got {got:#x})"),
+        Want::Nan => assert_eq!(
+            decode(fmt, got).class,
+            Class::Nan,
+            "{ctx}: {label} (got {got:#x}, expected any NaN)"
+        ),
+    }
+}
+
+#[test]
+fn small_format_edge_vectors_scalar_spec_and_all_tiers() {
+    for precision in SMALL {
+        let fmt = precision.format();
+        let cfg = FpuConfig::fma_of(precision);
+        let tiers: Vec<(Fidelity, UnitDatapath)> =
+            [Fidelity::GateLevel, Fidelity::WordLevel, Fidelity::WordSimd]
+                .into_iter()
+                .map(|f| (f, UnitDatapath::generate(&cfg, f)))
+                .collect();
+        for vec in edge_vectors(fmt) {
+            // The scalar softfloat spec is the root reference.
+            let spec = softfloat::fma(fmt, RoundMode::NearestEven, vec.a, vec.b, vec.c).bits;
+            check(fmt, spec, vec.want, &format!("{fmt} scalar spec"), vec.label);
+            // Every fidelity tier of the generated FMA unit agrees.
+            for (fidelity, dp) in &tiers {
+                let got = dp.fmac_one(vec.a, vec.b, vec.c);
+                check(fmt, got, vec.want, &format!("{fmt} {fidelity:?}"), vec.label);
+            }
+        }
+    }
+}
+
+#[test]
+fn small_format_edge_vectors_through_lane_batch() {
+    // The SoA lane blocks only run on the batch path; push the whole
+    // set through `fmac_batch` per format (specials peel in-block, the
+    // tail exercises the sub-block remainder).
+    for precision in SMALL {
+        let fmt = precision.format();
+        let dp = UnitDatapath::generate(&FpuConfig::fma_of(precision), Fidelity::WordSimd);
+        let vectors = edge_vectors(fmt);
+        let triples: Vec<OperandTriple> =
+            vectors.iter().map(|v| OperandTriple { a: v.a, b: v.b, c: v.c }).collect();
+        let mut out = vec![0u64; triples.len()];
+        dp.fmac_batch(&triples, &mut out);
+        for (got, vec) in out.iter().zip(&vectors) {
+            check(fmt, *got, vec.want, &format!("{fmt} lane batch"), vec.label);
+        }
+    }
+}
+
+#[test]
+fn small_format_edge_vectors_through_packed_words() {
+    // The packed-SWAR entry point: pack the edge set 2-or-4-per-word
+    // (padding the tail with inert +0 triples), run `fma_words`, unpack,
+    // and hold every real slot to the same expectations.
+    for precision in SMALL {
+        let fmt = precision.format();
+        assert!(lanes::packed::supports(fmt), "{fmt}");
+        let epw = lanes::packed::elems_per_word(fmt);
+        let vectors = edge_vectors(fmt);
+        let mut padded: Vec<(u64, u64, u64)> =
+            vectors.iter().map(|v| (v.a, v.b, v.c)).collect();
+        while padded.len() % epw != 0 {
+            padded.push((0, 0, 0));
+        }
+        let words = padded.len() / epw;
+        let (mut aw, mut bw, mut cw) = (Vec::new(), Vec::new(), Vec::new());
+        let mut buf = vec![0u64; epw];
+        for ch in padded.chunks(epw) {
+            for (sel, dst) in [(0usize, &mut aw), (1, &mut bw), (2, &mut cw)] {
+                for (i, t) in ch.iter().enumerate() {
+                    buf[i] = match sel {
+                        0 => t.0,
+                        1 => t.1,
+                        _ => t.2,
+                    };
+                }
+                dst.push(lanes::packed::pack_word(fmt, &buf));
+            }
+        }
+        let mut ow = vec![0u32; words];
+        lanes::packed::fma_words(fmt, &aw, &bw, &cw, &mut ow);
+        let mut elems = vec![0u64; epw];
+        for (wi, &word) in ow.iter().enumerate() {
+            lanes::packed::unpack_word(fmt, word, &mut elems);
+            for (ei, &got) in elems.iter().enumerate() {
+                let slot = wi * epw + ei;
+                if slot >= vectors.len() {
+                    assert_eq!(got, 0, "{fmt}: pad slot {slot} must stay +0");
+                    continue;
+                }
+                let vec = &vectors[slot];
+                check(fmt, got, vec.want, &format!("{fmt} packed slot {slot}"), vec.label);
+            }
+        }
+    }
+}
+
+#[test]
+fn small_format_cma_cascade_matches_two_step_scalar() {
+    // The CMA presets must take the cascade (two-rounding) result on
+    // every edge vector, at every tier and through the packed cascade
+    // entry point — the reference is the literal mul-then-add scalar
+    // composition.
+    for precision in SMALL {
+        let fmt = precision.format();
+        let cfg = FpuConfig::cma_of(precision);
+        let tiers: Vec<(Fidelity, UnitDatapath)> =
+            [Fidelity::GateLevel, Fidelity::WordLevel, Fidelity::WordSimd]
+                .into_iter()
+                .map(|f| (f, UnitDatapath::generate(&cfg, f)))
+                .collect();
+        for vec in edge_vectors(fmt) {
+            let p = softfloat::mul(fmt, RoundMode::NearestEven, vec.a, vec.b).bits;
+            let want = softfloat::add(fmt, RoundMode::NearestEven, p, vec.c).bits;
+            for (fidelity, dp) in &tiers {
+                assert_eq!(
+                    dp.fmac_one(vec.a, vec.b, vec.c),
+                    want,
+                    "{fmt} {fidelity:?}: {}",
+                    vec.label
+                );
+            }
+            let epw = lanes::packed::elems_per_word(fmt);
+            let mut col = vec![0u64; epw];
+            let mk = |x: u64, col: &mut Vec<u64>| {
+                col.fill(x);
+                lanes::packed::pack_word(fmt, col)
+            };
+            let (aw, bw, cw) =
+                ([mk(vec.a, &mut col)], [mk(vec.b, &mut col)], [mk(vec.c, &mut col)]);
+            let mut ow = [0u32; 1];
+            lanes::packed::cma_words(fmt, &aw, &bw, &cw, &mut ow);
+            let mut elems = vec![0u64; epw];
+            lanes::packed::unpack_word(fmt, ow[0], &mut elems);
+            for (ei, &got) in elems.iter().enumerate() {
+                assert_eq!(got, want, "{fmt} packed cascade lane {ei}: {}", vec.label);
+            }
+        }
+    }
+}
+
+#[test]
+fn fp8_e4m3_saturation_discriminates_round_from_overflow() {
+    // FP8 E4M3's top binade has spacing 16: 15*15 = 225 must *round*
+    // (down to 224, still finite), while 16*16 = 256 crosses the
+    // max+half-spacing threshold (248) and saturates to +Inf. Both via
+    // the scalar spec and the packed words — this is the saturation
+    // boundary OCP E4M3 moves and our IEEE-interchange variant keeps.
+    let fmt = Format::FP8E4M3;
+    let fifteen = bits_of(fmt, 15.0);
+    let sixteen = bits_of(fmt, 16.0);
+    let z = fmt.zero(false);
+    let round_want = bits_of(fmt, 224.0);
+    let rne = RoundMode::NearestEven;
+    assert_eq!(softfloat::fma(fmt, rne, fifteen, fifteen, z).bits, round_want);
+    assert_eq!(softfloat::fma(fmt, rne, sixteen, sixteen, z).bits, fmt.inf(false));
+    // 240 (max) is representable and must come back exactly.
+    assert_eq!(softfloat::fma(fmt, rne, sixteen, fifteen, z).bits, fmt.max_finite(false));
+    let pack1 = |x: u64| [lanes::packed::pack_word(fmt, &[x, x, x, x])];
+    let mut ow = [0u32; 1];
+    lanes::packed::fma_words(fmt, &pack1(fifteen), &pack1(fifteen), &pack1(z), &mut ow);
+    let mut elems = [0u64; 4];
+    lanes::packed::unpack_word(fmt, ow[0], &mut elems);
+    assert_eq!(elems, [round_want; 4], "packed saturation rounding");
+    lanes::packed::fma_words(fmt, &pack1(sixteen), &pack1(sixteen), &pack1(z), &mut ow);
+    lanes::packed::unpack_word(fmt, ow[0], &mut elems);
+    assert_eq!(elems, [fmt.inf(false); 4], "packed overflow to Inf");
+}

@@ -129,6 +129,7 @@ impl FpMaxChip {
             let one = match unit.config.precision {
                 Precision::Single => 1.0f32.to_bits() as u64,
                 Precision::Double => 1.0f64.to_bits(),
+                p => crate::arch::softfloat::from_f64(p.format(), 1.0),
             };
             let mut forward: u64 = 0;
             // Per-op issue distance: 1 from RAM, or the bypass tap when an

@@ -743,7 +743,7 @@ pub struct ReplayReport {
     /// The replay clock's final value.
     pub last_slot: u64,
     /// Per-class submitted ops in [`WorkloadClass::index`] order.
-    pub class_ops: [u64; 4],
+    pub class_ops: [u64; WorkloadClass::COUNT],
     pub producer: ProducerStats,
     pub faults_planned: usize,
     pub faults_fired: usize,
@@ -810,7 +810,7 @@ impl ReplayReport {
 /// timing, not identity.
 fn replay_digest(
     trace_fingerprint: u64,
-    class_ops: &[u64; 4],
+    class_ops: &[u64; WorkloadClass::COUNT],
     p: &ProducerStats,
     results_in_digest: bool,
 ) -> u64 {

@@ -124,10 +124,7 @@ fn blowups_at_min_energy(
 /// Compute the figure for one precision.
 pub fn compute(precision: Precision) -> Fig4 {
     let tech = Technology::fdsoi28();
-    let cfg = match precision {
-        Precision::Single => FpuConfig::sp_cma(),
-        Precision::Double => FpuConfig::dp_cma(),
-    };
+    let cfg = FpuConfig::cma_of(precision);
     let unit = FpuUnit::generate(&cfg);
     let cpo = cycles_per_op(&unit);
     let total = 1_000_000;
@@ -224,10 +221,7 @@ fn curve_trace(
 pub fn compute_measured(precision: Precision, window_slots: u64, total: u64) -> Fig4Measured {
     assert!(total >= 100_000, "need at least one 10%-duty period");
     let tech = Technology::fdsoi28();
-    let cfg = match precision {
-        Precision::Single => FpuConfig::sp_cma(),
-        Precision::Double => FpuConfig::dp_cma(),
-    };
+    let cfg = FpuConfig::cma_of(precision);
     let unit = FpuUnit::generate(&cfg);
     let word = WordUnit::of(&unit);
     let cpo = cycles_per_op(&unit);
@@ -292,6 +286,7 @@ pub fn print_measured(f: &Fig4Measured) {
     let which = match f.precision {
         Precision::Single => "SP",
         Precision::Double => "DP",
+        _ => f.precision.name(),
     };
     println!(
         "\nFIG 4 (measured traces) — {which} CMA, {}-slot windows, low-trace occupancy {:.1}%\n",
@@ -358,6 +353,7 @@ pub fn print(f: &Fig4) {
     let which = match f.precision {
         Precision::Single => "SP",
         Precision::Double => "DP",
+        _ => f.precision.name(),
     };
     println!("\nFIG 4 — {which} CMA latency tradeoffs (energy/op vs benchmarked delay)\n");
     let mut t = TextTable::new(vec!["curve", "V_DD", "delay ns", "pJ/op"]);

@@ -1,0 +1,204 @@
+//! Energy proportionality across the transprecision format fleet.
+//!
+//! The paper's Table I covers the four fabricated SP/DP units; this
+//! emitter extends the same structural model down the format ladder
+//! (FP16, bfloat16, FP8) and reports the pJ/op-vs-format curve at each
+//! unit's nominal operating point. Everything is derived from the same
+//! calibrated component model — no new fitted constants — so the curve
+//! is a genuine prediction of how the generator's datapaths scale as
+//! the significand and exponent buses narrow.
+
+use crate::arch::fp::Precision;
+use crate::arch::generator::{FpuConfig, FpuKind, FpuUnit};
+use crate::energy::components::unit_cost;
+use crate::energy::power::evaluate;
+use crate::energy::tech::Technology;
+use crate::timing::nominal_op;
+
+use super::TextTable;
+
+/// One (format, kind) point on the energy-proportionality curve.
+#[derive(Debug, Clone)]
+pub struct FormatPoint {
+    pub precision: Precision,
+    pub kind: FpuKind,
+    /// Storage width in bits.
+    pub width: u32,
+    pub area_mm2: f64,
+    pub vdd: f64,
+    pub freq_ghz: f64,
+    /// Dynamic + leakage energy per op at full utilization.
+    pub pj_per_op: f64,
+    pub gflops_per_w: f64,
+    pub gflops_per_mm2: f64,
+}
+
+impl FormatPoint {
+    /// The canonical preset name, e.g. `fp16_fma` (matches the CLI's
+    /// `--unit` spelling).
+    pub fn unit_name(&self) -> String {
+        format!("{}_{}", self.precision.name(), self.kind.name().to_lowercase())
+    }
+}
+
+/// Compute the curve: every format × both unit kinds, widest first
+/// within each kind grouping (`Precision::ALL` order).
+pub fn compute() -> Vec<FormatPoint> {
+    let tech = Technology::fdsoi28();
+    let mut out = Vec::new();
+    for precision in Precision::ALL {
+        for kind in [FpuKind::Fma, FpuKind::Cma] {
+            let cfg = match kind {
+                FpuKind::Fma => FpuConfig::fma_of(precision),
+                FpuKind::Cma => FpuConfig::cma_of(precision),
+            };
+            let unit = FpuUnit::generate(&cfg);
+            let op = nominal_op(&cfg);
+            let eff = evaluate(&unit, &tech, op, 1.0).expect("nominal point operable");
+            let cost = unit_cost(&unit);
+            out.push(FormatPoint {
+                precision,
+                kind,
+                width: precision.format().width(),
+                area_mm2: cost.area_mm2,
+                vdd: op.vdd,
+                freq_ghz: eff.freq_ghz,
+                // FMAC = 2 FLOPs: pJ/op is twice pJ/FLOP.
+                pj_per_op: 2.0 * eff.pj_per_flop,
+                gflops_per_w: eff.gflops_per_w,
+                gflops_per_mm2: eff.gflops_per_mm2,
+            });
+        }
+    }
+    out
+}
+
+/// Print the curve as a table plus the headline proportionality ratios.
+pub fn print(points: &[FormatPoint]) {
+    println!("\nFORMAT FLEET — energy proportionality at nominal operating points\n");
+    let mut t = TextTable::new(vec![
+        "unit", "bits", "area mm²", "V_DD", "f GHz", "pJ/op", "GFLOPS/W", "GFLOPS/mm²",
+    ]);
+    for p in points {
+        t.row(vec![
+            p.unit_name(),
+            p.width.to_string(),
+            format!("{:.5}", p.area_mm2),
+            format!("{:.1}", p.vdd),
+            format!("{:.2}", p.freq_ghz),
+            format!("{:.3}", p.pj_per_op),
+            format!("{:.0}", p.gflops_per_w),
+            format!("{:.0}", p.gflops_per_mm2),
+        ]);
+    }
+    t.print();
+    let pj = |prec: Precision, kind: FpuKind| {
+        points
+            .iter()
+            .find(|p| p.precision == prec && p.kind == kind)
+            .map(|p| p.pj_per_op)
+            .unwrap_or(f64::NAN)
+    };
+    for kind in [FpuKind::Fma, FpuKind::Cma] {
+        println!(
+            "{}: DP/SP {:.1}×  SP/FP16 {:.1}×  FP16/FP8e4m3 {:.1}×",
+            kind.name(),
+            pj(Precision::Double, kind) / pj(Precision::Single, kind),
+            pj(Precision::Single, kind) / pj(Precision::Half, kind),
+            pj(Precision::Half, kind) / pj(Precision::Fp8E4M3, kind),
+        );
+    }
+}
+
+/// Render the curve as the `bench: "formats"`-style JSON fragment the
+/// CI checker re-derives the proportionality verdict from.
+pub fn render_json(points: &[FormatPoint]) -> String {
+    let mut s = String::from("  \"energy_curve\": [\n");
+    for (i, p) in points.iter().enumerate() {
+        s.push_str(&format!(
+            "    {{\"unit\": \"{}\", \"format\": \"{}\", \"kind\": \"{}\", \"bits\": {}, \
+             \"area_mm2\": {:.6}, \"vdd\": {:.2}, \"freq_ghz\": {:.4}, \"pj_per_op\": {:.6}, \
+             \"gflops_per_w\": {:.2}, \"gflops_per_mm2\": {:.2}}}{}\n",
+            p.unit_name(),
+            p.precision.name(),
+            p.kind.name(),
+            p.width,
+            p.area_mm2,
+            p.vdd,
+            p.freq_ghz,
+            p.pj_per_op,
+            p.gflops_per_w,
+            p.gflops_per_mm2,
+            if i + 1 == points.len() { "" } else { "," }
+        ));
+    }
+    s.push_str("  ]");
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn curve_covers_every_format_and_kind() {
+        let pts = compute();
+        assert_eq!(pts.len(), Precision::ALL.len() * 2);
+        for precision in Precision::ALL {
+            for kind in [FpuKind::Fma, FpuKind::Cma] {
+                let p = pts
+                    .iter()
+                    .find(|p| p.precision == precision && p.kind == kind)
+                    .unwrap_or_else(|| panic!("missing {precision:?} {kind:?}"));
+                assert!(p.pj_per_op.is_finite() && p.pj_per_op > 0.0, "{}", p.unit_name());
+                assert!(p.area_mm2 > 0.0 && p.freq_ghz > 0.0, "{}", p.unit_name());
+            }
+        }
+    }
+
+    #[test]
+    fn energy_scales_down_the_format_ladder() {
+        // The proportionality property the fleet exists for: within a
+        // kind, narrower formats cost strictly less energy per op (and
+        // area), ordered DP > SP > {FP16, BF16} > {FP8e4m3, FP8e5m2}.
+        let pts = compute();
+        let get = |prec: Precision, kind: FpuKind| {
+            pts.iter().find(|p| p.precision == prec && p.kind == kind).unwrap()
+        };
+        for kind in [FpuKind::Fma, FpuKind::Cma] {
+            let dp = get(Precision::Double, kind);
+            let sp = get(Precision::Single, kind);
+            for half in [Precision::Half, Precision::Bfloat16] {
+                let h = get(half, kind);
+                assert!(sp.pj_per_op > h.pj_per_op, "SP vs {}", h.unit_name());
+                assert!(sp.area_mm2 > h.area_mm2, "SP vs {}", h.unit_name());
+                for fp8 in [Precision::Fp8E4M3, Precision::Fp8E5M2] {
+                    let e = get(fp8, kind);
+                    assert!(h.pj_per_op > e.pj_per_op, "{} vs {}", h.unit_name(), e.unit_name());
+                    assert!(h.area_mm2 > e.area_mm2, "{} vs {}", h.unit_name(), e.unit_name());
+                }
+            }
+            assert!(dp.pj_per_op > sp.pj_per_op, "{}", kind.name());
+        }
+    }
+
+    #[test]
+    fn json_fragment_lists_every_unit_once() {
+        let pts = compute();
+        let json = render_json(&pts);
+        for p in &pts {
+            assert_eq!(
+                json.matches(&format!("\"unit\": \"{}\"", p.unit_name())).count(),
+                1,
+                "{}",
+                p.unit_name()
+            );
+        }
+        assert!(json.contains("\"pj_per_op\""));
+    }
+
+    #[test]
+    fn print_smoke() {
+        print(&compute());
+    }
+}

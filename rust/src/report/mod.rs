@@ -6,6 +6,7 @@
 pub mod fig2c;
 pub mod fig3;
 pub mod fig4;
+pub mod formats;
 pub mod table1;
 pub mod table2;
 

@@ -66,10 +66,13 @@ pub struct FmacOutput {
 /// `u32[4096]` / `u64[4096]`. (Public so the pure parsing logic stays
 /// testable — and tested — without the PJRT plugin.)
 pub fn parse_batch(hlo_text: &str, precision: crate::arch::fp::Precision) -> Option<usize> {
-    use crate::arch::fp::Precision;
-    let needle = match precision {
-        Precision::Single => "u32[",
-        Precision::Double => "u64[",
+    // Needle follows the storage width, so the parser extends to any
+    // interchange format an artifact pipeline might emit.
+    let needle = match precision.format().width() {
+        64 => "u64[",
+        32 => "u32[",
+        16 => "u16[",
+        _ => "u8[",
     };
     let pos = hlo_text.find(needle)?;
     let rest = &hlo_text[pos + needle.len()..];

@@ -79,25 +79,25 @@ impl FmacArtifact {
 
     fn run_chunk(&self, a: &[u64], b: &[u64], c: &[u64]) -> crate::Result<(Vec<u64>, u64)> {
         let (la, lb, lc) = match self.precision {
-            Precision::Single => {
-                (lit_u32(a, self.batch), lit_u32(b, self.batch), lit_u32(c, self.batch))
-            }
             Precision::Double => {
                 (lit_u64(a, self.batch), lit_u64(b, self.batch), lit_u64(c, self.batch))
             }
+            // Sub-64-bit storage rides in u32 literals (aot.py emits
+            // u32 operand tensors for every non-DP format).
+            _ => (lit_u32(a, self.batch), lit_u32(b, self.batch), lit_u32(c, self.batch)),
         };
         let result = self.exe.execute::<xla::Literal>(&[la, lb, lc]).map_err(wrap)?;
         let out = result[0][0].to_literal_sync().map_err(wrap)?;
         // aot.py lowers with return_tuple=True: (results, toggles).
         let (bits_lit, tog_lit) = out.to_tuple2().map_err(wrap)?;
         let bits = match self.precision {
-            Precision::Single => bits_lit
+            Precision::Double => bits_lit.to_vec::<u64>().map_err(wrap)?,
+            _ => bits_lit
                 .to_vec::<u32>()
                 .map_err(wrap)?
                 .into_iter()
                 .map(|v| v as u64)
                 .collect(),
-            Precision::Double => bits_lit.to_vec::<u64>().map_err(wrap)?,
         };
         let toggles = tog_lit.to_vec::<u64>().map_err(wrap)?;
         Ok((bits, toggles.first().copied().unwrap_or(0)))

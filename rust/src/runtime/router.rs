@@ -152,7 +152,9 @@ impl ServiceClass {
 }
 
 /// The workload taxonomy a submission declares: precision × service
-/// class. Four classes cover the paper's four fabricated units.
+/// class. The four SP/DP classes cover the paper's four fabricated
+/// units; the transprecision tiers (FP16/BF16/FP8) extend the same
+/// taxonomy to the full format fleet.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub struct WorkloadClass {
     pub precision: Precision,
@@ -160,7 +162,8 @@ pub struct WorkloadClass {
 }
 
 impl WorkloadClass {
-    /// All four classes, in [`WorkloadClass::index`] order.
+    /// The four fabricated-unit classes, in [`WorkloadClass::index`]
+    /// order — the default Table-1 fleet's taxonomy (SP/DP only).
     pub const ALL: [WorkloadClass; 4] = [
         WorkloadClass { precision: Precision::Single, service: ServiceClass::Latency },
         WorkloadClass { precision: Precision::Single, service: ServiceClass::Bulk },
@@ -168,11 +171,30 @@ impl WorkloadClass {
         WorkloadClass { precision: Precision::Double, service: ServiceClass::Bulk },
     ];
 
-    /// Dense index in `0..4` (histogram axis).
+    /// Total distinct classes (every precision × both service classes).
+    /// Histogram/count arrays are sized by this; the first four indices
+    /// are the SP/DP classes of [`WorkloadClass::ALL`], unchanged.
+    pub const COUNT: usize = Precision::ALL.len() * 2;
+
+    /// Every class across the full format fleet, in index order.
+    pub fn all_formats() -> [WorkloadClass; WorkloadClass::COUNT] {
+        let mut out = [WorkloadClass::ALL[0]; WorkloadClass::COUNT];
+        for (i, p) in Precision::ALL.into_iter().enumerate() {
+            out[2 * i] = WorkloadClass { precision: p, service: ServiceClass::Latency };
+            out[2 * i + 1] = WorkloadClass { precision: p, service: ServiceClass::Bulk };
+        }
+        out
+    }
+
+    /// Dense index in `0..COUNT` (histogram axis); SP/DP keep 0..4.
     pub fn index(self) -> usize {
         let p = match self.precision {
             Precision::Single => 0,
             Precision::Double => 1,
+            Precision::Half => 2,
+            Precision::Bfloat16 => 3,
+            Precision::Fp8E4M3 => 4,
+            Precision::Fp8E5M2 => 5,
         };
         let s = match self.service {
             ServiceClass::Latency => 0,
@@ -187,6 +209,14 @@ impl WorkloadClass {
             (Precision::Single, ServiceClass::Bulk) => "sp-bulk",
             (Precision::Double, ServiceClass::Latency) => "dp-latency",
             (Precision::Double, ServiceClass::Bulk) => "dp-bulk",
+            (Precision::Half, ServiceClass::Latency) => "fp16-latency",
+            (Precision::Half, ServiceClass::Bulk) => "fp16-bulk",
+            (Precision::Bfloat16, ServiceClass::Latency) => "bf16-latency",
+            (Precision::Bfloat16, ServiceClass::Bulk) => "bf16-bulk",
+            (Precision::Fp8E4M3, ServiceClass::Latency) => "fp8e4m3-latency",
+            (Precision::Fp8E4M3, ServiceClass::Bulk) => "fp8e4m3-bulk",
+            (Precision::Fp8E5M2, ServiceClass::Latency) => "fp8e5m2-latency",
+            (Precision::Fp8E5M2, ServiceClass::Bulk) => "fp8e5m2-bulk",
         }
     }
 }
@@ -705,7 +735,7 @@ struct ShardSlot {
     feedback: Arc<ShardFeedback>,
     health: AtomicU8,
     /// Submissions landed here, by [`WorkloadClass::index`].
-    class_counts: [AtomicU64; 4],
+    class_counts: [AtomicU64; WorkloadClass::COUNT],
     /// Submissions that arrived here via spill.
     spilled_in: AtomicU64,
     /// Submissions whose affinity was this shard but were diverted to a
@@ -1505,7 +1535,7 @@ pub struct ShardReport {
     /// Workers granted by the fleet registry (≤ the spec's request).
     pub workers: usize,
     /// Submissions landed here, by [`WorkloadClass::index`].
-    pub class_counts: [u64; 4],
+    pub class_counts: [u64; WorkloadClass::COUNT],
     /// How many of those arrived via spill or failover.
     pub spilled_in: u64,
     /// Submissions whose affinity was this shard, diverted to a sibling
@@ -1669,8 +1699,8 @@ impl FleetReport {
 
     /// `hist[class][shard]` — the per-class shard histogram the
     /// acceptance gate inspects.
-    pub fn class_histogram(&self) -> [Vec<u64>; 4] {
-        let mut hist: [Vec<u64>; 4] = Default::default();
+    pub fn class_histogram(&self) -> [Vec<u64>; WorkloadClass::COUNT] {
+        let mut hist: [Vec<u64>; WorkloadClass::COUNT] = Default::default();
         for (c, row) in hist.iter_mut().enumerate() {
             *row = self.shards.iter().map(|s| s.class_counts[c]).collect();
         }

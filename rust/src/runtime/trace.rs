@@ -299,8 +299,8 @@ impl Trace {
 
     /// Per-class op totals in [`WorkloadClass::index`] order — the
     /// deterministic class-mix histogram the replay digest folds in.
-    pub fn class_ops(&self) -> [u64; 4] {
-        let mut out = [0u64; 4];
+    pub fn class_ops(&self) -> [u64; WorkloadClass::COUNT] {
+        let mut out = [0u64; WorkloadClass::COUNT];
         for e in &self.events {
             out[e.class.index()] += e.ops;
         }
@@ -346,7 +346,8 @@ mod tests {
     #[test]
     fn presets_shape_the_mix_as_documented() {
         let skew = Trace::generate(TraceConfig::diurnal_skew(11, 60_000)).unwrap();
-        let [spl, spb, dpl, dpb] = skew.class_ops();
+        let [spl, spb, dpl, dpb, rest @ ..] = skew.class_ops();
+        assert_eq!(rest.iter().sum::<u64>(), 0, "traces draw SP/DP classes only");
         let latency_share = (spl + dpl) as f64 / 60_000.0;
         assert!(
             latency_share > 0.6,

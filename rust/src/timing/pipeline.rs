@@ -91,6 +91,11 @@ pub fn nominal_op(cfg: &FpuConfig) -> OperatingPoint {
         (Precision::Double, FpuKind::Fma) => 0.8,
         (Precision::Single, FpuKind::Cma) => 0.8,
         (Precision::Single, FpuKind::Fma) => 0.9,
+        // Transprecision tiers weren't fabricated; they inherit the SP
+        // rows' operating points (the small formats' shallower logic
+        // only clocks faster at the same supply).
+        (_, FpuKind::Cma) => 0.8,
+        (_, FpuKind::Fma) => 0.9,
     };
     OperatingPoint::new(vdd, Technology::NOMINAL_VBB)
 }

@@ -123,6 +123,9 @@ impl OperandStream {
 
     fn next_operand(&mut self) -> u64 {
         match (self.precision, self.mix) {
+            // SP/DP keep their original draw sequences (seed-stable
+            // across PRs); the transprecision tiers take the
+            // format-generic equivalents below.
             (Precision::Single, OperandMix::Finite) => self.rng.f32_operand() as u64,
             (Precision::Single, OperandMix::Anything) => self.rng.f32_any() as u64,
             (Precision::Single, OperandMix::Balanced) => {
@@ -135,7 +138,25 @@ impl OperandStream {
                 (self.rng.f64() * 4.0 - 2.0).to_bits()
             }
             (_, OperandMix::SpecialHeavy) => self.special_heavy_operand(),
+            (_, OperandMix::Finite) => self.finite_operand(),
+            (_, OperandMix::Anything) => {
+                self.rng.next_u64() & self.precision.format().storage_mask()
+            }
+            (_, OperandMix::Balanced) => {
+                crate::arch::softfloat::from_f64(self.precision.format(), self.rng.f64() * 4.0 - 2.0)
+            }
         }
+    }
+
+    /// Format-generic finite draw: uniform exponent field (finite
+    /// binades only), random fraction — the small-format analogue of
+    /// [`Rng::f32_operand`].
+    fn finite_operand(&mut self) -> u64 {
+        let fmt = self.precision.format();
+        let sign = if self.rng.chance(0.5) { fmt.sign_bit() } else { 0 };
+        let exp = self.rng.below(fmt.emax_biased());
+        let frac = self.rng.next_u64() & fmt.frac_mask();
+        sign | (exp << (fmt.sig_bits - 1)) | frac
     }
 
     /// One SpecialHeavy draw: each special class gets a 1-in-8 slice, the
@@ -159,6 +180,7 @@ impl OperandStream {
             _ => match self.precision {
                 Precision::Single => self.rng.f32_operand() as u64,
                 Precision::Double => self.rng.f64_operand(),
+                _ => self.finite_operand(),
             },
         }
     }
@@ -247,6 +269,66 @@ mod tests {
             // Specials really are heavy: ≳ a third of all draws.
             let specials = counts[0] + counts[1] + counts[3] + counts[4];
             assert!(specials * 3 > 12_000, "specials too rare: {specials}");
+        }
+    }
+
+    #[test]
+    fn small_format_streams_cover_all_mixes() {
+        use crate::arch::fp::{decode, Class};
+        use crate::arch::softfloat;
+        for precision in [
+            Precision::Half,
+            Precision::Bfloat16,
+            Precision::Fp8E4M3,
+            Precision::Fp8E5M2,
+        ] {
+            let fmt = precision.format();
+            // Finite: inside storage, never Inf/NaN.
+            let mut s = OperandStream::new(precision, OperandMix::Finite, 21);
+            for _ in 0..2_000 {
+                let t = s.next_triple();
+                for bits in [t.a, t.b, t.c] {
+                    assert_eq!(bits & !fmt.storage_mask(), 0, "{precision:?} leaked bits");
+                    let c = decode(fmt, bits).class;
+                    assert!(c != Class::Infinity && c != Class::Nan, "{precision:?} {bits:#x}");
+                }
+            }
+            // Anything: inside storage, specials present (8-bit formats
+            // hit the all-ones exponent often).
+            let mut s = OperandStream::new(precision, OperandMix::Anything, 22);
+            let mut specials = 0;
+            for _ in 0..2_000 {
+                let t = s.next_triple();
+                assert_eq!(t.a & !fmt.storage_mask(), 0);
+                if decode(fmt, t.a).non_finite() {
+                    specials += 1;
+                }
+            }
+            assert!(specials > 0, "{precision:?}: Anything never drew a special");
+            // Balanced: values in [-2, 2] after rounding into fmt.
+            let mut s = OperandStream::new(precision, OperandMix::Balanced, 23);
+            for _ in 0..500 {
+                let v = softfloat::to_f64(fmt, s.next_triple().b);
+                assert!((-2.0..=2.0).contains(&v), "{precision:?}: {v}");
+            }
+            // SpecialHeavy: all five classes appear.
+            let mut s = OperandStream::new(precision, OperandMix::SpecialHeavy, 24);
+            let mut counts = [0usize; 5];
+            for _ in 0..3_000 {
+                let t = s.next_triple();
+                for bits in [t.a, t.b, t.c] {
+                    counts[match decode(fmt, bits).class {
+                        Class::Zero => 0,
+                        Class::Subnormal => 1,
+                        Class::Normal => 2,
+                        Class::Infinity => 3,
+                        Class::Nan => 4,
+                    }] += 1;
+                }
+            }
+            for (i, &c) in counts.iter().enumerate() {
+                assert!(c > 50, "{precision:?}: class {i} undersampled ({c})");
+            }
         }
     }
 

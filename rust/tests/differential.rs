@@ -4,35 +4,37 @@
 //! simulation (reference) vs scalar word-level softfloat vs the
 //! dispatching word-simd lane kernels vs the host CPU's own IEEE-754
 //! hardware — five-way with the always-scalar lane reference when the
-//! `simd` feature splits it from the dispatching path. Zero mismatches
-//! are required on both precisions, all four op kinds, and both operand
-//! streams; any disagreement fails with the minimized counterexamples
-//! rendered in `edge_vectors.rs` format.
+//! `simd` feature splits it from the dispatching path — six-way on the
+//! small formats, whose packed-SWAR word engine joins the diff. Zero
+//! mismatches are required on every fleet format (SP, DP, FP16, BF16,
+//! FP8e4m3, FP8e5m2), all four op kinds, and both operand streams; any
+//! disagreement fails with the minimized counterexamples rendered in
+//! `edge_vectors.rs` format.
 //!
 //! Operand counts are sized for debug-build gate-level throughput; the
 //! CI fuzz smoke (`fpmax fuzz`, release build) runs the same harness at
 //! 200k operands per precision × kind.
 
 use fpmax::arch::fuzz::{run_differential, standard_engines, FuzzConfig, OpKind, StreamKind};
-use fpmax::arch::{Format, FpuConfig, FpuUnit};
+use fpmax::arch::{Format, FpuConfig, FpuUnit, Precision};
 
 fn units(fmt: Format) -> (FpuUnit, FpuUnit) {
-    if fmt.sig_bits == 24 {
-        (
-            FpuUnit::generate(&FpuConfig::sp_fma()),
-            FpuUnit::generate(&FpuConfig::sp_cma()),
-        )
-    } else {
-        (
-            FpuUnit::generate(&FpuConfig::dp_fma()),
-            FpuUnit::generate(&FpuConfig::dp_cma()),
-        )
-    }
+    let precision = Precision::ALL
+        .into_iter()
+        .find(|p| p.format() == fmt)
+        .expect("every fleet format carries a precision tag");
+    (
+        FpuUnit::generate(&FpuConfig::fma_of(precision)),
+        FpuUnit::generate(&FpuConfig::cma_of(precision)),
+    )
 }
 
 #[test]
 fn four_way_conformance_uniform_and_structured() {
-    for fmt in [Format::SP, Format::DP] {
+    // The full format matrix: SP/DP plus every transprecision tier, all
+    // four op kinds, both operand streams. Small formats additionally
+    // carry the packed-SWAR engine inside `standard_engines`.
+    for fmt in Format::all() {
         let (fma_unit, cma_unit) = units(fmt);
         let engines = standard_engines(&fma_unit, &cma_unit);
         for kind in OpKind::ALL {

@@ -261,6 +261,73 @@ fn routing_is_deterministic_under_seeded_load() {
 }
 
 #[test]
+fn transprecision_fleet_routes_format_tagged_classes() {
+    // The transprecision acceptance property: a mixed small-format fleet
+    // (fp16 CMA + fp16/bf16/fp8 FMA shards) dispatches format-tagged
+    // WorkloadClass submissions to their affinity shards with
+    // misrouted == 0 under the static policy, and every ticket's bits
+    // equal the landing unit's own datapath in that unit's format.
+    let tier = Fidelity::WordSimd;
+    let specs = vec![
+        spec(FpuConfig::cma_of(Precision::Half), tier, 1, 256),
+        spec(FpuConfig::fma_of(Precision::Half), tier, 1, 256),
+        spec(FpuConfig::fma_of(Precision::Bfloat16), tier, 1, 256),
+        spec(FpuConfig::fma_of(Precision::Fp8E4M3), tier, 1, 256),
+        spec(FpuConfig::fma_of(Precision::Fp8E5M2), tier, 1, 256),
+    ];
+    let classes = [
+        WorkloadClass { precision: Precision::Half, service: ServiceClass::Latency },
+        WorkloadClass { precision: Precision::Half, service: ServiceClass::Bulk },
+        WorkloadClass { precision: Precision::Bfloat16, service: ServiceClass::Bulk },
+        WorkloadClass { precision: Precision::Fp8E4M3, service: ServiceClass::Bulk },
+        WorkloadClass { precision: Precision::Fp8E5M2, service: ServiceClass::Bulk },
+    ];
+    let router = ServeRouter::start(&specs, RouterConfig::no_spill(specs.len())).unwrap();
+    let mut pending = Vec::new();
+    for (ci, class) in classes.into_iter().enumerate() {
+        let expect_idx = affinity_shard(&specs, class);
+        let dp = UnitDatapath::generate(&specs[expect_idx].config, tier);
+        let mut stream =
+            OperandStream::new(class.precision, OperandMix::Anything, 90 + ci as u64);
+        for k in 0..3usize {
+            let n = 200 + 61 * k;
+            let triples = stream.batch(n);
+            let mut want = vec![0u64; n];
+            dp.fmac_batch(&triples, &mut want);
+            let (idx, ticket) = router.submit(class, tier, triples).unwrap();
+            assert_eq!(idx, expect_idx, "{} routed off-affinity", class.name());
+            pending.push((want, ticket));
+        }
+    }
+    for (want, ticket) in pending {
+        assert_eq!(ticket.wait().unwrap(), want);
+    }
+    let report = router.finish().unwrap();
+    assert_eq!(report.submissions, 15);
+    assert_eq!(report.misrouted, 0, "static policy, format-tagged classes");
+    assert_eq!(report.spilled, 0);
+    assert_eq!(report.crosscheck_mismatches(), 0);
+    assert!(report.bb_gate_ok());
+    // The format-tagged rows of the class histogram concentrate on the
+    // affinity diagonal; the SP/DP rows stay empty.
+    let hist = report.class_histogram();
+    for class in classes {
+        let expect_idx = affinity_shard(&specs, class);
+        for si in 0..specs.len() {
+            let want = if si == expect_idx { 3 } else { 0 };
+            assert_eq!(hist[class.index()][si], want, "class {} shard {si}", class.name());
+        }
+    }
+    for class in WorkloadClass::ALL {
+        assert!(
+            hist[class.index()].iter().all(|&c| c == 0),
+            "SP/DP class {} saw traffic in a small-format fleet",
+            class.name()
+        );
+    }
+}
+
+#[test]
 fn mixed_tier_shards_isolate_chunk_calibration() {
     // The per-shard calibration satellite, end-to-end: the same unit
     // served at gate and word-simd tiers as two shards (per-op costs
