@@ -47,11 +47,19 @@ fails the job with a readable delta table when any budget is blown:
   arms are present — the dominance verdict re-derived from the raw
   throughput and pJ/op numbers against the artifact's embedded
   thresholds, cross-checked against the artifact's own
-  ``dynamic_dominates`` claim.
+  ``dynamic_dominates`` claim;
+* kernels (``BENCH_kernels*.ci.json``, from ``fpmax kernels --json``):
+  the repeat-buffer sequencer gates, re-derived from the raw cycle/op
+  counts — in-burst occupancy ``window_ops / window_cycles >=
+  min_frep_occupancy``, issue-rate speedup ``unrolled cycles / repeat
+  cycles >= min_frep_issue_speedup_vs_unrolled``, zero result-bank
+  mismatches between the repeat and unrolled encodings — with the
+  artifact's own occupancy/speedup claims cross-checked against the
+  derivation rather than trusted.
 
 Usage::
 
-    python3 python/ci_check_bench.py BENCH_engine.ci.json BENCH_serve.ci.json BENCH_chaos.ci.json BENCH_routing.ci.json
+    python3 python/ci_check_bench.py BENCH_engine.ci.json BENCH_serve.ci.json BENCH_chaos.ci.json BENCH_routing.ci.json BENCH_kernels.ci.json
 
 Exit status 0 iff every check passes. Artifacts with ``"measured":
 false`` fail immediately — the gate only makes sense on freshly measured
@@ -319,17 +327,53 @@ def routing_checks(doc: dict) -> list[Check]:
     return out
 
 
+def kernels_checks(doc: dict) -> list[Check]:
+    """The ``fpmax kernels --json`` artifact: repeat-buffer kernel gates
+    re-derived from the raw cycle/op counts. Occupancy is recomputed as
+    ``window_ops / window_cycles`` and the speedup as ``unrolled.cycles
+    / repeat.cycles``; the artifact's own ``occupancy_in_burst`` and
+    ``issue_speedup`` claims are cross-checked against the derivation so
+    a drifted emitter shows up as its own failure."""
+    t = doc["thresholds"]
+    out = []
+    for row in doc["rows"]:
+        unit = f"{row['kernel']}@{row['unit']}"
+        rep = row["repeat"]
+        occ = rep["window_ops"] / max(rep["window_cycles"], 1)
+        speedup = row["unrolled"]["cycles"] / max(rep["cycles"], 1)
+        out.append(Check(unit, "ops", row["ops"], ">", 0))
+        out.append(
+            Check(unit, "frep_occupancy", occ, ">=",
+                  t["min_frep_occupancy"]))
+        out.append(
+            Check(unit, "frep_issue_speedup", speedup, ">=",
+                  t["min_frep_issue_speedup_vs_unrolled"]))
+        out.append(
+            Check(unit, "result_mismatches", row["result_mismatches"],
+                  "==", t.get("max_result_mismatches", 0)))
+        out.append(
+            Check(unit, "occupancy_claim_agrees",
+                  1.0 if abs(occ - row["occupancy_in_burst"]) < 1e-4
+                  else 0.0, "is-true", 1.0))
+        out.append(
+            Check(unit, "speedup_claim_agrees",
+                  1.0 if abs(speedup - row["issue_speedup"]) < 1e-4
+                  else 0.0, "is-true", 1.0))
+    return out
+
+
 CHECKERS = {
     "engine": engine_checks,
     "formats": formats_checks,
     "serve": serve_checks,
     "chaos": chaos_checks,
     "routing": routing_checks,
+    "kernels": kernels_checks,
 }
 
 # Chaos gates are absolute (zero hung, zero lost, ...) — the artifact
 # embeds no tunable thresholds object.
-NEEDS_THRESHOLDS = {"engine", "formats", "serve", "routing"}
+NEEDS_THRESHOLDS = {"engine", "formats", "serve", "routing", "kernels"}
 
 
 def check_file(path: str) -> tuple[list[Check], list[str]]:

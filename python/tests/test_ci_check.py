@@ -1,7 +1,8 @@
 """Gate-logic tests for ``python/ci_check_bench.py``: synthetic pass /
 fail / unmeasured artifacts for the engine, serve, routed-fleet,
-routing-parity, chaos, and trace-replay dominance checks (no bench run
-needed — the artifacts are hand-built dicts dumped to temp files)."""
+routing-parity, chaos, trace-replay dominance, and repeat-buffer kernel
+checks (no bench run needed — the artifacts are hand-built dicts dumped
+to temp files)."""
 
 import importlib.util
 import json
@@ -596,6 +597,104 @@ def test_routing_needs_thresholds(tmp_path):
 
 def test_routing_unmeasured_is_an_error(tmp_path):
     doc = routing_doc()
+    doc["measured"] = False
+    checks, errors = run_doc(tmp_path, doc)
+    assert not checks
+    assert errors and "measured" in errors[0]
+
+
+def kernels_doc():
+    # Mirrors the `fpmax kernels --json` artifact: one GEMM tile row.
+    # window_ops/window_cycles = 2048/2053 ≈ 0.9976 occupancy; the
+    # unrolled encoding pays 1 + latency cycles per op → 4.99x speedup.
+    return {
+        "bench": "kernels",
+        "measured": True,
+        "seed": 42,
+        "window_slots": 256,
+        "thresholds": {
+            "min_frep_occupancy": 0.9,
+            "min_frep_issue_speedup_vs_unrolled": 1.5,
+            "max_result_mismatches": 0,
+        },
+        "rows": [
+            {
+                "kernel": "gemm16x16x8",
+                "unit": "sp-fma",
+                "ops": 2048,
+                "repeat": {
+                    "cycles": 2077,
+                    "window_ops": 2048,
+                    "window_cycles": 2053,
+                },
+                "unrolled": {"cycles": 10365},
+                "result_mismatches": 0,
+                "occupancy_in_burst": 2048 / 2053,
+                "issue_speedup": 10365 / 2077,
+                "pj_per_op_repeat": 11.8,
+                "pj_per_op_unrolled": 13.4,
+            },
+        ],
+    }
+
+
+def test_kernels_clean_row_passes_and_is_rederived(tmp_path):
+    checks, errors = run_doc(tmp_path, kernels_doc())
+    assert not errors
+    assert len(checks) == 6
+    assert all(c.ok for c in checks)
+    by_name = {c.name: c for c in checks}
+    assert set(by_name) == {
+        "ops",
+        "frep_occupancy",
+        "frep_issue_speedup",
+        "result_mismatches",
+        "occupancy_claim_agrees",
+        "speedup_claim_agrees",
+    }
+    # Derived from the raw counts, not read back from the claim fields.
+    assert abs(by_name["frep_occupancy"].value - 2048 / 2053) < 1e-9
+    assert abs(by_name["frep_issue_speedup"].value - 10365 / 2077) < 1e-9
+
+
+def test_kernels_gates_rederive_from_raw_counts(tmp_path):
+    # Degrade the raw counts but leave the (now stale) claim fields at
+    # their passing values: the re-derived gates AND the claim
+    # cross-checks must both fail — the claims are never trusted.
+    doc = kernels_doc()
+    row = doc["rows"][0]
+    row["repeat"]["window_cycles"] = 4096  # occ = 0.5 < 0.9
+    row["repeat"]["cycles"] = 9000  # speedup = 1.15x < 1.5x
+    checks, errors = run_doc(tmp_path, doc)
+    assert not errors
+    failed = {c.name for c in checks if not c.ok}
+    assert failed == {
+        "frep_occupancy",
+        "frep_issue_speedup",
+        "occupancy_claim_agrees",
+        "speedup_claim_agrees",
+    }
+
+
+def test_kernels_result_mismatch_fails_bit_identity(tmp_path):
+    doc = kernels_doc()
+    doc["rows"][0]["result_mismatches"] = 3
+    checks, errors = run_doc(tmp_path, doc)
+    assert not errors
+    failed = {c.name for c in checks if not c.ok}
+    assert failed == {"result_mismatches"}
+
+
+def test_kernels_needs_thresholds(tmp_path):
+    doc = kernels_doc()
+    del doc["thresholds"]
+    checks, errors = run_doc(tmp_path, doc)
+    assert not checks
+    assert errors and "thresholds" in errors[0]
+
+
+def test_kernels_unmeasured_is_an_error(tmp_path):
+    doc = kernels_doc()
     doc["measured"] = False
     checks, errors = run_doc(tmp_path, doc)
     assert not checks

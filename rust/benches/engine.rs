@@ -22,6 +22,8 @@ use fpmax::arch::engine::{BatchExecutor, Datapath, Fidelity, UnitDatapath};
 use fpmax::arch::fp::{Format, Precision};
 use fpmax::arch::generator::{FpuConfig, FpuKind, FpuUnit};
 use fpmax::arch::softfloat::lanes;
+use fpmax::chip::UnitSel;
+use fpmax::report::kernels::{run_suite, KernelRow};
 use fpmax::util::bench::{black_box, header, BenchRunner};
 use fpmax::workloads::throughput::{OperandMix, OperandStream, OperandTriple};
 
@@ -79,6 +81,10 @@ impl UnitRow {
 
 /// Trace window width the windowed rows use (ops per window).
 const TRACE_WINDOW_OPS: usize = 4096;
+
+/// Trace window (slots) and seed for the repeat-buffer kernel rows.
+const KERNEL_WINDOW_SLOTS: u64 = 256;
+const KERNEL_SEED: u64 = 42;
 
 /// One packed-SWAR row: a small format's FMA/CMA element throughput
 /// through the `lanes::packed` word entry point next to the dispatching
@@ -364,9 +370,35 @@ fn main() {
         );
     }
 
+    // Repeat-buffer kernel rows: the default suite (GEMM tile, stencil,
+    // dot chains) through the chip sequencer on every unit preset, both
+    // encodings bit-diffed. Cycle-accounted, not wall-clocked — no
+    // fast/full split needed.
+    let kernel_rows =
+        run_suite(&UnitSel::ALL, KERNEL_SEED, KERNEL_WINDOW_SLOTS).expect("kernel suite");
+    println!();
+    for k in &kernel_rows {
+        assert_eq!(
+            k.result_mismatches, 0,
+            "{} on {}: repeat-buffer encoding diverged from unrolled issue",
+            k.kernel,
+            k.unit.name()
+        );
+        println!(
+            "kernel {:<12} {:<6}  {:>6} ops  repeat {:>6} cyc  unrolled {:>6} cyc  occ(burst) {:.3}  {:.2}× issue",
+            k.kernel,
+            k.unit.name(),
+            k.ops,
+            k.repeat_cycles,
+            k.unrolled_cycles,
+            k.occupancy_in_burst,
+            k.issue_speedup,
+        );
+    }
+
     let out_path = std::env::var("FPMAX_BENCH_OUT")
         .unwrap_or_else(|_| format!("{}/../BENCH_engine.json", env!("CARGO_MANIFEST_DIR")));
-    let json = render_json(n, exec.workers(), &rows, &packed_rows);
+    let json = render_json(n, exec.workers(), &rows, &packed_rows, &kernel_rows);
     match std::fs::write(&out_path, &json) {
         Ok(()) => println!("\nwrote {out_path}"),
         Err(e) => println!("\ncould not write {out_path}: {e}"),
@@ -418,7 +450,13 @@ fn lane_block_pass(
 
 /// Hand-rolled JSON (no serde offline): stable key order, one unit per
 /// entry.
-fn render_json(ops: usize, workers: usize, rows: &[UnitRow], packed_rows: &[PackedRow]) -> String {
+fn render_json(
+    ops: usize,
+    workers: usize,
+    rows: &[UnitRow],
+    packed_rows: &[PackedRow],
+    kernel_rows: &[KernelRow],
+) -> String {
     let mut s = String::new();
     s.push_str("{\n");
     s.push_str("  \"bench\": \"engine\",\n");
@@ -436,7 +474,9 @@ fn render_json(ops: usize, workers: usize, rows: &[UnitRow], packed_rows: &[Pack
     s.push_str("    \"min_speedup_simd_vector_vs_scalar_lane\": 2.0,\n");
     s.push_str("    \"max_trace_overhead_windowed_vs_untracked\": 2.0,\n");
     s.push_str("    \"max_crosscheck_mismatches\": 0,\n");
-    s.push_str("    \"min_packed_speedup_fp16_fma_vs_sp_scalar_word\": 1.5\n");
+    s.push_str("    \"min_packed_speedup_fp16_fma_vs_sp_scalar_word\": 1.5,\n");
+    s.push_str("    \"min_frep_occupancy\": 0.9,\n");
+    s.push_str("    \"min_frep_issue_speedup_vs_unrolled\": 1.5\n");
     s.push_str("  },\n");
     s.push_str("  \"units\": {\n");
     for (i, r) in rows.iter().enumerate() {
@@ -520,6 +560,46 @@ fn render_json(ops: usize, workers: usize, rows: &[UnitRow], packed_rows: &[Pack
         ));
         s.push_str(if i + 1 == packed_rows.len() { "    }\n" } else { "    },\n" });
     }
+    s.push_str("  },\n");
+    // Repeat-buffer kernel rows, same shape as the `fpmax kernels --json`
+    // artifact so python/ci_check_bench.py's kernels checker (and a
+    // human) can re-derive occupancy/speedup from the raw counts.
+    s.push_str("  \"kernels\": {\n");
+    s.push_str(&format!("    \"window_slots\": {KERNEL_WINDOW_SLOTS},\n"));
+    s.push_str("    \"rows\": [\n");
+    for (i, k) in kernel_rows.iter().enumerate() {
+        s.push_str("      {\n");
+        s.push_str(&format!("        \"kernel\": \"{}\",\n", k.kernel));
+        s.push_str(&format!("        \"unit\": \"{}\",\n", k.unit.name()));
+        s.push_str(&format!("        \"ops\": {},\n", k.ops));
+        s.push_str(&format!(
+            "        \"repeat\": {{ \"cycles\": {}, \"window_ops\": {}, \"window_cycles\": {} }},\n",
+            k.repeat_cycles, k.window_ops, k.window_cycles
+        ));
+        s.push_str(&format!(
+            "        \"unrolled\": {{ \"cycles\": {} }},\n",
+            k.unrolled_cycles
+        ));
+        s.push_str(&format!(
+            "        \"result_mismatches\": {},\n",
+            k.result_mismatches
+        ));
+        s.push_str(&format!(
+            "        \"occupancy_in_burst\": {:.6},\n",
+            k.occupancy_in_burst
+        ));
+        s.push_str(&format!("        \"issue_speedup\": {:.6},\n", k.issue_speedup));
+        s.push_str(&format!(
+            "        \"pj_per_op_repeat\": {:.4},\n",
+            k.pj_per_op_repeat
+        ));
+        s.push_str(&format!(
+            "        \"pj_per_op_unrolled\": {:.4}\n",
+            k.pj_per_op_unrolled
+        ));
+        s.push_str(if i + 1 == kernel_rows.len() { "      }\n" } else { "      },\n" });
+    }
+    s.push_str("    ]\n");
     s.push_str("  }\n}\n");
     s
 }

@@ -1,4 +1,5 @@
-//! The test-program instruction encoding (Fig. 5(b)).
+//! The test-program instruction encoding (Fig. 5(b)) and the
+//! repeat-buffer sequencer extension.
 //!
 //! The paper's figure shows a compact encoding that selects the FPU, the
 //! operand sources (stimulus RAM or the forwarding network) and the
@@ -17,6 +18,43 @@
 //!  19..10  RAM base address (ops stream sequentially from here)
 //!   9..0   repeat count − 1
 //! ```
+//!
+//! ## Sequencer words (the repeat-buffer extension)
+//!
+//! Program RAM words are 64 bits wide but the base ISA above only ever
+//! occupied the low 32 — the upper half was architecturally zero. The
+//! repeat-buffer extension claims that headroom with a tag in the top
+//! three bits, so every pre-extension program decodes unchanged:
+//!
+//! ```text
+//! tag 000 (bits 63..32 all zero)  BASIC: bits 31..0 hold the classic
+//!                                 32-bit instruction; the all-zero word
+//!                                 stays the halt sentinel
+//! tag 001                         REPEAT
+//!    60..40  reserved (must be 0)
+//!    39..8   count  (iterations, u32 ≥ 1)
+//!     7..0   window (following program words to loop, u8 ≥ 1)
+//! tag 010                         STREAM descriptor
+//!    60..59  reserved (must be 0)
+//!    58..47  stride1 (outer stride, words, 12-bit two's complement)
+//!    46..35  stride0 (inner stride, words, 12-bit two's complement)
+//!    34..19  len0    (inner length, elements; 0 disarms the port)
+//!    18..3   base    (word address)
+//!     2      bank    (0 = the port's stimulus RAM, 1 = result RAM)
+//!     1..0   port    (00 a, 01 b, 10 c; 11 invalid)
+//! ```
+//!
+//! `REPEAT { window, count }` executes the next `window` program words
+//! (which must all be BASIC — a nested REPEAT or an embedded STREAM word
+//! rejects as an overlapping window) `count` times out of a decoded
+//! micro-op buffer, with a single pipeline drain at the end instead of
+//! one per instruction. A STREAM word arms a *stream semantic register*
+//! on one operand port: while armed, every `SrcSel::Ram` read on that
+//! port takes its address from the descriptor's two-level affine walk
+//! ([`StreamDesc::addr`]) instead of `base_addr + i`, advancing one
+//! element per op — so looped micro-ops stream new operands without
+//! being re-issued. Decoding is strict: reserved bits must be zero and
+//! `decode(encode(w)) == w` holds exactly (the property-test contract).
 
 use crate::arch::rounding::RoundMode;
 
@@ -45,6 +83,34 @@ pub enum UnitSel {
     DpFma = 1,
     SpCma = 2,
     SpFma = 3,
+}
+
+impl UnitSel {
+    /// All four fabricated units, Table-I order (the selector encoding).
+    pub const ALL: [UnitSel; 4] = [UnitSel::DpCma, UnitSel::DpFma, UnitSel::SpCma, UnitSel::SpFma];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            UnitSel::DpCma => "dp-cma",
+            UnitSel::DpFma => "dp-fma",
+            UnitSel::SpCma => "sp-cma",
+            UnitSel::SpFma => "sp-fma",
+        }
+    }
+
+    /// The fabricated unit's word precision.
+    pub fn precision(self) -> crate::arch::fp::Precision {
+        match self {
+            UnitSel::DpCma | UnitSel::DpFma => crate::arch::fp::Precision::Double,
+            UnitSel::SpCma | UnitSel::SpFma => crate::arch::fp::Precision::Single,
+        }
+    }
+
+    /// Whether the selected unit fuses the multiply-add (no intermediate
+    /// rounding) — FMA presets; CMA presets round twice.
+    pub fn fused(self) -> bool {
+        matches!(self, UnitSel::DpFma | UnitSel::SpFma)
+    }
 }
 
 /// One decoded test instruction.
@@ -159,6 +225,164 @@ impl Instruction {
     }
 }
 
+/// Operand port a stream descriptor arms (the `SrcSel::Ram` slot it
+/// re-addresses).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StreamPort {
+    A = 0,
+    B = 1,
+    C = 2,
+}
+
+impl StreamPort {
+    pub const ALL: [StreamPort; 3] = [StreamPort::A, StreamPort::B, StreamPort::C];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            StreamPort::A => "a",
+            StreamPort::B => "b",
+            StreamPort::C => "c",
+        }
+    }
+}
+
+/// RAM bank a stream reads: the port's own stimulus bank, or the result
+/// bank (pass-to-pass operand chaining for kernel programs).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StreamBank {
+    Stim = 0,
+    Result = 1,
+}
+
+/// Inclusive range of the 12-bit two's-complement stride fields.
+pub const STREAM_STRIDE_MIN: i16 = -2048;
+pub const STREAM_STRIDE_MAX: i16 = 2047;
+
+/// One stream semantic register descriptor: a two-level affine address
+/// walk `base + (n mod len0)·stride0 + (n div len0)·stride1` over the
+/// stream's element counter `n`. `len0 == 0` disarms the port;
+/// `stride0 == stride1 == 0` with `len0 == 1` is a broadcast (scalar
+/// weights); `stride1` carries the outer-loop hop a single stride
+/// cannot express (GEMM row advance, interleaved reduction trees).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct StreamDesc {
+    pub port: StreamPort,
+    pub bank: StreamBank,
+    pub base: u16,
+    pub stride0: i16,
+    pub len0: u16,
+    pub stride1: i16,
+}
+
+impl StreamDesc {
+    /// Word address of stream element `n`. May be negative (the
+    /// sequencer rejects it at fetch); only defined while armed
+    /// (`len0 ≥ 1`).
+    pub fn addr(&self, n: u64) -> i64 {
+        debug_assert!(self.len0 >= 1, "addr() on a disarmed descriptor");
+        let i0 = (n % self.len0 as u64) as i64;
+        let i1 = (n / self.len0 as u64) as i64;
+        self.base as i64 + i0 * self.stride0 as i64 + i1 * self.stride1 as i64
+    }
+
+    /// A disarm word for a port (`len0 = 0`).
+    pub fn disarm(port: StreamPort) -> StreamDesc {
+        StreamDesc { port, bank: StreamBank::Stim, base: 0, stride0: 0, len0: 0, stride1: 0 }
+    }
+}
+
+/// Word-type tags in bits 63..61 of a sequencer word.
+const TAG_REPEAT: u64 = 1;
+const TAG_STREAM: u64 = 2;
+
+fn s12_bits(v: i16) -> u64 {
+    (v as u16 as u64) & 0xfff
+}
+
+fn s12_from(bits: u64) -> i16 {
+    ((((bits & 0xfff) as u16) << 4) as i16) >> 4
+}
+
+/// One decoded 64-bit sequencer word: a classic instruction, a repeat
+/// of the following window, or a stream descriptor.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SeqWord {
+    Basic(Instruction),
+    Repeat { window: u8, count: u32 },
+    Stream(StreamDesc),
+}
+
+impl SeqWord {
+    /// Encode to the 64-bit program word.
+    pub fn encode(&self) -> u64 {
+        match *self {
+            SeqWord::Basic(ins) => ins.encode() as u64,
+            SeqWord::Repeat { window, count } => {
+                assert!(window >= 1, "repeat window must cover at least one word");
+                assert!(count >= 1, "repeat count must be at least one iteration");
+                (TAG_REPEAT << 61) | ((count as u64) << 8) | window as u64
+            }
+            SeqWord::Stream(d) => {
+                assert!(
+                    (STREAM_STRIDE_MIN..=STREAM_STRIDE_MAX).contains(&d.stride0)
+                        && (STREAM_STRIDE_MIN..=STREAM_STRIDE_MAX).contains(&d.stride1),
+                    "stream stride overflows the 12-bit field"
+                );
+                (TAG_STREAM << 61)
+                    | (s12_bits(d.stride1) << 47)
+                    | (s12_bits(d.stride0) << 35)
+                    | ((d.len0 as u64) << 19)
+                    | ((d.base as u64) << 3)
+                    | ((d.bank as u64) << 2)
+                    | d.port as u64
+            }
+        }
+    }
+
+    /// Strict decode: reserved bits must be zero, fields must be in
+    /// range, and `decode(encode(w)) == w` exactly.
+    pub fn decode(w: u64) -> crate::Result<SeqWord> {
+        if w >> 32 == 0 {
+            return Ok(SeqWord::Basic(Instruction::decode(w as u32)));
+        }
+        match w >> 61 {
+            TAG_REPEAT => {
+                anyhow::ensure!(
+                    (w >> 40) & 0x1f_ffff == 0,
+                    "repeat word has nonzero reserved bits: {w:#018x}"
+                );
+                let window = (w & 0xff) as u8;
+                let count = ((w >> 8) & 0xffff_ffff) as u32;
+                anyhow::ensure!(window >= 1, "repeat window of zero words: {w:#018x}");
+                anyhow::ensure!(count >= 1, "repeat count of zero iterations: {w:#018x}");
+                Ok(SeqWord::Repeat { window, count })
+            }
+            TAG_STREAM => {
+                anyhow::ensure!(
+                    (w >> 59) & 0x3 == 0,
+                    "stream word has nonzero reserved bits: {w:#018x}"
+                );
+                let port = match w & 3 {
+                    0 => StreamPort::A,
+                    1 => StreamPort::B,
+                    2 => StreamPort::C,
+                    _ => anyhow::bail!("stream word addresses invalid port 3: {w:#018x}"),
+                };
+                let bank = if (w >> 2) & 1 == 0 { StreamBank::Stim } else { StreamBank::Result };
+                Ok(SeqWord::Stream(StreamDesc {
+                    port,
+                    bank,
+                    base: ((w >> 3) & 0xffff) as u16,
+                    len0: ((w >> 19) & 0xffff) as u16,
+                    stride0: s12_from(w >> 35),
+                    stride1: s12_from(w >> 47),
+                }))
+            }
+            tag => anyhow::bail!("unknown sequencer word tag {tag} in {w:#018x}"),
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -221,5 +445,135 @@ mod tests {
         let a = Instruction::accumulate_burst(UnitSel::SpFma, 16, 256);
         assert_eq!(a.src_c, SrcSel::Forward);
         assert_eq!(a.src_a, SrcSel::Ram);
+    }
+
+    #[test]
+    fn seq_word_roundtrip_directed() {
+        let cases = [
+            SeqWord::Basic(Instruction::fmac_burst(UnitSel::DpCma, 512, 1024)),
+            SeqWord::Repeat { window: 1, count: 1 },
+            SeqWord::Repeat { window: 255, count: u32::MAX },
+            SeqWord::Stream(StreamDesc {
+                port: StreamPort::A,
+                bank: StreamBank::Stim,
+                base: 0,
+                stride0: 1,
+                len0: 64,
+                stride1: 0,
+            }),
+            SeqWord::Stream(StreamDesc {
+                port: StreamPort::C,
+                bank: StreamBank::Result,
+                base: u16::MAX,
+                stride0: STREAM_STRIDE_MIN,
+                len0: u16::MAX,
+                stride1: STREAM_STRIDE_MAX,
+            }),
+            SeqWord::Stream(StreamDesc::disarm(StreamPort::B)),
+        ];
+        for w in cases {
+            let bits = w.encode();
+            assert_eq!(SeqWord::decode(bits).unwrap(), w, "{w:?}");
+            // Basic words keep the upper half architecturally zero.
+            if let SeqWord::Basic(_) = w {
+                assert_eq!(bits >> 32, 0);
+            }
+        }
+    }
+
+    #[test]
+    fn seq_word_roundtrip_property() {
+        // Satellite contract: seeded random fields over EVERY word kind —
+        // classic instructions (all unit/op/rounding/src combinations and
+        // the full base/repeat ranges), repeats, and stream descriptors —
+        // survive encode→decode bit-exactly.
+        use crate::util::check_cases;
+        let units = [UnitSel::DpCma, UnitSel::DpFma, UnitSel::SpCma, UnitSel::SpFma];
+        let ops = [Op::Nop, Op::Fmac, Op::Mul, Op::Add];
+        let sels = [SrcSel::Ram, SrcSel::Forward, SrcSel::Zero, SrcSel::One];
+        let ports = StreamPort::ALL;
+        check_cases(
+            0xf9ea_5eed,
+            4096,
+            |rng| match rng.below(3) {
+                0 => SeqWord::Basic(Instruction {
+                    unit: units[rng.below(4) as usize],
+                    op: ops[rng.below(4) as usize],
+                    rounding: RoundMode::ALL[rng.below(4) as usize],
+                    src_a: sels[rng.below(4) as usize],
+                    src_b: sels[rng.below(4) as usize],
+                    src_c: sels[rng.below(4) as usize],
+                    base_addr: rng.below(1024) as u16,
+                    repeat: rng.below(1024) as u16,
+                }),
+                1 => SeqWord::Repeat {
+                    window: 1 + rng.below(255) as u8,
+                    count: 1 + rng.below(u32::MAX as u64) as u32,
+                },
+                _ => SeqWord::Stream(StreamDesc {
+                    port: ports[rng.below(3) as usize],
+                    bank: if rng.chance(0.5) { StreamBank::Stim } else { StreamBank::Result },
+                    base: rng.below(1 << 16) as u16,
+                    stride0: (rng.below(4096) as i64 + STREAM_STRIDE_MIN as i64) as i16,
+                    len0: rng.below(1 << 16) as u16,
+                    stride1: (rng.below(4096) as i64 + STREAM_STRIDE_MIN as i64) as i16,
+                }),
+            },
+            |w| {
+                let decoded = SeqWord::decode(w.encode())
+                    .map_err(|e| format!("decode failed: {e}"))?;
+                if decoded == *w {
+                    Ok(())
+                } else {
+                    Err(format!("roundtrip mismatch: {decoded:?}"))
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn seq_word_rejects_malformed_bits() {
+        // Reserved bits, zero window/count, invalid port, unknown tag.
+        let repeat = SeqWord::Repeat { window: 2, count: 8 }.encode();
+        assert!(SeqWord::decode(repeat | (1 << 45)).is_err(), "repeat reserved bits");
+        assert!(SeqWord::decode((TAG_REPEAT << 61) | (8 << 8)).is_err(), "zero window");
+        assert!(SeqWord::decode((TAG_REPEAT << 61) | 2).is_err(), "zero count");
+        let stream = SeqWord::Stream(StreamDesc::disarm(StreamPort::A)).encode();
+        assert!(SeqWord::decode(stream | (1 << 59)).is_err(), "stream reserved bits");
+        assert!(SeqWord::decode((TAG_STREAM << 61) | 3).is_err(), "invalid port");
+        assert!(SeqWord::decode(7 << 61).is_err(), "unknown tag");
+        assert!(SeqWord::decode(3 << 61).is_err(), "unknown tag 3");
+    }
+
+    #[test]
+    fn stream_desc_affine_walk() {
+        // GEMM B-row shape: base k·N, inner stride 1 over N columns,
+        // outer stride 0 (the row repeats for every output row).
+        let b = StreamDesc {
+            port: StreamPort::B,
+            bank: StreamBank::Stim,
+            base: 8,
+            stride0: 1,
+            len0: 4,
+            stride1: 0,
+        };
+        let addrs: Vec<i64> = (0..8).map(|n| b.addr(n)).collect();
+        assert_eq!(addrs, vec![8, 9, 10, 11, 8, 9, 10, 11]);
+        // GEMM A-column shape: broadcast within a row (stride0 0 over N),
+        // hop K to the next row's element.
+        let a = StreamDesc {
+            port: StreamPort::A,
+            bank: StreamBank::Stim,
+            base: 2,
+            stride0: 0,
+            len0: 4,
+            stride1: 3,
+        };
+        let addrs: Vec<i64> = (0..8).map(|n| a.addr(n)).collect();
+        assert_eq!(addrs, vec![2, 2, 2, 2, 5, 5, 5, 5]);
+        // Negative strides walk down (and can go negative — the
+        // sequencer's fetch guard owns that error).
+        let down = StreamDesc { stride0: -2, len0: 8, base: 3, ..a };
+        assert_eq!((0..4).map(|n| down.addr(n)).collect::<Vec<_>>(), vec![3, 1, -1, -3]);
     }
 }

@@ -8,7 +8,7 @@ pub mod jtag;
 pub mod ram;
 pub mod tester;
 
-pub use isa::{Instruction, Op, SrcSel, UnitSel};
+pub use isa::{Instruction, Op, SeqWord, SrcSel, StreamBank, StreamDesc, StreamPort, UnitSel};
 pub use jtag::{JtagIr, JtagPort, IDCODE};
 pub use ram::RamBank;
 pub use tester::{expected_result, FpMaxChip, RunStats, BANK_PROGRAM, BANK_RESULT, BANK_STIM_A, BANK_STIM_B, BANK_STIM_C};

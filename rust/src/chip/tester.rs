@@ -1,12 +1,25 @@
 //! The at-speed test sequencer: Fig. 5(a)'s datapath — stimulus RAMs →
 //! selected FPU → result RAM — driven by the Fig. 5(b) instruction
-//! stream.
+//! stream, with the repeat-buffer / stream-register extension.
 //!
 //! `run()` executes the loaded program exactly as the silicon sequencer
 //! would: one FMAC per cycle from the RAMs in burst mode, or one per
 //! bypass-latency when an operand comes from the forwarding network
 //! (accumulation tests), with cycle accounting per burst. All four
 //! generated FPUs live on the chip simultaneously, as fabricated.
+//!
+//! A `REPEAT` word ([`super::isa::SeqWord`]) decodes its window once
+//! into a small micro-op buffer and loops it, so the window's ops issue
+//! back-to-back (one FPU op per cycle through the batched engine path)
+//! with a *single* pipeline drain at the end — the Snitch-style FREP
+//! story that lifts occupancy to ~1 inside kernel bursts. Armed stream
+//! semantic registers re-address `SrcSel::Ram` operands through a
+//! two-level affine walk (and may source the *result* bank, chaining
+//! kernel passes), advancing one element per op without re-issue. To
+//! keep gathered and op-at-a-time execution observationally identical,
+//! a result-bank stream may only read below the result write pointer as
+//! it stood when the current program word began — reading into the
+//! window being written is a sequencing error, not silent staleness.
 
 use crate::arch::engine::{
     add_batch, mul_batch, reference_fmac, ActivityAccumulator, ActivityTrace, Datapath,
@@ -18,7 +31,7 @@ use crate::pipesim::sim::LatencyModel;
 use crate::pipesim::trace::DepKind;
 use crate::workloads::throughput::OperandTriple;
 
-use super::isa::{Instruction, Op, SrcSel, UnitSel};
+use super::isa::{Instruction, Op, SeqWord, SrcSel, StreamBank, StreamDesc, UnitSel};
 use super::jtag::JtagPort;
 use super::ram::RamBank;
 
@@ -36,6 +49,94 @@ pub struct RunStats {
     pub ops: u64,
     pub cycles: u64,
     pub results_written: u64,
+    /// Ops issued from inside repeat-buffer windows.
+    pub repeat_ops: u64,
+    /// Cycles attributed to repeat-buffer bursts: in-window issue slots
+    /// (including forwarding stalls and `Nop` bubbles), the one-cycle
+    /// window decode, and the single post-repeat pipeline drain.
+    /// `repeat_ops / repeat_cycles` is the in-burst occupancy the
+    /// kernel gates check.
+    pub repeat_cycles: u64,
+}
+
+impl RunStats {
+    /// In-burst occupancy of the repeat-buffer cycles (0 when the
+    /// program never repeated).
+    pub fn repeat_occupancy(&self) -> f64 {
+        if self.repeat_cycles == 0 {
+            0.0
+        } else {
+            self.repeat_ops as f64 / self.repeat_cycles as f64
+        }
+    }
+}
+
+/// Live state of one armed stream semantic register.
+#[derive(Debug, Clone, Copy)]
+struct StreamState {
+    desc: StreamDesc,
+    /// Elements consumed so far.
+    n: u64,
+}
+
+/// The `1.0` bit pattern of a unit's format (the `SrcSel::One`
+/// constant).
+fn one_bits(unit: &FpuUnit) -> u64 {
+    match unit.config.precision {
+        Precision::Single => 1.0f32.to_bits() as u64,
+        Precision::Double => 1.0f64.to_bits(),
+        p => crate::arch::softfloat::from_f64(p.format(), 1.0),
+    }
+}
+
+/// Resolve and read one operand. `plain_addr` is the classic
+/// `base_addr + i` sequential address, used when no stream is armed on
+/// the port; an armed stream overrides it for `SrcSel::Ram`, advancing
+/// one element per read. `guard_wptr` is the result write pointer as of
+/// the start of the current program word: result-bank stream reads at
+/// or above it would observe the window currently being written —
+/// where gathered and scalar execution could diverge — so they reject.
+fn fetch_operand(
+    sel: SrcSel,
+    port: usize,
+    plain_addr: usize,
+    stim: &mut RamBank,
+    result: &mut RamBank,
+    streams: &mut [Option<StreamState>; 3],
+    one: u64,
+    forward: u64,
+    guard_wptr: usize,
+) -> crate::Result<u64> {
+    match sel {
+        SrcSel::Forward => Ok(forward),
+        SrcSel::Zero => Ok(0),
+        SrcSel::One => Ok(one),
+        SrcSel::Ram => match &mut streams[port] {
+            None => stim.read(plain_addr),
+            Some(st) => {
+                let addr = st.desc.addr(st.n);
+                st.n += 1;
+                anyhow::ensure!(
+                    addr >= 0,
+                    "stream {} walked to negative address {addr} at element {}",
+                    st.desc.port.name(),
+                    st.n - 1
+                );
+                match st.desc.bank {
+                    StreamBank::Stim => stim.read(addr as usize),
+                    StreamBank::Result => {
+                        anyhow::ensure!(
+                            (addr as usize) < guard_wptr,
+                            "stream {} reads result[{addr}] inside the window being \
+                             written (write pointer was {guard_wptr} at issue)",
+                            st.desc.port.name()
+                        );
+                        result.read(addr as usize)
+                    }
+                }
+            }
+        },
+    }
 }
 
 /// The FPMax chip model.
@@ -50,12 +151,22 @@ pub struct FpMaxChip {
     /// so steady-state sequencing allocates nothing.
     burst_triples: Vec<OperandTriple>,
     burst_bits: Vec<u64>,
+    /// The decoded micro-op buffer a `REPEAT` window executes from.
+    repeat_buf: Vec<Instruction>,
 }
 
 impl FpMaxChip {
     /// Instantiate the chip with the four fabricated units and RAMs of
-    /// the given depth (words).
+    /// the given depth (words). Program RAM keeps the fabricated 256
+    /// words; kernel-scale programs use [`FpMaxChip::with_depths`].
     pub fn new(ram_depth: usize) -> FpMaxChip {
+        FpMaxChip::with_depths(ram_depth, 256)
+    }
+
+    /// Instantiate with explicit stimulus/result and program RAM depths
+    /// (the kernel runner's unrolled reference programs outgrow the
+    /// fabricated program RAM).
+    pub fn with_depths(ram_depth: usize, program_depth: usize) -> FpMaxChip {
         FpMaxChip {
             units: [
                 FpuUnit::generate(&FpuConfig::dp_cma()),
@@ -67,9 +178,10 @@ impl FpMaxChip {
             stim_b: RamBank::new("stim_b", ram_depth),
             stim_c: RamBank::new("stim_c", ram_depth),
             result: RamBank::new("result", ram_depth),
-            program: RamBank::new("program", 256),
+            program: RamBank::new("program", program_depth),
             burst_triples: Vec::with_capacity(ram_depth),
             burst_bits: vec![0; ram_depth],
+            repeat_buf: Vec::new(),
         }
     }
 
@@ -108,184 +220,87 @@ impl FpMaxChip {
     }
 
     fn run_inner(&mut self, mut trace: Option<&mut ActivityTrace>) -> crate::Result<RunStats> {
+        let FpMaxChip {
+            units,
+            stim_a,
+            stim_b,
+            stim_c,
+            result,
+            program,
+            burst_triples,
+            burst_bits,
+            repeat_buf,
+        } = self;
+        let mut env = SeqEnv { units, stim_a, stim_b, stim_c, result, burst_triples, burst_bits };
         let mut stats = RunStats::default();
         let mut result_wptr = 0usize;
-        for pc in 0..self.program.depth() {
-            let word = self.program.peek(pc).unwrap_or(0);
+        let mut streams: [Option<StreamState>; 3] = [None; 3];
+        let mut pc = 0usize;
+        while pc < program.depth() {
+            let word = program.peek(pc).unwrap_or(0);
             if word == 0 {
                 break; // end of program (all-zero word = halt)
             }
-            let ins = Instruction::decode(word as u32);
+            let sw = SeqWord::decode(word)
+                .map_err(|e| anyhow::anyhow!("program word {pc}: {e}"))?;
             stats.instructions += 1;
-            if matches!(ins.op, Op::Nop) {
-                if let Some(t) = trace.as_deref_mut() {
-                    t.push_idle(ins.repeat as u64 + 1);
+            match sw {
+                SeqWord::Basic(ins) => {
+                    env.exec_basic(&ins, &mut streams, &mut result_wptr, &mut stats, &mut trace)?;
+                    pc += 1;
                 }
-                stats.cycles += (ins.repeat as u64) + 1;
-                continue;
+                SeqWord::Stream(desc) => {
+                    // One sequencer cycle to latch (or clear, when
+                    // `len0 == 0`) the stream semantic register.
+                    streams[desc.port as usize] =
+                        if desc.len0 == 0 { None } else { Some(StreamState { desc, n: 0 }) };
+                    stats.cycles += 1;
+                    if let Some(t) = trace.as_deref_mut() {
+                        t.push_idle(1);
+                    }
+                    pc += 1;
+                }
+                SeqWord::Repeat { window, count } => {
+                    // Decode the window into the micro-op buffer once,
+                    // rejecting anything a hardware repeat buffer could
+                    // not loop: nested repeats, mid-window stream
+                    // re-arms, and windows that run off the program.
+                    let w = window as usize;
+                    repeat_buf.clear();
+                    for k in 0..w {
+                        let wpc = pc + 1 + k;
+                        let wword =
+                            if wpc < program.depth() { program.peek(wpc).unwrap_or(0) } else { 0 };
+                        anyhow::ensure!(
+                            wword != 0,
+                            "repeat window at word {pc} runs past the end of the program"
+                        );
+                        match SeqWord::decode(wword)
+                            .map_err(|e| anyhow::anyhow!("program word {wpc}: {e}"))?
+                        {
+                            SeqWord::Basic(ins) => repeat_buf.push(ins),
+                            SeqWord::Repeat { .. } => anyhow::bail!(
+                                "overlapping repeat windows: word {wpc} is a Repeat inside \
+                                 the window of the Repeat at word {pc}"
+                            ),
+                            SeqWord::Stream(_) => anyhow::bail!(
+                                "stream descriptor at word {wpc} inside a repeat window \
+                                 (arm streams before the Repeat)"
+                            ),
+                        }
+                    }
+                    stats.instructions += w as u64;
+                    env.exec_repeat(
+                        &repeat_buf[..],
+                        count,
+                        &mut streams,
+                        &mut result_wptr,
+                        &mut stats,
+                        &mut trace,
+                    )?;
+                    pc += 1 + w;
+                }
             }
-            let unit = &self.units[ins.unit as usize];
-            let lat = LatencyModel::of(unit);
-            let one = match unit.config.precision {
-                Precision::Single => 1.0f32.to_bits() as u64,
-                Precision::Double => 1.0f64.to_bits(),
-                p => crate::arch::softfloat::from_f64(p.format(), 1.0),
-            };
-            let mut forward: u64 = 0;
-            // Per-op issue distance: 1 from RAM, or the bypass tap when an
-            // operand comes from the forwarding network.
-            let uses_fwd_c = ins.src_c == SrcSel::Forward;
-            let uses_fwd_ab = ins.src_a == SrcSel::Forward || ins.src_b == SrcSel::Forward;
-            let issue_dist = if uses_fwd_ab {
-                lat.tap(DepKind::Multiplier).max(1) as u64
-            } else if uses_fwd_c {
-                lat.tap(DepKind::Accumulate).max(1) as u64
-            } else {
-                1
-            };
-
-            // Independent bursts (every operand from RAM or a constant)
-            // have no sequential dependence: the sequencer gathers the
-            // whole burst into pooled scratch and issues it through the
-            // batched execution layer in one go, exactly as the silicon
-            // streams one op per cycle. FMAC bursts batch at the unit's
-            // default rounding; Mul/Add bursts batch at *any* rounding
-            // mode (the explicit-rounding test programs), RNE through the
-            // SoA lane kernels and directed modes through the scalar
-            // spec. Forwarding bursts and explicit-rounding FMACs stay on
-            // the scalar path below.
-            let independent_burst = !uses_fwd_ab
-                && !uses_fwd_c
-                && match ins.op {
-                    Op::Fmac => ins.rounding == RoundMode::NearestEven,
-                    Op::Mul | Op::Add => true,
-                    Op::Nop => false,
-                };
-            if independent_burst {
-                let count = ins.repeat as usize + 1;
-                let base = ins.base_addr as usize;
-                self.burst_triples.clear();
-                for i in 0..count {
-                    let addr = base + i;
-                    let a = match ins.src_a {
-                        SrcSel::Ram => self.stim_a.read(addr)?,
-                        SrcSel::Zero => 0,
-                        SrcSel::One => one,
-                        SrcSel::Forward => unreachable!("excluded above"),
-                    };
-                    let b = match ins.src_b {
-                        SrcSel::Ram => self.stim_b.read(addr)?,
-                        SrcSel::Zero => 0,
-                        SrcSel::One => one,
-                        SrcSel::Forward => unreachable!("excluded above"),
-                    };
-                    let c = match ins.src_c {
-                        SrcSel::Ram => self.stim_c.read(addr)?,
-                        SrcSel::Zero => 0,
-                        SrcSel::One => one,
-                        SrcSel::Forward => unreachable!("excluded above"),
-                    };
-                    self.burst_triples.push(OperandTriple { a, b, c });
-                }
-                if self.burst_bits.len() < count {
-                    self.burst_bits.resize(count, 0);
-                }
-                let bits = &mut self.burst_bits[..count];
-                match ins.op {
-                    Op::Fmac => match trace.as_deref_mut() {
-                        // Traced FMAC bursts stream through the tracked
-                        // gate-level op, landing one issue slot per op in
-                        // the trace's windows (same bits either way).
-                        Some(t) => t
-                            .push_batch_tracked(unit, &self.burst_triples, bits)
-                            .expect("burst scratch sized together"),
-                        None => unit.fmac_batch(&self.burst_triples, bits),
-                    },
-                    Op::Mul => {
-                        mul_batch(unit.format, ins.rounding, &self.burst_triples, bits);
-                        if let Some(t) = trace.as_deref_mut() {
-                            // Occupancy-only: Mul/Add bursts carry no
-                            // FMAC activity record.
-                            t.push_untracked_ops(count as u64);
-                        }
-                    }
-                    Op::Add => {
-                        add_batch(unit.format, ins.rounding, &self.burst_triples, bits);
-                        if let Some(t) = trace.as_deref_mut() {
-                            t.push_untracked_ops(count as u64);
-                        }
-                    }
-                    Op::Nop => unreachable!("excluded above"),
-                }
-                if let Some(t) = trace.as_deref_mut() {
-                    // Pipeline drain between instructions.
-                    t.push_idle(lat.full as u64);
-                }
-                for &r in &self.burst_bits[..count] {
-                    self.result.write(result_wptr, r)?;
-                    result_wptr += 1;
-                }
-                stats.ops += count as u64;
-                stats.cycles += issue_dist * count as u64;
-                stats.cycles += lat.full as u64;
-                continue;
-            }
-
-            for i in 0..=(ins.repeat as usize) {
-                let addr = ins.base_addr as usize + i;
-                let fetch = |ram: &mut RamBank, sel: SrcSel, fwd: u64| -> crate::Result<u64> {
-                    Ok(match sel {
-                        SrcSel::Ram => ram.read(addr)?,
-                        SrcSel::Forward => fwd,
-                        SrcSel::Zero => 0,
-                        SrcSel::One => one,
-                    })
-                };
-                let a = fetch(&mut self.stim_a, ins.src_a, forward)?;
-                let b = fetch(&mut self.stim_b, ins.src_b, forward)?;
-                let c = fetch(&mut self.stim_c, ins.src_c, forward)?;
-                let r = match ins.op {
-                    Op::Fmac => {
-                        let (r, act) = unit.fmac_mode(ins.rounding, a, b, c);
-                        if let Some(t) = trace.as_deref_mut() {
-                            let mut acc = ActivityAccumulator::default();
-                            acc.record(&act);
-                            t.push_op(&acc);
-                        }
-                        r
-                    }
-                    Op::Mul => {
-                        let r = crate::arch::softfloat::mul(unit.format, ins.rounding, a, b);
-                        if let Some(t) = trace.as_deref_mut() {
-                            t.push_untracked_ops(1);
-                        }
-                        r
-                    }
-                    Op::Add => {
-                        let r = crate::arch::softfloat::add(unit.format, ins.rounding, a, c);
-                        if let Some(t) = trace.as_deref_mut() {
-                            t.push_untracked_ops(1);
-                        }
-                        r
-                    }
-                    Op::Nop => unreachable!(),
-                };
-                if let Some(t) = trace.as_deref_mut() {
-                    // Bypass-throttled issue: the slots between
-                    // successive ops are stalls.
-                    t.push_idle(issue_dist - 1);
-                }
-                forward = r.bits;
-                self.result.write(result_wptr, r.bits)?;
-                result_wptr += 1;
-                stats.ops += 1;
-                stats.cycles += issue_dist;
-            }
-            // Pipeline drain between instructions.
-            if let Some(t) = trace.as_deref_mut() {
-                t.push_idle(lat.full as u64);
-            }
-            stats.cycles += lat.full as u64;
         }
         stats.results_written = result_wptr as u64;
         Ok(stats)
@@ -298,6 +313,424 @@ impl FpMaxChip {
         self.stim_c.clear();
         self.result.clear();
         self.program.clear();
+    }
+}
+
+/// Cap on how many micro-op instances a repeat run gathers before it
+/// flushes through the batch engine — bounds scratch growth on huge
+/// `count` values without changing results or cycle accounting.
+const REPEAT_FLUSH_OPS: usize = 1 << 16;
+
+/// Identity of a batchable run of repeat-window micro-ops: instances
+/// batch together only while the executing unit, op, and rounding mode
+/// all match, so each flush is one homogeneous `fmac_batch`-style call.
+#[derive(Clone, Copy, PartialEq)]
+struct PendingRun {
+    unit_idx: usize,
+    op: Op,
+    rounding: RoundMode,
+}
+
+/// The sequencer's execution context: split borrows of the chip's units,
+/// RAM banks, and pooled burst scratch, so `run_inner` can hold the
+/// program RAM and micro-op buffer separately while executing.
+struct SeqEnv<'a> {
+    units: &'a [FpuUnit; 4],
+    stim_a: &'a mut RamBank,
+    stim_b: &'a mut RamBank,
+    stim_c: &'a mut RamBank,
+    result: &'a mut RamBank,
+    burst_triples: &'a mut Vec<OperandTriple>,
+    burst_bits: &'a mut Vec<u64>,
+}
+
+impl SeqEnv<'_> {
+    /// Execute one `Basic` program word with classic per-instruction
+    /// timing (issue slots + a full pipeline drain), operands resolved
+    /// through any armed stream registers.
+    fn exec_basic(
+        &mut self,
+        ins: &Instruction,
+        streams: &mut [Option<StreamState>; 3],
+        result_wptr: &mut usize,
+        stats: &mut RunStats,
+        trace: &mut Option<&mut ActivityTrace>,
+    ) -> crate::Result<()> {
+        if matches!(ins.op, Op::Nop) {
+            if let Some(t) = trace.as_deref_mut() {
+                t.push_idle(ins.repeat as u64 + 1);
+            }
+            stats.cycles += (ins.repeat as u64) + 1;
+            return Ok(());
+        }
+        let units = self.units;
+        let unit = &units[ins.unit as usize];
+        let lat = LatencyModel::of(unit);
+        let one = one_bits(unit);
+        let guard = *result_wptr;
+        let mut forward: u64 = 0;
+        // Per-op issue distance: 1 from RAM, or the bypass tap when an
+        // operand comes from the forwarding network.
+        let uses_fwd_c = ins.src_c == SrcSel::Forward;
+        let uses_fwd_ab = ins.src_a == SrcSel::Forward || ins.src_b == SrcSel::Forward;
+        let issue_dist = if uses_fwd_ab {
+            lat.tap(DepKind::Multiplier).max(1) as u64
+        } else if uses_fwd_c {
+            lat.tap(DepKind::Accumulate).max(1) as u64
+        } else {
+            1
+        };
+
+        // Independent bursts (every operand from RAM or a constant)
+        // have no sequential dependence: the sequencer gathers the
+        // whole burst into pooled scratch and issues it through the
+        // batched execution layer in one go, exactly as the silicon
+        // streams one op per cycle. FMAC bursts batch at the unit's
+        // default rounding; Mul/Add bursts batch at *any* rounding
+        // mode (the explicit-rounding test programs), RNE through the
+        // SoA lane kernels and directed modes through the scalar
+        // spec. Forwarding bursts and explicit-rounding FMACs stay on
+        // the scalar path below.
+        let independent_burst = !uses_fwd_ab
+            && !uses_fwd_c
+            && match ins.op {
+                Op::Fmac => ins.rounding == RoundMode::NearestEven,
+                Op::Mul | Op::Add => true,
+                Op::Nop => false,
+            };
+        if independent_burst {
+            let count = ins.repeat as usize + 1;
+            let base = ins.base_addr as usize;
+            self.burst_triples.clear();
+            for i in 0..count {
+                let addr = base + i;
+                let a = fetch_operand(
+                    ins.src_a, 0, addr, self.stim_a, self.result, streams, one, 0, guard,
+                )?;
+                let b = fetch_operand(
+                    ins.src_b, 1, addr, self.stim_b, self.result, streams, one, 0, guard,
+                )?;
+                let c = fetch_operand(
+                    ins.src_c, 2, addr, self.stim_c, self.result, streams, one, 0, guard,
+                )?;
+                self.burst_triples.push(OperandTriple { a, b, c });
+            }
+            if self.burst_bits.len() < count {
+                self.burst_bits.resize(count, 0);
+            }
+            let bits = &mut self.burst_bits[..count];
+            match ins.op {
+                Op::Fmac => match trace.as_deref_mut() {
+                    // Traced FMAC bursts stream through the tracked
+                    // gate-level op, landing one issue slot per op in
+                    // the trace's windows (same bits either way).
+                    Some(t) => t
+                        .push_batch_tracked(unit, &self.burst_triples[..], bits)
+                        .expect("burst scratch sized together"),
+                    None => unit.fmac_batch(&self.burst_triples[..], bits),
+                },
+                Op::Mul => {
+                    mul_batch(unit.format, ins.rounding, &self.burst_triples[..], bits);
+                    if let Some(t) = trace.as_deref_mut() {
+                        // Occupancy-only: Mul/Add bursts carry no
+                        // FMAC activity record.
+                        t.push_untracked_ops(count as u64);
+                    }
+                }
+                Op::Add => {
+                    add_batch(unit.format, ins.rounding, &self.burst_triples[..], bits);
+                    if let Some(t) = trace.as_deref_mut() {
+                        t.push_untracked_ops(count as u64);
+                    }
+                }
+                Op::Nop => unreachable!("excluded above"),
+            }
+            if let Some(t) = trace.as_deref_mut() {
+                // Pipeline drain between instructions.
+                t.push_idle(lat.full as u64);
+            }
+            for &r in &self.burst_bits[..count] {
+                self.result.write(*result_wptr, r)?;
+                *result_wptr += 1;
+            }
+            stats.ops += count as u64;
+            stats.cycles += issue_dist * count as u64;
+            stats.cycles += lat.full as u64;
+            return Ok(());
+        }
+
+        for i in 0..=(ins.repeat as usize) {
+            let addr = ins.base_addr as usize + i;
+            let a = fetch_operand(
+                ins.src_a, 0, addr, self.stim_a, self.result, streams, one, forward, guard,
+            )?;
+            let b = fetch_operand(
+                ins.src_b, 1, addr, self.stim_b, self.result, streams, one, forward, guard,
+            )?;
+            let c = fetch_operand(
+                ins.src_c, 2, addr, self.stim_c, self.result, streams, one, forward, guard,
+            )?;
+            let r = match ins.op {
+                Op::Fmac => {
+                    let (r, act) = unit.fmac_mode(ins.rounding, a, b, c);
+                    if let Some(t) = trace.as_deref_mut() {
+                        let mut acc = ActivityAccumulator::default();
+                        acc.record(&act);
+                        t.push_op(&acc);
+                    }
+                    r
+                }
+                Op::Mul => {
+                    let r = crate::arch::softfloat::mul(unit.format, ins.rounding, a, b);
+                    if let Some(t) = trace.as_deref_mut() {
+                        t.push_untracked_ops(1);
+                    }
+                    r
+                }
+                Op::Add => {
+                    let r = crate::arch::softfloat::add(unit.format, ins.rounding, a, c);
+                    if let Some(t) = trace.as_deref_mut() {
+                        t.push_untracked_ops(1);
+                    }
+                    r
+                }
+                Op::Nop => unreachable!(),
+            };
+            if let Some(t) = trace.as_deref_mut() {
+                // Bypass-throttled issue: the slots between
+                // successive ops are stalls.
+                t.push_idle(issue_dist - 1);
+            }
+            forward = r.bits;
+            self.result.write(*result_wptr, r.bits)?;
+            *result_wptr += 1;
+            stats.ops += 1;
+            stats.cycles += issue_dist;
+        }
+        // Pipeline drain between instructions.
+        if let Some(t) = trace.as_deref_mut() {
+            t.push_idle(lat.full as u64);
+        }
+        stats.cycles += lat.full as u64;
+        Ok(())
+    }
+
+    /// Execute a decoded repeat window `count` times out of the micro-op
+    /// buffer. Batchable micro-op instances (all-independent operands at
+    /// batchable rounding) gather across iterations into homogeneous
+    /// runs that issue one op per cycle through the batch engine path;
+    /// the whole repeat pays one decode cycle up front and a *single*
+    /// pipeline drain at the end, instead of one drain per instruction.
+    /// The forwarding register resets on repeat entry and then persists
+    /// across iterations, so a one-op accumulation window reduces across
+    /// the entire repeat.
+    fn exec_repeat(
+        &mut self,
+        micro: &[Instruction],
+        count: u32,
+        streams: &mut [Option<StreamState>; 3],
+        result_wptr: &mut usize,
+        stats: &mut RunStats,
+        trace: &mut Option<&mut ActivityTrace>,
+    ) -> crate::Result<()> {
+        // One cycle to decode the window into the micro-op buffer.
+        stats.cycles += 1;
+        stats.repeat_cycles += 1;
+        if let Some(t) = trace.as_deref_mut() {
+            t.push_idle(1);
+        }
+
+        let guard = *result_wptr;
+        let units = self.units;
+        let mut forward: u64 = 0;
+        let mut pending: Option<PendingRun> = None;
+        self.burst_triples.clear();
+        for _iter in 0..count {
+            for ins in micro {
+                if matches!(ins.op, Op::Nop) {
+                    self.flush_repeat_run(&mut pending, result_wptr, &mut forward, stats, trace)?;
+                    let bubbles = ins.repeat as u64 + 1;
+                    if let Some(t) = trace.as_deref_mut() {
+                        t.push_idle(bubbles);
+                    }
+                    stats.cycles += bubbles;
+                    stats.repeat_cycles += bubbles;
+                    continue;
+                }
+                let unit = &units[ins.unit as usize];
+                let one = one_bits(unit);
+                let uses_fwd_c = ins.src_c == SrcSel::Forward;
+                let uses_fwd_ab = ins.src_a == SrcSel::Forward || ins.src_b == SrcSel::Forward;
+                let scalar = uses_fwd_ab
+                    || uses_fwd_c
+                    || (matches!(ins.op, Op::Fmac) && ins.rounding != RoundMode::NearestEven);
+                if scalar {
+                    // Forwarding (or directed-rounding FMAC) micro-ops
+                    // leave the batch path: flush what's gathered, then
+                    // issue at the bypass tap distance.
+                    self.flush_repeat_run(&mut pending, result_wptr, &mut forward, stats, trace)?;
+                    let lat = LatencyModel::of(unit);
+                    let issue_dist = if uses_fwd_ab {
+                        lat.tap(DepKind::Multiplier).max(1) as u64
+                    } else if uses_fwd_c {
+                        lat.tap(DepKind::Accumulate).max(1) as u64
+                    } else {
+                        1
+                    };
+                    for i in 0..=(ins.repeat as usize) {
+                        let addr = ins.base_addr as usize + i;
+                        let a = fetch_operand(
+                            ins.src_a, 0, addr, self.stim_a, self.result, streams, one, forward,
+                            guard,
+                        )?;
+                        let b = fetch_operand(
+                            ins.src_b, 1, addr, self.stim_b, self.result, streams, one, forward,
+                            guard,
+                        )?;
+                        let c = fetch_operand(
+                            ins.src_c, 2, addr, self.stim_c, self.result, streams, one, forward,
+                            guard,
+                        )?;
+                        let r = match ins.op {
+                            Op::Fmac => {
+                                let (r, act) = unit.fmac_mode(ins.rounding, a, b, c);
+                                if let Some(t) = trace.as_deref_mut() {
+                                    let mut acc = ActivityAccumulator::default();
+                                    acc.record(&act);
+                                    t.push_op(&acc);
+                                }
+                                r
+                            }
+                            Op::Mul => {
+                                let r =
+                                    crate::arch::softfloat::mul(unit.format, ins.rounding, a, b);
+                                if let Some(t) = trace.as_deref_mut() {
+                                    t.push_untracked_ops(1);
+                                }
+                                r
+                            }
+                            Op::Add => {
+                                let r =
+                                    crate::arch::softfloat::add(unit.format, ins.rounding, a, c);
+                                if let Some(t) = trace.as_deref_mut() {
+                                    t.push_untracked_ops(1);
+                                }
+                                r
+                            }
+                            Op::Nop => unreachable!(),
+                        };
+                        if let Some(t) = trace.as_deref_mut() {
+                            t.push_idle(issue_dist - 1);
+                        }
+                        forward = r.bits;
+                        self.result.write(*result_wptr, r.bits)?;
+                        *result_wptr += 1;
+                        stats.ops += 1;
+                        stats.repeat_ops += 1;
+                        stats.cycles += issue_dist;
+                        stats.repeat_cycles += issue_dist;
+                    }
+                    continue;
+                }
+                let key = PendingRun {
+                    unit_idx: ins.unit as usize,
+                    op: ins.op,
+                    rounding: ins.rounding,
+                };
+                if pending != Some(key) || self.burst_triples.len() >= REPEAT_FLUSH_OPS {
+                    self.flush_repeat_run(&mut pending, result_wptr, &mut forward, stats, trace)?;
+                    pending = Some(key);
+                }
+                for i in 0..=(ins.repeat as usize) {
+                    let addr = ins.base_addr as usize + i;
+                    let a = fetch_operand(
+                        ins.src_a, 0, addr, self.stim_a, self.result, streams, one, 0, guard,
+                    )?;
+                    let b = fetch_operand(
+                        ins.src_b, 1, addr, self.stim_b, self.result, streams, one, 0, guard,
+                    )?;
+                    let c = fetch_operand(
+                        ins.src_c, 2, addr, self.stim_c, self.result, streams, one, 0, guard,
+                    )?;
+                    self.burst_triples.push(OperandTriple { a, b, c });
+                }
+            }
+        }
+        self.flush_repeat_run(&mut pending, result_wptr, &mut forward, stats, trace)?;
+        // A single pipeline drain for the whole repeat: back-to-back
+        // issue keeps the pipe full across iterations, so only the tail
+        // of the deepest unit in the window is exposed.
+        let drain = micro
+            .iter()
+            .filter(|m| !matches!(m.op, Op::Nop))
+            .map(|m| LatencyModel::of(&units[m.unit as usize]).full as u64)
+            .max()
+            .unwrap_or(0);
+        if let Some(t) = trace.as_deref_mut() {
+            t.push_idle(drain);
+        }
+        stats.cycles += drain;
+        stats.repeat_cycles += drain;
+        Ok(())
+    }
+
+    /// Issue the gathered run of batchable micro-op instances through
+    /// the batch engine path: one op per cycle, results written in
+    /// gather order, forwarding register left holding the last result
+    /// (exactly what op-at-a-time execution would leave).
+    fn flush_repeat_run(
+        &mut self,
+        pending: &mut Option<PendingRun>,
+        result_wptr: &mut usize,
+        forward: &mut u64,
+        stats: &mut RunStats,
+        trace: &mut Option<&mut ActivityTrace>,
+    ) -> crate::Result<()> {
+        let Some(run) = pending.take() else {
+            return Ok(());
+        };
+        let n = self.burst_triples.len();
+        if n == 0 {
+            return Ok(());
+        }
+        if self.burst_bits.len() < n {
+            self.burst_bits.resize(n, 0);
+        }
+        let units = self.units;
+        let unit = &units[run.unit_idx];
+        let bits = &mut self.burst_bits[..n];
+        match run.op {
+            Op::Fmac => match trace.as_deref_mut() {
+                Some(t) => t
+                    .push_batch_tracked(unit, &self.burst_triples[..], bits)
+                    .expect("burst scratch sized together"),
+                None => unit.fmac_batch(&self.burst_triples[..], bits),
+            },
+            Op::Mul => {
+                mul_batch(unit.format, run.rounding, &self.burst_triples[..], bits);
+                if let Some(t) = trace.as_deref_mut() {
+                    t.push_untracked_ops(n as u64);
+                }
+            }
+            Op::Add => {
+                add_batch(unit.format, run.rounding, &self.burst_triples[..], bits);
+                if let Some(t) = trace.as_deref_mut() {
+                    t.push_untracked_ops(n as u64);
+                }
+            }
+            Op::Nop => unreachable!("nop micro-ops are never batched"),
+        }
+        *forward = bits[n - 1];
+        for &r in &self.burst_bits[..n] {
+            self.result.write(*result_wptr, r)?;
+            *result_wptr += 1;
+        }
+        stats.ops += n as u64;
+        stats.repeat_ops += n as u64;
+        stats.cycles += n as u64;
+        stats.repeat_cycles += n as u64;
+        self.burst_triples.clear();
+        Ok(())
     }
 }
 
@@ -319,6 +752,7 @@ pub fn expected_result(unit: &FpuUnit, mode: RoundMode, a: u64, b: u64, c: u64, 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::chip::isa::StreamPort;
     use crate::workloads::throughput::{OperandMix, OperandStream};
 
     fn load_triples(chip: &mut FpMaxChip, triples: &[(u64, u64, u64)]) {
@@ -575,5 +1009,263 @@ mod tests {
         let prog = [Instruction::fmac_burst(UnitSel::SpFma, 4, 8).encode() as u64];
         chip.jtag().load_bank(BANK_PROGRAM, &prog).unwrap();
         assert!(chip.run().is_err()); // reads addresses 4..12 in a depth-8 RAM
+    }
+
+    fn stream_word(d: StreamDesc) -> u64 {
+        SeqWord::Stream(d).encode()
+    }
+
+    fn unit_stride(port: StreamPort, base: u16, len: u16) -> StreamDesc {
+        StreamDesc { port, bank: StreamBank::Stim, base, stride0: 1, len0: len, stride1: 0 }
+    }
+
+    #[test]
+    fn repeat_window_matches_unrolled_and_hits_occupancy() {
+        // The same three armed streams feed a 1-word FMAC window either
+        // looped by a Repeat or unrolled into n program words. Results
+        // must be bit-identical; the repeat path must hit the kernel
+        // gates (in-burst occupancy ≥ 0.9, ≥ 1.5× issue rate).
+        let n: usize = 64;
+        let mut stream = OperandStream::new(Precision::Single, OperandMix::Finite, 9);
+        let triples: Vec<(u64, u64, u64)> =
+            stream.batch(n).into_iter().map(|t| (t.a, t.b, t.c)).collect();
+        let micro = Instruction {
+            unit: UnitSel::SpFma,
+            op: Op::Fmac,
+            rounding: RoundMode::NearestEven,
+            src_a: SrcSel::Ram,
+            src_b: SrcSel::Ram,
+            src_c: SrcSel::Ram,
+            base_addr: 0,
+            repeat: 0,
+        };
+        let arm = |port| stream_word(unit_stride(port, 0, n as u16));
+        let repeat_prog = [
+            arm(StreamPort::A),
+            arm(StreamPort::B),
+            arm(StreamPort::C),
+            SeqWord::Repeat { window: 1, count: n as u32 }.encode(),
+            micro.encode() as u64,
+        ];
+        let mut unrolled_prog =
+            vec![arm(StreamPort::A), arm(StreamPort::B), arm(StreamPort::C)];
+        unrolled_prog.extend(std::iter::repeat(micro.encode() as u64).take(n));
+
+        let mut chip = FpMaxChip::new(128);
+        load_triples(&mut chip, &triples);
+        chip.jtag().load_bank(BANK_PROGRAM, &repeat_prog).unwrap();
+        let (stats, trace) = chip.run_traced(64).unwrap();
+        assert_eq!(stats.ops, n as u64);
+        assert_eq!(stats.repeat_ops, n as u64);
+        assert_eq!(stats.results_written, n as u64);
+        // Repeat burst: one decode cycle, one op per cycle, one drain.
+        let lat = chip.unit(UnitSel::SpFma).latency_full() as u64;
+        assert_eq!(stats.repeat_cycles, 1 + n as u64 + lat);
+        // Whole run adds one latch cycle per stream word.
+        assert_eq!(stats.cycles, 3 + stats.repeat_cycles);
+        assert_eq!(trace.total_slots(), stats.cycles, "slots==cycles through the repeat path");
+        assert!(
+            stats.repeat_occupancy() >= 0.9,
+            "in-burst occupancy {} below the kernel gate",
+            stats.repeat_occupancy()
+        );
+        let repeat_results = chip.jtag().read_bank(BANK_RESULT, n).unwrap();
+        for (i, &(a, b, c)) in triples.iter().enumerate() {
+            let want =
+                expected_result(chip.unit(UnitSel::SpFma), RoundMode::NearestEven, a, b, c, Op::Fmac);
+            assert_eq!(repeat_results[i], want, "op {i}");
+        }
+
+        let mut chip2 = FpMaxChip::new(128);
+        load_triples(&mut chip2, &triples);
+        chip2.jtag().load_bank(BANK_PROGRAM, &unrolled_prog).unwrap();
+        let stats2 = chip2.run().unwrap();
+        assert_eq!(stats2.ops, n as u64);
+        assert_eq!(stats2.repeat_ops, 0, "unrolled path never enters the repeat buffer");
+        assert_eq!(
+            chip2.jtag().read_bank(BANK_RESULT, n).unwrap(),
+            repeat_results,
+            "repeat and unrolled programs must be bit-identical"
+        );
+        // Unrolled pays a full pipeline drain per instruction; the
+        // repeat path amortizes it to one.
+        let speedup = stats2.cycles as f64 / stats.cycles as f64;
+        assert!(speedup >= 1.5, "issue-rate speedup {speedup} below the kernel gate");
+    }
+
+    #[test]
+    fn result_streams_chain_passes_and_guard_rejects_in_window_reads() {
+        // Pass 1 writes r[0..n); pass 2 streams those results back in on
+        // port C. Reading the result bank *inside* the window being
+        // written is a sequencing error, not silent staleness.
+        let n: usize = 16;
+        let mut stream = OperandStream::new(Precision::Single, OperandMix::Finite, 41);
+        let triples: Vec<(u64, u64, u64)> =
+            stream.batch(n).into_iter().map(|t| (t.a, t.b, t.c)).collect();
+        let micro1 = Instruction {
+            unit: UnitSel::SpFma,
+            op: Op::Fmac,
+            rounding: RoundMode::NearestEven,
+            src_a: SrcSel::Ram,
+            src_b: SrcSel::Ram,
+            src_c: SrcSel::Zero,
+            base_addr: 0,
+            repeat: 0,
+        };
+        let micro2 = Instruction { src_b: SrcSel::One, src_c: SrcSel::Ram, ..micro1 };
+        let result_c = StreamDesc {
+            port: StreamPort::C,
+            bank: StreamBank::Result,
+            base: 0,
+            stride0: 1,
+            len0: n as u16,
+            stride1: 0,
+        };
+        let prog = [
+            stream_word(unit_stride(StreamPort::A, 0, n as u16)),
+            stream_word(unit_stride(StreamPort::B, 0, n as u16)),
+            SeqWord::Repeat { window: 1, count: n as u32 }.encode(),
+            micro1.encode() as u64,
+            // Pass 2: rewind A, chain C off pass 1's results.
+            stream_word(unit_stride(StreamPort::A, 0, n as u16)),
+            stream_word(result_c),
+            SeqWord::Repeat { window: 1, count: n as u32 }.encode(),
+            micro2.encode() as u64,
+        ];
+        let mut chip = FpMaxChip::new(64);
+        load_triples(&mut chip, &triples);
+        chip.jtag().load_bank(BANK_PROGRAM, &prog).unwrap();
+        let stats = chip.run().unwrap();
+        assert_eq!(stats.ops, 2 * n as u64);
+        assert_eq!(stats.results_written, 2 * n as u64);
+        let results = chip.jtag().read_bank(BANK_RESULT, 2 * n).unwrap();
+        for (i, &(a, b, _)) in triples.iter().enumerate() {
+            let fa = f32::from_bits(a as u32);
+            let fb = f32::from_bits(b as u32);
+            let r1 = fa.mul_add(fb, 0.0);
+            assert_eq!(results[i] as u32, r1.to_bits(), "pass 1 op {i}");
+            let r2 = fa.mul_add(1.0, r1);
+            assert_eq!(results[n + i] as u32, r2.to_bits(), "pass 2 op {i}");
+        }
+
+        // Guard: a result stream aimed at the region this same repeat is
+        // writing must reject (write pointer was 0 at issue).
+        let bad = [
+            stream_word(unit_stride(StreamPort::A, 0, n as u16)),
+            stream_word(result_c),
+            SeqWord::Repeat { window: 1, count: n as u32 }.encode(),
+            micro2.encode() as u64,
+        ];
+        let mut chip2 = FpMaxChip::new(64);
+        load_triples(&mut chip2, &triples);
+        chip2.jtag().load_bank(BANK_PROGRAM, &bad).unwrap();
+        let err = chip2.run().unwrap_err().to_string();
+        assert!(err.contains("inside the window being written"), "got: {err}");
+    }
+
+    #[test]
+    fn repeat_forwarding_accumulates_across_iterations() {
+        // A one-op accumulation window (c = Forward) looped by a Repeat
+        // reduces across the whole repeat: the forwarding register
+        // resets on entry and persists across iterations, throttled to
+        // the bypass tap like the classic accumulate burst.
+        let xs: Vec<f32> = (1..=8).map(|i| i as f32).collect();
+        let triples: Vec<(u64, u64, u64)> =
+            xs.iter().map(|x| (0, x.to_bits() as u64, 0)).collect();
+        let micro = Instruction {
+            unit: UnitSel::SpCma,
+            op: Op::Fmac,
+            rounding: RoundMode::NearestEven,
+            src_a: SrcSel::One,
+            src_b: SrcSel::Ram,
+            src_c: SrcSel::Forward,
+            base_addr: 0,
+            repeat: 0,
+        };
+        let prog = [
+            stream_word(unit_stride(StreamPort::B, 0, 8)),
+            SeqWord::Repeat { window: 1, count: 8 }.encode(),
+            micro.encode() as u64,
+        ];
+        let mut chip = FpMaxChip::new(32);
+        load_triples(&mut chip, &triples);
+        chip.jtag().load_bank(BANK_PROGRAM, &prog).unwrap();
+        let (stats, trace) = chip.run_traced(16).unwrap();
+        assert_eq!(stats.ops, 8);
+        assert_eq!(stats.repeat_ops, 8);
+        let tap = chip.unit(UnitSel::SpCma).latency_to_add_input() as u64;
+        let lat = chip.unit(UnitSel::SpCma).latency_full() as u64;
+        assert_eq!(stats.repeat_cycles, 1 + 8 * tap + lat);
+        assert_eq!(stats.cycles, 1 + stats.repeat_cycles);
+        assert_eq!(trace.total_slots(), stats.cycles);
+        let results = chip.jtag().read_bank(BANK_RESULT, 8).unwrap();
+        let want = [1.0f32, 3.0, 6.0, 10.0, 15.0, 21.0, 28.0, 36.0];
+        for (i, w) in want.iter().enumerate() {
+            assert_eq!(f32::from_bits(results[i] as u32), *w, "op {i}");
+        }
+    }
+
+    #[test]
+    fn stream_disarm_restores_sequential_addressing() {
+        let n: usize = 8;
+        let mut stream = OperandStream::new(Precision::Single, OperandMix::Finite, 13);
+        let triples: Vec<(u64, u64, u64)> =
+            stream.batch(2 * n).into_iter().map(|t| (t.a, t.b, t.c)).collect();
+        let prog = [
+            // Burst 1: port A streams a[n..2n) while B/C walk 0..n.
+            stream_word(unit_stride(StreamPort::A, n as u16, n as u16)),
+            Instruction::fmac_burst(UnitSel::SpFma, 0, n as u16).encode() as u64,
+            // Burst 2: disarm A; plain sequential a[0..n) again.
+            stream_word(StreamDesc::disarm(StreamPort::A)),
+            Instruction::fmac_burst(UnitSel::SpFma, 0, n as u16).encode() as u64,
+        ];
+        let mut chip = FpMaxChip::new(32);
+        load_triples(&mut chip, &triples);
+        chip.jtag().load_bank(BANK_PROGRAM, &prog).unwrap();
+        let stats = chip.run().unwrap();
+        assert_eq!(stats.ops, 2 * n as u64);
+        // Plain bursts outside a repeat never count as repeat cycles.
+        assert_eq!(stats.repeat_cycles, 0);
+        let results = chip.jtag().read_bank(BANK_RESULT, 2 * n).unwrap();
+        let unit = chip.unit(UnitSel::SpFma);
+        for i in 0..n {
+            let (_, b, c) = triples[i];
+            let streamed = triples[n + i].0;
+            let want1 = expected_result(unit, RoundMode::NearestEven, streamed, b, c, Op::Fmac);
+            assert_eq!(results[i], want1, "streamed op {i}");
+            let plain = triples[i].0;
+            let want2 = expected_result(unit, RoundMode::NearestEven, plain, b, c, Op::Fmac);
+            assert_eq!(results[n + i], want2, "plain op {i}");
+        }
+    }
+
+    #[test]
+    fn malformed_repeat_windows_reject() {
+        let micro = Instruction::fmac_burst(UnitSel::SpFma, 0, 1).encode() as u64;
+        let run_prog = |prog: &[u64]| -> String {
+            let mut chip = FpMaxChip::new(16);
+            load_triples(&mut chip, &[(0, 0, 0); 8]);
+            chip.jtag().load_bank(BANK_PROGRAM, prog).unwrap();
+            chip.run().unwrap_err().to_string()
+        };
+        // A Repeat inside another Repeat's window overlaps.
+        let nested = [
+            SeqWord::Repeat { window: 2, count: 2 }.encode(),
+            SeqWord::Repeat { window: 1, count: 1 }.encode(),
+            micro,
+        ];
+        let err = run_prog(&nested);
+        assert!(err.contains("overlapping repeat windows"), "got: {err}");
+        // A stream descriptor cannot be re-armed mid-window.
+        let midstream = [
+            SeqWord::Repeat { window: 1, count: 1 }.encode(),
+            stream_word(unit_stride(StreamPort::A, 0, 4)),
+        ];
+        let err = run_prog(&midstream);
+        assert!(err.contains("inside a repeat window"), "got: {err}");
+        // A window may not run past the loaded program.
+        let overrun = [SeqWord::Repeat { window: 2, count: 1 }.encode(), micro];
+        let err = run_prog(&overrun);
+        assert!(err.contains("runs past the end of the program"), "got: {err}");
     }
 }

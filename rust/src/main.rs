@@ -31,12 +31,15 @@
 //!              [--window] [--sub-ops] [--ring] [--workers BUDGET]
 //!              [--deadline-ms 60000] [--retries 8] [--backoff-us 500]
 //!              [--backoff-cap-ms 50] [--json PATH]
-//! fpmax replay [--trace uniform|diurnal-skew|burst-shift] [--ops 60000]
+//! fpmax replay [--trace uniform|diurnal-skew|burst-shift|transprecision] [--ops 60000]
 //!              [--seed 42] [--policy static|energy-aware|both]
 //!              [--plan none|kill-all-slots] [--fidelity ...] [--bb ...]
 //!              [--window] [--ring] [--workers BUDGET] [--deadline-ms 60000]
 //!              [--retries 200] [--backoff-us 200] [--backoff-cap-ms 10]
 //!              [--verify-determinism] [--expect-dominance] [--json PATH]
+//! fpmax kernels [--unit dp_cma|dp_fma|sp_cma|sp_fma] [--seed 42]
+//!              [--window 256] [--min-occupancy 0.9] [--min-speedup 1.5]
+//!              [--gemm MxNxK] [--json PATH]
 //! ```
 //!
 //! `fuzz` is the differential conformance harness (`arch::fuzz`): every
@@ -97,9 +100,11 @@
 //! shard incarnations.
 //!
 //! `replay` is the routing-policy experiment: a seeded multi-tenant
-//! trace (diurnal duty cycles, heavy-tailed bursts, mid-run mix shifts
-//! — `runtime::trace`) is replayed against the fleet under one or both
-//! routing policies. `--policy both` (default) runs the static Table-1
+//! trace (diurnal duty cycles, heavy-tailed bursts, mid-run mix shifts,
+//! transprecision tenants spanning the 12-class matrix —
+//! `runtime::trace`; the fleet automatically grows a CMA + FMA shard
+//! per small format the trace arms) is replayed against the fleet
+//! under one or both routing policies. `--policy both` (default) runs the static Table-1
 //! baseline and the energy-aware feedback policy on the **same** trace
 //! and reports the dominance verdict (dynamic throughput and fleet
 //! pJ/op vs static); `--expect-dominance` turns the verdict into a hard
@@ -110,6 +115,17 @@
 //! shard, composing the chaos drill with the trace's duty cycle. Emits
 //! the `bench: "routing"` JSON artifact the CI `routing` checker
 //! re-derives the verdict from.
+//!
+//! `kernels` runs the repeat-buffer kernel suite (GEMM tile, 3-tap
+//! stencil, dot-product chains — `workloads::kernels`) on the chip
+//! sequencer: each kernel executes both as a stream-fed repeat-buffer
+//! program and as its bit-identical unrolled reference, and the command
+//! hard-fails on any result-bank mismatch, an in-burst occupancy below
+//! `--min-occupancy`, or an issue-rate speedup below `--min-speedup`.
+//! `--gemm MxNxK` swaps the default 16×16×8 tile (the CI smoke runs a
+//! small tile on two presets). Emits the `bench: "kernels"` JSON
+//! artifact (`--json PATH`) whose raw cycle/op counts the CI `kernels`
+//! checker re-derives both verdicts from.
 
 use fpmax::arch::fp::Precision;
 use fpmax::arch::generator::{FpuConfig, FpuKind, FpuUnit};
@@ -343,12 +359,15 @@ fn main() -> fpmax::Result<()> {
         Some("replay") => {
             replay_cmd(&args)?;
         }
+        Some("kernels") => {
+            kernels_cmd(&args)?;
+        }
         other => {
             if let Some(cmd) = other {
                 eprintln!("unknown subcommand {cmd:?}\n");
             }
             eprintln!(
-                "usage: fpmax <table1|table2|fig2c|fig3|fig4|calib|sweep|verify|fuzz|selftest|serve|chaos|replay> [options]"
+                "usage: fpmax <table1|table2|fig2c|fig3|fig4|calib|sweep|verify|fuzz|selftest|serve|chaos|replay|kernels> [options]"
             );
             std::process::exit(2);
         }
@@ -1232,9 +1251,11 @@ fn replay_cmd(args: &Args) -> fpmax::Result<()> {
     use fpmax::coordinator::{ReplayOutcome, ReplayReport};
     use fpmax::runtime::chaos::FaultPlan;
     use fpmax::runtime::router::{
-        EnergyAware, RetryPolicy, RoutePolicy, RouterConfig, ServeRouter, StaticAffinity,
+        EnergyAware, RetryPolicy, RoutePolicy, RouterConfig, ServeRouter, ShardSpec,
+        StaticAffinity,
     };
-    use fpmax::runtime::trace::{Trace, TraceConfig};
+    use fpmax::runtime::serve::ServeConfig;
+    use fpmax::runtime::trace::{Trace, TraceConfig, SMALL_TIERS};
     use std::sync::Arc;
     use std::time::Duration;
 
@@ -1277,7 +1298,26 @@ fn replay_cmd(args: &Args) -> fpmax::Result<()> {
         trace.fingerprint,
     );
 
-    let specs = ServeRouter::fleet_nominal(fidelity, adaptive, workers_budget, window, ring)?;
+    // The Table-1 four, plus a CMA + FMA shard per transprecision tier
+    // the trace actually arms — the static policy hard-errors on any
+    // class no shard serves, so the fleet must cover the trace's mix.
+    let build_fleet = || -> fpmax::Result<Vec<ShardSpec>> {
+        let mut specs =
+            ServeRouter::fleet_nominal(fidelity, adaptive, workers_budget, window, ring)?;
+        for (prec, &frac) in SMALL_TIERS.iter().zip(&tcfg.small_fracs) {
+            if frac > 0.0 {
+                for config in [FpuConfig::cma_of(*prec), FpuConfig::fma_of(*prec)] {
+                    let mut serve = ServeConfig::nominal(&config, adaptive)?;
+                    serve.workers = 1;
+                    serve.window_ops = window;
+                    serve.ring_windows = ring;
+                    specs.push(ShardSpec { config, tier: fidelity, serve });
+                }
+            }
+        }
+        Ok(specs)
+    };
+    let specs = build_fleet()?;
     let plan = match args.get("plan").unwrap_or("none") {
         "none" => FaultPlan::none(seed),
         "kill-all-slots" => {
@@ -1293,8 +1333,7 @@ fn replay_cmd(args: &Args) -> fpmax::Result<()> {
     let deadline = Duration::from_millis(deadline_ms);
 
     let run_arm = |policy: Arc<dyn RoutePolicy>| -> fpmax::Result<ReplayOutcome> {
-        let specs =
-            ServeRouter::fleet_nominal(fidelity, adaptive, workers_budget, window, ring)?;
+        let specs = build_fleet()?;
         let rcfg = RouterConfig::no_spill(workers_budget);
         fpmax::coordinator::serve_trace(
             &specs, rcfg, fidelity, &trace, policy, &plan, deadline, retry,
@@ -1628,6 +1667,118 @@ fn windowed_bb_report(
     anyhow::ensure!(
         overhead <= max_overhead,
         "trace-tracking overhead {overhead:.2}× exceeds the --max-trace-overhead {max_overhead}× budget"
+    );
+    Ok(())
+}
+
+/// The `fpmax kernels` subcommand: run the repeat-buffer kernel suite
+/// against its unrolled references on the chip sequencer, print the
+/// per-kernel table, optionally emit the `bench: "kernels"` JSON
+/// artifact, and hard-gate on bit-identity, in-burst occupancy and
+/// issue-rate speedup.
+fn kernels_cmd(args: &Args) -> fpmax::Result<()> {
+    use fpmax::report::kernels::{render, run_kernel, run_suite, KernelRow};
+    use fpmax::workloads::kernels::gemm_tile;
+
+    let seed = args.get_parse("seed", 42u64)?;
+    let window = args.get_parse("window", 256u64)?;
+    let min_occ = args.get_parse("min-occupancy", 0.9f64)?;
+    let min_speedup = args.get_parse("min-speedup", 1.5f64)?;
+    let json_path = args.get("json").map(|s| s.to_string());
+    anyhow::ensure!(window >= 1, "--window must be at least 1 slot");
+    let units: Vec<UnitSel> = match args.get("unit") {
+        None => UnitSel::ALL.to_vec(),
+        Some(name) => vec![match name {
+            "dp_cma" | "dp-cma" => UnitSel::DpCma,
+            "dp_fma" | "dp-fma" => UnitSel::DpFma,
+            "sp_cma" | "sp-cma" => UnitSel::SpCma,
+            "sp_fma" | "sp-fma" => UnitSel::SpFma,
+            other => {
+                anyhow::bail!("--unit must be one of dp_cma|dp_fma|sp_cma|sp_fma, got {other}")
+            }
+        }],
+    };
+    let rows: Vec<KernelRow> = match args.get("gemm") {
+        // A single explicit GEMM tile (the CI smoke shape) instead of
+        // the full three-kernel suite.
+        Some(shape) => {
+            let dims: Vec<usize> =
+                shape.split('x').map(str::parse).collect::<Result<_, _>>().map_err(|_| {
+                    anyhow::anyhow!("--gemm must be MxNxK (e.g. 8x8x4), got {shape}")
+                })?;
+            anyhow::ensure!(dims.len() == 3, "--gemm must be MxNxK (e.g. 8x8x4), got {shape}");
+            let mut rows = Vec::new();
+            for &unit in &units {
+                rows.push(run_kernel(&gemm_tile(unit, dims[0], dims[1], dims[2], seed), window)?);
+            }
+            rows
+        }
+        None => run_suite(&units, seed, window)?,
+    };
+    print!("{}", render(&rows));
+
+    if let Some(path) = &json_path {
+        let mut s = String::from("{\n  \"bench\": \"kernels\",\n  \"measured\": true,\n");
+        s.push_str(&format!("  \"seed\": {seed},\n  \"window_slots\": {window},\n"));
+        s.push_str(&format!(
+            "  \"thresholds\": {{\n    \"min_frep_occupancy\": {min_occ},\n    \
+             \"min_frep_issue_speedup_vs_unrolled\": {min_speedup},\n    \
+             \"max_result_mismatches\": 0\n  }},\n  \"rows\": [\n"
+        ));
+        for (i, r) in rows.iter().enumerate() {
+            s.push_str(&format!(
+                "    {{\"kernel\": \"{}\", \"unit\": \"{}\", \"ops\": {}, \
+                 \"repeat\": {{\"cycles\": {}, \"window_ops\": {}, \"window_cycles\": {}}}, \
+                 \"unrolled\": {{\"cycles\": {}}}, \"result_mismatches\": {}, \
+                 \"occupancy_in_burst\": {:.6}, \"issue_speedup\": {:.6}, \
+                 \"pj_per_op_repeat\": {:.6}, \"pj_per_op_unrolled\": {:.6}}}{}\n",
+                r.kernel,
+                r.unit.name(),
+                r.ops,
+                r.repeat_cycles,
+                r.window_ops,
+                r.window_cycles,
+                r.unrolled_cycles,
+                r.result_mismatches,
+                r.occupancy_in_burst,
+                r.issue_speedup,
+                r.pj_per_op_repeat,
+                r.pj_per_op_unrolled,
+                if i + 1 == rows.len() { "" } else { "," },
+            ));
+        }
+        s.push_str("  ]\n}\n");
+        std::fs::write(path, s)?;
+        println!("wrote {path}");
+    }
+
+    // Hard gates: every kernel on every preset, no averaging.
+    for r in &rows {
+        anyhow::ensure!(
+            r.result_mismatches == 0,
+            "{} on {}: {} result words differ between repeat and unrolled programs",
+            r.kernel,
+            r.unit.name(),
+            r.result_mismatches
+        );
+        anyhow::ensure!(
+            r.occupancy_in_burst >= min_occ,
+            "{} on {}: in-burst occupancy {:.4} below the {min_occ} gate",
+            r.kernel,
+            r.unit.name(),
+            r.occupancy_in_burst
+        );
+        anyhow::ensure!(
+            r.issue_speedup >= min_speedup,
+            "{} on {}: issue speedup {:.3}x below the {min_speedup}x gate",
+            r.kernel,
+            r.unit.name(),
+            r.issue_speedup
+        );
+    }
+    println!(
+        "kernels: {} rows, all bit-identical; occupancy >= {min_occ}, speedup >= {min_speedup}x",
+        rows.len()
     );
     Ok(())
 }

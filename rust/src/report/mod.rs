@@ -7,6 +7,7 @@ pub mod fig2c;
 pub mod fig3;
 pub mod fig4;
 pub mod formats;
+pub mod kernels;
 pub mod table1;
 pub mod table2;
 

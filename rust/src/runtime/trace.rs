@@ -21,6 +21,12 @@
 //!   `sp_frac_start` to `sp_frac_end` at the `shift_at` fraction of
 //!   each tenant's budget, so a policy is judged on how it re-biases
 //!   when the workload changes shape under it.
+//! * **Transprecision tenants** — `small_fracs` routes a share of
+//!   every tenant's traffic into the FP16/BF16/FP8 tiers of the
+//!   12-class [`WorkloadClass`] matrix (the `transprecision` preset
+//!   exercises all four small formats); all-zero shares reproduce the
+//!   legacy two-class SP/DP draw bit-for-bit, so the original presets
+//!   keep their fingerprints.
 //!
 //! Time is *virtual*: a trace is a sorted sequence of [`TraceEvent`]s
 //! on an integer slot axis. The replay harness
@@ -75,7 +81,18 @@ pub struct TraceConfig {
     /// Fraction of each tenant's op budget at which the SP share
     /// shifts (1.0 ⇒ no shift).
     pub shift_at: f64,
+    /// Share of traffic in each transprecision tier, in
+    /// [`SMALL_TIERS`] order (fp16, bf16, fp8e4m3, fp8e5m2). These are
+    /// carved off *before* the SP/DP split; the remaining
+    /// `1 − Σ small_fracs` is divided by `sp_frac`. All-zero keeps the
+    /// draw (and therefore every legacy preset's fingerprint)
+    /// bit-identical to the two-class generator.
+    pub small_fracs: [f64; 4],
 }
+
+/// The transprecision tiers `small_fracs` indexes, in order.
+pub const SMALL_TIERS: [Precision; 4] =
+    [Precision::Half, Precision::Bfloat16, Precision::Fp8E4M3, Precision::Fp8E5M2];
 
 impl TraceConfig {
     /// The null hypothesis: flat duty, no bursts to speak of, balanced
@@ -95,6 +112,7 @@ impl TraceConfig {
             sp_frac_start: 0.5,
             sp_frac_end: 0.5,
             shift_at: 1.0,
+            small_fracs: [0.0; 4],
         }
     }
 
@@ -118,6 +136,7 @@ impl TraceConfig {
             sp_frac_start: 0.5,
             sp_frac_end: 0.5,
             shift_at: 1.0,
+            small_fracs: [0.0; 4],
         }
     }
 
@@ -138,12 +157,38 @@ impl TraceConfig {
             sp_frac_start: 0.8,
             sp_frac_end: 0.2,
             shift_at: 0.66,
+            small_fracs: [0.0; 4],
+        }
+    }
+
+    /// The format-fleet trace: half the traffic rides the
+    /// transprecision tiers (fp16-heavy, with bf16 and both FP8
+    /// flavors present), and the SP share of the *remaining* wide
+    /// traffic shifts from 0.6 to 0.4 halfway through — so a policy is
+    /// judged on a fleet where every class of the 12-class matrix is
+    /// live at once.
+    pub fn transprecision(seed: u64, total_ops: u64) -> TraceConfig {
+        TraceConfig {
+            seed,
+            tenants: 5,
+            total_ops,
+            slots_per_day: 448,
+            duty_mean: 0.55,
+            duty_swing: 0.6,
+            burst_mean_ops: 96.0,
+            burst_alpha: 2.0,
+            latency_frac: 0.5,
+            sp_frac_start: 0.6,
+            sp_frac_end: 0.4,
+            shift_at: 0.5,
+            small_fracs: [0.25, 0.15, 0.05, 0.05],
         }
     }
 
     /// Canned preset names (CLI `fpmax replay --trace <name>` and the
     /// CI smoke step).
-    pub const PRESETS: [&'static str; 3] = ["uniform", "diurnal-skew", "burst-shift"];
+    pub const PRESETS: [&'static str; 4] =
+        ["uniform", "diurnal-skew", "burst-shift", "transprecision"];
 
     /// Resolve a preset by name.
     pub fn preset(name: &str, seed: u64, total_ops: u64) -> Option<TraceConfig> {
@@ -151,6 +196,7 @@ impl TraceConfig {
             "uniform" => Some(TraceConfig::uniform(seed, total_ops)),
             "diurnal-skew" => Some(TraceConfig::diurnal_skew(seed, total_ops)),
             "burst-shift" => Some(TraceConfig::burst_shift(seed, total_ops)),
+            "transprecision" => Some(TraceConfig::transprecision(seed, total_ops)),
             _ => None,
         }
     }
@@ -212,6 +258,11 @@ impl Trace {
             config.duty_mean > 0.0 && config.duty_mean <= 1.0 && config.duty_swing >= 0.0,
             "duty_mean must lie in (0, 1] and duty_swing must be non-negative"
         );
+        anyhow::ensure!(
+            config.small_fracs.iter().all(|f| (0.0..=1.0).contains(f))
+                && config.small_fracs.iter().sum::<f64>() <= 1.0,
+            "small_fracs must lie in [0, 1] and sum to at most 1"
+        );
 
         let per_tenant = config.total_ops / config.tenants as u64;
         let remainder = config.total_ops % config.tenants as u64;
@@ -250,8 +301,29 @@ impl Trace {
                 } else {
                     config.sp_frac_end
                 };
-                let precision =
-                    if rng.chance(sp_frac) { Precision::Single } else { Precision::Double };
+                // One uniform draw partitions [0, 1) into the four
+                // small tiers, then SP, then DP. With all-zero
+                // small_fracs this is exactly `rng.chance(sp_frac)` —
+                // same draw count, same comparison — so the legacy
+                // presets keep their fingerprints.
+                let u = rng.f64();
+                let small_sum: f64 = config.small_fracs.iter().sum();
+                let mut acc = 0.0;
+                let mut small = None;
+                for (tier, &frac) in SMALL_TIERS.iter().zip(&config.small_fracs) {
+                    acc += frac;
+                    if u < acc {
+                        small = Some(*tier);
+                        break;
+                    }
+                }
+                let precision = small.unwrap_or(
+                    if u < small_sum + (1.0 - small_sum) * sp_frac {
+                        Precision::Single
+                    } else {
+                        Precision::Double
+                    },
+                );
                 let service = if rng.chance(config.latency_frac) {
                     ServiceClass::Latency
                 } else {
@@ -347,7 +419,11 @@ mod tests {
     fn presets_shape_the_mix_as_documented() {
         let skew = Trace::generate(TraceConfig::diurnal_skew(11, 60_000)).unwrap();
         let [spl, spb, dpl, dpb, rest @ ..] = skew.class_ops();
-        assert_eq!(rest.iter().sum::<u64>(), 0, "traces draw SP/DP classes only");
+        assert_eq!(
+            rest.iter().sum::<u64>(),
+            0,
+            "SP/DP presets (small_fracs all zero) draw SP/DP classes only"
+        );
         let latency_share = (spl + dpl) as f64 / 60_000.0;
         assert!(
             latency_share > 0.6,
@@ -378,6 +454,80 @@ mod tests {
         // diurnal: trough is genuinely quieter than the peak.
         let d = TraceConfig::diurnal_skew(1, 1_000);
         assert!(d.duty_at(d.slots_per_day / 2) < d.duty_at(0) / 2.0);
+    }
+
+    #[test]
+    fn transprecision_preset_lights_the_whole_class_matrix() {
+        let t = Trace::generate(TraceConfig::transprecision(11, 120_000)).unwrap();
+        let ops = t.class_ops();
+        // Every class of the 12-class matrix carries traffic: both
+        // service classes of SP, DP, and all four small tiers.
+        for (i, &n) in ops.iter().enumerate() {
+            assert!(n > 0, "class {i} drew no ops");
+        }
+        // The small tiers take roughly their configured half of the
+        // traffic (event-level shares land op-weighted, so allow slack).
+        let small: u64 = ops[4..].iter().sum();
+        let share = small as f64 / t.total_ops() as f64;
+        assert!(
+            (0.35..0.65).contains(&share),
+            "small tiers should carry ~0.5 of traffic, got {share:.2}"
+        );
+        // fp16 dominates the small tiers as configured (0.25 of total).
+        let fp16 = ops[4] + ops[5];
+        assert!(fp16 > ops[6] + ops[7], "fp16 should outweigh bf16");
+        assert!(fp16 > ops[8] + ops[9] + ops[10] + ops[11], "fp16 should outweigh both FP8 tiers");
+        // The wide-precision share still shifts SP→DP at the midpoint.
+        let mid = t.last_slot() / 2;
+        let wide_sp_share = |pred: &dyn Fn(&&TraceEvent) -> bool| {
+            let wide: Vec<&TraceEvent> = t
+                .events
+                .iter()
+                .filter(pred)
+                .filter(|e| {
+                    matches!(e.class.precision, Precision::Single | Precision::Double)
+                })
+                .collect();
+            wide.iter()
+                .filter(|e| e.class.precision == Precision::Single)
+                .map(|e| e.ops)
+                .sum::<u64>() as f64
+                / wide.iter().map(|e| e.ops).sum::<u64>().max(1) as f64
+        };
+        let early = wide_sp_share(&|e: &&TraceEvent| e.slot < mid);
+        let late = wide_sp_share(&|e: &&TraceEvent| e.slot >= mid);
+        assert!(early > late, "wide mix must shift SP→DP ({early:.2} vs {late:.2})");
+    }
+
+    #[test]
+    fn small_fracs_replicate_the_legacy_two_class_draw_when_disarmed() {
+        // The unified draw consumes exactly one uniform per event
+        // (like the old two-class `chance(sp_frac)`), so arming a
+        // small tier may relabel events but must not re-time them:
+        // slots, gaps, op counts and op seeds stay identical, only
+        // precision labels (and thus the fingerprint) move.
+        let base = Trace::generate(TraceConfig::diurnal_skew(42, 50_000)).unwrap();
+        let mut with_small = TraceConfig::diurnal_skew(42, 50_000);
+        with_small.small_fracs = [0.1, 0.0, 0.0, 0.0];
+        let c = Trace::generate(with_small).unwrap();
+        assert_ne!(base.fingerprint, c.fingerprint, "armed small tiers must change the trace");
+        assert_eq!(base.events.len(), c.events.len());
+        for (a, b) in base.events.iter().zip(&c.events) {
+            assert_eq!(
+                (a.tenant, a.slot, a.idle_before, a.ops, a.op_seed, a.class.service),
+                (b.tenant, b.slot, b.idle_before, b.ops, b.op_seed, b.class.service),
+                "arming a small tier may only relabel precisions"
+            );
+        }
+
+        assert!(
+            Trace::generate(TraceConfig {
+                small_fracs: [0.5, 0.4, 0.2, 0.0],
+                ..TraceConfig::uniform(1, 100)
+            })
+            .is_err(),
+            "small_fracs summing past 1 must be rejected"
+        );
     }
 
     #[test]

@@ -1,0 +1,483 @@
+//! Kernel-program builder for the chip sequencer: GEMM tiles, 3-tap
+//! stencils, and dot-product reduction chains compiled to repeat-buffer
+//! programs ([`crate::chip::SeqWord`]) for any fabricated unit preset.
+//!
+//! Every kernel is a list of [`Pass`]es. A pass arms up to three stream
+//! semantic registers and issues one micro-op `count` times; passes
+//! chain through the result bank (a later pass's stream reads an
+//! earlier pass's output region). From the same pass list the builder
+//! emits two programs over identical stimulus data:
+//!
+//! * [`KernelProgram::repeat_words`] — each pass is `count` iterations
+//!   of a one-word repeat window, the Snitch-FREP-shaped encoding that
+//!   issues one FPU op per cycle with a single pipeline drain per pass;
+//! * [`KernelProgram::unrolled_words`] — the same micro-op written
+//!   `count` times, paying the classic per-instruction drain.
+//!
+//! Both consume their streams element-for-element in the same order, so
+//! the result banks must match bit-for-bit — kernel correctness is a
+//! straight `read_bank` diff, not a tolerance comparison. The micro-op
+//! is never `Nop`: an all-zero-field `Nop` encodes to the all-zero halt
+//! word, which would end the program instead of issuing a bubble.
+
+use crate::arch::fp::Precision;
+use crate::arch::rounding::RoundMode;
+use crate::chip::isa::{
+    Instruction, Op, SeqWord, SrcSel, StreamBank, StreamDesc, StreamPort, UnitSel,
+    STREAM_STRIDE_MAX,
+};
+use crate::chip::{FpMaxChip, BANK_PROGRAM, BANK_STIM_A, BANK_STIM_B, BANK_STIM_C};
+use crate::util::Rng;
+
+/// One kernel pass: up to three armed stream registers and a micro-op
+/// issued `count` times. A `None` stream slot emits an explicit disarm
+/// word, so every pass fully determines all three stream registers.
+#[derive(Debug, Clone)]
+pub struct Pass {
+    pub streams: [Option<StreamDesc>; 3],
+    pub micro: Instruction,
+    pub count: u32,
+}
+
+/// A compiled kernel: stimulus data plus the pass list, emitted as
+/// either the repeat-buffer program or the unrolled reference.
+#[derive(Debug, Clone)]
+pub struct KernelProgram {
+    pub name: String,
+    pub unit: UnitSel,
+    pub stim_a: Vec<u64>,
+    pub stim_b: Vec<u64>,
+    pub stim_c: Vec<u64>,
+    pub passes: Vec<Pass>,
+    /// First word of the kernel's final output in the result bank.
+    pub out_base: usize,
+    /// Words of final output (earlier words are intermediate passes).
+    pub out_len: usize,
+}
+
+impl Pass {
+    fn push_arm_words(&self, out: &mut Vec<u64>) {
+        for (slot, port) in StreamPort::ALL.iter().enumerate() {
+            let desc = self.streams[slot].unwrap_or_else(|| StreamDesc::disarm(*port));
+            debug_assert_eq!(desc.port, *port, "stream slot {slot} armed for the wrong port");
+            out.push(SeqWord::Stream(desc).encode());
+        }
+    }
+}
+
+impl KernelProgram {
+    /// Total FPU ops the kernel issues (== results written).
+    pub fn ops(&self) -> u64 {
+        self.passes.iter().map(|p| p.count as u64).sum()
+    }
+
+    /// Result-bank words written across all passes.
+    pub fn results_total(&self) -> usize {
+        self.ops() as usize
+    }
+
+    /// Stimulus/result RAM depth both program variants need.
+    pub fn ram_depth(&self) -> usize {
+        self.stim_a
+            .len()
+            .max(self.stim_b.len())
+            .max(self.stim_c.len())
+            .max(self.results_total())
+    }
+
+    /// The repeat-buffer encoding: per pass, three stream words, a
+    /// `Repeat { window: 1, count }`, and the single micro-op word.
+    pub fn repeat_words(&self) -> Vec<u64> {
+        let mut out = Vec::new();
+        for pass in &self.passes {
+            pass.push_arm_words(&mut out);
+            out.push(SeqWord::Repeat { window: 1, count: pass.count }.encode());
+            let w = pass.micro.encode() as u64;
+            assert_ne!(w, 0, "micro-op encodes to the halt word");
+            out.push(w);
+        }
+        out
+    }
+
+    /// The unrolled reference encoding: the same stream words, then the
+    /// micro-op written `count` times (one full issue+drain each).
+    pub fn unrolled_words(&self) -> Vec<u64> {
+        let mut out = Vec::new();
+        for pass in &self.passes {
+            pass.push_arm_words(&mut out);
+            let w = pass.micro.encode() as u64;
+            assert_ne!(w, 0, "micro-op encodes to the halt word");
+            out.extend(std::iter::repeat(w).take(pass.count as usize));
+        }
+        out
+    }
+
+    /// A chip sized for this kernel, stimulus banks loaded. The program
+    /// RAM fits whichever word list the caller passes next.
+    pub fn fresh_chip(&self, program_words: usize) -> crate::Result<FpMaxChip> {
+        let mut chip = FpMaxChip::with_depths(self.ram_depth(), program_words + 1);
+        let mut port = chip.jtag();
+        port.load_bank(BANK_STIM_A, &self.stim_a)?;
+        port.load_bank(BANK_STIM_B, &self.stim_b)?;
+        port.load_bank(BANK_STIM_C, &self.stim_c)?;
+        Ok(chip)
+    }
+
+    /// Load `words` into a fresh, stimulus-loaded chip.
+    pub fn loaded_chip(&self, words: &[u64]) -> crate::Result<FpMaxChip> {
+        let mut chip = self.fresh_chip(words.len())?;
+        chip.jtag().load_bank(BANK_PROGRAM, words)?;
+        Ok(chip)
+    }
+}
+
+/// Seeded operand values in `[-1, 1)` encoded in the unit's precision —
+/// small magnitudes so chained kernels stay comfortably finite.
+fn operand_bits(rng: &mut Rng, precision: Precision, n: usize) -> Vec<u64> {
+    (0..n)
+        .map(|_| {
+            let v = rng.f64() * 2.0 - 1.0;
+            match precision {
+                Precision::Single => (v as f32).to_bits() as u64,
+                Precision::Double => v.to_bits(),
+                p => crate::arch::softfloat::from_f64(p.format(), v),
+            }
+        })
+        .collect()
+}
+
+fn fmac_micro(unit: UnitSel, src_c: SrcSel) -> Instruction {
+    Instruction {
+        unit,
+        op: Op::Fmac,
+        rounding: RoundMode::NearestEven,
+        src_a: SrcSel::Ram,
+        src_b: SrcSel::Ram,
+        src_c,
+        base_addr: 0,
+        repeat: 0,
+    }
+}
+
+fn stim(port: StreamPort, base: usize, stride0: i16, len0: usize, stride1: i16) -> StreamDesc {
+    StreamDesc {
+        port,
+        bank: StreamBank::Stim,
+        base: base as u16,
+        stride0,
+        len0: len0 as u16,
+        stride1,
+    }
+}
+
+fn result(port: StreamPort, base: usize, stride0: i16, len0: usize, stride1: i16) -> StreamDesc {
+    StreamDesc {
+        port,
+        bank: StreamBank::Result,
+        base: base as u16,
+        stride0,
+        len0: len0 as u16,
+        stride1,
+    }
+}
+
+/// `C[i][j] = Σ_k A[i][k]·B[k][j] + C0[i][j]` as K chained passes of
+/// M·N FMACs each. Pass `k` streams column `k` of row-major `A`
+/// (broadcast across each output row via a zero inner stride), row `k`
+/// of row-major `B`, and the previous pass's full tile from the result
+/// bank (`C0` from stimulus on pass 0). The accumulation order is the
+/// natural k-loop, so a host reference must chain `mul_add`s in `k`
+/// order to match the FMA presets bit-for-bit.
+pub fn gemm_tile(unit: UnitSel, m: usize, n: usize, k: usize, seed: u64) -> KernelProgram {
+    assert!(m >= 1 && n >= 1 && k >= 1, "degenerate GEMM tile");
+    let tile = m * n;
+    assert!(tile <= u16::MAX as usize, "tile exceeds a stream length field");
+    assert!(k <= STREAM_STRIDE_MAX as usize, "K exceeds a stream stride field");
+    assert!(k * tile <= u16::MAX as usize, "accumulator chain exceeds a stream base field");
+    let prec = unit.precision();
+    let mut rng = Rng::new(seed ^ 0x6e34_4c5a_91ec_0001);
+    let stim_a = operand_bits(&mut rng, prec, m * k);
+    let stim_b = operand_bits(&mut rng, prec, k * n);
+    let stim_c = operand_bits(&mut rng, prec, tile);
+    let passes = (0..k)
+        .map(|kk| {
+            let c_desc = if kk == 0 {
+                stim(StreamPort::C, 0, 1, tile, 0)
+            } else {
+                result(StreamPort::C, (kk - 1) * tile, 1, tile, 0)
+            };
+            Pass {
+                streams: [
+                    Some(stim(StreamPort::A, kk, 0, n, k as i16)),
+                    Some(stim(StreamPort::B, kk * n, 1, n, 0)),
+                    Some(c_desc),
+                ],
+                micro: fmac_micro(unit, SrcSel::Ram),
+                count: tile as u32,
+            }
+        })
+        .collect();
+    KernelProgram {
+        name: format!("gemm{m}x{n}x{k}"),
+        unit,
+        stim_a,
+        stim_b,
+        stim_c,
+        passes,
+        out_base: (k - 1) * tile,
+        out_len: tile,
+    }
+}
+
+/// 3-tap stencil `y[j] = w0·x[j] + w1·x[j+1] + w2·x[j+2]` over `width`
+/// outputs: three passes of `width` FMACs, each broadcasting one weight
+/// on port B and chaining the running sum through the result bank.
+pub fn stencil3(unit: UnitSel, width: usize, seed: u64) -> KernelProgram {
+    assert!(width >= 1, "degenerate stencil");
+    assert!(3 * width <= u16::MAX as usize, "stencil exceeds a stream base field");
+    let prec = unit.precision();
+    let mut rng = Rng::new(seed ^ 0x6e34_4c5a_91ec_0002);
+    let stim_a = operand_bits(&mut rng, prec, width + 2);
+    let stim_b = operand_bits(&mut rng, prec, 3);
+    let passes = (0..3usize)
+        .map(|tap| {
+            let (c_sel, c_desc) = if tap == 0 {
+                (SrcSel::Zero, None)
+            } else {
+                (SrcSel::Ram, Some(result(StreamPort::C, (tap - 1) * width, 1, width, 0)))
+            };
+            Pass {
+                streams: [
+                    Some(stim(StreamPort::A, tap, 1, width, 0)),
+                    Some(stim(StreamPort::B, tap, 0, 1, 0)),
+                    c_desc,
+                ],
+                micro: fmac_micro(unit, c_sel),
+                count: width as u32,
+            }
+        })
+        .collect();
+    KernelProgram {
+        name: format!("stencil3x{width}"),
+        unit,
+        stim_a,
+        stim_b,
+        stim_c: Vec::new(),
+        passes,
+        out_base: 2 * width,
+        out_len: width,
+    }
+}
+
+/// `chains` independent dot products of length `len` (a power of two):
+/// one elementwise-product pass, then a pairwise reduction tree —
+/// `log2(len)` passes of `a·1 + c` adds whose two input streams walk
+/// the previous level's partial sums at stride 2. Chain `c`'s product
+/// lane occupies `[c·len, (c+1)·len)` in both stimulus banks.
+pub fn dot_chains(unit: UnitSel, chains: usize, len: usize, seed: u64) -> KernelProgram {
+    assert!(chains >= 1 && len >= 2, "degenerate dot chains");
+    assert!(len.is_power_of_two(), "chain length must be a power of two");
+    assert!(chains * len <= u16::MAX as usize, "chains exceed a stream length field");
+    assert!(len <= STREAM_STRIDE_MAX as usize, "chain length exceeds a stream stride field");
+    let prec = unit.precision();
+    let mut rng = Rng::new(seed ^ 0x6e34_4c5a_91ec_0003);
+    let total = chains * len;
+    let stim_a = operand_bits(&mut rng, prec, total);
+    let stim_b = operand_bits(&mut rng, prec, total);
+    let mut passes = vec![Pass {
+        streams: [
+            Some(stim(StreamPort::A, 0, 1, total, 0)),
+            Some(stim(StreamPort::B, 0, 1, total, 0)),
+            None,
+        ],
+        micro: fmac_micro(unit, SrcSel::Zero),
+        count: total as u32,
+    }];
+    let mut written = total; // result words emitted so far
+    let mut prev_base = 0usize; // where the previous level's sums start
+    let mut span = len; // previous level's per-chain width
+    while span > 1 {
+        let out_span = span / 2;
+        passes.push(Pass {
+            streams: [
+                Some(result(StreamPort::A, prev_base, 2, out_span, span as i16)),
+                None,
+                Some(result(StreamPort::C, prev_base + 1, 2, out_span, span as i16)),
+            ],
+            micro: Instruction { src_b: SrcSel::One, ..fmac_micro(unit, SrcSel::Ram) },
+            count: (chains * out_span) as u32,
+        });
+        prev_base = written;
+        written += chains * out_span;
+        span = out_span;
+    }
+    assert!(written <= u16::MAX as usize, "reduction tree exceeds a stream base field");
+    KernelProgram {
+        name: format!("dot{chains}x{len}"),
+        unit,
+        stim_a,
+        stim_b,
+        stim_c: Vec::new(),
+        passes,
+        out_base: written - chains,
+        out_len: chains,
+    }
+}
+
+/// The default kernel suite for one unit preset, paper-scaled shapes:
+/// a 16×16×8 GEMM tile, a 256-wide 3-tap stencil, and 16 chains of
+/// 64-element dot products.
+pub fn default_suite(unit: UnitSel, seed: u64) -> Vec<KernelProgram> {
+    vec![
+        gemm_tile(unit, 16, 16, 8, seed),
+        stencil3(unit, 256, seed),
+        dot_chains(unit, 16, 64, seed),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::chip::BANK_RESULT;
+
+    /// Run both encodings of a kernel and return (repeat stats, repeat
+    /// results, unrolled stats, unrolled results) over the full result
+    /// bank.
+    fn run_both(
+        prog: &KernelProgram,
+    ) -> (
+        crate::chip::RunStats,
+        Vec<u64>,
+        crate::chip::RunStats,
+        Vec<u64>,
+    ) {
+        let total = prog.results_total();
+        let rep = prog.repeat_words();
+        let mut chip = prog.loaded_chip(&rep).unwrap();
+        let stats_r = chip.run().unwrap();
+        let out_r = chip.jtag().read_bank(BANK_RESULT, total).unwrap();
+        let unr = prog.unrolled_words();
+        let mut chip = prog.loaded_chip(&unr).unwrap();
+        let stats_u = chip.run().unwrap();
+        let out_u = chip.jtag().read_bank(BANK_RESULT, total).unwrap();
+        (stats_r, out_r, stats_u, out_u)
+    }
+
+    #[test]
+    fn kernels_bit_identical_repeat_vs_unrolled_on_all_presets() {
+        for unit in UnitSel::ALL {
+            for prog in [
+                gemm_tile(unit, 4, 4, 3, 7),
+                stencil3(unit, 16, 7),
+                dot_chains(unit, 4, 8, 7),
+            ] {
+                let (stats_r, out_r, stats_u, out_u) = run_both(&prog);
+                assert_eq!(out_r, out_u, "{} on {}", prog.name, unit.name());
+                assert_eq!(stats_r.ops, prog.ops(), "{}", prog.name);
+                assert_eq!(stats_u.ops, prog.ops(), "{}", prog.name);
+                assert_eq!(stats_r.results_written, prog.ops(), "{}", prog.name);
+                assert!(
+                    stats_r.cycles < stats_u.cycles,
+                    "{} on {}: repeat {} cycles vs unrolled {}",
+                    prog.name,
+                    unit.name(),
+                    stats_r.cycles,
+                    stats_u.cycles
+                );
+                assert_eq!(stats_u.repeat_cycles, 0, "unrolled path must not use the buffer");
+            }
+        }
+    }
+
+    #[test]
+    fn default_suite_hits_the_kernel_gates() {
+        for unit in [UnitSel::SpFma, UnitSel::DpCma] {
+            for prog in default_suite(unit, 42) {
+                let (stats_r, out_r, stats_u, out_u) = run_both(&prog);
+                assert_eq!(out_r, out_u, "{}", prog.name);
+                let occ = stats_r.repeat_occupancy();
+                assert!(occ >= 0.9, "{} occupancy {occ}", prog.name);
+                let speedup = stats_u.cycles as f64 / stats_r.cycles as f64;
+                assert!(speedup >= 1.5, "{} speedup {speedup}", prog.name);
+            }
+        }
+    }
+
+    #[test]
+    fn gemm_tile_matches_host_matmul_on_fma_presets() {
+        // FMA presets fuse each multiply-add with one rounding, so the
+        // host's `mul_add` chained in the kernel's k-order reproduces
+        // the tile exactly. (CMA presets round twice per op — they are
+        // covered by the repeat-vs-unrolled identity above.)
+        let (m, n, k) = (5, 6, 4);
+        let prog = gemm_tile(UnitSel::SpFma, m, n, k, 11);
+        let rep = prog.repeat_words();
+        let mut chip = prog.loaded_chip(&rep).unwrap();
+        chip.run().unwrap();
+        let out = chip
+            .jtag()
+            .read_bank(BANK_RESULT, prog.out_base + prog.out_len)
+            .unwrap();
+        for i in 0..m {
+            for j in 0..n {
+                let mut acc = f32::from_bits(prog.stim_c[i * n + j] as u32);
+                for kk in 0..k {
+                    let a = f32::from_bits(prog.stim_a[i * k + kk] as u32);
+                    let b = f32::from_bits(prog.stim_b[kk * n + j] as u32);
+                    acc = a.mul_add(b, acc);
+                }
+                let got = f32::from_bits(out[prog.out_base + i * n + j] as u32);
+                assert_eq!(got.to_bits(), acc.to_bits(), "C[{i}][{j}]");
+            }
+        }
+    }
+
+    #[test]
+    fn dot_chains_match_host_pairwise_reduction() {
+        let (chains, len) = (3, 8);
+        let prog = dot_chains(UnitSel::DpFma, chains, len, 23);
+        let rep = prog.repeat_words();
+        let mut chip = prog.loaded_chip(&rep).unwrap();
+        chip.run().unwrap();
+        let out = chip
+            .jtag()
+            .read_bank(BANK_RESULT, prog.out_base + prog.out_len)
+            .unwrap();
+        for c in 0..chains {
+            let mut level: Vec<f64> = (0..len)
+                .map(|i| {
+                    let x = f64::from_bits(prog.stim_a[c * len + i]);
+                    let y = f64::from_bits(prog.stim_b[c * len + i]);
+                    x.mul_add(y, 0.0)
+                })
+                .collect();
+            while level.len() > 1 {
+                level = level.chunks(2).map(|p| p[0].mul_add(1.0, p[1])).collect();
+            }
+            let got = f64::from_bits(out[prog.out_base + c]);
+            assert_eq!(got.to_bits(), level[0].to_bits(), "chain {c}");
+        }
+    }
+
+    #[test]
+    fn stencil_matches_host_taps() {
+        let width = 12;
+        let prog = stencil3(UnitSel::SpFma, width, 31);
+        let rep = prog.repeat_words();
+        let mut chip = prog.loaded_chip(&rep).unwrap();
+        chip.run().unwrap();
+        let out = chip
+            .jtag()
+            .read_bank(BANK_RESULT, prog.out_base + prog.out_len)
+            .unwrap();
+        let x: Vec<f32> = prog.stim_a.iter().map(|&w| f32::from_bits(w as u32)).collect();
+        let w: Vec<f32> = prog.stim_b.iter().map(|&w| f32::from_bits(w as u32)).collect();
+        for j in 0..width {
+            let mut acc = w[0].mul_add(x[j], 0.0);
+            acc = w[1].mul_add(x[j + 1], acc);
+            acc = w[2].mul_add(x[j + 2], acc);
+            let got = f32::from_bits(out[prog.out_base + j] as u32);
+            assert_eq!(got.to_bits(), acc.to_bits(), "y[{j}]");
+        }
+    }
+}

@@ -1,11 +1,14 @@
 //! Workload generation: SPEC-FP-like dependence traces ([`specfp`]),
 //! independent throughput streams with operand values ([`throughput`]),
-//! and duty-cycle schedules ([`utilization`]).
+//! duty-cycle schedules ([`utilization`]), and chip-sequencer kernel
+//! programs ([`kernels`]).
 
+pub mod kernels;
 pub mod specfp;
 pub mod throughput;
 pub mod utilization;
 
+pub use kernels::{default_suite, dot_chains, gemm_tile, stencil3, KernelProgram, Pass};
 pub use specfp::Profile;
 pub use throughput::{OperandBatch, OperandMix, OperandStream, OperandTriple};
 pub use utilization::{Segment, UtilizationProfile};

@@ -15,7 +15,7 @@ use fpmax::runtime::router::{
     EnergyAware, RetryPolicy, RoutePolicy, RouterConfig, ShardSpec, StaticAffinity,
 };
 use fpmax::runtime::serve::ServeConfig;
-use fpmax::runtime::trace::{Trace, TraceConfig};
+use fpmax::runtime::trace::{Trace, TraceConfig, SMALL_TIERS};
 
 fn spec(config: FpuConfig, tier: Fidelity, workers: usize, window: usize) -> ShardSpec {
     let mut serve = ServeConfig::nominal(&config, true).expect("nominal serve config");
@@ -103,6 +103,58 @@ fn energy_aware_replay_keeps_the_ledger_digest_stable() {
     assert_eq!(a.policy_name, "energy-aware");
     // Placement itself is load-dependent and not asserted here; the
     // dominance verdict on this preset is the replay bench's job.
+}
+
+#[test]
+fn transprecision_replay_is_deterministic_across_the_format_fleet() {
+    // The transprecision preset draws every class of the 12-class
+    // matrix, so the fleet carries a CMA + FMA shard per small format
+    // next to the Table-1 four. Static policy, spill off, no faults:
+    // the replay digest (result checksums included) must be
+    // bit-identical across a double run, the ledger must balance to
+    // the trace's exact budget, and every class must land on-affinity.
+    let tier = Fidelity::WordSimd;
+    let mut specs = table1_specs(tier, 256);
+    for tierp in SMALL_TIERS {
+        specs.push(spec(FpuConfig::cma_of(tierp), tier, 1, 256));
+        specs.push(spec(FpuConfig::fma_of(tierp), tier, 1, 256));
+    }
+    let trace =
+        Trace::generate(TraceConfig::preset("transprecision", 31, 8_000).unwrap()).unwrap();
+    let plan = FaultPlan::none(31);
+    let run = || {
+        serve_trace(
+            &specs,
+            fast_supervision(specs.len()),
+            tier,
+            &trace,
+            Arc::new(StaticAffinity),
+            &plan,
+            Duration::from_secs(60),
+            RetryPolicy::bounded(200, Duration::from_micros(200), Duration::from_millis(10)),
+        )
+        .unwrap()
+        .report
+    };
+    let a = run();
+    let b = run();
+
+    assert!(a.results_in_digest, "static + no spill + no faults must digest result bits");
+    assert_eq!(a.digest, b.digest, "same seed + same trace must be bit-identical");
+    assert_eq!(a.producer.checksums, b.producer.checksums);
+    assert!(a.gates_ok(), "ledger/crosscheck/conservation gates");
+    assert_eq!(a.trace_fingerprint, trace.fingerprint);
+    assert_eq!(a.producer.submitted_ops, trace.total_ops());
+    assert_eq!(a.class_ops, trace.class_ops());
+    assert_eq!(a.misrouted, 0, "static policy, spill off");
+    // The preset's whole point: every small-tier class (latency AND
+    // bulk per format, so the small CMA shards work too, not just the
+    // FMA bulk path) really carried traffic.
+    assert!(
+        a.class_ops[4..].iter().all(|&n| n > 0),
+        "every transprecision class must see ops, got {:?}",
+        a.class_ops
+    );
 }
 
 #[test]
